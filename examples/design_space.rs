@@ -1,0 +1,64 @@
+//! Fig. 13 regenerator: channel-count design-space exploration for both
+//! technologies — area/latency/energy plus ADP/EDP/EDAP and the optimal
+//! channel selection (§V-C finds 8).
+//!
+//! Run: `cargo run --release --example design_space`
+
+use scnn::accel::layers::NetworkSpec;
+use scnn::accel::metrics::argmin_by;
+use scnn::accel::system::{self, SystemConfig};
+use scnn::benchutil::{gain_pct, print_table};
+use scnn::tech::TechKind;
+
+fn main() {
+    let net = NetworkSpec::lenet5();
+    let counts = [1usize, 2, 4, 8, 16, 32];
+
+    for tech in [TechKind::Finfet10, TechKind::Rfet10] {
+        let evals = system::sweep_channels(tech, &net, &counts);
+        let rows: Vec<Vec<String>> = evals
+            .iter()
+            .map(|e| {
+                let m = &e.metrics;
+                vec![
+                    e.channels.to_string(),
+                    format!("{:.4}", m.area_mm2),
+                    format!("{:.2}", m.latency_us),
+                    format!("{:.3}", m.energy_uj),
+                    format!("{:.4}", m.adp()),
+                    format!("{:.4}", m.edp()),
+                    format!("{:.5}", m.edap()),
+                ]
+            })
+            .collect();
+        print_table(
+            &format!("Fig. 13 sweep — {tech} on {}", net.name),
+            &["channels", "area mm²", "latency µs", "energy µJ", "ADP", "EDP", "EDAP"],
+            &rows,
+        );
+        let ms: Vec<_> = evals.iter().map(|e| e.metrics).collect();
+        println!(
+            "optima: ADP -> {} ch, EDP -> {} ch, EDAP -> {} ch (paper: 8)",
+            counts[argmin_by(&ms, |m| m.adp())],
+            counts[argmin_by(&ms, |m| m.edp())],
+            counts[argmin_by(&ms, |m| m.edap())],
+        );
+        // Area breakdown at the paper's operating point.
+        let at8 = &evals[3];
+        println!("area breakdown at 8 channels:");
+        for (label, um2) in &at8.area_breakdown {
+            println!("  {label:<16} {:>10.0} µm²", um2);
+        }
+    }
+
+    // Head-to-head at the paper's 8-channel configuration (§V-C summary:
+    // RFET −5% area, −7.3% delay, −29% energy, EDAP −37.8%).
+    let net = NetworkSpec::lenet5();
+    let fin = system::evaluate(&SystemConfig::paper(TechKind::Finfet10, 8), &net);
+    let rf = system::evaluate(&SystemConfig::paper(TechKind::Rfet10, 8), &net);
+    println!("\nRFET vs FinFET at 8 channels (paper: 5% / 7.3% / 29% / 37.8%):");
+    println!("  logic area gain : {:+.1}%", gain_pct(fin.channel.area_um2, rf.channel.area_um2));
+    println!("  delay gain      : {:+.1}%", gain_pct(fin.metrics.latency_us, rf.metrics.latency_us));
+    println!("  energy gain     : {:+.1}%", gain_pct(fin.metrics.energy_uj, rf.metrics.energy_uj));
+    println!("  EDAP gain       : {:+.1}%", gain_pct(fin.metrics.edap(), rf.metrics.edap()));
+}

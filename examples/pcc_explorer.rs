@@ -1,0 +1,91 @@
+//! Fig. 7 regenerator: PCC transfer curves for 3–10-bit CMP / MUX-chain /
+//! NAND-NOR converters, plus the Table-I-style hardware cost of each.
+//!
+//! Run: `cargo run --release --example pcc_explorer [-- --csv]`
+//! With `--csv`, emits `results/fig7_transfer.csv`.
+
+use scnn::accel::channel::{characterize_pcc, BITSTREAM_LEN};
+use scnn::sc::lfsr::Lfsr;
+use scnn::sc::pcc::{self, PccKind};
+use scnn::sim;
+use scnn::tech::CellLibrary;
+use std::io::Write;
+
+fn measure_transfer(kind: PccKind, bits: u32, len: usize) -> Vec<(u32, f64)> {
+    // Long-LFSR measurement (matches the paper's simulation setup).
+    (0..(1u32 << bits))
+        .map(|x| {
+            let mut l = Lfsr::new(bits.max(3), 1);
+            let ones = (0..len)
+                .filter(|_| {
+                    let r = l.value() & ((1 << bits) - 1);
+                    l.step();
+                    pcc::pcc_bit(kind, x, r, bits)
+                })
+                .count();
+            (x, ones as f64 / len as f64)
+        })
+        .collect()
+}
+
+fn main() {
+    let csv = std::env::args().any(|a| a == "--csv");
+    let mut csv_rows = vec!["bits,kind,code,ideal,measured".to_string()];
+
+    println!("Fig. 7 — conversion transfer of the three PCCs (k = 2^16)");
+    for bits in 3..=10u32 {
+        println!("\n{bits}-bit PCC (showing quartile codes):");
+        for kind in PccKind::ALL {
+            let curve = measure_transfer(kind, bits, 1 << 16);
+            let total = 1u32 << bits;
+            let picks: Vec<u32> = vec![0, total / 4, total / 2, 3 * total / 4, total - 1];
+            let shown: Vec<String> = picks
+                .iter()
+                .map(|&x| format!("{:.3}", curve[x as usize].1))
+                .collect();
+            println!("  {kind:?}: at codes {picks:?} -> {shown:?}");
+            // Monotonicity check (what Fig. 7 visually demonstrates).
+            let mono = curve.windows(2).all(|w| w[1].1 >= w[0].1 - 0.02);
+            assert!(mono, "{kind:?} {bits}-bit transfer not monotone");
+            if csv {
+                for (x, p) in &curve {
+                    csv_rows.push(format!(
+                        "{bits},{kind:?},{x},{:.6},{p:.6}",
+                        *x as f64 / total as f64
+                    ));
+                }
+            }
+        }
+    }
+
+    println!("\nHardware cost of the 8-bit PCC (Table I columns):");
+    for lib in [CellLibrary::finfet10(), CellLibrary::rfet10()] {
+        let rep = characterize_pcc(&lib);
+        println!(
+            "  {}: {:.2} µm², {:.0} ps, {:.2} fJ/cycle (over {} cycles of stimulus, k={})",
+            rep.tech, rep.area_um2, rep.delay_ps, rep.energy_per_cycle_fj, 2048, BITSTREAM_LEN
+        );
+    }
+    // Netlist sizes for every width (the paper's area scaling argument).
+    println!("\nGate counts per width (MUX-chain vs NAND-NOR+inverters):");
+    for bits in 3..=10u32 {
+        let mux = pcc::build_netlist(PccKind::MuxChain, bits);
+        let nn = pcc::build_netlist(PccKind::NandNor, bits);
+        let lib_f = CellLibrary::finfet10();
+        let lib_r = CellLibrary::rfet10();
+        println!(
+            "  {bits}-bit: MUX {} gates ({:.3} µm² FinFET) | NAND-NOR {} gates ({:.3} µm² RFET)",
+            mux.num_gates(),
+            sim::area(&mux, &lib_f),
+            nn.num_gates(),
+            sim::area(&nn, &lib_r),
+        );
+    }
+
+    if csv {
+        std::fs::create_dir_all("results").unwrap();
+        let mut f = std::fs::File::create("results/fig7_transfer.csv").unwrap();
+        writeln!(f, "{}", csv_rows.join("\n")).unwrap();
+        println!("\nwrote results/fig7_transfer.csv ({} rows)", csv_rows.len() - 1);
+    }
+}

@@ -1,0 +1,132 @@
+"""Synthetic datasets (build-time only).
+
+This environment has no network access and no MNIST/CIFAR-10 archives, so
+we substitute procedurally generated datasets with the same shapes and the
+same role in the experiments (DESIGN.md §Substitutions):
+
+* ``digits``  — 28x28x1 MNIST-like: a 7x5 bitmap digit font rendered with
+  random shift, scale jitter, stroke noise and background noise.
+* ``textures`` — 32x32x3 CIFAR-like: ten parametric texture/shape classes
+  (stripes at several orientations/frequencies, checkerboards, rings,
+  gradients, blobs) with color and noise jitter.
+
+Everything is deterministic given the seed. Accuracy *shapes* (vs bitstream
+length / precision) transfer; absolute accuracies are reported for these
+sets and flagged as synthetic in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# 7x5 digit bitmaps (classic LED/LCD-style font).
+_DIGIT_FONT = {
+    0: ["11111", "10001", "10001", "10001", "10001", "10001", "11111"],
+    1: ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],
+    2: ["11111", "00001", "00001", "11111", "10000", "10000", "11111"],
+    3: ["11111", "00001", "00001", "01111", "00001", "00001", "11111"],
+    4: ["10001", "10001", "10001", "11111", "00001", "00001", "00001"],
+    5: ["11111", "10000", "10000", "11111", "00001", "00001", "11111"],
+    6: ["11111", "10000", "10000", "11111", "10001", "10001", "11111"],
+    7: ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],
+    8: ["11111", "10001", "10001", "11111", "10001", "10001", "11111"],
+    9: ["11111", "10001", "10001", "11111", "00001", "00001", "11111"],
+}
+
+
+def _render_digit(digit: int, rng: np.random.Generator) -> np.ndarray:
+    """Render one 28x28 grayscale digit in [0, 1]."""
+    img = np.zeros((28, 28), dtype=np.float32)
+    bitmap = _DIGIT_FONT[digit]
+    # Scale jitter: cell size 3 or 4 px per font pixel.
+    cell = rng.integers(3, 5)
+    h, w = 7 * cell, 5 * cell
+    oy = rng.integers(1, 28 - h) if 28 - h > 1 else 0
+    ox = rng.integers(1, 28 - w) if 28 - w > 1 else 0
+    intensity = rng.uniform(0.75, 1.0)
+    for r, row in enumerate(bitmap):
+        for c, ch in enumerate(row):
+            if ch == "1":
+                img[oy + r * cell : oy + (r + 1) * cell, ox + c * cell : ox + (c + 1) * cell] = (
+                    intensity
+                )
+    # Stroke dropout + speckle.
+    img *= rng.uniform(0.82, 1.0, size=img.shape).astype(np.float32)
+    img += rng.normal(0.0, 0.06, size=img.shape).astype(np.float32)
+    # Light blur (3x3 box) softens the hard font edges.
+    k = np.ones((3, 3), dtype=np.float32) / 9.0
+    padded = np.pad(img, 1, mode="edge")
+    blurred = sum(
+        padded[dy : dy + 28, dx : dx + 28] * k[dy, dx] for dy in range(3) for dx in range(3)
+    )
+    return np.clip(blurred, 0.0, 1.0)
+
+
+def make_digits(n: int, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """n MNIST-like samples: images (n, 1, 28, 28) in [0,1], labels (n,)."""
+    rng = np.random.default_rng(seed)
+    images = np.zeros((n, 1, 28, 28), dtype=np.float32)
+    labels = rng.integers(0, 10, size=n).astype(np.int32)
+    for i in range(n):
+        images[i, 0] = _render_digit(int(labels[i]), rng)
+    return images, labels
+
+
+def _texture(cls: int, rng: np.random.Generator) -> np.ndarray:
+    """Render one 3x32x32 RGB texture in [0, 1] for class ``cls``."""
+    yy, xx = np.mgrid[0:32, 0:32].astype(np.float32)
+    phase = rng.uniform(0, 2 * np.pi)
+    freq = rng.uniform(0.8, 1.2)
+    if cls == 0:  # horizontal stripes
+        base = np.sin(yy * 0.7 * freq + phase)
+    elif cls == 1:  # vertical stripes
+        base = np.sin(xx * 0.7 * freq + phase)
+    elif cls == 2:  # diagonal stripes
+        base = np.sin((xx + yy) * 0.5 * freq + phase)
+    elif cls == 3:  # checkerboard
+        base = np.sign(np.sin(xx * 0.9 * freq + phase) * np.sin(yy * 0.9 * freq + phase))
+    elif cls == 4:  # rings
+        cy, cx = rng.uniform(12, 20), rng.uniform(12, 20)
+        r = np.sqrt((yy - cy) ** 2 + (xx - cx) ** 2)
+        base = np.sin(r * 0.9 * freq + phase)
+    elif cls == 5:  # radial gradient
+        cy, cx = rng.uniform(10, 22), rng.uniform(10, 22)
+        r = np.sqrt((yy - cy) ** 2 + (xx - cx) ** 2)
+        base = 1.0 - r / r.max() * 2.0
+    elif cls == 6:  # horizontal gradient
+        base = xx / 16.0 - 1.0
+    elif cls == 7:  # blob (gaussian bump)
+        cy, cx = rng.uniform(10, 22), rng.uniform(10, 22)
+        s = rng.uniform(4, 7)
+        base = 2.0 * np.exp(-((yy - cy) ** 2 + (xx - cx) ** 2) / (2 * s * s)) - 1.0
+    elif cls == 8:  # crosshatch
+        base = 0.5 * (np.sin(xx * 1.1 * freq) + np.sin(yy * 1.1 * freq))
+    else:  # 9: high-frequency noise field with structure
+        base = np.sin(xx * 2.2 * freq + phase) * np.sin(yy * 0.3 * freq)
+    base = base.astype(np.float32)
+    # Color modulation per channel + noise.
+    img = np.zeros((3, 32, 32), dtype=np.float32)
+    for ch in range(3):
+        gain = rng.uniform(0.35, 0.65)
+        off = rng.uniform(0.3, 0.7)
+        img[ch] = np.clip(off + gain * base + rng.normal(0, 0.07, base.shape), 0, 1)
+    return img
+
+
+def make_textures(n: int, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """n CIFAR-like samples: images (n, 3, 32, 32) in [0,1], labels (n,)."""
+    rng = np.random.default_rng(seed)
+    images = np.zeros((n, 3, 32, 32), dtype=np.float32)
+    labels = rng.integers(0, 10, size=n).astype(np.int32)
+    for i in range(n):
+        images[i] = _texture(int(labels[i]), rng)
+    return images, labels
+
+
+def dataset(name: str, n: int, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Dispatch by dataset name ('digits' or 'textures')."""
+    if name == "digits":
+        return make_digits(n, seed)
+    if name == "textures":
+        return make_textures(n, seed)
+    raise ValueError(f"unknown dataset {name!r}")

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: tiled f32 matmul used by the exported inference graph.
+
+Every MAC in the L2 model (conv layers via im2col, dense layers directly)
+lowers through this kernel so the whole network's arithmetic sits in the L1
+tile. Blocks are sized for VMEM residency of one (M_tile x K) activation
+panel and one (K x N_tile) weight panel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 32
+BLOCK_N = 16
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], precision="highest")
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul(a, b, *, interpret: bool = True):
+    """C = A @ B with A (M, K) f32, B (K, N) f32.
+
+    M and N are padded up to the block multiples internally; K stays whole
+    (the reduction dimension lives in one block — fan-ins here are <= 1024).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    mp = -(-m // BLOCK_M) * BLOCK_M
+    np_ = -(-n // BLOCK_N) * BLOCK_N
+    a_pad = jnp.pad(a, ((0, mp - m), (0, 0)))
+    b_pad = jnp.pad(b, ((0, 0), (0, np_ - n)))
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // BLOCK_M, np_ // BLOCK_N),
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, BLOCK_N), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, BLOCK_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(a_pad, b_pad)
+    return out[:m, :n]

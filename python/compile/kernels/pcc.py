@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: NAND-NOR PCC stream generation (Lemma 1).
+
+Converts binary codes into packed stochastic bitstreams with the paper's
+RFET NAND-NOR reconfigurable chain, vectorized over (codes x cycles): the
+chain recurrence runs over the N stages while 32 cycles are packed per
+uint32 word. The comparator PCC is included for the correlated activation
+banks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _nandnor_inverted(n: int, i: int) -> bool:
+    """Lemma 1 parity rule (mirrors ref.nandnor_stage_inverted)."""
+    return (i % 2 == 0) if n % 2 == 0 else (i % 2 == 1)
+
+
+def _pcc_kernel_factory(kind: str, bits: int):
+    def kernel(x_ref, r_ref, o_ref):
+        # x: (BN,) codes; r: (k,) randoms; out: (BN, k/32) packed words.
+        x = x_ref[...].astype(jnp.uint32)[:, None]  # (BN, 1)
+        r = r_ref[...].astype(jnp.uint32)[None, :]  # (1, k)
+        if kind == "cmp":
+            bit = x > r
+        elif kind == "nandnor":
+            o = jnp.zeros(jnp.broadcast_shapes(x.shape, r.shape), dtype=bool)
+            for i in range(1, bits + 1):
+                xi = ((x >> (i - 1)) & 1) == 1
+                ri = ((r >> (i - 1)) & 1) == 1
+                prog = ~xi if _nandnor_inverted(bits, i) else xi
+                o = jnp.where(prog, ~(o | ri), ~(o & ri))
+            bit = o
+        else:  # mux
+            o = jnp.zeros(jnp.broadcast_shapes(x.shape, r.shape), dtype=bool)
+            for i in range(bits):
+                xi = ((x >> i) & 1) == 1
+                ri = ((r >> i) & 1) == 1
+                o = jnp.where(ri, xi, o)
+            bit = o
+        k = bit.shape[1]
+        b = bit.reshape(bit.shape[0], k // 32, 32).astype(jnp.uint32)
+        shifts = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+        o_ref[...] = jnp.sum(b << shifts, axis=2).astype(jnp.uint32)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "bits", "interpret")
+)
+def pcc_streams(codes, rs, *, kind: str = "nandnor", bits: int = 8, interpret: bool = True):
+    """Packed PCC streams.
+
+    codes: uint32 (n,); rs: uint32 (k,) with k % 32 == 0. Returns uint32
+    (n, k/32) packed streams (bit t of word w = cycle 32w + t).
+    """
+    n = codes.shape[0]
+    k = rs.shape[0]
+    assert k % 32 == 0, "k must be a multiple of 32"
+    bn = 8 if n % 8 == 0 else 1
+    return pl.pallas_call(
+        _pcc_kernel_factory(kind, bits),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, k // 32), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k // 32), jnp.uint32),
+        interpret=interpret,
+    )(codes, rs)

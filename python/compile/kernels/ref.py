@@ -1,0 +1,160 @@
+"""Pure-jnp/numpy oracles for the Pallas kernels and the SC math model.
+
+These mirror (bit-for-bit / closed-form) the Rust implementations in
+``rust/src/sc/``:
+
+* ``quantize_bipolar`` / ``dequantize_bipolar``  <-> ``sc::quantize_bipolar``
+* ``pcc_bit``                                    <-> ``sc::pcc::pcc_bit``
+* ``neuron_expectation``                         <-> ``sc::neuron::expectation*``
+* ``sc_mac_ref``                                 <-> packed XNOR+popcount MAC
+
+pytest asserts every Pallas kernel against these references across shapes
+and dtypes (hypothesis sweeps), and the Rust integration tests replay the
+same conventions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def erf(x):
+    """Abramowitz & Stegun 7.1.26 erf approximation (|err| < 1.5e-7).
+
+    Used instead of jax.scipy.special.erf so the lowered HLO contains no
+    `erf` opcode (xla_extension 0.5.1's text parser predates it), and so
+    the math matches rust/src/sc/neuron.rs::erf bit-for-bit in structure.
+    """
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * ax)
+    y = 1.0 - (
+        ((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+        + 0.254829592
+    ) * t * jnp.exp(-ax * ax)
+    return sign * y
+
+
+# ---------------------------------------------------------------------------
+# Quantization (bipolar encoding, mirrors rust/src/sc/mod.rs)
+# ---------------------------------------------------------------------------
+
+def quantize_bipolar(v, bits: int):
+    """[-1,1] value -> bipolar code in [0, 2^bits). floor(x+0.5) equals
+    Rust's round-half-away-from-zero for the non-negative argument here."""
+    levels = float(1 << bits)
+    p = (jnp.clip(v, -1.0, 1.0) + 1.0) / 2.0
+    q = jnp.floor(p * levels + 0.5)
+    return jnp.minimum(q, levels - 1.0)
+
+
+def dequantize_bipolar(code, bits: int):
+    """Bipolar code -> value in [-1, 1)."""
+    return code / float(1 << bits) * 2.0 - 1.0
+
+
+def quantize_value(v, bits: int):
+    """Quantize-dequantize roundtrip (the value the hardware represents)."""
+    return dequantize_bipolar(quantize_bipolar(v, bits), bits)
+
+
+# ---------------------------------------------------------------------------
+# Neuron expectation (mirrors rust/src/sc/neuron.rs)
+# ---------------------------------------------------------------------------
+
+def m_bits(n: int) -> int:
+    """ceil(log2(n+1)): comparator width covering counts 0..n."""
+    return int(n).bit_length()
+
+
+def neuron_expectation(pre, n: int, relu: bool, var=None):
+    """Expected bipolar output of the Frasser SC neuron.
+
+    ``pre`` = sum of product values; ``var`` = per-cycle variance of 2c
+    (sum of 1-(a_j w_j)^2). With ``relu`` the SC-smoothed (correlated-OR)
+    ReLU applies: E[max(2c, n)] = n + sigma*(phi(z) + z*Phi(z)), z=pre/sigma.
+    """
+    scale = float(1 << m_bits(n))
+    if not relu:
+        return (pre + n) / scale - 1.0
+    sigma = jnp.sqrt(jnp.maximum(var, 1e-12))
+    z = pre / sigma
+    pdf = jnp.exp(-0.5 * z * z) / np.sqrt(2.0 * np.pi)
+    cdf = 0.5 * (1.0 + erf(z / np.sqrt(2.0)))
+    softplus = sigma * (pdf + z * cdf)
+    return (softplus + n) / scale - 1.0
+
+
+# ---------------------------------------------------------------------------
+# PCC bit functions (mirror rust/src/sc/pcc.rs, LSB-first chains)
+# ---------------------------------------------------------------------------
+
+def nandnor_stage_inverted(n: int, i: int) -> bool:
+    """Lemma 1 inverter-insertion rule (1-indexed stage i of n stages)."""
+    return (i % 2 == 0) if n % 2 == 0 else (i % 2 == 1)
+
+
+def pcc_bit(kind: str, x: np.ndarray, r: np.ndarray, bits: int) -> np.ndarray:
+    """Vectorized PCC output bit. kind in {'cmp', 'mux', 'nandnor'}."""
+    x = np.asarray(x, dtype=np.uint32)
+    r = np.asarray(r, dtype=np.uint32)
+    if kind == "cmp":
+        return x > r
+    if kind == "mux":
+        o = np.zeros(np.broadcast(x, r).shape, dtype=bool)
+        for i in range(bits):
+            xi = (x >> i) & 1 == 1
+            ri = (r >> i) & 1 == 1
+            o = np.where(ri, xi, o)
+        return o
+    if kind == "nandnor":
+        o = np.zeros(np.broadcast(x, r).shape, dtype=bool)
+        for i in range(1, bits + 1):
+            xi = (x >> (i - 1)) & 1 == 1
+            ri = (r >> (i - 1)) & 1 == 1
+            prog = ~xi if nandnor_stage_inverted(bits, i) else xi
+            o = np.where(prog, ~(o | ri), ~(o & ri))
+        return o
+    raise ValueError(f"unknown PCC kind {kind!r}")
+
+
+def pcc_streams_packed(kind: str, codes: np.ndarray, rs: np.ndarray, bits: int) -> np.ndarray:
+    """Packed streams: codes (n,), rs (k,) -> uint32 (n, k//32); bit t of a
+    word is cycle (32*word + t). k must be a multiple of 32."""
+    k = rs.shape[0]
+    assert k % 32 == 0, "pack requires k % 32 == 0"
+    bits_nk = pcc_bit(kind, codes[:, None], rs[None, :], bits)  # (n, k) bool
+    b = bits_nk.reshape(codes.shape[0], k // 32, 32).astype(np.uint32)
+    shifts = np.arange(32, dtype=np.uint32)
+    return (b << shifts[None, None, :]).sum(axis=2, dtype=np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Packed XNOR + popcount MAC (the APC-accumulated SC MAC)
+# ---------------------------------------------------------------------------
+
+def popcount32(x: np.ndarray) -> np.ndarray:
+    """Population count of uint32 lanes (numpy reference)."""
+    x = x.astype(np.uint64)
+    c = np.zeros_like(x)
+    for i in range(32):
+        c += (x >> np.uint64(i)) & np.uint64(1)
+    return c.astype(np.uint32)
+
+
+def sc_mac_ref(a_packed: np.ndarray, w_packed: np.ndarray) -> np.ndarray:
+    """Reference for the sc_mac Pallas kernel.
+
+    a_packed, w_packed: uint32 (neurons, fan_in, words). Returns uint32
+    (neurons,) = total '1' count of the XNOR products over all fan-in and
+    cycles (= the APC-accumulated MAC sum feeding S2B).
+    """
+    prod = ~(a_packed ^ w_packed) & np.uint32(0xFFFFFFFF)
+    return popcount32(prod).sum(axis=(1, 2)).astype(np.uint32)
+
+
+def sc_mac_value(counts: np.ndarray, fan_in: int, k: int) -> np.ndarray:
+    """Pre-activation sum represented by an accumulated MAC count:
+    E[product ones per cycle] = counts/k = (pre + fan_in)/2."""
+    return 2.0 * counts / k - fan_in

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: the SC compute hot-spot.
+
+Packed-bitstream XNOR multiply + population-count accumulate — the software
+image of the paper's 25-multiplier + APC MAC unit (Fig. 9). Bitstreams are
+packed 32 SC cycles per uint32 lane, so one vector op advances 32 clock
+cycles of the stochastic datapath.
+
+Hardware adaptation (DESIGN.md section Hardware-Adaptation): the iteration
+space (neurons x fan_in x words) is tiled with BlockSpec so one block's
+activation/weight words sit in VMEM (the analogue of the paper's ping-pong
+on-chip buffers); the reduction is VPU-bound (popcount + add), not MXU.
+
+Kernels must run with interpret=True here: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT client cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+# Neurons processed per grid step (VMEM tile height). 8 keeps the tile
+# under a few KB for fan-in 400 x 8 words while saturating the lanes.
+BLOCK_NEURONS = 8
+
+
+def _sc_mac_kernel(a_ref, w_ref, o_ref):
+    """One block: (BN, fan_in, words) uint32 -> (BN,) uint32 counts."""
+    prod = ~(a_ref[...] ^ w_ref[...])
+    counts = lax.population_count(prod)
+    o_ref[...] = jnp.sum(counts, axis=(1, 2)).astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sc_mac(a_packed, w_packed, *, interpret: bool = True):
+    """Accumulated XNOR-popcount MAC.
+
+    a_packed, w_packed: uint32 (neurons, fan_in, words) with identical
+    shapes; bits beyond the bitstream length must be zero in BOTH operands
+    of no lane (the kernel XNORs raw words, so k must be a multiple of 32 —
+    the system configuration uses k = 32).
+
+    Returns uint32 (neurons,): sum of '1's of all product streams — the
+    APC-accumulated MAC count.
+    """
+    n, fan_in, words = a_packed.shape
+    assert w_packed.shape == a_packed.shape
+    bn = BLOCK_NEURONS if n % BLOCK_NEURONS == 0 else 1
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _sc_mac_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, fan_in, words), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bn, fan_in, words), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        interpret=interpret,
+    )(a_packed, w_packed)

@@ -1,0 +1,294 @@
+"""L2: the paper's networks in JAX with the SC-equivalent forward model.
+
+Three forward modes over the same parameters (mirroring the Rust
+``accel::network::ForwardMode``):
+
+* ``float``  — ordinary conv/ReLU/pool/dense (training reference);
+* ``fixed``  — quantize-dequantize weights+activations, hard ReLU (the
+               Fig. 12 "binary fixed-point NN" baseline);
+* ``sc``     — the SC-equivalent math model the paper trains through
+               (section V-B): quantized operands, the APC/B2S affine
+               v = (pre + n)/2^m - 1, and the *smoothed* ReLU that the
+               correlated-OR hardware actually implements.
+
+Layer boundary: the S2B counter recovers sp = softplus_sc(pre) exactly
+(sp = (v+1)*2^m - n); the binary-domain re-encoder then applies a per-layer
+trained affine a_next = clip(g*(sp - mu), 0, 1) before the next SNG. This
+is the programmable-scale B2S/SNG boundary every fixed-point accelerator
+needs (one multiply-add per activation in the binary domain) — without it
+the SC bias term (sigma*phi(0) per neuron) eats the 8-bit activation range
+and the network cannot train. The Rust bit-exact path
+(rust/src/accel/network.rs) applies the identical affine.
+
+The inference-export variant routes every MAC through the L1 Pallas matmul
+kernel (conv via im2col), so the AOT-lowered HLO contains the kernel's
+tiling; training uses the identical math in plain jnp.
+
+Networks carry no biases — the SC neuron (Fig. 2) has none.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .kernels import mac as mac_kernel
+from .kernels import ref
+
+# Layer descriptors: mirror rust/src/accel/layers.rs.
+LENET5 = {
+    "name": "lenet5",
+    "input": (1, 28, 28),
+    "layers": [
+        {"kind": "conv", "in_ch": 1, "out_ch": 6, "kernel": 5, "pad": 2, "relu": True, "pool": 2},
+        {"kind": "conv", "in_ch": 6, "out_ch": 16, "kernel": 5, "pad": 0, "relu": True, "pool": 2},
+        {"kind": "dense", "in": 400, "out": 120, "relu": True},
+        {"kind": "dense", "in": 120, "out": 84, "relu": True},
+        {"kind": "dense", "in": 84, "out": 10, "relu": False},
+    ],
+}
+
+CIFAR_NET = {
+    "name": "cifar_net",
+    "input": (3, 32, 32),
+    "layers": [
+        {"kind": "conv", "in_ch": 3, "out_ch": 32, "kernel": 5, "pad": 2, "relu": True, "pool": 2},
+        {"kind": "conv", "in_ch": 32, "out_ch": 32, "kernel": 5, "pad": 2, "relu": True, "pool": 2},
+        {"kind": "conv", "in_ch": 32, "out_ch": 64, "kernel": 5, "pad": 2, "relu": True, "pool": 2},
+        {"kind": "dense", "in": 1024, "out": 10, "relu": False},
+    ],
+}
+
+
+def spec_by_name(name: str) -> dict:
+    if name == "lenet5":
+        return LENET5
+    if name == "cifar_net":
+        return CIFAR_NET
+    raise ValueError(name)
+
+
+def layer_fan_in(layer: dict) -> int:
+    return layer["in_ch"] * layer["kernel"] ** 2 if layer["kind"] == "conv" else layer["in"]
+
+
+def init_params(spec: dict, seed: int = 0) -> list[dict]:
+    """Per layer: weights w, re-encoder gain g and offset mu (scalars)."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for layer in spec["layers"]:
+        fan_in = layer_fan_in(layer)
+        if layer["kind"] == "conv":
+            shape = (layer["out_ch"], layer["in_ch"], layer["kernel"], layer["kernel"])
+        else:
+            shape = (layer["out"], layer["in"])
+        w = rng.normal(0, 1.2 / np.sqrt(fan_in), size=shape)
+        params.append(
+            {
+                "w": jnp.asarray(w, dtype=jnp.float32),
+                "g": jnp.asarray(1.0, dtype=jnp.float32),
+                "mu": jnp.asarray(0.0, dtype=jnp.float32),
+            }
+        )
+    return params
+
+
+def _collect_sp(params, x, spec, mode, bits, upto):
+    """Forward through layer `upto` and return that layer's sp tensor
+    (pre-affine). Used only by `calibrate`."""
+    b = x.shape[0]
+    act = x
+    for li, (layer, p) in enumerate(zip(spec["layers"], params)):
+        w, g, mu = p["w"], p["g"], p["mu"]
+        final = li == len(spec["layers"]) - 1
+        wc = jnp.clip(w, -1.0, 1.0)
+        if mode in ("fixed", "sc"):
+            aq = ref.quantize_value(act, bits)
+            wq = ref.quantize_value(wc, bits)
+        else:
+            aq, wq = act, wc
+        if layer["kind"] == "conv":
+            cols, oh, ow = _im2col(aq, layer["kernel"], layer["pad"])
+            fan_in = layer_fan_in(layer)
+            wmat = wq.reshape(layer["out_ch"], fan_in).T
+            pre = (cols.reshape(-1, fan_in) @ wmat).reshape(b, oh * ow, layer["out_ch"])
+            var = None
+            if mode == "sc":
+                var = fan_in - ((cols * cols).reshape(-1, fan_in) @ (wmat * wmat)).reshape(
+                    b, oh * ow, layer["out_ch"]
+                )
+            if mode == "sc":
+                v = ref.neuron_expectation(pre, fan_in, layer["relu"], var)
+                sp = (v + 1.0) * float(1 << ref.m_bits(fan_in)) - fan_in
+            else:
+                sp = jnp.maximum(pre, 0.0) if layer["relu"] else pre
+            if li == upto:
+                return sp
+            out = jnp.clip(g * (sp - mu), 0.0, 1.0)
+            out = out.transpose(0, 2, 1).reshape(b, layer["out_ch"], oh, ow)
+            if layer.get("pool"):
+                out = _max_pool(out, layer["pool"])
+            act = out
+        else:
+            a2d = aq.reshape(b, -1)
+            fan_in = layer["in"]
+            pre = a2d @ wq.T
+            if mode == "sc":
+                var = fan_in - (a2d * a2d) @ (wq * wq).T
+                v = ref.neuron_expectation(pre, fan_in, layer["relu"], var)
+                sp = (v + 1.0) * float(1 << ref.m_bits(fan_in)) - fan_in
+            else:
+                sp = jnp.maximum(pre, 0.0) if layer["relu"] else pre
+            if li == upto:
+                return sp
+            act = jnp.clip(g * (sp - mu), 0.0, 1.0) if not final else g * (sp - mu)
+    raise ValueError("upto out of range")
+
+
+def calibrate(params, x, spec, mode="sc", bits=8):
+    """Data-driven init of the per-layer re-encoder affine (g, mu): place
+    each layer's sp distribution into the quantizable [0, 1] window
+    (mu = mean - std, g = 0.35/std), and give the logits a unit-std scale.
+    The calibrated values train further with the weights."""
+    params = [dict(p) for p in params]
+    n_layers = len(spec["layers"])
+    for li in range(n_layers):
+        sp = _collect_sp(params, x, spec, mode, bits, li)
+        mean = float(jnp.mean(sp))
+        std = float(jnp.std(sp)) + 1e-6
+        if li == n_layers - 1:
+            params[li]["g"] = jnp.asarray(4.0 / std, dtype=jnp.float32)
+            params[li]["mu"] = jnp.asarray(mean, dtype=jnp.float32)
+        else:
+            params[li]["g"] = jnp.asarray(0.35 / std, dtype=jnp.float32)
+            params[li]["mu"] = jnp.asarray(mean - std, dtype=jnp.float32)
+    return params
+
+
+def _im2col(x: jnp.ndarray, kernel: int, pad: int):
+    """x (B, C, H, W) -> ((B, OH*OW, C*k*k), OH, OW); ordering (c, ky, kx)
+    matches rust conv_gather."""
+    b, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh = h + 2 * pad - kernel + 1
+    ow = w + 2 * pad - kernel + 1
+    cols = []
+    for ky in range(kernel):
+        for kx in range(kernel):
+            cols.append(xp[:, :, ky : ky + oh, kx : kx + ow])
+    stacked = jnp.stack(cols, axis=0).transpose(1, 3, 4, 2, 0)
+    return stacked.reshape(b, oh * ow, c * kernel * kernel), oh, ow
+
+
+def _max_pool(x: jnp.ndarray, size: int) -> jnp.ndarray:
+    b, c, h, w = x.shape
+    return x.reshape(b, c, h // size, size, w // size, size).max(axis=(3, 5))
+
+
+def _mac(a2d: jnp.ndarray, w2d: jnp.ndarray, use_pallas: bool) -> jnp.ndarray:
+    """(M, K) @ (K, N) through the L1 kernel or plain jnp."""
+    if use_pallas:
+        return mac_kernel.matmul(a2d, w2d)
+    return a2d @ w2d
+
+
+def _layer_transfer(pre, var, fan_in, relu, mode, g, mu, final, noise):
+    """pre-activation -> next-layer activation (or logits when final).
+
+    ``noise``: optional (key, k) — inject the bitstream sampling noise of a
+    k-cycle stream into the SC value, sigma_v = sqrt(P(1-P)/k). Training
+    with this noise in the loop is what pushes the learned pre-activations
+    above the SC noise floor (the paper trains through its SC math model
+    for the same reason); without it the network learns signals far smaller
+    than the k=32 sampling noise and the bit-exact datapath classifies at
+    chance.
+    """
+    if mode == "sc":
+        v = ref.neuron_expectation(pre, fan_in, relu, var)
+        if noise is not None:
+            key, kbits, scale = noise
+            p = (v + 1.0) / 2.0
+            # 1 sigma from the B2S/S2B resampling + ~0.5 sigma from the
+            # product-stream sampling feeding the counts.
+            sigma = 1.5 * jnp.sqrt(jnp.clip(p * (1.0 - p), 1e-6, 0.25) / kbits)
+            v = v + scale * sigma * jax.random.normal(key, v.shape)
+        # S2B recovery: sp == smoothed-relu(pre) (or pre itself, no relu).
+        sp = (v + 1.0) * float(1 << ref.m_bits(fan_in)) - fan_in
+    else:
+        sp = jnp.maximum(pre, 0.0) if relu else pre
+    if final:
+        return g * (sp - mu)
+    return jnp.clip(g * (sp - mu), 0.0, 1.0)
+
+
+def forward(params, x, spec: dict, mode: str = "sc", bits: int = 8,
+            use_pallas: bool = False, noise_key=None, noise_k: int = 32,
+            noise_scale: float = 1.0) -> jnp.ndarray:
+    """Forward pass. x: (B, C, H, W) in [0, 1]. Returns (B, 10) logits.
+
+    ``noise_key``: inject k-cycle SC sampling noise (training only — the
+    exported inference graph stays deterministic)."""
+    b = x.shape[0]
+    act = x
+    n_layers = len(spec["layers"])
+    keys = (
+        jax.random.split(noise_key, n_layers) if noise_key is not None else [None] * n_layers
+    )
+    for li, (layer, p) in enumerate(zip(spec["layers"], params)):
+        w = p["w"]
+        g, mu = p["g"], p["mu"]
+        final = li == n_layers - 1
+        wc = jnp.clip(w, -1.0, 1.0)
+        if mode in ("fixed", "sc"):
+            # Straight-through quantization.
+            aq = act + lax.stop_gradient(ref.quantize_value(act, bits) - act)
+            wq = wc + lax.stop_gradient(ref.quantize_value(wc, bits) - wc)
+        else:
+            aq, wq = act, wc
+
+        if layer["kind"] == "conv":
+            cols, oh, ow = _im2col(aq, layer["kernel"], layer["pad"])
+            fan_in = layer_fan_in(layer)
+            wmat = wq.reshape(layer["out_ch"], fan_in).T
+            pre = _mac(cols.reshape(-1, fan_in), wmat, use_pallas)
+            pre = pre.reshape(b, oh * ow, layer["out_ch"])
+            var = None
+            if mode == "sc":
+                var = fan_in - _mac(
+                    (cols * cols).reshape(-1, fan_in), wmat * wmat, use_pallas
+                ).reshape(b, oh * ow, layer["out_ch"])
+            noise = (keys[li], noise_k, noise_scale) if keys[li] is not None else None
+            out = _layer_transfer(pre, var, fan_in, layer["relu"], mode, g, mu, final, noise)
+            out = out.transpose(0, 2, 1).reshape(b, layer["out_ch"], oh, ow)
+            if layer.get("pool"):
+                out = _max_pool(out, layer["pool"])
+            act = out
+        else:
+            a2d = aq.reshape(b, -1)
+            fan_in = layer["in"]
+            pre = _mac(a2d, wq.T, use_pallas)
+            var = None
+            if mode == "sc":
+                var = fan_in - _mac(a2d * a2d, (wq * wq).T, use_pallas)
+            noise = (keys[li], noise_k, noise_scale) if keys[li] is not None else None
+            act = _layer_transfer(pre, var, fan_in, layer["relu"], mode, g, mu, final, noise)
+    return act
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec_name", "mode", "bits", "use_pallas", "noise_k", "noise_scale"),
+)
+def predict(params, x, spec_name: str, mode: str = "sc", bits: int = 8,
+            use_pallas: bool = False, noise_key=None, noise_k: int = 32,
+            noise_scale: float = 1.0):
+    """Class logits."""
+    spec = spec_by_name(spec_name)
+    return forward(
+        params, x, spec, mode=mode, bits=bits, use_pallas=use_pallas,
+        noise_key=noise_key, noise_k=noise_k, noise_scale=noise_scale,
+    )

@@ -1,0 +1,116 @@
+"""Build-time training (the paper trains in PyTorch with SC math models
+inserted; we do the same in JAX — section V-B). Never imported at runtime.
+
+Minimal Adam implementation (no optax in this environment), cross-entropy
+over the SC-mode forward so the weights adapt to the SC affine scaling and
+the smoothed ReLU the hardware implements.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("spec_name", "mode", "bits", "lr", "noise_k", "noise_scale")
+)
+def train_step(params, opt_state, x, y, spec_name, mode="sc", bits=8, lr=1e-3,
+               noise_key=None, noise_k=32, noise_scale=1.0):
+    def loss_fn(p):
+        logits = model.predict(
+            p, x, spec_name, mode=mode, bits=bits,
+            noise_key=noise_key, noise_k=noise_k, noise_scale=noise_scale,
+        )
+        return cross_entropy(logits, y)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    m, v, t = opt_state
+    t = t + 1
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = jax.tree_util.tree_map(lambda mi, g: b1 * mi + (1 - b1) * g, m, grads)
+    v = jax.tree_util.tree_map(lambda vi, g: b2 * vi + (1 - b2) * g * g, v, grads)
+    new_params = jax.tree_util.tree_map(
+        lambda p, mi, vi: p
+        - lr * (mi / (1 - b1**t)) / (jnp.sqrt(vi / (1 - b2**t)) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, (m, v, t), loss
+
+
+def accuracy(params, x, y, spec_name, mode="sc", bits=8, batch=256) -> float:
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        logits = model.predict(params, x[i : i + batch], spec_name, mode=mode, bits=bits)
+        correct += int((jnp.argmax(logits, axis=1) == y[i : i + batch]).sum())
+    return correct / x.shape[0]
+
+
+def train(
+    spec_name: str,
+    dataset: str,
+    n_train: int = 6000,
+    n_test: int = 1000,
+    epochs: int = 3,
+    batch: int = 64,
+    lr: float = 2e-3,
+    bits: int = 8,
+    mode: str = "sc",
+    seed: int = 0,
+    verbose: bool = True,
+    noise_ramp: bool = False,
+):
+    """Train and return (params, test_images, test_labels, test_accuracy)."""
+    xtr, ytr = data_mod.dataset(dataset, n_train, seed=seed)
+    xte, yte = data_mod.dataset(dataset, n_test, seed=seed + 10_000)
+    spec = model.spec_by_name(spec_name)
+    params = model.init_params(spec, seed=seed)
+    params = model.calibrate(params, jnp.asarray(xtr[:128]), spec, mode=mode, bits=bits)
+    opt = (
+        jax.tree_util.tree_map(jnp.zeros_like, params),
+        jax.tree_util.tree_map(jnp.zeros_like, params),
+        0,
+    )
+    rng = np.random.default_rng(seed + 1)
+    xtr_j, ytr_j = jnp.asarray(xtr), jnp.asarray(ytr)
+    key = jax.random.PRNGKey(seed + 99)
+    for epoch in range(epochs):
+        order = rng.permutation(n_train)
+        losses = []
+        # Optional noise annealing (experimental): bootstrap noiselessly,
+        # then ramp toward full SC sampling noise so the weights learn to
+        # clear the k-cycle noise floor. Off by default: the logits-domain
+        # noise needs a noise-aware loss to converge (see EXPERIMENTS.md).
+        ramp = (
+            0.0
+            if (not noise_ramp or epochs == 1)
+            else min(1.0, epoch / max(1, epochs - 2))
+        )
+        for i in range(0, n_train - batch + 1, batch):
+            idx = order[i : i + batch]
+            nk = None
+            if mode == "sc" and ramp > 0.0:
+                key, nk = jax.random.split(key)
+            params, opt, loss = train_step(
+                params, opt, xtr_j[idx], ytr_j[idx], spec_name, mode=mode, bits=bits,
+                lr=lr, noise_key=nk, noise_scale=ramp,
+            )
+            losses.append(float(loss))
+        if verbose:
+            acc = accuracy(params, jnp.asarray(xte), jnp.asarray(yte), spec_name, mode=mode, bits=bits)
+            print(f"[{spec_name}/{dataset}] epoch {epoch}: loss {np.mean(losses):.4f} test acc {acc:.4f}")
+    final = accuracy(params, jnp.asarray(xte), jnp.asarray(yte), spec_name, mode=mode, bits=bits)
+    return params, xte, yte, final

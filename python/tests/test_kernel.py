@@ -1,0 +1,92 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure refs.
+
+Hypothesis sweeps shapes and values; these are the core correctness signal
+for the compile path (the Rust side replays the same conventions).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mac, pcc, ref, sc_mac
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([1, 8, 16, 24]),
+    fan_in=st.integers(1, 64),
+    words=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sc_mac_matches_ref(n, fan_in, words, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 2**32, size=(n, fan_in, words), dtype=np.uint32)
+    w = rng.integers(0, 2**32, size=(n, fan_in, words), dtype=np.uint32)
+    out = np.asarray(sc_mac.sc_mac(a, w))
+    assert np.array_equal(out, ref.sc_mac_ref(a, w))
+
+
+def test_sc_mac_extremes():
+    ones = np.full((8, 25, 2), 0xFFFFFFFF, dtype=np.uint32)
+    zeros = np.zeros((8, 25, 2), dtype=np.uint32)
+    # XNOR(1,1) = 1 everywhere; XNOR(1,0) = 0 everywhere.
+    assert np.all(np.asarray(sc_mac.sc_mac(ones, ones)) == 25 * 64)
+    assert np.all(np.asarray(sc_mac.sc_mac(ones, zeros)) == 0)
+    assert np.all(np.asarray(sc_mac.sc_mac(zeros, zeros)) == 25 * 64)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    kind=st.sampled_from(["cmp", "mux", "nandnor"]),
+    bits=st.sampled_from([3, 4, 8, 10]),
+    n=st.sampled_from([8, 16]),
+    k=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pcc_kernel_matches_ref(kind, bits, n, k, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 1 << bits, size=n, dtype=np.uint32)
+    rs = rng.integers(0, 1 << bits, size=k, dtype=np.uint32)
+    out = np.asarray(pcc.pcc_streams(codes, rs, kind=kind, bits=bits))
+    assert np.array_equal(out, ref.pcc_streams_packed(kind, codes, rs, bits))
+
+
+def test_pcc_nandnor_transfer_is_monotone():
+    # Lemma 1: expected output increases with the input code (Fig. 7).
+    bits = 8
+    codes = np.arange(256, dtype=np.uint32)
+    rs = np.arange(256, dtype=np.uint32)  # exhaustive uniform R
+    means = ref.pcc_bit("nandnor", codes[:, None], rs[None, :], bits).mean(axis=1)
+    assert np.all(np.diff(means) >= -1e-12)
+    # Bias stays within ~one LSB of x/2^N.
+    assert np.abs(means - codes / 256.0).max() <= 1.6 / 256.0 + 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 90),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_numpy(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    b = rng.normal(size=(k, n)).astype(np.float32)
+    c = np.asarray(mac.matmul(a, b))
+    np.testing.assert_allclose(c, a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_quantize_matches_rust_convention():
+    # Mirrors rust sc::quantize_bipolar: round-half-away, clamp, cap.
+    assert float(ref.quantize_bipolar(-1.0, 8)) == 0
+    assert float(ref.quantize_bipolar(1.0, 8)) == 255
+    assert float(ref.quantize_bipolar(0.0, 8)) == 128
+    assert float(ref.quantize_bipolar(5.0, 4)) == 15
+
+
+@settings(max_examples=30, deadline=None)
+@given(v=st.floats(-1.0, 1.0), bits=st.sampled_from([3, 5, 8]))
+def test_quantize_roundtrip_error_bounded(v, bits):
+    q = float(ref.quantize_value(np.float32(v), bits))
+    assert abs(q - v) <= 1.0 / (1 << bits) + 1e-6

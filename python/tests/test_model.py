@@ -1,0 +1,82 @@
+"""L2 model correctness: forward modes, shapes, SC math properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def lenet_setup():
+    params = model.init_params(model.LENET5, seed=0)
+    x, _ = data.make_digits(16, seed=3)
+    params = model.calibrate(params, jnp.asarray(x), model.LENET5, mode="sc", bits=8)
+    return params, jnp.asarray(x)
+
+
+def test_forward_shapes(lenet_setup):
+    params, x = lenet_setup
+    for mode in ("float", "fixed", "sc"):
+        out = model.predict(params, x, "lenet5", mode=mode)
+        assert out.shape == (16, 10)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_pallas_and_jnp_paths_agree(lenet_setup):
+    params, x = lenet_setup
+    a = model.predict(params, x, "lenet5", mode="sc", use_pallas=False)
+    b = model.predict(params, x, "lenet5", mode="sc", use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_sc_smooth_relu_upper_bounds_hard():
+    # E[max(2c, n)] >= max(E[2c], n): the SC ReLU sits above the hard one.
+    for pre in (-3.0, -0.5, 0.0, 0.5, 3.0):
+        hard = ref.neuron_expectation(jnp.float32(pre), 25, False)
+        hard_relu = (max(pre, 0.0) + 25) / 32.0 - 1.0
+        smooth = float(ref.neuron_expectation(jnp.float32(pre), 25, True, var=jnp.float32(25.0)))
+        assert smooth >= hard_relu - 1e-6
+        del hard
+
+
+def test_smooth_relu_converges_to_hard_when_noiseless():
+    for pre in (-2.0, -0.1, 0.0, 0.1, 2.0):
+        smooth = float(
+            ref.neuron_expectation(jnp.float32(pre), 25, True, var=jnp.float32(1e-10))
+        )
+        hard = (max(pre, 0.0) + 25) / 32.0 - 1.0
+        assert abs(smooth - hard) < 1e-4
+
+
+def test_calibration_places_activations_in_range(lenet_setup):
+    params, x = lenet_setup
+    # After calibration the logits must differ across images (signal flows).
+    out = np.asarray(model.predict(params, x, "lenet5", mode="sc"))
+    assert out.std(axis=0).mean() > 1e-3
+
+
+def test_cifar_net_shapes():
+    params = model.init_params(model.CIFAR_NET, seed=1)
+    x, _ = data.make_textures(4, seed=5)
+    out = model.predict(params, jnp.asarray(x), "cifar_net", mode="float")
+    assert out.shape == (4, 10)
+
+
+def test_datasets_deterministic():
+    a1, l1 = data.make_digits(8, seed=7)
+    a2, l2 = data.make_digits(8, seed=7)
+    assert np.array_equal(a1, a2) and np.array_equal(l1, l2)
+    t1, m1 = data.make_textures(8, seed=7)
+    t2, m2 = data.make_textures(8, seed=7)
+    assert np.array_equal(t1, t2) and np.array_equal(m1, m2)
+
+
+def test_dataset_ranges_and_classes():
+    x, y = data.make_digits(64, seed=0)
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert set(np.unique(y)).issubset(set(range(10)))
+    x, y = data.make_textures(64, seed=0)
+    assert x.shape == (64, 3, 32, 32)
+    assert x.min() >= 0.0 and x.max() <= 1.0

@@ -1,0 +1,58 @@
+//! Fig. 12 regenerator: SCNN (bitstream 2^n_bits) vs binary fixed-point
+//! NN accuracy under varying quantization levels.
+
+use scnn::accel::layers::NetworkSpec;
+use scnn::accel::network::{classify, forward, ForwardMode};
+use scnn::benchutil::{bench, print_table};
+use scnn::data::{Artifacts, Dataset, ModelWeights};
+
+fn main() {
+    let artifacts = Artifacts::default_dir();
+    if !artifacts.present() {
+        eprintln!("artifacts missing — run `make artifacts`; skipping fig12");
+        return;
+    }
+    let ds = Dataset::load(&artifacts.dataset("digits")).unwrap();
+    let net = NetworkSpec::lenet5();
+    let sc_raw = ModelWeights::load(&artifacts.weights("lenet5", "sc")).unwrap();
+    let fx_raw = ModelWeights::load(&artifacts.weights("lenet5", "fixed")).unwrap();
+    let n = 60.min(ds.len());
+    let eval = |raw: &ModelWeights, bits: u32, mode_sc: bool| -> f64 {
+        let weights = raw.quantize(bits);
+        (0..n)
+            .map(|i| {
+                let img: Vec<f64> = ds.images[i].iter().map(|&v| v as f64).collect();
+                let mode = if mode_sc {
+                    // Paper: SC bitstream length = 2^n_bits, amplified by the
+                    // training-noise deviation factor (see fig11 notes).
+                    ForwardMode::NoisyExpectation { k: (1usize << bits) * 16, seed: 1 + i as u32 }
+                } else {
+                    ForwardMode::FixedPoint
+                };
+                let p = classify(&forward(&net, &weights, &img, mode));
+                (p == ds.labels[i] as usize) as usize
+            })
+            .sum::<usize>() as f64
+            / n as f64
+    };
+    let mut rows = Vec::new();
+    for bits in [3u32, 4, 5, 6, 7, 8] {
+        rows.push(vec![
+            format!("{bits}"),
+            format!("{:.0}%", 100.0 * eval(&sc_raw, bits, true)),
+            format!("{:.0}%", 100.0 * eval(&fx_raw, bits, false)),
+        ]);
+    }
+    print_table(
+        "Fig. 12 — SCNN (k=16·2^bits) vs fixed-point NN (synthetic digits)",
+        &["bits", "SC-NN", "fixed-point NN"],
+        &rows,
+    );
+    // Shape: SC approaches the fixed-point NN as bits (and k) grow.
+    let sc8 = eval(&sc_raw, 8, true);
+    let sc3 = eval(&sc_raw, 3, true);
+    assert!(sc8 >= sc3, "SC accuracy must not degrade with more bits");
+    bench("fig12_point(sc, 8-bit)", 0, 1, || {
+        std::hint::black_box(eval(&sc_raw, 8, true));
+    });
+}

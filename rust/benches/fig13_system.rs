@@ -1,0 +1,49 @@
+//! Fig. 13 regenerator: system area/latency/energy + ADP/EDP/EDAP vs
+//! channel count, and the optimal-channel selection (paper: 8).
+
+use scnn::accel::layers::NetworkSpec;
+use scnn::accel::metrics::argmin_by;
+use scnn::accel::system::sweep_channels;
+use scnn::benchutil::{bench, print_table};
+use scnn::tech::TechKind;
+
+fn main() {
+    let net = NetworkSpec::lenet5();
+    let counts = [1usize, 2, 4, 8, 16, 32];
+    for tech in [TechKind::Finfet10, TechKind::Rfet10] {
+        let evals = sweep_channels(tech, &net, &counts);
+        let rows: Vec<Vec<String>> = evals
+            .iter()
+            .map(|e| {
+                let m = &e.metrics;
+                vec![
+                    e.channels.to_string(),
+                    format!("{:.1}", m.logic_area_mm2 * 1000.0),
+                    format!("{:.2}", m.latency_us),
+                    format!("{:.3}", m.energy_uj),
+                    format!("{:.4}", m.adp()),
+                    format!("{:.4}", m.edp()),
+                    format!("{:.5}", m.edap()),
+                ]
+            })
+            .collect();
+        print_table(
+            &format!("Fig. 13 — {tech} (logic area ×10⁻³ mm²)"),
+            &["ch", "logic area", "latency µs", "energy µJ", "ADP", "EDP", "EDAP"],
+            &rows,
+        );
+        let ms: Vec<_> = evals.iter().map(|e| e.metrics).collect();
+        let best_adp = counts[argmin_by(&ms, |m| m.adp())];
+        let best_edap = counts[argmin_by(&ms, |m| m.edap())];
+        println!("optima: ADP {best_adp} ch, EDAP {best_edap} ch (paper: 8)");
+        assert!((4..=16).contains(&best_edap), "EDAP optimum out of band");
+        // Fig. 13 qualitative claims.
+        for w in evals.windows(2) {
+            assert!(w[1].metrics.latency_us <= w[0].metrics.latency_us * 1.001);
+            assert!(w[1].metrics.logic_area_mm2 > w[0].metrics.logic_area_mm2);
+        }
+    }
+    bench("sweep_channels(6 points, rfet)", 1, 3, || {
+        std::hint::black_box(sweep_channels(TechKind::Rfet10, &net, &counts));
+    });
+}

@@ -1,0 +1,77 @@
+//! §Perf hot-path benchmarks: the packed bitstream engine, the vertical
+//! counter (APC front end), one bit-exact LeNet-5 inference, gate-level
+//! characterization, and the PJRT serving path. Before/after numbers live
+//! in EXPERIMENTS.md §Perf.
+
+use scnn::accel::layers::NetworkSpec;
+use scnn::accel::network::{forward, ForwardMode};
+use scnn::benchutil::bench;
+use scnn::data::{Artifacts, Dataset, ModelWeights};
+use scnn::sc::bitstream::{Bitstream, VerticalCounter};
+
+fn main() {
+    // L3 hot loop 1: packed XNOR over 1024-bit streams.
+    let a = Bitstream::from_fn(1024, |t| t % 3 == 0);
+    let b = Bitstream::from_fn(1024, |t| t % 5 == 0);
+    let r = bench("bitstream_xnor(1024b)", 100, 2000, || {
+        std::hint::black_box(a.xnor(&b));
+    });
+    println!("  -> {:.2} Gbit/s", r.ops_per_sec(1024.0) / 1e9);
+
+    // L3 hot loop 2: vertical counter accumulating 25 product streams.
+    let streams: Vec<Bitstream> =
+        (0..25).map(|j| Bitstream::from_fn(1024, |t| (t * (j + 3)) % 7 < 3)).collect();
+    let r = bench("vertical_counter(25x1024b)", 50, 1000, || {
+        let mut vc = VerticalCounter::new(1024, 25);
+        for s in &streams {
+            vc.add(s);
+        }
+        std::hint::black_box(vc.total());
+    });
+    println!("  -> {:.2} Gbit/s through the APC front end", r.ops_per_sec(25.0 * 1024.0) / 1e9);
+
+    let artifacts = Artifacts::default_dir();
+    if artifacts.present() {
+        let ds = Dataset::load(&artifacts.dataset("digits")).unwrap();
+        let net = NetworkSpec::lenet5();
+        let weights = ModelWeights::load(&artifacts.weights("lenet5", "sc")).unwrap().quantize(8);
+        let img: Vec<f64> = ds.images[0].iter().map(|&v| v as f64).collect();
+        bench("bitexact_lenet5_inference(k=32)", 1, 5, || {
+            std::hint::black_box(forward(&net, &weights, &img, ForwardMode::Stochastic { k: 32, seed: 7 }));
+        });
+        bench("expectation_lenet5_inference", 1, 10, || {
+            std::hint::black_box(forward(&net, &weights, &img, ForwardMode::Expectation));
+        });
+        // PJRT serving path (single image, batch-1 graph).
+        let engine = scnn::runtime::Engine::load(&artifacts.hlo("lenet5", 1)).unwrap();
+        bench("pjrt_lenet5_b1", 2, 20, || {
+            std::hint::black_box(engine.run_f32(&ds.images[0], &[1, 1, 28, 28]).unwrap());
+        });
+        let eb = scnn::runtime::Engine::load(&artifacts.hlo("lenet5", 32)).unwrap();
+        let mut flat = Vec::new();
+        for i in 0..32 {
+            flat.extend_from_slice(&ds.images[i]);
+        }
+        let r = bench("pjrt_lenet5_b32", 2, 10, || {
+            std::hint::black_box(eb.run_f32(&flat, &[32, 1, 28, 28]).unwrap());
+        });
+        println!("  -> {:.0} img/s batched", r.ops_per_sec(32.0));
+    } else {
+        eprintln!("artifacts missing — PJRT hot-path benches skipped");
+    }
+
+    // Gate-level simulator throughput (the Genus substitute).
+    let lib = scnn::tech::CellLibrary::finfet10();
+    let nl = scnn::sc::apc::build_netlist(25, 32, scnn::sc::apc::FaStyle::CmosCell);
+    bench("apc25_power_sim(2048 cycles)", 1, 5, || {
+        let mut s = 1u64;
+        std::hint::black_box(scnn::sim::estimate_power(&nl, &lib, 2048, |_, pins| {
+            for p in pins.iter_mut() {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                *p = s & 1 == 1;
+            }
+        }));
+    });
+}

@@ -1,0 +1,58 @@
+//! Table I regenerator: area/delay/energy of the 8-bit PCC and 25-input
+//! APC, FinFET vs RFET, plus timing of the characterization itself.
+
+use scnn::accel::channel::{characterize_apc, characterize_pcc};
+use scnn::benchutil::{bench, gain_pct, print_table};
+use scnn::tech::calibration as cal;
+use scnn::tech::CellLibrary;
+
+fn main() {
+    let fin = CellLibrary::finfet10();
+    let rf = CellLibrary::rfet10();
+    let (fp, rp) = (characterize_pcc(&fin), characterize_pcc(&rf));
+    let (fa, ra) = (characterize_apc(&fin), characterize_apc(&rf));
+
+    let row = |r: &scnn::sim::BlockReport| {
+        vec![
+            r.tech.clone(),
+            format!("{:.2}", r.area_um2),
+            format!("{:.0}", r.delay_ps),
+            format!("{:.2}", r.energy_per_cycle_fj),
+        ]
+    };
+    print_table(
+        "Table I — 8-bit PCC (paper: FinFET 2.21/242/4.11, RFET 2.01/142/2.89)",
+        &["tech", "area µm²", "delay ps", "energy fJ"],
+        &[row(&fp), row(&rp)],
+    );
+    println!(
+        "gains: area {:+.1}% (paper 9.1), delay {:+.1}% (41.6), energy {:+.1}% (29.7)",
+        gain_pct(fp.area_um2, rp.area_um2),
+        gain_pct(fp.delay_ps, rp.delay_ps),
+        gain_pct(fp.energy_per_cycle_fj, rp.energy_per_cycle_fj)
+    );
+    print_table(
+        "Table I — 25-input APC (paper: FinFET 24.37/462/40.14, RFET 26.15/593/35.88)",
+        &["tech", "area µm²", "delay ps", "energy fJ"],
+        &[row(&fa), row(&ra)],
+    );
+    println!(
+        "gains: area {:+.1}% (paper -7.2), delay {:+.1}% (-28.4), energy {:+.1}% (10.6)",
+        gain_pct(fa.area_um2, ra.area_um2),
+        gain_pct(fa.delay_ps, ra.delay_ps),
+        gain_pct(fa.energy_per_cycle_fj, ra.energy_per_cycle_fj)
+    );
+    for (m, t) in [
+        (fp.area_um2, cal::TABLE1_FINFET_PCC8.area_um2),
+        (rp.energy_per_cycle_fj, cal::TABLE1_RFET_PCC8.energy_fj),
+        (fa.delay_ps, cal::TABLE1_FINFET_APC25.delay_ps),
+    ] {
+        assert!(cal::rel_err(m, t) < 0.06, "calibration regression: {m} vs {t}");
+    }
+    bench("characterize_pcc(finfet)", 1, 5, || {
+        std::hint::black_box(characterize_pcc(&fin));
+    });
+    bench("characterize_apc(rfet)", 1, 3, || {
+        std::hint::black_box(characterize_apc(&rf));
+    });
+}

@@ -1,0 +1,37 @@
+//! Table II regenerator: channel-level area / min clock / energy.
+
+use scnn::accel::channel::characterize_channel;
+use scnn::benchutil::{bench, gain_pct, print_table};
+use scnn::tech::TechKind;
+
+fn main() {
+    let fin = characterize_channel(TechKind::Finfet10);
+    let rf = characterize_channel(TechKind::Rfet10);
+    print_table(
+        "Table II — channel (paper: FinFET 2475 µm² / 0.95 ns / 4.30 pJ; RFET 2359 / 0.88 / 3.07)",
+        &["tech", "area µm²", "min clock ns", "energy pJ/cycle"],
+        &[
+            vec![
+                format!("{}", fin.tech),
+                format!("{:.0}", fin.area_um2),
+                format!("{:.2}", fin.min_clock_ps / 1000.0),
+                format!("{:.2}", fin.energy_per_cycle_fj / 1000.0),
+            ],
+            vec![
+                format!("{}", rf.tech),
+                format!("{:.0}", rf.area_um2),
+                format!("{:.2}", rf.min_clock_ps / 1000.0),
+                format!("{:.2}", rf.energy_per_cycle_fj / 1000.0),
+            ],
+        ],
+    );
+    println!(
+        "gains: area {:+.1}% (paper 4.7), clock {:+.1}% (7.4), energy {:+.1}% (28.6)",
+        gain_pct(fin.area_um2, rf.area_um2),
+        gain_pct(fin.min_clock_ps, rf.min_clock_ps),
+        gain_pct(fin.energy_per_cycle_fj, rf.energy_per_cycle_fj)
+    );
+    bench("characterize_channel(finfet)", 1, 3, || {
+        std::hint::black_box(characterize_channel(TechKind::Finfet10));
+    });
+}

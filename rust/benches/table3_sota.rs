@@ -1,0 +1,54 @@
+//! Table III regenerator: the "This Work" column (both technologies)
+//! against the literature rows (cited constants, as in the paper).
+
+use scnn::accel::layers::NetworkSpec;
+use scnn::accel::system::{evaluate, SystemConfig};
+use scnn::benchutil::{bench, print_table};
+use scnn::tech::TechKind;
+
+fn main() {
+    // Literature rows are citations in the paper too (constants).
+    let lit = [
+        ("ISSCC'21 [46] digital 7nm", "19.6 mm²", "-", "8.9-16.5 TOPS/W", "3.27-5.22 TOPS/mm²"),
+        ("TCAD'18 [8] SC 45nm", "22.9 mm²", "2600 mW", "5.66", "0.64"),
+        ("TCASII'22 [47] SC 65nm", "0.006 mm²", "4.06 mW", "2.17", "1.44"),
+        ("SSCL'22 [37] SC 14nm", "0.5 mm²", "16-68 mW", "4.4-75", "0.3-4.8"),
+        ("TNNLS'23 [29] SC 40nm", "2.1 mm²", "651 mW", "0.34", "0.11"),
+        ("JSSC'24 [30] SC 14nm", "0.06 mm²", "-", "35-140", "1.66-6.6"),
+    ];
+    println!("Literature rows (paper Table III):");
+    for l in lit {
+        println!("  {} | {} | {} | {} | {}", l.0, l.1, l.2, l.3, l.4);
+    }
+
+    let net = NetworkSpec::lenet5();
+    let mut rows = Vec::new();
+    for tech in [TechKind::Finfet10, TechKind::Rfet10] {
+        let e = evaluate(&SystemConfig::paper(tech, 8), &net);
+        let m = &e.metrics;
+        rows.push(vec![
+            format!("{tech}"),
+            format!("{:.3}", m.area_mm2),
+            format!("{:.1}", m.power_mw),
+            format!("{:.2}", m.clock_ghz),
+            format!("{:.2}", m.tops_per_watt()),
+            format!("{:.2}", m.tops_per_mm2()),
+        ]);
+    }
+    print_table(
+        "Table III — This Work (paper: FinFET 0.299 mm²/25 mW/1.05 GHz/12.02/4.83; RFET 0.288/19/1.14/16.9/5.40)",
+        &["tech", "area mm²", "power mW", "clock GHz", "TOPS/W", "TOPS/mm²"],
+        &rows,
+    );
+    // The paper's conclusion ratios: +40.6% TOPS/W, +11.8% TOPS/mm².
+    let fin = evaluate(&SystemConfig::paper(TechKind::Finfet10, 8), &net);
+    let rf = evaluate(&SystemConfig::paper(TechKind::Rfet10, 8), &net);
+    let tw = (rf.metrics.tops_per_watt() / fin.metrics.tops_per_watt() - 1.0) * 100.0;
+    let tm = (rf.metrics.tops_per_mm2() / fin.metrics.tops_per_mm2() - 1.0) * 100.0;
+    println!("RFET vs FinFET: TOPS/W {tw:+.1}% (paper +40.6), TOPS/mm² {tm:+.1}% (paper +11.8)");
+    assert!(tw > 10.0, "RFET must clearly win TOPS/W");
+    assert!(tm > 0.0, "RFET must win TOPS/mm²");
+    bench("evaluate(paper config)", 1, 5, || {
+        std::hint::black_box(evaluate(&SystemConfig::paper(TechKind::Rfet10, 8), &net));
+    });
+}

@@ -1,0 +1,325 @@
+//! Channel-level characterization (§IV-A Fig. 9, §V Table II).
+//!
+//! One channel = SNG bank (2 shared LFSRs + one PCC per multiplier operand)
+//! → 16 MAC units (25 XNOR multipliers + 25-input APC each) → configurable
+//! adder tree → B2S → ReLU/MP → S2B. The channel report composes the
+//! individually characterized blocks; this mirrors the paper's observation
+//! that PCCs dominate both channel area and energy.
+//!
+//! **Clocking.** The single-cycle critical path runs LFSR→PCC→XNOR→counter
+//! into the APC's pipeline register; the accumulator, adder-tree levels,
+//! B2S and S2B stages are registered separately. A global synthesis margin
+//! (clock uncertainty + routing derate, identical for both technologies)
+//! scales the raw path to the reported min clock period.
+
+use crate::accel::pipeline::{MACS_PER_CHANNEL, MAC_WIDTH};
+use crate::netlist::Netlist;
+use crate::sc::apc::FaStyle;
+use crate::sc::{adder_tree, apc, converters, pcc};
+use crate::sim;
+use crate::tech::{CellKind, CellLibrary, TechKind};
+
+/// Synthesis margin applied to raw topological paths (clock uncertainty,
+/// routing derate, OCV) — one constant for both technologies so ratios are
+/// purely architectural.
+pub const CLOCK_MARGIN: f64 = 1.675;
+
+/// System precision in bits (8-bit accuracy per §IV-A).
+pub const PRECISION_BITS: u32 = 8;
+/// Bitstream length k = 32 (§V-B).
+pub const BITSTREAM_LEN: usize = 32;
+
+/// Per-block and channel-level characterization under one technology.
+#[derive(Debug, Clone)]
+pub struct ChannelReport {
+    /// Technology characterized.
+    pub tech: TechKind,
+    /// 8-bit PCC block report (Table I column).
+    pub pcc: sim::BlockReport,
+    /// 25-input APC block report (Table I column).
+    pub apc: sim::BlockReport,
+    /// Adder-tree report (16 × 10-bit operands).
+    pub adder_tree: sim::BlockReport,
+    /// B2S comparator report.
+    pub b2s: sim::BlockReport,
+    /// S2B counter report.
+    pub s2b: sim::BlockReport,
+    /// Total channel area (µm²).
+    pub area_um2: f64,
+    /// Minimum clock period (ps) after margin.
+    pub min_clock_ps: f64,
+    /// Average switching energy per clock cycle (fJ).
+    pub energy_per_cycle_fj: f64,
+    /// Channel leakage (nW).
+    pub leakage_nw: f64,
+}
+
+/// PCC kind each technology uses (the paper compares MUX-chain FinFET
+/// against NAND-NOR RFET).
+pub fn pcc_kind_for(tech: TechKind) -> pcc::PccKind {
+    match tech {
+        TechKind::Finfet10 => pcc::PccKind::MuxChain,
+        TechKind::Rfet10 => pcc::PccKind::NandNor,
+    }
+}
+
+/// FA style each technology uses.
+pub fn fa_style_for(tech: TechKind) -> FaStyle {
+    match tech {
+        TechKind::Finfet10 => FaStyle::CmosCell,
+        TechKind::Rfet10 => FaStyle::RfetCompact,
+    }
+}
+
+/// Deterministic xorshift for stimulus.
+fn xorshift(seed: u64) -> impl FnMut() -> u64 {
+    let mut s = seed.max(1);
+    move || {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        s
+    }
+}
+
+/// PCC stimulus: X held for a full bitstream window (operands are static
+/// during conversion), R random every cycle.
+fn pcc_stimulus(bits: u32) -> impl FnMut(usize, &mut Vec<bool>) {
+    let mut rng = xorshift(0x5eed);
+    let mut x: u64 = 0xB5;
+    move |t, pins| {
+        if t % BITSTREAM_LEN == 0 {
+            x = rng();
+        }
+        let r = rng();
+        for i in 0..bits as usize {
+            pins[i] = (x >> i) & 1 == 1;
+            pins[bits as usize + i] = (r >> i) & 1 == 1;
+        }
+    }
+}
+
+/// Random-bit stimulus with '1'-density ≈ 1/2 (APC inputs are XNOR products
+/// of near-balanced bipolar streams).
+fn random_stimulus(seed: u64) -> impl FnMut(usize, &mut Vec<bool>) {
+    let mut rng = xorshift(seed);
+    move |_t, pins| {
+        for p in pins.iter_mut() {
+            *p = rng() % 2 == 1;
+        }
+    }
+}
+
+/// Characterize the 8-bit PCC for `tech` (Table I, PCC columns).
+pub fn characterize_pcc(lib: &CellLibrary) -> sim::BlockReport {
+    let kind = pcc_kind_for(lib.kind);
+    let nl = pcc::build_netlist(kind, PRECISION_BITS);
+    sim::characterize(&nl, lib, 2048, pcc_stimulus(PRECISION_BITS))
+}
+
+/// Characterize the 25-input APC for `tech` (Table I, APC columns).
+pub fn characterize_apc(lib: &CellLibrary) -> sim::BlockReport {
+    let nl = apc::build_netlist(MAC_WIDTH, BITSTREAM_LEN, fa_style_for(lib.kind));
+    sim::characterize(&nl, lib, 2048, random_stimulus(0xAAC))
+}
+
+/// Characterize the configurable adder tree (16 operands × 10 bits).
+pub fn characterize_adder_tree(lib: &CellLibrary) -> sim::BlockReport {
+    let nl = adder_tree::build_netlist(MACS_PER_CHANNEL, 10, fa_style_for(lib.kind));
+    sim::characterize(&nl, lib, 512, random_stimulus(0x7ee))
+}
+
+/// Characterize the B2S comparator (count width + 1 bits).
+pub fn characterize_b2s(lib: &CellLibrary) -> sim::BlockReport {
+    let nl = converters::build_b2s_netlist(6);
+    sim::characterize(&nl, lib, 1024, random_stimulus(0xB25))
+}
+
+/// Characterize the S2B output counter (8-bit).
+pub fn characterize_s2b(lib: &CellLibrary) -> sim::BlockReport {
+    let nl = converters::build_s2b_netlist(8);
+    sim::characterize(&nl, lib, 1024, random_stimulus(0x52B))
+}
+
+/// Raw (pre-margin) single-cycle critical path: PCC → XNOR → APC counter
+/// into the pipeline register.
+fn mac_stage_path_ps(lib: &CellLibrary, pcc_delay: f64) -> f64 {
+    // Counter-only delay: build the 25-input counter without accumulator.
+    let mut nl = Netlist::new("counter25");
+    let ins = nl.inputs(MAC_WIDTH);
+    let outs = apc::build_parallel_counter(&mut nl, fa_style_for(lib.kind), &ins);
+    for o in outs {
+        nl.mark_output(o);
+    }
+    let counter = sim::analyze_timing(&nl, lib).critical_path_ps;
+    let xnor = lib.cell(CellKind::Xnor2).delay_ps;
+    let dff = lib.cell(CellKind::Dff).delay_ps;
+    pcc_delay + xnor + counter + dff
+}
+
+/// Number of PCC instances per channel: one per multiplier operand
+/// (activations + weights) across all MACs.
+pub const PCCS_PER_CHANNEL: usize = 2 * MACS_PER_CHANNEL * MAC_WIDTH;
+/// XNOR multipliers per channel.
+pub const XNORS_PER_CHANNEL: usize = MACS_PER_CHANNEL * MAC_WIDTH;
+
+/// Characterize one full channel under `tech`.
+pub fn characterize_channel(tech: TechKind) -> ChannelReport {
+    let lib = CellLibrary::for_kind(tech);
+    let pcc_rep = characterize_pcc(&lib);
+    let apc_rep = characterize_apc(&lib);
+    let tree_rep = characterize_adder_tree(&lib);
+    let b2s_rep = characterize_b2s(&lib);
+    let s2b_rep = characterize_s2b(&lib);
+
+    let xnor = lib.cell(CellKind::Xnor2);
+    let dff = lib.cell(CellKind::Dff);
+    // Two shared 8-bit LFSRs (act + weight RNS) + one 6-bit B2S LFSR:
+    // 22 DFFs + a handful of feedback XORs.
+    let lfsr_dffs = 22.0;
+    let xor = lib.cell(CellKind::Xor2);
+
+    let area_um2 = PCCS_PER_CHANNEL as f64 * pcc_rep.area_um2
+        + XNORS_PER_CHANNEL as f64 * xnor.area_um2
+        + MACS_PER_CHANNEL as f64 * apc_rep.area_um2
+        + tree_rep.area_um2
+        + MACS_PER_CHANNEL as f64 * (b2s_rep.area_um2 + s2b_rep.area_um2)
+        + lfsr_dffs * dff.area_um2
+        + 6.0 * xor.area_um2;
+
+    // Energy/cycle: PCCs convert every cycle; every multiplier toggles with
+    // its products; APCs count every cycle; tree/B2S/S2B follow.
+    let xnor_energy = XNORS_PER_CHANNEL as f64 * 0.5 * xnor.switch_energy_fj;
+    let lfsr_energy = lfsr_dffs
+        * dff.switch_energy_fj
+        * (crate::sim::power::DFF_CLOCK_ENERGY_FRACTION + 0.5)
+        + 6.0 * 0.5 * xor.switch_energy_fj;
+    let energy_per_cycle_fj = PCCS_PER_CHANNEL as f64 * pcc_rep.energy_per_cycle_fj
+        + xnor_energy
+        + MACS_PER_CHANNEL as f64 * apc_rep.energy_per_cycle_fj
+        + tree_rep.energy_per_cycle_fj
+        + MACS_PER_CHANNEL as f64 * (b2s_rep.energy_per_cycle_fj + s2b_rep.energy_per_cycle_fj)
+        + lfsr_energy;
+
+    let leakage_nw = PCCS_PER_CHANNEL as f64 * pcc_rep.leakage_nw
+        + XNORS_PER_CHANNEL as f64 * xnor.leakage_nw
+        + MACS_PER_CHANNEL as f64 * apc_rep.leakage_nw
+        + tree_rep.leakage_nw
+        + MACS_PER_CHANNEL as f64 * (b2s_rep.leakage_nw + s2b_rep.leakage_nw)
+        + lfsr_dffs * dff.leakage_nw;
+
+    // Min clock: the MAC stage dominates; tree levels / converters are
+    // individually registered and shorter.
+    let mac_path = mac_stage_path_ps(&lib, pcc_rep.delay_ps);
+    let stage_paths = [
+        mac_path,
+        tree_rep.delay_ps / 2.0 + dff.delay_ps, // tree pipelined in 2 stages
+        b2s_rep.delay_ps + dff.delay_ps,
+        s2b_rep.delay_ps + dff.delay_ps,
+    ];
+    let min_clock_ps =
+        CLOCK_MARGIN * stage_paths.iter().fold(0.0f64, |m, &p| m.max(p));
+
+    ChannelReport {
+        tech,
+        pcc: pcc_rep,
+        apc: apc_rep,
+        adder_tree: tree_rep,
+        b2s: b2s_rep,
+        s2b: s2b_rep,
+        area_um2,
+        min_clock_ps,
+        energy_per_cycle_fj,
+        leakage_nw,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tech::calibration::{self, rel_err};
+
+    #[test]
+    fn table1_pcc_reproduced() {
+        let fin = characterize_pcc(&CellLibrary::finfet10());
+        let rf = characterize_pcc(&CellLibrary::rfet10());
+        let t = calibration::CALIBRATION_RTOL;
+        assert!(rel_err(fin.area_um2, calibration::TABLE1_FINFET_PCC8.area_um2) < t, "fin area {}", fin.area_um2);
+        assert!(rel_err(fin.delay_ps, calibration::TABLE1_FINFET_PCC8.delay_ps) < t, "fin delay {}", fin.delay_ps);
+        assert!(rel_err(rf.area_um2, calibration::TABLE1_RFET_PCC8.area_um2) < t, "rfet area {}", rf.area_um2);
+        assert!(rel_err(rf.delay_ps, calibration::TABLE1_RFET_PCC8.delay_ps) < t, "rfet delay {}", rf.delay_ps);
+    }
+
+    #[test]
+    fn table1_pcc_energy_reproduced() {
+        let fin = characterize_pcc(&CellLibrary::finfet10());
+        let rf = characterize_pcc(&CellLibrary::rfet10());
+        let t = calibration::CALIBRATION_RTOL;
+        assert!(
+            rel_err(fin.energy_per_cycle_fj, calibration::TABLE1_FINFET_PCC8.energy_fj) < t,
+            "fin energy {}",
+            fin.energy_per_cycle_fj
+        );
+        assert!(
+            rel_err(rf.energy_per_cycle_fj, calibration::TABLE1_RFET_PCC8.energy_fj) < t,
+            "rfet energy {}",
+            rf.energy_per_cycle_fj
+        );
+    }
+
+    #[test]
+    fn table1_apc_reproduced() {
+        let fin = characterize_apc(&CellLibrary::finfet10());
+        let rf = characterize_apc(&CellLibrary::rfet10());
+        let t = calibration::CALIBRATION_RTOL;
+        assert!(rel_err(fin.area_um2, calibration::TABLE1_FINFET_APC25.area_um2) < t, "fin area {}", fin.area_um2);
+        assert!(rel_err(rf.area_um2, calibration::TABLE1_RFET_APC25.area_um2) < t, "rfet area {}", rf.area_um2);
+        assert!(rel_err(fin.delay_ps, calibration::TABLE1_FINFET_APC25.delay_ps) < t, "fin delay {}", fin.delay_ps);
+        assert!(rel_err(rf.delay_ps, calibration::TABLE1_RFET_APC25.delay_ps) < t, "rfet delay {}", rf.delay_ps);
+        assert!(
+            rel_err(fin.energy_per_cycle_fj, calibration::TABLE1_FINFET_APC25.energy_fj) < t,
+            "fin energy {}",
+            fin.energy_per_cycle_fj
+        );
+        assert!(
+            rel_err(rf.energy_per_cycle_fj, calibration::TABLE1_RFET_APC25.energy_fj) < t,
+            "rfet energy {}",
+            rf.energy_per_cycle_fj
+        );
+    }
+
+    #[test]
+    fn table2_channel_predicted() {
+        let fin = characterize_channel(TechKind::Finfet10);
+        let rf = characterize_channel(TechKind::Rfet10);
+        let t = calibration::PREDICTION_RTOL;
+        assert!(
+            rel_err(fin.area_um2, calibration::TABLE2_FINFET_CHANNEL.area_um2) < t,
+            "fin channel area {}",
+            fin.area_um2
+        );
+        assert!(
+            rel_err(rf.area_um2, calibration::TABLE2_RFET_CHANNEL.area_um2) < t,
+            "rfet channel area {}",
+            rf.area_um2
+        );
+        assert!(
+            rel_err(fin.energy_per_cycle_fj, calibration::TABLE2_FINFET_CHANNEL.energy_fj) < t,
+            "fin channel energy {}",
+            fin.energy_per_cycle_fj
+        );
+        assert!(
+            rel_err(rf.energy_per_cycle_fj, calibration::TABLE2_RFET_CHANNEL.energy_fj) < t,
+            "rfet channel energy {}",
+            rf.energy_per_cycle_fj
+        );
+        // The paper's headline directions must hold: RFET smaller, faster,
+        // and much lower energy at channel level.
+        assert!(rf.area_um2 < fin.area_um2, "RFET channel must be smaller");
+        assert!(rf.min_clock_ps < fin.min_clock_ps, "RFET channel must clock faster");
+        assert!(
+            rf.energy_per_cycle_fj < 0.85 * fin.energy_per_cycle_fj,
+            "RFET channel energy must be well below FinFET"
+        );
+    }
+}

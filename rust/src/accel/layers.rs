@@ -1,0 +1,214 @@
+//! CNN layer and network descriptors: shapes, neuron/fan-in accounting, and
+//! the two evaluation networks of the paper (§V-B) — LeNet-5 for MNIST and
+//! the Yu et al. [45]-style CIFAR network.
+
+/// One layer of a convolutional network.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// 2-D convolution (square kernel, stride 1).
+    Conv { in_ch: usize, out_ch: usize, kernel: usize, padding: usize },
+    /// Non-overlapping max pool (square window).
+    MaxPool { size: usize },
+    /// Fully connected.
+    Dense { inputs: usize, outputs: usize },
+}
+
+/// A layer plus its activation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerSpec {
+    /// The layer operation.
+    pub kind: LayerKind,
+    /// Apply ReLU at the layer output (via the correlated-OR trick in SC).
+    pub relu: bool,
+}
+
+/// (channels, height, width) activation shape.
+pub type Shape = (usize, usize, usize);
+
+/// A full network description.
+#[derive(Debug, Clone)]
+pub struct NetworkSpec {
+    /// Network name (reports / artifact naming).
+    pub name: String,
+    /// Input shape.
+    pub input: Shape,
+    /// Layers in order.
+    pub layers: Vec<LayerSpec>,
+}
+
+impl LayerSpec {
+    /// Output shape given the input shape.
+    pub fn output_shape(&self, input: Shape) -> Shape {
+        let (c, h, w) = input;
+        match &self.kind {
+            LayerKind::Conv { in_ch, out_ch, kernel, padding } => {
+                assert_eq!(*in_ch, c, "conv input channels mismatch");
+                let oh = h + 2 * padding - kernel + 1;
+                let ow = w + 2 * padding - kernel + 1;
+                (*out_ch, oh, ow)
+            }
+            LayerKind::MaxPool { size } => (c, h / size, w / size),
+            LayerKind::Dense { inputs, outputs } => {
+                assert_eq!(*inputs, c * h * w, "dense input size mismatch");
+                (*outputs, 1, 1)
+            }
+        }
+    }
+
+    /// Number of neurons (MAC-owning outputs) in this layer; pooling has
+    /// none (it rides on the producing layer's correlated streams).
+    pub fn neurons(&self, input: Shape) -> usize {
+        match &self.kind {
+            LayerKind::Conv { .. } | LayerKind::Dense { .. } => {
+                let (c, h, w) = self.output_shape(input);
+                c * h * w
+            }
+            LayerKind::MaxPool { .. } => 0,
+        }
+    }
+
+    /// Fan-in (products per neuron).
+    pub fn fan_in(&self, _input: Shape) -> usize {
+        match &self.kind {
+            LayerKind::Conv { in_ch, kernel, .. } => in_ch * kernel * kernel,
+            LayerKind::Dense { inputs, .. } => *inputs,
+            LayerKind::MaxPool { .. } => 0,
+        }
+    }
+}
+
+impl NetworkSpec {
+    /// Per-layer input shapes (same length as `layers`).
+    pub fn input_shapes(&self) -> Vec<Shape> {
+        let mut shapes = Vec::with_capacity(self.layers.len());
+        let mut s = self.input;
+        for l in &self.layers {
+            shapes.push(s);
+            s = l.output_shape(s);
+        }
+        shapes
+    }
+
+    /// Final output shape.
+    pub fn output_shape(&self) -> Shape {
+        self.layers.iter().fold(self.input, |s, l| l.output_shape(s))
+    }
+
+    /// Total multiply-accumulate operations for one inference.
+    pub fn total_macs(&self) -> u64 {
+        self.input_shapes()
+            .iter()
+            .zip(&self.layers)
+            .map(|(&s, l)| l.neurons(s) as u64 * l.fan_in(s) as u64)
+            .sum()
+    }
+
+    /// Total neurons across compute layers.
+    pub fn total_neurons(&self) -> u64 {
+        self.input_shapes()
+            .iter()
+            .zip(&self.layers)
+            .map(|(&s, l)| l.neurons(s) as u64)
+            .sum()
+    }
+
+    /// LeNet-5 as used for MNIST in §V-B (28×28 input, padding-2 first
+    /// conv, 6-16 feature maps, 120-84-10 classifier).
+    pub fn lenet5() -> Self {
+        NetworkSpec {
+            name: "lenet5".into(),
+            input: (1, 28, 28),
+            layers: vec![
+                LayerSpec {
+                    kind: LayerKind::Conv { in_ch: 1, out_ch: 6, kernel: 5, padding: 2 },
+                    relu: true,
+                },
+                LayerSpec { kind: LayerKind::MaxPool { size: 2 }, relu: false },
+                LayerSpec {
+                    kind: LayerKind::Conv { in_ch: 6, out_ch: 16, kernel: 5, padding: 0 },
+                    relu: true,
+                },
+                LayerSpec { kind: LayerKind::MaxPool { size: 2 }, relu: false },
+                LayerSpec { kind: LayerKind::Dense { inputs: 400, outputs: 120 }, relu: true },
+                LayerSpec { kind: LayerKind::Dense { inputs: 120, outputs: 84 }, relu: true },
+                LayerSpec { kind: LayerKind::Dense { inputs: 84, outputs: 10 }, relu: false },
+            ],
+        }
+    }
+
+    /// The CIFAR-10 network following the structure of the reference work
+    /// [45] (conv32-pool-conv32-pool-conv64-pool-dense).
+    pub fn cifar_net() -> Self {
+        NetworkSpec {
+            name: "cifar_net".into(),
+            input: (3, 32, 32),
+            layers: vec![
+                LayerSpec {
+                    kind: LayerKind::Conv { in_ch: 3, out_ch: 32, kernel: 5, padding: 2 },
+                    relu: true,
+                },
+                LayerSpec { kind: LayerKind::MaxPool { size: 2 }, relu: false },
+                LayerSpec {
+                    kind: LayerKind::Conv { in_ch: 32, out_ch: 32, kernel: 5, padding: 2 },
+                    relu: true,
+                },
+                LayerSpec { kind: LayerKind::MaxPool { size: 2 }, relu: false },
+                LayerSpec {
+                    kind: LayerKind::Conv { in_ch: 32, out_ch: 64, kernel: 5, padding: 2 },
+                    relu: true,
+                },
+                LayerSpec { kind: LayerKind::MaxPool { size: 2 }, relu: false },
+                LayerSpec { kind: LayerKind::Dense { inputs: 1024, outputs: 10 }, relu: false },
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet5_shapes() {
+        let net = NetworkSpec::lenet5();
+        let shapes = net.input_shapes();
+        assert_eq!(shapes[0], (1, 28, 28));
+        assert_eq!(net.layers[0].output_shape(shapes[0]), (6, 28, 28)); // pad 2
+        assert_eq!(net.layers[1].output_shape((6, 28, 28)), (6, 14, 14));
+        assert_eq!(net.layers[2].output_shape((6, 14, 14)), (16, 10, 10));
+        assert_eq!(net.layers[3].output_shape((16, 10, 10)), (16, 5, 5));
+        assert_eq!(net.output_shape(), (10, 1, 1));
+    }
+
+    #[test]
+    fn lenet5_neuron_counts() {
+        let net = NetworkSpec::lenet5();
+        let shapes = net.input_shapes();
+        // conv1: 28·28·6 = 4704 neurons of fan-in 25.
+        assert_eq!(net.layers[0].neurons(shapes[0]), 4704);
+        assert_eq!(net.layers[0].fan_in(shapes[0]), 25);
+        // conv2: 10·10·16 = 1600 neurons of fan-in 150.
+        assert_eq!(net.layers[2].neurons(shapes[2]), 1600);
+        assert_eq!(net.layers[2].fan_in(shapes[2]), 150);
+        // dense1: 120 neurons of fan-in 400.
+        assert_eq!(net.layers[4].neurons(shapes[4]), 120);
+        assert_eq!(net.layers[4].fan_in(shapes[4]), 400);
+        // Total MACs: 4704·25 + 1600·150 + 120·400 + 84·120 + 10·84.
+        assert_eq!(net.total_macs(), 4704 * 25 + 1600 * 150 + 48000 + 10080 + 840);
+    }
+
+    #[test]
+    fn cifar_net_shapes() {
+        let net = NetworkSpec::cifar_net();
+        assert_eq!(net.output_shape(), (10, 1, 1));
+        let shapes = net.input_shapes();
+        assert_eq!(net.layers[4].output_shape(shapes[4]), (64, 8, 8));
+    }
+
+    #[test]
+    #[should_panic(expected = "dense input size mismatch")]
+    fn dense_mismatch_panics() {
+        let l = LayerSpec { kind: LayerKind::Dense { inputs: 100, outputs: 10 }, relu: false };
+        l.output_shape((1, 28, 28));
+    }
+}

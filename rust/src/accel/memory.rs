@@ -1,0 +1,53 @@
+//! Off-chip memory model: the paper's GDDR5 at 7000 MHz delivering
+//! ≈224 B/ns (§IV-A), consumed by Algorithm 1's pipeline scheduler.
+
+/// Off-chip memory characteristics.
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryModel {
+    /// Sustained load bandwidth in bytes per nanosecond.
+    pub bandwidth_bytes_per_ns: f64,
+    /// Energy per byte transferred from off-chip (pJ/B) — GDDR5-class I/O.
+    pub energy_pj_per_byte: f64,
+}
+
+impl MemoryModel {
+    /// The paper's GDDR5 configuration: 7000 MHz, ≈224 B/ns.
+    pub fn gddr5_paper() -> Self {
+        MemoryModel { bandwidth_bytes_per_ns: 224.0, energy_pj_per_byte: 10.0 }
+    }
+
+    /// Bytes loadable during one clock period of `clock_ps` picoseconds.
+    pub fn bytes_per_cycle(&self, clock_ps: f64) -> f64 {
+        self.bandwidth_bytes_per_ns * clock_ps / 1000.0
+    }
+
+    /// Time (ns) to load `bytes`.
+    pub fn load_time_ns(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.bandwidth_bytes_per_ns
+    }
+
+    /// Transfer energy (pJ) for `bytes`.
+    pub fn transfer_energy_pj(&self, bytes: u64) -> f64 {
+        bytes as f64 * self.energy_pj_per_byte
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_bandwidth() {
+        let m = MemoryModel::gddr5_paper();
+        // 0.88 ns clock (RFET Table II) ⇒ ~197 B per cycle.
+        let b = m.bytes_per_cycle(880.0);
+        assert!((b - 197.12).abs() < 0.01);
+    }
+
+    #[test]
+    fn load_time_scales() {
+        let m = MemoryModel::gddr5_paper();
+        assert!((m.load_time_ns(224) - 1.0).abs() < 1e-12);
+        assert!((m.load_time_ns(2240) - 10.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,103 @@
+//! System-level figures of merit: ADP, EDP, EDAP (the channel-count
+//! selection criteria of §V-C) and the Table III throughput metrics.
+
+/// One system design point.
+#[derive(Debug, Clone, Copy)]
+pub struct SystemMetrics {
+    /// Channels instantiated.
+    pub channels: usize,
+    /// Total die area (logic + SRAM + buffers), mm².
+    pub area_mm2: f64,
+    /// Channel-logic area only, mm² — the paper's Fig. 13 "logic part"
+    /// curve, used for the ADP/EDAP channel-selection study (the fixed
+    /// buffer/control overhead would otherwise mask the channel cost).
+    pub logic_area_mm2: f64,
+    /// Per-inference latency, µs.
+    pub latency_us: f64,
+    /// Per-inference energy, µJ.
+    pub energy_uj: f64,
+    /// Average power during inference, mW.
+    pub power_mw: f64,
+    /// Clock frequency, GHz.
+    pub clock_ghz: f64,
+    /// Binary-equivalent tera-ops per second (2 ops per MAC).
+    pub tops: f64,
+}
+
+impl SystemMetrics {
+    /// Area–delay product (mm²·µs) over the logic area (§V-C convention).
+    pub fn adp(&self) -> f64 {
+        self.logic_area_mm2 * self.latency_us
+    }
+
+    /// Energy–delay product (µJ·µs).
+    pub fn edp(&self) -> f64 {
+        self.energy_uj * self.latency_us
+    }
+
+    /// Energy–delay–area product (µJ·µs·mm²) over the logic area.
+    pub fn edap(&self) -> f64 {
+        self.energy_uj * self.latency_us * self.logic_area_mm2
+    }
+
+    /// TOPS per watt.
+    pub fn tops_per_watt(&self) -> f64 {
+        self.tops / (self.power_mw / 1000.0)
+    }
+
+    /// TOPS per mm².
+    pub fn tops_per_mm2(&self) -> f64 {
+        self.tops / self.area_mm2
+    }
+}
+
+/// Index of the design point minimizing a figure of merit.
+pub fn argmin_by<F: Fn(&SystemMetrics) -> f64>(points: &[SystemMetrics], f: F) -> usize {
+    points
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| f(a).partial_cmp(&f(b)).unwrap())
+        .map(|(i, _)| i)
+        .expect("non-empty design space")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(area: f64, lat: f64, en: f64) -> SystemMetrics {
+        SystemMetrics {
+            channels: 1,
+            area_mm2: area,
+            logic_area_mm2: area,
+            latency_us: lat,
+            energy_uj: en,
+            power_mw: en / lat * 1000.0,
+            clock_ghz: 1.0,
+            tops: 1.0,
+        }
+    }
+
+    #[test]
+    fn products_multiply() {
+        let p = point(2.0, 3.0, 5.0);
+        assert!((p.adp() - 6.0).abs() < 1e-12);
+        assert!((p.edp() - 15.0).abs() < 1e-12);
+        assert!((p.edap() - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn efficiency_metrics() {
+        let p = point(0.5, 1.0, 0.02);
+        // power = 20 mW, tops = 1 ⇒ 50 TOPS/W; 2 TOPS/mm².
+        assert!((p.tops_per_watt() - 50.0).abs() < 1e-9);
+        assert!((p.tops_per_mm2() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn argmin_finds_minimum() {
+        let pts = vec![point(2.0, 2.0, 2.0), point(1.0, 1.0, 1.0), point(3.0, 1.0, 1.0)];
+        assert_eq!(argmin_by(&pts, |p| p.edap()), 1);
+        assert_eq!(argmin_by(&pts, |p| p.adp()), 1);
+    }
+}

@@ -1,0 +1,17 @@
+//! Accelerator architecture and performance model (§IV, §V).
+//!
+//! * [`layers`] — CNN layer/network descriptors (LeNet-5, CIFAR net);
+//! * [`memory`] — the GDDR5 off-chip model (224 B/ns);
+//! * [`pipeline`] — Algorithm 1: non/partial/full pipelining per layer;
+//! * [`channel`] — Fig. 9 channel assembly + Table I/II characterization;
+//! * [`system`] — whole-accelerator roll-up (Fig. 13, Table III);
+//! * [`metrics`] — ADP/EDP/EDAP and TOPS-derived figures of merit;
+//! * [`network`] — bit-exact / expectation / fixed-point SCNN inference.
+
+pub mod channel;
+pub mod layers;
+pub mod memory;
+pub mod metrics;
+pub mod network;
+pub mod pipeline;
+pub mod system;

@@ -1,0 +1,251 @@
+//! Algorithm 1: the pipeline strategy that matches on-chip compute
+//! parallelism to the off-chip loading bandwidth (§IV-B, Fig. 10).
+//!
+//! Per layer, with `n_onchip` neurons resident at once and `n_memcover`
+//! neurons whose operands memory can deliver per clock cycle:
+//!
+//! * `n_onchip < n_memcover` → **non-pipelined**: every resident neuron
+//!   computes in parallel; `D = ceil(n/n_onchip) · k · τ` (line 8).
+//! * otherwise `incycle_pipe = ceil(n_onchip/n_memcover)` load cycles fill
+//!   the on-chip units;
+//!   * `incycle_pipe < k` → **partially pipelined** (Fig. 10):
+//!     `D = [groups·(k+1) + incycle_pipe − 1] · τ` (line 14);
+//!   * else → **fully pipelined** (memory-bound): loading overlaps compute
+//!     completely; `D = (groups·incycle_pipe + k) · τ` — the paper's line
+//!     17 with the group factor made explicit (for `groups = 1` the two
+//!     coincide).
+
+use crate::accel::layers::{LayerSpec, NetworkSpec, Shape};
+use crate::accel::memory::MemoryModel;
+
+/// Inputs a MAC unit multiplies per cycle (25 parallel multipliers, §IV-A).
+pub const MAC_WIDTH: usize = 25;
+/// MAC units per channel (§IV-A).
+pub const MACS_PER_CHANNEL: usize = 16;
+
+/// Hardware configuration relevant to scheduling.
+#[derive(Debug, Clone, Copy)]
+pub struct ScheduleConfig {
+    /// Number of channels.
+    pub channels: usize,
+    /// Bitstream length k.
+    pub k: usize,
+    /// Clock period in picoseconds.
+    pub clock_ps: f64,
+    /// Off-chip memory.
+    pub memory: MemoryModel,
+    /// Operand precision in bytes (8-bit system → 1).
+    pub bytes_per_operand: usize,
+}
+
+impl ScheduleConfig {
+    /// Total MAC units.
+    pub fn total_macs(&self) -> usize {
+        self.channels * MACS_PER_CHANNEL
+    }
+}
+
+/// Which of Algorithm 1's three regimes a layer falls into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// Memory outruns compute; no pipelining needed (line 7).
+    NonPipelined,
+    /// Loading interleaves with compute inside a bitstream window (line 13).
+    PartiallyPipelined,
+    /// Memory-bound; compute fully hidden behind loading (line 16).
+    FullyPipelined,
+}
+
+/// Schedule of one layer on the accelerator.
+#[derive(Debug, Clone)]
+pub struct LayerSchedule {
+    /// Regime chosen by Algorithm 1.
+    pub mode: PipelineMode,
+    /// Neurons resident on chip at once.
+    pub n_onchip: usize,
+    /// Neurons whose operands memory covers per clock cycle.
+    pub n_memcover: usize,
+    /// ceil(n_onchip / n_memcover) (meaningful when pipelined).
+    pub incycle_pipe: usize,
+    /// ceil(neurons / n_onchip) — outer iterations over the layer.
+    pub groups: usize,
+    /// Layer delay in ns.
+    pub delay_ns: f64,
+    /// Bytes loaded from off-chip for this layer.
+    pub dram_bytes: u64,
+    /// MAC·cycles of actual compute (for energy/utilization accounting).
+    pub active_mac_cycles: u64,
+    /// Total cycles the layer occupies the machine.
+    pub total_cycles: u64,
+}
+
+/// Apply Algorithm 1 to one layer.
+pub fn schedule_layer(layer: &LayerSpec, input: Shape, cfg: &ScheduleConfig) -> Option<LayerSchedule> {
+    let neurons = layer.neurons(input);
+    if neurons == 0 {
+        return None; // pooling layers ride on the producing layer
+    }
+    let fan_in = layer.fan_in(input);
+    let macs_per_neuron = fan_in.div_ceil(MAC_WIDTH);
+    let n_onchip = (cfg.total_macs() / macs_per_neuron).max(1).min(neurons);
+    // Operand bytes per neuron: weights + activations at system precision.
+    let bytes_per_neuron = (2 * fan_in * cfg.bytes_per_operand) as f64;
+    let n_memcover =
+        ((cfg.memory.bytes_per_cycle(cfg.clock_ps) / bytes_per_neuron).floor() as usize).max(1);
+    let groups = neurons.div_ceil(n_onchip);
+    let k = cfg.k as u64;
+
+    let (mode, total_cycles) = if n_onchip < n_memcover {
+        // Line 7–8: Dlayer = cycle_unpipe · k · τ.
+        (PipelineMode::NonPipelined, groups as u64 * k)
+    } else {
+        let incycle_pipe = n_onchip.div_ceil(n_memcover);
+        if incycle_pipe < cfg.k {
+            // Line 14: Dlayer = [cycle_pipe·(k+1) + incycle_pipe − 1] · τ.
+            (
+                PipelineMode::PartiallyPipelined,
+                groups as u64 * (k + 1) + incycle_pipe as u64 - 1,
+            )
+        } else {
+            // Line 17 with the group factor explicit: loading dominates.
+            (
+                PipelineMode::FullyPipelined,
+                groups as u64 * incycle_pipe as u64 + k,
+            )
+        }
+    };
+    let incycle_pipe = n_onchip.div_ceil(n_memcover);
+    let delay_ns = total_cycles as f64 * cfg.clock_ps / 1000.0;
+    let dram_bytes = (neurons * 2 * fan_in * cfg.bytes_per_operand) as u64;
+    let active_mac_cycles = neurons as u64 * macs_per_neuron as u64 * k;
+    Some(LayerSchedule {
+        mode,
+        n_onchip,
+        n_memcover,
+        incycle_pipe,
+        groups,
+        delay_ns,
+        dram_bytes,
+        active_mac_cycles,
+        total_cycles,
+    })
+}
+
+/// Whole-network schedule.
+#[derive(Debug, Clone)]
+pub struct NetworkSchedule {
+    /// Per compute-layer schedules, in layer order.
+    pub layers: Vec<LayerSchedule>,
+    /// End-to-end latency per inference (ns).
+    pub latency_ns: f64,
+    /// Total off-chip traffic (bytes).
+    pub dram_bytes: u64,
+    /// Total active MAC·cycles.
+    pub active_mac_cycles: u64,
+    /// Total machine cycles.
+    pub total_cycles: u64,
+    /// Average MAC-array utilization in [0, 1].
+    pub utilization: f64,
+}
+
+/// Schedule every compute layer of `net`.
+pub fn schedule_network(net: &NetworkSpec, cfg: &ScheduleConfig) -> NetworkSchedule {
+    let mut layers = Vec::new();
+    for (shape, layer) in net.input_shapes().iter().zip(&net.layers) {
+        if let Some(s) = schedule_layer(layer, *shape, cfg) {
+            layers.push(s);
+        }
+    }
+    let latency_ns = layers.iter().map(|l| l.delay_ns).sum();
+    let dram_bytes = layers.iter().map(|l| l.dram_bytes).sum();
+    let active_mac_cycles = layers.iter().map(|l| l.active_mac_cycles).sum();
+    let total_cycles: u64 = layers.iter().map(|l| l.total_cycles).sum();
+    let capacity = total_cycles as f64 * cfg.total_macs() as f64;
+    let utilization = if capacity > 0.0 { (active_mac_cycles as f64 / capacity).min(1.0) } else { 0.0 };
+    NetworkSchedule { layers, latency_ns, dram_bytes, active_mac_cycles, total_cycles, utilization }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(channels: usize) -> ScheduleConfig {
+        ScheduleConfig {
+            channels,
+            k: 32,
+            clock_ps: 880.0,
+            memory: MemoryModel::gddr5_paper(),
+            bytes_per_operand: 1,
+        }
+    }
+
+    #[test]
+    fn lenet_conv1_is_memory_bound_at_8_channels() {
+        let net = NetworkSpec::lenet5();
+        let shapes = net.input_shapes();
+        let s = schedule_layer(&net.layers[0], shapes[0], &cfg(8)).unwrap();
+        // fan-in 25 ⇒ 50 B/neuron; ~197 B/cycle ⇒ n_memcover = 3;
+        // n_onchip = 128 ⇒ incycle = 43 ≥ k=32 ⇒ fully pipelined.
+        assert_eq!(s.n_memcover, 3);
+        assert_eq!(s.n_onchip, 128);
+        assert_eq!(s.mode, PipelineMode::FullyPipelined);
+        assert_eq!(s.groups, 4704usize.div_ceil(128));
+    }
+
+    #[test]
+    fn tiny_layer_is_not_pipelined() {
+        // fc3: 10 neurons of fan-in 84 ⇒ 4 MACs each; memory covers ≥1.
+        let net = NetworkSpec::lenet5();
+        let shapes = net.input_shapes();
+        let s = schedule_layer(&net.layers[6], shapes[6], &cfg(8)).unwrap();
+        assert!(s.n_onchip <= 32);
+        // 168 B per neuron > 197 B/cycle? 168 < 197 ⇒ memcover = 1;
+        // n_onchip = 128/4 = 32 > 1 ⇒ pipelined.
+        assert_ne!(s.mode, PipelineMode::NonPipelined);
+    }
+
+    #[test]
+    fn latency_decreases_with_channels_then_saturates() {
+        let net = NetworkSpec::lenet5();
+        let lat: Vec<f64> = [1, 2, 4, 8, 16]
+            .iter()
+            .map(|&c| schedule_network(&net, &cfg(c)).latency_ns)
+            .collect();
+        for w in lat.windows(2) {
+            assert!(w[1] <= w[0] * 1.001, "latency must not increase: {lat:?}");
+        }
+        // Saturation: the 8→16 improvement is much smaller than 1→2.
+        let first_gain = lat[0] / lat[1];
+        let last_gain = lat[3] / lat[4];
+        assert!(first_gain > last_gain, "first={first_gain} last={last_gain}");
+    }
+
+    #[test]
+    fn active_mac_cycles_independent_of_channels() {
+        // Total switching work is architecture-independent (the paper's
+        // "energy remains relatively unchanged" observation).
+        let net = NetworkSpec::lenet5();
+        let a = schedule_network(&net, &cfg(1)).active_mac_cycles;
+        let b = schedule_network(&net, &cfg(16)).active_mac_cycles;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pooling_layers_do_not_schedule() {
+        let net = NetworkSpec::lenet5();
+        let sched = schedule_network(&net, &cfg(8));
+        // 7 layers, 2 pools ⇒ 5 compute layers.
+        assert_eq!(sched.layers.len(), 5);
+    }
+
+    #[test]
+    fn non_pipelined_regime_reachable() {
+        // Huge fan-out memory: crank bandwidth so memory covers everything.
+        let mut c = cfg(1);
+        c.memory.bandwidth_bytes_per_ns = 1e6;
+        let net = NetworkSpec::lenet5();
+        let s = schedule_layer(&net.layers[0], net.input_shapes()[0], &c).unwrap();
+        assert_eq!(s.mode, PipelineMode::NonPipelined);
+        assert_eq!(s.total_cycles, s.groups as u64 * 32);
+    }
+}

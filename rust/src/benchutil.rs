@@ -1,0 +1,83 @@
+//! Minimal benchmarking harness (criterion is not vendored in this offline
+//! environment — Cargo.toml note). Provides warm-up, repeated timed runs,
+//! median/mean reporting, and a tabular printer used by every
+//! `rust/benches/*` target to regenerate the paper's tables and figures.
+
+use std::time::Instant;
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark label.
+    pub name: String,
+    /// Median wall time per iteration, nanoseconds.
+    pub median_ns: f64,
+    /// Mean wall time per iteration, nanoseconds.
+    pub mean_ns: f64,
+    /// Iterations measured.
+    pub iters: usize,
+}
+
+impl BenchResult {
+    /// Throughput in operations/second given `ops` per iteration.
+    pub fn ops_per_sec(&self, ops: f64) -> f64 {
+        ops / (self.median_ns * 1e-9)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let r = BenchResult { name: name.to_string(), median_ns: median, mean_ns: mean, iters };
+    println!(
+        "bench {:<42} median {:>12.1} ns  mean {:>12.1} ns  ({} iters)",
+        r.name, r.median_ns, r.mean_ns, r.iters
+    );
+    r
+}
+
+/// Print a markdown-ish table (used by the table/figure regenerators).
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    println!("{}", headers.join(" | "));
+    println!("{}", headers.iter().map(|_| "---").collect::<Vec<_>>().join(" | "));
+    for row in rows {
+        println!("{}", row.join(" | "));
+    }
+}
+
+/// Relative gain (paper convention: (base − new)/base, positive = better).
+pub fn gain_pct(base: f64, new: f64) -> f64 {
+    (base - new) / base * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 1, 5, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.median_ns >= 0.0);
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn gain_sign_convention() {
+        assert!((gain_pct(100.0, 90.0) - 10.0).abs() < 1e-9);
+        assert!(gain_pct(100.0, 110.0) < 0.0);
+    }
+}

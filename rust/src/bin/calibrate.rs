@@ -1,0 +1,17 @@
+// Calibration probe: print measured Table I/II quantities.
+use scnn::accel::channel;
+use scnn::tech::{CellLibrary, TechKind};
+
+fn main() {
+    for (name, lib) in [("FinFET", CellLibrary::finfet10()), ("RFET", CellLibrary::rfet10())] {
+        let p = channel::characterize_pcc(&lib);
+        let a = channel::characterize_apc(&lib);
+        println!("{name} PCC8 : area {:.3} delay {:.1} energy {:.3}", p.area_um2, p.delay_ps, p.energy_per_cycle_fj);
+        println!("{name} APC25: area {:.3} delay {:.1} energy {:.3}", a.area_um2, a.delay_ps, a.energy_per_cycle_fj);
+    }
+    for tech in [TechKind::Finfet10, TechKind::Rfet10] {
+        let c = channel::characterize_channel(tech);
+        println!("{tech:?} channel: area {:.0} clock {:.0} energy/cyc {:.0} leak {:.0}nW", c.area_um2, c.min_clock_ps, c.energy_per_cycle_fj, c.leakage_nw);
+        println!("   tree: area {:.1} delay {:.1} e {:.2}; b2s d {:.1}; s2b d {:.1}", c.adder_tree.area_um2, c.adder_tree.delay_ps, c.adder_tree.energy_per_cycle_fj, c.b2s.delay_ps, c.s2b.delay_ps);
+    }
+}

@@ -1,0 +1,330 @@
+//! L3 serving coordinator: request router + dynamic batcher + PJRT worker.
+//!
+//! The PJRT engines are owned by a dedicated worker thread (raw PJRT
+//! handles are not `Send`-safe to share); requests flow through channels:
+//!
+//! ```text
+//! clients ──infer()──▶ router queue ──batcher──▶ worker (b32 / b1 exec)
+//!                                            └─▶ responses (per request)
+//! ```
+//!
+//! Batching policy: drain the queue up to `batch_max`; execute full
+//! `batch_max`-sized chunks on the batched executable and the remainder on
+//! the single-sample executable; a short `linger` lets concurrent clients
+//! coalesce (the classic dynamic-batching tradeoff).
+//!
+//! (This environment vendors no tokio; std::thread + mpsc supply the same
+//! structure — see Cargo.toml note.)
+
+pub mod stats;
+
+pub use stats::ServeStats;
+
+use crate::runtime::Engine;
+use anyhow::{anyhow, Context, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A classification request: flattened image in [0, 1].
+struct Request {
+    image: Vec<f32>,
+    enqueued: Instant,
+    respond: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// HLO artifacts as (batch_size, path); must include batch size 1.
+    /// The batcher greedily picks the largest size ≤ pending requests.
+    pub hlo_ladder: Vec<(usize, PathBuf)>,
+    /// Input element count per image (c·h·w).
+    pub image_len: usize,
+    /// Input dims excluding batch (c, h, w).
+    pub image_dims: (usize, usize, usize),
+    /// Output classes.
+    pub classes: usize,
+    /// How long the batcher lingers for more requests.
+    pub linger: Duration,
+}
+
+impl CoordinatorConfig {
+    /// Largest batch size in the ladder.
+    pub fn batch_max(&self) -> usize {
+        self.hlo_ladder.iter().map(|&(b, _)| b).max().unwrap_or(1)
+    }
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: mpsc::Sender<Request>,
+    stats: Arc<Mutex<ServeStats>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the worker thread (loads + compiles both executables there).
+    pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let stats = Arc::new(Mutex::new(ServeStats::new()));
+        let stats_w = Arc::clone(&stats);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let worker = std::thread::Builder::new()
+            .name("scnn-worker".into())
+            .spawn(move || worker_loop(cfg, rx, stats_w, ready_tx))
+            .context("spawning worker")?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("worker died during startup"))??;
+        Ok(Coordinator { tx, stats, worker: Some(worker) })
+    }
+
+    /// Classify one image (blocking). Returns the logits.
+    pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Request { image, enqueued: Instant::now(), respond: rtx })
+            .map_err(|_| anyhow!("coordinator stopped"))?;
+        rrx.recv().map_err(|_| anyhow!("worker dropped request"))?
+    }
+
+    /// Classify a whole set through the batcher from `threads` concurrent
+    /// clients; returns predicted classes in input order.
+    pub fn infer_all(&self, images: &[Vec<f32>], threads: usize) -> Result<Vec<usize>> {
+        let n = images.len();
+        let results: Mutex<Vec<Option<usize>>> = Mutex::new(vec![None; n]);
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|s| -> Result<()> {
+            let mut handles = Vec::new();
+            for _ in 0..threads.max(1) {
+                handles.push(s.spawn(|| -> Result<()> {
+                    loop {
+                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= n {
+                            return Ok(());
+                        }
+                        let logits = self.infer(images[i].clone())?;
+                        let pred = crate::accel::network::classify(
+                            &logits.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+                        );
+                        results.lock().unwrap()[i] = Some(pred);
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().map_err(|_| anyhow!("client thread panicked"))??;
+            }
+            Ok(())
+        })?;
+        Ok(results.into_inner().unwrap().into_iter().map(|p| p.unwrap()).collect())
+    }
+
+    /// Snapshot of serving statistics.
+    pub fn stats(&self) -> ServeStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // Closing the channel stops the worker loop.
+        let (dummy_tx, _) = mpsc::channel();
+        let _ = std::mem::replace(&mut self.tx, dummy_tx);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    cfg: CoordinatorConfig,
+    rx: mpsc::Receiver<Request>,
+    stats: Arc<Mutex<ServeStats>>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    // Ladder of executables, largest batch first.
+    let engines = (|| -> Result<Vec<(usize, Engine)>> {
+        let mut v = Vec::new();
+        for (b, path) in &cfg.hlo_ladder {
+            v.push((*b, Engine::load(path)?));
+        }
+        v.sort_by(|a, b| b.0.cmp(&a.0));
+        if v.last().map(|&(b, _)| b) != Some(1) {
+            anyhow::bail!("ladder must include batch size 1");
+        }
+        Ok(v)
+    })();
+    let ladder = match engines {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let (c, h, w) = cfg.image_dims;
+    let batch_max = cfg.batch_max();
+
+    loop {
+        // Block for the first request; then linger to coalesce more.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // coordinator dropped
+        };
+        let mut pending = vec![first];
+        let deadline = Instant::now() + cfg.linger;
+        while pending.len() < batch_max {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // Greedy chunking down the ladder.
+        let mut idx = 0;
+        while idx < pending.len() {
+            let remaining = pending.len() - idx;
+            let (bsz, engine) = ladder
+                .iter()
+                .find(|&&(b, _)| b <= remaining)
+                .map(|(b, e)| (*b, e))
+                .expect("ladder contains batch 1");
+            let chunk = &pending[idx..idx + bsz];
+            let dims = [bsz as i64, c as i64, h as i64, w as i64];
+            let mut flat = Vec::with_capacity(bsz * cfg.image_len);
+            for r in chunk {
+                flat.extend_from_slice(&r.image);
+            }
+            match engine.run_f32(&flat, &dims) {
+                Ok(out) => {
+                    for (j, r) in chunk.iter().enumerate() {
+                        let logits = out[j * cfg.classes..(j + 1) * cfg.classes].to_vec();
+                        // Record before responding: clients may read stats
+                        // immediately after their reply arrives.
+                        stats.lock().unwrap().record(r.enqueued.elapsed(), bsz);
+                        let _ = r.respond.send(Ok(logits));
+                    }
+                }
+                Err(e) => {
+                    for r in chunk {
+                        let _ = r.respond.send(Err(anyhow!("exec failed: {e}")));
+                    }
+                }
+            }
+            idx += bsz;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// Identity-ish test graphs: logits = mean over pixels broadcast with a
+    /// per-class offset, so argmax is deterministic (class by image mean).
+    fn fake_model_hlo(batch: usize) -> String {
+        // out[b, c] = sum(x[b]) * w[c], w = [0.1, 0.2, ..., 1.0]
+        format!(
+            r#"HloModule fake_b{batch}, entry_computation_layout={{(f32[{batch},1,2,2]{{3,2,1,0}})->(f32[{batch},10]{{1,0}})}}
+
+add {{
+  a = f32[] parameter(0)
+  b = f32[] parameter(1)
+  ROOT s = f32[] add(a, b)
+}}
+
+ENTRY main {{
+  x = f32[{batch},1,2,2]{{3,2,1,0}} parameter(0)
+  xr = f32[{batch},4]{{1,0}} reshape(x)
+  w = f32[10]{{0}} constant({{0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8,0.9,1.0}})
+  zero = f32[] constant(0)
+  sums = f32[{batch}]{{0}} reduce(xr, zero), dimensions={{1}}, to_apply=add
+  sb = f32[{batch},10]{{1,0}} broadcast(sums), dimensions={{0}}
+  wb = f32[{batch},10]{{1,0}} broadcast(w), dimensions={{1}}
+  prod = f32[{batch},10]{{1,0}} multiply(sb, wb)
+  ROOT out = (f32[{batch},10]{{1,0}}) tuple(prod)
+}}
+"#
+        )
+    }
+
+    fn write_tmp(name: &str, text: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "scnn_coord_{name}_{}.hlo.txt",
+            std::process::id()
+        ));
+        std::fs::File::create(&p).unwrap().write_all(text.as_bytes()).unwrap();
+        p
+    }
+
+    fn test_cfg(batch_max: usize) -> (CoordinatorConfig, PathBuf, PathBuf) {
+        let p1 = write_tmp(&format!("b1_{batch_max}"), &fake_model_hlo(1));
+        let pb = write_tmp(&format!("bb_{batch_max}"), &fake_model_hlo(batch_max));
+        (
+            CoordinatorConfig {
+                hlo_ladder: vec![(1, p1.clone()), (batch_max, pb.clone())],
+                image_len: 4,
+                image_dims: (1, 2, 2),
+                classes: 10,
+                linger: Duration::from_millis(5),
+            },
+            p1,
+            pb,
+        )
+    }
+
+    #[test]
+    fn single_inference_roundtrip() {
+        let (cfg, p1, pb) = test_cfg(4);
+        let coord = Coordinator::start(cfg).unwrap();
+        let logits = coord.infer(vec![0.25, 0.25, 0.25, 0.25]).unwrap();
+        assert_eq!(logits.len(), 10);
+        // sum = 1.0 ⇒ logits = w ⇒ argmax = class 9.
+        assert!((logits[9] - 1.0).abs() < 1e-5);
+        drop(coord);
+        std::fs::remove_file(p1).ok();
+        std::fs::remove_file(pb).ok();
+    }
+
+    #[test]
+    fn concurrent_clients_are_batched() {
+        let (cfg, p1, pb) = test_cfg(4);
+        let coord = Coordinator::start(cfg).unwrap();
+        let images: Vec<Vec<f32>> = (0..32).map(|i| vec![i as f32 / 32.0; 4]).collect();
+        let preds = coord.infer_all(&images, 8).unwrap();
+        // Positive-sum images all argmax to class 9; the zero image ties at 0.
+        assert!(preds[1..].iter().all(|&p| p == 9));
+        let st = coord.stats();
+        assert_eq!(st.count(), 32);
+        assert!(
+            st.mean_batch() > 1.0,
+            "concurrent load should produce real batches (mean {})",
+            st.mean_batch()
+        );
+        drop(coord);
+        std::fs::remove_file(p1).ok();
+        std::fs::remove_file(pb).ok();
+    }
+
+    #[test]
+    fn startup_failure_reported() {
+        let cfg = CoordinatorConfig {
+            hlo_ladder: vec![(1, PathBuf::from("/nonexistent.hlo.txt"))],
+            image_len: 4,
+            image_dims: (1, 2, 2),
+            classes: 10,
+            linger: Duration::from_millis(1),
+        };
+        assert!(Coordinator::start(cfg).is_err());
+    }
+}

@@ -1,0 +1,274 @@
+//! Artifact loading: test datasets, trained weights, and the manifest
+//! written by `python -m compile.aot` (formats documented there and in
+//! python/compile/aot.py — little-endian throughout).
+
+use crate::accel::network::{LayerWeights, QuantizedWeights};
+use crate::sc::quantize_bipolar;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded test set: images as values in [0, 1], flattened (c·h·w).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// (channels, height, width).
+    pub shape: (usize, usize, usize),
+    /// Per-image pixel values in [0, 1].
+    pub images: Vec<Vec<f32>>,
+    /// Class labels.
+    pub labels: Vec<u8>,
+}
+
+impl Dataset {
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+
+    /// Load a `SCNND1` dataset file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let buf = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        let mut r = Reader::new(&buf);
+        let magic = r.bytes(8)?;
+        if magic != b"SCNND1\0\0" {
+            bail!("{}: bad dataset magic", path.display());
+        }
+        let n = r.u32()? as usize;
+        let c = r.u32()? as usize;
+        let h = r.u32()? as usize;
+        let w = r.u32()? as usize;
+        let px = c * h * w;
+        let mut images = Vec::with_capacity(n);
+        for _ in 0..n {
+            let raw = r.bytes(px)?;
+            images.push(raw.iter().map(|&b| b as f32 / 255.0).collect());
+        }
+        let labels = r.bytes(n)?.to_vec();
+        Ok(Dataset { shape: (c, h, w), images, labels })
+    }
+}
+
+/// One layer of trained float weights plus its re-encoder affine.
+#[derive(Debug, Clone)]
+pub struct FloatLayer {
+    /// `[neuron][fan_in]` weights in [−1, 1].
+    pub w: Vec<Vec<f32>>,
+    /// Re-encoder gain.
+    pub gamma: f32,
+    /// Re-encoder offset.
+    pub mu: f32,
+}
+
+/// Trained model weights (`SCNNW1` file).
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    /// Compute layers in order.
+    pub layers: Vec<FloatLayer>,
+}
+
+impl ModelWeights {
+    /// Load a `SCNNW1` weights file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let buf = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        let mut r = Reader::new(&buf);
+        if r.bytes(8)? != b"SCNNW1\0\0" {
+            bail!("{}: bad weights magic", path.display());
+        }
+        let n_layers = r.u32()? as usize;
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let rows = r.u32()? as usize;
+            let cols = r.u32()? as usize;
+            let gamma = r.f32()?;
+            let mu = r.f32()?;
+            let mut w = Vec::with_capacity(rows);
+            for _ in 0..rows {
+                let mut row = Vec::with_capacity(cols);
+                for _ in 0..cols {
+                    row.push(r.f32()?);
+                }
+                w.push(row);
+            }
+            layers.push(FloatLayer { w, gamma, mu });
+        }
+        Ok(ModelWeights { layers })
+    }
+
+    /// Quantize to `bits` for the SC datapath (same code mapping as the
+    /// training-side `ref.quantize_bipolar`).
+    pub fn quantize(&self, bits: u32) -> QuantizedWeights {
+        QuantizedWeights {
+            bits,
+            layers: self
+                .layers
+                .iter()
+                .map(|l| LayerWeights {
+                    codes: l
+                        .w
+                        .iter()
+                        .map(|row| row.iter().map(|&v| quantize_bipolar(v as f64, bits)).collect())
+                        .collect(),
+                    gamma: l.gamma as f64,
+                    mu: l.mu as f64,
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Parse the key=value `manifest.txt`.
+pub fn load_manifest(path: &Path) -> Result<BTreeMap<String, String>> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(text
+        .lines()
+        .filter_map(|l| l.split_once('='))
+        .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+        .collect())
+}
+
+/// Locations of everything `make artifacts` produces.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    /// Artifact directory.
+    pub dir: PathBuf,
+}
+
+impl Artifacts {
+    /// Use `dir` (default `artifacts/` relative to the repo root).
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Artifacts { dir: dir.into() }
+    }
+
+    /// Default location.
+    pub fn default_dir() -> Self {
+        Artifacts::new("artifacts")
+    }
+
+    /// HLO graph for a model at a batch size.
+    pub fn hlo(&self, model: &str, batch: usize) -> PathBuf {
+        self.dir.join(format!("{model}_b{batch}.hlo.txt"))
+    }
+
+    /// Trained weights for a model/mode.
+    pub fn weights(&self, model: &str, mode: &str) -> PathBuf {
+        self.dir.join(format!("{model}_{mode}.weights.bin"))
+    }
+
+    /// Test set for a dataset name.
+    pub fn dataset(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}_test.bin"))
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> PathBuf {
+        self.dir.join("manifest.txt")
+    }
+
+    /// True when the core artifacts exist (built via `make artifacts`).
+    pub fn present(&self) -> bool {
+        self.manifest().exists() && self.hlo("lenet5", 1).exists()
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated artifact file at offset {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tmp(name: &str, bytes: &[u8]) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("scnn_test_{name}_{}", std::process::id()));
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn dataset_roundtrip() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"SCNND1\0\0");
+        for v in [2u32, 1, 2, 2] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        buf.extend_from_slice(&[0u8, 128, 255, 64, 10, 20, 30, 40]); // 2 images
+        buf.extend_from_slice(&[3u8, 7]); // labels
+        let p = write_tmp("ds", &buf);
+        let ds = Dataset::load(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.shape, (1, 2, 2));
+        assert_eq!(ds.labels, vec![3, 7]);
+        assert!((ds.images[0][1] - 128.0 / 255.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weights_roundtrip_and_quantize() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"SCNNW1\0\0");
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&2u32.to_le_bytes()); // rows
+        buf.extend_from_slice(&3u32.to_le_bytes()); // cols
+        buf.extend_from_slice(&1.5f32.to_le_bytes()); // gamma
+        buf.extend_from_slice(&0.25f32.to_le_bytes()); // mu
+        for v in [0.5f32, -0.5, 0.0, 1.0, -1.0, 0.25] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        let p = write_tmp("w", &buf);
+        let w = ModelWeights::load(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(w.layers.len(), 1);
+        assert_eq!(w.layers[0].w[0], vec![0.5, -0.5, 0.0]);
+        let q = w.quantize(8);
+        assert_eq!(q.layers[0].codes[0][0], crate::sc::quantize_bipolar(0.5, 8));
+        assert!((q.layers[0].gamma - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = write_tmp("bad", b"NOTMAGIC........");
+        assert!(Dataset::load(&p).is_err());
+        assert!(ModelWeights::load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let p = write_tmp("mf", b"acc_lenet5_sc=0.93\nbits=8\n# comment line without equals\n");
+        let m = load_manifest(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(m["bits"], "8");
+        assert_eq!(m["acc_lenet5_sc"], "0.93");
+    }
+}

@@ -1,0 +1,35 @@
+//! # scnn — RFET-based Stochastic-Computing Neural-Network Accelerator
+//!
+//! A from-scratch reproduction of *"An Energy-Efficient RFET-Based
+//! Stochastic Computing Neural Network Accelerator"* (Lu et al., 2025)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator and every hardware substrate the
+//!   paper depends on: standard-cell technology models ([`tech`]), a
+//!   gate-level netlist builder ([`netlist`]) with logic/timing/power
+//!   simulation ([`sim`]), the stochastic-computing primitive zoo ([`sc`]),
+//!   the accelerator architecture + performance model ([`accel`]), and a
+//!   tokio serving coordinator ([`coordinator`]) that drives AOT-compiled
+//!   JAX graphs through PJRT ([`runtime`]).
+//! * **L2** — the JAX LeNet-5 / SC-equivalent model (`python/compile/model.py`),
+//!   lowered once to HLO text in `artifacts/`.
+//! * **L1** — Pallas kernels for the SC hot-spot (`python/compile/kernels/`).
+//!
+//! Python never runs on the request path; after `make artifacts` the `scnn`
+//! binary is self-contained.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every table/figure in the paper to a bench target.
+
+pub mod accel;
+pub mod benchutil;
+pub mod coordinator;
+pub mod data;
+pub mod netlist;
+pub mod runtime;
+pub mod sc;
+pub mod sim;
+pub mod tech;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,230 @@
+//! `scnn` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//! * `serve`     — load AOT artifacts, serve the synthetic test set through
+//!   the dynamic batcher, report accuracy + latency + throughput;
+//! * `simulate`  — bit-exact SC inference (full LFSR→PCC→XNOR→APC→B2S→S2B
+//!   datapath) over the test set, any bitstream length / precision;
+//! * `sweep`     — Fig. 13 channel-count design-space exploration;
+//! * `report`    — regenerate the paper's tables (I, II, III) on stdout;
+//! * `calibrate` — print raw block characterization (debugging aid).
+//!
+//! (Hand-rolled flag parsing: clap is not vendored in this offline
+//! environment — see the Cargo.toml note.)
+
+use anyhow::{bail, Context, Result};
+use scnn::accel::network::{classify, forward, ForwardMode};
+use scnn::accel::{channel, layers::NetworkSpec, metrics::argmin_by, system};
+use scnn::coordinator::{Coordinator, CoordinatorConfig};
+use scnn::data::{Artifacts, Dataset, ModelWeights};
+use scnn::tech::TechKind;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                m.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    match cmd {
+        "serve" => serve(&flags),
+        "simulate" => simulate(&flags),
+        "sweep" => sweep(&flags),
+        "report" => report(&flags),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            bail!("unknown command {other:?}")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "scnn — RFET stochastic-computing NN accelerator (paper reproduction)\n\
+         \n\
+         USAGE: scnn <command> [--flags]\n\
+         \n\
+         COMMANDS:\n\
+           serve     --artifacts DIR --n N --threads T    serve test set via PJRT\n\
+           simulate  --mode stochastic|expectation|fixed --k K --bits B --n N\n\
+           sweep     --tech rfet|finfet --max-channels C  Fig. 13 design space\n\
+           report    --table 1|2|3                        paper tables\n"
+    );
+}
+
+fn serve(flags: &HashMap<String, String>) -> Result<()> {
+    let artifacts = Artifacts::new(flag::<String>(flags, "artifacts", "artifacts".into()));
+    let n: usize = flag(flags, "n", 200);
+    let threads: usize = flag(flags, "threads", 8);
+    if !artifacts.present() {
+        bail!("artifacts missing — run `make artifacts` first");
+    }
+    let ds = Dataset::load(&artifacts.dataset("digits"))?;
+    let n = n.min(ds.len());
+    let cfg = CoordinatorConfig {
+        hlo_ladder: vec![
+            (1, artifacts.hlo("lenet5", 1)),
+            (8, artifacts.hlo("lenet5", 8)),
+            (32, artifacts.hlo("lenet5", 32)),
+        ],
+        image_len: ds.shape.0 * ds.shape.1 * ds.shape.2,
+        image_dims: ds.shape,
+        classes: 10,
+        linger: Duration::from_millis(2),
+    };
+    let coord = Coordinator::start(cfg).context("starting coordinator")?;
+    let t = Instant::now();
+    let preds = coord.infer_all(&ds.images[..n], threads)?;
+    let wall = t.elapsed();
+    let correct = preds
+        .iter()
+        .zip(&ds.labels[..n])
+        .filter(|(&p, &l)| p == l as usize)
+        .count();
+    let st = coord.stats();
+    println!("served {n} requests in {:.1} ms ({:.0} img/s)", wall.as_secs_f64() * 1e3, n as f64 / wall.as_secs_f64());
+    println!("accuracy: {:.2}% ({correct}/{n})", 100.0 * correct as f64 / n as f64);
+    println!(
+        "latency p50 {} µs, p99 {} µs, mean batch {:.1}",
+        st.latency_percentile_us(50.0),
+        st.latency_percentile_us(99.0),
+        st.mean_batch()
+    );
+    Ok(())
+}
+
+fn simulate(flags: &HashMap<String, String>) -> Result<()> {
+    let artifacts = Artifacts::new(flag::<String>(flags, "artifacts", "artifacts".into()));
+    let n: usize = flag(flags, "n", 50);
+    let k: usize = flag(flags, "k", 32);
+    let bits: u32 = flag(flags, "bits", 8);
+    let mode_s: String = flag(flags, "mode", "stochastic".into());
+    let net = NetworkSpec::lenet5();
+    let ds = Dataset::load(&artifacts.dataset("digits"))?;
+    let weights = ModelWeights::load(&artifacts.weights("lenet5", "sc"))?.quantize(bits);
+    let mode = match mode_s.as_str() {
+        "stochastic" => ForwardMode::Stochastic { k, seed: 7 },
+        "expectation" => ForwardMode::Expectation,
+        "fixed" => ForwardMode::FixedPoint,
+        other => bail!("unknown mode {other:?}"),
+    };
+    let n = n.min(ds.len());
+    let t = Instant::now();
+    let mut correct = 0;
+    for i in 0..n {
+        let img: Vec<f64> = ds.images[i].iter().map(|&v| v as f64).collect();
+        let out = forward(&net, &weights, &img, mode);
+        correct += (classify(&out) == ds.labels[i] as usize) as usize;
+    }
+    println!(
+        "mode={mode_s} k={k} bits={bits}: accuracy {:.2}% ({correct}/{n}) in {:.1} s",
+        100.0 * correct as f64 / n as f64,
+        t.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn sweep(flags: &HashMap<String, String>) -> Result<()> {
+    let tech = match flag::<String>(flags, "tech", "rfet".into()).as_str() {
+        "rfet" => TechKind::Rfet10,
+        "finfet" => TechKind::Finfet10,
+        other => bail!("unknown tech {other:?}"),
+    };
+    let max: usize = flag(flags, "max-channels", 32);
+    let counts: Vec<usize> = (0..).map(|i| 1 << i).take_while(|&c| c <= max).collect();
+    let net = NetworkSpec::lenet5();
+    let evals = system::sweep_channels(tech, &net, &counts);
+    println!("{tech} on {}:", net.name);
+    println!("ch | area mm² | latency µs | energy µJ | ADP | EDP | EDAP");
+    for e in &evals {
+        let m = &e.metrics;
+        println!(
+            "{:>2} | {:.4} | {:.2} | {:.3} | {:.4} | {:.4} | {:.5}",
+            e.channels,
+            m.area_mm2,
+            m.latency_us,
+            m.energy_uj,
+            m.adp(),
+            m.edp(),
+            m.edap()
+        );
+    }
+    let ms: Vec<_> = evals.iter().map(|e| e.metrics).collect();
+    println!("optimal by EDAP: {} channels", counts[argmin_by(&ms, |m| m.edap())]);
+    Ok(())
+}
+
+fn report(flags: &HashMap<String, String>) -> Result<()> {
+    let table: u32 = flag(flags, "table", 1);
+    match table {
+        1 => {
+            println!("Table I — component comparison (measured by our Genus-substitute)");
+            for tech in [TechKind::Finfet10, TechKind::Rfet10] {
+                let lib = scnn::tech::CellLibrary::for_kind(tech);
+                let p = channel::characterize_pcc(&lib);
+                let a = channel::characterize_apc(&lib);
+                println!(
+                    "{tech}: PCC8 {:.2} µm² {:.0} ps {:.2} fJ | APC25 {:.2} µm² {:.0} ps {:.2} fJ",
+                    p.area_um2, p.delay_ps, p.energy_per_cycle_fj,
+                    a.area_um2, a.delay_ps, a.energy_per_cycle_fj
+                );
+            }
+        }
+        2 => {
+            println!("Table II — channel-level comparison");
+            for tech in [TechKind::Finfet10, TechKind::Rfet10] {
+                let c = channel::characterize_channel(tech);
+                println!(
+                    "{tech}: area {:.0} µm², min clock {:.2} ns, energy {:.2} pJ/cycle",
+                    c.area_um2,
+                    c.min_clock_ps / 1000.0,
+                    c.energy_per_cycle_fj / 1000.0
+                );
+            }
+        }
+        3 => {
+            println!("Table III — This Work (8 channels, LeNet-5 workload)");
+            let net = NetworkSpec::lenet5();
+            for tech in [TechKind::Finfet10, TechKind::Rfet10] {
+                let e = system::evaluate(&system::SystemConfig::paper(tech, 8), &net);
+                let m = &e.metrics;
+                println!(
+                    "{tech}: {:.3} mm², {:.1} mW, {:.2} GHz, {:.2} TOPS/W, {:.2} TOPS/mm²",
+                    m.area_mm2,
+                    m.power_mw,
+                    m.clock_ghz,
+                    m.tops_per_watt(),
+                    m.tops_per_mm2()
+                );
+            }
+        }
+        other => bail!("unknown table {other}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,346 @@
+//! Structural gate-level netlists.
+//!
+//! This is the substrate that replaces Cadence Genus's RTL→cell mapping for
+//! the paper's blocks: every SC component in [`crate::sc`] provides a
+//! `build_netlist` that emits one of these structures, and [`crate::sim`]
+//! rolls up area / critical path / switching energy over it using a
+//! [`crate::tech::CellLibrary`].
+//!
+//! The paper's blocks are small fixed-structure datapaths (PCCs, counters,
+//! adder trees), so hand-constructed structural netlists correspond directly
+//! to what synthesis would emit.
+
+use crate::tech::CellKind;
+use std::collections::BTreeMap;
+
+/// Identifier of a wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NetId(pub u32);
+
+/// Identifier of a gate instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GateId(pub u32);
+
+/// One cell instance.
+#[derive(Debug, Clone)]
+pub struct Gate {
+    /// Which library cell this instantiates.
+    pub kind: CellKind,
+    /// Input nets, in the order defined by [`CellKind`] docs.
+    pub inputs: Vec<NetId>,
+    /// Output nets (sum/carry order for adders).
+    pub outputs: Vec<NetId>,
+}
+
+/// A flat structural netlist.
+#[derive(Debug, Clone, Default)]
+pub struct Netlist {
+    /// Human-readable block name (used in reports).
+    pub name: String,
+    num_nets: u32,
+    gates: Vec<Gate>,
+    /// Primary inputs in creation order.
+    pub primary_inputs: Vec<NetId>,
+    /// Primary outputs in mark order.
+    pub primary_outputs: Vec<NetId>,
+    /// Nets tied to constants.
+    pub constants: Vec<(NetId, bool)>,
+}
+
+impl Netlist {
+    /// Create an empty netlist.
+    pub fn new(name: impl Into<String>) -> Self {
+        Netlist { name: name.into(), ..Default::default() }
+    }
+
+    fn fresh(&mut self) -> NetId {
+        let id = NetId(self.num_nets);
+        self.num_nets += 1;
+        id
+    }
+
+    /// Total number of nets.
+    pub fn num_nets(&self) -> usize {
+        self.num_nets as usize
+    }
+
+    /// All gate instances.
+    pub fn gates(&self) -> &[Gate] {
+        &self.gates
+    }
+
+    /// Allocate a new primary input.
+    pub fn input(&mut self) -> NetId {
+        let n = self.fresh();
+        self.primary_inputs.push(n);
+        n
+    }
+
+    /// Allocate `n` primary inputs.
+    pub fn inputs(&mut self, n: usize) -> Vec<NetId> {
+        (0..n).map(|_| self.input()).collect()
+    }
+
+    /// A net tied to a constant value.
+    pub fn constant(&mut self, value: bool) -> NetId {
+        let n = self.fresh();
+        self.constants.push((n, value));
+        n
+    }
+
+    /// Mark `net` as a primary output.
+    pub fn mark_output(&mut self, net: NetId) {
+        self.primary_outputs.push(net);
+    }
+
+    /// Instantiate a gate; returns its output nets.
+    pub fn add_gate(&mut self, kind: CellKind, inputs: &[NetId]) -> Vec<NetId> {
+        assert_eq!(
+            inputs.len(),
+            kind.num_inputs(),
+            "{kind} expects {} inputs, got {}",
+            kind.num_inputs(),
+            inputs.len()
+        );
+        let outputs: Vec<NetId> = (0..kind.num_outputs()).map(|_| self.fresh()).collect();
+        self.gates.push(Gate { kind, inputs: inputs.to_vec(), outputs: outputs.clone() });
+        outputs
+    }
+
+    fn gate1(&mut self, kind: CellKind, inputs: &[NetId]) -> NetId {
+        self.add_gate(kind, inputs)[0]
+    }
+
+    // ---- single-output conveniences -------------------------------------
+
+    /// Inverter.
+    pub fn inv(&mut self, a: NetId) -> NetId {
+        self.gate1(CellKind::Inv, &[a])
+    }
+    /// Buffer.
+    pub fn buf(&mut self, a: NetId) -> NetId {
+        self.gate1(CellKind::Buf, &[a])
+    }
+    /// 2-input NAND.
+    pub fn nand2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.gate1(CellKind::Nand2, &[a, b])
+    }
+    /// 2-input NOR.
+    pub fn nor2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.gate1(CellKind::Nor2, &[a, b])
+    }
+    /// 2-input AND.
+    pub fn and2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.gate1(CellKind::And2, &[a, b])
+    }
+    /// 2-input OR.
+    pub fn or2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.gate1(CellKind::Or2, &[a, b])
+    }
+    /// 2-input XOR.
+    pub fn xor2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.gate1(CellKind::Xor2, &[a, b])
+    }
+    /// 2-input XNOR.
+    pub fn xnor2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.gate1(CellKind::Xnor2, &[a, b])
+    }
+    /// 2:1 MUX: output = `sel ? d1 : d0`.
+    pub fn mux21(&mut self, d0: NetId, d1: NetId, sel: NetId) -> NetId {
+        self.gate1(CellKind::Mux21, &[d0, d1, sel])
+    }
+    /// D flip-flop; returns Q.
+    pub fn dff(&mut self, d: NetId) -> NetId {
+        self.gate1(CellKind::Dff, &[d])
+    }
+    /// RFET reconfigurable gate: `prog = 0` → NAND(a,b), `prog = 1` → NOR(a,b).
+    pub fn nandnor(&mut self, a: NetId, b: NetId, prog: NetId) -> NetId {
+        self.gate1(CellKind::NandNor, &[a, b, prog])
+    }
+    /// RFET 3-input XOR.
+    pub fn xor3(&mut self, a: NetId, b: NetId, c: NetId) -> NetId {
+        self.gate1(CellKind::Xor3, &[a, b, c])
+    }
+    /// RFET 3-input majority.
+    pub fn maj3(&mut self, a: NetId, b: NetId, c: NetId) -> NetId {
+        self.gate1(CellKind::Maj3, &[a, b, c])
+    }
+    /// Half adder; returns (sum, carry).
+    pub fn half_adder(&mut self, a: NetId, b: NetId) -> (NetId, NetId) {
+        let o = self.add_gate(CellKind::HalfAdder, &[a, b]);
+        (o[0], o[1])
+    }
+    /// Monolithic full-adder cell; returns (sum, carry).
+    pub fn full_adder_cell(&mut self, a: NetId, b: NetId, c: NetId) -> (NetId, NetId) {
+        let o = self.add_gate(CellKind::FullAdder, &[a, b, c]);
+        (o[0], o[1])
+    }
+    /// RFET compact full adder (Fig. 8c): XOR3 for sum, MAJ3 for carry, plus
+    /// two inverters modeling the complementary-signal conditioning the
+    /// compact cells require. Returns (sum, carry).
+    pub fn full_adder_rfet(&mut self, a: NetId, b: NetId, c: NetId) -> (NetId, NetId) {
+        let s = self.xor3(a, b, c);
+        let maj = self.maj3(a, b, c);
+        // Fig. 8c: "only two reconfigurable gates — XOR3 and MAJ3, along
+        // with a few inverters". The inverter pair buffers/conditions the
+        // carry output rail.
+        let nc = self.inv(maj);
+        let carry = self.inv(nc);
+        (s, carry)
+    }
+
+    /// Per-cell-kind instance counts.
+    pub fn cell_counts(&self) -> BTreeMap<CellKind, usize> {
+        let mut m = BTreeMap::new();
+        for g in &self.gates {
+            *m.entry(g.kind).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Number of cell instances.
+    pub fn num_gates(&self) -> usize {
+        self.gates.len()
+    }
+
+    /// Total transistor count under `lib` (reporting only).
+    pub fn transistors(&self, lib: &crate::tech::CellLibrary) -> u64 {
+        self.gates.iter().map(|g| lib.cell(g.kind).transistors as u64).sum()
+    }
+
+    /// Fanout (number of reader pins) of every net; primary outputs count as
+    /// one load each.
+    pub fn fanouts(&self) -> Vec<usize> {
+        let mut f = vec![0usize; self.num_nets()];
+        for g in &self.gates {
+            for &i in &g.inputs {
+                f[i.0 as usize] += 1;
+            }
+        }
+        for &o in &self.primary_outputs {
+            f[o.0 as usize] += 1;
+        }
+        f
+    }
+
+    /// Reconnect input pin `pin` of gate `gate_idx` to `net`. Used by
+    /// builders that must close sequential loops (e.g. LFSR feedback, where
+    /// the feedback XOR reads DFF outputs that exist only after the ring is
+    /// built).
+    pub fn rewire_gate_input(&mut self, gate_idx: usize, pin: usize, net: NetId) {
+        let g = &mut self.gates[gate_idx];
+        assert!(pin < g.inputs.len(), "pin {pin} out of range for {}", g.kind);
+        g.inputs[pin] = net;
+    }
+
+    /// Merge another netlist into this one, connecting `other`'s primary
+    /// inputs to `bind` (same length). Returns the mapping of `other`'s
+    /// primary outputs into this netlist's net space.
+    pub fn absorb(&mut self, other: &Netlist, bind: &[NetId]) -> Vec<NetId> {
+        assert_eq!(bind.len(), other.primary_inputs.len(), "absorb: input arity mismatch");
+        let mut map: Vec<Option<NetId>> = vec![None; other.num_nets()];
+        for (k, &pi) in other.primary_inputs.iter().enumerate() {
+            map[pi.0 as usize] = Some(bind[k]);
+        }
+        for &(c, v) in &other.constants {
+            let n = self.constant(v);
+            map[c.0 as usize] = Some(n);
+        }
+        // Gates are in creation order; outputs are always fresh nets, so a
+        // single pass suffices (inputs either map already or are created by
+        // an earlier gate).
+        let remap = |m: &mut Vec<Option<NetId>>, slf: &mut Netlist, n: NetId| -> NetId {
+            if let Some(x) = m[n.0 as usize] {
+                x
+            } else {
+                let x = slf.fresh();
+                m[n.0 as usize] = Some(x);
+                x
+            }
+        };
+        for g in &other.gates {
+            let ins: Vec<NetId> =
+                g.inputs.iter().map(|&n| remap(&mut map, self, n)).collect();
+            let outs: Vec<NetId> =
+                g.outputs.iter().map(|&n| remap(&mut map, self, n)).collect();
+            self.gates.push(Gate { kind: g.kind, inputs: ins, outputs: outs });
+        }
+        other
+            .primary_outputs
+            .iter()
+            .map(|&n| map[n.0 as usize].expect("output driven"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_simple_and() {
+        let mut nl = Netlist::new("and");
+        let a = nl.input();
+        let b = nl.input();
+        let y = nl.and2(a, b);
+        nl.mark_output(y);
+        assert_eq!(nl.num_gates(), 1);
+        assert_eq!(nl.primary_inputs.len(), 2);
+        assert_eq!(nl.primary_outputs, vec![y]);
+    }
+
+    #[test]
+    fn cell_counts_and_fanout() {
+        let mut nl = Netlist::new("t");
+        let a = nl.input();
+        let x = nl.inv(a);
+        let y = nl.inv(a);
+        let z = nl.and2(x, y);
+        nl.mark_output(z);
+        let counts = nl.cell_counts();
+        assert_eq!(counts[&CellKind::Inv], 2);
+        assert_eq!(counts[&CellKind::And2], 1);
+        let f = nl.fanouts();
+        assert_eq!(f[a.0 as usize], 2);
+        assert_eq!(f[z.0 as usize], 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects")]
+    fn wrong_arity_panics() {
+        let mut nl = Netlist::new("bad");
+        let a = nl.input();
+        nl.add_gate(CellKind::Nand2, &[a]);
+    }
+
+    #[test]
+    fn absorb_connects_subcircuit() {
+        let mut inner = Netlist::new("inner");
+        let a = inner.input();
+        let b = inner.input();
+        let y = inner.xor2(a, b);
+        inner.mark_output(y);
+
+        let mut outer = Netlist::new("outer");
+        let p = outer.input();
+        let q = outer.input();
+        let outs = outer.absorb(&inner, &[p, q]);
+        assert_eq!(outs.len(), 1);
+        outer.mark_output(outs[0]);
+        assert_eq!(outer.num_gates(), 1);
+        assert_eq!(outer.gates()[0].inputs, vec![p, q]);
+    }
+
+    #[test]
+    fn rfet_fa_structure() {
+        let mut nl = Netlist::new("fa_rfet");
+        let ins = nl.inputs(3);
+        let (s, c) = nl.full_adder_rfet(ins[0], ins[1], ins[2]);
+        nl.mark_output(s);
+        nl.mark_output(c);
+        let counts = nl.cell_counts();
+        assert_eq!(counts[&CellKind::Xor3], 1);
+        assert_eq!(counts[&CellKind::Maj3], 1);
+        assert_eq!(counts[&CellKind::Inv], 2);
+    }
+}

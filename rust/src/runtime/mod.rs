@@ -1,0 +1,99 @@
+//! PJRT runtime: load AOT-compiled HLO text (produced by
+//! `python -m compile.aot`) and execute it from the L3 hot path.
+//!
+//! Follows /opt/xla-example/load_hlo: text (never serialized protos — jax
+//! ≥0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects) →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//!
+//! `Engine` is deliberately `!Send`-shaped (raw PJRT handles); the
+//! coordinator owns each engine on a dedicated worker thread and feeds it
+//! through channels.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled executable on the PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    /// Source path, for diagnostics.
+    pub source: String,
+}
+
+impl Engine {
+    /// Load and compile an HLO-text artifact.
+    pub fn load(path: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Engine { client, exe, source: path.display().to_string() })
+    }
+
+    /// Platform name of the underlying client.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute with one f32 input tensor of shape `dims`; returns the flat
+    /// f32 output of the (single-element) result tuple.
+    pub fn run_f32(&self, input: &[f32], dims: &[i64]) -> Result<Vec<f32>> {
+        let lit = xla::Literal::vec1(input).reshape(dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute with two u32 input tensors (the sc_mac demo kernel).
+    pub fn run_u32_pair(
+        &self,
+        a: &[u32],
+        b: &[u32],
+        dims: &[i64],
+    ) -> Result<Vec<u32>> {
+        let la = xla::Literal::vec1(a).reshape(dims)?;
+        let lb = xla::Literal::vec1(b).reshape(dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<u32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// A tiny hand-written HLO module: f(x) = (x + 1,) over f32[4].
+    const ADD_ONE_HLO: &str = r#"HloModule add_one, entry_computation_layout={(f32[4]{0})->(f32[4]{0})}
+
+ENTRY main {
+  x = f32[4]{0} parameter(0)
+  one = f32[] constant(1)
+  ones = f32[4]{0} broadcast(one), dimensions={}
+  sum = f32[4]{0} add(x, ones)
+  ROOT out = (f32[4]{0}) tuple(sum)
+}
+"#;
+
+    #[test]
+    fn engine_runs_handwritten_hlo() {
+        let p = std::env::temp_dir().join(format!("scnn_addone_{}.hlo.txt", std::process::id()));
+        std::fs::File::create(&p).unwrap().write_all(ADD_ONE_HLO.as_bytes()).unwrap();
+        let engine = Engine::load(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(engine.platform(), "cpu");
+        let out = engine.run_f32(&[1.0, 2.0, 3.0, 4.0], &[4]).unwrap();
+        assert_eq!(out, vec![2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        assert!(Engine::load(Path::new("/nonexistent/x.hlo.txt")).is_err());
+    }
+}

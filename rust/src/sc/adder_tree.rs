@@ -1,0 +1,160 @@
+//! Configurable adder tree (§IV-A): sums the APC outputs of several MAC
+//! units so neurons wider than one MAC's 25 inputs (fully connected layers)
+//! can be formed; bypassed for convolutional layers.
+
+use crate::netlist::{NetId, Netlist};
+use crate::sc::apc::FaStyle;
+
+/// Behavioral adder tree: plain summation (the hardware is exact).
+pub fn sum(values: &[u64]) -> u64 {
+    values.iter().sum()
+}
+
+/// Emit a ripple-carry adder for two equal-width operands; returns
+/// `width + 1` output bits (LSB first).
+pub fn build_ripple_adder(
+    nl: &mut Netlist,
+    style: FaStyle,
+    a: &[NetId],
+    b: &[NetId],
+) -> Vec<NetId> {
+    assert_eq!(a.len(), b.len(), "ripple adder needs equal widths");
+    let mut out = Vec::with_capacity(a.len() + 1);
+    let mut carry: Option<NetId> = None;
+    for i in 0..a.len() {
+        let (s, cy) = match carry {
+            None => nl.half_adder(a[i], b[i]),
+            Some(c) => match style {
+                FaStyle::CmosCell => nl.full_adder_cell(a[i], b[i], c),
+                FaStyle::RfetCompact => nl.full_adder_rfet(a[i], b[i], c),
+            },
+        };
+        out.push(s);
+        carry = Some(cy);
+    }
+    out.push(carry.expect("width >= 1"));
+    out
+}
+
+/// Build a balanced adder tree over `operands` (each a little-endian bit
+/// vector of identical width). Returns the sum bits (LSB first, width
+/// `w + ceil(log2(m))`).
+pub fn build_adder_tree(
+    nl: &mut Netlist,
+    style: FaStyle,
+    operands: &[Vec<NetId>],
+) -> Vec<NetId> {
+    assert!(!operands.is_empty());
+    let w = operands[0].len();
+    assert!(operands.iter().all(|o| o.len() == w), "operand width mismatch");
+    let mut level: Vec<Vec<NetId>> = operands.to_vec();
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.chunks(2);
+        for pair in &mut it {
+            if pair.len() == 2 {
+                // Pad the shorter operand with constant 0s if widths differ
+                // (can happen when an odd operand skipped a level).
+                let wmax = pair[0].len().max(pair[1].len());
+                let pad = |nl: &mut Netlist, v: &Vec<NetId>| -> Vec<NetId> {
+                    let mut v = v.clone();
+                    while v.len() < wmax {
+                        let z = nl.constant(false);
+                        v.push(z);
+                    }
+                    v
+                };
+                let a = pad(nl, &pair[0]);
+                let b = pad(nl, &pair[1]);
+                next.push(build_ripple_adder(nl, style, &a, &b));
+            } else {
+                next.push(pair[0].clone());
+            }
+        }
+        level = next;
+    }
+    level.pop().unwrap()
+}
+
+/// Build a standalone adder-tree netlist summing `m` operands of `width`
+/// bits (PIs: operand 0 bits, operand 1 bits, ...; POs: the sum).
+pub fn build_netlist(m: usize, width: usize, style: FaStyle) -> Netlist {
+    let mut nl = Netlist::new(format!("adder_tree_{m}x{width}b_{style:?}"));
+    let operands: Vec<Vec<NetId>> = (0..m).map(|_| nl.inputs(width)).collect();
+    let sum_bits = build_adder_tree(&mut nl, style, &operands);
+    for &b in &sum_bits {
+        nl.mark_output(b);
+    }
+    nl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sc::apc::decode_output;
+    use crate::sim::Evaluator;
+
+    fn xorshift(seed: u64) -> impl FnMut() -> u64 {
+        let mut s = seed.max(1);
+        move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            s
+        }
+    }
+
+    #[test]
+    fn ripple_adder_adds() {
+        for style in [FaStyle::CmosCell, FaStyle::RfetCompact] {
+            let mut nl = Netlist::new("add");
+            let a = nl.inputs(6);
+            let b = nl.inputs(6);
+            let out = build_ripple_adder(&mut nl, style, &a, &b);
+            for &o in &out {
+                nl.mark_output(o);
+            }
+            let mut ev = Evaluator::new(&nl);
+            for (x, y) in [(0u64, 0u64), (63, 63), (21, 42), (13, 7)] {
+                let mut pins = Vec::new();
+                for i in 0..6 {
+                    pins.push((x >> i) & 1 == 1);
+                }
+                for i in 0..6 {
+                    pins.push((y >> i) & 1 == 1);
+                }
+                ev.set_inputs(&pins);
+                ev.propagate();
+                assert_eq!(decode_output(&ev.outputs()), x + y, "{style:?} {x}+{y}");
+            }
+        }
+    }
+
+    #[test]
+    fn tree_sums_many_operands() {
+        for m in [2usize, 3, 6, 16] {
+            let width = 5;
+            let nl = build_netlist(m, width, FaStyle::CmosCell);
+            let mut ev = Evaluator::new(&nl);
+            let mut rng = xorshift(m as u64);
+            for _ in 0..50 {
+                let vals: Vec<u64> = (0..m).map(|_| rng() % 32).collect();
+                let mut pins = Vec::new();
+                for &v in &vals {
+                    for i in 0..width {
+                        pins.push((v >> i) & 1 == 1);
+                    }
+                }
+                ev.set_inputs(&pins);
+                ev.propagate();
+                assert_eq!(decode_output(&ev.outputs()), sum(&vals), "m={m} {vals:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn behavioral_sum() {
+        assert_eq!(sum(&[1, 2, 3, 4]), 10);
+        assert_eq!(sum(&[]), 0);
+    }
+}

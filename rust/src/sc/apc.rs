@@ -1,0 +1,323 @@
+//! Accumulative parallel counters (§III-B, Fig. 8).
+//!
+//! The APC is the stochastic→binary workhorse of the SC neuron: each clock
+//! cycle it counts the '1's across its parallel inputs (a Wallace-style
+//! full-adder reduction, Fig. 8a) and accumulates the count in a binary
+//! register. Two full-adder styles are supported:
+//!
+//! * [`FaStyle::CmosCell`] — the conventional 28-transistor CMOS FA cell
+//!   (Fig. 8b), used by the FinFET baseline;
+//! * [`FaStyle::RfetCompact`] — the paper's XOR3 + MAJ3 + inverters
+//!   composite (Fig. 8c), used by the RFET design.
+//!
+//! An *approximate* front end (after Kim et al. [36]) is also provided: it
+//! OR-combines input pairs before counting, halving the reduction tree at
+//! the cost of an upward bias for correlated/high-density inputs.
+
+use crate::netlist::{NetId, Netlist};
+
+/// Which full-adder implementation the netlist instantiates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaStyle {
+    /// Monolithic CMOS FA standard cell (28 T, Fig. 8b).
+    CmosCell,
+    /// RFET compact FA: XOR3 + MAJ3 + 2 inverters (Fig. 8c).
+    RfetCompact,
+}
+
+/// Behavioral APC: counts ones per cycle, accumulates across cycles.
+#[derive(Debug, Clone)]
+pub struct Apc {
+    inputs: usize,
+    acc: u64,
+    cycles: usize,
+}
+
+impl Apc {
+    /// An APC with `inputs` parallel inputs.
+    pub fn new(inputs: usize) -> Self {
+        Apc { inputs, acc: 0, cycles: 0 }
+    }
+
+    /// Number of parallel inputs.
+    pub fn inputs(&self) -> usize {
+        self.inputs
+    }
+
+    /// Process one cycle; returns this cycle's count.
+    pub fn step(&mut self, bits: &[bool]) -> u32 {
+        assert_eq!(bits.len(), self.inputs, "APC input arity mismatch");
+        let c = bits.iter().filter(|&&b| b).count() as u32;
+        self.acc += c as u64;
+        self.cycles += 1;
+        c
+    }
+
+    /// Accumulated count over all cycles so far.
+    pub fn accumulated(&self) -> u64 {
+        self.acc
+    }
+
+    /// Cycles processed.
+    pub fn cycles(&self) -> usize {
+        self.cycles
+    }
+
+    /// Clear the accumulator.
+    pub fn reset(&mut self) {
+        self.acc = 0;
+        self.cycles = 0;
+    }
+}
+
+/// Behavioral approximate count (OR-paired front end, [36]-style): input
+/// pairs are OR-combined into single weight-1 bits, halving the reduction
+/// tree. Lower-bounds the exact count (a pair with both bits set loses 1);
+/// exact for sparse inputs — the common case for SC products, whose '1'
+/// densities multiply down.
+pub fn approximate_count(bits: &[bool]) -> u32 {
+    let mut c = 0u32;
+    let mut i = 0;
+    while i + 1 < bits.len() {
+        c += (bits[i] | bits[i + 1]) as u32;
+        i += 2;
+    }
+    if i < bits.len() {
+        c += bits[i] as u32;
+    }
+    c
+}
+
+/// Emit a full adder in the requested style; returns (sum, carry).
+fn fa(nl: &mut Netlist, style: FaStyle, a: NetId, b: NetId, c: NetId) -> (NetId, NetId) {
+    match style {
+        FaStyle::CmosCell => nl.full_adder_cell(a, b, c),
+        FaStyle::RfetCompact => nl.full_adder_rfet(a, b, c),
+    }
+}
+
+/// Reduce `inputs` weight-1 bits to a binary count (LSB first) with a
+/// Wallace-style column reduction of FAs/HAs.
+pub fn build_parallel_counter(
+    nl: &mut Netlist,
+    style: FaStyle,
+    inputs: &[NetId],
+) -> Vec<NetId> {
+    assert!(!inputs.is_empty());
+    let out_bits = (usize::BITS - inputs.len().leading_zeros()) as usize;
+    let mut columns: Vec<Vec<NetId>> = vec![Vec::new(); out_bits];
+    columns[0] = inputs.to_vec();
+    for w in 0..out_bits {
+        while columns[w].len() > 1 {
+            if columns[w].len() >= 3 {
+                let c = columns[w].pop().unwrap();
+                let b = columns[w].pop().unwrap();
+                let a = columns[w].pop().unwrap();
+                let (s, cy) = fa(nl, style, a, b, c);
+                columns[w].insert(0, s);
+                if w + 1 < out_bits {
+                    columns[w + 1].push(cy);
+                }
+                // A full column at max weight cannot carry out: the count
+                // fits in out_bits by construction.
+            } else {
+                let b = columns[w].pop().unwrap();
+                let a = columns[w].pop().unwrap();
+                let (s, cy) = nl.half_adder(a, b);
+                columns[w].insert(0, s);
+                if w + 1 < out_bits {
+                    columns[w + 1].push(cy);
+                }
+            }
+        }
+    }
+    columns
+        .into_iter()
+        .map(|col| col.into_iter().next().expect("column reduced to one bit"))
+        .collect()
+}
+
+/// Build a complete APC netlist: parallel counter + binary accumulator
+/// sized for `max_cycles` of accumulation.
+///
+/// Primary inputs: the `inputs` parallel bits. Primary outputs: the
+/// accumulator register (LSB first).
+pub fn build_netlist(inputs: usize, max_cycles: usize, style: FaStyle) -> Netlist {
+    let mut nl = Netlist::new(format!("apc_{inputs}in_{max_cycles}cyc_{style:?}"));
+    let ins = nl.inputs(inputs);
+    let count = build_parallel_counter(&mut nl, style, &ins);
+    let cnt_bits = count.len();
+    // Accumulator width: counter bits + ceil(log2(max_cycles)).
+    let acc_bits = cnt_bits + (usize::BITS - (max_cycles - 1).leading_zeros()) as usize;
+
+    // Register Q nets exist only after the DFFs; the adder reads Q and the
+    // DFF Ds read the adder — close the loop with rewire, like the LFSR.
+    let placeholder = nl.constant(false);
+    let first_dff_gate = nl.num_gates();
+    let qs: Vec<NetId> = (0..acc_bits).map(|_| nl.dff(placeholder)).collect();
+
+    // q + count adder: HA at bit 0, FA while count bits remain, HA for the
+    // carry tail.
+    let mut carry: Option<NetId> = None;
+    let mut next: Vec<NetId> = Vec::with_capacity(acc_bits);
+    for i in 0..acc_bits {
+        let cnt = count.get(i).copied();
+        let (s, cy) = match (cnt, carry) {
+            (Some(c), Some(cr)) => {
+                let (s, cy) = fa(&mut nl, style, qs[i], c, cr);
+                (s, Some(cy))
+            }
+            (Some(c), None) => {
+                let (s, cy) = nl.half_adder(qs[i], c);
+                (s, Some(cy))
+            }
+            (None, Some(cr)) => {
+                let (s, cy) = nl.half_adder(qs[i], cr);
+                (s, Some(cy))
+            }
+            (None, None) => (qs[i], None),
+        };
+        next.push(s);
+        carry = cy;
+    }
+    for (i, &d) in next.iter().enumerate() {
+        nl.rewire_gate_input(first_dff_gate + i, 0, d);
+    }
+    for &q in &qs {
+        nl.mark_output(q);
+    }
+    nl
+}
+
+/// Read an accumulator value from netlist outputs (LSB first).
+pub fn decode_output(bits: &[bool]) -> u64 {
+    bits.iter().enumerate().map(|(i, &b)| (b as u64) << i).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Evaluator;
+    use crate::tech::CellKind;
+
+    fn xorshift(seed: u64) -> impl FnMut() -> u64 {
+        let mut s = seed.max(1);
+        move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            s
+        }
+    }
+
+    #[test]
+    fn behavioral_accumulates() {
+        let mut apc = Apc::new(4);
+        assert_eq!(apc.step(&[true, true, false, true]), 3);
+        assert_eq!(apc.step(&[false, false, false, false]), 0);
+        assert_eq!(apc.step(&[true, true, true, true]), 4);
+        assert_eq!(apc.accumulated(), 7);
+        assert_eq!(apc.cycles(), 3);
+        apc.reset();
+        assert_eq!(apc.accumulated(), 0);
+    }
+
+    #[test]
+    fn parallel_counter_counts_exactly() {
+        for style in [FaStyle::CmosCell, FaStyle::RfetCompact] {
+            for n in [3usize, 7, 15, 25] {
+                let mut nl = Netlist::new("pc");
+                let ins = nl.inputs(n);
+                let outs = build_parallel_counter(&mut nl, style, &ins);
+                for &o in &outs {
+                    nl.mark_output(o);
+                }
+                let mut ev = Evaluator::new(&nl);
+                let mut rng = xorshift(n as u64 * 31 + 1);
+                for _ in 0..200 {
+                    let bits: Vec<bool> = (0..n).map(|_| rng() % 2 == 1).collect();
+                    ev.set_inputs(&bits);
+                    ev.propagate();
+                    let count = decode_output(&ev.outputs());
+                    let expected = bits.iter().filter(|&&b| b).count() as u64;
+                    assert_eq!(count, expected, "{style:?} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn counter_structure_matches_calibration() {
+        // The 25-input counter must use 20 FA + 2 HA (DESIGN.md §Calibration).
+        let mut nl = Netlist::new("pc25");
+        let ins = nl.inputs(25);
+        let _ = build_parallel_counter(&mut nl, FaStyle::CmosCell, &ins);
+        let counts = nl.cell_counts();
+        assert_eq!(counts[&CellKind::FullAdder], 20);
+        assert_eq!(counts[&CellKind::HalfAdder], 2);
+    }
+
+    #[test]
+    fn apc25_structure_matches_calibration() {
+        // Full APC (k=32): 24 FA + 8 HA + 10 DFF.
+        let nl = build_netlist(25, 32, FaStyle::CmosCell);
+        let counts = nl.cell_counts();
+        assert_eq!(counts[&CellKind::FullAdder], 24);
+        assert_eq!(counts[&CellKind::HalfAdder], 8);
+        assert_eq!(counts[&CellKind::Dff], 10);
+        // RFET flavor: 24 XOR3 + 24 MAJ3 (+ 2 inv each) instead of FA cells.
+        let rf = build_netlist(25, 32, FaStyle::RfetCompact);
+        let rc = rf.cell_counts();
+        assert_eq!(rc[&CellKind::Xor3], 24);
+        assert_eq!(rc[&CellKind::Maj3], 24);
+        assert_eq!(rc[&CellKind::Dff], 10);
+        assert!(!rc.contains_key(&CellKind::FullAdder));
+    }
+
+    #[test]
+    fn apc_netlist_accumulates_like_behavioral() {
+        for style in [FaStyle::CmosCell, FaStyle::RfetCompact] {
+            let n = 15;
+            let k = 32;
+            let nl = build_netlist(n, k, style);
+            let mut ev = Evaluator::new(&nl);
+            let mut model = Apc::new(n);
+            let mut rng = xorshift(99);
+            for _ in 0..k {
+                let bits: Vec<bool> = (0..n).map(|_| rng() % 3 == 0).collect();
+                model.step(&bits);
+                ev.set_inputs(&bits);
+                ev.propagate();
+                ev.tick();
+            }
+            ev.propagate();
+            assert_eq!(
+                decode_output(&ev.outputs()),
+                model.accumulated(),
+                "{style:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn approximate_count_lower_bounds_exact() {
+        let mut rng = xorshift(5);
+        for _ in 0..500 {
+            let bits: Vec<bool> = (0..25).map(|_| rng() % 4 == 0).collect();
+            let exact = bits.iter().filter(|&&b| b).count() as u32;
+            let approx = approximate_count(&bits);
+            assert!(approx <= exact, "OR-pairing can only lose counts");
+            assert!(2 * approx >= exact, "each pair loses at most half");
+        }
+    }
+
+    #[test]
+    fn approximate_count_exact_when_sparse() {
+        // No pair with both bits set ⇒ exact.
+        let mut bits = vec![false; 25];
+        bits[0] = true;
+        bits[5] = true;
+        bits[24] = true;
+        assert_eq!(approximate_count(&bits), 3);
+    }
+}

@@ -1,0 +1,355 @@
+//! Packed stochastic bitstreams and bit-parallel SC arithmetic.
+//!
+//! Bitstreams are stored 64 lanes per `u64` word; all SC operations
+//! (unipolar AND-multiply, bipolar XNOR-multiply, correlated-OR max) are
+//! word-parallel. This is the L3 hot path: the bit-exact SCNN accuracy
+//! experiments (Fig. 11/12) and the serving-side validation both run on it.
+
+/// A fixed-length stochastic bitstream (bit t = value of the stream at
+/// clock cycle t). Trailing bits of the last word are kept at zero.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bitstream {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl Bitstream {
+    /// All-zero stream of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        Bitstream { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    /// All-one stream of `len` bits.
+    pub fn ones(len: usize) -> Self {
+        let mut b = Bitstream { words: vec![!0u64; len.div_ceil(64)], len };
+        b.mask_tail();
+        b
+    }
+
+    /// Build from a bit-generator called once per cycle.
+    pub fn from_fn(len: usize, mut f: impl FnMut(usize) -> bool) -> Self {
+        let mut b = Bitstream::zeros(len);
+        for t in 0..len {
+            if f(t) {
+                b.set(t, true);
+            }
+        }
+        b
+    }
+
+    /// Build from a slice of bools.
+    pub fn from_bits(bits: &[bool]) -> Self {
+        Bitstream::from_fn(bits.len(), |t| bits[t])
+    }
+
+    /// Length in cycles.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the stream has zero length.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The packed words (trailing bits zero).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Bit at cycle `t`.
+    pub fn get(&self, t: usize) -> bool {
+        assert!(t < self.len);
+        (self.words[t / 64] >> (t % 64)) & 1 == 1
+    }
+
+    /// Set bit at cycle `t`.
+    pub fn set(&mut self, t: usize, v: bool) {
+        assert!(t < self.len);
+        let (w, s) = (t / 64, t % 64);
+        if v {
+            self.words[w] |= 1 << s;
+        } else {
+            self.words[w] &= !(1 << s);
+        }
+    }
+
+    fn mask_tail(&mut self) {
+        let rem = self.len % 64;
+        if rem != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << rem) - 1;
+            }
+        }
+    }
+
+    /// Number of '1' bits.
+    pub fn count_ones(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Unipolar value: P(1) = ones / len.
+    pub fn value_unipolar(&self) -> f64 {
+        self.count_ones() as f64 / self.len as f64
+    }
+
+    /// Bipolar value: 2·P(1) − 1.
+    pub fn value_bipolar(&self) -> f64 {
+        2.0 * self.value_unipolar() - 1.0
+    }
+
+    fn zip(&self, other: &Self, f: impl Fn(u64, u64) -> u64) -> Self {
+        assert_eq!(self.len, other.len, "bitstream length mismatch");
+        let mut out = Bitstream {
+            words: self.words.iter().zip(&other.words).map(|(&a, &b)| f(a, b)).collect(),
+            len: self.len,
+        };
+        out.mask_tail();
+        out
+    }
+
+    /// Bitwise AND — unipolar SC multiply (Fig. 1a).
+    pub fn and(&self, other: &Self) -> Self {
+        self.zip(other, |a, b| a & b)
+    }
+
+    /// Bitwise OR — scaled-add for independent streams, *max* for fully
+    /// correlated streams (the ReLU/MP trick of [29], Fig. 2).
+    pub fn or(&self, other: &Self) -> Self {
+        self.zip(other, |a, b| a | b)
+    }
+
+    /// Bitwise XNOR — bipolar SC multiply (Fig. 1b).
+    pub fn xnor(&self, other: &Self) -> Self {
+        self.zip(other, |a, b| !(a ^ b))
+    }
+
+    /// Bitwise XOR.
+    pub fn xor(&self, other: &Self) -> Self {
+        self.zip(other, |a, b| a ^ b)
+    }
+
+    /// Bitwise NOT — computes 1−p (unipolar) / −v (bipolar).
+    pub fn not(&self) -> Self {
+        let mut out =
+            Bitstream { words: self.words.iter().map(|&w| !w).collect(), len: self.len };
+        out.mask_tail();
+        out
+    }
+
+    /// Stochastic cross-correlation (SCC) of two streams [26]:
+    /// +1 = fully correlated, 0 = independent, −1 = anti-correlated.
+    pub fn scc(&self, other: &Self) -> f64 {
+        assert_eq!(self.len, other.len);
+        let n = self.len as f64;
+        let p1 = self.value_unipolar();
+        let p2 = other.value_unipolar();
+        let p11 = self.and(other).count_ones() as f64 / n;
+        let delta = p11 - p1 * p2;
+        let denom = if delta > 0.0 {
+            p1.min(p2) - p1 * p2
+        } else {
+            p1 * p2 - (p1 + p2 - 1.0).max(0.0)
+        };
+        if denom.abs() < 1e-12 {
+            0.0
+        } else {
+            delta / denom
+        }
+    }
+}
+
+/// Bit-sliced vertical counter: accumulates per-cycle population counts of
+/// many parallel streams without unpacking bits.
+///
+/// This is the software analogue of the APC's parallel-counter front end:
+/// after `add`-ing every product stream of a neuron, `count_at(t)` is
+/// exactly the APC input count at cycle `t`, and the whole structure costs
+/// O(words × planes) per stream instead of O(bits).
+#[derive(Debug, Clone)]
+pub struct VerticalCounter {
+    /// planes[p] holds bit p of the per-cycle count, packed like a stream.
+    planes: Vec<Vec<u64>>,
+    len: usize,
+    added: usize,
+}
+
+impl VerticalCounter {
+    /// Counter for streams of `len` cycles, able to count up to
+    /// `max_count` streams.
+    pub fn new(len: usize, max_count: usize) -> Self {
+        let bits = usize::BITS - max_count.leading_zeros(); // ceil(log2(max+1))
+        VerticalCounter {
+            planes: vec![vec![0u64; len.div_ceil(64)]; bits as usize],
+            len,
+            added: 0,
+        }
+    }
+
+    /// Number of streams added so far.
+    pub fn added(&self) -> usize {
+        self.added
+    }
+
+    /// Stream length in cycles.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no cycles are tracked.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Add one stream to the per-cycle counts (ripple-carry across planes).
+    pub fn add(&mut self, bs: &Bitstream) {
+        assert_eq!(bs.len(), self.len, "stream length mismatch");
+        self.added += 1;
+        assert!(
+            (1usize << self.planes.len()) > self.added,
+            "VerticalCounter overflow: {} streams exceed {} planes",
+            self.added,
+            self.planes.len()
+        );
+        for (w, &bits) in bs.words().iter().enumerate() {
+            let mut carry = bits;
+            for plane in &mut self.planes {
+                let new_carry = plane[w] & carry;
+                plane[w] ^= carry;
+                carry = new_carry;
+                if carry == 0 {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Count at cycle `t` (how many added streams had a 1).
+    pub fn count_at(&self, t: usize) -> u32 {
+        assert!(t < self.len);
+        let (w, s) = (t / 64, t % 64);
+        self.planes
+            .iter()
+            .enumerate()
+            .map(|(p, plane)| (((plane[w] >> s) & 1) as u32) << p)
+            .sum()
+    }
+
+    /// Sum of counts over all cycles (= Σ popcount of added streams).
+    pub fn total(&self) -> u64 {
+        self.planes
+            .iter()
+            .enumerate()
+            .map(|(p, plane)| {
+                (plane.iter().map(|w| w.count_ones() as u64).sum::<u64>()) << p
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xorshift(seed: u64) -> impl FnMut() -> u64 {
+        let mut s = seed.max(1);
+        move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            s
+        }
+    }
+
+    #[test]
+    fn construction_and_counting() {
+        let b = Bitstream::from_bits(&[true, false, true, true]);
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.count_ones(), 3);
+        assert!((b.value_unipolar() - 0.75).abs() < 1e-12);
+        assert!((b.value_bipolar() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tail_masking_preserved_by_ops() {
+        let a = Bitstream::ones(70);
+        let b = Bitstream::ones(70).not();
+        assert_eq!(a.count_ones(), 70);
+        assert_eq!(b.count_ones(), 0);
+        assert_eq!(a.not().count_ones(), 0);
+        assert_eq!(a.xnor(&a).count_ones(), 70);
+    }
+
+    #[test]
+    fn unipolar_multiply_with_independent_streams() {
+        // Deterministic independent-ish streams via distinct rngs.
+        let mut r1 = xorshift(11);
+        let mut r2 = xorshift(877);
+        let len = 1 << 16;
+        let a = Bitstream::from_fn(len, |_| r1() % 100 < 40); // p=0.4
+        let b = Bitstream::from_fn(len, |_| r2() % 100 < 50); // p=0.5
+        let prod = a.and(&b).value_unipolar();
+        assert!((prod - 0.2).abs() < 0.02, "prod={prod}");
+    }
+
+    #[test]
+    fn bipolar_multiply_with_xnor() {
+        let mut r1 = xorshift(5);
+        let mut r2 = xorshift(999);
+        let len = 1 << 16;
+        // a = +0.5 (p=0.75), b = -0.4 (p=0.3)
+        let a = Bitstream::from_fn(len, |_| r1() % 100 < 75);
+        let b = Bitstream::from_fn(len, |_| r2() % 100 < 30);
+        let prod = a.xnor(&b).value_bipolar();
+        assert!((prod - (-0.2)).abs() < 0.03, "prod={prod}");
+    }
+
+    #[test]
+    fn correlated_or_is_max() {
+        // Same comparator random source ⇒ fully correlated streams.
+        let mut rng = xorshift(3);
+        let len = 1 << 14;
+        let rs: Vec<u64> = (0..len).map(|_| rng() % 1000).collect();
+        let a = Bitstream::from_fn(len, |t| rs[t] < 300);
+        let b = Bitstream::from_fn(len, |t| rs[t] < 700);
+        assert!(a.scc(&b) > 0.99);
+        let m = a.or(&b).value_unipolar();
+        assert!((m - 0.7).abs() < 0.02, "max={m}");
+    }
+
+    #[test]
+    fn scc_of_independent_streams_near_zero() {
+        let mut r1 = xorshift(21);
+        let mut r2 = xorshift(77);
+        let len = 1 << 16;
+        let a = Bitstream::from_fn(len, |_| r1() % 2 == 0);
+        let b = Bitstream::from_fn(len, |_| r2() % 2 == 0);
+        assert!(a.scc(&b).abs() < 0.05);
+    }
+
+    #[test]
+    fn vertical_counter_matches_naive() {
+        let mut rng = xorshift(42);
+        let len = 130; // crosses word boundaries
+        let streams: Vec<Bitstream> =
+            (0..25).map(|_| Bitstream::from_fn(len, |_| rng() % 3 == 0)).collect();
+        let mut vc = VerticalCounter::new(len, 25);
+        for s in &streams {
+            vc.add(s);
+        }
+        for t in 0..len {
+            let naive: u32 = streams.iter().map(|s| s.get(t) as u32).sum();
+            assert_eq!(vc.count_at(t), naive, "cycle {t}");
+        }
+        let naive_total: u64 = streams.iter().map(|s| s.count_ones() as u64).sum();
+        assert_eq!(vc.total(), naive_total);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn length_mismatch_panics() {
+        let a = Bitstream::zeros(8);
+        let b = Bitstream::zeros(9);
+        let _ = a.and(&b);
+    }
+}

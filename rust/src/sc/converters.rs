@@ -1,0 +1,147 @@
+//! Binary↔stochastic converters (§II-B, §IV-A).
+//!
+//! * **B2S** — re-enters the stochastic domain after an APC/adder-tree:
+//!   compares the binary count against a random number each cycle (a PCC by
+//!   another name). When several B2S units share one random source their
+//!   outputs are fully correlated — the property the ReLU/MaxPool OR trick
+//!   relies on (Fig. 2).
+//! * **S2B** — leaves the stochastic domain at layer boundaries: a counter
+//!   that tallies the '1's of a stream over its full length.
+
+use crate::netlist::Netlist;
+use crate::sc::bitstream::Bitstream;
+use crate::sc::lfsr::Lfsr;
+
+/// Behavioral B2S: stream whose bit t is `code > r_t` for a shared random
+/// sequence `rs` (values uniform in 0..2^bits). P(1) = code / 2^bits.
+pub fn b2s_with_randoms(code: u32, rs: &[u32]) -> Bitstream {
+    Bitstream::from_fn(rs.len(), |t| code > rs[t])
+}
+
+/// Behavioral B2S driving its own LFSR (independent output).
+pub fn b2s(code: u32, bits: u32, len: usize, seed: u32) -> Bitstream {
+    let mut lfsr = Lfsr::new(bits, seed);
+    Bitstream::from_fn(len, |_| {
+        let r = lfsr.value();
+        lfsr.step();
+        code > r
+    })
+}
+
+/// Behavioral S2B: the count of ones (the unipolar code of the stream,
+/// scaled by its length).
+pub fn s2b(bs: &Bitstream) -> u64 {
+    bs.count_ones() as u64
+}
+
+/// Build the S2B counter netlist: one stream input incremented into a
+/// `width`-bit counter of half adders + DFFs.
+///
+/// PIs: the stream bit. POs: the counter register (LSB first).
+pub fn build_s2b_netlist(width: usize) -> Netlist {
+    let mut nl = Netlist::new(format!("s2b_{width}b"));
+    let input = nl.input();
+    let placeholder = nl.constant(false);
+    let first_dff = nl.num_gates();
+    let qs: Vec<_> = (0..width).map(|_| nl.dff(placeholder)).collect();
+    let mut carry = input;
+    let mut next = Vec::with_capacity(width);
+    for &q in &qs {
+        let (s, c) = nl.half_adder(q, carry);
+        next.push(s);
+        carry = c;
+    }
+    for (i, &d) in next.iter().enumerate() {
+        nl.rewire_gate_input(first_dff + i, 0, d);
+    }
+    for &q in &qs {
+        nl.mark_output(q);
+    }
+    nl
+}
+
+/// Build a B2S netlist: an `bits`-bit comparator against an external random
+/// number (PIs: code bits then R bits; PO: stochastic bit). Structurally a
+/// comparator PCC — shared here so channel assembly reads naturally.
+pub fn build_b2s_netlist(bits: u32) -> Netlist {
+    let mut nl = crate::sc::pcc::build_netlist(crate::sc::pcc::PccKind::Comparator, bits);
+    nl.name = format!("b2s_{bits}b");
+    nl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sc::apc::decode_output;
+    use crate::sim::Evaluator;
+
+    #[test]
+    fn b2s_probability_over_full_period() {
+        let bits = 8;
+        let len = 255;
+        for code in [0u32, 50, 128, 255] {
+            let bs = b2s(code, bits, len, 1);
+            // Over a full period R covers 1..=255 once: ones = max(code−1,0).
+            assert_eq!(bs.count_ones(), code.saturating_sub(1));
+        }
+    }
+
+    #[test]
+    fn shared_randoms_correlate_b2s_outputs() {
+        let rs: Vec<u32> = {
+            let mut l = Lfsr::new(8, 5);
+            (0..255)
+                .map(|_| {
+                    let v = l.value();
+                    l.step();
+                    v
+                })
+                .collect()
+        };
+        let a = b2s_with_randoms(80, &rs);
+        let b = b2s_with_randoms(200, &rs);
+        assert!(a.scc(&b) > 0.99);
+        // Correlated OR = max (the ReLU/MP property).
+        assert_eq!(a.or(&b).count_ones(), b.count_ones());
+    }
+
+    #[test]
+    fn s2b_counts() {
+        let bs = Bitstream::from_bits(&[true, true, false, true]);
+        assert_eq!(s2b(&bs), 3);
+    }
+
+    #[test]
+    fn s2b_netlist_counts_stream() {
+        let nl = build_s2b_netlist(6);
+        let mut ev = Evaluator::new(&nl);
+        let pattern = [true, false, true, true, true, false, false, true];
+        for &b in &pattern {
+            ev.set_inputs(&[b]);
+            ev.propagate();
+            ev.tick();
+        }
+        ev.propagate();
+        assert_eq!(decode_output(&ev.outputs()), 5);
+    }
+
+    #[test]
+    fn b2s_netlist_is_a_comparator() {
+        let nl = build_b2s_netlist(4);
+        let mut ev = Evaluator::new(&nl);
+        for code in 0..16u32 {
+            for r in 0..16u32 {
+                let mut pins = Vec::new();
+                for i in 0..4 {
+                    pins.push((code >> i) & 1 == 1);
+                }
+                for i in 0..4 {
+                    pins.push((r >> i) & 1 == 1);
+                }
+                ev.set_inputs(&pins);
+                ev.propagate();
+                assert_eq!(ev.outputs()[0], code > r);
+            }
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Linear-feedback shift registers — the random-number source (RNS) of the
+//! paper's SNGs (§II-C, Fig. 3).
+//!
+//! Fibonacci LFSRs with primitive feedback polynomials for 3–16 bits, so
+//! every width cycles through all 2ⁿ−1 non-zero states before repeating.
+
+/// Primitive-polynomial tap masks (bit i set ⇒ stage i+1 participates in the
+/// XOR feedback) for maximal-length LFSRs, widths 3..=16.
+/// Taps follow the standard Xilinx/Alfke table, e.g. 4-bit: x⁴+x³+1.
+const TAPS: [(u32, u32); 14] = [
+    (3, 0b110),                // x3 + x2 + 1
+    (4, 0b1100),               // x4 + x3 + 1
+    (5, 0b10100),              // x5 + x3 + 1
+    (6, 0b110000),             // x6 + x5 + 1
+    (7, 0b1100000),            // x7 + x6 + 1
+    (8, 0b10111000),           // x8 + x6 + x5 + x4 + 1
+    (9, 0b100010000),          // x9 + x5 + 1
+    (10, 0b1001000000),        // x10 + x7 + 1
+    (11, 0b10100000000),       // x11 + x9 + 1
+    (12, 0b111000001000),      // x12 + x11 + x10 + x4 + 1
+    (13, 0b1110010000000),     // x13 + x12 + x11 + x8 + 1
+    (14, 0b11100000000010),    // x14 + x13 + x12 + x2 + 1
+    (15, 0b110000000000000),   // x15 + x14 + 1
+    (16, 0b1101000000001000),  // x16 + x15 + x13 + x4 + 1
+];
+
+/// A maximal-length Fibonacci LFSR of 3–16 bits.
+#[derive(Debug, Clone)]
+pub struct Lfsr {
+    state: u32,
+    taps: u32,
+    bits: u32,
+}
+
+impl Lfsr {
+    /// Create an LFSR of width `bits` seeded with `seed` (any non-zero
+    /// value; zero is mapped to 1, the all-zero state being absorbing).
+    pub fn new(bits: u32, seed: u32) -> Self {
+        let taps = TAPS
+            .iter()
+            .find(|&&(b, _)| b == bits)
+            .unwrap_or_else(|| panic!("no primitive polynomial for {bits}-bit LFSR (3..=16)"))
+            .1;
+        let mask = (1u32 << bits) - 1;
+        let state = if seed & mask == 0 { 1 } else { seed & mask };
+        Lfsr { state, taps, bits }
+    }
+
+    /// Register width.
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Current n-bit state (used as the random number R of the SNG).
+    pub fn value(&self) -> u32 {
+        self.state
+    }
+
+    /// Advance one clock; returns the new state.
+    pub fn step(&mut self) -> u32 {
+        let fb = (self.state & self.taps).count_ones() & 1;
+        self.state = ((self.state << 1) | fb) & ((1u32 << self.bits) - 1);
+        self.state
+    }
+
+    /// The sequence period: 2ⁿ − 1 for a maximal LFSR.
+    pub fn period(&self) -> u64 {
+        (1u64 << self.bits) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn all_widths_are_maximal_length() {
+        for bits in 3..=16u32 {
+            let mut l = Lfsr::new(bits, 1);
+            let period = l.period();
+            // For large widths, walk the full period only up to 16 bits
+            // (65535 steps) — cheap enough to verify exhaustively.
+            let mut seen = HashSet::new();
+            seen.insert(l.value());
+            for _ in 0..period {
+                l.step();
+                assert_ne!(l.value(), 0, "{bits}-bit LFSR hit the absorbing state");
+                seen.insert(l.value());
+            }
+            assert_eq!(
+                seen.len() as u64,
+                period,
+                "{bits}-bit LFSR is not maximal-length"
+            );
+            // After exactly `period` steps we are back at the seed.
+            assert_eq!(l.value(), 1);
+        }
+    }
+
+    #[test]
+    fn zero_seed_is_corrected() {
+        let l = Lfsr::new(8, 0);
+        assert_ne!(l.value(), 0);
+    }
+
+    #[test]
+    fn state_distribution_is_near_uniform() {
+        // Over a full period every non-zero state appears exactly once, so
+        // the mean state value is 2^{n-1} (+ tiny bias from missing zero).
+        let mut l = Lfsr::new(10, 123);
+        let period = l.period();
+        let mut sum = 0u64;
+        for _ in 0..period {
+            sum += l.step() as u64;
+        }
+        let mean = sum as f64 / period as f64;
+        assert!((mean - 512.0).abs() < 1.0, "mean={mean}");
+    }
+
+    #[test]
+    #[should_panic(expected = "no primitive polynomial")]
+    fn unsupported_width_panics() {
+        Lfsr::new(17, 1);
+    }
+}

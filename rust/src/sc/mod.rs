@@ -1,0 +1,82 @@
+//! Stochastic-computing primitives: every component of the paper's SCNN
+//! datapath, each with a fast *behavioral* model (used by the accuracy
+//! experiments and the serving hot path) and, where the paper characterizes
+//! hardware, a *netlist builder* (used with [`crate::tech`] +
+//! [`crate::sim`] for the Table I/II area/delay/energy comparisons).
+//!
+//! Components (paper section in parentheses):
+//! * [`bitstream`] — packed bitstreams, SC multiply, correlation (II-A);
+//! * [`lfsr`] — maximal-length LFSR random-number sources (II-C);
+//! * [`pcc`] — CMP / MUX-chain / RFET NAND-NOR probability-conversion
+//!   circuits, incl. Lemma 1's inverter-insertion rule (II-C, III-A);
+//! * [`sng`] — stochastic number generators with RNS sharing (II-C);
+//! * [`apc`] — accumulative parallel counters, exact + approximate (III-B);
+//! * [`adder_tree`] — configurable adder tree for wide neurons (IV-A);
+//! * [`converters`] — B2S and S2B converters (II-B, IV-A);
+//! * [`neuron`] — the Frasser correlated SC neuron [29] (II-B).
+
+pub mod adder_tree;
+pub mod apc;
+pub mod bitstream;
+pub mod converters;
+pub mod lfsr;
+pub mod neuron;
+pub mod pcc;
+pub mod sng;
+
+pub use bitstream::Bitstream;
+pub use lfsr::Lfsr;
+pub use pcc::PccKind;
+
+/// Quantize a real value in [0, 1] to an `bits`-bit unipolar code.
+pub fn quantize_unipolar(v: f64, bits: u32) -> u32 {
+    let levels = (1u64 << bits) as f64;
+    let q = (v.clamp(0.0, 1.0) * levels).round() as u64;
+    q.min((1u64 << bits) - 1) as u32
+}
+
+/// Quantize a real value in [-1, 1] to an `bits`-bit code under *bipolar*
+/// encoding: value v ↦ probability (v+1)/2 ↦ code.
+pub fn quantize_bipolar(v: f64, bits: u32) -> u32 {
+    quantize_unipolar((v.clamp(-1.0, 1.0) + 1.0) / 2.0, bits)
+}
+
+/// The unipolar value an `bits`-bit code represents (code / 2^bits).
+pub fn dequantize_unipolar(code: u32, bits: u32) -> f64 {
+    code as f64 / (1u64 << bits) as f64
+}
+
+/// The bipolar value an `bits`-bit code represents.
+pub fn dequantize_bipolar(code: u32, bits: u32) -> f64 {
+    2.0 * dequantize_unipolar(code, bits) - 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_roundtrip_unipolar() {
+        for bits in [3u32, 8] {
+            for code in 0..(1u32 << bits) {
+                let v = dequantize_unipolar(code, bits);
+                assert_eq!(quantize_unipolar(v, bits), code);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_bipolar_endpoints() {
+        assert_eq!(quantize_bipolar(-1.0, 8), 0);
+        assert_eq!(quantize_bipolar(1.0, 8), 255);
+        // Bipolar zero sits at mid-code.
+        assert_eq!(quantize_bipolar(0.0, 8), 128);
+    }
+
+    #[test]
+    fn quantize_clamps() {
+        assert_eq!(quantize_unipolar(2.0, 4), 15);
+        assert_eq!(quantize_unipolar(-1.0, 4), 0);
+        assert_eq!(quantize_bipolar(5.0, 4), 15);
+    }
+}

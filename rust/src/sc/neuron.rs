@@ -1,0 +1,286 @@
+//! The correlated SC neuron of Frasser et al. [29] (§II-B, Fig. 2) — the
+//! paper's adopted neuron structure — implemented bit-exactly on packed
+//! bitstreams.
+//!
+//! Dataflow per neuron (bipolar encoding throughout):
+//!
+//! ```text
+//! act codes ─SNG(R1,shared)─┐
+//!                            ├─ XNOR ─→ VerticalCounter (APC) ─ c_t
+//! wgt codes ─SNG(R2,shared)─┘                                   │
+//!                    B2S: o_t = (2·c_t > r4_t), r4 shared ───────┘
+//!                    ReLU: o_t OR (n > r4_t)        (correlated max)
+//!                    MaxPool: OR across neurons     (correlated max)
+//!                    S2B: count ones → next-layer code
+//! ```
+//!
+//! **Scaling convention.** With `n` products and `m = ceil(log2(n+1))`, the
+//! B2S comparison `2·c_t > r4` (r4 uniform over 2^(m+1) values) yields a
+//! stream of bipolar value `v = (Σ aⱼwⱼ + n)/2^m − 1`; the affine map is the
+//! SC-inherent scaled addition. ReLU-at-zero in the Σ-domain corresponds to
+//! the threshold stream `n > r4` (bipolar value of a zero pre-activation).
+//! The training-side SC-equivalent model in `python/compile/model.py`
+//! applies the identical map ([`expectation`] is the shared oracle).
+
+use crate::sc::bitstream::{Bitstream, VerticalCounter};
+
+/// Comparator width for a fan-in of `n`: m = ceil(log2(n+1)) bits hold the
+/// per-cycle count; the B2S comparator works in the 2^(m+1) domain.
+pub fn m_bits(n: usize) -> u32 {
+    (usize::BITS - n.leading_zeros()) as u32
+}
+
+/// Accumulate the per-cycle counts of the XNOR products of paired
+/// activation/weight streams (the multiplier array + APC front end).
+pub fn mac_counts(acts: &[Bitstream], weights: &[Bitstream]) -> VerticalCounter {
+    assert_eq!(acts.len(), weights.len(), "act/weight fan-in mismatch");
+    assert!(!acts.is_empty());
+    let len = acts[0].len();
+    let mut vc = VerticalCounter::new(len, acts.len());
+    for (a, w) in acts.iter().zip(weights) {
+        vc.add(&a.xnor(w));
+    }
+    vc
+}
+
+/// B2S over accumulated counts: bit t = (2·c_t > r4_t), with `r4` uniform
+/// over 0..2^(m+1). Output bipolar value ≈ (Σ aw + n)/2^m − 1.
+pub fn b2s_stream(vc: &VerticalCounter, r4: &[u32]) -> Bitstream {
+    assert_eq!(vc.len(), r4.len(), "random sequence length mismatch");
+    Bitstream::from_fn(vc.len(), |t| 2 * vc.count_at(t) > r4[t])
+}
+
+/// The correlated zero-threshold stream for ReLU: bit t = (n > r4_t) — the
+/// bipolar representation of a zero pre-activation under the same r4.
+pub fn relu_zero_stream(n: usize, r4: &[u32]) -> Bitstream {
+    Bitstream::from_fn(r4.len(), |t| n as u32 > r4[t])
+}
+
+/// Full neuron forward: products → counts → B2S (→ optional ReLU).
+pub fn forward(
+    acts: &[Bitstream],
+    weights: &[Bitstream],
+    r4: &[u32],
+    relu: bool,
+) -> Bitstream {
+    let vc = mac_counts(acts, weights);
+    let o = b2s_stream(&vc, r4);
+    if relu {
+        o.or(&relu_zero_stream(acts.len(), r4))
+    } else {
+        o
+    }
+}
+
+/// Max-pool a group of correlated neuron streams (OR = max for fully
+/// correlated streams, Fig. 2).
+pub fn max_pool(streams: &[Bitstream]) -> Bitstream {
+    assert!(!streams.is_empty());
+    streams[1..].iter().fold(streams[0].clone(), |acc, s| acc.or(s))
+}
+
+/// Expected bipolar output value of the neuron for pre-activation sum
+/// `pre = Σ aⱼwⱼ` with fan-in `n`, using a *hard* ReLU — the asymptotic
+/// (zero-variance) oracle.
+pub fn expectation(pre: f64, n: usize, relu: bool) -> f64 {
+    let scale = (1u64 << m_bits(n)) as f64;
+    let x = if relu { pre.max(0.0) } else { pre };
+    (x + n as f64) / scale - 1.0
+}
+
+/// Expected bipolar output with the *SC-smoothed* ReLU.
+///
+/// The correlated-OR ReLU operates per cycle: out_t = (max(2·c_t, n) > r4),
+/// so the expected value is E[max(2c, n)]/2^m − 1, which exceeds the hard
+/// ReLU whenever the count fluctuates around the zero level (Jensen). With
+/// 2c ≈ Normal(pre + n, σ²), σ² = 4·Σ pⱼ(1−pⱼ) = Σ (1 − (aⱼwⱼ)²):
+///
+///   E[max(Y, n)] = n + σ·[φ(z) + z·Φ(z)],  z = pre/σ.
+///
+/// This is the exact model `python/compile/model.py` trains through — SC
+/// hardware implements a softplus-like activation, not a sharp ReLU.
+pub fn expectation_smooth_relu(pre: f64, sigma2: f64, n: usize) -> f64 {
+    let scale = (1u64 << m_bits(n)) as f64;
+    let sigma = sigma2.max(0.0).sqrt();
+    let softplus = if sigma < 1e-9 {
+        pre.max(0.0)
+    } else {
+        let z = pre / sigma;
+        sigma * (phi(z) + z * cap_phi(z))
+    };
+    (softplus + n as f64) / scale - 1.0
+}
+
+/// Per-cycle count variance of `2c` for product values `aw` (each in
+/// [−1, 1]): Σ (1 − (aⱼwⱼ)²), assuming independent product streams.
+pub fn count_variance(products: &[f64]) -> f64 {
+    products.iter().map(|&v| 1.0 - v * v).sum()
+}
+
+/// Standard normal pdf.
+fn phi(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard normal cdf via an Abramowitz–Stegun erf approximation
+/// (|err| < 1.5e-7 — far below SC sampling noise).
+fn cap_phi(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// Error function approximation (Abramowitz & Stegun 7.1.26).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sc::lfsr::Lfsr;
+    use crate::sc::pcc::{pcc_bit, PccKind};
+    use crate::sc::{dequantize_bipolar, quantize_bipolar};
+
+    /// Generate correlated bipolar streams for codes via one shared LFSR of
+    /// width `lfsr_bits ≥ bits` (activation and weight banks must use
+    /// *different* random sequences or XNOR products bias badly — same
+    /// polynomial at a phase offset is not enough; see StreamBank in
+    /// `accel::network`).
+    fn gen_correlated(
+        codes: &[u32],
+        bits: u32,
+        lfsr_bits: u32,
+        len: usize,
+        seed: u32,
+    ) -> Vec<Bitstream> {
+        let mut l = Lfsr::new(lfsr_bits, seed);
+        let mask = (1u32 << bits) - 1;
+        let rs: Vec<u32> = (0..len)
+            .map(|_| {
+                let v = l.value() & mask;
+                l.step();
+                v
+            })
+            .collect();
+        codes
+            .iter()
+            .map(|&c| Bitstream::from_fn(len, |t| pcc_bit(PccKind::Comparator, c, rs[t], bits)))
+            .collect()
+    }
+
+    fn r4_sequence(n: usize, len: usize, seed: u32) -> Vec<u32> {
+        let m1 = m_bits(n) + 1;
+        let mut l = Lfsr::new(m1.max(3), seed);
+        (0..len)
+            .map(|_| {
+                let v = l.value() & ((1 << m1) - 1);
+                l.step();
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn m_bits_covers_counts() {
+        assert_eq!(m_bits(25), 5);
+        assert_eq!(m_bits(32), 6);
+        assert_eq!(m_bits(1), 1);
+        for n in 1..100usize {
+            assert!((1usize << m_bits(n)) > n);
+        }
+    }
+
+    #[test]
+    fn neuron_tracks_expectation() {
+        let bits = 8;
+        let len = 4096;
+        let n = 25;
+        // Activation values spread over [-1,1]; weights alternating sign.
+        let avals: Vec<f64> = (0..n).map(|j| (j as f64 / n as f64) * 1.6 - 0.8).collect();
+        let wvals: Vec<f64> =
+            (0..n).map(|j| if j % 2 == 0 { 0.6 } else { -0.4 }).collect();
+        let acodes: Vec<u32> = avals.iter().map(|&v| quantize_bipolar(v, bits)).collect();
+        let wcodes: Vec<u32> = wvals.iter().map(|&v| quantize_bipolar(v, bits)).collect();
+        // Quantized values (what the hardware actually encodes).
+        let aq: Vec<f64> = acodes.iter().map(|&c| dequantize_bipolar(c, bits)).collect();
+        let wq: Vec<f64> = wcodes.iter().map(|&c| dequantize_bipolar(c, bits)).collect();
+        let pre: f64 = aq.iter().zip(&wq).map(|(a, w)| a * w).sum();
+
+        let acts = gen_correlated(&acodes, bits, bits, len, 17);
+        let wgts = gen_correlated(&wcodes, bits, bits + 3, len, 101);
+        let r4 = r4_sequence(n, len, 7);
+        let products: Vec<f64> = aq.iter().zip(&wq).map(|(a, w)| a * w).collect();
+        for relu in [false, true] {
+            let out = forward(&acts, &wgts, &r4, relu);
+            let got = out.value_bipolar();
+            let want = if relu {
+                expectation_smooth_relu(pre, count_variance(&products), n)
+            } else {
+                expectation(pre, n, relu)
+            };
+            assert!(
+                (got - want).abs() < 0.08,
+                "relu={relu}: got {got}, want {want} (pre={pre})"
+            );
+        }
+    }
+
+    #[test]
+    fn relu_clamps_negative_preactivations() {
+        let bits = 8;
+        let len = 4096;
+        let n = 9;
+        // Strongly negative pre-activation: all acts 0.9, all weights -0.9.
+        let acodes = vec![quantize_bipolar(0.9, bits); n];
+        let wcodes = vec![quantize_bipolar(-0.9, bits); n];
+        let acts = gen_correlated(&acodes, bits, bits, len, 3);
+        let wgts = gen_correlated(&wcodes, bits, bits + 3, len, 91);
+        let r4 = r4_sequence(n, len, 11);
+        let no_relu = forward(&acts, &wgts, &r4, false).value_bipolar();
+        let relu = forward(&acts, &wgts, &r4, true).value_bipolar();
+        let zero_level = expectation(0.0, n, false);
+        assert!(no_relu < zero_level - 0.1, "pre-activation should be negative");
+        assert!((relu - zero_level).abs() < 0.05, "ReLU should clamp at zero level");
+    }
+
+    #[test]
+    fn max_pool_takes_the_max() {
+        let bits = 8;
+        let len = 2048;
+        let n = 4;
+        let r4 = r4_sequence(n, len, 5);
+        // Three neurons with increasing pre-activations via weights.
+        let acodes = vec![quantize_bipolar(0.8, bits); n];
+        let acts = gen_correlated(&acodes, bits, bits, len, 23);
+        let mut streams = Vec::new();
+        let mut exps = Vec::new();
+        for (i, wv) in [(0, -0.5f64), (1, 0.1), (2, 0.7)] {
+            let wcodes = vec![quantize_bipolar(wv, bits); n];
+            let wgts = gen_correlated(&wcodes, bits, bits + 3, len, 41 + i);
+            streams.push(forward(&acts, &wgts, &r4, false));
+            let aq = dequantize_bipolar(acodes[0], bits);
+            let wq = dequantize_bipolar(wcodes[0], bits);
+            exps.push(expectation(n as f64 * aq * wq, n, false));
+        }
+        let pooled = max_pool(&streams).value_bipolar();
+        let want = exps.iter().fold(f64::MIN, |m, &e| m.max(e));
+        assert!((pooled - want).abs() < 0.08, "pooled={pooled} want={want}");
+    }
+
+    #[test]
+    fn expectation_bounds() {
+        for n in [9usize, 25, 150] {
+            let lo = expectation(-(n as f64), n, false);
+            let hi = expectation(n as f64, n, false);
+            assert!(lo >= -1.0 - 1e-9);
+            assert!(hi <= 1.0 + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! Probability-conversion circuits (PCCs): the binary→stochastic half of an
+//! SNG (§II-C, Fig. 4) and the paper's core circuit contribution — the RFET
+//! NAND-NOR reconfigurable chain with Lemma 1's inverter-insertion rule
+//! (§III-A, Fig. 6).
+//!
+//! Each kind has a *behavioral* bit function (used in the accuracy
+//! experiments and by [`crate::sc::sng`]) and a *netlist builder* (used for
+//! the Table I hardware comparison). The behavioral NAND-NOR model is
+//! asserted bit-identical to its gate netlist in the tests.
+
+use crate::netlist::Netlist;
+
+/// Which PCC microarchitecture converts code → stochastic bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PccKind {
+    /// Magnitude comparator: bit = (X > R) (Fig. 4a).
+    Comparator,
+    /// MUX-chain (Ding et al. [12], Fig. 4b): P = X / 2^N.
+    MuxChain,
+    /// RFET NAND-NOR reconfigurable chain (Fig. 6c, Lemma 1).
+    NandNor,
+}
+
+impl PccKind {
+    /// All kinds, for sweeps.
+    pub const ALL: [PccKind; 3] = [PccKind::Comparator, PccKind::MuxChain, PccKind::NandNor];
+}
+
+/// Lemma 1's inverter-insertion rule: whether stage `i` (1-indexed) of an
+/// `n`-stage NAND-NOR chain takes the *inverted* X bit.
+///
+/// > If N is even, add inverters to all Xi with even index.
+/// > If N is odd, add inverters to all Xi with odd index.
+pub fn nandnor_stage_inverted(n: u32, i: u32) -> bool {
+    debug_assert!((1..=n).contains(&i));
+    if n % 2 == 0 {
+        i % 2 == 0
+    } else {
+        i % 2 == 1
+    }
+}
+
+/// One output bit of a PCC of kind `kind` with `bits`-bit input code `x`
+/// and random number `r` (both interpreted LSB-first, stage i consuming
+/// bit i−1 in the chain designs).
+pub fn pcc_bit(kind: PccKind, x: u32, r: u32, bits: u32) -> bool {
+    debug_assert!(bits >= 1 && bits <= 16);
+    let mask = (1u64 << bits) - 1;
+    let x = (x as u64) & mask;
+    let r = (r as u64) & mask;
+    match kind {
+        PccKind::Comparator => x > r,
+        PccKind::MuxChain => {
+            // O_0 = 0; stage i: O_i = R_i ? X_i : O_{i-1}  (LSB first).
+            let mut o = false;
+            for i in 0..bits {
+                let xi = (x >> i) & 1 == 1;
+                let ri = (r >> i) & 1 == 1;
+                o = if ri { xi } else { o };
+            }
+            o
+        }
+        PccKind::NandNor => {
+            // Lemma 1, eqs. (4)–(6): O_0 = 0; stage i applies NAND or NOR of
+            // (O_{i-1}, R_i) selected by the (possibly inverted) X_i.
+            // prog = 1 → NOR. From eqs. (5)/(6): for N even, odd stages
+            // select NOR when X_i = 1 (prog = X_i) and even stages when
+            // X_i = 0 (prog = !X_i); parities swap for N odd.
+            let mut o = false;
+            for i in 1..=bits {
+                let xi = (x >> (i - 1)) & 1 == 1;
+                let ri = (r >> (i - 1)) & 1 == 1;
+                let prog = if nandnor_stage_inverted(bits, i) { !xi } else { xi };
+                o = if prog { !(o | ri) } else { !(o & ri) };
+            }
+            o
+        }
+    }
+}
+
+/// Exact expected output of a PCC for input code `x`, averaging over all
+/// 2^bits equiprobable R values (i.e. ideal independent R bits with
+/// p = 0.5). For the chain PCCs this uses the stage recurrence of Lemma 1's
+/// proof; for the comparator it is x / 2^bits by construction.
+pub fn expected_output(kind: PccKind, x: u32, bits: u32) -> f64 {
+    match kind {
+        PccKind::Comparator => x as f64 / (1u64 << bits) as f64,
+        PccKind::MuxChain => {
+            // m_i = ½ m_{i-1} + ½ X_i  (select X_i with prob ½).
+            let mut m = 0.0f64;
+            for i in 0..bits {
+                let xi = ((x >> i) & 1) as f64;
+                m = 0.5 * m + 0.5 * xi;
+            }
+            m
+        }
+        PccKind::NandNor => {
+            // NAND stage: E = 1 − ½ m;  NOR stage: E = ½ − ½ m  (eqs. 9–10).
+            let mut m = 0.0f64;
+            for i in 1..=bits {
+                let xi = (x >> (i - 1)) & 1 == 1;
+                let prog = if nandnor_stage_inverted(bits, i) { !xi } else { xi };
+                m = if prog { 0.5 * (1.0 - m) } else { 1.0 - 0.5 * m };
+            }
+            m
+        }
+    }
+}
+
+/// Build the gate netlist of an `bits`-bit PCC.
+///
+/// Primary inputs: X[0..bits] (LSB first) then R[0..bits]; one primary
+/// output (the stochastic bit).
+pub fn build_netlist(kind: PccKind, bits: u32) -> Netlist {
+    let mut nl = Netlist::new(format!("pcc_{kind:?}_{bits}b"));
+    let x = nl.inputs(bits as usize);
+    let r = nl.inputs(bits as usize);
+    let out = match kind {
+        PccKind::Comparator => {
+            // Iterative magnitude comparator, LSB→MSB so the most
+            // significant difference decides: gt_i = (xᵢ & !rᵢ) | (xᵢ ≡ rᵢ) & gt_{i−1}.
+            let mut gt = nl.constant(false);
+            for i in 0..bits as usize {
+                let nr = nl.inv(r[i]);
+                let here = nl.and2(x[i], nr);
+                let eq = nl.xnor2(x[i], r[i]);
+                let keep = nl.and2(eq, gt);
+                gt = nl.or2(here, keep);
+            }
+            gt
+        }
+        PccKind::MuxChain => {
+            let mut o = nl.constant(false);
+            for i in 0..bits as usize {
+                o = nl.mux21(o, x[i], r[i]);
+            }
+            o
+        }
+        PccKind::NandNor => {
+            // Fig. 6c: NandNor chain with inverters inserted on the X inputs
+            // per Lemma 1's parity rule.
+            let mut o = nl.constant(false);
+            for i in 1..=bits {
+                let xi = x[(i - 1) as usize];
+                let prog = if nandnor_stage_inverted(bits, i) { nl.inv(xi) } else { xi };
+                o = nl.nandnor(o, r[(i - 1) as usize], prog);
+            }
+            o
+        }
+    };
+    nl.mark_output(out);
+    nl
+}
+
+/// Number of inverters Lemma 1's rule inserts for an `n`-stage chain.
+pub fn nandnor_inverter_count(n: u32) -> u32 {
+    (1..=n).filter(|&i| nandnor_stage_inverted(n, i)).count() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Evaluator;
+
+    /// Average PCC output over every R value (exhaustive, uniform R).
+    fn exhaustive_mean(kind: PccKind, x: u32, bits: u32) -> f64 {
+        let total = 1u64 << bits;
+        let ones: u64 =
+            (0..total).filter(|&r| pcc_bit(kind, x, r as u32, bits)).count() as u64;
+        ones as f64 / total as f64
+    }
+
+    #[test]
+    fn comparator_probability_is_exact() {
+        for bits in [3u32, 4, 6] {
+            for x in 0..(1u32 << bits) {
+                let m = exhaustive_mean(PccKind::Comparator, x, bits);
+                assert!((m - x as f64 / (1u64 << bits) as f64).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn mux_chain_matches_eq1() {
+        // Eq. (1): P = Σ X_i 2^i / 2^N over uniform independent R bits.
+        for bits in [3u32, 4, 8] {
+            for x in 0..(1u32 << bits) {
+                let m = exhaustive_mean(PccKind::MuxChain, x, bits);
+                assert!(
+                    (m - x as f64 / (1u64 << bits) as f64).abs() < 1e-12,
+                    "bits={bits} x={x} m={m}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nandnor_matches_lemma1_recurrence() {
+        // The behavioral chain must equal the stage recurrence exactly.
+        for bits in 3..=10u32 {
+            for x in 0..(1u32 << bits) {
+                let m = exhaustive_mean(PccKind::NandNor, x, bits);
+                let e = expected_output(PccKind::NandNor, x, bits);
+                assert!((m - e).abs() < 1e-12, "bits={bits} x={x} m={m} e={e}");
+            }
+        }
+    }
+
+    #[test]
+    fn nandnor_approximates_x_over_2n() {
+        // Lemma 1's conclusion (eqs. 21–22): m_N ≈ Σ 2^{k-1} X_k / 2^N, with
+        // a small constant bias A_N (the paper's Fig. 7 shows the slight
+        // upward offset at small bit lengths).
+        for bits in 3..=10u32 {
+            let mut max_err = 0.0f64;
+            for x in 0..(1u32 << bits) {
+                let m = expected_output(PccKind::NandNor, x, bits);
+                let ideal = x as f64 / (1u64 << bits) as f64;
+                max_err = max_err.max((m - ideal).abs());
+            }
+            // The residual constant A_N of eq. (18) is on the order of one
+            // LSB (2^-N); e.g. A_3 = 1/8, A_4 = 0.
+            assert!(
+                max_err <= 1.6 / (1u64 << bits) as f64,
+                "bits={bits} max_err={max_err}"
+            );
+            // Monotonicity in X is what the conversion needs (Fig. 7):
+            let mut prev = -1.0;
+            for x in 0..(1u32 << bits) {
+                let m = expected_output(PccKind::NandNor, x, bits);
+                assert!(m >= prev - 1e-12, "non-monotone at bits={bits} x={x}");
+                prev = m;
+            }
+        }
+    }
+
+    #[test]
+    fn nandnor_bias_positive_at_small_widths() {
+        // Fig. 7: "the NAND-NOR PCC results in a slightly higher value
+        // compared to the other two methods" for small bit lengths.
+        for bits in 3..=6u32 {
+            let mid = 1u32 << (bits - 1);
+            let m = expected_output(PccKind::NandNor, mid, bits);
+            assert!(m >= 0.5 - 1e-12, "bits={bits} mid response {m}");
+        }
+    }
+
+    #[test]
+    fn inverter_rule_counts() {
+        assert_eq!(nandnor_inverter_count(8), 4); // even N → even indices
+        assert_eq!(nandnor_inverter_count(7), 4); // odd N → odd indices 1,3,5,7
+        assert_eq!(nandnor_inverter_count(4), 2);
+        assert_eq!(nandnor_inverter_count(3), 2);
+    }
+
+    #[test]
+    fn netlists_match_behavioral_bit_for_bit() {
+        for kind in PccKind::ALL {
+            for bits in [3u32, 4, 8] {
+                let nl = build_netlist(kind, bits);
+                let mut ev = Evaluator::new(&nl);
+                for x in 0..(1u32 << bits) {
+                    // Sample a subset of R values to keep the test fast.
+                    for r in (0..(1u32 << bits)).step_by(3) {
+                        let mut pins = Vec::new();
+                        for i in 0..bits {
+                            pins.push((x >> i) & 1 == 1);
+                        }
+                        for i in 0..bits {
+                            pins.push((r >> i) & 1 == 1);
+                        }
+                        ev.set_inputs(&pins);
+                        ev.propagate();
+                        assert_eq!(
+                            ev.outputs()[0],
+                            pcc_bit(kind, x, r, bits),
+                            "{kind:?} bits={bits} x={x} r={r}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn netlist_structure_matches_paper() {
+        use crate::tech::CellKind;
+        // 8-bit MUX chain: exactly 8 MUX21s.
+        let mux = build_netlist(PccKind::MuxChain, 8);
+        assert_eq!(mux.cell_counts()[&CellKind::Mux21], 8);
+        assert_eq!(mux.num_gates(), 8);
+        // 8-bit NAND-NOR chain: 8 NandNor + 4 inverters (Lemma 1, N even).
+        let nn = build_netlist(PccKind::NandNor, 8);
+        assert_eq!(nn.cell_counts()[&CellKind::NandNor], 8);
+        assert_eq!(nn.cell_counts()[&CellKind::Inv], 4);
+    }
+}

@@ -1,0 +1,257 @@
+//! Stochastic number generators: RNS (LFSR) + PCC (§II-C, Fig. 3), with the
+//! RNS-sharing optimization the paper discusses (one LFSR's state feeds many
+//! PCCs through per-consumer bit shuffles, §I).
+
+use crate::netlist::Netlist;
+use crate::sc::bitstream::Bitstream;
+use crate::sc::lfsr::Lfsr;
+use crate::sc::pcc::{self, PccKind};
+
+/// A single binary→stochastic generator.
+#[derive(Debug, Clone)]
+pub struct Sng {
+    lfsr: Lfsr,
+    kind: PccKind,
+    bits: u32,
+}
+
+impl Sng {
+    /// SNG of `bits` precision using PCC `kind`, seeded at `seed`.
+    pub fn new(bits: u32, kind: PccKind, seed: u32) -> Self {
+        Sng { lfsr: Lfsr::new(bits, seed), kind, bits }
+    }
+
+    /// Precision in bits.
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Generate a `len`-cycle bitstream encoding code `x` (0..2^bits).
+    pub fn generate(&mut self, x: u32, len: usize) -> Bitstream {
+        Bitstream::from_fn(len, |_| {
+            let r = self.lfsr.value();
+            self.lfsr.step();
+            pcc::pcc_bit(self.kind, x, r, self.bits)
+        })
+    }
+
+    /// Generate streams for many codes *sharing* this SNG's random sequence
+    /// (fully correlated outputs — SCC ≈ +1 for the comparator PCC). This is
+    /// the correlation the Frasser neuron exploits for ReLU/MP (§II-B).
+    pub fn generate_correlated(&mut self, xs: &[u32], len: usize) -> Vec<Bitstream> {
+        let rs: Vec<u32> = (0..len)
+            .map(|_| {
+                let r = self.lfsr.value();
+                self.lfsr.step();
+                r
+            })
+            .collect();
+        xs.iter()
+            .map(|&x| Bitstream::from_fn(len, |t| pcc::pcc_bit(self.kind, x, rs[t], self.bits)))
+            .collect()
+    }
+}
+
+/// A shared random-number source: one LFSR whose state is rotated by a
+/// per-consumer offset before feeding each PCC — the classic SNG-sharing
+/// area optimization (bitstreams become decorrelated enough for multiply).
+#[derive(Debug, Clone)]
+pub struct SharedRns {
+    lfsr: Lfsr,
+    bits: u32,
+}
+
+impl SharedRns {
+    /// Shared RNS of width `bits`.
+    pub fn new(bits: u32, seed: u32) -> Self {
+        SharedRns { lfsr: Lfsr::new(bits, seed), bits }
+    }
+
+    /// Advance one cycle and return per-consumer shuffled views of the
+    /// state: consumer j sees the state bit-reversed (odd j) and rotated by
+    /// ⌊j/2⌋ — fixed wire permutations, free in hardware. Bit reversal maps
+    /// the sequence onto its reciprocal-polynomial m-sequence, which is the
+    /// key decorrelator for comparator PCCs (plain rotation leaves the
+    /// MSB-dominated comparisons strongly correlated).
+    pub fn step_views(&mut self, n: usize) -> Vec<u32> {
+        let s = self.lfsr.value();
+        self.lfsr.step();
+        let b = self.bits;
+        let mask = (1u32 << b) - 1;
+        let rev = s.reverse_bits() >> (32 - b);
+        (0..n as u32)
+            .map(|j| {
+                let base = if j % 2 == 1 { rev } else { s };
+                let rot = (j / 2) % b;
+                if rot == 0 {
+                    base
+                } else {
+                    ((base << rot) | (base >> (b - rot))) & mask
+                }
+            })
+            .collect()
+    }
+
+    /// Generate one stream per (code, consumer-index) pair, all driven from
+    /// this single LFSR.
+    pub fn generate_shuffled(&mut self, kind: PccKind, xs: &[u32], len: usize) -> Vec<Bitstream> {
+        let mut streams = vec![Bitstream::zeros(len); xs.len()];
+        for t in 0..len {
+            let views = self.step_views(xs.len());
+            for (j, (&x, view)) in xs.iter().zip(views).enumerate() {
+                if pcc::pcc_bit(kind, x, view, self.bits) {
+                    streams[j].set(t, true);
+                }
+            }
+        }
+        streams
+    }
+}
+
+/// Build the netlist of a complete `bits`-bit SNG: LFSR (DFF ring with XOR
+/// feedback) + the chosen PCC (Fig. 3).
+///
+/// Primary inputs: the X code bits (LSB first), then a 1-bit `seed_in` that
+/// XORs into the feedback — pulsing it once kicks the register out of the
+/// absorbing all-zero reset state (the hardware equivalent of a preset pin).
+pub fn build_netlist(kind: PccKind, bits: u32) -> Netlist {
+    let mut nl = Netlist::new(format!("sng_{kind:?}_{bits}b"));
+    let x = nl.inputs(bits as usize);
+    let seed_in = nl.input();
+
+    // DFF ring. The feedback net only exists after the tap XOR tree is
+    // built, so stage 0 is created with a placeholder D and rewired below.
+    let placeholder = nl.constant(false);
+    let mut qs: Vec<crate::netlist::NetId> = Vec::with_capacity(bits as usize);
+    let mut d = placeholder;
+    for _ in 0..bits {
+        let q = nl.dff(d);
+        qs.push(q);
+        d = q;
+    }
+    // Feedback = XOR of tap-stage Qs (same primitive polynomials as the
+    // behavioral `Lfsr`), XORed with seed_in.
+    let tap_qs: Vec<_> = (0..bits)
+        .filter(|i| (lfsr_tap_mask(bits) >> i) & 1 == 1)
+        .map(|i| qs[i as usize])
+        .collect();
+    let mut fb = tap_qs[0];
+    for &t in &tap_qs[1..] {
+        fb = nl.xor2(fb, t);
+    }
+    fb = nl.xor2(fb, seed_in);
+    nl.rewire_gate_input(0, 0, fb); // close the ring at DFF_0.D
+
+    // PCC consuming the LFSR state as R.
+    let pcc_nl = pcc::build_netlist(kind, bits);
+    let mut bind: Vec<_> = x.clone();
+    bind.extend(qs.iter().copied());
+    let outs = nl.absorb(&pcc_nl, &bind);
+    nl.mark_output(outs[0]);
+    nl
+}
+
+/// Tap mask of the primitive polynomial used for width `bits` — kept in
+/// sync with [`crate::sc::lfsr`] (asserted by tests replaying the netlist
+/// against the behavioral LFSR).
+fn lfsr_tap_mask(bits: u32) -> u32 {
+    const TAPS: [(u32, u32); 14] = [
+        (3, 0b110),
+        (4, 0b1100),
+        (5, 0b10100),
+        (6, 0b110000),
+        (7, 0b1100000),
+        (8, 0b10111000),
+        (9, 0b100010000),
+        (10, 0b1001000000),
+        (11, 0b10100000000),
+        (12, 0b111000001000),
+        (13, 0b1110010000000),
+        (14, 0b11100000000010),
+        (15, 0b110000000000000),
+        (16, 0b1101000000001000),
+    ];
+    TAPS.iter()
+        .find(|&&(b, _)| b == bits)
+        .unwrap_or_else(|| panic!("no primitive polynomial for {bits}-bit LFSR"))
+        .1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sc::{dequantize_unipolar, quantize_unipolar};
+
+    #[test]
+    fn sng_encodes_values_over_full_period() {
+        // Over one full LFSR period, a comparator SNG produces exactly
+        // x ones out of 2^n − 1 cycles (R takes every non-zero value once).
+        let bits = 8;
+        for &v in &[0.125f64, 0.5, 0.9] {
+            let x = quantize_unipolar(v, bits);
+            let mut sng = Sng::new(bits, PccKind::Comparator, 1);
+            let len = (1usize << bits) - 1;
+            let bs = sng.generate(x, len);
+            // X > R for R in 1..=255 happens exactly x−1 times... R covers
+            // 1..255 (no zero) ⇒ ones = #{r : r < x, r ≥ 1} = x−1 for x ≥ 1.
+            let expected = x.saturating_sub(1);
+            assert_eq!(bs.count_ones(), expected, "v={v}");
+            let err = (bs.value_unipolar() - dequantize_unipolar(x, bits)).abs();
+            assert!(err < 2.0 / len as f64);
+        }
+    }
+
+    #[test]
+    fn correlated_generation_yields_scc_one() {
+        let mut sng = Sng::new(8, PccKind::Comparator, 7);
+        let streams = sng.generate_correlated(&[60, 180], 255);
+        assert!(streams[0].scc(&streams[1]) > 0.99);
+        // And OR gives max, not sum (the [29] trick).
+        let or = streams[0].or(&streams[1]);
+        assert!((or.value_unipolar() - streams[1].value_unipolar()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shared_rns_streams_decorrelated_enough_to_multiply() {
+        let mut rns = SharedRns::new(10, 33);
+        let len = 1023;
+        let a_code = 3 * 1024 / 4; // 0.75
+        let b_code = 1024 / 2; // 0.5
+        let streams = rns.generate_shuffled(PccKind::Comparator, &[a_code, b_code], len);
+        let prod = streams[0].and(&streams[1]).value_unipolar();
+        assert!((prod - 0.375).abs() < 0.06, "prod={prod}");
+    }
+
+    #[test]
+    fn sng_netlist_matches_behavioral_sequence() {
+        use crate::sim::Evaluator;
+        let bits = 4;
+        for kind in PccKind::ALL {
+            for x in [0u32, 0b1010, 0b1111] {
+                let nl = build_netlist(kind, bits);
+                let mut ev = Evaluator::new(&nl);
+                // Pulse seed_in on cycle 0: the ring leaves the absorbing
+                // all-zero state into state 1 — the behavioral LFSR's seed.
+                let mut behavioral = Sng::new(bits, kind, 1);
+                let len = 40;
+                let reference = behavioral.generate(x, len);
+                let mut pins: Vec<bool> = (0..bits).map(|i| (x >> i) & 1 == 1).collect();
+                pins.push(true); // seed_in, cycle 0 only
+                ev.set_inputs(&pins);
+                ev.propagate();
+                ev.tick();
+                *pins.last_mut().unwrap() = false;
+                for t in 0..len {
+                    ev.set_inputs(&pins);
+                    ev.propagate();
+                    assert_eq!(
+                        ev.outputs()[0],
+                        reference.get(t),
+                        "{kind:?} x={x} cycle {t}"
+                    );
+                    ev.tick();
+                }
+            }
+        }
+    }
+}

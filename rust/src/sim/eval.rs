@@ -1,0 +1,309 @@
+//! Cycle-based logic evaluation of a [`Netlist`].
+//!
+//! Zero-delay semantics: within a cycle, combinational gates settle in
+//! topological order; [`Evaluator::tick`] models the clock edge updating all
+//! DFFs simultaneously. Combinational loops are rejected at construction.
+
+use crate::netlist::{NetId, Netlist};
+use crate::tech::CellKind;
+
+/// Evaluates a netlist cycle by cycle.
+pub struct Evaluator<'a> {
+    nl: &'a Netlist,
+    /// Combinational gate indices in dependency order.
+    topo: Vec<usize>,
+    /// DFF gate indices.
+    dffs: Vec<usize>,
+    /// Current value of every net.
+    values: Vec<bool>,
+}
+
+impl<'a> Evaluator<'a> {
+    /// Build an evaluator; panics if the combinational part has a cycle or a
+    /// gate input is never driven.
+    pub fn new(nl: &'a Netlist) -> Self {
+        let n_nets = nl.num_nets();
+        let mut driven = vec![false; n_nets];
+        for &pi in &nl.primary_inputs {
+            driven[pi.0 as usize] = true;
+        }
+        for &(c, _) in &nl.constants {
+            driven[c.0 as usize] = true;
+        }
+        let mut dffs = Vec::new();
+        for (gi, g) in nl.gates().iter().enumerate() {
+            if g.kind == CellKind::Dff {
+                dffs.push(gi);
+                for &o in &g.outputs {
+                    driven[o.0 as usize] = true;
+                }
+            }
+        }
+        // Kahn over combinational gates.
+        let mut topo = Vec::with_capacity(nl.num_gates() - dffs.len());
+        let mut placed = vec![false; nl.num_gates()];
+        for &d in &dffs {
+            placed[d] = true;
+        }
+        loop {
+            let mut progressed = false;
+            for (gi, g) in nl.gates().iter().enumerate() {
+                if placed[gi] {
+                    continue;
+                }
+                if g.inputs.iter().all(|i| driven[i.0 as usize]) {
+                    for &o in &g.outputs {
+                        driven[o.0 as usize] = true;
+                    }
+                    topo.push(gi);
+                    placed[gi] = true;
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        assert!(
+            placed.iter().all(|&p| p),
+            "netlist '{}' has a combinational cycle or undriven gate input",
+            nl.name
+        );
+
+        let mut values = vec![false; n_nets];
+        for &(c, v) in &nl.constants {
+            values[c.0 as usize] = v;
+        }
+        Evaluator { nl, topo, dffs, values }
+    }
+
+    /// Set primary-input values (must match the PI count).
+    pub fn set_inputs(&mut self, vals: &[bool]) {
+        assert_eq!(vals.len(), self.nl.primary_inputs.len(), "PI arity mismatch");
+        for (&pi, &v) in self.nl.primary_inputs.iter().zip(vals) {
+            self.values[pi.0 as usize] = v;
+        }
+    }
+
+    /// Settle the combinational logic from current PI + DFF state.
+    pub fn propagate(&mut self) {
+        for &gi in &self.topo {
+            let g = &self.nl.gates()[gi];
+            let v = |n: NetId| self.values[n.0 as usize];
+            match g.kind {
+                CellKind::Inv => {
+                    self.values[g.outputs[0].0 as usize] = !v(g.inputs[0]);
+                }
+                CellKind::Buf => {
+                    self.values[g.outputs[0].0 as usize] = v(g.inputs[0]);
+                }
+                CellKind::Nand2 => {
+                    self.values[g.outputs[0].0 as usize] = !(v(g.inputs[0]) & v(g.inputs[1]));
+                }
+                CellKind::Nor2 => {
+                    self.values[g.outputs[0].0 as usize] = !(v(g.inputs[0]) | v(g.inputs[1]));
+                }
+                CellKind::And2 => {
+                    self.values[g.outputs[0].0 as usize] = v(g.inputs[0]) & v(g.inputs[1]);
+                }
+                CellKind::Or2 => {
+                    self.values[g.outputs[0].0 as usize] = v(g.inputs[0]) | v(g.inputs[1]);
+                }
+                CellKind::Xor2 => {
+                    self.values[g.outputs[0].0 as usize] = v(g.inputs[0]) ^ v(g.inputs[1]);
+                }
+                CellKind::Xnor2 => {
+                    self.values[g.outputs[0].0 as usize] = !(v(g.inputs[0]) ^ v(g.inputs[1]));
+                }
+                CellKind::Mux21 => {
+                    let (d0, d1, s) = (v(g.inputs[0]), v(g.inputs[1]), v(g.inputs[2]));
+                    self.values[g.outputs[0].0 as usize] = if s { d1 } else { d0 };
+                }
+                // prog = 0 → NAND, prog = 1 → NOR (Fig. 6b).
+                CellKind::NandNor => {
+                    let (a, b, p) = (v(g.inputs[0]), v(g.inputs[1]), v(g.inputs[2]));
+                    self.values[g.outputs[0].0 as usize] =
+                        if p { !(a | b) } else { !(a & b) };
+                }
+                CellKind::Xor3 => {
+                    self.values[g.outputs[0].0 as usize] =
+                        v(g.inputs[0]) ^ v(g.inputs[1]) ^ v(g.inputs[2]);
+                }
+                CellKind::Maj3 => {
+                    let (a, b, c) = (v(g.inputs[0]), v(g.inputs[1]), v(g.inputs[2]));
+                    self.values[g.outputs[0].0 as usize] = (a & b) | (a & c) | (b & c);
+                }
+                CellKind::HalfAdder => {
+                    let (a, b) = (v(g.inputs[0]), v(g.inputs[1]));
+                    self.values[g.outputs[0].0 as usize] = a ^ b;
+                    self.values[g.outputs[1].0 as usize] = a & b;
+                }
+                CellKind::FullAdder => {
+                    let (a, b, c) = (v(g.inputs[0]), v(g.inputs[1]), v(g.inputs[2]));
+                    self.values[g.outputs[0].0 as usize] = a ^ b ^ c;
+                    self.values[g.outputs[1].0 as usize] = (a & b) | (a & c) | (b & c);
+                }
+                CellKind::Dff => unreachable!("DFFs are excluded from the topo order"),
+            }
+        }
+    }
+
+    /// Clock edge: every DFF's Q takes its D value (simultaneously).
+    pub fn tick(&mut self) {
+        let sampled: Vec<(u32, bool)> = self
+            .dffs
+            .iter()
+            .map(|&gi| {
+                let g = &self.nl.gates()[gi];
+                (g.outputs[0].0, self.values[g.inputs[0].0 as usize])
+            })
+            .collect();
+        for (q, v) in sampled {
+            self.values[q as usize] = v;
+        }
+    }
+
+    /// Value of one net.
+    pub fn value(&self, net: NetId) -> bool {
+        self.values[net.0 as usize]
+    }
+
+    /// Current primary-output values.
+    pub fn outputs(&self) -> Vec<bool> {
+        self.nl.primary_outputs.iter().map(|&n| self.value(n)).collect()
+    }
+
+    /// Snapshot of every net (for activity counting).
+    pub fn net_values(&self) -> &[bool] {
+        &self.values
+    }
+
+    /// Reset all DFF state (and every other net) to 0, re-applying constants.
+    pub fn reset(&mut self) {
+        self.values.iter_mut().for_each(|v| *v = false);
+        for &(c, v) in &self.nl.constants {
+            self.values[c.0 as usize] = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combinational_gates_truth_tables() {
+        let mut nl = Netlist::new("tt");
+        let a = nl.input();
+        let b = nl.input();
+        let c = nl.input();
+        let outs = vec![
+            nl.nand2(a, b),
+            nl.nor2(a, b),
+            nl.xor2(a, b),
+            nl.mux21(a, b, c),
+            nl.nandnor(a, b, c),
+            nl.xor3(a, b, c),
+            nl.maj3(a, b, c),
+        ];
+        for &o in &outs {
+            nl.mark_output(o);
+        }
+        let mut ev = Evaluator::new(&nl);
+        for bits in 0..8u32 {
+            let (a, b, c) = (bits & 1 != 0, bits & 2 != 0, bits & 4 != 0);
+            ev.set_inputs(&[a, b, c]);
+            ev.propagate();
+            let o = ev.outputs();
+            assert_eq!(o[0], !(a & b), "nand {bits}");
+            assert_eq!(o[1], !(a | b), "nor {bits}");
+            assert_eq!(o[2], a ^ b, "xor {bits}");
+            assert_eq!(o[3], if c { b } else { a }, "mux {bits}");
+            assert_eq!(o[4], if c { !(a | b) } else { !(a & b) }, "nandnor {bits}");
+            assert_eq!(o[5], a ^ b ^ c, "xor3 {bits}");
+            assert_eq!(o[6], (a & b) | (a & c) | (b & c), "maj3 {bits}");
+        }
+    }
+
+    #[test]
+    fn adders_match_arithmetic() {
+        let mut nl = Netlist::new("fa");
+        let ins = nl.inputs(3);
+        let (s, c) = nl.full_adder_cell(ins[0], ins[1], ins[2]);
+        let (s2, c2) = nl.full_adder_rfet(ins[0], ins[1], ins[2]);
+        for n in [s, c, s2, c2] {
+            nl.mark_output(n);
+        }
+        let mut ev = Evaluator::new(&nl);
+        for bits in 0..8u32 {
+            let v = [bits & 1 != 0, bits & 2 != 0, bits & 4 != 0];
+            ev.set_inputs(&v);
+            ev.propagate();
+            let o = ev.outputs();
+            let total = v.iter().filter(|&&x| x).count();
+            assert_eq!(o[0] as usize + 2 * (o[1] as usize), total, "cell FA");
+            assert_eq!(o[2] as usize + 2 * (o[3] as usize), total, "RFET FA");
+        }
+    }
+
+    #[test]
+    fn dff_holds_state_across_cycles() {
+        let mut nl = Netlist::new("reg");
+        let d = nl.input();
+        let q = nl.dff(d);
+        nl.mark_output(q);
+        let mut ev = Evaluator::new(&nl);
+        ev.set_inputs(&[true]);
+        ev.propagate();
+        assert_eq!(ev.outputs(), vec![false], "Q before first edge");
+        ev.tick();
+        ev.set_inputs(&[false]);
+        ev.propagate();
+        assert_eq!(ev.outputs(), vec![true], "Q holds sampled 1");
+        ev.tick();
+        ev.propagate();
+        assert_eq!(ev.outputs(), vec![false]);
+    }
+
+    #[test]
+    fn dff_chain_is_a_shift_register() {
+        let mut nl = Netlist::new("shift2");
+        let d = nl.input();
+        let q0 = nl.dff(d);
+        let q1 = nl.dff(q0);
+        nl.mark_output(q1);
+        let mut ev = Evaluator::new(&nl);
+        let pattern = [true, false, true, true, false];
+        let mut seen = Vec::new();
+        for &p in &pattern {
+            ev.set_inputs(&[p]);
+            ev.propagate();
+            seen.push(ev.outputs()[0]);
+            ev.tick();
+        }
+        // Two-stage delay: outputs are [0, 0, pattern...].
+        assert_eq!(seen, vec![false, false, true, false, true]);
+    }
+
+    #[test]
+    fn absorbed_netlists_evaluate() {
+        let mut inner = Netlist::new("fa");
+        let ins = inner.inputs(3);
+        let (s, c) = inner.full_adder_cell(ins[0], ins[1], ins[2]);
+        inner.mark_output(s);
+        inner.mark_output(c);
+
+        let mut outer = Netlist::new("two_fa");
+        let pins = outer.inputs(3);
+        let first = outer.absorb(&inner, &pins);
+        let second = outer.absorb(&inner, &[first[0], first[1], pins[2]]);
+        for &n in &second {
+            outer.mark_output(n);
+        }
+        let mut ev = Evaluator::new(&outer);
+        ev.set_inputs(&[true, true, true]);
+        ev.propagate();
+        // FA(1,1,1) = (s=1, c=1); FA(1,1,1) again = (1,1).
+        assert_eq!(ev.outputs(), vec![true, true]);
+    }
+}

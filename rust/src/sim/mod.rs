@@ -1,0 +1,110 @@
+//! Gate-level characterization: logic evaluation ([`eval`]), static timing
+//! ([`timing`]), and activity-based power ([`power`]) over
+//! [`crate::netlist::Netlist`] structures — the stand-in for the paper's
+//! Cadence Genus flow (see DESIGN.md §Substitutions).
+
+pub mod eval;
+pub mod power;
+pub mod timing;
+
+pub use eval::Evaluator;
+pub use power::{estimate as estimate_power, PowerReport};
+pub use timing::{analyze as analyze_timing, TimingReport};
+
+use crate::netlist::Netlist;
+use crate::tech::CellLibrary;
+
+/// Area/delay/energy summary of one block under one technology — the unit
+/// of comparison in the paper's Table I / Table II.
+#[derive(Debug, Clone)]
+pub struct BlockReport {
+    /// Block name.
+    pub name: String,
+    /// Technology name.
+    pub tech: String,
+    /// Cell area × wiring overhead, µm².
+    pub area_um2: f64,
+    /// Critical path, ps.
+    pub delay_ps: f64,
+    /// Average switching energy per cycle, fJ.
+    pub energy_per_cycle_fj: f64,
+    /// Leakage, nW.
+    pub leakage_nw: f64,
+    /// Total transistors.
+    pub transistors: u64,
+    /// Cell instances.
+    pub num_gates: usize,
+}
+
+/// Total cell area of a netlist under a library (µm², incl. wiring factor).
+pub fn area(nl: &Netlist, lib: &CellLibrary) -> f64 {
+    nl.gates().iter().map(|g| lib.cell(g.kind).area_um2).sum::<f64>() * lib.wiring_overhead
+}
+
+/// Total leakage (nW).
+pub fn leakage(nl: &Netlist, lib: &CellLibrary) -> f64 {
+    nl.gates().iter().map(|g| lib.cell(g.kind).leakage_nw).sum()
+}
+
+/// Full characterization: area + static timing + activity power under the
+/// provided stimulus (see [`power::estimate`]).
+pub fn characterize<F>(
+    nl: &Netlist,
+    lib: &CellLibrary,
+    cycles: usize,
+    stimulus: F,
+) -> BlockReport
+where
+    F: FnMut(usize, &mut Vec<bool>),
+{
+    let t = timing::analyze(nl, lib);
+    let p = power::estimate(nl, lib, cycles, stimulus);
+    BlockReport {
+        name: nl.name.clone(),
+        tech: lib.kind.to_string(),
+        area_um2: area(nl, lib),
+        delay_ps: t.critical_path_ps,
+        energy_per_cycle_fj: p.energy_per_cycle_fj,
+        leakage_nw: p.leakage_nw,
+        transistors: nl.transistors(lib),
+        num_gates: nl.num_gates(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tech::CellKind;
+
+    #[test]
+    fn area_sums_cells() {
+        let lib = CellLibrary::finfet10();
+        let mut nl = Netlist::new("pair");
+        let a = nl.input();
+        let x = nl.inv(a);
+        let y = nl.inv(x);
+        nl.mark_output(y);
+        assert!((area(&nl, &lib) - 2.0 * lib.cell(CellKind::Inv).area_um2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn characterize_produces_consistent_report() {
+        let lib = CellLibrary::rfet10();
+        let mut nl = Netlist::new("fa_rfet");
+        let ins = nl.inputs(3);
+        let (s, c) = nl.full_adder_rfet(ins[0], ins[1], ins[2]);
+        nl.mark_output(s);
+        nl.mark_output(c);
+        let mut t = 0u32;
+        let rep = characterize(&nl, &lib, 500, |_, pi| {
+            t = t.wrapping_mul(1664525).wrapping_add(1013904223);
+            for (i, p) in pi.iter_mut().enumerate() {
+                *p = (t >> (i + 3)) & 1 == 1;
+            }
+        });
+        assert!(rep.area_um2 > 0.0);
+        assert!(rep.delay_ps > 0.0);
+        assert!(rep.energy_per_cycle_fj > 0.0);
+        assert_eq!(rep.num_gates, 4); // xor3 + maj3 + 2 inv
+    }
+}

@@ -1,0 +1,154 @@
+//! Static timing analysis: longest combinational path through a netlist
+//! under a cell library, with a linear fanout-load delay model.
+//!
+//! Endpoints are primary outputs and DFF D pins; startpoints are primary
+//! inputs, constants, and DFF Q pins — i.e. the reported number is the
+//! minimum clock period the block supports (ignoring setup margin, which
+//! Genus folds into the library; our cells are calibrated at block level so
+//! the margin is absorbed by calibration).
+
+use crate::netlist::Netlist;
+use crate::sim::eval::Evaluator;
+use crate::tech::{CellKind, CellLibrary};
+
+/// Result of static timing analysis.
+#[derive(Debug, Clone)]
+pub struct TimingReport {
+    /// Longest path in picoseconds (min clock period).
+    pub critical_path_ps: f64,
+    /// Arrival time of every primary output, in `primary_outputs` order.
+    pub output_arrivals_ps: Vec<f64>,
+}
+
+/// Compute the longest-path arrival times.
+pub fn analyze(nl: &Netlist, lib: &CellLibrary) -> TimingReport {
+    // Reuse the evaluator's topological order by rebuilding it here — the
+    // construction is cheap relative to characterization runs.
+    let _check = Evaluator::new(nl); // validates acyclicity / driven-ness
+    let fanouts = nl.fanouts();
+    let mut arrival = vec![0.0f64; nl.num_nets()];
+
+    // Topological pass identical to the evaluator's: process gates whose
+    // inputs are all resolved. DFF Q pins start at t=0.
+    let mut resolved = vec![false; nl.num_nets()];
+    for &pi in &nl.primary_inputs {
+        resolved[pi.0 as usize] = true;
+    }
+    for &(c, _) in &nl.constants {
+        resolved[c.0 as usize] = true;
+    }
+    let mut placed = vec![false; nl.num_gates()];
+    let mut dff_d_arrivals: Vec<f64> = Vec::new();
+    for (gi, g) in nl.gates().iter().enumerate() {
+        if g.kind == CellKind::Dff {
+            placed[gi] = true;
+            for &o in &g.outputs {
+                resolved[o.0 as usize] = true;
+            }
+        }
+        let _ = gi;
+    }
+    loop {
+        let mut progressed = false;
+        for (gi, g) in nl.gates().iter().enumerate() {
+            if placed[gi] || !g.inputs.iter().all(|i| resolved[i.0 as usize]) {
+                continue;
+            }
+            let t_in = g
+                .inputs
+                .iter()
+                .map(|i| arrival[i.0 as usize])
+                .fold(0.0f64, f64::max);
+            let cell = lib.cell(g.kind);
+            for &o in &g.outputs {
+                let d = cell.delay_at_fanout(fanouts[o.0 as usize].max(1));
+                arrival[o.0 as usize] = t_in + d;
+                resolved[o.0 as usize] = true;
+            }
+            placed[gi] = true;
+            progressed = true;
+        }
+        if !progressed {
+            break;
+        }
+    }
+
+    // Endpoint collection: PO arrivals and DFF D-pin arrivals.
+    for g in nl.gates() {
+        if g.kind == CellKind::Dff {
+            // Add the DFF's own setup/clk-to-q as its cell delay.
+            let setup = lib.cell(CellKind::Dff).delay_ps;
+            dff_d_arrivals.push(arrival[g.inputs[0].0 as usize] + setup);
+        }
+    }
+    let output_arrivals_ps: Vec<f64> =
+        nl.primary_outputs.iter().map(|o| arrival[o.0 as usize]).collect();
+    let critical_path_ps = output_arrivals_ps
+        .iter()
+        .chain(dff_d_arrivals.iter())
+        .fold(0.0f64, |m, &t| m.max(t));
+    TimingReport { critical_path_ps, output_arrivals_ps }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_delay_adds_up() {
+        // 8-stage MUX chain at fanout 1 ⇒ exactly 8 × MUX delay.
+        let lib = CellLibrary::finfet10();
+        let mut nl = Netlist::new("mux_chain");
+        let mut o = nl.constant(false);
+        for _ in 0..8 {
+            let x = nl.input();
+            let r = nl.input();
+            o = nl.mux21(o, x, r);
+        }
+        nl.mark_output(o);
+        let rep = analyze(&nl, &lib);
+        let per_stage = lib.cell(CellKind::Mux21).delay_ps;
+        assert!((rep.critical_path_ps - 8.0 * per_stage).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fanout_increases_delay() {
+        let lib = CellLibrary::finfet10();
+        let mut single = Netlist::new("fo1");
+        let a = single.input();
+        let x = single.inv(a);
+        let y = single.inv(x);
+        single.mark_output(y);
+
+        let mut multi = Netlist::new("fo3");
+        let a = multi.input();
+        let x = multi.inv(a);
+        let y = multi.inv(x);
+        let z1 = multi.inv(x);
+        let z2 = multi.inv(x);
+        multi.mark_output(y);
+        multi.mark_output(z1);
+        multi.mark_output(z2);
+
+        assert!(
+            analyze(&multi, &lib).critical_path_ps > analyze(&single, &lib).critical_path_ps
+        );
+    }
+
+    #[test]
+    fn dff_d_pin_is_an_endpoint() {
+        let lib = CellLibrary::finfet10();
+        let mut nl = Netlist::new("reg_path");
+        let a = nl.input();
+        let mut x = a;
+        for _ in 0..5 {
+            x = nl.inv(x);
+        }
+        let q = nl.dff(x);
+        nl.mark_output(q);
+        let rep = analyze(&nl, &lib);
+        // Path: 5 inverters + DFF setup — must exceed the inverter chain alone.
+        let inv = lib.cell(CellKind::Inv).delay_ps;
+        assert!(rep.critical_path_ps >= 5.0 * inv);
+    }
+}

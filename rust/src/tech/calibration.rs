@@ -1,0 +1,99 @@
+//! Calibration targets and scaling factors.
+//!
+//! The paper characterizes its blocks with Cadence Genus on two libraries we
+//! do not have. We therefore *back-solve* per-cell parameters from the
+//! paper's own block-level results (Table I) plus the stated device facts
+//! (RFET on-current ≈ ¼ of FinFET, larger per-device footprint, fewer
+//! transistors per logic function, much lower leakage). The derivation:
+//!
+//! * **FinFET 8-bit PCC** (MUX-chain, Fig. 4b) = 8 × MUX21. Table I gives
+//!   2.21 µm² / 242 ps / 4.11 fJ ⇒ MUX21 ≈ 0.276 µm², ≈30 ps/stage. This is
+//!   consistent with ASAP7's MUX21 (~0.13 µm²) scaled by the paper's ×2.1.
+//! * **RFET 8-bit PCC** (NAND-NOR chain, Fig. 6c, Lemma 1) = 8 × NandNor +
+//!   4 × Inv (inverter-insertion rule, N even ⇒ 4 inverters). Table I gives
+//!   2.01 µm² / 142 ps / 2.89 fJ ⇒ NandNor ≈ 0.214 µm², ≈17.8 ps/stage.
+//!   During a conversion the X inputs are *static* (held for the whole
+//!   bitstream), so the Xi inverters contribute ~no switching energy — the
+//!   2.89 fJ is carried by the 8 chain gates.
+//! * **25-input APC** (Fig. 8a construction): our Wallace-style reduction
+//!   uses 20 FA + 2 HA for the 25→5 parallel counter plus a 10-bit
+//!   accumulator (4 FA + 6 HA + 10 DFF); totals 24 FA + 8 HA + 10 DFF.
+//!   Table I's FinFET row (24.37 µm² / 462 ps / 40.14 fJ) pins the FinFET
+//!   FA cell; the RFET row (26.15 / 593 / 35.88) pins XOR3 + MAJ3 (the
+//!   compact RFET FA of Fig. 8c) with the stated slower-but-leaner trend.
+//!
+//! Table II and Fig. 13 are *predictions* of these calibrated cells — they
+//! are validation, not calibration (see EXPERIMENTS.md).
+
+/// Paper's ASAP7→10 nm area scaling (×2.1), §V.
+pub const FINFET_AREA_SCALE: f64 = 2.1;
+/// Paper's ASAP7→10 nm delay scaling (×1.3), §V.
+pub const FINFET_DELAY_SCALE: f64 = 1.3;
+/// Paper's ASAP7→10 nm power/energy scaling (×1.4), §V.
+pub const FINFET_POWER_SCALE: f64 = 1.4;
+
+/// One row of Table I (and the channel row of Table II).
+#[derive(Debug, Clone, Copy)]
+pub struct BlockTarget {
+    pub area_um2: f64,
+    pub delay_ps: f64,
+    pub energy_fj: f64,
+}
+
+/// Table I, FinFET 10 nm, 8-bit PCC.
+pub const TABLE1_FINFET_PCC8: BlockTarget =
+    BlockTarget { area_um2: 2.21, delay_ps: 242.0, energy_fj: 4.11 };
+/// Table I, RFET 10 nm, 8-bit PCC.
+pub const TABLE1_RFET_PCC8: BlockTarget =
+    BlockTarget { area_um2: 2.01, delay_ps: 142.0, energy_fj: 2.89 };
+/// Table I, FinFET 10 nm, 25-input APC.
+pub const TABLE1_FINFET_APC25: BlockTarget =
+    BlockTarget { area_um2: 24.37, delay_ps: 462.0, energy_fj: 40.14 };
+/// Table I, RFET 10 nm, 25-input APC.
+pub const TABLE1_RFET_APC25: BlockTarget =
+    BlockTarget { area_um2: 26.15, delay_ps: 593.0, energy_fj: 35.88 };
+
+/// Table II, FinFET channel: 2475 µm², 0.95 ns min clock, 4.30 pJ/cycle.
+pub const TABLE2_FINFET_CHANNEL: BlockTarget =
+    BlockTarget { area_um2: 2475.0, delay_ps: 950.0, energy_fj: 4300.0 };
+/// Table II, RFET channel: 2359 µm², 0.88 ns min clock, 3.07 pJ/cycle.
+pub const TABLE2_RFET_CHANNEL: BlockTarget =
+    BlockTarget { area_um2: 2359.0, delay_ps: 880.0, energy_fj: 3070.0 };
+
+/// Relative tolerance used by the calibration regression tests for Table I
+/// (cells were back-solved from these rows, so they must land tightly).
+pub const CALIBRATION_RTOL: f64 = 0.05;
+/// Looser tolerance for the *predicted* rows (Table II / Fig. 13): the
+/// paper's channel includes glue logic we model structurally, so we accept
+/// a wider band while asserting the FinFET-vs-RFET *ratios* tightly.
+pub const PREDICTION_RTOL: f64 = 0.25;
+
+/// Relative-error helper used across calibration tests and benches.
+pub fn rel_err(measured: f64, target: f64) -> f64 {
+    (measured - target).abs() / target.abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_err_basics() {
+        assert!(rel_err(1.0, 1.0) < 1e-12);
+        assert!((rel_err(1.1, 1.0) - 0.1).abs() < 1e-12);
+        assert!((rel_err(0.9, 1.0) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn targets_match_paper_gains() {
+        // Table I reports gains: PCC area 9.1%, delay 41.6%, energy 29.7%;
+        // APC area -7.2%, delay -28.4%, energy 10.6%. Check our transcription.
+        let g = |f: f64, r: f64| (f - r) / f;
+        assert!((g(TABLE1_FINFET_PCC8.area_um2, TABLE1_RFET_PCC8.area_um2) - 0.091).abs() < 0.005);
+        assert!((g(TABLE1_FINFET_PCC8.delay_ps, TABLE1_RFET_PCC8.delay_ps) - 0.416).abs() < 0.005);
+        assert!((g(TABLE1_FINFET_PCC8.energy_fj, TABLE1_RFET_PCC8.energy_fj) - 0.297).abs() < 0.005);
+        assert!((g(TABLE1_FINFET_APC25.area_um2, TABLE1_RFET_APC25.area_um2) + 0.072).abs() < 0.005);
+        assert!((g(TABLE1_FINFET_APC25.delay_ps, TABLE1_RFET_APC25.delay_ps) + 0.284).abs() < 0.005);
+        assert!((g(TABLE1_FINFET_APC25.energy_fj, TABLE1_RFET_APC25.energy_fj) - 0.106).abs() < 0.005);
+    }
+}

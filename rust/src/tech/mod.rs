@@ -1,0 +1,300 @@
+//! Technology layer: standard-cell library models for the two technologies
+//! the paper compares — a 10 nm three-independent-gate (TIG) RFET library
+//! (after Gauchi et al. [38]) and a 10 nm FinFET library obtained by scaling
+//! ASAP7 [39] with the paper's factors (area ×2.1, delay ×1.3, power ×1.4).
+//!
+//! This module replaces the role Cadence Genus + the vendor libraries play in
+//! the paper: it supplies per-cell area / delay / switching-energy / leakage
+//! numbers that the [`crate::sim`] estimator rolls up over
+//! [`crate::netlist`] structures. Calibration of the base values against the
+//! paper's Table I is documented in [`calibration`].
+
+pub mod calibration;
+pub mod finfet;
+pub mod rfet;
+pub mod sram;
+
+use std::fmt;
+
+/// The cell kinds used by the netlist builders in [`crate::sc`].
+///
+/// Both libraries implement the plain CMOS-style cells; the reconfigurable
+/// compound cells ([`CellKind::NandNor`], [`CellKind::Xor3`],
+/// [`CellKind::Maj3`]) exist only in the RFET library — asking the FinFET
+/// library for them is a logic error and panics (the paper's FinFET designs
+/// never use them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum CellKind {
+    /// Inverter.
+    Inv,
+    /// Non-inverting buffer.
+    Buf,
+    /// 2-input NAND.
+    Nand2,
+    /// 2-input NOR.
+    Nor2,
+    /// 2-input AND.
+    And2,
+    /// 2-input OR.
+    Or2,
+    /// 2-input XOR.
+    Xor2,
+    /// 2-input XNOR.
+    Xnor2,
+    /// 2:1 multiplexer, `inputs = [d0, d1, sel]`.
+    Mux21,
+    /// D flip-flop (positive edge).
+    Dff,
+    /// Half adder, `outputs = [sum, carry]`.
+    HalfAdder,
+    /// Full adder, `outputs = [sum, carry]`.
+    FullAdder,
+    /// RFET reconfigurable NAND/NOR gate, `inputs = [a, b, prog]`;
+    /// `prog = 0` → NAND(a, b), `prog = 1` → NOR(a, b) (Fig. 6b).
+    NandNor,
+    /// RFET 3-input XOR (one stage of the compact full adder, Fig. 8c).
+    Xor3,
+    /// RFET 3-input majority gate (carry stage of the compact FA, Fig. 8c).
+    Maj3,
+}
+
+impl CellKind {
+    /// All kinds, for iteration in tests.
+    pub const ALL: [CellKind; 15] = [
+        CellKind::Inv,
+        CellKind::Buf,
+        CellKind::Nand2,
+        CellKind::Nor2,
+        CellKind::And2,
+        CellKind::Or2,
+        CellKind::Xor2,
+        CellKind::Xnor2,
+        CellKind::Mux21,
+        CellKind::Dff,
+        CellKind::HalfAdder,
+        CellKind::FullAdder,
+        CellKind::NandNor,
+        CellKind::Xor3,
+        CellKind::Maj3,
+    ];
+
+    /// Number of logic inputs the evaluator expects for this cell.
+    pub fn num_inputs(self) -> usize {
+        match self {
+            CellKind::Inv | CellKind::Buf | CellKind::Dff => 1,
+            CellKind::Nand2
+            | CellKind::Nor2
+            | CellKind::And2
+            | CellKind::Or2
+            | CellKind::Xor2
+            | CellKind::Xnor2
+            | CellKind::HalfAdder => 2,
+            CellKind::Mux21
+            | CellKind::FullAdder
+            | CellKind::NandNor
+            | CellKind::Xor3
+            | CellKind::Maj3 => 3,
+        }
+    }
+
+    /// Number of outputs (1 except the adders' sum/carry pairs).
+    pub fn num_outputs(self) -> usize {
+        match self {
+            CellKind::HalfAdder | CellKind::FullAdder => 2,
+            _ => 1,
+        }
+    }
+
+    /// True for the RFET-only reconfigurable compound cells.
+    pub fn rfet_only(self) -> bool {
+        matches!(self, CellKind::NandNor | CellKind::Xor3 | CellKind::Maj3)
+    }
+}
+
+impl fmt::Display for CellKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+/// Characterized parameters of one standard cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellParams {
+    /// Layout area in µm² (includes cell-internal routing).
+    pub area_um2: f64,
+    /// Propagation delay in ps at the library's nominal load.
+    pub delay_ps: f64,
+    /// Additional delay per unit of fanout beyond 1, in ps.
+    pub delay_per_fanout_ps: f64,
+    /// Energy per output transition in fJ (CV² at the library supply).
+    pub switch_energy_fj: f64,
+    /// Static leakage power in nW.
+    pub leakage_nw: f64,
+    /// Transistor count (reporting / sanity checks only).
+    pub transistors: u32,
+}
+
+impl CellParams {
+    /// Effective delay through this cell driving `fanout` loads.
+    pub fn delay_at_fanout(&self, fanout: usize) -> f64 {
+        self.delay_ps + self.delay_per_fanout_ps * fanout.saturating_sub(1) as f64
+    }
+}
+
+/// Which of the paper's two technologies a library models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TechKind {
+    /// ASAP7 scaled to the 10 nm node (area ×2.1, delay ×1.3, power ×1.4).
+    Finfet10,
+    /// Open-source 10 nm TIG 4-nanowire RFET library (Gauchi et al. [38]).
+    Rfet10,
+}
+
+impl fmt::Display for TechKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TechKind::Finfet10 => write!(f, "FinFET 10nm"),
+            TechKind::Rfet10 => write!(f, "RFET 10nm"),
+        }
+    }
+}
+
+/// A characterized standard-cell library.
+#[derive(Debug, Clone)]
+pub struct CellLibrary {
+    /// Which technology this models.
+    pub kind: TechKind,
+    /// Supply voltage in volts (0.7 V FinFET, 0.85 V RFET per the paper §V).
+    pub supply_v: f64,
+    /// Post-synthesis wiring/utilization overhead multiplier applied to the
+    /// summed cell area (Genus-reported area includes routing impact).
+    pub wiring_overhead: f64,
+    cells: Vec<Option<CellParams>>,
+}
+
+impl CellLibrary {
+    pub(crate) fn from_table(
+        kind: TechKind,
+        supply_v: f64,
+        wiring_overhead: f64,
+        table: &[(CellKind, CellParams)],
+    ) -> Self {
+        let mut cells = vec![None; CellKind::ALL.len()];
+        for &(k, p) in table {
+            cells[Self::index(k)] = Some(p);
+        }
+        CellLibrary { kind, supply_v, wiring_overhead, cells }
+    }
+
+    fn index(kind: CellKind) -> usize {
+        CellKind::ALL.iter().position(|&k| k == kind).expect("kind in ALL")
+    }
+
+    /// Whether this library characterizes `kind`.
+    pub fn has(&self, kind: CellKind) -> bool {
+        self.cells[Self::index(kind)].is_some()
+    }
+
+    /// Parameters for `kind` if the library provides the cell.
+    pub fn cell_if(&self, kind: CellKind) -> Option<CellParams> {
+        self.cells[Self::index(kind)]
+    }
+
+    /// Parameters for `kind`.
+    ///
+    /// # Panics
+    /// If the library does not provide the cell (e.g. RFET-only compound
+    /// cells requested from the FinFET library).
+    pub fn cell(&self, kind: CellKind) -> CellParams {
+        self.cells[Self::index(kind)]
+            .unwrap_or_else(|| panic!("{} library has no {kind} cell", self.kind))
+    }
+
+    /// The FinFET 10 nm library (ASAP7 scaled per the paper).
+    pub fn finfet10() -> Self {
+        finfet::library()
+    }
+
+    /// The RFET 10 nm TIG library.
+    pub fn rfet10() -> Self {
+        rfet::library()
+    }
+
+    /// Library for a [`TechKind`].
+    pub fn for_kind(kind: TechKind) -> Self {
+        match kind {
+            TechKind::Finfet10 => Self::finfet10(),
+            TechKind::Rfet10 => Self::rfet10(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finfet_has_all_cmos_cells() {
+        let lib = CellLibrary::finfet10();
+        for k in CellKind::ALL {
+            if k.rfet_only() {
+                assert!(!lib.has(k), "FinFET library must not expose {k}");
+            } else {
+                assert!(lib.has(k), "FinFET library missing {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn rfet_has_reconfigurable_cells() {
+        let lib = CellLibrary::rfet10();
+        for k in [CellKind::NandNor, CellKind::Xor3, CellKind::Maj3] {
+            assert!(lib.has(k));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "has no")]
+    fn finfet_panics_on_rfet_cell() {
+        CellLibrary::finfet10().cell(CellKind::NandNor);
+    }
+
+    #[test]
+    fn all_params_positive() {
+        for lib in [CellLibrary::finfet10(), CellLibrary::rfet10()] {
+            for k in CellKind::ALL {
+                if !lib.has(k) {
+                    continue;
+                }
+                let p = lib.cell(k);
+                assert!(p.area_um2 > 0.0, "{k} area");
+                assert!(p.delay_ps > 0.0, "{k} delay");
+                assert!(p.switch_energy_fj > 0.0, "{k} energy");
+                assert!(p.transistors > 0, "{k} transistors");
+            }
+        }
+    }
+
+    #[test]
+    fn fanout_delay_monotone() {
+        let p = CellLibrary::finfet10().cell(CellKind::Nand2);
+        assert!(p.delay_at_fanout(4) > p.delay_at_fanout(1));
+        assert_eq!(p.delay_at_fanout(1), p.delay_ps);
+    }
+
+    #[test]
+    fn supply_voltages_match_paper() {
+        assert_eq!(CellLibrary::finfet10().supply_v, 0.70);
+        assert_eq!(CellLibrary::rfet10().supply_v, 0.85);
+    }
+
+    #[test]
+    fn rfet_fa_uses_fewer_transistors_than_finfet() {
+        // Paper §III-B: CMOS FA ≈ 28 T, RFET FA = XOR3 + MAJ3 + inverters.
+        let fin = CellLibrary::finfet10();
+        let rf = CellLibrary::rfet10();
+        let rfet_fa =
+            rf.cell(CellKind::Xor3).transistors + rf.cell(CellKind::Maj3).transistors + 2 * rf.cell(CellKind::Inv).transistors;
+        assert!(rfet_fa < fin.cell(CellKind::FullAdder).transistors);
+    }
+}

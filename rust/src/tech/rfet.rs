@@ -1,0 +1,112 @@
+//! RFET 10 nm cell library, modeling the open-source three-independent-gate
+//! (TIG) 4-nanowire RFET standard cells of Gauchi et al. [38].
+//!
+//! Device-level facts from the paper (§II-D, §V) shape the numbers:
+//!
+//! * on-state current ≈ ¼ of the FinFET ⇒ larger per-stage delay for the
+//!   same function;
+//! * larger per-device footprint, but far *fewer* devices per function for
+//!   XOR-family and reconfigurable gates (XOR2 = 4 RFETs, NAND-NOR = 3
+//!   RFETs, Fig. 6b) ⇒ compact compound cells;
+//! * extremely low leakage [33];
+//! * supply 0.85 V (vs 0.7 V FinFET), chosen in §V as the speed/energy
+//!   balance point.
+//!
+//! The NandNor and XOR3/MAJ3 cells are pinned so the NAND-NOR PCC and the
+//! compact-FA APC reproduce Table I (derivation in [`super::calibration`]).
+
+use super::{CellKind, CellLibrary, CellParams, TechKind};
+
+/// RFET 10 nm cell rows: (kind, area µm², delay ps, fanout-slope ps,
+/// switching energy fJ, leakage nW, transistor count). Direct 10 nm values,
+/// no scaling.
+const TABLE: &[(CellKind, f64, f64, f64, f64, f64, u32)] = &[
+    (CellKind::Inv, 0.0750, 11.0, 2.2, 0.150, 0.10, 2),
+    (CellKind::Buf, 0.1100, 14.0, 2.0, 0.220, 0.15, 4),
+    (CellKind::Nand2, 0.1100, 14.0, 2.8, 0.200, 0.18, 4),
+    (CellKind::Nor2, 0.1100, 15.0, 2.9, 0.200, 0.18, 4),
+    (CellKind::And2, 0.1400, 19.0, 2.6, 0.260, 0.22, 6),
+    (CellKind::Or2, 0.1400, 20.0, 2.6, 0.260, 0.22, 6),
+    // TIG RFETs realize XOR/XNOR in 4 devices (vs 12 in CMOS).
+    (CellKind::Xor2, 0.1600, 24.0, 3.0, 0.320, 0.25, 4),
+    (CellKind::Xnor2, 0.1600, 24.0, 3.0, 0.320, 0.25, 4),
+    (CellKind::Mux21, 0.2600, 26.0, 3.0, 0.600, 0.35, 8),
+    (CellKind::Dff, 0.6550, 35.0, 2.5, 0.750, 0.60, 18),
+    (CellKind::HalfAdder, 0.2900, 26.0, 3.0, 0.500, 0.40, 10),
+    // Monolithic FA characterization of the Fig. 8c composite
+    // (XOR3 + MAJ3 + 2 inverters); netlists prefer the explicit composite.
+    (CellKind::FullAdder, 0.7200, 40.0, 3.2, 1.700, 0.55, 14),
+    // Reconfigurable 3-transistor NAND/NOR gate (Fig. 6b); pinned by the
+    // Table I RFET PCC row: (2.01 − 4×Inv)/8 µm², 142/8 ps per stage.
+    (CellKind::NandNor, 0.21375, 17.75, 2.6, 1.110, 0.20, 3),
+    // Compact-FA stages (Fig. 8c); pinned by the Table I RFET APC row.
+    (CellKind::Xor3, 0.3000, 33.5, 3.2, 1.100, 0.28, 6),
+    (CellKind::Maj3, 0.2700, 30.3, 3.2, 0.880, 0.28, 6),
+];
+
+/// Build the RFET 10 nm library.
+pub fn library() -> CellLibrary {
+    let table: Vec<(CellKind, CellParams)> = TABLE
+        .iter()
+        .map(|&(kind, area, delay, slope, energy, leak, t)| {
+            (
+                kind,
+                CellParams {
+                    area_um2: area,
+                    delay_ps: delay,
+                    delay_per_fanout_ps: slope,
+                    switch_energy_fj: energy,
+                    leakage_nw: leak,
+                    transistors: t,
+                },
+            )
+        })
+        .collect();
+    CellLibrary::from_table(TechKind::Rfet10, 0.85, 1.0, &table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tech::CellLibrary;
+
+    #[test]
+    fn nandnor_pcc_backsolve() {
+        let lib = library();
+        let nn = lib.cell(CellKind::NandNor);
+        let inv = lib.cell(CellKind::Inv);
+        // 8 NandNor + 4 Inv must give the Table I RFET PCC area of 2.01 µm².
+        assert!((8.0 * nn.area_um2 + 4.0 * inv.area_um2 - 2.01).abs() < 0.01);
+        assert!((8.0 * nn.delay_ps - 142.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn rfet_leakage_below_finfet() {
+        let rf = library();
+        let fin = CellLibrary::finfet10();
+        for k in [CellKind::Inv, CellKind::Nand2, CellKind::Xor2, CellKind::Dff] {
+            assert!(
+                rf.cell(k).leakage_nw < fin.cell(k).leakage_nw,
+                "RFET {k} leakage should be below FinFET"
+            );
+        }
+    }
+
+    #[test]
+    fn rfet_stage_slower_than_finfet() {
+        // ¼ on-current ⇒ simple gates are slower despite fewer devices.
+        let rf = library();
+        let fin = CellLibrary::finfet10();
+        for k in [CellKind::Inv, CellKind::Nand2, CellKind::FullAdder] {
+            assert!(rf.cell(k).delay_ps > fin.cell(k).delay_ps, "{k}");
+        }
+    }
+
+    #[test]
+    fn xor_family_compact() {
+        // TIG RFET XOR2 uses 4 devices vs 12 in CMOS.
+        let rf = library();
+        assert_eq!(rf.cell(CellKind::Xor2).transistors, 4);
+        assert_eq!(rf.cell(CellKind::NandNor).transistors, 3);
+    }
+}

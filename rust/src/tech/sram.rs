@@ -1,0 +1,81 @@
+//! On-chip SRAM macro model.
+//!
+//! The paper keeps memory in FinFET for *both* systems ("for the RFET-based
+//! accelerator, the memory components still use FinFETs", §V), so a single
+//! FinFET-10 nm SRAM model serves both technology configurations. Table III
+//! reports 10 kB of on-chip memory inside the 0.288/0.299 mm² footprint.
+
+/// A single-port SRAM macro of a given capacity.
+#[derive(Debug, Clone, Copy)]
+pub struct SramMacro {
+    /// Capacity in bytes.
+    pub bytes: usize,
+}
+
+/// FinFET 10 nm high-density bitcell area (µm² per bit).
+pub const BITCELL_AREA_UM2: f64 = 0.040;
+/// Periphery (decoders, sense amps, IO) multiplier over raw bitcell array.
+pub const PERIPHERY_FACTOR: f64 = 2.0;
+/// Dynamic read energy per byte accessed (fJ).
+pub const READ_ENERGY_FJ_PER_BYTE: f64 = 28.0;
+/// Dynamic write energy per byte (fJ).
+pub const WRITE_ENERGY_FJ_PER_BYTE: f64 = 34.0;
+/// Leakage per byte (nW) — FinFET bitcells.
+pub const LEAKAGE_NW_PER_BYTE: f64 = 0.9;
+
+impl SramMacro {
+    /// A macro holding `bytes` bytes.
+    pub fn new(bytes: usize) -> Self {
+        SramMacro { bytes }
+    }
+
+    /// The paper's 10 kB on-chip buffer configuration (Table III).
+    pub fn paper_10kb() -> Self {
+        SramMacro::new(10 * 1024)
+    }
+
+    /// Total macro area in µm² (bitcells + periphery).
+    pub fn area_um2(&self) -> f64 {
+        (self.bytes * 8) as f64 * BITCELL_AREA_UM2 * PERIPHERY_FACTOR
+    }
+
+    /// Energy to read `n` bytes (fJ).
+    pub fn read_energy_fj(&self, n: usize) -> f64 {
+        n as f64 * READ_ENERGY_FJ_PER_BYTE
+    }
+
+    /// Energy to write `n` bytes (fJ).
+    pub fn write_energy_fj(&self, n: usize) -> f64 {
+        n as f64 * WRITE_ENERGY_FJ_PER_BYTE
+    }
+
+    /// Static leakage power (nW).
+    pub fn leakage_nw(&self) -> f64 {
+        self.bytes as f64 * LEAKAGE_NW_PER_BYTE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ten_kb_macro_fits_paper_budget() {
+        let m = SramMacro::paper_10kb();
+        // 10 kB must be a small fraction of the 0.288 mm² die (Table III).
+        assert!(m.area_um2() < 0.05 * 0.288e6);
+        assert!(m.area_um2() > 1000.0);
+    }
+
+    #[test]
+    fn energy_linear_in_bytes() {
+        let m = SramMacro::new(4096);
+        assert_eq!(m.read_energy_fj(10), 10.0 * READ_ENERGY_FJ_PER_BYTE);
+        assert!(m.write_energy_fj(10) > m.read_energy_fj(10));
+    }
+
+    #[test]
+    fn leakage_scales_with_capacity() {
+        assert!(SramMacro::new(2048).leakage_nw() * 2.0 - SramMacro::new(4096).leakage_nw() < 1e-9);
+    }
+}

@@ -1,0 +1,100 @@
+//! Cross-module integration tests: gate netlists vs behavioral models,
+//! calibration regressions, system-level invariants, artifact round-trips.
+
+use scnn::accel::channel::{characterize_apc, characterize_pcc};
+use scnn::accel::layers::NetworkSpec;
+use scnn::accel::pipeline::{schedule_network, ScheduleConfig};
+use scnn::accel::system::{evaluate, sweep_channels, SystemConfig};
+use scnn::accel::memory::MemoryModel;
+use scnn::sc::pcc::{build_netlist, pcc_bit, PccKind};
+use scnn::sim::Evaluator;
+use scnn::tech::calibration as cal;
+use scnn::tech::{CellLibrary, TechKind};
+
+#[test]
+fn table1_full_calibration_regression() {
+    let fin = CellLibrary::finfet10();
+    let rf = CellLibrary::rfet10();
+    let cases = [
+        (characterize_pcc(&fin), cal::TABLE1_FINFET_PCC8),
+        (characterize_pcc(&rf), cal::TABLE1_RFET_PCC8),
+        (characterize_apc(&fin), cal::TABLE1_FINFET_APC25),
+        (characterize_apc(&rf), cal::TABLE1_RFET_APC25),
+    ];
+    for (rep, target) in cases {
+        assert!(cal::rel_err(rep.area_um2, target.area_um2) < 0.06, "{} area", rep.name);
+        assert!(cal::rel_err(rep.delay_ps, target.delay_ps) < 0.06, "{} delay", rep.name);
+        assert!(
+            cal::rel_err(rep.energy_per_cycle_fj, target.energy_fj) < 0.06,
+            "{} energy",
+            rep.name
+        );
+    }
+}
+
+#[test]
+fn paper_headline_gains_hold() {
+    // §VI conclusions: RFET wins area/clock/energy/EDAP/TOPS metrics.
+    let net = NetworkSpec::lenet5();
+    let fin = evaluate(&SystemConfig::paper(TechKind::Finfet10, 8), &net);
+    let rf = evaluate(&SystemConfig::paper(TechKind::Rfet10, 8), &net);
+    assert!(rf.channel.area_um2 < fin.channel.area_um2);
+    assert!(rf.channel.min_clock_ps < fin.channel.min_clock_ps);
+    assert!(rf.channel.energy_per_cycle_fj < fin.channel.energy_per_cycle_fj);
+    assert!(rf.metrics.edap() < fin.metrics.edap());
+    assert!(rf.metrics.tops_per_watt() > 1.1 * fin.metrics.tops_per_watt());
+}
+
+#[test]
+fn all_pcc_netlists_match_behavior_exhaustively_4bit() {
+    for kind in PccKind::ALL {
+        let nl = build_netlist(kind, 4);
+        let mut ev = Evaluator::new(&nl);
+        for x in 0..16u32 {
+            for r in 0..16u32 {
+                let mut pins = Vec::new();
+                for i in 0..4 {
+                    pins.push((x >> i) & 1 == 1);
+                }
+                for i in 0..4 {
+                    pins.push((r >> i) & 1 == 1);
+                }
+                ev.set_inputs(&pins);
+                ev.propagate();
+                assert_eq!(ev.outputs()[0], pcc_bit(kind, x, r, 4), "{kind:?} {x} {r}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pipeline_covers_all_three_regimes_on_lenet() {
+    use scnn::accel::pipeline::PipelineMode;
+    let net = NetworkSpec::lenet5();
+    let mut seen = std::collections::HashSet::new();
+    for channels in [1usize, 2, 4, 8, 16, 64] {
+        let cfg = ScheduleConfig {
+            channels,
+            k: 32,
+            clock_ps: 900.0,
+            memory: MemoryModel::gddr5_paper(),
+            bytes_per_operand: 1,
+        };
+        for l in schedule_network(&net, &cfg).layers {
+            seen.insert(format!("{:?}", l.mode));
+        }
+    }
+    assert!(seen.contains("FullyPipelined"), "{seen:?}");
+    assert!(seen.contains("PartiallyPipelined") || seen.contains("NonPipelined"), "{seen:?}");
+}
+
+#[test]
+fn sweep_is_deterministic() {
+    let net = NetworkSpec::lenet5();
+    let a = sweep_channels(TechKind::Rfet10, &net, &[4, 8]);
+    let b = sweep_channels(TechKind::Rfet10, &net, &[4, 8]);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.metrics.latency_us, y.metrics.latency_us);
+        assert_eq!(x.metrics.energy_uj, y.metrics.energy_uj);
+    }
+}

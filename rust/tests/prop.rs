@@ -1,0 +1,184 @@
+//! Property-based tests (proptest-lite: the proptest crate is not vendored
+//! offline, so properties run over seeded pseudo-random case generators —
+//! same invariants, deterministic replay via the printed seed).
+
+use scnn::accel::metrics::SystemMetrics;
+use scnn::sc::apc::{approximate_count, decode_output, Apc};
+use scnn::sc::bitstream::{Bitstream, VerticalCounter};
+use scnn::sc::pcc::{expected_output, pcc_bit, PccKind};
+use scnn::sc::{dequantize_bipolar, quantize_bipolar};
+
+struct Gen(u64);
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen(seed.max(1))
+    }
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next() % (hi - lo)
+    }
+    fn f64(&mut self) -> f64 {
+        (self.next() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+/// Run a property over `n` seeded cases; failures print the case seed.
+fn prop(name: &str, n: usize, mut f: impl FnMut(&mut Gen)) {
+    for case in 0..n {
+        let seed = 0x5EED_0000 + case as u64;
+        let mut g = Gen::new(seed);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+        if let Err(e) = r {
+            panic!("property {name} failed at case seed {seed:#x}: {e:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_quantize_roundtrip_error_bounded() {
+    prop("quantize", 500, |g| {
+        let bits = g.range(2, 12) as u32;
+        let v = g.f64() * 2.0 - 1.0;
+        let q = dequantize_bipolar(quantize_bipolar(v, bits), bits);
+        // One LSB of rounding, two near the top-of-range cap (code 2^b−1).
+        assert!((q - v).abs() <= 2.0 / (1u64 << bits) as f64 + 1e-12, "bits={bits} v={v} q={q}");
+    });
+}
+
+#[test]
+fn prop_bitstream_ops_preserve_length_and_counts() {
+    prop("bitstream", 300, |g| {
+        let len = g.range(1, 400) as usize;
+        let a = Bitstream::from_fn(len, |_| g.next() % 2 == 1);
+        let b = Bitstream::from_fn(len, |_| g.next() % 3 == 0);
+        // De Morgan on packed streams incl. tail masking.
+        let lhs = a.and(&b).not();
+        let rhs = a.not().or(&b.not());
+        assert_eq!(lhs, rhs);
+        // XNOR = NOT XOR.
+        assert_eq!(a.xnor(&b), a.xor(&b).not());
+        // Counts bounded by length.
+        assert!(a.count_ones() as usize <= len);
+    });
+}
+
+#[test]
+fn prop_vertical_counter_equals_naive() {
+    prop("vcounter", 100, |g| {
+        let len = g.range(1, 200) as usize;
+        let n = g.range(1, 40) as usize;
+        let streams: Vec<Bitstream> =
+            (0..n).map(|_| Bitstream::from_fn(len, |_| g.next() % 2 == 1)).collect();
+        let mut vc = VerticalCounter::new(len, n);
+        for s in &streams {
+            vc.add(s);
+        }
+        let t = g.range(0, len as u64) as usize;
+        let naive: u32 = streams.iter().map(|s| s.get(t) as u32).sum();
+        assert_eq!(vc.count_at(t), naive);
+    });
+}
+
+#[test]
+fn prop_pcc_expectation_within_lsb_of_ideal() {
+    prop("pcc", 200, |g| {
+        let bits = g.range(3, 11) as u32;
+        let x = g.range(0, 1 << bits) as u32;
+        for kind in PccKind::ALL {
+            let m = expected_output(kind, x, bits);
+            let ideal = x as f64 / (1u64 << bits) as f64;
+            assert!(
+                (m - ideal).abs() <= 1.6 / (1u64 << bits) as f64 + 1e-12,
+                "{kind:?} bits={bits} x={x} m={m}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_pcc_bit_matches_expectation_over_exhaustive_r() {
+    prop("pcc_exhaustive", 40, |g| {
+        let bits = g.range(3, 8) as u32;
+        let x = g.range(0, 1 << bits) as u32;
+        for kind in PccKind::ALL {
+            let total = 1u64 << bits;
+            let ones =
+                (0..total).filter(|&r| pcc_bit(kind, x, r as u32, bits)).count() as f64;
+            let m = expected_output(kind, x, bits);
+            assert!((ones / total as f64 - m).abs() < 1e-9, "{kind:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_apc_accumulation_linear() {
+    prop("apc", 100, |g| {
+        let n = g.range(1, 30) as usize;
+        let cycles = g.range(1, 50) as usize;
+        let mut apc = Apc::new(n);
+        let mut total = 0u64;
+        for _ in 0..cycles {
+            let bits: Vec<bool> = (0..n).map(|_| g.next() % 2 == 1).collect();
+            total += bits.iter().filter(|&&b| b).count() as u64;
+            apc.step(&bits);
+        }
+        assert_eq!(apc.accumulated(), total);
+        // The approximate counter never exceeds the exact count.
+        let bits: Vec<bool> = (0..n).map(|_| g.next() % 2 == 1).collect();
+        let exact = bits.iter().filter(|&&b| b).count() as u32;
+        assert!(approximate_count(&bits) <= exact);
+    });
+}
+
+#[test]
+fn prop_decode_output_inverts_bit_order() {
+    prop("decode", 200, |g| {
+        let v = g.range(0, 1 << 16);
+        let bits: Vec<bool> = (0..16).map(|i| (v >> i) & 1 == 1).collect();
+        assert_eq!(decode_output(&bits), v);
+    });
+}
+
+#[test]
+fn prop_metrics_products_scale() {
+    prop("metrics", 200, |g| {
+        let m = SystemMetrics {
+            channels: 1,
+            area_mm2: 0.1 + g.f64(),
+            logic_area_mm2: 0.01 + g.f64() * 0.1,
+            latency_us: 0.1 + g.f64() * 10.0,
+            energy_uj: 0.1 + g.f64(),
+            power_mw: 1.0 + g.f64() * 100.0,
+            clock_ghz: 1.0,
+            tops: 0.1 + g.f64(),
+        };
+        // EDAP = EDP × logic area; ADP/latency = logic area.
+        assert!((m.edap() - m.edp() * m.logic_area_mm2).abs() < 1e-12);
+        assert!((m.adp() / m.latency_us - m.logic_area_mm2).abs() < 1e-12);
+        assert!(m.tops_per_watt() > 0.0);
+    });
+}
+
+#[test]
+fn prop_coordinator_stats_percentiles_monotone() {
+    use scnn::coordinator::ServeStats;
+    use std::time::Duration;
+    prop("stats", 50, |g| {
+        let mut s = ServeStats::new();
+        let n = g.range(1, 200);
+        for _ in 0..n {
+            s.record(Duration::from_micros(g.range(1, 100_000)), g.range(1, 33) as usize);
+        }
+        let mut last = 0;
+        for p in [0.0, 25.0, 50.0, 75.0, 99.0, 100.0] {
+            let v = s.latency_percentile_us(p);
+            assert!(v >= last, "percentiles must be monotone");
+            last = v;
+        }
+    });
+}
