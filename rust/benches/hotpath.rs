@@ -1,52 +1,233 @@
 //! §Perf hot-path benchmarks: the packed bitstream engine, the vertical
-//! counter (APC front end), one bit-exact LeNet-5 inference, gate-level
-//! characterization, and the PJRT serving path. Before/after numbers live
-//! in EXPERIMENTS.md §Perf.
+//! counter (APC front end), bit-exact LeNet-5 inference (single and
+//! batched), gate-level characterization, and the PJRT serving path.
+//!
+//! Every fused kernel is benchmarked against the pre-fusion reference
+//! implementation compiled into the same binary (`xnor` vs `xnor_into`,
+//! `add` vs `add_xnor`/`add3`, `reference::forward_stochastic` vs the
+//! fused/parallel engine), so the speedup column regenerates on any
+//! machine. Before/after numbers live in EXPERIMENTS.md §Perf; a
+//! machine-readable copy is written to `BENCH_hotpath.json` next to the
+//! human output. Run with `cargo bench --bench hotpath`.
 
-use scnn::accel::layers::NetworkSpec;
-use scnn::accel::network::{forward, ForwardMode};
-use scnn::benchutil::bench;
+use scnn::accel::layers::{LayerKind, NetworkSpec};
+use scnn::accel::network::{
+    forward, reference, ForwardMode, ForwardPlan, LayerWeights, QuantizedWeights,
+};
+use scnn::accel::par;
+use scnn::benchutil::{bench, BenchResult, JsonReport};
 use scnn::data::{Artifacts, Dataset, ModelWeights};
 use scnn::sc::bitstream::{Bitstream, VerticalCounter};
+use scnn::sc::quantize_bipolar;
+use scnn::sc::rng::{self, XorShift64};
+
+/// Record the fused result with its speedup over the reference run; if the
+/// kernel has an acceptance gate (EXPERIMENTS.md §Perf), report it loudly.
+fn record_pair(
+    json: &mut JsonReport,
+    baseline: &BenchResult,
+    fused: &BenchResult,
+    gate: Option<f64>,
+    extra: &[(&str, f64)],
+) -> f64 {
+    let speedup = baseline.median_ns / fused.median_ns;
+    match gate {
+        Some(g) if speedup >= g => {
+            println!("  -> {speedup:.2}x speedup vs reference (gate >={g}x: MET)")
+        }
+        Some(g) => println!("  -> {speedup:.2}x speedup vs reference (gate >={g}x: MISSED)"),
+        None => println!("  -> {speedup:.2}x speedup vs reference"),
+    }
+    json.add(baseline, &[]);
+    let mut fields = vec![("speedup_vs_reference", speedup)];
+    if let Some(g) = gate {
+        fields.push(("speedup_gate", g));
+    }
+    fields.extend_from_slice(extra);
+    json.add(fused, &fields);
+    speedup
+}
+
+/// Random-but-deterministic LeNet-5-shaped weights so the inference benches
+/// run without artifacts (same compute cost as trained weights).
+fn synthetic_weights(net: &NetworkSpec, bits: u32, seed: u64) -> QuantizedWeights {
+    let mut g = XorShift64::new(seed);
+    let mut layers = Vec::new();
+    for l in &net.layers {
+        let (rows, cols) = match l.kind {
+            LayerKind::Conv { in_ch, out_ch, kernel, .. } => (out_ch, in_ch * kernel * kernel),
+            LayerKind::Dense { inputs, outputs } => (outputs, inputs),
+            LayerKind::MaxPool { .. } => continue,
+        };
+        let codes: Vec<Vec<u32>> = (0..rows)
+            .map(|_| {
+                (0..cols)
+                    .map(|_| {
+                        let v = (g.next_u64() % 2000) as f64 / 1250.0 - 0.8;
+                        quantize_bipolar(v, bits)
+                    })
+                    .collect()
+            })
+            .collect();
+        layers.push(LayerWeights { codes, gamma: 0.2, mu: 1.0 });
+    }
+    QuantizedWeights { bits, layers }
+}
 
 fn main() {
-    // L3 hot loop 1: packed XNOR over 1024-bit streams.
+    let mut json = JsonReport::new();
+
+    // L3 hot loop 1: packed XNOR over 1024-bit streams —
+    // allocating (reference) vs in-place (fused).
     let a = Bitstream::from_fn(1024, |t| t % 3 == 0);
     let b = Bitstream::from_fn(1024, |t| t % 5 == 0);
-    let r = bench("bitstream_xnor(1024b)", 100, 2000, || {
+    let r_ref = bench("bitstream_xnor(1024b)/reference", 100, 2000, || {
         std::hint::black_box(a.xnor(&b));
     });
-    println!("  -> {:.2} Gbit/s", r.ops_per_sec(1024.0) / 1e9);
+    let mut out = Bitstream::zeros(1024);
+    let r_new = bench("bitstream_xnor(1024b)", 100, 2000, || {
+        a.xnor_into(&b, &mut out);
+        std::hint::black_box(&out);
+    });
+    let gbit = r_new.ops_per_sec(1024.0) / 1e9;
+    println!("  -> {:.2} Gbit/s", gbit);
+    record_pair(&mut json, &r_ref, &r_new, Some(3.0), &[("throughput_gbit_s", gbit)]);
 
-    // L3 hot loop 2: vertical counter accumulating 25 product streams.
+    // SNG lane generation: per-bit from_fn (reference) vs word-at-a-time.
+    let (code, bits, k) = (137u32, 8u32, 1024usize);
+    let mask = (1u32 << bits) - 1;
+    let gen_words = |base: u32, lane: u64| -> Bitstream {
+        let mut state = rng::lane_state(base as u64, lane);
+        Bitstream::from_fn_words(k, |w| {
+            let n = (k - w * 64).min(64);
+            let mut word = 0u64;
+            for i in 0..n {
+                state = rng::xorshift64_step(state);
+                word |= ((code > ((state as u32) & mask)) as u64) << i;
+            }
+            word
+        })
+    };
+    assert_eq!(
+        gen_words(7, 3),
+        reference::lane_stream(code, bits, k, 7, 3),
+        "word-packed SNG must be bit-identical to the per-bit path"
+    );
+    let r_ref = bench("sng_lane_stream(1024b)/reference", 50, 1000, || {
+        std::hint::black_box(reference::lane_stream(code, bits, k, 7, 3));
+    });
+    let r_new = bench("sng_lane_stream(1024b)", 50, 1000, || {
+        std::hint::black_box(gen_words(7, 3));
+    });
+    record_pair(&mut json, &r_ref, &r_new, None, &[]);
+
+    // L3 hot loop 2: vertical counter accumulating 25 streams —
+    // fresh counter + per-stream add (reference) vs reused counter +
+    // 3:2 carry-save add3 (fused).
     let streams: Vec<Bitstream> =
         (0..25).map(|j| Bitstream::from_fn(1024, |t| (t * (j + 3)) % 7 < 3)).collect();
-    let r = bench("vertical_counter(25x1024b)", 50, 1000, || {
+    let r_ref = bench("vertical_counter(25x1024b)/reference", 50, 1000, || {
         let mut vc = VerticalCounter::new(1024, 25);
         for s in &streams {
             vc.add(s);
         }
         std::hint::black_box(vc.total());
     });
-    println!("  -> {:.2} Gbit/s through the APC front end", r.ops_per_sec(25.0 * 1024.0) / 1e9);
+    let mut vc = VerticalCounter::new(1024, 25);
+    let r_new = bench("vertical_counter(25x1024b)", 50, 1000, || {
+        vc.reset();
+        let mut it = streams.chunks_exact(3);
+        for tri in &mut it {
+            vc.add3(&tri[0], &tri[1], &tri[2]);
+        }
+        for s in it.remainder() {
+            vc.add(s);
+        }
+        std::hint::black_box(vc.total());
+    });
+    let gbit = r_new.ops_per_sec(25.0 * 1024.0) / 1e9;
+    println!("  -> {:.2} Gbit/s through the APC front end", gbit);
+    record_pair(&mut json, &r_ref, &r_new, Some(3.0), &[("throughput_gbit_s", gbit)]);
 
+    // The real MAC shape: accumulate 25 XNOR products — allocate-per-product
+    // (reference) vs fused add_xnor.
+    let wstreams: Vec<Bitstream> =
+        (0..25).map(|j| Bitstream::from_fn(1024, |t| (t * (j + 11)) % 5 < 2)).collect();
+    let r_ref = bench("apc_accumulate_xnor(25x1024b)/reference", 50, 1000, || {
+        let mut vc = VerticalCounter::new(1024, 25);
+        for (s, w) in streams.iter().zip(&wstreams) {
+            vc.add(&s.xnor(w));
+        }
+        std::hint::black_box(vc.total());
+    });
+    let r_new = bench("apc_accumulate_xnor(25x1024b)", 50, 1000, || {
+        vc.reset();
+        for (s, w) in streams.iter().zip(&wstreams) {
+            vc.add_xnor(s, w);
+        }
+        std::hint::black_box(vc.total());
+    });
+    record_pair(&mut json, &r_ref, &r_new, None, &[]);
+
+    // Bit-exact LeNet-5 inference: per-bit/allocating reference vs the
+    // fused parallel engine, plus the batched serving path. Runs on trained
+    // weights when artifacts exist, synthetic weights otherwise (identical
+    // compute cost).
+    let net = NetworkSpec::lenet5();
     let artifacts = Artifacts::default_dir();
+    let trained = if artifacts.present() {
+        ModelWeights::load(&artifacts.weights("lenet5", "sc")).ok().map(|w| w.quantize(8))
+    } else {
+        None
+    };
+    let synthetic = trained.is_none();
+    let weights = trained.unwrap_or_else(|| synthetic_weights(&net, 8, 0x5EED));
+    if synthetic {
+        println!("(artifacts missing — lenet5 benches use synthetic weights)");
+    }
+    let img: Vec<f64> = (0..28 * 28).map(|i| ((i % 17) as f64) / 17.0).collect();
+    let fused_out = forward(&net, &weights, &img, ForwardMode::Stochastic { k: 32, seed: 7 });
+    let golden = reference::forward_stochastic(&net, &weights, &img, 32, 7);
+    assert_eq!(fused_out, golden, "fused engine must match the reference bit-for-bit");
+    let r_ref = bench("bitexact_lenet5_inference(k=32)/reference", 1, 5, || {
+        std::hint::black_box(reference::forward_stochastic(&net, &weights, &img, 32, 7));
+    });
+    let plan = ForwardPlan::new(&net, &weights, ForwardMode::Stochastic { k: 32, seed: 7 });
+    let mut scr = scnn::accel::network::Scratch::default();
+    let r_new = bench("bitexact_lenet5_inference(k=32)", 2, 20, || {
+        std::hint::black_box(plan.run_with(&img, &mut scr, true));
+    });
+    record_pair(&mut json, &r_ref, &r_new, Some(5.0), &[]);
+
+    // Batched forward: 32 images fanned across cores through one plan.
+    let batch: Vec<Vec<f64>> = (0..32)
+        .map(|s| (0..28 * 28).map(|i| (((i + s * 13) % 17) as f64) / 17.0).collect())
+        .collect();
+    let r_batch = bench("bitexact_lenet5_forward_batch(32imgs,k=32)", 1, 5, || {
+        std::hint::black_box(plan.run_batch(&batch));
+    });
+    let img_s = r_batch.ops_per_sec(32.0);
+    println!(
+        "  -> {:.0} img/s on {} threads (single-image engine: {:.0} img/s)",
+        img_s,
+        par::max_threads(),
+        r_new.ops_per_sec(1.0)
+    );
+    json.add(&r_batch, &[("img_per_s", img_s), ("threads", par::max_threads() as f64)]);
+
+    let r = bench("expectation_lenet5_inference", 1, 10, || {
+        std::hint::black_box(forward(&net, &weights, &img, ForwardMode::Expectation));
+    });
+    json.add(&r, &[]);
+
     if artifacts.present() {
         let ds = Dataset::load(&artifacts.dataset("digits")).unwrap();
-        let net = NetworkSpec::lenet5();
-        let weights = ModelWeights::load(&artifacts.weights("lenet5", "sc")).unwrap().quantize(8);
-        let img: Vec<f64> = ds.images[0].iter().map(|&v| v as f64).collect();
-        bench("bitexact_lenet5_inference(k=32)", 1, 5, || {
-            std::hint::black_box(forward(&net, &weights, &img, ForwardMode::Stochastic { k: 32, seed: 7 }));
-        });
-        bench("expectation_lenet5_inference", 1, 10, || {
-            std::hint::black_box(forward(&net, &weights, &img, ForwardMode::Expectation));
-        });
         // PJRT serving path (single image, batch-1 graph).
         let engine = scnn::runtime::Engine::load(&artifacts.hlo("lenet5", 1)).unwrap();
-        bench("pjrt_lenet5_b1", 2, 20, || {
+        let r = bench("pjrt_lenet5_b1", 2, 20, || {
             std::hint::black_box(engine.run_f32(&ds.images[0], &[1, 1, 28, 28]).unwrap());
         });
+        json.add(&r, &[]);
         let eb = scnn::runtime::Engine::load(&artifacts.hlo("lenet5", 32)).unwrap();
         let mut flat = Vec::new();
         for i in 0..32 {
@@ -56,6 +237,7 @@ fn main() {
             std::hint::black_box(eb.run_f32(&flat, &[32, 1, 28, 28]).unwrap());
         });
         println!("  -> {:.0} img/s batched", r.ops_per_sec(32.0));
+        json.add(&r, &[("img_per_s", r.ops_per_sec(32.0))]);
     } else {
         eprintln!("artifacts missing — PJRT hot-path benches skipped");
     }
@@ -63,15 +245,23 @@ fn main() {
     // Gate-level simulator throughput (the Genus substitute).
     let lib = scnn::tech::CellLibrary::finfet10();
     let nl = scnn::sc::apc::build_netlist(25, 32, scnn::sc::apc::FaStyle::CmosCell);
-    bench("apc25_power_sim(2048 cycles)", 1, 5, || {
-        let mut s = 1u64;
+    let r = bench("apc25_power_sim(2048 cycles)", 1, 5, || {
+        let mut s = XorShift64::new(1);
         std::hint::black_box(scnn::sim::estimate_power(&nl, &lib, 2048, |_, pins| {
             for p in pins.iter_mut() {
-                s ^= s << 13;
-                s ^= s >> 7;
-                s ^= s << 17;
-                *p = s & 1 == 1;
+                *p = s.next_u64() & 1 == 1;
             }
         }));
     });
+    json.add(&r, &[]);
+
+    let path = std::path::Path::new("BENCH_hotpath.json");
+    match json.write(path) {
+        Ok(()) => println!(
+            "\nwrote {} bench records to {}",
+            json.len(),
+            std::fs::canonicalize(path).unwrap_or_else(|_| path.to_path_buf()).display()
+        ),
+        Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
+    }
 }

@@ -17,9 +17,9 @@
 //! `make artifacts && cargo run --release --example mnist_e2e`
 
 use anyhow::{bail, Context, Result};
-use scnn::accel::network::{classify, forward, ForwardMode};
 use scnn::accel::layers::NetworkSpec;
-use scnn::coordinator::{Coordinator, CoordinatorConfig};
+use scnn::accel::network::{classify, forward, forward_batch, ForwardMode};
+use scnn::coordinator::{Coordinator, CoordinatorConfig, ServeBackend};
 use scnn::data::{load_manifest, Artifacts, Dataset, ModelWeights};
 use scnn::runtime::Engine;
 use scnn::sc::bitstream::Bitstream;
@@ -36,11 +36,13 @@ fn main() -> Result<()> {
     // ---- 2. serve the full test set through the coordinator ----
     let ds = Dataset::load(&artifacts.dataset("digits"))?;
     let cfg = CoordinatorConfig {
-        hlo_ladder: vec![
-            (1, artifacts.hlo("lenet5", 1)),
-            (8, artifacts.hlo("lenet5", 8)),
-            (32, artifacts.hlo("lenet5", 32)),
-        ],
+        backend: ServeBackend::Pjrt {
+            hlo_ladder: vec![
+                (1, artifacts.hlo("lenet5", 1)),
+                (8, artifacts.hlo("lenet5", 8)),
+                (32, artifacts.hlo("lenet5", 32)),
+            ],
+        },
         image_len: ds.shape.0 * ds.shape.1 * ds.shape.2,
         image_dims: ds.shape,
         classes: 10,
@@ -75,32 +77,76 @@ fn main() -> Result<()> {
         st.mean_batch()
     );
 
-    // ---- 3. bit-exact SC cross-check ----
+    // ---- 2b. the same test set through the SC serving backend ----
+    // The coordinator's second backend: the bit-exact stochastic engine
+    // behind one compiled ForwardPlan, batched by the same router.
     let net = NetworkSpec::lenet5();
     let weights = ModelWeights::load(&artifacts.weights("lenet5", "sc"))?.quantize(8);
+    let n_serve = 64.min(ds.len());
+    let sc_cfg = CoordinatorConfig {
+        backend: ServeBackend::Stochastic {
+            net: net.clone(),
+            weights: weights.clone(),
+            mode: ForwardMode::Stochastic { k: 32, seed: 7 },
+            batch_max: 32,
+        },
+        image_len: ds.shape.0 * ds.shape.1 * ds.shape.2,
+        image_dims: ds.shape,
+        classes: 10,
+        linger: Duration::from_millis(2),
+    };
+    let sc_coord = Coordinator::start(sc_cfg).context("starting SC coordinator")?;
+    let t = Instant::now();
+    let sc_preds = sc_coord.infer_all(&ds.images[..n_serve], 16)?;
+    let sc_wall = t.elapsed();
+    let sc_st = sc_coord.stats();
+    drop(sc_coord);
+    let sc_correct = sc_preds
+        .iter()
+        .zip(&ds.labels[..n_serve])
+        .filter(|(&p, &l)| p == l as usize)
+        .count();
+    println!("\n== serving (L3 coordinator + bit-exact SC engine, k=32) ==");
+    println!(
+        "  {} images in {:.1} ms  ->  {:.0} img/s  (mean batch {:.1})",
+        n_serve,
+        sc_wall.as_secs_f64() * 1e3,
+        n_serve as f64 / sc_wall.as_secs_f64(),
+        sc_st.mean_batch()
+    );
+    println!(
+        "  accuracy {:.2}% ({sc_correct}/{n_serve}) at the k=32 noise floor",
+        100.0 * sc_correct as f64 / n_serve as f64
+    );
+
+    // ---- 3. bit-exact SC cross-check (batched engine) ----
     let n_check = 40.min(ds.len());
+    let inputs: Vec<Vec<f64>> = ds.images[..n_check]
+        .iter()
+        .map(|img| img.iter().map(|&v| v as f64).collect())
+        .collect();
+    let t = Instant::now();
+    let exp_outs = forward_batch(&net, &weights, &inputs, ForwardMode::Expectation);
+    let sc_outs =
+        forward_batch(&net, &weights, &inputs, ForwardMode::Stochastic { k: 32, seed: 1 });
+    let noisy_outs = forward_batch(
+        &net,
+        &weights,
+        &inputs,
+        ForwardMode::NoisyExpectation { k: 4096, seed: 1 },
+    );
+    // Batched and single-image paths must be bit-identical.
+    let single = forward(&net, &weights, &inputs[0], ForwardMode::Stochastic { k: 32, seed: 1 });
+    if single != sc_outs[0] {
+        bail!("forward_batch diverged from single-image forward");
+    }
     let mut agree_exp = 0;
     let mut agree_sc = 0;
     let mut agree_noisy = 0;
-    let t = Instant::now();
     for i in 0..n_check {
-        let img: Vec<f64> = ds.images[i].iter().map(|&v| v as f64).collect();
-        let p_exp = classify(&forward(&net, &weights, &img, ForwardMode::Expectation));
-        let p_sc = classify(&forward(
-            &net,
-            &weights,
-            &img,
-            ForwardMode::Stochastic { k: 32, seed: 1 + i as u32 },
-        ));
-        let p_noisy = classify(&forward(
-            &net,
-            &weights,
-            &img,
-            ForwardMode::NoisyExpectation { k: 4096, seed: 1 + i as u32 },
-        ));
-        agree_exp += (p_exp == preds[i]) as usize;
-        agree_sc += (p_sc == ds.labels[i] as usize) as usize;
-        agree_noisy += (p_noisy == ds.labels[i] as usize) as usize;
+        agree_exp += (classify(&exp_outs[i]) == preds[i]) as usize;
+        agree_sc += (classify(&sc_outs[i]) == ds.labels[i] as usize) as usize;
+        agree_noisy += (classify(&noisy_outs[i]) == ds.labels[i] as usize) as usize;
     }
     println!("\n== bit-exact stochastic datapath (8-bit) ==");
     println!(
@@ -129,13 +175,8 @@ fn main() -> Result<()> {
     // ---- 4. L1 Pallas kernel vs the Rust bitstream engine ----
     let kernel = Engine::load(&artifacts.dir.join("sc_mac_demo.hlo.txt"))?;
     let (neurons, fan_in, words) = (128usize, 25usize, 1usize);
-    let mut rng: u64 = 0x5EED;
-    let mut step = move || {
-        rng ^= rng << 13;
-        rng ^= rng >> 7;
-        rng ^= rng << 17;
-        rng as u32
-    };
+    let mut rng = scnn::sc::rng::XorShift64::new(0x5EED);
+    let mut step = move || rng.next_u32();
     let a: Vec<u32> = (0..neurons * fan_in * words).map(|_| step()).collect();
     let w: Vec<u32> = (0..neurons * fan_in * words).map(|_| step()).collect();
     let counts = kernel.run_u32_pair(&a, &w, &[neurons as i64, fan_in as i64, words as i64])?;

@@ -6,12 +6,14 @@
 //! * [`channel`] — Fig. 9 channel assembly + Table I/II characterization;
 //! * [`system`] — whole-accelerator roll-up (Fig. 13, Table III);
 //! * [`metrics`] — ADP/EDP/EDAP and TOPS-derived figures of merit;
-//! * [`network`] — bit-exact / expectation / fixed-point SCNN inference.
+//! * [`network`] — bit-exact / expectation / fixed-point SCNN inference;
+//! * [`par`] — scoped data-parallel helpers (the offline rayon substitute).
 
 pub mod channel;
 pub mod layers;
 pub mod memory;
 pub mod metrics;
 pub mod network;
+pub mod par;
 pub mod pipeline;
 pub mod system;

@@ -7,12 +7,31 @@
 //! weights provides the "binary NN" baseline of Fig. 12, and an
 //! expectation-mode forward (the SC math model without sampling noise)
 //! mirrors `python/compile/model.py`.
+//!
+//! # Engine architecture
+//!
+//! Inference runs through a [`ForwardPlan`]: every image-independent
+//! quantity — im2col gather windows, the per-layer B2S random sequence,
+//! all weight and padding SNG streams, dequantized weight values — is
+//! computed once at plan build and shared by every image and every thread.
+//! Per image, a reusable [`Scratch`] arena holds the activation streams and
+//! counter planes, so steady-state inference performs **no per-neuron heap
+//! allocation**: each neuron is one fused pass (word-packed SNG lanes →
+//! [`VerticalCounter::add_xnor_words`] → [`VerticalCounter::b2s_ones`])
+//! with zero intermediate bitstreams.
+//!
+//! Work is parallelized with [`crate::accel::par`]: [`forward`] fans neuron
+//! chunks across cores inside each layer; [`forward_batch`] fans whole
+//! images (the serving-path shape). Outputs are **bit-identical** for any
+//! thread count and to the pre-fusion per-bit implementation, which is kept
+//! in [`reference`] as the golden model (asserted in tests, measured in
+//! `rust/benches/hotpath.rs`).
 
 use crate::accel::layers::{LayerKind, NetworkSpec, Shape};
-use crate::sc::bitstream::{Bitstream, VerticalCounter};
-use crate::sc::lfsr::Lfsr;
+use crate::accel::par;
+use crate::sc::bitstream::VerticalCounter;
 use crate::sc::neuron;
-use crate::sc::pcc::{pcc_bit, PccKind};
+use crate::sc::rng;
 use crate::sc::{dequantize_bipolar, quantize_bipolar};
 
 /// One compute layer's quantized weights plus its re-encoder affine.
@@ -46,48 +65,26 @@ pub struct QuantizedWeights {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ForwardMode {
     /// Full bit-exact stochastic simulation with bitstream length k.
-    Stochastic { k: usize, seed: u32 },
+    Stochastic {
+        /// Bitstream length in cycles.
+        k: usize,
+        /// Master seed for every SNG lane.
+        seed: u32,
+    },
     /// SC expectation model (no sampling noise) — matches the JAX model.
     Expectation,
     /// Expectation model + analytic k-cycle sampling noise — the paper's
     /// own Fig. 11/12 methodology ("the mathematical model of SC is
     /// encapsulated as a Python function" §V-B): the neuron value is the
     /// expectation perturbed by the binomial noise of a k-cycle stream.
-    NoisyExpectation { k: usize, seed: u32 },
+    NoisyExpectation {
+        /// Modeled bitstream length.
+        k: usize,
+        /// Noise seed.
+        seed: u32,
+    },
     /// Plain fixed-point MAC + hard ReLU (the Fig. 12 baseline).
     FixedPoint,
-}
-
-/// Random sequences for one layer's stream generation.
-struct LayerRandoms {
-    /// B2S comparison randoms, uniform over 2^(m+1), shared across the
-    /// layer's neurons (the ReLU/MaxPool correlation of Fig. 2).
-    r4: Vec<u32>,
-}
-
-/// One operand lane's comparator-PCC stream from an *ideal* per-lane
-/// random source (splitmix/xorshift seeded by lane).
-///
-/// Faithfulness note (DESIGN.md §Substitutions): the paper's accuracy
-/// experiments run a mathematical SC model inside PyTorch — not a
-/// gate-exact netlist replay — so per-lane ideal randomness is the same
-/// abstraction level. Physically it corresponds to per-PCC decorrelated
-/// RNS (shuffled LFSR networks, or the MTJ true-random sources of [14]);
-/// naive sharing of one m-sequence across lanes correlates the XNOR
-/// products and biases every neuron (tested in `sng`/`network` tests).
-fn lane_stream(code: u32, bits: u32, k: usize, base: u32, lane: u64) -> Bitstream {
-    let mut s = (base as u64) ^ lane.wrapping_mul(0x9E37_79B9_7F4A_7C15);
-    // splitmix64 scramble so consecutive lanes are far apart.
-    s = (s ^ (s >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    s = (s ^ (s >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    let mut state = (s ^ (s >> 31)) | 1;
-    let mask = (1u32 << bits) - 1;
-    Bitstream::from_fn(k, |_| {
-        state ^= state << 13;
-        state ^= state >> 7;
-        state ^= state << 17;
-        code > ((state as u32) & mask)
-    })
 }
 
 /// Bit-reverse the low `bits` bits of `t` (van der Corput sequence) —
@@ -96,19 +93,45 @@ fn bit_reverse(t: u32, bits: u32) -> u32 {
     t.reverse_bits() >> (32 - bits)
 }
 
-fn layer_randoms(_bits: u32, n: usize, k: usize, seed: u32) -> LayerRandoms {
-    // B2S r4: a van der Corput (bit-reversed counter) sequence over the
-    // 2^(m+1) comparison domain — balanced/stratified for ANY bitstream
-    // length, deterministic, and shared across the layer's neurons (the
-    // ReLU/MaxPool correlation of Fig. 2). An LFSR here is a trap: its
-    // 2^w − 1 period never divides k, so wide layers (m+1 = 9..11) sample
-    // half a period and inherit a large threshold skew.
+/// B2S comparison randoms, uniform over 2^(m+1), shared across a layer's
+/// neurons (the ReLU/MaxPool correlation of Fig. 2): a van der Corput
+/// (bit-reversed counter) sequence over the comparison domain —
+/// balanced/stratified for ANY bitstream length, deterministic. An LFSR
+/// here is a trap: its 2^w − 1 period never divides k, so wide layers
+/// (m+1 = 9..11) sample half a period and inherit a large threshold skew.
+fn layer_r4(n: usize, k: usize, seed: u32) -> Vec<u32> {
     let m1 = neuron::m_bits(n) + 1;
     let offset = seed % (1u32 << m1);
-    let r4 = (0..k as u32)
+    (0..k as u32)
         .map(|t| bit_reverse(t.wrapping_add(offset) & ((1 << m1) - 1), m1))
-        .collect();
-    LayerRandoms { r4 }
+        .collect()
+}
+
+/// One operand lane's comparator-PCC stream from an *ideal* per-lane
+/// random source, written word-at-a-time into `out` (64 xorshift steps and
+/// packed comparisons per word instead of a per-bit closure + `set`).
+///
+/// Faithfulness note (DESIGN.md §Substitutions): the paper's accuracy
+/// experiments run a mathematical SC model inside PyTorch — not a
+/// gate-exact netlist replay — so per-lane ideal randomness is the same
+/// abstraction level. Physically it corresponds to per-PCC decorrelated
+/// RNS (shuffled LFSR networks, or the MTJ true-random sources of [14]);
+/// naive sharing of one m-sequence across lanes correlates the XNOR
+/// products and biases every neuron (tested in `sng`/`network` tests).
+/// Bit-compatible with [`reference::lane_stream`].
+fn lane_stream_words(code: u32, bits: u32, k: usize, base: u32, lane: u64, out: &mut [u64]) {
+    debug_assert_eq!(out.len(), k.div_ceil(64));
+    let mut state = rng::lane_state(base as u64, lane);
+    let mask = (1u32 << bits) - 1;
+    for (w, slot) in out.iter_mut().enumerate() {
+        let n = (k - w * 64).min(64);
+        let mut word = 0u64;
+        for i in 0..n {
+            state = rng::xorshift64_step(state);
+            word |= ((code > ((state as u32) & mask)) as u64) << i;
+        }
+        *slot = word;
+    }
 }
 
 /// Im2col-style gather: the flat input indices feeding each output neuron
@@ -146,104 +169,13 @@ fn conv_gather(
     (windows, oh, ow)
 }
 
-/// One inference through the SCNN.
-///
-/// `input`: bipolar values in [−1, 1], flattened (c·h·w). Returns the
-/// output-layer values (bipolar stream values for stochastic/expectation
-/// modes; raw pre-activation sums for fixed-point).
-pub fn forward(
-    net: &NetworkSpec,
-    weights: &QuantizedWeights,
-    input: &[f64],
-    mode: ForwardMode,
-) -> Vec<f64> {
-    let bits = weights.bits;
-    let mut act: Vec<f64> = input.to_vec();
-    let mut shape = net.input;
-    let mut wl = 0usize; // compute-layer index
-    let mut li = 0usize;
-    while li < net.layers.len() {
-        let layer = &net.layers[li];
-        match &layer.kind {
-            LayerKind::Conv { out_ch, kernel, padding, .. } => {
-                // Fuse a following MaxPool into this layer (the SC pipeline
-                // pools on correlated streams before S2B).
-                let pool = match net.layers.get(li + 1) {
-                    Some(l) => match l.kind {
-                        LayerKind::MaxPool { size } => Some(size),
-                        _ => None,
-                    },
-                    None => None,
-                };
-                let (windows, oh, ow) = conv_gather(shape, *kernel, *padding);
-                let lw = &weights.layers[wl];
-                let n = windows[0].len();
-                // Quantize activations once per layer.
-                let acodes: Vec<u32> =
-                    act.iter().map(|&v| quantize_bipolar(v, bits)).collect();
-                let final_layer = wl + 1 == weights.layers.len();
-                let out = run_layer(
-                    &windows,
-                    &acodes,
-                    lw,
-                    *out_ch,
-                    n,
-                    bits,
-                    layer.relu,
-                    mode,
-                    wl as u32,
-                    final_layer,
-                );
-                let (mut new_act, mut new_shape) = (out, (*out_ch, oh, ow));
-                if let Some(size) = pool {
-                    new_act = max_pool_values(&new_act, new_shape, size);
-                    new_shape = (new_shape.0, new_shape.1 / size, new_shape.2 / size);
-                    li += 1; // consume the pool layer
-                }
-                act = new_act;
-                shape = new_shape;
-                wl += 1;
-            }
-            LayerKind::Dense { outputs, .. } => {
-                let n = shape.0 * shape.1 * shape.2;
-                let windows: Vec<Vec<Option<usize>>> =
-                    vec![(0..n).map(Some).collect()];
-                let lw = &weights.layers[wl];
-                let acodes: Vec<u32> =
-                    act.iter().map(|&v| quantize_bipolar(v, bits)).collect();
-                let final_layer = wl + 1 == weights.layers.len();
-                let out = run_layer(
-                    &windows,
-                    &acodes,
-                    lw,
-                    *outputs,
-                    n,
-                    bits,
-                    layer.relu,
-                    mode,
-                    wl as u32,
-                    final_layer,
-                );
-                act = out;
-                shape = (*outputs, 1, 1);
-                wl += 1;
-            }
-            LayerKind::MaxPool { size } => {
-                // Standalone pool (not fused): pool on values.
-                act = max_pool_values(&act, shape, *size);
-                shape = (shape.0, shape.1 / size, shape.2 / size);
-            }
-        }
-        li += 1;
-    }
-    act
-}
-
-/// Max-pool plain values (used outside the fused stream path).
-fn max_pool_values(v: &[f64], shape: Shape, size: usize) -> Vec<f64> {
+/// Max-pool plain values into `out` (the SC pipeline pools on correlated
+/// streams before S2B; on recovered values the same max applies).
+fn max_pool_values_into(v: &[f64], shape: Shape, size: usize, out: &mut Vec<f64>) {
     let (c, h, w) = shape;
     let (oh, ow) = (h / size, w / size);
-    let mut out = Vec::with_capacity(c * oh * ow);
+    out.clear();
+    out.reserve(c * oh * ow);
     for ic in 0..c {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -257,18 +189,6 @@ fn max_pool_values(v: &[f64], shape: Shape, size: usize) -> Vec<f64> {
             }
         }
     }
-    out
-}
-
-/// Deterministic per-site standard normal via splitmix + Box–Muller.
-fn gauss(site: u32, stream: u32) -> f64 {
-    let mut s = ((site as u64) << 32 | stream as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-    s = (s ^ (s >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    s = (s ^ (s >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    s ^= s >> 31;
-    let u1 = ((s >> 11) as f64 / (1u64 << 53) as f64).max(1e-12);
-    let u2 = (s & 0xFFFF_FFFF) as f64 / 4294967296.0;
-    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
 }
 
 /// Mix the neuron site indices into a noise counter.
@@ -286,23 +206,410 @@ fn reencode(sp: f64, gamma: f64, mu: f64, final_layer: bool) -> f64 {
     }
 }
 
-/// Execute one compute layer in the requested mode.
-#[allow(clippy::too_many_arguments)]
-fn run_layer(
-    windows: &[Vec<Option<usize>>],
-    acodes: &[u32],
-    layer_weights: &LayerWeights,
+/// One step of a compiled forward plan.
+enum PlanStep {
+    /// A Conv/Dense compute layer (with an optionally fused MaxPool).
+    Compute(LayerPlan),
+    /// A standalone MaxPool over values.
+    Pool {
+        /// Pool window size.
+        size: usize,
+        /// Input shape at this step.
+        in_shape: Shape,
+    },
+}
+
+/// Image-independent state of one compute layer.
+struct LayerPlan {
+    /// Compute-layer index (into `QuantizedWeights::layers`).
+    wl: usize,
     out_ch: usize,
     fan_in: usize,
+    n_win: usize,
+    /// Flat input indices per window (None = zero padding).
+    windows: Vec<Vec<Option<usize>>>,
+    /// Activation sites feeding this layer (c·h·w of the input shape).
+    in_sites: usize,
+    /// Output shape of the compute op, before any fused pool.
+    conv_shape: Shape,
+    /// Fused following MaxPool size, if any.
+    pool: Option<usize>,
+    relu: bool,
+    final_layer: bool,
+    gamma: f64,
+    mu: f64,
+    /// 2^m for this fan-in (the SC scaled-add divisor).
+    scale: f64,
+    // --- stochastic-mode constants (empty in analytic modes) ---
+    /// Lane seed base for this layer.
+    base: u32,
+    /// Shared B2S comparison randoms.
+    r4: Vec<u32>,
+    /// All weight SNG streams, packed `[(oc·fan_in + j)·words ..][..words]`.
+    wgt_words: Vec<u64>,
+    /// Zero-code padding SNG streams, `[j·words..][..words]` (empty when no
+    /// window needs padding).
+    pad_words: Vec<u64>,
+    // --- analytic-mode constants (empty in stochastic mode) ---
+    /// Dequantized weights, `[oc·fan_in + j]`.
+    wq: Vec<f64>,
+    /// Dequantized zero code (padding value).
+    zq: f64,
+}
+
+/// Reusable per-image scratch arena: all buffers grow to the largest layer
+/// once and are reused across layers and calls — the engine's steady state
+/// allocates nothing per neuron.
+#[derive(Default)]
+pub struct Scratch {
+    act: Vec<f64>,
+    out: Vec<f64>,
+    acodes: Vec<u32>,
+    aq: Vec<f64>,
+    act_words: Vec<u64>,
+    vc: VerticalCounter,
+}
+
+/// A compiled forward pass: [`NetworkSpec`] + [`QuantizedWeights`] +
+/// [`ForwardMode`] lowered into per-layer gather tables, random sequences,
+/// and pre-generated weight streams. Build once, run many — the serving
+/// coordinator keeps one plan for its whole lifetime.
+pub struct ForwardPlan {
+    mode: ForwardMode,
     bits: u32,
+    /// Stochastic stream length (0 in analytic modes).
+    k: usize,
+    /// Words per stream.
+    words: usize,
+    /// Expected input length (c·h·w of the network input).
+    in_len: usize,
+    /// Output length (classes).
+    out_len: usize,
+    steps: Vec<PlanStep>,
+}
+
+impl ForwardPlan {
+    /// Compile a plan for the given network, weights, and mode.
+    pub fn new(net: &NetworkSpec, weights: &QuantizedWeights, mode: ForwardMode) -> Self {
+        let bits = weights.bits;
+        let (k, words) = match mode {
+            ForwardMode::Stochastic { k, .. } => (k, k.div_ceil(64)),
+            _ => (0, 0),
+        };
+        let mut steps = Vec::new();
+        let mut shape = net.input;
+        let in_len = shape.0 * shape.1 * shape.2;
+        let mut wl = 0usize;
+        let mut li = 0usize;
+        while li < net.layers.len() {
+            let layer = &net.layers[li];
+            match &layer.kind {
+                LayerKind::Conv { out_ch, kernel, padding, .. } => {
+                    // Fuse a following MaxPool into this layer (the SC
+                    // pipeline pools on correlated streams before S2B).
+                    let pool = match net.layers.get(li + 1) {
+                        Some(l) => match l.kind {
+                            LayerKind::MaxPool { size } => Some(size),
+                            _ => None,
+                        },
+                        None => None,
+                    };
+                    let (windows, oh, ow) = conv_gather(shape, *kernel, *padding);
+                    let lp = build_layer_plan(
+                        weights,
+                        wl,
+                        windows,
+                        *out_ch,
+                        shape.0 * shape.1 * shape.2,
+                        (*out_ch, oh, ow),
+                        pool,
+                        layer.relu,
+                        mode,
+                    );
+                    steps.push(PlanStep::Compute(lp));
+                    shape = match pool {
+                        Some(size) => {
+                            li += 1; // consume the pool layer
+                            (*out_ch, oh / size, ow / size)
+                        }
+                        None => (*out_ch, oh, ow),
+                    };
+                    wl += 1;
+                }
+                LayerKind::Dense { outputs, .. } => {
+                    let n = shape.0 * shape.1 * shape.2;
+                    let windows: Vec<Vec<Option<usize>>> = vec![(0..n).map(Some).collect()];
+                    let lp = build_layer_plan(
+                        weights,
+                        wl,
+                        windows,
+                        *outputs,
+                        n,
+                        (*outputs, 1, 1),
+                        None,
+                        layer.relu,
+                        mode,
+                    );
+                    steps.push(PlanStep::Compute(lp));
+                    shape = (*outputs, 1, 1);
+                    wl += 1;
+                }
+                LayerKind::MaxPool { size } => {
+                    steps.push(PlanStep::Pool { size: *size, in_shape: shape });
+                    shape = (shape.0, shape.1 / size, shape.2 / size);
+                }
+            }
+            li += 1;
+        }
+        let out_len = shape.0 * shape.1 * shape.2;
+        ForwardPlan { mode, bits, k, words, in_len, out_len, steps }
+    }
+
+    /// Output length (class count) of the compiled network.
+    pub fn out_len(&self) -> usize {
+        self.out_len
+    }
+
+    /// Expected input length (c·h·w).
+    pub fn in_len(&self) -> usize {
+        self.in_len
+    }
+
+    /// One inference with a fresh scratch arena, parallelized across
+    /// neurons within each layer.
+    pub fn run(&self, input: &[f64]) -> Vec<f64> {
+        let mut scr = Scratch::default();
+        self.run_with(input, &mut scr, true)
+    }
+
+    /// One inference with a caller-owned scratch arena. `parallel` fans
+    /// neuron chunks across cores (bit-identical output either way); pass
+    /// `false` when the caller already parallelizes at a coarser grain.
+    pub fn run_with(&self, input: &[f64], scr: &mut Scratch, parallel: bool) -> Vec<f64> {
+        assert_eq!(input.len(), self.in_len, "input length mismatch");
+        scr.act.clear();
+        scr.act.extend_from_slice(input);
+        for step in &self.steps {
+            match step {
+                PlanStep::Pool { size, in_shape } => {
+                    let (act, out) = (&scr.act, &mut scr.out);
+                    max_pool_values_into(act, *in_shape, *size, out);
+                    std::mem::swap(&mut scr.act, &mut scr.out);
+                }
+                PlanStep::Compute(lp) => {
+                    match self.mode {
+                        ForwardMode::Stochastic { .. } => {
+                            self.run_layer_stochastic(lp, scr, parallel)
+                        }
+                        _ => self.run_layer_analytic(lp, scr, parallel),
+                    }
+                    if let Some(size) = lp.pool {
+                        // scr.out holds the compute result; pool it into act.
+                        let (out, act) = (&scr.out, &mut scr.act);
+                        max_pool_values_into(out, lp.conv_shape, size, act);
+                    } else {
+                        std::mem::swap(&mut scr.act, &mut scr.out);
+                    }
+                }
+            }
+        }
+        scr.act.clone()
+    }
+
+    /// Batched inference: images fan out across cores, the plan's windows /
+    /// randoms / weight streams are shared, and each worker reuses one
+    /// scratch arena across all the images it claims. Output `[i]` is
+    /// bit-identical to `run(&inputs[i])`.
+    pub fn run_batch(&self, inputs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        let mut results: Vec<Vec<f64>> = vec![Vec::new(); inputs.len()];
+        par::par_chunks_mut_with(&mut results, 1, Scratch::default, |scr, i, slot| {
+            slot[0] = self.run_with(&inputs[i], scr, false);
+        });
+        results
+    }
+
+    /// The fused stochastic layer: per neuron, one pass of
+    /// `add_xnor_words` over the gather window followed by the fused
+    /// B2S→ReLU→S2B popcount. Reads `scr.act`, writes `scr.out`.
+    fn run_layer_stochastic(&self, lp: &LayerPlan, scr: &mut Scratch, parallel: bool) {
+        let (k, words, bits) = (self.k, self.words, self.bits);
+        scr.acodes.clear();
+        scr.acodes.extend(scr.act.iter().map(|&v| quantize_bipolar(v, bits)));
+        assert_eq!(scr.acodes.len(), lp.in_sites, "layer input size mismatch");
+        // Per-image activation SNG streams, one packed lane per site.
+        scr.act_words.clear();
+        scr.act_words.resize(lp.in_sites * words, 0);
+        for (p, &code) in scr.acodes.iter().enumerate() {
+            lane_stream_words(
+                code,
+                bits,
+                k,
+                lp.base,
+                p as u64,
+                &mut scr.act_words[p * words..(p + 1) * words],
+            );
+        }
+        let total = lp.out_ch * lp.n_win;
+        scr.out.clear();
+        scr.out.resize(total, 0.0);
+        let floor = if lp.relu { lp.fan_in as u32 } else { 0 };
+        let act_words: &[u64] = &scr.act_words;
+        let out: &mut [f64] = &mut scr.out;
+        let worker = |vc: &mut VerticalCounter, start: usize, slice: &mut [f64]| {
+            for (off, slot) in slice.iter_mut().enumerate() {
+                let g = start + off;
+                let (oc, wi) = (g / lp.n_win, g % lp.n_win);
+                let wbase = oc * lp.fan_in * words;
+                vc.reset();
+                for (j, &src) in lp.windows[wi].iter().enumerate() {
+                    let a = match src {
+                        Some(i) => &act_words[i * words..(i + 1) * words],
+                        None => &lp.pad_words[j * words..(j + 1) * words],
+                    };
+                    let w = &lp.wgt_words[wbase + j * words..wbase + (j + 1) * words];
+                    vc.add_xnor_words(a, w);
+                }
+                let ones = vc.b2s_ones(&lp.r4, floor);
+                let v = 2.0 * (ones as f64 / k as f64) - 1.0;
+                let sp = (v + 1.0) * lp.scale - lp.fan_in as f64;
+                *slot = reencode(sp, lp.gamma, lp.mu, lp.final_layer);
+            }
+        };
+        if parallel && total > 1 {
+            let chunk = par::balanced_chunk_len(total);
+            par::par_chunks_mut_with(
+                out,
+                chunk,
+                || VerticalCounter::new(k, lp.fan_in),
+                |vc, ci, slice| worker(vc, ci * chunk, slice),
+            );
+        } else {
+            scr.vc.reconfigure(k, lp.fan_in);
+            worker(&mut scr.vc, 0, out);
+        }
+    }
+
+    /// Expectation / noisy-expectation / fixed-point layer over the same
+    /// quantized codes. Reads `scr.act`, writes `scr.out`.
+    fn run_layer_analytic(&self, lp: &LayerPlan, scr: &mut Scratch, parallel: bool) {
+        let bits = self.bits;
+        scr.acodes.clear();
+        scr.acodes.extend(scr.act.iter().map(|&v| quantize_bipolar(v, bits)));
+        assert_eq!(scr.acodes.len(), lp.in_sites, "layer input size mismatch");
+        scr.aq.clear();
+        scr.aq.extend(scr.acodes.iter().map(|&c| dequantize_bipolar(c, bits)));
+        let total = lp.out_ch * lp.n_win;
+        scr.out.clear();
+        scr.out.resize(total, 0.0);
+        let aq: &[f64] = &scr.aq;
+        let out: &mut [f64] = &mut scr.out;
+        let mode = self.mode;
+        let layer_seed = lp.wl as u32;
+        let worker = |start: usize, slice: &mut [f64]| {
+            for (off, slot) in slice.iter_mut().enumerate() {
+                let g = start + off;
+                let (oc, wi) = (g / lp.n_win, g % lp.n_win);
+                let wq = &lp.wq[oc * lp.fan_in..(oc + 1) * lp.fan_in];
+                let mut pre = 0.0f64;
+                let mut var = 0.0f64;
+                for (j, &src) in lp.windows[wi].iter().enumerate() {
+                    let a = match src {
+                        Some(i) => aq[i],
+                        None => lp.zq,
+                    };
+                    let p = a * wq[j];
+                    pre += p;
+                    var += 1.0 - p * p;
+                }
+                // sp: the value the S2B counter recovers.
+                let sp = match mode {
+                    ForwardMode::Expectation | ForwardMode::NoisyExpectation { .. } => {
+                        if lp.relu {
+                            let v = neuron::expectation_smooth_relu(pre, var, lp.fan_in);
+                            (v + 1.0) * lp.scale - lp.fan_in as f64
+                        } else {
+                            pre
+                        }
+                    }
+                    ForwardMode::FixedPoint => {
+                        if lp.relu {
+                            pre.max(0.0)
+                        } else {
+                            pre
+                        }
+                    }
+                    ForwardMode::Stochastic { .. } => unreachable!(),
+                };
+                let sp = if let ForwardMode::NoisyExpectation { k, seed } = mode {
+                    // Sampling error of a k-cycle low-discrepancy stream on
+                    // the recovered value. With van der Corput /
+                    // progressive-precision SNGs (the setup hardware SCNNs
+                    // at k=32 rely on, §II-C refs), the conversion error
+                    // scales as O(1/k), not the binomial O(1/sqrt(k)):
+                    // sigma_v ~ 3*sqrt(P(1-P))/k.
+                    let v = (sp + lp.fan_in as f64) / lp.scale - 1.0;
+                    let p = ((v + 1.0) / 2.0).clamp(1e-6, 1.0 - 1e-6);
+                    let sigma = 3.0 * (p * (1.0 - p)).sqrt() / k as f64;
+                    let z = rng::gauss(seed ^ noise_ctr(oc, g), layer_seed);
+                    let v = v + sigma * z;
+                    (v + 1.0) * lp.scale - lp.fan_in as f64
+                } else {
+                    sp
+                };
+                *slot = reencode(sp, lp.gamma, lp.mu, lp.final_layer);
+            }
+        };
+        if parallel && total > 1 {
+            let chunk = par::balanced_chunk_len(total);
+            par::par_chunks_mut(out, chunk, |ci, slice| worker(ci * chunk, slice));
+        } else {
+            worker(0, out);
+        }
+    }
+}
+
+/// Build one compute layer's plan (shared by Conv and Dense).
+#[allow(clippy::too_many_arguments)]
+fn build_layer_plan(
+    weights: &QuantizedWeights,
+    wl: usize,
+    windows: Vec<Vec<Option<usize>>>,
+    out_ch: usize,
+    in_sites: usize,
+    conv_shape: Shape,
+    pool: Option<usize>,
     relu: bool,
     mode: ForwardMode,
-    layer_seed: u32,
-    final_layer: bool,
-) -> Vec<f64> {
+) -> LayerPlan {
+    let bits = weights.bits;
+    let lw = &weights.layers[wl];
+    let fan_in = windows[0].len();
+    let n_win = windows.len();
+    let final_layer = wl + 1 == weights.layers.len();
+    let scale = (1u64 << neuron::m_bits(fan_in)) as f64;
+    let mut lp = LayerPlan {
+        wl,
+        out_ch,
+        fan_in,
+        n_win,
+        windows,
+        in_sites,
+        conv_shape,
+        pool,
+        relu,
+        final_layer,
+        gamma: lw.gamma,
+        mu: lw.mu,
+        scale,
+        base: 0,
+        r4: Vec::new(),
+        wgt_words: Vec::new(),
+        pad_words: Vec::new(),
+        wq: Vec::new(),
+        zq: 0.0,
+    };
     match mode {
         ForwardMode::Stochastic { k, seed } => {
-            let rnd = layer_randoms(bits, fan_in, k, seed ^ (layer_seed.wrapping_mul(0x9E3779B9)));
             // RNS sharing *with signal shuffling* (§I): every PCC sees a
             // per-lane wire-permuted view of the shared source, so product
             // streams are pairwise decorrelated and the per-cycle count
@@ -310,118 +617,83 @@ fn run_layer(
             // was trained through. (Sharing the raw source across all
             // multiplier lanes makes counts swing coherently — a large,
             // k-independent positive bias through the smoothed ReLU.)
-            let base = seed ^ layer_seed.wrapping_mul(0x9E3779B9);
-            let act_streams: Vec<Bitstream> = acodes
-                .iter()
-                .enumerate()
-                .map(|(p, &c)| lane_stream(c, bits, k, base, p as u64))
-                .collect();
-            let zero_code = quantize_bipolar(0.0, bits);
-            // Per-lane padding streams (border windows).
-            let pad_streams: Vec<Bitstream> = (0..fan_in)
-                .map(|j| lane_stream(zero_code, bits, k, base, (1 << 40) + j as u64))
-                .collect();
-            let scale = (1u64 << neuron::m_bits(fan_in)) as f64;
-            let mut out = Vec::with_capacity(out_ch * windows.len());
-            for oc in 0..out_ch {
-                let wcodes = &layer_weights.codes[oc];
+            let layer_seed = wl as u32;
+            let base = seed ^ layer_seed.wrapping_mul(0x9E37_79B9);
+            let words = k.div_ceil(64);
+            lp.base = base;
+            lp.r4 = layer_r4(fan_in, k, base);
+            assert_eq!(lw.codes.len(), out_ch, "weight output-channel mismatch");
+            lp.wgt_words = vec![0u64; out_ch * fan_in * words];
+            for (oc, wcodes) in lw.codes.iter().enumerate() {
                 assert_eq!(wcodes.len(), fan_in, "weight fan-in mismatch");
-                let wgt_streams: Vec<Bitstream> = wcodes
-                    .iter()
-                    .enumerate()
-                    .map(|(j, &c)| {
-                        lane_stream(c, bits, k, base ^ 0x5EED_CAFE, ((oc as u64) << 20) + j as u64)
-                    })
-                    .collect();
-                for win in windows {
-                    let mut vc = VerticalCounter::new(k, fan_in);
-                    for (j, &src) in win.iter().enumerate() {
-                        let a = match src {
-                            Some(i) => &act_streams[i],
-                            None => &pad_streams[j],
-                        };
-                        vc.add(&a.xnor(&wgt_streams[j]));
-                    }
-                    let o = neuron::b2s_stream(&vc, &rnd.r4);
-                    let o = if relu {
-                        o.or(&neuron::relu_zero_stream(fan_in, &rnd.r4))
-                    } else {
-                        o
-                    };
-                    // S2B recovery + re-encoder affine.
-                    let sp = (o.value_bipolar() + 1.0) * scale - fan_in as f64;
-                    out.push(reencode(sp, layer_weights.gamma, layer_weights.mu, final_layer));
+                for (j, &code) in wcodes.iter().enumerate() {
+                    lane_stream_words(
+                        code,
+                        bits,
+                        k,
+                        base ^ 0x5EED_CAFE,
+                        ((oc as u64) << 20) + j as u64,
+                        &mut lp.wgt_words[(oc * fan_in + j) * words..][..words],
+                    );
                 }
             }
-            out
+            // Per-lane padding streams, only for layers with border windows.
+            let needs_pad = lp.windows.iter().any(|w| w.iter().any(|s| s.is_none()));
+            if needs_pad {
+                let zero_code = quantize_bipolar(0.0, bits);
+                lp.pad_words = vec![0u64; fan_in * words];
+                for j in 0..fan_in {
+                    lane_stream_words(
+                        zero_code,
+                        bits,
+                        k,
+                        base,
+                        (1u64 << 40) + j as u64,
+                        &mut lp.pad_words[j * words..][..words],
+                    );
+                }
+            }
         }
-        ForwardMode::Expectation
-        | ForwardMode::NoisyExpectation { .. }
-        | ForwardMode::FixedPoint => {
-            let zero_code = quantize_bipolar(0.0, bits);
-            let aq: Vec<f64> =
-                acodes.iter().map(|&c| dequantize_bipolar(c, bits)).collect();
-            let zq = dequantize_bipolar(zero_code, bits);
-            let scale = (1u64 << neuron::m_bits(fan_in)) as f64;
-            let mut out = Vec::with_capacity(out_ch * windows.len());
-            for oc in 0..out_ch {
-                let wq: Vec<f64> = layer_weights.codes[oc]
-                    .iter()
-                    .map(|&c| dequantize_bipolar(c, bits))
-                    .collect();
-                for win in windows {
-                    let mut pre = 0.0f64;
-                    let mut var = 0.0f64;
-                    for (j, &src) in win.iter().enumerate() {
-                        let a = match src {
-                            Some(i) => aq[i],
-                            None => zq,
-                        };
-                        let p = a * wq[j];
-                        pre += p;
-                        var += 1.0 - p * p;
-                    }
-                    // sp: the value the S2B counter recovers.
-                    let sp = match mode {
-                        ForwardMode::Expectation | ForwardMode::NoisyExpectation { .. } => {
-                            if relu {
-                                let v = neuron::expectation_smooth_relu(pre, var, fan_in);
-                                (v + 1.0) * scale - fan_in as f64
-                            } else {
-                                pre
-                            }
-                        }
-                        ForwardMode::FixedPoint => {
-                            if relu {
-                                pre.max(0.0)
-                            } else {
-                                pre
-                            }
-                        }
-                        ForwardMode::Stochastic { .. } => unreachable!(),
-                    };
-                    let sp = if let ForwardMode::NoisyExpectation { k, seed } = mode {
-                        // Sampling error of a k-cycle low-discrepancy
-                        // stream on the recovered value. With van der
-                        // Corput / progressive-precision SNGs (the setup
-                        // hardware SCNNs at k=32 rely on, §II-C refs), the
-                        // conversion error scales as O(1/k), not the
-                        // binomial O(1/sqrt(k)): sigma_v ~ 3*sqrt(P(1-P))/k.
-                        let v = (sp + fan_in as f64) / scale - 1.0;
-                        let p = ((v + 1.0) / 2.0).clamp(1e-6, 1.0 - 1e-6);
-                        let sigma = 3.0 * (p * (1.0 - p)).sqrt() / k as f64;
-                        let z = gauss(seed ^ noise_ctr(oc, out.len()), layer_seed);
-                        let v = v + sigma * z;
-                        (v + 1.0) * scale - fan_in as f64
-                    } else {
-                        sp
-                    };
-                    out.push(reencode(sp, layer_weights.gamma, layer_weights.mu, final_layer));
-                }
+        _ => {
+            lp.zq = dequantize_bipolar(quantize_bipolar(0.0, bits), bits);
+            assert_eq!(lw.codes.len(), out_ch, "weight output-channel mismatch");
+            lp.wq = Vec::with_capacity(out_ch * fan_in);
+            for wcodes in &lw.codes {
+                assert_eq!(wcodes.len(), fan_in, "weight fan-in mismatch");
+                lp.wq.extend(wcodes.iter().map(|&c| dequantize_bipolar(c, bits)));
             }
-            out
         }
     }
+    lp
+}
+
+/// One inference through the SCNN.
+///
+/// `input`: bipolar values in [−1, 1], flattened (c·h·w). Returns the
+/// output-layer values (bipolar stream values for stochastic/expectation
+/// modes; raw pre-activation sums for fixed-point). Convenience wrapper:
+/// compiles a [`ForwardPlan`] and runs it once with per-layer neuron
+/// parallelism. For repeated inference, build the plan once.
+pub fn forward(
+    net: &NetworkSpec,
+    weights: &QuantizedWeights,
+    input: &[f64],
+    mode: ForwardMode,
+) -> Vec<f64> {
+    ForwardPlan::new(net, weights, mode).run(input)
+}
+
+/// Batched inference: compiles one [`ForwardPlan`] (amortizing gather
+/// tables, layer randoms, and every weight/padding SNG stream across the
+/// whole batch) and runs the images in parallel across cores. Output `[i]`
+/// is bit-identical to `forward(net, weights, &inputs[i], mode)`.
+pub fn forward_batch(
+    net: &NetworkSpec,
+    weights: &QuantizedWeights,
+    inputs: &[Vec<f64>],
+    mode: ForwardMode,
+) -> Vec<Vec<f64>> {
+    ForwardPlan::new(net, weights, mode).run_batch(inputs)
 }
 
 /// Argmax over the final layer values.
@@ -432,6 +704,154 @@ pub fn classify(output: &[f64]) -> usize {
         .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
         .map(|(i, _)| i)
         .unwrap()
+}
+
+/// The pre-fusion, per-bit stochastic forward, kept as the golden
+/// reference implementation: every stream is generated one bit at a time
+/// through `from_fn`, every XNOR product allocates, and neurons run
+/// serially — exactly the original datapath. The fused/parallel engine
+/// must match it bit-for-bit (asserted in this module's tests; the speedup
+/// is measured in `rust/benches/hotpath.rs`).
+#[doc(hidden)]
+pub mod reference {
+    use super::*;
+    use crate::sc::bitstream::Bitstream;
+
+    /// Per-bit lane stream (the original SNG path). Bit-compatible with
+    /// the engine's word-packed `lane_stream_words`.
+    pub fn lane_stream(code: u32, bits: u32, k: usize, base: u32, lane: u64) -> Bitstream {
+        let mut state = rng::lane_state(base as u64, lane);
+        let mask = (1u32 << bits) - 1;
+        Bitstream::from_fn(k, |_| {
+            state = rng::xorshift64_step(state);
+            code > ((state as u32) & mask)
+        })
+    }
+
+    /// Max-pool plain values (allocating).
+    fn max_pool_values(v: &[f64], shape: Shape, size: usize) -> Vec<f64> {
+        let mut out = Vec::new();
+        max_pool_values_into(v, shape, size, &mut out);
+        out
+    }
+
+    /// Bit-exact stochastic inference, original per-bit/allocating path.
+    pub fn forward_stochastic(
+        net: &NetworkSpec,
+        weights: &QuantizedWeights,
+        input: &[f64],
+        k: usize,
+        seed: u32,
+    ) -> Vec<f64> {
+        let bits = weights.bits;
+        let mut act: Vec<f64> = input.to_vec();
+        let mut shape = net.input;
+        let mut wl = 0usize;
+        let mut li = 0usize;
+        while li < net.layers.len() {
+            let layer = &net.layers[li];
+            match &layer.kind {
+                LayerKind::Conv { out_ch, kernel, padding, .. } => {
+                    let pool = match net.layers.get(li + 1) {
+                        Some(l) => match l.kind {
+                            LayerKind::MaxPool { size } => Some(size),
+                            _ => None,
+                        },
+                        None => None,
+                    };
+                    let (windows, oh, ow) = conv_gather(shape, *kernel, *padding);
+                    let out =
+                        run_layer(&windows, &act, weights, wl, *out_ch, bits, layer.relu, k, seed);
+                    let (mut new_act, mut new_shape) = (out, (*out_ch, oh, ow));
+                    if let Some(size) = pool {
+                        new_act = max_pool_values(&new_act, new_shape, size);
+                        new_shape = (new_shape.0, new_shape.1 / size, new_shape.2 / size);
+                        li += 1;
+                    }
+                    act = new_act;
+                    shape = new_shape;
+                    wl += 1;
+                }
+                LayerKind::Dense { outputs, .. } => {
+                    let n = shape.0 * shape.1 * shape.2;
+                    let windows: Vec<Vec<Option<usize>>> = vec![(0..n).map(Some).collect()];
+                    act =
+                        run_layer(&windows, &act, weights, wl, *outputs, bits, layer.relu, k, seed);
+                    shape = (*outputs, 1, 1);
+                    wl += 1;
+                }
+                LayerKind::MaxPool { size } => {
+                    act = max_pool_values(&act, shape, *size);
+                    shape = (shape.0, shape.1 / size, shape.2 / size);
+                }
+            }
+            li += 1;
+        }
+        act
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_layer(
+        windows: &[Vec<Option<usize>>],
+        act: &[f64],
+        weights: &QuantizedWeights,
+        wl: usize,
+        out_ch: usize,
+        bits: u32,
+        relu: bool,
+        k: usize,
+        seed: u32,
+    ) -> Vec<f64> {
+        let lw = &weights.layers[wl];
+        let fan_in = windows[0].len();
+        let final_layer = wl + 1 == weights.layers.len();
+        let layer_seed = wl as u32;
+        let base = seed ^ layer_seed.wrapping_mul(0x9E37_79B9);
+        let r4 = layer_r4(fan_in, k, base);
+        let acodes: Vec<u32> = act.iter().map(|&v| quantize_bipolar(v, bits)).collect();
+        let act_streams: Vec<Bitstream> = acodes
+            .iter()
+            .enumerate()
+            .map(|(p, &c)| lane_stream(c, bits, k, base, p as u64))
+            .collect();
+        let zero_code = quantize_bipolar(0.0, bits);
+        let pad_streams: Vec<Bitstream> = (0..fan_in)
+            .map(|j| lane_stream(zero_code, bits, k, base, (1 << 40) + j as u64))
+            .collect();
+        let scale = (1u64 << neuron::m_bits(fan_in)) as f64;
+        let mut out = Vec::with_capacity(out_ch * windows.len());
+        for oc in 0..out_ch {
+            let wcodes = &lw.codes[oc];
+            assert_eq!(wcodes.len(), fan_in, "weight fan-in mismatch");
+            let wgt_streams: Vec<Bitstream> = wcodes
+                .iter()
+                .enumerate()
+                .map(|(j, &c)| {
+                    lane_stream(c, bits, k, base ^ 0x5EED_CAFE, ((oc as u64) << 20) + j as u64)
+                })
+                .collect();
+            for win in windows {
+                let mut vc = VerticalCounter::new(k, fan_in);
+                for (j, &src) in win.iter().enumerate() {
+                    let a = match src {
+                        Some(i) => &act_streams[i],
+                        None => &pad_streams[j],
+                    };
+                    vc.add(&a.xnor(&wgt_streams[j]));
+                }
+                let o = neuron::b2s_stream(&vc, &r4);
+                let o = if relu {
+                    o.or(&neuron::relu_zero_stream(fan_in, &r4))
+                } else {
+                    o
+                };
+                // S2B recovery + re-encoder affine.
+                let sp = (o.value_bipolar() + 1.0) * scale - fan_in as f64;
+                out.push(reencode(sp, lw.gamma, lw.mu, final_layer));
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -497,6 +917,58 @@ mod tests {
             assert_eq!(out.len(), 3, "{mode:?}");
             assert!(out.iter().all(|v| v.is_finite()));
         }
+    }
+
+    #[test]
+    fn fused_engine_matches_reference_bit_exactly() {
+        let net = tiny_net();
+        let w = tiny_weights(8, 42);
+        let input = tiny_input();
+        // Lengths below, at, and across the word boundary.
+        for k in [16usize, 64, 100] {
+            for seed in [3u32, 7] {
+                let fused = forward(&net, &w, &input, ForwardMode::Stochastic { k, seed });
+                let golden = reference::forward_stochastic(&net, &w, &input, k, seed);
+                assert_eq!(fused, golden, "k={k} seed={seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_matches_single_image_forward() {
+        let net = tiny_net();
+        let w = tiny_weights(8, 21);
+        let inputs: Vec<Vec<f64>> = (0..5)
+            .map(|s| (0..36).map(|i| (((i + s * 5) % 9) as f64) / 9.0).collect())
+            .collect();
+        for mode in [
+            ForwardMode::FixedPoint,
+            ForwardMode::Expectation,
+            ForwardMode::NoisyExpectation { k: 256, seed: 5 },
+            ForwardMode::Stochastic { k: 96, seed: 11 },
+        ] {
+            let batch = forward_batch(&net, &w, &inputs, mode);
+            assert_eq!(batch.len(), inputs.len());
+            for (i, input) in inputs.iter().enumerate() {
+                let single = forward(&net, &w, input, mode);
+                assert_eq!(batch[i], single, "{mode:?} image {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_and_scratch_reuse_are_deterministic() {
+        let net = tiny_net();
+        let w = tiny_weights(8, 9);
+        let plan = ForwardPlan::new(&net, &w, ForwardMode::Stochastic { k: 32, seed: 2 });
+        assert_eq!(plan.in_len(), 36);
+        assert_eq!(plan.out_len(), 3);
+        let mut scr = Scratch::default();
+        let a = plan.run_with(&tiny_input(), &mut scr, true);
+        let b = plan.run_with(&tiny_input(), &mut scr, false);
+        let c = plan.run(&tiny_input());
+        assert_eq!(a, b);
+        assert_eq!(a, c);
     }
 
     #[test]

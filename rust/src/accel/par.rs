@@ -1,0 +1,160 @@
+//! Minimal scoped data-parallel helpers.
+//!
+//! rayon is not vendored in this offline environment (Cargo.toml note), so
+//! the stochastic forward's neuron/batch parallelism runs on
+//! `std::thread::scope` with a shared atomic task cursor — the same dynamic
+//! self-balancing a work-stealing pool gives for this shape of workload
+//! (uniform-ish chunks claimed greedily by whichever worker is free).
+//!
+//! Determinism: chunks are disjoint `&mut` slices written at fixed indices,
+//! and every chunk's result depends only on its input (never on scheduling),
+//! so output is bit-identical for any thread count — including 1. Set
+//! `SCNN_THREADS=1` to force the serial path (useful for profiling).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Worker count: `SCNN_THREADS` if set (≥1), else the machine's available
+/// parallelism. Cached for the process lifetime.
+pub fn max_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("SCNN_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// Split `data` into `chunk_len`-sized pieces and run
+/// `f(&mut state, chunk_index, chunk)` over them in parallel, with one
+/// `init()`-built state per worker (scratch buffers survive across all the
+/// chunks a worker claims — the allocation-free steady state).
+///
+/// Chunks are claimed dynamically off an atomic cursor, so uneven chunk
+/// costs self-balance. Runs serially (no threads spawned) when the machine
+/// has one core, `SCNN_THREADS=1`, or there is only one chunk.
+pub fn par_chunks_mut_with<T, S, I, F>(data: &mut [T], chunk_len: usize, init: I, f: F)
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    if data.is_empty() {
+        return;
+    }
+    let n_chunks = data.len().div_ceil(chunk_len);
+    let threads = max_threads().min(n_chunks);
+    if threads <= 1 {
+        let mut state = init();
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(&mut state, i, chunk);
+        }
+        return;
+    }
+    // Hand each chunk out exactly once: an atomic cursor indexes a slot
+    // vector; the Mutex-per-slot is uncontended (each slot is taken once).
+    let slots: Vec<Mutex<Option<(usize, &mut [T])>>> =
+        data.chunks_mut(chunk_len).enumerate().map(|c| Mutex::new(Some(c))).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let mut state = init();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= slots.len() {
+                        break;
+                    }
+                    if let Some((ci, chunk)) = slots[i].lock().unwrap().take() {
+                        f(&mut state, ci, chunk);
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Convenience wrapper without per-worker state.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    par_chunks_mut_with(data, chunk_len, || (), |(), i, c| f(i, c));
+}
+
+/// Chunk length that yields a few chunks per worker for dynamic balance.
+pub fn balanced_chunk_len(total: usize) -> usize {
+    (total / (max_threads() * 4)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_element_once() {
+        let mut v = vec![0u32; 1037];
+        par_chunks_mut(&mut v, 10, |_, chunk| {
+            for x in chunk {
+                *x += 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn chunk_indices_align_with_offsets() {
+        let mut v = vec![0usize; 256];
+        par_chunks_mut(&mut v, 7, |ci, chunk| {
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = ci * 7 + j;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i);
+        }
+    }
+
+    #[test]
+    fn worker_state_is_reused_not_shared() {
+        // Each worker counts the chunks it processed into its own state;
+        // the per-chunk writes must still cover everything exactly once.
+        let mut v = vec![0u8; 100];
+        par_chunks_mut_with(
+            &mut v,
+            3,
+            || 0usize,
+            |seen, _, chunk| {
+                *seen += 1;
+                for x in chunk {
+                    *x += 1;
+                }
+            },
+        );
+        assert!(v.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn empty_and_single_chunk_paths() {
+        let mut empty: Vec<u32> = Vec::new();
+        par_chunks_mut(&mut empty, 4, |_, _| panic!("no chunks expected"));
+        let mut one = vec![1u32, 2, 3];
+        par_chunks_mut(&mut one, 100, |ci, chunk| {
+            assert_eq!(ci, 0);
+            assert_eq!(chunk.len(), 3);
+        });
+    }
+
+    #[test]
+    fn balanced_chunk_is_positive() {
+        assert!(balanced_chunk_len(0) >= 1);
+        assert!(balanced_chunk_len(1_000_000) >= 1);
+        assert!(max_threads() >= 1);
+    }
+}

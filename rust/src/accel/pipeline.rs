@@ -79,8 +79,48 @@ pub struct LayerSchedule {
     pub total_cycles: u64,
 }
 
+/// Algorithm 1's regime decision for one on-chip configuration; returns the
+/// chosen mode and the cycles one pass over the layer takes.
+fn regime(n_onchip: usize, n_memcover: usize, groups: usize, k: usize) -> (PipelineMode, u64) {
+    let k64 = k as u64;
+    if n_onchip < n_memcover {
+        // Line 7–8: Dlayer = cycle_unpipe · k · τ.
+        (PipelineMode::NonPipelined, groups as u64 * k64)
+    } else {
+        let incycle_pipe = n_onchip.div_ceil(n_memcover);
+        if incycle_pipe < k {
+            // Line 14: Dlayer = [cycle_pipe·(k+1) + incycle_pipe − 1] · τ.
+            (
+                PipelineMode::PartiallyPipelined,
+                groups as u64 * (k64 + 1) + incycle_pipe as u64 - 1,
+            )
+        } else {
+            // Line 17 with the group factor explicit: loading dominates.
+            (
+                PipelineMode::FullyPipelined,
+                groups as u64 * incycle_pipe as u64 + k64,
+            )
+        }
+    }
+}
+
 /// Apply Algorithm 1 to one layer.
 pub fn schedule_layer(layer: &LayerSpec, input: Shape, cfg: &ScheduleConfig) -> Option<LayerSchedule> {
+    schedule_layer_batch(layer, input, cfg, 1)
+}
+
+/// Apply Algorithm 1 to one layer with weight-stationary batching: a
+/// resident neuron group's weights are loaded once and reused across all
+/// `batch` images, so steady-state operand traffic per neuron-image is the
+/// activation bytes plus `1/batch` of the weight bytes. `batch = 1` is
+/// exactly the paper's single-image schedule.
+pub fn schedule_layer_batch(
+    layer: &LayerSpec,
+    input: Shape,
+    cfg: &ScheduleConfig,
+    batch: usize,
+) -> Option<LayerSchedule> {
+    let batch = batch.max(1);
     let neurons = layer.neurons(input);
     if neurons == 0 {
         return None; // pooling layers ride on the producing layer
@@ -88,36 +128,22 @@ pub fn schedule_layer(layer: &LayerSpec, input: Shape, cfg: &ScheduleConfig) -> 
     let fan_in = layer.fan_in(input);
     let macs_per_neuron = fan_in.div_ceil(MAC_WIDTH);
     let n_onchip = (cfg.total_macs() / macs_per_neuron).max(1).min(neurons);
-    // Operand bytes per neuron: weights + activations at system precision.
-    let bytes_per_neuron = (2 * fan_in * cfg.bytes_per_operand) as f64;
+    // Operand bytes per neuron-image: activations at system precision plus
+    // the batch-amortized weights.
+    let bytes_per_neuron =
+        (fan_in * cfg.bytes_per_operand) as f64 * (1.0 + 1.0 / batch as f64);
     let n_memcover =
         ((cfg.memory.bytes_per_cycle(cfg.clock_ps) / bytes_per_neuron).floor() as usize).max(1);
     let groups = neurons.div_ceil(n_onchip);
-    let k = cfg.k as u64;
 
-    let (mode, total_cycles) = if n_onchip < n_memcover {
-        // Line 7–8: Dlayer = cycle_unpipe · k · τ.
-        (PipelineMode::NonPipelined, groups as u64 * k)
-    } else {
-        let incycle_pipe = n_onchip.div_ceil(n_memcover);
-        if incycle_pipe < cfg.k {
-            // Line 14: Dlayer = [cycle_pipe·(k+1) + incycle_pipe − 1] · τ.
-            (
-                PipelineMode::PartiallyPipelined,
-                groups as u64 * (k + 1) + incycle_pipe as u64 - 1,
-            )
-        } else {
-            // Line 17 with the group factor explicit: loading dominates.
-            (
-                PipelineMode::FullyPipelined,
-                groups as u64 * incycle_pipe as u64 + k,
-            )
-        }
-    };
+    let (mode, per_image_cycles) = regime(n_onchip, n_memcover, groups, cfg.k);
+    let total_cycles = per_image_cycles * batch as u64;
     let incycle_pipe = n_onchip.div_ceil(n_memcover);
     let delay_ns = total_cycles as f64 * cfg.clock_ps / 1000.0;
-    let dram_bytes = (neurons * 2 * fan_in * cfg.bytes_per_operand) as u64;
-    let active_mac_cycles = neurons as u64 * macs_per_neuron as u64 * k;
+    // Off-chip traffic: activations per image, weights once per batch.
+    let dram_bytes =
+        (neurons * fan_in * cfg.bytes_per_operand) as u64 * (batch as u64 + 1);
+    let active_mac_cycles = neurons as u64 * macs_per_neuron as u64 * cfg.k as u64 * batch as u64;
     Some(LayerSchedule {
         mode,
         n_onchip,
@@ -150,9 +176,20 @@ pub struct NetworkSchedule {
 
 /// Schedule every compute layer of `net`.
 pub fn schedule_network(net: &NetworkSpec, cfg: &ScheduleConfig) -> NetworkSchedule {
+    schedule_network_batch(net, cfg, 1)
+}
+
+/// Schedule every compute layer of `net` for a `batch` of images with
+/// weight-stationary reuse (the hardware analogue of the software engine's
+/// `forward_batch`: per-layer constants amortized across the batch).
+pub fn schedule_network_batch(
+    net: &NetworkSpec,
+    cfg: &ScheduleConfig,
+    batch: usize,
+) -> NetworkSchedule {
     let mut layers = Vec::new();
     for (shape, layer) in net.input_shapes().iter().zip(&net.layers) {
-        if let Some(s) = schedule_layer(layer, *shape, cfg) {
+        if let Some(s) = schedule_layer_batch(layer, *shape, cfg, batch) {
             layers.push(s);
         }
     }
@@ -236,6 +273,39 @@ mod tests {
         let sched = schedule_network(&net, &cfg(8));
         // 7 layers, 2 pools ⇒ 5 compute layers.
         assert_eq!(sched.layers.len(), 5);
+    }
+
+    #[test]
+    fn batch_one_equals_single_image_schedule() {
+        let net = NetworkSpec::lenet5();
+        let a = schedule_network(&net, &cfg(8));
+        let b = schedule_network_batch(&net, &cfg(8), 1);
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.dram_bytes, b.dram_bytes);
+        assert_eq!(a.active_mac_cycles, b.active_mac_cycles);
+    }
+
+    #[test]
+    fn batching_amortizes_weight_traffic_and_lifts_utilization() {
+        let net = NetworkSpec::lenet5();
+        let single = schedule_network_batch(&net, &cfg(8), 1);
+        let batched = schedule_network_batch(&net, &cfg(8), 32);
+        // Per-image DRAM traffic strictly drops (weights loaded once).
+        assert!(
+            (batched.dram_bytes as f64 / 32.0) < single.dram_bytes as f64,
+            "batched {} vs single {}",
+            batched.dram_bytes / 32,
+            single.dram_bytes
+        );
+        // Weight reuse can only improve (or preserve) MAC utilization.
+        assert!(
+            batched.utilization >= single.utilization - 1e-12,
+            "batched {} vs single {}",
+            batched.utilization,
+            single.utilization
+        );
+        // Per-image latency must not degrade.
+        assert!(batched.latency_ns / 32.0 <= single.latency_ns * 1.001);
     }
 
     #[test]

@@ -47,6 +47,79 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     r
 }
 
+/// Collects bench results into a machine-readable JSON report (e.g.
+/// `BENCH_hotpath.json`) so the perf trajectory is tracked across PRs.
+/// Hand-rolled writer — serde is not vendored in this offline environment.
+#[derive(Debug, Default)]
+pub struct JsonReport {
+    entries: Vec<String>,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl JsonReport {
+    /// Empty report.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one result plus extra numeric fields (e.g.
+    /// `("throughput_gbit_s", x)` or `("speedup_vs_reference", r)`).
+    pub fn add(&mut self, r: &BenchResult, extra: &[(&str, f64)]) {
+        let mut fields = vec![
+            format!("\"name\": \"{}\"", json_escape(&r.name)),
+            format!("\"median_ns\": {}", json_num(r.median_ns)),
+            format!("\"mean_ns\": {}", json_num(r.mean_ns)),
+            format!("\"iters\": {}", r.iters),
+        ];
+        for (k, v) in extra {
+            fields.push(format!("\"{}\": {}", json_escape(k), json_num(*v)));
+        }
+        self.entries.push(format!("  {{{}}}", fields.join(", ")));
+    }
+
+    /// Number of recorded entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Render the JSON document.
+    pub fn render(&self) -> String {
+        format!("[\n{}\n]\n", self.entries.join(",\n"))
+    }
+
+    /// Write to `path`.
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.render())
+    }
+}
+
 /// Print a markdown-ish table (used by the table/figure regenerators).
 pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
     println!("\n== {title} ==");
@@ -79,5 +152,44 @@ mod tests {
     fn gain_sign_convention() {
         assert!((gain_pct(100.0, 90.0) - 10.0).abs() < 1e-9);
         assert!(gain_pct(100.0, 110.0) < 0.0);
+    }
+
+    #[test]
+    fn json_report_renders_valid_records() {
+        let mut rep = JsonReport::new();
+        let r = BenchResult {
+            name: "xnor(1024b) \"fused\"".to_string(),
+            median_ns: 123.456,
+            mean_ns: 130.0,
+            iters: 10,
+        };
+        rep.add(&r, &[("speedup_vs_reference", 4.2), ("bad", f64::NAN)]);
+        rep.add(&r, &[]);
+        assert_eq!(rep.len(), 2);
+        let doc = rep.render();
+        assert!(doc.starts_with("[\n"));
+        assert!(doc.ends_with("]\n"));
+        assert!(doc.contains("\"median_ns\": 123.456"));
+        assert!(doc.contains("\"speedup_vs_reference\": 4.200"));
+        assert!(doc.contains("\"bad\": null"));
+        // Escaped quotes survive.
+        assert!(doc.contains("xnor(1024b) \\\"fused\\\""));
+        // Balanced braces/brackets (cheap well-formedness check).
+        assert_eq!(doc.matches('{').count(), doc.matches('}').count());
+        assert_eq!(doc.matches('[').count(), doc.matches(']').count());
+    }
+
+    #[test]
+    fn json_report_writes_file() {
+        let mut rep = JsonReport::new();
+        rep.add(
+            &BenchResult { name: "t".into(), median_ns: 1.0, mean_ns: 1.0, iters: 1 },
+            &[],
+        );
+        let p = std::env::temp_dir().join(format!("scnn_json_{}.json", std::process::id()));
+        rep.write(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert!(text.contains("\"name\": \"t\""));
     }
 }

@@ -1,17 +1,24 @@
-//! L3 serving coordinator: request router + dynamic batcher + PJRT worker.
+//! L3 serving coordinator: request router + dynamic batcher + worker.
 //!
-//! The PJRT engines are owned by a dedicated worker thread (raw PJRT
-//! handles are not `Send`-safe to share); requests flow through channels:
+//! Two backends share the router/batcher machinery ([`ServeBackend`]):
+//!
+//! * **PJRT** — engines owned by a dedicated worker thread (raw PJRT
+//!   handles are not `Send`-safe to share) executing an HLO ladder;
+//! * **Stochastic** — the in-process bit-exact SC engine: one
+//!   [`ForwardPlan`] compiled at startup (gather tables, layer randoms and
+//!   every weight SNG stream amortized across the worker's lifetime) and
+//!   batches executed through the parallel `run_batch` path.
 //!
 //! ```text
-//! clients ──infer()──▶ router queue ──batcher──▶ worker (b32 / b1 exec)
+//! clients ──infer()──▶ router queue ──batcher──▶ worker (ladder / SC plan)
 //!                                            └─▶ responses (per request)
 //! ```
 //!
-//! Batching policy: drain the queue up to `batch_max`; execute full
-//! `batch_max`-sized chunks on the batched executable and the remainder on
-//! the single-sample executable; a short `linger` lets concurrent clients
-//! coalesce (the classic dynamic-batching tradeoff).
+//! Batching policy: drain the queue up to `batch_max`; for PJRT, execute
+//! full `batch_max`-sized chunks on the batched executable and the
+//! remainder on the single-sample executable; for the SC engine, run the
+//! drained set as one parallel batch. A short `linger` lets concurrent
+//! clients coalesce (the classic dynamic-batching tradeoff).
 //!
 //! (This environment vendors no tokio; std::thread + mpsc supply the same
 //! structure — see Cargo.toml note.)
@@ -20,6 +27,8 @@ pub mod stats;
 
 pub use stats::ServeStats;
 
+use crate::accel::layers::NetworkSpec;
+use crate::accel::network::{ForwardMode, ForwardPlan, QuantizedWeights};
 use crate::runtime::Engine;
 use anyhow::{anyhow, Context, Result};
 use std::path::PathBuf;
@@ -34,12 +43,34 @@ struct Request {
     respond: mpsc::Sender<Result<Vec<f32>>>,
 }
 
+/// What executes batches on the worker thread.
+#[derive(Debug, Clone)]
+pub enum ServeBackend {
+    /// PJRT executable ladder as (batch_size, path); must include batch
+    /// size 1. The batcher greedily picks the largest size ≤ pending.
+    Pjrt {
+        /// The (batch, HLO path) ladder.
+        hlo_ladder: Vec<(usize, PathBuf)>,
+    },
+    /// In-process bit-exact / analytic SC inference through a compiled
+    /// [`ForwardPlan`] and the parallel batched forward.
+    Stochastic {
+        /// Network topology.
+        net: NetworkSpec,
+        /// Quantized weights.
+        weights: QuantizedWeights,
+        /// Forward mode (any [`ForwardMode`]).
+        mode: ForwardMode,
+        /// Maximum requests drained into one batch.
+        batch_max: usize,
+    },
+}
+
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
-    /// HLO artifacts as (batch_size, path); must include batch size 1.
-    /// The batcher greedily picks the largest size ≤ pending requests.
-    pub hlo_ladder: Vec<(usize, PathBuf)>,
+    /// The execution backend.
+    pub backend: ServeBackend,
     /// Input element count per image (c·h·w).
     pub image_len: usize,
     /// Input dims excluding batch (c, h, w).
@@ -51,9 +82,14 @@ pub struct CoordinatorConfig {
 }
 
 impl CoordinatorConfig {
-    /// Largest batch size in the ladder.
+    /// Largest batch the backend executes at once.
     pub fn batch_max(&self) -> usize {
-        self.hlo_ladder.iter().map(|&(b, _)| b).max().unwrap_or(1)
+        match &self.backend {
+            ServeBackend::Pjrt { hlo_ladder } => {
+                hlo_ladder.iter().map(|&(b, _)| b).max().unwrap_or(1)
+            }
+            ServeBackend::Stochastic { batch_max, .. } => (*batch_max).max(1),
+        }
     }
 }
 
@@ -65,7 +101,8 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the worker thread (loads + compiles both executables there).
+    /// Start the worker thread (loads + compiles executables / the SC
+    /// forward plan there).
     pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
         let (tx, rx) = mpsc::channel::<Request>();
         let stats = Arc::new(Mutex::new(ServeStats::new()));
@@ -138,25 +175,55 @@ impl Drop for Coordinator {
     }
 }
 
+/// The worker-side executor built from a [`ServeBackend`].
+enum WorkerEngine {
+    /// PJRT ladder, largest batch first.
+    Ladder(Vec<(usize, Engine)>),
+    /// Compiled SC plan.
+    Plan(ForwardPlan),
+}
+
+fn build_engine(cfg: &CoordinatorConfig) -> Result<WorkerEngine> {
+    match &cfg.backend {
+        ServeBackend::Pjrt { hlo_ladder } => {
+            let mut v = Vec::new();
+            for (b, path) in hlo_ladder {
+                v.push((*b, Engine::load(path)?));
+            }
+            v.sort_by(|a, b| b.0.cmp(&a.0));
+            if v.last().map(|&(b, _)| b) != Some(1) {
+                anyhow::bail!("ladder must include batch size 1");
+            }
+            Ok(WorkerEngine::Ladder(v))
+        }
+        ServeBackend::Stochastic { net, weights, mode, .. } => {
+            let plan = ForwardPlan::new(net, weights, *mode);
+            if plan.in_len() != cfg.image_len {
+                anyhow::bail!(
+                    "network expects {} inputs, config says {}",
+                    plan.in_len(),
+                    cfg.image_len
+                );
+            }
+            if plan.out_len() != cfg.classes {
+                anyhow::bail!(
+                    "network emits {} classes, config says {}",
+                    plan.out_len(),
+                    cfg.classes
+                );
+            }
+            Ok(WorkerEngine::Plan(plan))
+        }
+    }
+}
+
 fn worker_loop(
     cfg: CoordinatorConfig,
     rx: mpsc::Receiver<Request>,
     stats: Arc<Mutex<ServeStats>>,
     ready: mpsc::Sender<Result<()>>,
 ) {
-    // Ladder of executables, largest batch first.
-    let engines = (|| -> Result<Vec<(usize, Engine)>> {
-        let mut v = Vec::new();
-        for (b, path) in &cfg.hlo_ladder {
-            v.push((*b, Engine::load(path)?));
-        }
-        v.sort_by(|a, b| b.0.cmp(&a.0));
-        if v.last().map(|&(b, _)| b) != Some(1) {
-            anyhow::bail!("ladder must include batch size 1");
-        }
-        Ok(v)
-    })();
-    let ladder = match engines {
+    let engine = match build_engine(&cfg) {
         Ok(e) => {
             let _ = ready.send(Ok(()));
             e
@@ -189,38 +256,78 @@ fn worker_loop(
             }
         }
 
-        // Greedy chunking down the ladder.
-        let mut idx = 0;
-        while idx < pending.len() {
-            let remaining = pending.len() - idx;
-            let (bsz, engine) = ladder
-                .iter()
-                .find(|&&(b, _)| b <= remaining)
-                .map(|(b, e)| (*b, e))
-                .expect("ladder contains batch 1");
-            let chunk = &pending[idx..idx + bsz];
-            let dims = [bsz as i64, c as i64, h as i64, w as i64];
-            let mut flat = Vec::with_capacity(bsz * cfg.image_len);
-            for r in chunk {
-                flat.extend_from_slice(&r.image);
-            }
-            match engine.run_f32(&flat, &dims) {
-                Ok(out) => {
-                    for (j, r) in chunk.iter().enumerate() {
-                        let logits = out[j * cfg.classes..(j + 1) * cfg.classes].to_vec();
-                        // Record before responding: clients may read stats
-                        // immediately after their reply arrives.
-                        stats.lock().unwrap().record(r.enqueued.elapsed(), bsz);
-                        let _ = r.respond.send(Ok(logits));
-                    }
-                }
-                Err(e) => {
+        match &engine {
+            WorkerEngine::Ladder(ladder) => {
+                // Greedy chunking down the ladder.
+                let mut idx = 0;
+                while idx < pending.len() {
+                    let remaining = pending.len() - idx;
+                    let (bsz, engine) = ladder
+                        .iter()
+                        .find(|&&(b, _)| b <= remaining)
+                        .map(|(b, e)| (*b, e))
+                        .expect("ladder contains batch 1");
+                    let chunk = &pending[idx..idx + bsz];
+                    let dims = [bsz as i64, c as i64, h as i64, w as i64];
+                    let mut flat = Vec::with_capacity(bsz * cfg.image_len);
                     for r in chunk {
-                        let _ = r.respond.send(Err(anyhow!("exec failed: {e}")));
+                        flat.extend_from_slice(&r.image);
                     }
+                    match engine.run_f32(&flat, &dims) {
+                        Ok(out) => {
+                            for (j, r) in chunk.iter().enumerate() {
+                                let logits =
+                                    out[j * cfg.classes..(j + 1) * cfg.classes].to_vec();
+                                // Record before responding: clients may read
+                                // stats right after their reply arrives.
+                                stats.lock().unwrap().record(r.enqueued.elapsed(), bsz);
+                                let _ = r.respond.send(Ok(logits));
+                            }
+                        }
+                        Err(e) => {
+                            for r in chunk {
+                                let _ = r.respond.send(Err(anyhow!("exec failed: {e}")));
+                            }
+                        }
+                    }
+                    idx += bsz;
                 }
             }
-            idx += bsz;
+            WorkerEngine::Plan(plan) => {
+                // Reject malformed requests individually; batch the rest.
+                let mut valid = Vec::with_capacity(pending.len());
+                for r in pending {
+                    if r.image.len() != cfg.image_len {
+                        let _ = r.respond.send(Err(anyhow!(
+                            "request image has {} elements, expected {}",
+                            r.image.len(),
+                            cfg.image_len
+                        )));
+                    } else {
+                        valid.push(r);
+                    }
+                }
+                if valid.is_empty() {
+                    continue;
+                }
+                let inputs: Vec<Vec<f64>> = valid
+                    .iter()
+                    .map(|r| r.image.iter().map(|&v| v as f64).collect())
+                    .collect();
+                // Lone requests still get the cores (neuron-parallel);
+                // real batches fan out image-parallel. Bit-identical.
+                let outputs = if inputs.len() == 1 {
+                    vec![plan.run(&inputs[0])]
+                } else {
+                    plan.run_batch(&inputs)
+                };
+                let bsz = valid.len();
+                for (r, out) in valid.iter().zip(outputs) {
+                    let logits: Vec<f32> = out.iter().map(|&v| v as f32).collect();
+                    stats.lock().unwrap().record(r.enqueued.elapsed(), bsz);
+                    let _ = r.respond.send(Ok(logits));
+                }
+            }
         }
     }
 }
@@ -228,6 +335,9 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::accel::layers::{LayerKind, LayerSpec};
+    use crate::accel::network::{forward, LayerWeights};
+    use crate::sc::quantize_bipolar;
     use std::io::Write;
 
     /// Identity-ish test graphs: logits = mean over pixels broadcast with a
@@ -272,7 +382,9 @@ ENTRY main {{
         let pb = write_tmp(&format!("bb_{batch_max}"), &fake_model_hlo(batch_max));
         (
             CoordinatorConfig {
-                hlo_ladder: vec![(1, p1.clone()), (batch_max, pb.clone())],
+                backend: ServeBackend::Pjrt {
+                    hlo_ladder: vec![(1, p1.clone()), (batch_max, pb.clone())],
+                },
                 image_len: 4,
                 image_dims: (1, 2, 2),
                 classes: 10,
@@ -319,12 +431,112 @@ ENTRY main {{
     #[test]
     fn startup_failure_reported() {
         let cfg = CoordinatorConfig {
-            hlo_ladder: vec![(1, PathBuf::from("/nonexistent.hlo.txt"))],
+            backend: ServeBackend::Pjrt {
+                hlo_ladder: vec![(1, PathBuf::from("/nonexistent.hlo.txt"))],
+            },
             image_len: 4,
             image_dims: (1, 2, 2),
             classes: 10,
             linger: Duration::from_millis(1),
         };
         assert!(Coordinator::start(cfg).is_err());
+    }
+
+    fn tiny_net() -> NetworkSpec {
+        NetworkSpec {
+            name: "tiny".into(),
+            input: (1, 4, 4),
+            layers: vec![LayerSpec {
+                kind: LayerKind::Dense { inputs: 16, outputs: 3 },
+                relu: false,
+            }],
+        }
+    }
+
+    fn tiny_weights(bits: u32) -> QuantizedWeights {
+        let codes: Vec<Vec<u32>> = (0..3)
+            .map(|oc| {
+                (0..16)
+                    .map(|j| {
+                        quantize_bipolar(((oc * 7 + j) % 11) as f64 / 5.5 - 1.0, bits)
+                    })
+                    .collect()
+            })
+            .collect();
+        QuantizedWeights {
+            bits,
+            layers: vec![LayerWeights { codes, gamma: 1.0, mu: 0.0 }],
+        }
+    }
+
+    fn sc_cfg(mode: ForwardMode, batch_max: usize) -> CoordinatorConfig {
+        CoordinatorConfig {
+            backend: ServeBackend::Stochastic {
+                net: tiny_net(),
+                weights: tiny_weights(8),
+                mode,
+                batch_max,
+            },
+            image_len: 16,
+            image_dims: (1, 4, 4),
+            classes: 3,
+            linger: Duration::from_millis(5),
+        }
+    }
+
+    #[test]
+    fn stochastic_backend_roundtrip_matches_forward() {
+        let coord = Coordinator::start(sc_cfg(ForwardMode::Expectation, 8)).unwrap();
+        let image: Vec<f32> = (0..16).map(|i| i as f32 / 16.0).collect();
+        let served = coord.infer(image.clone()).unwrap();
+        assert_eq!(served.len(), 3);
+        let direct = forward(
+            &tiny_net(),
+            &tiny_weights(8),
+            &image.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+            ForwardMode::Expectation,
+        );
+        for (s, d) in served.iter().zip(&direct) {
+            assert!((*s as f64 - d).abs() < 1e-6, "served {s} direct {d}");
+        }
+    }
+
+    #[test]
+    fn stochastic_backend_batches_concurrent_clients() {
+        let coord =
+            Coordinator::start(sc_cfg(ForwardMode::Stochastic { k: 64, seed: 9 }, 16)).unwrap();
+        let images: Vec<Vec<f32>> =
+            (0..24).map(|i| (0..16).map(|j| ((i + j) % 10) as f32 / 10.0).collect()).collect();
+        let preds = coord.infer_all(&images, 6).unwrap();
+        assert_eq!(preds.len(), 24);
+        let st = coord.stats();
+        assert_eq!(st.count(), 24);
+        assert!(
+            st.mean_batch() > 1.0,
+            "concurrent load should produce real SC batches (mean {})",
+            st.mean_batch()
+        );
+        // Served predictions must match the engine run directly (bit-exact
+        // streams: same seed, same lanes).
+        for (i, img) in images.iter().take(4).enumerate() {
+            let direct = crate::accel::network::classify(&forward(
+                &tiny_net(),
+                &tiny_weights(8),
+                &img.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+                ForwardMode::Stochastic { k: 64, seed: 9 },
+            ));
+            assert_eq!(preds[i], direct, "image {i}");
+        }
+    }
+
+    #[test]
+    fn stochastic_backend_validates_shapes() {
+        // classes mismatch caught at startup.
+        let mut cfg = sc_cfg(ForwardMode::Expectation, 4);
+        cfg.classes = 10;
+        assert!(Coordinator::start(cfg).is_err());
+        // bad request length rejected per-request.
+        let coord = Coordinator::start(sc_cfg(ForwardMode::Expectation, 4)).unwrap();
+        assert!(coord.infer(vec![0.0; 5]).is_err());
     }
 }

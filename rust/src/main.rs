@@ -13,9 +13,9 @@
 //! environment — see the Cargo.toml note.)
 
 use anyhow::{bail, Context, Result};
-use scnn::accel::network::{classify, forward, ForwardMode};
+use scnn::accel::network::{classify, forward_batch, ForwardMode};
 use scnn::accel::{channel, layers::NetworkSpec, metrics::argmin_by, system};
-use scnn::coordinator::{Coordinator, CoordinatorConfig};
+use scnn::coordinator::{Coordinator, CoordinatorConfig, ServeBackend};
 use scnn::data::{Artifacts, Dataset, ModelWeights};
 use scnn::tech::TechKind;
 use std::collections::HashMap;
@@ -71,8 +71,10 @@ fn print_help() {
          USAGE: scnn <command> [--flags]\n\
          \n\
          COMMANDS:\n\
-           serve     --artifacts DIR --n N --threads T    serve test set via PJRT\n\
+           serve     --artifacts DIR --n N --threads T --backend pjrt|sc\n\
+                     serve the test set (PJRT graph or bit-exact SC engine)\n\
            simulate  --mode stochastic|expectation|fixed --k K --bits B --n N\n\
+                     batched-parallel bit-exact simulation over the test set\n\
            sweep     --tech rfet|finfet --max-channels C  Fig. 13 design space\n\
            report    --table 1|2|3                        paper tables\n"
     );
@@ -82,17 +84,42 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     let artifacts = Artifacts::new(flag::<String>(flags, "artifacts", "artifacts".into()));
     let n: usize = flag(flags, "n", 200);
     let threads: usize = flag(flags, "threads", 8);
-    if !artifacts.present() {
+    let backend_s: String = flag(flags, "backend", "pjrt".into());
+    if !artifacts.dataset("digits").exists() {
         bail!("artifacts missing — run `make artifacts` first");
     }
     let ds = Dataset::load(&artifacts.dataset("digits"))?;
     let n = n.min(ds.len());
+    let backend = match backend_s.as_str() {
+        "pjrt" => {
+            if !artifacts.present() {
+                bail!("artifacts missing — run `make artifacts` first");
+            }
+            ServeBackend::Pjrt {
+                hlo_ladder: vec![
+                    (1, artifacts.hlo("lenet5", 1)),
+                    (8, artifacts.hlo("lenet5", 8)),
+                    (32, artifacts.hlo("lenet5", 32)),
+                ],
+            }
+        }
+        "sc" => {
+            // Bit-exact SC serving: one ForwardPlan reused for the whole run.
+            let k: usize = flag(flags, "k", 32);
+            let bits: u32 = flag(flags, "bits", 8);
+            let weights =
+                ModelWeights::load(&artifacts.weights("lenet5", "sc"))?.quantize(bits);
+            ServeBackend::Stochastic {
+                net: NetworkSpec::lenet5(),
+                weights,
+                mode: ForwardMode::Stochastic { k, seed: 7 },
+                batch_max: 32,
+            }
+        }
+        other => bail!("unknown backend {other:?} (pjrt|sc)"),
+    };
     let cfg = CoordinatorConfig {
-        hlo_ladder: vec![
-            (1, artifacts.hlo("lenet5", 1)),
-            (8, artifacts.hlo("lenet5", 8)),
-            (32, artifacts.hlo("lenet5", 32)),
-        ],
+        backend,
         image_len: ds.shape.0 * ds.shape.1 * ds.shape.2,
         image_dims: ds.shape,
         classes: 10,
@@ -136,16 +163,23 @@ fn simulate(flags: &HashMap<String, String>) -> Result<()> {
     };
     let n = n.min(ds.len());
     let t = Instant::now();
-    let mut correct = 0;
-    for i in 0..n {
-        let img: Vec<f64> = ds.images[i].iter().map(|&v| v as f64).collect();
-        let out = forward(&net, &weights, &img, mode);
-        correct += (classify(&out) == ds.labels[i] as usize) as usize;
-    }
+    // Batched-parallel forward: the plan (gathers, randoms, weight streams)
+    // is compiled once and the images fan out across cores.
+    let inputs: Vec<Vec<f64>> = ds.images[..n]
+        .iter()
+        .map(|img| img.iter().map(|&v| v as f64).collect())
+        .collect();
+    let outputs = forward_batch(&net, &weights, &inputs, mode);
+    let correct = outputs
+        .iter()
+        .zip(&ds.labels[..n])
+        .filter(|(out, &l)| classify(out) == l as usize)
+        .count();
     println!(
-        "mode={mode_s} k={k} bits={bits}: accuracy {:.2}% ({correct}/{n}) in {:.1} s",
+        "mode={mode_s} k={k} bits={bits}: accuracy {:.2}% ({correct}/{n}) in {:.1} s ({:.1} img/s)",
         100.0 * correct as f64 / n as f64,
-        t.elapsed().as_secs_f64()
+        t.elapsed().as_secs_f64(),
+        n as f64 / t.elapsed().as_secs_f64()
     );
     Ok(())
 }

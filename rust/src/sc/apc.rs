@@ -197,17 +197,13 @@ pub fn decode_output(bits: &[bool]) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sc::rng::XorShift64;
     use crate::sim::Evaluator;
     use crate::tech::CellKind;
 
     fn xorshift(seed: u64) -> impl FnMut() -> u64 {
-        let mut s = seed.max(1);
-        move || {
-            s ^= s << 13;
-            s ^= s >> 7;
-            s ^= s << 17;
-            s
-        }
+        let mut g = XorShift64::new(seed);
+        move || g.next_u64()
     }
 
     #[test]

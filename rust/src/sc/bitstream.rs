@@ -4,6 +4,34 @@
 //! (unipolar AND-multiply, bipolar XNOR-multiply, correlated-OR max) are
 //! word-parallel. This is the L3 hot path: the bit-exact SCNN accuracy
 //! experiments (Fig. 11/12) and the serving-side validation both run on it.
+//!
+//! # Fused-kernel API
+//!
+//! The steady-state inference loop is allocation-free. Three API families
+//! support that (EXPERIMENTS.md §Perf has the measured effect):
+//!
+//! * **word-at-a-time construction** — [`Bitstream::from_fn_words`] builds
+//!   64 bits per generator call instead of one ([`Bitstream::from_fn`] stays
+//!   as the simple/reference path);
+//! * **in-place operators** — [`Bitstream::xnor_into`], [`and_into`],
+//!   [`or_into`], [`not_into`] write into a caller-owned output stream,
+//!   reusing its buffer (the allocating [`xnor`]/[`and`]/[`or`]/[`not`]
+//!   remain for convenience and as the reference semantics);
+//! * **fused accumulation** — [`VerticalCounter::add_xnor`] accumulates the
+//!   XNOR product of two streams directly into the counter planes with no
+//!   intermediate stream, and [`VerticalCounter::add3`] retires three
+//!   streams per ripple pass with a 3:2 carry-save step.
+//!   [`VerticalCounter::b2s_ones`] then fuses B2S + ReLU-max + S2B into a
+//!   single popcount pass so a whole SC neuron runs without materializing
+//!   any intermediate bitstream.
+//!
+//! [`xnor`]: Bitstream::xnor
+//! [`and`]: Bitstream::and
+//! [`or`]: Bitstream::or
+//! [`not`]: Bitstream::not
+//! [`and_into`]: Bitstream::and_into
+//! [`or_into`]: Bitstream::or_into
+//! [`not_into`]: Bitstream::not_into
 
 /// A fixed-length stochastic bitstream (bit t = value of the stream at
 /// clock cycle t). Trailing bits of the last word are kept at zero.
@@ -35,6 +63,38 @@ impl Bitstream {
             }
         }
         b
+    }
+
+    /// Build from a word-generator called once per 64 cycles: `f(w)` returns
+    /// the packed bits for cycles `64w..64w+64` (bit i of the word = cycle
+    /// `64w+i`). Surplus tail bits are masked off. This is the fast path for
+    /// stream generators that can produce whole words (SNG lanes, constant
+    /// patterns) — one call per 64 cycles instead of one per cycle.
+    pub fn from_fn_words(len: usize, mut f: impl FnMut(usize) -> u64) -> Self {
+        let n_words = len.div_ceil(64);
+        let mut words = Vec::with_capacity(n_words);
+        for w in 0..n_words {
+            words.push(f(w));
+        }
+        let mut b = Bitstream { words, len };
+        b.mask_tail();
+        b
+    }
+
+    /// Refill this stream in place from a word-generator (same contract as
+    /// [`from_fn_words`], reusing the existing buffer — no allocation when
+    /// the word count is unchanged).
+    ///
+    /// [`from_fn_words`]: Bitstream::from_fn_words
+    pub fn fill_from_fn_words(&mut self, len: usize, mut f: impl FnMut(usize) -> u64) {
+        let n_words = len.div_ceil(64);
+        self.words.clear();
+        self.words.reserve(n_words);
+        for w in 0..n_words {
+            self.words.push(f(w));
+        }
+        self.len = len;
+        self.mask_tail();
     }
 
     /// Build from a slice of bools.
@@ -108,6 +168,18 @@ impl Bitstream {
         out
     }
 
+    /// In-place variant of [`zip`](Bitstream::zip): writes into `out`,
+    /// resizing its buffer only when the word count changed.
+    fn zip_into(&self, other: &Self, out: &mut Self, f: impl Fn(u64, u64) -> u64) {
+        assert_eq!(self.len, other.len, "bitstream length mismatch");
+        out.len = self.len;
+        out.words.resize(self.words.len(), 0);
+        for ((o, &a), &b) in out.words.iter_mut().zip(&self.words).zip(&other.words) {
+            *o = f(a, b);
+        }
+        out.mask_tail();
+    }
+
     /// Bitwise AND — unipolar SC multiply (Fig. 1a).
     pub fn and(&self, other: &Self) -> Self {
         self.zip(other, |a, b| a & b)
@@ -135,6 +207,36 @@ impl Bitstream {
             Bitstream { words: self.words.iter().map(|&w| !w).collect(), len: self.len };
         out.mask_tail();
         out
+    }
+
+    /// Allocation-free [`and`](Bitstream::and): result written into `out`.
+    pub fn and_into(&self, other: &Self, out: &mut Self) {
+        self.zip_into(other, out, |a, b| a & b);
+    }
+
+    /// Allocation-free [`or`](Bitstream::or): result written into `out`.
+    pub fn or_into(&self, other: &Self, out: &mut Self) {
+        self.zip_into(other, out, |a, b| a | b);
+    }
+
+    /// Allocation-free [`xnor`](Bitstream::xnor): result written into `out`.
+    pub fn xnor_into(&self, other: &Self, out: &mut Self) {
+        self.zip_into(other, out, |a, b| !(a ^ b));
+    }
+
+    /// Allocation-free [`xor`](Bitstream::xor): result written into `out`.
+    pub fn xor_into(&self, other: &Self, out: &mut Self) {
+        self.zip_into(other, out, |a, b| a ^ b);
+    }
+
+    /// Allocation-free [`not`](Bitstream::not): result written into `out`.
+    pub fn not_into(&self, out: &mut Self) {
+        out.len = self.len;
+        out.words.resize(self.words.len(), 0);
+        for (o, &a) in out.words.iter_mut().zip(&self.words) {
+            *o = !a;
+        }
+        out.mask_tail();
     }
 
     /// Stochastic cross-correlation (SCC) of two streams [26]:
@@ -166,24 +268,60 @@ impl Bitstream {
 /// after `add`-ing every product stream of a neuron, `count_at(t)` is
 /// exactly the APC input count at cycle `t`, and the whole structure costs
 /// O(words × planes) per stream instead of O(bits).
+///
+/// Planes are stored in one flat allocation (plane-major), so a counter can
+/// be [`reset`](VerticalCounter::reset) and reused across neurons with zero
+/// further allocation — the backbone of the fused stochastic forward.
 #[derive(Debug, Clone)]
 pub struct VerticalCounter {
-    /// planes[p] holds bit p of the per-cycle count, packed like a stream.
-    planes: Vec<Vec<u64>>,
+    /// Flat plane storage: plane `p` occupies
+    /// `planes[p·words_per_plane .. (p+1)·words_per_plane]`; bit `t%64` of
+    /// word `t/64` in plane `p` is bit `p` of the per-cycle count at `t`.
+    planes: Vec<u64>,
+    words_per_plane: usize,
+    n_planes: usize,
     len: usize,
     added: usize,
+}
+
+impl Default for VerticalCounter {
+    /// An empty zero-capacity counter (reconfigure before use).
+    fn default() -> Self {
+        VerticalCounter::new(0, 0)
+    }
 }
 
 impl VerticalCounter {
     /// Counter for streams of `len` cycles, able to count up to
     /// `max_count` streams.
     pub fn new(len: usize, max_count: usize) -> Self {
-        let bits = usize::BITS - max_count.leading_zeros(); // ceil(log2(max+1))
-        VerticalCounter {
-            planes: vec![vec![0u64; len.div_ceil(64)]; bits as usize],
-            len,
+        let mut vc = VerticalCounter {
+            planes: Vec::new(),
+            words_per_plane: 0,
+            n_planes: 0,
+            len: 0,
             added: 0,
-        }
+        };
+        vc.reconfigure(len, max_count);
+        vc
+    }
+
+    /// Re-dimension for a new stream length / capacity, reusing the existing
+    /// allocation when it is large enough, and clear all counts.
+    pub fn reconfigure(&mut self, len: usize, max_count: usize) {
+        let bits = (usize::BITS - max_count.leading_zeros()) as usize; // ceil(log2(max+1))
+        self.words_per_plane = len.div_ceil(64);
+        self.n_planes = bits;
+        self.len = len;
+        self.added = 0;
+        self.planes.clear();
+        self.planes.resize(self.words_per_plane * bits, 0);
+    }
+
+    /// Clear all counts, keeping dimensions and allocation.
+    pub fn reset(&mut self) {
+        self.planes.fill(0);
+        self.added = 0;
     }
 
     /// Number of streams added so far.
@@ -201,26 +339,100 @@ impl VerticalCounter {
         self.len == 0
     }
 
+    /// Number of count bit-planes.
+    pub fn planes(&self) -> usize {
+        self.n_planes
+    }
+
+    #[inline]
+    fn bump_added(&mut self, by: usize) {
+        self.added += by;
+        assert!(
+            self.n_planes >= usize::BITS as usize
+                || (1usize << self.n_planes) > self.added,
+            "VerticalCounter overflow: {} streams exceed {} planes",
+            self.added,
+            self.n_planes
+        );
+    }
+
+    /// Ripple-insert a word of weight-`2^p` bits at word index `w`,
+    /// starting at plane `p`.
+    #[inline]
+    fn ripple(&mut self, w: usize, mut carry: u64, mut p: usize) {
+        while carry != 0 {
+            debug_assert!(p < self.n_planes, "ripple past the top plane");
+            let idx = p * self.words_per_plane + w;
+            let new_carry = self.planes[idx] & carry;
+            self.planes[idx] ^= carry;
+            carry = new_carry;
+            p += 1;
+        }
+    }
+
+    /// Mask for the (possibly partial) final word.
+    #[inline]
+    fn tail_mask(&self) -> u64 {
+        let rem = self.len % 64;
+        if rem == 0 {
+            !0u64
+        } else {
+            (1u64 << rem) - 1
+        }
+    }
+
     /// Add one stream to the per-cycle counts (ripple-carry across planes).
     pub fn add(&mut self, bs: &Bitstream) {
         assert_eq!(bs.len(), self.len, "stream length mismatch");
-        self.added += 1;
-        assert!(
-            (1usize << self.planes.len()) > self.added,
-            "VerticalCounter overflow: {} streams exceed {} planes",
-            self.added,
-            self.planes.len()
-        );
+        self.bump_added(1);
         for (w, &bits) in bs.words().iter().enumerate() {
-            let mut carry = bits;
-            for plane in &mut self.planes {
-                let new_carry = plane[w] & carry;
-                plane[w] ^= carry;
-                carry = new_carry;
-                if carry == 0 {
-                    break;
-                }
+            self.ripple(w, bits, 0);
+        }
+    }
+
+    /// Fused XNOR-accumulate: add the bipolar product stream `a XNOR b`
+    /// without materializing it (`vc.add_xnor(a, b) ≡ vc.add(&a.xnor(b))`,
+    /// with zero intermediate allocation).
+    pub fn add_xnor(&mut self, a: &Bitstream, b: &Bitstream) {
+        assert_eq!(a.len(), self.len, "stream length mismatch");
+        assert_eq!(b.len(), self.len, "stream length mismatch");
+        self.add_xnor_words(a.words(), b.words());
+    }
+
+    /// Word-slice form of [`add_xnor`](VerticalCounter::add_xnor), for
+    /// operands held in flat scratch arenas. Slices must hold exactly the
+    /// counter's word count; bits past `len` in the last word are ignored.
+    pub fn add_xnor_words(&mut self, a: &[u64], b: &[u64]) {
+        assert_eq!(a.len(), self.words_per_plane, "operand word-count mismatch");
+        assert_eq!(b.len(), self.words_per_plane, "operand word-count mismatch");
+        self.bump_added(1);
+        let last = self.words_per_plane.wrapping_sub(1);
+        let tail = self.tail_mask();
+        for w in 0..self.words_per_plane {
+            // XNOR sets the tail garbage bits; mask them on the final word.
+            let mut x = !(a[w] ^ b[w]);
+            if w == last {
+                x &= tail;
             }
+            self.ripple(w, x, 0);
+        }
+    }
+
+    /// Add three streams with one 3:2 carry-save step: the weight-1 sum
+    /// `a⊕b⊕c` and the weight-2 majority carry are rippled in together, so
+    /// three streams cost roughly one ripple pass instead of three
+    /// (`vc.add3(a, b, c) ≡ vc.add(a); vc.add(b); vc.add(c)`).
+    pub fn add3(&mut self, a: &Bitstream, b: &Bitstream, c: &Bitstream) {
+        assert_eq!(a.len(), self.len, "stream length mismatch");
+        assert_eq!(b.len(), self.len, "stream length mismatch");
+        assert_eq!(c.len(), self.len, "stream length mismatch");
+        self.bump_added(3);
+        for w in 0..self.words_per_plane {
+            let (aw, bw, cw) = (a.words()[w], b.words()[w], c.words()[w]);
+            let sum = aw ^ bw ^ cw;
+            let carry = (aw & bw) | (aw & cw) | (bw & cw);
+            self.ripple(w, sum, 0);
+            self.ripple(w, carry, 1);
         }
     }
 
@@ -228,38 +440,48 @@ impl VerticalCounter {
     pub fn count_at(&self, t: usize) -> u32 {
         assert!(t < self.len);
         let (w, s) = (t / 64, t % 64);
-        self.planes
-            .iter()
-            .enumerate()
-            .map(|(p, plane)| (((plane[w] >> s) & 1) as u32) << p)
+        (0..self.n_planes)
+            .map(|p| (((self.planes[p * self.words_per_plane + w] >> s) & 1) as u32) << p)
             .sum()
     }
 
     /// Sum of counts over all cycles (= Σ popcount of added streams).
     pub fn total(&self) -> u64 {
-        self.planes
-            .iter()
-            .enumerate()
-            .map(|(p, plane)| {
+        (0..self.n_planes)
+            .map(|p| {
+                let plane = &self.planes[p * self.words_per_plane..(p + 1) * self.words_per_plane];
                 (plane.iter().map(|w| w.count_ones() as u64).sum::<u64>()) << p
             })
             .sum()
+    }
+
+    /// Fused B2S → ReLU-max → S2B: the number of cycles where
+    /// `max(2·count, floor) > r4[t]` — i.e. the S2B popcount of the neuron
+    /// output stream `(2c_t > r4_t) OR (floor > r4_t)`, without building
+    /// either stream. Pass `floor = n` for the correlated-OR ReLU of a
+    /// fan-in-`n` neuron (Fig. 2), `floor = 0` for no activation.
+    pub fn b2s_ones(&self, r4: &[u32], floor: u32) -> u32 {
+        assert_eq!(r4.len(), self.len, "random sequence length mismatch");
+        let mut ones = 0u32;
+        for w in 0..self.words_per_plane {
+            let valid = (self.len - w * 64).min(64);
+            let base = w * 64;
+            for s in 0..valid {
+                let mut c = 0u32;
+                for p in 0..self.n_planes {
+                    c |= (((self.planes[p * self.words_per_plane + w] >> s) & 1) as u32) << p;
+                }
+                ones += ((2 * c).max(floor) > r4[base + s]) as u32;
+            }
+        }
+        ones
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn xorshift(seed: u64) -> impl FnMut() -> u64 {
-        let mut s = seed.max(1);
-        move || {
-            s ^= s << 13;
-            s ^= s >> 7;
-            s ^= s << 17;
-            s
-        }
-    }
+    use crate::sc::rng::XorShift64;
 
     #[test]
     fn construction_and_counting() {
@@ -281,25 +503,83 @@ mod tests {
     }
 
     #[test]
+    fn from_fn_words_matches_from_fn() {
+        let mut rng = XorShift64::new(99);
+        for len in [1usize, 63, 64, 65, 130, 1024] {
+            let bits: Vec<bool> = (0..len).map(|_| rng.next_u64() % 2 == 1).collect();
+            let a = Bitstream::from_fn(len, |t| bits[t]);
+            let b = Bitstream::from_fn_words(len, |w| {
+                let mut word = 0u64;
+                for (i, &bit) in bits.iter().skip(w * 64).take(64).enumerate() {
+                    word |= (bit as u64) << i;
+                }
+                word
+            });
+            assert_eq!(a, b, "len={len}");
+        }
+    }
+
+    #[test]
+    fn from_fn_words_masks_surplus_tail_bits() {
+        // Generator hands back all-ones words; only `len` bits may survive.
+        let b = Bitstream::from_fn_words(70, |_| !0u64);
+        assert_eq!(b.count_ones(), 70);
+        assert_eq!(b, Bitstream::ones(70));
+    }
+
+    #[test]
+    fn fill_from_fn_words_reuses_buffer() {
+        let mut b = Bitstream::zeros(128);
+        b.fill_from_fn_words(70, |_| !0u64);
+        assert_eq!(b.len(), 70);
+        assert_eq!(b.count_ones(), 70);
+        b.fill_from_fn_words(128, |w| if w == 0 { 1 } else { 2 });
+        assert_eq!(b.len(), 128);
+        assert_eq!(b.count_ones(), 2);
+        assert!(b.get(0) && b.get(65));
+    }
+
+    #[test]
+    fn in_place_ops_match_allocating_ops() {
+        let mut rng = XorShift64::new(5);
+        for len in [1usize, 64, 100, 257] {
+            let a = Bitstream::from_fn(len, |_| rng.next_u64() % 2 == 1);
+            let b = Bitstream::from_fn(len, |_| rng.next_u64() % 3 == 0);
+            // Start from a deliberately wrong-sized, junk-filled output.
+            let mut out = Bitstream::ones(3);
+            a.xnor_into(&b, &mut out);
+            assert_eq!(out, a.xnor(&b), "xnor len={len}");
+            a.and_into(&b, &mut out);
+            assert_eq!(out, a.and(&b), "and len={len}");
+            a.or_into(&b, &mut out);
+            assert_eq!(out, a.or(&b), "or len={len}");
+            a.xor_into(&b, &mut out);
+            assert_eq!(out, a.xor(&b), "xor len={len}");
+            a.not_into(&mut out);
+            assert_eq!(out, a.not(), "not len={len}");
+        }
+    }
+
+    #[test]
     fn unipolar_multiply_with_independent_streams() {
         // Deterministic independent-ish streams via distinct rngs.
-        let mut r1 = xorshift(11);
-        let mut r2 = xorshift(877);
+        let mut r1 = XorShift64::new(11);
+        let mut r2 = XorShift64::new(877);
         let len = 1 << 16;
-        let a = Bitstream::from_fn(len, |_| r1() % 100 < 40); // p=0.4
-        let b = Bitstream::from_fn(len, |_| r2() % 100 < 50); // p=0.5
+        let a = Bitstream::from_fn(len, |_| r1.next_u64() % 100 < 40); // p=0.4
+        let b = Bitstream::from_fn(len, |_| r2.next_u64() % 100 < 50); // p=0.5
         let prod = a.and(&b).value_unipolar();
         assert!((prod - 0.2).abs() < 0.02, "prod={prod}");
     }
 
     #[test]
     fn bipolar_multiply_with_xnor() {
-        let mut r1 = xorshift(5);
-        let mut r2 = xorshift(999);
+        let mut r1 = XorShift64::new(5);
+        let mut r2 = XorShift64::new(999);
         let len = 1 << 16;
         // a = +0.5 (p=0.75), b = -0.4 (p=0.3)
-        let a = Bitstream::from_fn(len, |_| r1() % 100 < 75);
-        let b = Bitstream::from_fn(len, |_| r2() % 100 < 30);
+        let a = Bitstream::from_fn(len, |_| r1.next_u64() % 100 < 75);
+        let b = Bitstream::from_fn(len, |_| r2.next_u64() % 100 < 30);
         let prod = a.xnor(&b).value_bipolar();
         assert!((prod - (-0.2)).abs() < 0.03, "prod={prod}");
     }
@@ -307,9 +587,9 @@ mod tests {
     #[test]
     fn correlated_or_is_max() {
         // Same comparator random source ⇒ fully correlated streams.
-        let mut rng = xorshift(3);
+        let mut rng = XorShift64::new(3);
         let len = 1 << 14;
-        let rs: Vec<u64> = (0..len).map(|_| rng() % 1000).collect();
+        let rs: Vec<u64> = (0..len).map(|_| rng.next_u64() % 1000).collect();
         let a = Bitstream::from_fn(len, |t| rs[t] < 300);
         let b = Bitstream::from_fn(len, |t| rs[t] < 700);
         assert!(a.scc(&b) > 0.99);
@@ -319,20 +599,20 @@ mod tests {
 
     #[test]
     fn scc_of_independent_streams_near_zero() {
-        let mut r1 = xorshift(21);
-        let mut r2 = xorshift(77);
+        let mut r1 = XorShift64::new(21);
+        let mut r2 = XorShift64::new(77);
         let len = 1 << 16;
-        let a = Bitstream::from_fn(len, |_| r1() % 2 == 0);
-        let b = Bitstream::from_fn(len, |_| r2() % 2 == 0);
+        let a = Bitstream::from_fn(len, |_| r1.next_u64() % 2 == 0);
+        let b = Bitstream::from_fn(len, |_| r2.next_u64() % 2 == 0);
         assert!(a.scc(&b).abs() < 0.05);
     }
 
     #[test]
     fn vertical_counter_matches_naive() {
-        let mut rng = xorshift(42);
+        let mut rng = XorShift64::new(42);
         let len = 130; // crosses word boundaries
         let streams: Vec<Bitstream> =
-            (0..25).map(|_| Bitstream::from_fn(len, |_| rng() % 3 == 0)).collect();
+            (0..25).map(|_| Bitstream::from_fn(len, |_| rng.next_u64() % 3 == 0)).collect();
         let mut vc = VerticalCounter::new(len, 25);
         for s in &streams {
             vc.add(s);
@@ -346,10 +626,108 @@ mod tests {
     }
 
     #[test]
+    fn add_xnor_equals_add_of_xnor() {
+        let mut rng = XorShift64::new(7);
+        for len in [1usize, 64, 100, 300] {
+            let pairs: Vec<(Bitstream, Bitstream)> = (0..9)
+                .map(|_| {
+                    (
+                        Bitstream::from_fn(len, |_| rng.next_u64() % 2 == 1),
+                        Bitstream::from_fn(len, |_| rng.next_u64() % 3 != 0),
+                    )
+                })
+                .collect();
+            let mut fused = VerticalCounter::new(len, pairs.len());
+            let mut composed = VerticalCounter::new(len, pairs.len());
+            for (a, b) in &pairs {
+                fused.add_xnor(a, b);
+                composed.add(&a.xnor(b));
+            }
+            assert_eq!(fused.added(), composed.added());
+            for t in 0..len {
+                assert_eq!(fused.count_at(t), composed.count_at(t), "len={len} t={t}");
+            }
+            assert_eq!(fused.total(), composed.total());
+        }
+    }
+
+    #[test]
+    fn add3_equals_three_adds() {
+        let mut rng = XorShift64::new(13);
+        for len in [1usize, 65, 192, 200] {
+            let ss: Vec<Bitstream> =
+                (0..6).map(|_| Bitstream::from_fn(len, |_| rng.next_u64() % 2 == 1)).collect();
+            let mut fused = VerticalCounter::new(len, 6);
+            let mut plain = VerticalCounter::new(len, 6);
+            fused.add3(&ss[0], &ss[1], &ss[2]);
+            fused.add3(&ss[3], &ss[4], &ss[5]);
+            for s in &ss {
+                plain.add(s);
+            }
+            assert_eq!(fused.added(), plain.added());
+            for t in 0..len {
+                assert_eq!(fused.count_at(t), plain.count_at(t), "len={len} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn reset_and_reconfigure_reuse() {
+        let mut vc = VerticalCounter::new(100, 10);
+        let s = Bitstream::ones(100);
+        vc.add(&s);
+        assert_eq!(vc.total(), 100);
+        vc.reset();
+        assert_eq!(vc.added(), 0);
+        assert_eq!(vc.total(), 0);
+        vc.add(&s);
+        assert_eq!(vc.total(), 100);
+        // Shrinking reconfigure must fully clear state.
+        vc.reconfigure(64, 3);
+        assert_eq!(vc.len(), 64);
+        assert_eq!(vc.total(), 0);
+        vc.add(&Bitstream::ones(64));
+        assert_eq!(vc.total(), 64);
+    }
+
+    #[test]
+    fn b2s_ones_matches_streamed_b2s() {
+        let mut rng = XorShift64::new(31);
+        let len = 200;
+        let n: usize = 7;
+        let streams: Vec<Bitstream> =
+            (0..n).map(|_| Bitstream::from_fn(len, |_| rng.next_u64() % 2 == 1)).collect();
+        let mut vc = VerticalCounter::new(len, n);
+        for s in &streams {
+            vc.add(s);
+        }
+        let m1 = usize::BITS - n.leading_zeros() + 1;
+        let r4: Vec<u32> =
+            (0..len).map(|_| (rng.next_u64() % (1u64 << m1)) as u32).collect();
+        // floor = 0: plain B2S.
+        let plain = Bitstream::from_fn(len, |t| 2 * vc.count_at(t) > r4[t]);
+        assert_eq!(vc.b2s_ones(&r4, 0), plain.count_ones());
+        // floor = n: B2S OR the ReLU zero-threshold stream.
+        let zero = Bitstream::from_fn(len, |t| n as u32 > r4[t]);
+        assert_eq!(vc.b2s_ones(&r4, n as u32), plain.or(&zero).count_ones());
+    }
+
+    #[test]
     #[should_panic(expected = "length mismatch")]
     fn length_mismatch_panics() {
         let a = Bitstream::zeros(8);
         let b = Bitstream::zeros(9);
         let _ = a.and(&b);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn counter_overflow_panics() {
+        let mut vc = VerticalCounter::new(10, 3);
+        let s = Bitstream::ones(10);
+        vc.add(&s);
+        vc.add(&s);
+        vc.add(&s);
+        vc.add(&s); // 4 > max_count 3
     }
 }

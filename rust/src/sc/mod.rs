@@ -10,6 +10,7 @@
 //! * [`pcc`] — CMP / MUX-chain / RFET NAND-NOR probability-conversion
 //!   circuits, incl. Lemma 1's inverter-insertion rule (II-C, III-A);
 //! * [`sng`] — stochastic number generators with RNS sharing (II-C);
+//! * [`rng`] — shared deterministic RNG kernels (xorshift64, splitmix64);
 //! * [`apc`] — accumulative parallel counters, exact + approximate (III-B);
 //! * [`adder_tree`] — configurable adder tree for wide neurons (IV-A);
 //! * [`converters`] — B2S and S2B converters (II-B, IV-A);
@@ -22,6 +23,7 @@ pub mod converters;
 pub mod lfsr;
 pub mod neuron;
 pub mod pcc;
+pub mod rng;
 pub mod sng;
 
 pub use bitstream::Bitstream;

@@ -32,13 +32,15 @@ pub fn m_bits(n: usize) -> u32 {
 
 /// Accumulate the per-cycle counts of the XNOR products of paired
 /// activation/weight streams (the multiplier array + APC front end).
+/// Uses the fused [`VerticalCounter::add_xnor`] kernel — no intermediate
+/// product stream is materialized.
 pub fn mac_counts(acts: &[Bitstream], weights: &[Bitstream]) -> VerticalCounter {
     assert_eq!(acts.len(), weights.len(), "act/weight fan-in mismatch");
     assert!(!acts.is_empty());
     let len = acts[0].len();
     let mut vc = VerticalCounter::new(len, acts.len());
     for (a, w) in acts.iter().zip(weights) {
-        vc.add(&a.xnor(w));
+        vc.add_xnor(a, w);
     }
     vc
 }
@@ -70,6 +72,16 @@ pub fn forward(
     } else {
         o
     }
+}
+
+/// S2B popcount of the neuron output without materializing the output
+/// stream: `forward(...).count_ones()` computed via the fused
+/// [`VerticalCounter::b2s_ones`] kernel. This is what the inference engine
+/// in `accel::network` runs per neuron.
+pub fn forward_ones(acts: &[Bitstream], weights: &[Bitstream], r4: &[u32], relu: bool) -> u32 {
+    let vc = mac_counts(acts, weights);
+    let floor = if relu { acts.len() as u32 } else { 0 };
+    vc.b2s_ones(r4, floor)
 }
 
 /// Max-pool a group of correlated neuron streams (OR = max for fully
@@ -229,6 +241,24 @@ mod tests {
                 (got - want).abs() < 0.08,
                 "relu={relu}: got {got}, want {want} (pre={pre})"
             );
+        }
+    }
+
+    #[test]
+    fn forward_ones_matches_streamed_forward() {
+        let bits = 8;
+        let len = 1000; // crosses word boundaries
+        let n = 12;
+        let acodes: Vec<u32> =
+            (0..n).map(|j| quantize_bipolar((j as f64 / n as f64) - 0.4, bits)).collect();
+        let wcodes: Vec<u32> =
+            (0..n).map(|j| quantize_bipolar(if j % 2 == 0 { 0.5 } else { -0.3 }, bits)).collect();
+        let acts = gen_correlated(&acodes, bits, bits, len, 9);
+        let wgts = gen_correlated(&wcodes, bits, bits + 3, len, 77);
+        let r4 = r4_sequence(n, len, 3);
+        for relu in [false, true] {
+            let streamed = forward(&acts, &wgts, &r4, relu).count_ones();
+            assert_eq!(forward_ones(&acts, &wgts, &r4, relu), streamed, "relu={relu}");
         }
     }
 

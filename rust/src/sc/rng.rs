@@ -1,0 +1,172 @@
+//! Shared deterministic RNG helpers for the SC datapath, tests, and benches.
+//!
+//! Before this module existed the xorshift/splitmix kernels were copy-pasted
+//! in three places (`benches/hotpath.rs`, the `sc::bitstream` tests, and the
+//! lane seeding in `accel::network`); they are now defined once here. All
+//! generators are tiny, allocation-free, and bit-reproducible across
+//! platforms — the stochastic forward's bit-exactness guarantee rests on
+//! these exact update rules, so **do not change the constants or the shift
+//! triples** without regenerating every golden vector.
+
+/// Weyl increment of splitmix64 (also the lane-spreading multiplier).
+pub const GOLDEN_GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// The splitmix64 finalizer (Stafford mix13): a strong 64→64 bit mixer.
+#[inline]
+pub fn mix64(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// One xorshift64 step (shift triple 13/7/17). The all-zero state is a
+/// fixed point; seed through [`XorShift64::new`] or [`lane_state`].
+#[inline]
+pub fn xorshift64_step(mut s: u64) -> u64 {
+    s ^= s << 13;
+    s ^= s >> 7;
+    s ^= s << 17;
+    s
+}
+
+/// Derive the xorshift state for one operand lane: splitmix-scrambled
+/// `base ^ lane·γ`, forced odd so the state is never zero. This is the
+/// per-PCC decorrelated-RNS abstraction of `accel::network` (DESIGN.md
+/// §Substitutions) — consecutive lanes land far apart in the sequence.
+#[inline]
+pub fn lane_state(base: u64, lane: u64) -> u64 {
+    mix64(base ^ lane.wrapping_mul(GOLDEN_GAMMA)) | 1
+}
+
+/// xorshift64 PRNG (13/7/17), the workhorse stream generator.
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    /// Seeded generator; zero seeds are nudged to 1 (xorshift fixed point).
+    pub fn new(seed: u64) -> Self {
+        XorShift64 { state: seed.max(1) }
+    }
+
+    /// Generator from a pre-scrambled nonzero state (e.g. [`lane_state`]).
+    pub fn from_state(state: u64) -> Self {
+        debug_assert!(state != 0, "xorshift64 cannot run from the zero state");
+        XorShift64 { state }
+    }
+
+    /// Next 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = xorshift64_step(self.state);
+        self.state
+    }
+
+    /// Next 32-bit value (low half — matches the lane-stream comparators).
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        self.next_u64() as u32
+    }
+}
+
+/// splitmix64 PRNG — used to derive independent seeds from one master seed.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Seeded generator (any seed is fine, including 0).
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    /// Next 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(GOLDEN_GAMMA);
+        mix64(self.state)
+    }
+}
+
+/// Deterministic per-site standard normal via splitmix + Box–Muller
+/// (the analytic SC sampling-noise model of `ForwardMode::NoisyExpectation`).
+pub fn gauss(site: u32, stream: u32) -> f64 {
+    let key = ((site as u64) << 32) | stream as u64;
+    let s = mix64(key.wrapping_mul(GOLDEN_GAMMA));
+    let u1 = ((s >> 11) as f64 / (1u64 << 53) as f64).max(1e-12);
+    let u2 = (s & 0xFFFF_FFFF) as f64 / 4294967296.0;
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_matches_reference_vector() {
+        // Known-answer test for splitmix64 seeded with 0 (Vigna's reference).
+        let mut g = SplitMix64::new(0);
+        assert_eq!(g.next_u64(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(g.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(g.next_u64(), 0x06C4_5D18_8009_454F);
+    }
+
+    #[test]
+    fn xorshift_matches_reference_vector() {
+        let mut g = XorShift64::new(1);
+        assert_eq!(g.next_u64(), 0x4082_2041);
+        assert_eq!(g.next_u64(), 0x1000_4106_0C01_1441);
+        assert_eq!(g.next_u64(), 0x9B1E_842F_6E86_2629);
+    }
+
+    #[test]
+    fn zero_seed_is_nudged() {
+        let mut g = XorShift64::new(0);
+        assert_ne!(g.next_u64(), 0);
+    }
+
+    #[test]
+    fn lane_state_is_odd_and_spread() {
+        for lane in 0..64u64 {
+            let s = lane_state(7, lane);
+            assert_eq!(s & 1, 1);
+        }
+        // Adjacent lanes decorrelate: top halves differ.
+        assert_ne!(lane_state(7, 0) >> 32, lane_state(7, 1) >> 32);
+    }
+
+    #[test]
+    fn mix64_known_point() {
+        // mix64 is a bijection with 0 as a fixed point (why lane_state or-s 1).
+        assert_eq!(mix64(0), 0);
+        assert_ne!(mix64(1), mix64(2));
+    }
+
+    #[test]
+    fn gauss_is_deterministic_and_roughly_normal() {
+        assert_eq!(gauss(3, 5).to_bits(), gauss(3, 5).to_bits());
+        let n = 4096;
+        let mut sum = 0.0;
+        let mut sumsq = 0.0;
+        for i in 0..n {
+            let z = gauss(i, 17);
+            sum += z;
+            sumsq += z * z;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.1, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.15, "var={var}");
+    }
+
+    #[test]
+    fn xorshift_distribution_smoke() {
+        let mut g = XorShift64::new(42);
+        let n = 1 << 14;
+        let ones: u32 = (0..n).map(|_| (g.next_u64() & 1) as u32).sum();
+        let frac = ones as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.05, "lsb bias {frac}");
+    }
+}

@@ -6,18 +6,16 @@ use scnn::accel::metrics::SystemMetrics;
 use scnn::sc::apc::{approximate_count, decode_output, Apc};
 use scnn::sc::bitstream::{Bitstream, VerticalCounter};
 use scnn::sc::pcc::{expected_output, pcc_bit, PccKind};
+use scnn::sc::rng::XorShift64;
 use scnn::sc::{dequantize_bipolar, quantize_bipolar};
 
-struct Gen(u64);
+struct Gen(XorShift64);
 impl Gen {
     fn new(seed: u64) -> Self {
-        Gen(seed.max(1))
+        Gen(XorShift64::new(seed))
     }
     fn next(&mut self) -> u64 {
-        self.0 ^= self.0 << 13;
-        self.0 ^= self.0 >> 7;
-        self.0 ^= self.0 << 17;
-        self.0
+        self.0.next_u64()
     }
     fn range(&mut self, lo: u64, hi: u64) -> u64 {
         lo + self.next() % (hi - lo)
@@ -64,6 +62,122 @@ fn prop_bitstream_ops_preserve_length_and_counts() {
         assert_eq!(a.xnor(&b), a.xor(&b).not());
         // Counts bounded by length.
         assert!(a.count_ones() as usize <= len);
+    });
+}
+
+#[test]
+fn prop_from_fn_words_equals_from_fn() {
+    // Word-at-a-time construction ≡ per-bit construction, on random
+    // lengths crossing word boundaries.
+    prop("from_fn_words", 300, |g| {
+        let len = g.range(1, 400) as usize;
+        let bits: Vec<bool> = (0..len).map(|_| g.next() % 2 == 1).collect();
+        let per_bit = Bitstream::from_fn(len, |t| bits[t]);
+        let by_words = Bitstream::from_fn_words(len, |w| {
+            let mut word = 0u64;
+            for (i, &bit) in bits.iter().skip(w * 64).take(64).enumerate() {
+                word |= (bit as u64) << i;
+            }
+            // Garbage above the tail must be masked off by the constructor.
+            let valid = (len - w * 64).min(64);
+            let mask = if valid == 64 { !0u64 } else { (1u64 << valid) - 1 };
+            word | !mask
+        });
+        assert_eq!(per_bit, by_words, "len={len}");
+        let mut refilled = Bitstream::zeros(7);
+        refilled.fill_from_fn_words(len, |w| {
+            let mut word = 0u64;
+            for (i, &bit) in bits.iter().skip(w * 64).take(64).enumerate() {
+                word |= (bit as u64) << i;
+            }
+            word
+        });
+        assert_eq!(per_bit, refilled, "len={len}");
+    });
+}
+
+#[test]
+fn prop_inplace_ops_equal_allocating_ops() {
+    prop("inplace", 300, |g| {
+        let len = g.range(1, 400) as usize;
+        let a = Bitstream::from_fn(len, |_| g.next() % 2 == 1);
+        let b = Bitstream::from_fn(len, |_| g.next() % 3 == 0);
+        // Output starts as junk of a random unrelated length.
+        let junk = g.range(0, 100) as usize;
+        let mut out = Bitstream::ones(junk);
+        a.xnor_into(&b, &mut out);
+        assert_eq!(out, a.xnor(&b));
+        a.and_into(&b, &mut out);
+        assert_eq!(out, a.and(&b));
+        a.or_into(&b, &mut out);
+        assert_eq!(out, a.or(&b));
+        a.xor_into(&b, &mut out);
+        assert_eq!(out, a.xor(&b));
+        a.not_into(&mut out);
+        assert_eq!(out, a.not());
+    });
+}
+
+#[test]
+fn prop_fused_accumulate_equals_composed() {
+    // add_xnor ≡ add(xnor) and add3 ≡ add;add;add, across word boundaries.
+    prop("fused_accumulate", 150, |g| {
+        let len = g.range(1, 300) as usize;
+        let n = g.range(3, 30) as usize;
+        let pairs: Vec<(Bitstream, Bitstream)> = (0..n)
+            .map(|_| {
+                (
+                    Bitstream::from_fn(len, |_| g.next() % 2 == 1),
+                    Bitstream::from_fn(len, |_| g.next() % 3 == 0),
+                )
+            })
+            .collect();
+        let mut fused = VerticalCounter::new(len, n);
+        let mut composed = VerticalCounter::new(len, n);
+        for (a, b) in &pairs {
+            fused.add_xnor(a, b);
+            composed.add(&a.xnor(b));
+        }
+        let t = g.range(0, len as u64) as usize;
+        assert_eq!(fused.count_at(t), composed.count_at(t));
+        assert_eq!(fused.total(), composed.total());
+
+        let streams: Vec<Bitstream> =
+            (0..n).map(|_| Bitstream::from_fn(len, |_| g.next() % 2 == 1)).collect();
+        let mut by3 = VerticalCounter::new(len, n);
+        let mut one = VerticalCounter::new(len, n);
+        let mut it = streams.chunks_exact(3);
+        for tri in &mut it {
+            by3.add3(&tri[0], &tri[1], &tri[2]);
+        }
+        for s in it.remainder() {
+            by3.add(s);
+        }
+        for s in &streams {
+            one.add(s);
+        }
+        assert_eq!(by3.added(), one.added());
+        assert_eq!(by3.count_at(t), one.count_at(t));
+        assert_eq!(by3.total(), one.total());
+    });
+}
+
+#[test]
+fn prop_b2s_ones_equals_streamed_pipeline() {
+    // The fused B2S→ReLU→S2B popcount ≡ building the streams explicitly.
+    prop("b2s_ones", 100, |g| {
+        let len = g.range(1, 300) as usize;
+        let n = g.range(1, 30) as usize;
+        let mut vc = VerticalCounter::new(len, n);
+        for _ in 0..n {
+            vc.add(&Bitstream::from_fn(len, |_| g.next() % 2 == 1));
+        }
+        let m1 = usize::BITS - n.leading_zeros() + 1;
+        let r4: Vec<u32> = (0..len).map(|_| (g.next() % (1u64 << m1)) as u32).collect();
+        let b2s = Bitstream::from_fn(len, |t| 2 * vc.count_at(t) > r4[t]);
+        assert_eq!(vc.b2s_ones(&r4, 0), b2s.count_ones());
+        let relu_zero = Bitstream::from_fn(len, |t| n as u32 > r4[t]);
+        assert_eq!(vc.b2s_ones(&r4, n as u32), b2s.or(&relu_zero).count_ones());
     });
 }
 

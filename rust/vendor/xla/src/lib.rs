@@ -1,0 +1,810 @@
+//! Offline stand-in for the `xla` PJRT bindings.
+//!
+//! The real serving path loads AOT-compiled HLO *text* (emitted by
+//! `python -m compile.aot`) and executes it through PJRT. This environment
+//! has no XLA runtime, so this crate parses the same HLO text into a tiny
+//! instruction list and interprets it on the CPU. The public surface mirrors
+//! the call sites in `scnn::runtime::Engine` exactly
+//! (`PjRtClient::cpu` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `compile` → `execute`), so swapping the
+//! real bindings back in is a Cargo.toml-only change.
+//!
+//! Supported op set (everything the lenet5/fake-model/sc_mac graphs and the
+//! unit-test modules need): `parameter`, `constant` (scalar and 1-D list),
+//! `broadcast`, `reshape`, `add`, `subtract`, `multiply`, `divide`,
+//! `maximum`, `minimum`, `and`, `or`, `xor`, `reduce` (add / maximum /
+//! multiply apply-computations), `tuple`. Unknown ops fail with a clear
+//! message at compile time rather than silently at execute time.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+// ---------------------------------------------------------------------------
+// Literals
+// ---------------------------------------------------------------------------
+
+/// Element dtypes the interpreter carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    /// 32-bit float.
+    F32,
+    /// 32-bit unsigned integer.
+    U32,
+}
+
+/// A host tensor (or tuple of tensors) exchanged with an executable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    /// Dense f32 tensor, row-major.
+    F32 {
+        /// Dimension sizes.
+        dims: Vec<usize>,
+        /// Flat data.
+        data: Vec<f32>,
+    },
+    /// Dense u32 tensor, row-major.
+    U32 {
+        /// Dimension sizes.
+        dims: Vec<usize>,
+        /// Flat data.
+        data: Vec<u32>,
+    },
+    /// A tuple of literals (XLA results are tuples).
+    Tuple(Vec<Literal>),
+}
+
+/// Native element types `Literal` can be built from / unpacked to.
+pub trait NativeType: Copy {
+    /// Wrap a flat vector as a rank-1 literal payload.
+    fn wrap(dims: Vec<usize>, data: Vec<Self>) -> Literal;
+    /// Extract a flat vector, failing on dtype mismatch.
+    fn unwrap_literal(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(dims: Vec<usize>, data: Vec<Self>) -> Literal {
+        Literal::F32 { dims, data }
+    }
+    fn unwrap_literal(lit: &Literal) -> Result<Vec<Self>> {
+        match lit {
+            Literal::F32 { data, .. } => Ok(data.clone()),
+            other => bail!("literal is not f32: {other:?}"),
+        }
+    }
+}
+
+impl NativeType for u32 {
+    fn wrap(dims: Vec<usize>, data: Vec<Self>) -> Literal {
+        Literal::U32 { dims, data }
+    }
+    fn unwrap_literal(lit: &Literal) -> Result<Vec<Self>> {
+        match lit {
+            Literal::U32 { data, .. } => Ok(data.clone()),
+            other => bail!("literal is not u32: {other:?}"),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        T::wrap(vec![v.len()], v.to_vec())
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let new_dims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+        let count: usize = new_dims.iter().product();
+        match self {
+            Literal::F32 { data, .. } => {
+                if data.len() != count {
+                    bail!("reshape: {} elements into {:?}", data.len(), new_dims);
+                }
+                Ok(Literal::F32 { dims: new_dims, data: data.clone() })
+            }
+            Literal::U32 { data, .. } => {
+                if data.len() != count {
+                    bail!("reshape: {} elements into {:?}", data.len(), new_dims);
+                }
+                Ok(Literal::U32 { dims: new_dims, data: data.clone() })
+            }
+            Literal::Tuple(_) => bail!("cannot reshape a tuple literal"),
+        }
+    }
+
+    /// Unwrap a single-element tuple.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        match self {
+            Literal::Tuple(v) if v.len() == 1 => Ok(v[0].clone()),
+            Literal::Tuple(v) => bail!("tuple has {} elements, expected 1", v.len()),
+            other => bail!("not a tuple literal: {other:?}"),
+        }
+    }
+
+    /// Flat element vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap_literal(self)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HLO parsing
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BinKind {
+    Add,
+    Subtract,
+    Multiply,
+    Divide,
+    Maximum,
+    Minimum,
+    And,
+    Or,
+    Xor,
+}
+
+#[derive(Debug, Clone)]
+enum Op {
+    Parameter(usize),
+    ConstantScalar(f64),
+    ConstantList(Vec<f64>),
+    Broadcast { operand: String, dimensions: Vec<usize> },
+    Reshape { operand: String },
+    Binary { kind: BinKind, lhs: String, rhs: String },
+    Reduce { operand: String, init: String, dimensions: Vec<usize>, apply: String },
+    Tuple(Vec<String>),
+}
+
+#[derive(Debug, Clone)]
+struct Instr {
+    name: String,
+    dtype: DType,
+    dims: Vec<usize>,
+    op: Op,
+    is_root: bool,
+}
+
+#[derive(Debug, Clone)]
+struct Computation {
+    name: String,
+    instrs: Vec<Instr>,
+}
+
+impl Computation {
+    fn root(&self) -> Result<&Instr> {
+        self.instrs
+            .iter()
+            .find(|i| i.is_root)
+            .or_else(|| self.instrs.last())
+            .ok_or_else(|| anyhow!("computation {} is empty", self.name))
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Module {
+    computations: Vec<Computation>,
+    entry: String,
+}
+
+/// Split `s` on top-level commas (ignores commas inside `{}`, `()`, `[]`).
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '{' | '(' | '[' => {
+                depth += 1;
+                cur.push(c);
+            }
+            '}' | ')' | ']' => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 => {
+                out.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    out
+}
+
+/// Parse a shape token like `f32[2,10]{1,0}`, `u32[]`, or `(f32[4]{0})`
+/// (tuple types yield the first element's dtype; dims of a tuple are unused).
+fn parse_shape(tok: &str) -> Result<(DType, Vec<usize>)> {
+    let t = tok.trim().trim_start_matches('(');
+    let dtype = if t.starts_with("f32") {
+        DType::F32
+    } else if t.starts_with("u32") || t.starts_with("s32") || t.starts_with("pred") {
+        DType::U32
+    } else {
+        bail!("unsupported element type in shape {tok:?}");
+    };
+    let dims = match (t.find('['), t.find(']')) {
+        (Some(a), Some(b)) if b > a => {
+            let inner = &t[a + 1..b];
+            if inner.trim().is_empty() {
+                Vec::new()
+            } else {
+                inner
+                    .split(',')
+                    .map(|d| d.trim().parse::<usize>().map_err(|e| anyhow!("bad dim {d:?}: {e}")))
+                    .collect::<Result<Vec<_>>>()?
+            }
+        }
+        _ => Vec::new(),
+    };
+    Ok((dtype, dims))
+}
+
+/// Parse `{1,0}`- or `{}`-style dimension attribute payloads.
+fn parse_dims_attr(s: &str) -> Result<Vec<usize>> {
+    let inner = s.trim().trim_start_matches('{').trim_end_matches('}');
+    if inner.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    inner
+        .split(',')
+        .map(|d| d.trim().parse::<usize>().map_err(|e| anyhow!("bad dimension {d:?}: {e}")))
+        .collect()
+}
+
+fn parse_instr(line: &str) -> Result<Instr> {
+    let line = line.trim();
+    let (is_root, line) = match line.strip_prefix("ROOT ") {
+        Some(rest) => (true, rest),
+        None => (false, line),
+    };
+    let (name, rhs) = line
+        .split_once('=')
+        .ok_or_else(|| anyhow!("instruction without '=': {line:?}"))?;
+    let name = name.trim().to_string();
+    let rhs = rhs.trim();
+    // Shape token runs to the first space (HLO shape tokens contain no spaces).
+    let (shape_tok, rest) = rhs
+        .split_once(' ')
+        .ok_or_else(|| anyhow!("instruction without op: {rhs:?}"))?;
+    let (dtype, dims) = parse_shape(shape_tok)?;
+    let rest = rest.trim();
+    let open = rest.find('(').ok_or_else(|| anyhow!("op without operands: {rest:?}"))?;
+    let opname = rest[..open].trim();
+    // Find the matching close paren (operand lists may nest braces; HLO
+    // text is ASCII so byte indexing is safe).
+    let mut depth = 0i32;
+    let mut close = None;
+    for (i, c) in rest.bytes().enumerate().skip(open) {
+        match c {
+            b'(' | b'{' | b'[' => depth += 1,
+            b')' | b'}' | b']' => {
+                depth -= 1;
+                if depth == 0 {
+                    close = Some(i);
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    let close = close.ok_or_else(|| anyhow!("unbalanced operand list: {rest:?}"))?;
+    let args_str = &rest[open + 1..close];
+    let attrs_str = rest[close + 1..].trim().trim_start_matches(',').trim();
+    let args = split_top_level(args_str);
+    let mut dimensions: Option<Vec<usize>> = None;
+    let mut to_apply: Option<String> = None;
+    for attr in split_top_level(attrs_str) {
+        if let Some((k, v)) = attr.split_once('=') {
+            match k.trim() {
+                "dimensions" => dimensions = Some(parse_dims_attr(v)?),
+                "to_apply" => to_apply = Some(v.trim().to_string()),
+                _ => {} // layouts, metadata, sharding — irrelevant here
+            }
+        }
+    }
+
+    let bin = |kind: BinKind, args: &[String]| -> Result<Op> {
+        if args.len() != 2 {
+            bail!("binary op needs 2 operands, got {args:?}");
+        }
+        Ok(Op::Binary { kind, lhs: args[0].clone(), rhs: args[1].clone() })
+    };
+
+    let op = match opname {
+        "parameter" => {
+            let idx = args
+                .first()
+                .ok_or_else(|| anyhow!("parameter without index"))?
+                .parse::<usize>()?;
+            Op::Parameter(idx)
+        }
+        "constant" => {
+            let payload = args.join(",");
+            let payload = payload.trim();
+            if let Some(list) = payload.strip_prefix('{') {
+                let list = list.trim_end_matches('}');
+                let vals = list
+                    .split(',')
+                    .filter(|s| !s.trim().is_empty())
+                    .map(|s| s.trim().parse::<f64>().map_err(|e| anyhow!("bad constant {s:?}: {e}")))
+                    .collect::<Result<Vec<_>>>()?;
+                Op::ConstantList(vals)
+            } else {
+                Op::ConstantScalar(
+                    payload.parse::<f64>().map_err(|e| anyhow!("bad constant {payload:?}: {e}"))?,
+                )
+            }
+        }
+        "broadcast" => Op::Broadcast {
+            operand: args.first().ok_or_else(|| anyhow!("broadcast without operand"))?.clone(),
+            dimensions: dimensions.unwrap_or_default(),
+        },
+        "reshape" | "bitcast" | "copy" | "convert" => Op::Reshape {
+            operand: args.first().ok_or_else(|| anyhow!("{opname} without operand"))?.clone(),
+        },
+        "add" => bin(BinKind::Add, &args)?,
+        "subtract" => bin(BinKind::Subtract, &args)?,
+        "multiply" => bin(BinKind::Multiply, &args)?,
+        "divide" => bin(BinKind::Divide, &args)?,
+        "maximum" => bin(BinKind::Maximum, &args)?,
+        "minimum" => bin(BinKind::Minimum, &args)?,
+        "and" => bin(BinKind::And, &args)?,
+        "or" => bin(BinKind::Or, &args)?,
+        "xor" => bin(BinKind::Xor, &args)?,
+        "reduce" => {
+            if args.len() != 2 {
+                bail!("reduce needs (operand, init), got {args:?}");
+            }
+            Op::Reduce {
+                operand: args[0].clone(),
+                init: args[1].clone(),
+                dimensions: dimensions.ok_or_else(|| anyhow!("reduce without dimensions"))?,
+                apply: to_apply.ok_or_else(|| anyhow!("reduce without to_apply"))?,
+            }
+        }
+        "tuple" => Op::Tuple(args.to_vec()),
+        other => bail!("unsupported HLO op {other:?}"),
+    };
+    Ok(Instr { name, dtype, dims, op, is_root })
+}
+
+fn parse_module(text: &str) -> Result<Module> {
+    let mut computations = Vec::new();
+    let mut entry = None;
+    let mut current: Option<(String, bool, Vec<Instr>)> = None;
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with("HloModule") || line.starts_with("//") {
+            continue;
+        }
+        if line == "}" {
+            let (name, is_entry, instrs) =
+                current.take().ok_or_else(|| anyhow!("unmatched '}}' in HLO text"))?;
+            if is_entry {
+                entry = Some(name.clone());
+            }
+            computations.push(Computation { name, instrs });
+            continue;
+        }
+        if let Some(head) = line.strip_suffix('{') {
+            if current.is_some() {
+                bail!("nested computation in HLO text");
+            }
+            let head = head.trim();
+            let (is_entry, name) = match head.strip_prefix("ENTRY ") {
+                Some(n) => (true, n.trim()),
+                None => (false, head),
+            };
+            // Full HLO dumps annotate signatures (`main.10 (x: f32[4]) -> ...`);
+            // the name is the first token.
+            let name = name
+                .split(|c: char| c == ' ' || c == '(')
+                .next()
+                .unwrap_or(name)
+                .trim_start_matches('%');
+            current = Some((name.to_string(), is_entry, Vec::new()));
+            continue;
+        }
+        match current.as_mut() {
+            Some((name, _, instrs)) => {
+                let instr = parse_instr(line)
+                    .with_context(|| format!("in computation {name}, line {line:?}"))?;
+                instrs.push(instr);
+            }
+            None => bail!("instruction outside computation: {line:?}"),
+        }
+    }
+    let entry = entry.ok_or_else(|| anyhow!("HLO text has no ENTRY computation"))?;
+    Ok(Module { computations, entry })
+}
+
+// ---------------------------------------------------------------------------
+// Evaluation
+// ---------------------------------------------------------------------------
+
+/// Interpreter value: dims + f64 storage (exact for f32 and for the u32
+/// ranges SC counters produce).
+#[derive(Debug, Clone)]
+struct Value {
+    dims: Vec<usize>,
+    data: Vec<f64>,
+}
+
+impl Value {
+    fn scalar(v: f64) -> Self {
+        Value { dims: Vec::new(), data: vec![v] }
+    }
+}
+
+fn strides(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+fn apply_bin(kind: BinKind, a: f64, b: f64) -> f64 {
+    match kind {
+        BinKind::Add => a + b,
+        BinKind::Subtract => a - b,
+        BinKind::Multiply => a * b,
+        BinKind::Divide => a / b,
+        BinKind::Maximum => a.max(b),
+        BinKind::Minimum => a.min(b),
+        BinKind::And => ((a as u64) & (b as u64)) as f64,
+        BinKind::Or => ((a as u64) | (b as u64)) as f64,
+        BinKind::Xor => ((a as u64) ^ (b as u64)) as f64,
+    }
+}
+
+impl Module {
+    fn computation(&self, name: &str) -> Result<&Computation> {
+        self.computations
+            .iter()
+            .find(|c| c.name == name)
+            .ok_or_else(|| anyhow!("unknown computation {name:?}"))
+    }
+
+    /// Reduce combiner kind from an apply-computation's root op.
+    fn combiner(&self, name: &str) -> Result<BinKind> {
+        let root = self.computation(name)?.root()?;
+        match &root.op {
+            Op::Binary { kind, .. } => Ok(*kind),
+            other => bail!("unsupported reduce combiner {other:?} in {name:?}"),
+        }
+    }
+
+    fn evaluate(&self, args: &[&Literal]) -> Result<Literal> {
+        let comp = self.computation(&self.entry)?;
+        let mut env: HashMap<&str, Value> = HashMap::new();
+        for instr in &comp.instrs {
+            let get = |env: &HashMap<&str, Value>, n: &str| -> Result<Value> {
+                env.get(n).cloned().ok_or_else(|| anyhow!("undefined operand {n:?}"))
+            };
+            let v = match &instr.op {
+                Op::Parameter(i) => {
+                    let lit = args
+                        .get(*i)
+                        .ok_or_else(|| anyhow!("missing argument {i} (got {})", args.len()))?;
+                    let (dims, data) = match lit {
+                        Literal::F32 { dims, data } => {
+                            (dims.clone(), data.iter().map(|&x| x as f64).collect())
+                        }
+                        Literal::U32 { dims, data } => {
+                            (dims.clone(), data.iter().map(|&x| x as f64).collect())
+                        }
+                        Literal::Tuple(_) => bail!("tuple parameters unsupported"),
+                    };
+                    let expected: usize = instr.dims.iter().product();
+                    let got: usize = dims.iter().product();
+                    if expected != got {
+                        bail!(
+                            "parameter {i} element count {got} != declared {expected} ({:?})",
+                            instr.dims
+                        );
+                    }
+                    // Trust the declared dims (callers reshape before execute).
+                    Value { dims: instr.dims.clone(), data }
+                }
+                Op::ConstantScalar(c) => Value::scalar(*c),
+                Op::ConstantList(vs) => Value { dims: vec![vs.len()], data: vs.clone() },
+                Op::Reshape { operand } => {
+                    let o = get(&env, operand)?;
+                    let expected: usize = instr.dims.iter().product();
+                    if o.data.len() != expected {
+                        bail!("reshape {}: {} -> {:?}", instr.name, o.data.len(), instr.dims);
+                    }
+                    Value { dims: instr.dims.clone(), data: o.data }
+                }
+                Op::Broadcast { operand, dimensions } => {
+                    let o = get(&env, operand)?;
+                    if dimensions.len() != o.dims.len() {
+                        bail!(
+                            "broadcast {}: {} mapped dims for rank-{} operand",
+                            instr.name,
+                            dimensions.len(),
+                            o.dims.len()
+                        );
+                    }
+                    let out_dims = instr.dims.clone();
+                    let out_strides = strides(&out_dims);
+                    let in_strides = strides(&o.dims);
+                    let count: usize = out_dims.iter().product();
+                    let mut data = vec![0.0f64; count];
+                    for (flat, slot) in data.iter_mut().enumerate() {
+                        let mut in_flat = 0usize;
+                        for (j, &od) in dimensions.iter().enumerate() {
+                            let coord = (flat / out_strides[od]) % out_dims[od];
+                            in_flat += coord * in_strides[j];
+                        }
+                        *slot = o.data[in_flat];
+                    }
+                    Value { dims: out_dims, data }
+                }
+                Op::Binary { kind, lhs, rhs } => {
+                    let a = get(&env, lhs)?;
+                    let b = get(&env, rhs)?;
+                    if a.data.len() != b.data.len() {
+                        bail!("binary {}: shape mismatch {:?} vs {:?}", instr.name, a.dims, b.dims);
+                    }
+                    let data =
+                        a.data.iter().zip(&b.data).map(|(&x, &y)| apply_bin(*kind, x, y)).collect();
+                    Value { dims: a.dims, data }
+                }
+                Op::Reduce { operand, init, dimensions, apply } => {
+                    let o = get(&env, operand)?;
+                    let init_v = get(&env, init)?;
+                    let init_s = *init_v.data.first().ok_or_else(|| anyhow!("empty reduce init"))?;
+                    let kind = self.combiner(apply)?;
+                    let out_dims: Vec<usize> = o
+                        .dims
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| !dimensions.contains(i))
+                        .map(|(_, &d)| d)
+                        .collect();
+                    let out_count: usize = out_dims.iter().product::<usize>().max(1);
+                    let mut data = vec![init_s; out_count];
+                    let in_strides = strides(&o.dims);
+                    let out_strides = strides(&out_dims);
+                    for (flat, &x) in o.data.iter().enumerate() {
+                        let mut out_flat = 0usize;
+                        let mut oi = 0usize;
+                        for (i, &d) in o.dims.iter().enumerate() {
+                            if dimensions.contains(&i) {
+                                continue;
+                            }
+                            let coord = (flat / in_strides[i]) % d;
+                            out_flat += coord * out_strides[oi];
+                            oi += 1;
+                        }
+                        data[out_flat] = apply_bin(kind, data[out_flat], x);
+                    }
+                    Value { dims: out_dims, data }
+                }
+                Op::Tuple(_) => continue, // materialized from env at the end
+            };
+            env.insert(instr.name.as_str(), v);
+        }
+        // Materialize the root.
+        let root = comp.root()?;
+        let to_literal = |instr: &Instr, v: &Value| -> Literal {
+            match instr.dtype {
+                DType::F32 => Literal::F32 {
+                    dims: instr.dims.clone(),
+                    data: v.data.iter().map(|&x| x as f32).collect(),
+                },
+                DType::U32 => Literal::U32 {
+                    dims: instr.dims.clone(),
+                    data: v.data.iter().map(|&x| x as u32).collect(),
+                },
+            }
+        };
+        match &root.op {
+            Op::Tuple(names) => {
+                let mut elems = Vec::with_capacity(names.len());
+                for n in names {
+                    let instr = comp
+                        .instrs
+                        .iter()
+                        .find(|i| &i.name == n)
+                        .ok_or_else(|| anyhow!("tuple element {n:?} undefined"))?;
+                    let v = env.get(n.as_str()).ok_or_else(|| anyhow!("tuple element {n:?} unevaluated"))?;
+                    elems.push(to_literal(instr, v));
+                }
+                Ok(Literal::Tuple(elems))
+            }
+            _ => {
+                let v = env
+                    .get(root.name.as_str())
+                    .ok_or_else(|| anyhow!("root {:?} unevaluated", root.name))?;
+                Ok(Literal::Tuple(vec![to_literal(root, v)]))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT-shaped surface
+// ---------------------------------------------------------------------------
+
+/// Stand-in for the PJRT CPU client.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create the CPU client (always succeeds in the interpreter).
+    pub fn cpu() -> Result<Self> {
+        Ok(PjRtClient)
+    }
+
+    /// Platform name, mirroring PJRT's `"cpu"`.
+    pub fn platform_name(&self) -> String {
+        "cpu".to_string()
+    }
+
+    /// "Compile" a computation (the interpreter just carries the module).
+    pub fn compile(&self, computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { module: computation.module.clone() })
+    }
+}
+
+/// Parsed HLO module, analogous to `HloModuleProto`.
+pub struct HloModuleProto {
+    module: Module,
+}
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading HLO text {path}"))?;
+        Self::from_text(&text)
+    }
+
+    /// Parse HLO text from a string.
+    pub fn from_text(text: &str) -> Result<Self> {
+        Ok(HloModuleProto { module: parse_module(text)? })
+    }
+}
+
+/// A computation ready to compile.
+pub struct XlaComputation {
+    module: Module,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        XlaComputation { module: proto.module.clone() }
+    }
+}
+
+/// A device buffer holding one result.
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+/// A compiled (here: interpretable) executable.
+pub struct PjRtLoadedExecutable {
+    module: Module,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments; returns per-device, per-output
+    /// buffers like PJRT (`[0][0]` is the result tuple).
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let lits: Vec<&Literal> = args.iter().map(|a| a.borrow()).collect();
+        let out = self.module.evaluate(&lits)?;
+        Ok(vec![vec![PjRtBuffer { lit: out }]])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ADD_ONE: &str = r#"HloModule add_one, entry_computation_layout={(f32[4]{0})->(f32[4]{0})}
+
+ENTRY main {
+  x = f32[4]{0} parameter(0)
+  one = f32[] constant(1)
+  ones = f32[4]{0} broadcast(one), dimensions={}
+  sum = f32[4]{0} add(x, ones)
+  ROOT out = (f32[4]{0}) tuple(sum)
+}
+"#;
+
+    #[test]
+    fn add_one_runs() {
+        let m = HloModuleProto::from_text(ADD_ONE).unwrap();
+        let exe = PjRtClient::cpu().unwrap().compile(&XlaComputation::from_proto(&m)).unwrap();
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[4]).unwrap();
+        let out = exe.execute::<Literal>(&[lit]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .to_tuple1()
+            .unwrap()
+            .to_vec::<f32>()
+            .unwrap();
+        assert_eq!(out, vec![2.0, 3.0, 4.0, 5.0]);
+    }
+
+    const REDUCE_MODEL: &str = r#"HloModule fake_b2, entry_computation_layout={(f32[2,1,2,2]{3,2,1,0})->(f32[2,10]{1,0})}
+
+add {
+  a = f32[] parameter(0)
+  b = f32[] parameter(1)
+  ROOT s = f32[] add(a, b)
+}
+
+ENTRY main {
+  x = f32[2,1,2,2]{3,2,1,0} parameter(0)
+  xr = f32[2,4]{1,0} reshape(x)
+  w = f32[10]{0} constant({0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8,0.9,1.0})
+  zero = f32[] constant(0)
+  sums = f32[2]{0} reduce(xr, zero), dimensions={1}, to_apply=add
+  sb = f32[2,10]{1,0} broadcast(sums), dimensions={0}
+  wb = f32[2,10]{1,0} broadcast(w), dimensions={1}
+  prod = f32[2,10]{1,0} multiply(sb, wb)
+  ROOT out = (f32[2,10]{1,0}) tuple(prod)
+}
+"#;
+
+    #[test]
+    fn reduce_broadcast_model_runs() {
+        let m = HloModuleProto::from_text(REDUCE_MODEL).unwrap();
+        let exe = PjRtClient::cpu().unwrap().compile(&XlaComputation::from_proto(&m)).unwrap();
+        // Image 0 sums to 1.0, image 1 sums to 2.0.
+        let input: Vec<f32> = vec![0.25, 0.25, 0.25, 0.25, 0.5, 0.5, 0.5, 0.5];
+        let lit = Literal::vec1(&input).reshape(&[2, 1, 2, 2]).unwrap();
+        let out = exe.execute::<Literal>(&[lit]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .to_tuple1()
+            .unwrap()
+            .to_vec::<f32>()
+            .unwrap();
+        assert_eq!(out.len(), 20);
+        assert!((out[9] - 1.0).abs() < 1e-6); // 1.0 * w[9]
+        assert!((out[10] - 0.2).abs() < 1e-6); // 2.0 * w[0]
+        assert!((out[19] - 2.0).abs() < 1e-6); // 2.0 * w[9]
+    }
+
+    #[test]
+    fn unsupported_op_fails_at_parse() {
+        let bad = "ENTRY main {\n  x = f32[2]{0} parameter(0)\n  y = f32[2]{0} tanh(x)\n  ROOT out = (f32[2]{0}) tuple(y)\n}\n";
+        assert!(HloModuleProto::from_text(bad).is_err());
+    }
+
+    #[test]
+    fn u32_roundtrip() {
+        let hlo = "ENTRY main {\n  a = u32[3]{0} parameter(0)\n  b = u32[3]{0} parameter(1)\n  s = u32[3]{0} add(a, b)\n  ROOT out = (u32[3]{0}) tuple(s)\n}\n";
+        let m = HloModuleProto::from_text(hlo).unwrap();
+        let exe = PjRtClient::cpu().unwrap().compile(&XlaComputation::from_proto(&m)).unwrap();
+        let a = Literal::vec1(&[1u32, 2, 3]);
+        let b = Literal::vec1(&[10u32, 20, 30]);
+        let out = exe.execute::<Literal>(&[a, b]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .to_tuple1()
+            .unwrap()
+            .to_vec::<u32>()
+            .unwrap();
+        assert_eq!(out, vec![11, 22, 33]);
+    }
+}
