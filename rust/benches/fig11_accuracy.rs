@@ -7,9 +7,15 @@
 //! (monotone rise to a precision-limited ceiling) reproduces.
 
 use scnn::accel::layers::NetworkSpec;
-use scnn::accel::network::{classify, forward, ForwardMode};
+use scnn::accel::network::{classify, ForwardMode, ForwardPlan, QuantizedWeights};
 use scnn::benchutil::{bench, print_table};
 use scnn::data::{Artifacts, Dataset, ModelWeights};
+
+// Per-image seeds make plan reuse impossible here; the analytic plan
+// build is cheap, so the one-shot `ForwardPlan::once` is the right call.
+fn fwd(n: &NetworkSpec, w: &QuantizedWeights, i: &[f64], m: ForwardMode) -> Vec<f64> {
+    ForwardPlan::once(n, w, i, m)
+}
 
 fn main() {
     let artifacts = Artifacts::default_dir();
@@ -30,7 +36,7 @@ fn main() {
             let correct: usize = (0..n)
                 .map(|i| {
                     let img: Vec<f64> = ds.images[i].iter().map(|&v| v as f64).collect();
-                    let p = classify(&forward(
+                    let p = classify(&fwd(
                         &net,
                         &weights,
                         &img,
@@ -55,7 +61,7 @@ fn main() {
         (0..n)
             .map(|i| {
                 let img: Vec<f64> = ds.images[i].iter().map(|&v| v as f64).collect();
-                let p = classify(&forward(
+                let p = classify(&fwd(
                     &net,
                     &weights,
                     &img,

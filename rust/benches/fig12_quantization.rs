@@ -2,9 +2,15 @@
 //! NN accuracy under varying quantization levels.
 
 use scnn::accel::layers::NetworkSpec;
-use scnn::accel::network::{classify, forward, ForwardMode};
+use scnn::accel::network::{classify, ForwardMode, ForwardPlan, QuantizedWeights};
 use scnn::benchutil::{bench, print_table};
 use scnn::data::{Artifacts, Dataset, ModelWeights};
+
+// Per-image seeds make plan reuse impossible here; the analytic plan
+// build is cheap, so the one-shot `ForwardPlan::once` is the right call.
+fn fwd(n: &NetworkSpec, w: &QuantizedWeights, i: &[f64], m: ForwardMode) -> Vec<f64> {
+    ForwardPlan::once(n, w, i, m)
+}
 
 fn main() {
     let artifacts = Artifacts::default_dir();
@@ -29,7 +35,7 @@ fn main() {
                 } else {
                     ForwardMode::FixedPoint
                 };
-                let p = classify(&forward(&net, &weights, &img, mode));
+                let p = classify(&fwd(&net, &weights, &img, mode));
                 (p == ds.labels[i] as usize) as usize
             })
             .sum::<usize>() as f64

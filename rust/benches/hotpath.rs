@@ -8,15 +8,19 @@
 //! fused/parallel engine), so the speedup column regenerates on any
 //! machine. Before/after numbers live in EXPERIMENTS.md §Perf; a
 //! machine-readable copy is written to `BENCH_hotpath.json` next to the
-//! human output. Run with `cargo bench --bench hotpath`.
+//! human output, and the per-backend `engine::Session` batch-throughput
+//! matrix (stochastic-fused / reference-per-bit / expectation / xla at
+//! k=256 and k=1024) goes to `BENCH_engine.json`.
+//! Run with `cargo bench --bench hotpath`.
 
 use scnn::accel::layers::{LayerKind, NetworkSpec};
 use scnn::accel::network::{
-    forward, reference, ForwardMode, ForwardPlan, LayerWeights, QuantizedWeights,
+    reference, ForwardMode, ForwardPlan, LayerWeights, QuantizedWeights,
 };
 use scnn::accel::par;
 use scnn::benchutil::{bench, BenchResult, JsonReport};
 use scnn::data::{Artifacts, Dataset, ModelWeights};
+use scnn::engine::{BackendKind, BatchPolicy, Engine, EngineConfig};
 use scnn::sc::bitstream::{Bitstream, VerticalCounter};
 use scnn::sc::quantize_bipolar;
 use scnn::sc::rng::{self, XorShift64};
@@ -186,13 +190,13 @@ fn main() {
         println!("(artifacts missing — lenet5 benches use synthetic weights)");
     }
     let img: Vec<f64> = (0..28 * 28).map(|i| ((i % 17) as f64) / 17.0).collect();
-    let fused_out = forward(&net, &weights, &img, ForwardMode::Stochastic { k: 32, seed: 7 });
+    let plan = ForwardPlan::new(&net, &weights, ForwardMode::Stochastic { k: 32, seed: 7 });
+    let fused_out = plan.run(&img);
     let golden = reference::forward_stochastic(&net, &weights, &img, 32, 7);
     assert_eq!(fused_out, golden, "fused engine must match the reference bit-for-bit");
     let r_ref = bench("bitexact_lenet5_inference(k=32)/reference", 1, 5, || {
         std::hint::black_box(reference::forward_stochastic(&net, &weights, &img, 32, 7));
     });
-    let plan = ForwardPlan::new(&net, &weights, ForwardMode::Stochastic { k: 32, seed: 7 });
     let mut scr = scnn::accel::network::Scratch::default();
     let r_new = bench("bitexact_lenet5_inference(k=32)", 2, 20, || {
         std::hint::black_box(plan.run_with(&img, &mut scr, true));
@@ -215,10 +219,85 @@ fn main() {
     );
     json.add(&r_batch, &[("img_per_s", img_s), ("threads", par::max_threads() as f64)]);
 
+    // Compile-plus-run, like the old `forward` free function measured.
     let r = bench("expectation_lenet5_inference", 1, 10, || {
-        std::hint::black_box(forward(&net, &weights, &img, ForwardMode::Expectation));
+        std::hint::black_box(
+            ForwardPlan::new(&net, &weights, ForwardMode::Expectation).run(&img),
+        );
     });
     json.add(&r, &[]);
+
+    // ---- engine::Session per-backend batch throughput ----
+    // The serve-path comparison the engine API is judged by: images/s per
+    // backend through one session (plan compiled once, dynamic batcher,
+    // metrics on). Written to BENCH_engine.json alongside the kernel gates.
+    let mut ejson = JsonReport::new();
+    // max_batch == submitted batch: the batcher stops lingering the moment
+    // the whole batch has arrived, so no timed iteration idles in the
+    // 2 ms linger window.
+    let mk_cfg = |kind: BackendKind, k: usize, nimg: usize| {
+        EngineConfig::new(kind, net.clone())
+            .with_quantized(weights.clone())
+            .with_k(k)
+            .with_seed(7)
+            .with_batch(BatchPolicy { max_batch: nimg, ..BatchPolicy::default() })
+    };
+    let fimgs: Vec<Vec<f32>> = (0..16)
+        .map(|s| (0..28 * 28).map(|i| (((i + s * 13) % 17) as f32) / 17.0).collect())
+        .collect();
+    let mut fused_k256_img_s = 0.0f64;
+    for (k, nimg, warm, iters) in [(256usize, 16usize, 1usize, 3usize), (1024, 8, 1, 2)] {
+        let session = Engine::open(mk_cfg(BackendKind::StochasticFused, k, nimg)).unwrap();
+        let imgs = &fimgs[..nimg];
+        let r = bench(
+            &format!("engine_batch(stochastic-fused,k={k},{nimg}imgs)"),
+            warm,
+            iters,
+            || {
+                std::hint::black_box(session.infer_batch(imgs).unwrap());
+            },
+        );
+        let img_s = r.ops_per_sec(nimg as f64);
+        if k == 256 {
+            fused_k256_img_s = img_s;
+        }
+        println!("  -> {img_s:.1} img/s");
+        ejson.add(&r, &[("img_per_s", img_s), ("k", k as f64), ("batch", nimg as f64)]);
+    }
+    // Golden per-bit reference, one image (it is deliberately slow); the
+    // k=1024 point only runs under SCNN_BENCH_FULL=1 to keep CI short.
+    let one = &fimgs[..1];
+    let session = Engine::open(mk_cfg(BackendKind::ReferencePerBit, 256, 1)).unwrap();
+    let r = bench("engine_batch(reference-per-bit,k=256,1img)", 0, 1, || {
+        std::hint::black_box(session.infer_batch(one).unwrap());
+    });
+    let ref_img_s = r.ops_per_sec(1.0);
+    let engine_speedup = fused_k256_img_s / ref_img_s;
+    println!("  -> {ref_img_s:.2} img/s; fused session is {engine_speedup:.1}x faster at k=256");
+    ejson.add(
+        &r,
+        &[
+            ("img_per_s", ref_img_s),
+            ("k", 256.0),
+            ("batch", 1.0),
+            ("fused_speedup_at_k256", engine_speedup),
+        ],
+    );
+    if std::env::var("SCNN_BENCH_FULL").is_ok() {
+        let session = Engine::open(mk_cfg(BackendKind::ReferencePerBit, 1024, 1)).unwrap();
+        let r = bench("engine_batch(reference-per-bit,k=1024,1img)", 0, 1, || {
+            std::hint::black_box(session.infer_batch(one).unwrap());
+        });
+        ejson.add(&r, &[("img_per_s", r.ops_per_sec(1.0)), ("k", 1024.0), ("batch", 1.0)]);
+    } else {
+        println!("  (reference-per-bit at k=1024 skipped — set SCNN_BENCH_FULL=1 to include it)");
+    }
+    // Analytic expectation backend (k-independent) completes the matrix.
+    let session = Engine::open(mk_cfg(BackendKind::Expectation, 256, 16)).unwrap();
+    let r = bench("engine_batch(expectation,16imgs)", 1, 5, || {
+        std::hint::black_box(session.infer_batch(&fimgs).unwrap());
+    });
+    ejson.add(&r, &[("img_per_s", r.ops_per_sec(16.0)), ("batch", 16.0)]);
 
     if artifacts.present() {
         let ds = Dataset::load(&artifacts.dataset("digits")).unwrap();
@@ -238,6 +317,22 @@ fn main() {
         });
         println!("  -> {:.0} img/s batched", r.ops_per_sec(32.0));
         json.add(&r, &[("img_per_s", r.ops_per_sec(32.0))]);
+
+        // The same graphs behind an engine session (ladder + batcher).
+        let session = Engine::open(
+            EngineConfig::new(BackendKind::Xla, net.clone())
+                .with_hlo_ladder(vec![
+                    (1, artifacts.hlo("lenet5", 1)),
+                    (8, artifacts.hlo("lenet5", 8)),
+                    (32, artifacts.hlo("lenet5", 32)),
+                ])
+                .with_batch(BatchPolicy { max_batch: 16, ..BatchPolicy::default() }),
+        )
+        .unwrap();
+        let r = bench("engine_batch(xla,16imgs)", 1, 5, || {
+            std::hint::black_box(session.infer_batch(&fimgs).unwrap());
+        });
+        ejson.add(&r, &[("img_per_s", r.ops_per_sec(16.0)), ("batch", 16.0)]);
     } else {
         eprintln!("artifacts missing — PJRT hot-path benches skipped");
     }
@@ -263,5 +358,14 @@ fn main() {
             std::fs::canonicalize(path).unwrap_or_else(|_| path.to_path_buf()).display()
         ),
         Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
+    }
+    let epath = std::path::Path::new("BENCH_engine.json");
+    match ejson.write(epath) {
+        Ok(()) => println!(
+            "wrote {} engine records to {}",
+            ejson.len(),
+            std::fs::canonicalize(epath).unwrap_or_else(|_| epath.to_path_buf()).display()
+        ),
+        Err(e) => eprintln!("could not write BENCH_engine.json: {e}"),
     }
 }

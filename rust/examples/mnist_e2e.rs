@@ -1,15 +1,16 @@
-//! END-TO-END driver: proves all three layers compose on a real workload.
+//! END-TO-END driver: proves all three layers compose on a real workload —
+//! every inference path through the unified `scnn::engine` API.
 //!
 //! 1. loads the AOT artifacts (`make artifacts`): the trained LeNet-5
 //!    SC-equivalent inference graphs (L2, lowered once from JAX), the
 //!    Pallas sc_mac kernel graph (L1), trained weights and the synthetic
 //!    test set;
-//! 2. serves the full test set through the L3 coordinator (router +
-//!    dynamic batcher + PJRT workers) and reports accuracy / latency /
-//!    throughput;
-//! 3. cross-checks served predictions against the bit-exact stochastic
-//!    simulation (LFSR→PCC→XNOR→APC→B2S→ReLU/MP→S2B) and the expectation
-//!    model on a sample of images;
+//! 2. streams the full test set through an XLA-backend engine session
+//!    (submit/drain with dynamic batching) and reports accuracy / latency /
+//!    throughput from the session's own metrics;
+//! 3. cross-checks served predictions against sessions on the bit-exact
+//!    stochastic backend (LFSR→PCC→XNOR→APC→B2S→ReLU/MP→S2B), the
+//!    expectation model, and the noisy-expectation model;
 //! 4. executes the L1 Pallas kernel artifact via PJRT and verifies it
 //!    bit-for-bit against the Rust packed-bitstream engine.
 //!
@@ -18,10 +19,9 @@
 
 use anyhow::{bail, Context, Result};
 use scnn::accel::layers::NetworkSpec;
-use scnn::accel::network::{classify, forward, forward_batch, ForwardMode};
-use scnn::coordinator::{Coordinator, CoordinatorConfig, ServeBackend};
 use scnn::data::{load_manifest, Artifacts, Dataset, ModelWeights};
-use scnn::runtime::Engine;
+use scnn::engine::{classify, BackendKind, BatchPolicy, Engine, EngineConfig};
+use scnn::runtime::Engine as PjrtEngine;
 use scnn::sc::bitstream::Bitstream;
 use std::time::{Duration, Instant};
 
@@ -33,32 +33,42 @@ fn main() -> Result<()> {
     let manifest = load_manifest(&artifacts.manifest())?;
     println!("manifest: {manifest:?}\n");
 
-    // ---- 2. serve the full test set through the coordinator ----
     let ds = Dataset::load(&artifacts.dataset("digits"))?;
-    let cfg = CoordinatorConfig {
-        backend: ServeBackend::Pjrt {
-            hlo_ladder: vec![
+    let net = NetworkSpec::lenet5();
+    let weights = ModelWeights::load(&artifacts.weights("lenet5", "sc"))?.quantize(8);
+    let batch = BatchPolicy {
+        max_batch: 32,
+        linger: Duration::from_millis(2),
+        queue_depth: 256,
+    };
+
+    // ---- 2. stream the full test set through the XLA session ----
+    let xla = Engine::open(
+        EngineConfig::new(BackendKind::Xla, net.clone())
+            .with_hlo_ladder(vec![
                 (1, artifacts.hlo("lenet5", 1)),
                 (8, artifacts.hlo("lenet5", 8)),
                 (32, artifacts.hlo("lenet5", 32)),
-            ],
-        },
-        image_len: ds.shape.0 * ds.shape.1 * ds.shape.2,
-        image_dims: ds.shape,
-        classes: 10,
-        linger: Duration::from_millis(2),
-    };
-    let coord = Coordinator::start(cfg).context("starting coordinator")?;
+            ])
+            .with_batch(batch),
+    )
+    .context("opening XLA session")?;
     let t = Instant::now();
-    let preds = coord.infer_all(&ds.images, 32)?;
+    for img in &ds.images {
+        xla.submit(img.clone())?;
+    }
+    let mut preds = Vec::with_capacity(ds.len());
+    for (_, res) in xla.drain() {
+        preds.push(classify(&res?));
+    }
     let wall = t.elapsed();
     let correct = preds
         .iter()
         .zip(&ds.labels)
         .filter(|(&p, &l)| p == l as usize)
         .count();
-    let st = coord.stats();
-    println!("== serving (L3 coordinator + L2 PJRT graph) ==");
+    let st = xla.metrics();
+    println!("== serving (engine session, XLA backend) ==");
     println!(
         "  {} images in {:.1} ms  ->  {:.0} img/s",
         ds.len(),
@@ -77,68 +87,73 @@ fn main() -> Result<()> {
         st.mean_batch()
     );
 
-    // ---- 2b. the same test set through the SC serving backend ----
-    // The coordinator's second backend: the bit-exact stochastic engine
-    // behind one compiled ForwardPlan, batched by the same router.
-    let net = NetworkSpec::lenet5();
-    let weights = ModelWeights::load(&artifacts.weights("lenet5", "sc"))?.quantize(8);
+    // ---- 2b. the same test set through the bit-exact SC session ----
     let n_serve = 64.min(ds.len());
-    let sc_cfg = CoordinatorConfig {
-        backend: ServeBackend::Stochastic {
-            net: net.clone(),
-            weights: weights.clone(),
-            mode: ForwardMode::Stochastic { k: 32, seed: 7 },
-            batch_max: 32,
-        },
-        image_len: ds.shape.0 * ds.shape.1 * ds.shape.2,
-        image_dims: ds.shape,
-        classes: 10,
-        linger: Duration::from_millis(2),
-    };
-    let sc_coord = Coordinator::start(sc_cfg).context("starting SC coordinator")?;
+    let sc = Engine::open(
+        EngineConfig::new(BackendKind::StochasticFused, net.clone())
+            .with_quantized(weights.clone())
+            .with_k(32)
+            .with_seed(7)
+            .with_batch(batch),
+    )
+    .context("opening SC session")?;
     let t = Instant::now();
-    let sc_preds = sc_coord.infer_all(&ds.images[..n_serve], 16)?;
+    for img in &ds.images[..n_serve] {
+        sc.submit(img.clone())?;
+    }
+    let mut sc_preds = Vec::with_capacity(n_serve);
+    for (_, res) in sc.drain() {
+        sc_preds.push(classify(&res?));
+    }
     let sc_wall = t.elapsed();
-    let sc_st = sc_coord.stats();
-    drop(sc_coord);
+    let sc_m = sc.metrics();
     let sc_correct = sc_preds
         .iter()
         .zip(&ds.labels[..n_serve])
         .filter(|(&p, &l)| p == l as usize)
         .count();
-    println!("\n== serving (L3 coordinator + bit-exact SC engine, k=32) ==");
+    println!("\n== serving (engine session, bit-exact SC backend, k=32) ==");
     println!(
         "  {} images in {:.1} ms  ->  {:.0} img/s  (mean batch {:.1})",
         n_serve,
         sc_wall.as_secs_f64() * 1e3,
         n_serve as f64 / sc_wall.as_secs_f64(),
-        sc_st.mean_batch()
+        sc_m.mean_batch()
     );
     println!(
         "  accuracy {:.2}% ({sc_correct}/{n_serve}) at the k=32 noise floor",
         100.0 * sc_correct as f64 / n_serve as f64
     );
+    if let Some(est) = sc_m.estimate {
+        println!(
+            "  modeled hardware: {} ×{}ch — {:.3} µJ/inference, {:.2} µs",
+            est.tech, est.channels, est.metrics.energy_uj, est.metrics.latency_us
+        );
+    }
 
-    // ---- 3. bit-exact SC cross-check (batched engine) ----
+    // ---- 3. cross-check the analytic and stochastic backends ----
     let n_check = 40.min(ds.len());
-    let inputs: Vec<Vec<f64>> = ds.images[..n_check]
-        .iter()
-        .map(|img| img.iter().map(|&v| v as f64).collect())
-        .collect();
+    let sample = &ds.images[..n_check];
+    let mk = |kind: BackendKind, k: usize, seed: u32| {
+        Engine::open(
+            EngineConfig::new(kind, net.clone())
+                .with_quantized(weights.clone())
+                .with_k(k)
+                .with_seed(seed)
+                .with_batch(batch),
+        )
+    };
+    let exp_session = mk(BackendKind::Expectation, 32, 1)?;
+    let sc_session = mk(BackendKind::StochasticFused, 32, 1)?;
+    let noisy_session = mk(BackendKind::NoisyExpectation, 4096, 1)?;
     let t = Instant::now();
-    let exp_outs = forward_batch(&net, &weights, &inputs, ForwardMode::Expectation);
-    let sc_outs =
-        forward_batch(&net, &weights, &inputs, ForwardMode::Stochastic { k: 32, seed: 1 });
-    let noisy_outs = forward_batch(
-        &net,
-        &weights,
-        &inputs,
-        ForwardMode::NoisyExpectation { k: 4096, seed: 1 },
-    );
+    let exp_outs = exp_session.infer_batch(sample)?;
+    let sc_outs = sc_session.infer_batch(sample)?;
+    let noisy_outs = noisy_session.infer_batch(sample)?;
     // Batched and single-image paths must be bit-identical.
-    let single = forward(&net, &weights, &inputs[0], ForwardMode::Stochastic { k: 32, seed: 1 });
+    let single = sc_session.infer(sample[0].clone())?;
     if single != sc_outs[0] {
-        bail!("forward_batch diverged from single-image forward");
+        bail!("session infer_batch diverged from single-image infer");
     }
     let mut agree_exp = 0;
     let mut agree_sc = 0;
@@ -173,7 +188,7 @@ fn main() -> Result<()> {
     }
 
     // ---- 4. L1 Pallas kernel vs the Rust bitstream engine ----
-    let kernel = Engine::load(&artifacts.dir.join("sc_mac_demo.hlo.txt"))?;
+    let kernel = PjrtEngine::load(&artifacts.dir.join("sc_mac_demo.hlo.txt"))?;
     let (neurons, fan_in, words) = (128usize, 25usize, 1usize);
     let mut rng = scnn::sc::rng::XorShift64::new(0x5EED);
     let mut step = move || rng.next_u32();

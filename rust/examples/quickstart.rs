@@ -1,9 +1,16 @@
-//! Quickstart: the SC datapath end to end on a single neuron.
+//! Quickstart: the SC datapath end to end on a single neuron, then the
+//! same datapath as a whole network behind the `scnn::engine` API.
 //!
 //! Builds SNGs, generates bipolar bitstreams, multiplies with XNOR, counts
-//! with an APC, converts back with B2S/S2B — and shows the three PCC
-//! flavors side by side. Run: `cargo run --release --example quickstart`
+//! with an APC, converts back with B2S/S2B — shows the three PCC flavors
+//! side by side — and finally opens an engine `Session` (the one public
+//! inference entry point) on a tiny network.
+//! Run: `cargo run --release --example quickstart`
 
+use scnn::accel::layers::{LayerKind, LayerSpec, NetworkSpec};
+use scnn::accel::network::{LayerWeights, QuantizedWeights};
+use scnn::engine::{BackendKind, BatchPolicy, Engine, EngineConfig};
+use std::time::Duration;
 use scnn::sc::apc::Apc;
 use scnn::sc::neuron;
 use scnn::sc::pcc::{expected_output, PccKind};
@@ -87,4 +94,55 @@ fn main() {
     println!("\nThe RFET NAND-NOR chain (Lemma 1) matches the MUX chain's function");
     println!("with 3-transistor reconfigurable gates — see `cargo bench` for the");
     println!("area/delay/energy comparison (Table I).");
+
+    println!("\n== 6. The same datapath as a network, behind the engine API ==");
+    // A tiny 16→4 dense network with synthetic weights: every backend is
+    // constructible from one typed EngineConfig.
+    let net = NetworkSpec {
+        name: "quickstart".into(),
+        input: (1, 4, 4),
+        layers: vec![LayerSpec {
+            kind: LayerKind::Dense { inputs: 16, outputs: 4 },
+            relu: false,
+        }],
+    };
+    let codes: Vec<Vec<u32>> = (0..4)
+        .map(|oc| {
+            (0..16)
+                .map(|j| quantize_bipolar(((oc * 5 + j) % 9) as f64 / 4.5 - 1.0, bits))
+                .collect()
+        })
+        .collect();
+    let weights = QuantizedWeights {
+        bits,
+        layers: vec![LayerWeights { codes, gamma: 1.0, mu: 0.0 }],
+    };
+    let image: Vec<f32> = (0..16).map(|j| j as f32 / 16.0).collect();
+    for kind in [
+        BackendKind::StochasticFused,
+        BackendKind::ReferencePerBit,
+        BackendKind::Expectation,
+    ] {
+        let session = Engine::open(
+            EngineConfig::new(kind, net.clone())
+                .with_quantized(weights.clone())
+                .with_k(k)
+                .with_seed(17)
+                // Lone blocking requests: don't let the batcher linger, so
+                // the printed latency is the datapath, not the batch window.
+                .with_batch(BatchPolicy { linger: Duration::ZERO, ..BatchPolicy::default() }),
+        )
+        .expect("opening session");
+        let logits = session.infer(image.clone()).expect("inference");
+        let m = session.metrics();
+        println!(
+            "  {:<18} logits {:?}  ({} request, p50 {} µs)",
+            session.backend(),
+            logits.iter().map(|v| (v * 100.0).round() / 100.0).collect::<Vec<_>>(),
+            m.requests,
+            m.latency_percentile_us(50.0)
+        );
+    }
+    println!("  (stochastic-fused and reference-per-bit logits are bit-identical;");
+    println!("   expectation is the k→∞ limit of both.)");
 }

@@ -20,12 +20,17 @@
 //! [`VerticalCounter::add_xnor_words`] → [`VerticalCounter::b2s_ones`])
 //! with zero intermediate bitstreams.
 //!
-//! Work is parallelized with [`crate::accel::par`]: [`forward`] fans neuron
-//! chunks across cores inside each layer; [`forward_batch`] fans whole
-//! images (the serving-path shape). Outputs are **bit-identical** for any
-//! thread count and to the pre-fusion per-bit implementation, which is kept
-//! in [`reference`] as the golden model (asserted in tests, measured in
-//! `rust/benches/hotpath.rs`).
+//! Work is parallelized with [`crate::accel::par`]: [`ForwardPlan::run`]
+//! fans neuron chunks across cores inside each layer;
+//! [`ForwardPlan::run_batch`] fans whole images (the serving-path shape).
+//! Outputs are **bit-identical** for any thread count and to the pre-fusion
+//! per-bit implementation, which is kept in [`reference`] as the golden
+//! model (asserted in tests, measured in `rust/benches/hotpath.rs`).
+//!
+//! This module is the *datapath* layer. The public inference entry point is
+//! [`crate::engine`]: a session owns one plan (or PJRT ladder), batches
+//! requests, and records per-session metrics. The free [`forward`] /
+//! [`forward_batch`] helpers are deprecated shims kept for compatibility.
 
 use crate::accel::layers::{LayerKind, NetworkSpec, Shape};
 use crate::accel::par;
@@ -382,10 +387,40 @@ impl ForwardPlan {
         self.run_with(input, &mut scr, true)
     }
 
+    /// Compile a plan and run it once — the non-deprecated one-shot for
+    /// tests/tools that genuinely want compile-plus-run per call. Repeated
+    /// inference should build one plan (or open an `engine::Session`).
+    pub fn once(
+        net: &NetworkSpec,
+        weights: &QuantizedWeights,
+        input: &[f64],
+        mode: ForwardMode,
+    ) -> Vec<f64> {
+        ForwardPlan::new(net, weights, mode).run(input)
+    }
+
+    /// Compile a plan and run a batch once (see [`ForwardPlan::once`]).
+    pub fn once_batch(
+        net: &NetworkSpec,
+        weights: &QuantizedWeights,
+        inputs: &[Vec<f64>],
+        mode: ForwardMode,
+    ) -> Vec<Vec<f64>> {
+        ForwardPlan::new(net, weights, mode).run_batch(inputs)
+    }
+
     /// One inference with a caller-owned scratch arena. `parallel` fans
     /// neuron chunks across cores (bit-identical output either way); pass
     /// `false` when the caller already parallelizes at a coarser grain.
     pub fn run_with(&self, input: &[f64], scr: &mut Scratch, parallel: bool) -> Vec<f64> {
+        self.run_with_threads(input, scr, if parallel { 0 } else { 1 })
+    }
+
+    /// [`ForwardPlan::run_with`] with an explicit worker cap on the
+    /// per-layer neuron parallelism: 0 = every core, 1 = serial, n = at
+    /// most n threads (the engine's per-session thread knob). Output is
+    /// bit-identical for any cap.
+    pub fn run_with_threads(&self, input: &[f64], scr: &mut Scratch, threads: usize) -> Vec<f64> {
         assert_eq!(input.len(), self.in_len, "input length mismatch");
         scr.act.clear();
         scr.act.extend_from_slice(input);
@@ -399,9 +434,9 @@ impl ForwardPlan {
                 PlanStep::Compute(lp) => {
                     match self.mode {
                         ForwardMode::Stochastic { .. } => {
-                            self.run_layer_stochastic(lp, scr, parallel)
+                            self.run_layer_stochastic(lp, scr, threads)
                         }
-                        _ => self.run_layer_analytic(lp, scr, parallel),
+                        _ => self.run_layer_analytic(lp, scr, threads),
                     }
                     if let Some(size) = lp.pool {
                         // scr.out holds the compute result; pool it into act.
@@ -421,9 +456,15 @@ impl ForwardPlan {
     /// scratch arena across all the images it claims. Output `[i]` is
     /// bit-identical to `run(&inputs[i])`.
     pub fn run_batch(&self, inputs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        self.run_batch_threads(inputs, 0)
+    }
+
+    /// [`ForwardPlan::run_batch`] with an explicit worker cap (0 = every
+    /// core). Output is bit-identical for any cap.
+    pub fn run_batch_threads(&self, inputs: &[Vec<f64>], threads: usize) -> Vec<Vec<f64>> {
         let mut results: Vec<Vec<f64>> = vec![Vec::new(); inputs.len()];
-        par::par_chunks_mut_with(&mut results, 1, Scratch::default, |scr, i, slot| {
-            slot[0] = self.run_with(&inputs[i], scr, false);
+        par::par_chunks_mut_with_threads(&mut results, 1, threads, Scratch::default, |scr, i, slot| {
+            slot[0] = self.run_with_threads(&inputs[i], scr, 1);
         });
         results
     }
@@ -431,7 +472,7 @@ impl ForwardPlan {
     /// The fused stochastic layer: per neuron, one pass of
     /// `add_xnor_words` over the gather window followed by the fused
     /// B2S→ReLU→S2B popcount. Reads `scr.act`, writes `scr.out`.
-    fn run_layer_stochastic(&self, lp: &LayerPlan, scr: &mut Scratch, parallel: bool) {
+    fn run_layer_stochastic(&self, lp: &LayerPlan, scr: &mut Scratch, threads: usize) {
         let (k, words, bits) = (self.k, self.words, self.bits);
         scr.acodes.clear();
         scr.acodes.extend(scr.act.iter().map(|&v| quantize_bipolar(v, bits)));
@@ -475,11 +516,12 @@ impl ForwardPlan {
                 *slot = reencode(sp, lp.gamma, lp.mu, lp.final_layer);
             }
         };
-        if parallel && total > 1 {
-            let chunk = par::balanced_chunk_len(total);
-            par::par_chunks_mut_with(
+        if threads != 1 && total > 1 {
+            let chunk = par::balanced_chunk_len_for(total, threads);
+            par::par_chunks_mut_with_threads(
                 out,
                 chunk,
+                threads,
                 || VerticalCounter::new(k, lp.fan_in),
                 |vc, ci, slice| worker(vc, ci * chunk, slice),
             );
@@ -491,7 +533,7 @@ impl ForwardPlan {
 
     /// Expectation / noisy-expectation / fixed-point layer over the same
     /// quantized codes. Reads `scr.act`, writes `scr.out`.
-    fn run_layer_analytic(&self, lp: &LayerPlan, scr: &mut Scratch, parallel: bool) {
+    fn run_layer_analytic(&self, lp: &LayerPlan, scr: &mut Scratch, threads: usize) {
         let bits = self.bits;
         scr.acodes.clear();
         scr.acodes.extend(scr.act.iter().map(|&v| quantize_bipolar(v, bits)));
@@ -559,9 +601,11 @@ impl ForwardPlan {
                 *slot = reencode(sp, lp.gamma, lp.mu, lp.final_layer);
             }
         };
-        if parallel && total > 1 {
-            let chunk = par::balanced_chunk_len(total);
-            par::par_chunks_mut(out, chunk, |ci, slice| worker(ci * chunk, slice));
+        if threads != 1 && total > 1 {
+            let chunk = par::balanced_chunk_len_for(total, threads);
+            par::par_chunks_mut_threads(out, chunk, threads, |ci, slice| {
+                worker(ci * chunk, slice)
+            });
         } else {
             worker(0, out);
         }
@@ -671,33 +715,52 @@ fn build_layer_plan(
 ///
 /// `input`: bipolar values in [−1, 1], flattened (c·h·w). Returns the
 /// output-layer values (bipolar stream values for stochastic/expectation
-/// modes; raw pre-activation sums for fixed-point). Convenience wrapper:
-/// compiles a [`ForwardPlan`] and runs it once with per-layer neuron
-/// parallelism. For repeated inference, build the plan once.
+/// modes; raw pre-activation sums for fixed-point).
+///
+/// **Deprecated shim**: recompiles the whole plan (gather tables, randoms,
+/// every weight SNG stream) on every call. New code opens one
+/// `engine::Session` (`scnn::engine::Engine::open`) — or, for raw-f64
+/// plan-level access, builds one [`ForwardPlan`] and reuses it. Kept
+/// bit-compatible with the default session's datapath; scheduled for
+/// removal once external callers have migrated.
+#[deprecated(
+    since = "0.3.0",
+    note = "open a session via scnn::engine::Engine::open(EngineConfig) \
+            (or reuse a ForwardPlan directly); this shim recompiles the plan per call"
+)]
 pub fn forward(
     net: &NetworkSpec,
     weights: &QuantizedWeights,
     input: &[f64],
     mode: ForwardMode,
 ) -> Vec<f64> {
-    ForwardPlan::new(net, weights, mode).run(input)
+    ForwardPlan::once(net, weights, input, mode)
 }
 
-/// Batched inference: compiles one [`ForwardPlan`] (amortizing gather
-/// tables, layer randoms, and every weight/padding SNG stream across the
-/// whole batch) and runs the images in parallel across cores. Output `[i]`
-/// is bit-identical to `forward(net, weights, &inputs[i], mode)`.
+/// Batched inference over a freshly compiled plan. Output `[i]` is
+/// bit-identical to `forward(net, weights, &inputs[i], mode)`.
+///
+/// **Deprecated shim**: see [`forward`] — new code opens one
+/// `engine::Session` and calls `infer_batch`, which adds dynamic batching,
+/// backpressure, and per-session metrics on the same datapath.
+#[deprecated(
+    since = "0.3.0",
+    note = "open a session via scnn::engine::Engine::open(EngineConfig) and use \
+            Session::infer_batch; this shim recompiles the plan per call"
+)]
 pub fn forward_batch(
     net: &NetworkSpec,
     weights: &QuantizedWeights,
     inputs: &[Vec<f64>],
     mode: ForwardMode,
 ) -> Vec<Vec<f64>> {
-    ForwardPlan::new(net, weights, mode).run_batch(inputs)
+    ForwardPlan::once_batch(net, weights, inputs, mode)
 }
 
-/// Argmax over the final layer values.
-pub fn classify(output: &[f64]) -> usize {
+/// Argmax over the final layer values (ties resolve to the last maximal
+/// index). Generic over the element type so the f64 datapath and the f32
+/// serving path (`crate::engine::classify`) share one implementation.
+pub fn classify<T: PartialOrd>(output: &[T]) -> usize {
     output
         .iter()
         .enumerate()
@@ -859,6 +922,19 @@ mod tests {
     use super::*;
     use crate::accel::layers::LayerSpec;
 
+    /// Shorthands for the non-deprecated one-shots.
+    fn fwd(n: &NetworkSpec, w: &QuantizedWeights, i: &[f64], m: ForwardMode) -> Vec<f64> {
+        ForwardPlan::once(n, w, i, m)
+    }
+    fn fwd_batch(
+        n: &NetworkSpec,
+        w: &QuantizedWeights,
+        i: &[Vec<f64>],
+        m: ForwardMode,
+    ) -> Vec<Vec<f64>> {
+        ForwardPlan::once_batch(n, w, i, m)
+    }
+
     fn tiny_net() -> NetworkSpec {
         NetworkSpec {
             name: "tiny".into(),
@@ -913,7 +989,7 @@ mod tests {
             ForwardMode::Expectation,
             ForwardMode::Stochastic { k: 64, seed: 7 },
         ] {
-            let out = forward(&net, &w, &input, mode);
+            let out = fwd(&net, &w, &input, mode);
             assert_eq!(out.len(), 3, "{mode:?}");
             assert!(out.iter().all(|v| v.is_finite()));
         }
@@ -927,7 +1003,7 @@ mod tests {
         // Lengths below, at, and across the word boundary.
         for k in [16usize, 64, 100] {
             for seed in [3u32, 7] {
-                let fused = forward(&net, &w, &input, ForwardMode::Stochastic { k, seed });
+                let fused = fwd(&net, &w, &input, ForwardMode::Stochastic { k, seed });
                 let golden = reference::forward_stochastic(&net, &w, &input, k, seed);
                 assert_eq!(fused, golden, "k={k} seed={seed}");
             }
@@ -947,10 +1023,10 @@ mod tests {
             ForwardMode::NoisyExpectation { k: 256, seed: 5 },
             ForwardMode::Stochastic { k: 96, seed: 11 },
         ] {
-            let batch = forward_batch(&net, &w, &inputs, mode);
+            let batch = fwd_batch(&net, &w, &inputs, mode);
             assert_eq!(batch.len(), inputs.len());
             for (i, input) in inputs.iter().enumerate() {
-                let single = forward(&net, &w, input, mode);
+                let single = fwd(&net, &w, input, mode);
                 assert_eq!(batch[i], single, "{mode:?} image {i}");
             }
         }
@@ -976,9 +1052,9 @@ mod tests {
         let net = tiny_net();
         let w = tiny_weights(8, 11);
         let input = tiny_input();
-        let exp = forward(&net, &w, &input, ForwardMode::Expectation);
+        let exp = fwd(&net, &w, &input, ForwardMode::Expectation);
         let err_at = |k: usize| -> f64 {
-            let st = forward(&net, &w, &input, ForwardMode::Stochastic { k, seed: 3 });
+            let st = fwd(&net, &w, &input, ForwardMode::Stochastic { k, seed: 3 });
             st.iter().zip(&exp).map(|(a, b)| (a - b).abs()).sum::<f64>() / exp.len() as f64
         };
         let e16 = err_at(16);
@@ -1002,7 +1078,7 @@ mod tests {
         let mut agree = 0;
         for s in 0..20 {
             let input: Vec<f64> = (0..36).map(|i| (((i + s * 3) % 9) as f64) / 9.0).collect();
-            let exp = forward(&net, &w, &input, ForwardMode::Expectation);
+            let exp = fwd(&net, &w, &input, ForwardMode::Expectation);
             let e = classify(&exp);
             let mut sorted = exp.clone();
             sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
@@ -1011,7 +1087,7 @@ mod tests {
                 continue; // below the stochastic noise floor — a coin flip
             }
             decided += 1;
-            let st = classify(&forward(
+            let st = classify(&fwd(
                 &net,
                 &w,
                 &input,
@@ -1035,7 +1111,7 @@ mod tests {
         let mut agree = 0;
         for seed in 0..10u64 {
             let w8 = tiny_weights(8, 100 + seed);
-            let p8 = classify(&forward(&net, &w8, &input, ForwardMode::FixedPoint));
+            let p8 = classify(&fwd(&net, &w8, &input, ForwardMode::FixedPoint));
             // Re-quantize same real weights at 6 bits by code shifting.
             let w6 = QuantizedWeights {
                 bits: 6,
@@ -1053,7 +1129,7 @@ mod tests {
                     })
                     .collect(),
             };
-            let p6 = classify(&forward(&net, &w6, &input, ForwardMode::FixedPoint));
+            let p6 = classify(&fwd(&net, &w6, &input, ForwardMode::FixedPoint));
             agree += (p8 == p6) as usize;
         }
         assert!(agree >= 7, "agreement {agree}");
@@ -1063,5 +1139,23 @@ mod tests {
     fn classify_picks_argmax() {
         assert_eq!(classify(&[0.1, 0.9, -0.3]), 1);
         assert_eq!(classify(&[-5.0, -2.0, -9.0]), 1);
+    }
+
+    /// The deprecation contract: the shims must stay bit-compatible with
+    /// the plan API until removal. This is the one place outside the shim
+    /// definitions where using them is intentional.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_delegate_bit_exactly() {
+        let net = tiny_net();
+        let w = tiny_weights(8, 33);
+        let input = tiny_input();
+        let mode = ForwardMode::Stochastic { k: 96, seed: 4 };
+        assert_eq!(forward(&net, &w, &input, mode), fwd(&net, &w, &input, mode));
+        let inputs = vec![tiny_input(), tiny_input()];
+        assert_eq!(
+            forward_batch(&net, &w, &inputs, mode),
+            fwd_batch(&net, &w, &inputs, mode)
+        );
     }
 }

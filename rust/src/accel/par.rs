@@ -43,12 +43,31 @@ where
     I: Fn() -> S + Sync,
     F: Fn(&mut S, usize, &mut [T]) + Sync,
 {
+    par_chunks_mut_with_threads(data, chunk_len, 0, init, f)
+}
+
+/// [`par_chunks_mut_with`] with an explicit worker cap: `threads = 0` uses
+/// every core ([`max_threads`]), `threads = 1` runs serially, any other
+/// value caps the pool — the per-session thread knob of the engine
+/// (`EngineConfig::threads`). Output is bit-identical for any cap.
+pub fn par_chunks_mut_with_threads<T, S, I, F>(
+    data: &mut [T],
+    chunk_len: usize,
+    threads: usize,
+    init: I,
+    f: F,
+) where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &mut [T]) + Sync,
+{
     assert!(chunk_len > 0, "chunk_len must be positive");
     if data.is_empty() {
         return;
     }
+    let cap = if threads == 0 { max_threads() } else { threads.min(max_threads()) };
     let n_chunks = data.len().div_ceil(chunk_len);
-    let threads = max_threads().min(n_chunks);
+    let threads = cap.min(n_chunks);
     if threads <= 1 {
         let mut state = init();
         for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
@@ -88,9 +107,24 @@ where
     par_chunks_mut_with(data, chunk_len, || (), |(), i, c| f(i, c));
 }
 
+/// [`par_chunks_mut`] with an explicit worker cap (0 = every core).
+pub fn par_chunks_mut_threads<T, F>(data: &mut [T], chunk_len: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    par_chunks_mut_with_threads(data, chunk_len, threads, || (), |(), i, c| f(i, c));
+}
+
 /// Chunk length that yields a few chunks per worker for dynamic balance.
 pub fn balanced_chunk_len(total: usize) -> usize {
-    (total / (max_threads() * 4)).max(1)
+    balanced_chunk_len_for(total, 0)
+}
+
+/// [`balanced_chunk_len`] for an explicit worker cap (0 = every core).
+pub fn balanced_chunk_len_for(total: usize, threads: usize) -> usize {
+    let t = if threads == 0 { max_threads() } else { threads.min(max_threads()) };
+    (total / (t * 4)).max(1)
 }
 
 #[cfg(test)]
@@ -156,5 +190,20 @@ mod tests {
         assert!(balanced_chunk_len(0) >= 1);
         assert!(balanced_chunk_len(1_000_000) >= 1);
         assert!(max_threads() >= 1);
+        assert_eq!(balanced_chunk_len(1_000_000), balanced_chunk_len_for(1_000_000, 0));
+        assert_eq!(balanced_chunk_len_for(100, 1), 25);
+    }
+
+    #[test]
+    fn thread_cap_still_covers_everything() {
+        for threads in [0usize, 1, 2, 7] {
+            let mut v = vec![0u32; 513];
+            par_chunks_mut_threads(&mut v, 8, threads, |_, chunk| {
+                for x in chunk {
+                    *x += 1;
+                }
+            });
+            assert!(v.iter().all(|&x| x == 1), "threads={threads}");
+        }
     }
 }

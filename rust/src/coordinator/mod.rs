@@ -1,49 +1,35 @@
-//! L3 serving coordinator: request router + dynamic batcher + worker.
+//! L3 serving coordinator — a thin façade over [`crate::engine`].
 //!
-//! Two backends share the router/batcher machinery ([`ServeBackend`]):
-//!
-//! * **PJRT** — engines owned by a dedicated worker thread (raw PJRT
-//!   handles are not `Send`-safe to share) executing an HLO ladder;
-//! * **Stochastic** — the in-process bit-exact SC engine: one
-//!   [`ForwardPlan`] compiled at startup (gather tables, layer randoms and
-//!   every weight SNG stream amortized across the worker's lifetime) and
-//!   batches executed through the parallel `run_batch` path.
+//! Historically this module owned the request router, dynamic batcher, and
+//! per-backend worker. That machinery is now the engine subsystem: a
+//! [`Coordinator`] simply translates its [`CoordinatorConfig`] into a typed
+//! [`EngineConfig`], opens one [`Session`], and delegates — every backend
+//! (PJRT ladder or the in-process SC datapaths) batches through the same
+//! engine worker and reports through the same [`SessionMetrics`].
 //!
 //! ```text
-//! clients ──infer()──▶ router queue ──batcher──▶ worker (ladder / SC plan)
-//!                                            └─▶ responses (per request)
+//! clients ──infer()──▶ engine::Session ──batcher──▶ Box<dyn Backend>
+//!                                     └─▶ per-session metrics
 //! ```
 //!
-//! Batching policy: drain the queue up to `batch_max`; for PJRT, execute
-//! full `batch_max`-sized chunks on the batched executable and the
-//! remainder on the single-sample executable; for the SC engine, run the
-//! drained set as one parallel batch. A short `linger` lets concurrent
-//! clients coalesce (the classic dynamic-batching tradeoff).
-//!
-//! (This environment vendors no tokio; std::thread + mpsc supply the same
-//! structure — see Cargo.toml note.)
+//! Kept as the serving façade (start / infer / infer_all / stats) because
+//! the CLI and the e2e example speak in datasets and predicted classes;
+//! new code that wants streaming submission, backpressure, or the full
+//! metrics snapshot should open a [`Session`] directly.
 
 pub mod stats;
 
 pub use stats::ServeStats;
 
-use crate::accel::layers::NetworkSpec;
-use crate::accel::network::{ForwardMode, ForwardPlan, QuantizedWeights};
-use crate::runtime::Engine;
-use anyhow::{anyhow, Context, Result};
+use crate::accel::layers::{LayerKind, LayerSpec, NetworkSpec};
+use crate::accel::network::{ForwardMode, QuantizedWeights};
+use crate::engine::{BackendKind, BatchPolicy, Engine, EngineConfig, Session, SessionMetrics};
+use anyhow::{anyhow, bail, Result};
 use std::path::PathBuf;
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::Mutex;
+use std::time::Duration;
 
-/// A classification request: flattened image in [0, 1].
-struct Request {
-    image: Vec<f32>,
-    enqueued: Instant,
-    respond: mpsc::Sender<Result<Vec<f32>>>,
-}
-
-/// What executes batches on the worker thread.
+/// What executes batches on the engine worker thread.
 #[derive(Debug, Clone)]
 pub enum ServeBackend {
     /// PJRT executable ladder as (batch_size, path); must include batch
@@ -53,7 +39,7 @@ pub enum ServeBackend {
         hlo_ladder: Vec<(usize, PathBuf)>,
     },
     /// In-process bit-exact / analytic SC inference through a compiled
-    /// [`ForwardPlan`] and the parallel batched forward.
+    /// forward plan and the parallel batched engine.
     Stochastic {
         /// Network topology.
         net: NetworkSpec,
@@ -91,40 +77,92 @@ impl CoordinatorConfig {
             ServeBackend::Stochastic { batch_max, .. } => (*batch_max).max(1),
         }
     }
+
+    /// Lower this serving configuration into a typed [`EngineConfig`].
+    pub fn to_engine_config(&self) -> Result<EngineConfig> {
+        let batch = BatchPolicy {
+            max_batch: self.batch_max(),
+            linger: self.linger,
+            ..BatchPolicy::default()
+        };
+        match &self.backend {
+            ServeBackend::Pjrt { hlo_ladder } => {
+                let (c, h, w) = self.image_dims;
+                if c * h * w != self.image_len {
+                    bail!(
+                        "image dims ({c},{h},{w}) disagree with image_len {}",
+                        self.image_len
+                    );
+                }
+                // A shape-only descriptor: the XLA backend takes its input
+                // and output lengths from the network spec.
+                let net = NetworkSpec {
+                    name: "pjrt-graph".into(),
+                    input: (c, h, w),
+                    layers: vec![LayerSpec {
+                        kind: LayerKind::Dense { inputs: self.image_len, outputs: self.classes },
+                        relu: false,
+                    }],
+                };
+                Ok(EngineConfig::new(BackendKind::Xla, net)
+                    .with_hlo_ladder(hlo_ladder.clone())
+                    .with_batch(batch))
+            }
+            ServeBackend::Stochastic { net, weights, mode, .. } => {
+                let (kind, k, seed) = match *mode {
+                    ForwardMode::Stochastic { k, seed } => (BackendKind::StochasticFused, k, seed),
+                    ForwardMode::Expectation => (BackendKind::Expectation, 32, 7),
+                    ForwardMode::NoisyExpectation { k, seed } => {
+                        (BackendKind::NoisyExpectation, k, seed)
+                    }
+                    ForwardMode::FixedPoint => (BackendKind::FixedPoint, 32, 7),
+                };
+                Ok(EngineConfig::new(kind, net.clone())
+                    .with_quantized(weights.clone())
+                    .with_k(k)
+                    .with_seed(seed)
+                    .with_batch(batch))
+            }
+        }
+    }
 }
 
-/// Handle to a running coordinator.
+/// Handle to a running coordinator: one engine session plus the
+/// dataset-level client fan used by the CLI and the e2e example.
 pub struct Coordinator {
-    tx: mpsc::Sender<Request>,
-    stats: Arc<Mutex<ServeStats>>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    session: Session,
 }
 
 impl Coordinator {
-    /// Start the worker thread (loads + compiles executables / the SC
-    /// forward plan there).
+    /// Open the engine session (the worker thread loads and compiles the
+    /// executables / forward plan) and validate the configured shapes.
     pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let stats = Arc::new(Mutex::new(ServeStats::new()));
-        let stats_w = Arc::clone(&stats);
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let worker = std::thread::Builder::new()
-            .name("scnn-worker".into())
-            .spawn(move || worker_loop(cfg, rx, stats_w, ready_tx))
-            .context("spawning worker")?;
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("worker died during startup"))??;
-        Ok(Coordinator { tx, stats, worker: Some(worker) })
+        let session = Engine::open(cfg.to_engine_config()?)?;
+        if session.in_len() != cfg.image_len {
+            bail!(
+                "backend expects {} inputs, config says {}",
+                session.in_len(),
+                cfg.image_len
+            );
+        }
+        if session.out_len() != cfg.classes {
+            bail!(
+                "backend emits {} classes, config says {}",
+                session.out_len(),
+                cfg.classes
+            );
+        }
+        Ok(Coordinator { session })
+    }
+
+    /// The underlying engine session (streaming submit/drain, metrics).
+    pub fn session(&self) -> &Session {
+        &self.session
     }
 
     /// Classify one image (blocking). Returns the logits.
     pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Request { image, enqueued: Instant::now(), respond: rtx })
-            .map_err(|_| anyhow!("coordinator stopped"))?;
-        rrx.recv().map_err(|_| anyhow!("worker dropped request"))?
+        self.session.infer(image)
     }
 
     /// Classify a whole set through the batcher from `threads` concurrent
@@ -142,11 +180,8 @@ impl Coordinator {
                         if i >= n {
                             return Ok(());
                         }
-                        let logits = self.infer(images[i].clone())?;
-                        let pred = crate::accel::network::classify(
-                            &logits.iter().map(|&x| x as f64).collect::<Vec<_>>(),
-                        );
-                        results.lock().unwrap()[i] = Some(pred);
+                        let logits = self.session.infer(images[i].clone())?;
+                        results.lock().unwrap()[i] = Some(crate::engine::classify(&logits));
                     }
                 }));
             }
@@ -158,185 +193,22 @@ impl Coordinator {
         Ok(results.into_inner().unwrap().into_iter().map(|p| p.unwrap()).collect())
     }
 
-    /// Snapshot of serving statistics.
+    /// Snapshot of serving statistics (exact latencies and batch sizes).
     pub fn stats(&self) -> ServeStats {
-        self.stats.lock().unwrap().clone()
+        self.session.metrics().serve
     }
-}
 
-impl Drop for Coordinator {
-    fn drop(&mut self) {
-        // Closing the channel stops the worker loop.
-        let (dummy_tx, _) = mpsc::channel();
-        let _ = std::mem::replace(&mut self.tx, dummy_tx);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-    }
-}
-
-/// The worker-side executor built from a [`ServeBackend`].
-enum WorkerEngine {
-    /// PJRT ladder, largest batch first.
-    Ladder(Vec<(usize, Engine)>),
-    /// Compiled SC plan.
-    Plan(ForwardPlan),
-}
-
-fn build_engine(cfg: &CoordinatorConfig) -> Result<WorkerEngine> {
-    match &cfg.backend {
-        ServeBackend::Pjrt { hlo_ladder } => {
-            let mut v = Vec::new();
-            for (b, path) in hlo_ladder {
-                v.push((*b, Engine::load(path)?));
-            }
-            v.sort_by(|a, b| b.0.cmp(&a.0));
-            if v.last().map(|&(b, _)| b) != Some(1) {
-                anyhow::bail!("ladder must include batch size 1");
-            }
-            Ok(WorkerEngine::Ladder(v))
-        }
-        ServeBackend::Stochastic { net, weights, mode, .. } => {
-            let plan = ForwardPlan::new(net, weights, *mode);
-            if plan.in_len() != cfg.image_len {
-                anyhow::bail!(
-                    "network expects {} inputs, config says {}",
-                    plan.in_len(),
-                    cfg.image_len
-                );
-            }
-            if plan.out_len() != cfg.classes {
-                anyhow::bail!(
-                    "network emits {} classes, config says {}",
-                    plan.out_len(),
-                    cfg.classes
-                );
-            }
-            Ok(WorkerEngine::Plan(plan))
-        }
-    }
-}
-
-fn worker_loop(
-    cfg: CoordinatorConfig,
-    rx: mpsc::Receiver<Request>,
-    stats: Arc<Mutex<ServeStats>>,
-    ready: mpsc::Sender<Result<()>>,
-) {
-    let engine = match build_engine(&cfg) {
-        Ok(e) => {
-            let _ = ready.send(Ok(()));
-            e
-        }
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
-        }
-    };
-    let (c, h, w) = cfg.image_dims;
-    let batch_max = cfg.batch_max();
-
-    loop {
-        // Block for the first request; then linger to coalesce more.
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // coordinator dropped
-        };
-        let mut pending = vec![first];
-        let deadline = Instant::now() + cfg.linger;
-        while pending.len() < batch_max {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
-        }
-
-        match &engine {
-            WorkerEngine::Ladder(ladder) => {
-                // Greedy chunking down the ladder.
-                let mut idx = 0;
-                while idx < pending.len() {
-                    let remaining = pending.len() - idx;
-                    let (bsz, engine) = ladder
-                        .iter()
-                        .find(|&&(b, _)| b <= remaining)
-                        .map(|(b, e)| (*b, e))
-                        .expect("ladder contains batch 1");
-                    let chunk = &pending[idx..idx + bsz];
-                    let dims = [bsz as i64, c as i64, h as i64, w as i64];
-                    let mut flat = Vec::with_capacity(bsz * cfg.image_len);
-                    for r in chunk {
-                        flat.extend_from_slice(&r.image);
-                    }
-                    match engine.run_f32(&flat, &dims) {
-                        Ok(out) => {
-                            for (j, r) in chunk.iter().enumerate() {
-                                let logits =
-                                    out[j * cfg.classes..(j + 1) * cfg.classes].to_vec();
-                                // Record before responding: clients may read
-                                // stats right after their reply arrives.
-                                stats.lock().unwrap().record(r.enqueued.elapsed(), bsz);
-                                let _ = r.respond.send(Ok(logits));
-                            }
-                        }
-                        Err(e) => {
-                            for r in chunk {
-                                let _ = r.respond.send(Err(anyhow!("exec failed: {e}")));
-                            }
-                        }
-                    }
-                    idx += bsz;
-                }
-            }
-            WorkerEngine::Plan(plan) => {
-                // Reject malformed requests individually; batch the rest.
-                let mut valid = Vec::with_capacity(pending.len());
-                for r in pending {
-                    if r.image.len() != cfg.image_len {
-                        let _ = r.respond.send(Err(anyhow!(
-                            "request image has {} elements, expected {}",
-                            r.image.len(),
-                            cfg.image_len
-                        )));
-                    } else {
-                        valid.push(r);
-                    }
-                }
-                if valid.is_empty() {
-                    continue;
-                }
-                let inputs: Vec<Vec<f64>> = valid
-                    .iter()
-                    .map(|r| r.image.iter().map(|&v| v as f64).collect())
-                    .collect();
-                // Lone requests still get the cores (neuron-parallel);
-                // real batches fan out image-parallel. Bit-identical.
-                let outputs = if inputs.len() == 1 {
-                    vec![plan.run(&inputs[0])]
-                } else {
-                    plan.run_batch(&inputs)
-                };
-                let bsz = valid.len();
-                for (r, out) in valid.iter().zip(outputs) {
-                    let logits: Vec<f32> = out.iter().map(|&v| v as f32).collect();
-                    stats.lock().unwrap().record(r.enqueued.elapsed(), bsz);
-                    let _ = r.respond.send(Ok(logits));
-                }
-            }
-        }
+    /// Full per-session metrics snapshot (histogram, throughput, modeled
+    /// hardware estimate).
+    pub fn metrics(&self) -> SessionMetrics {
+        self.session.metrics()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::accel::layers::{LayerKind, LayerSpec};
-    use crate::accel::network::{forward, LayerWeights};
+    use crate::accel::network::{ForwardPlan, LayerWeights};
     use crate::sc::quantize_bipolar;
     use std::io::Write;
 
@@ -423,6 +295,11 @@ ENTRY main {{
             "concurrent load should produce real batches (mean {})",
             st.mean_batch()
         );
+        // The façade and the session report the same numbers.
+        let m = coord.metrics();
+        assert_eq!(m.requests, 32);
+        assert_eq!(m.backend, "xla");
+        assert!(m.estimate.is_none(), "the PJRT path models no SC hardware");
         drop(coord);
         std::fs::remove_file(p1).ok();
         std::fs::remove_file(pb).ok();
@@ -484,18 +361,20 @@ ENTRY main {{
         }
     }
 
+    /// Plan-level forward for the cross-checks below (the old `forward`
+    /// free function is a deprecated shim).
+    fn direct_forward(mode: ForwardMode, image: &[f32]) -> Vec<f64> {
+        let wide: Vec<f64> = image.iter().map(|&v| v as f64).collect();
+        ForwardPlan::once(&tiny_net(), &tiny_weights(8), &wide, mode)
+    }
+
     #[test]
     fn stochastic_backend_roundtrip_matches_forward() {
         let coord = Coordinator::start(sc_cfg(ForwardMode::Expectation, 8)).unwrap();
         let image: Vec<f32> = (0..16).map(|i| i as f32 / 16.0).collect();
         let served = coord.infer(image.clone()).unwrap();
         assert_eq!(served.len(), 3);
-        let direct = forward(
-            &tiny_net(),
-            &tiny_weights(8),
-            &image.iter().map(|&v| v as f64).collect::<Vec<_>>(),
-            ForwardMode::Expectation,
-        );
+        let direct = direct_forward(ForwardMode::Expectation, &image);
         for (s, d) in served.iter().zip(&direct) {
             assert!((*s as f64 - d).abs() < 1e-6, "served {s} direct {d}");
         }
@@ -519,11 +398,9 @@ ENTRY main {{
         // Served predictions must match the engine run directly (bit-exact
         // streams: same seed, same lanes).
         for (i, img) in images.iter().take(4).enumerate() {
-            let direct = crate::accel::network::classify(&forward(
-                &tiny_net(),
-                &tiny_weights(8),
-                &img.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+            let direct = crate::accel::network::classify(&direct_forward(
                 ForwardMode::Stochastic { k: 64, seed: 9 },
+                img,
             ));
             assert_eq!(preds[i], direct, "image {i}");
         }
@@ -538,5 +415,24 @@ ENTRY main {{
         // bad request length rejected per-request.
         let coord = Coordinator::start(sc_cfg(ForwardMode::Expectation, 4)).unwrap();
         assert!(coord.infer(vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn serve_backend_lowers_to_typed_engine_config() {
+        let cfg = sc_cfg(ForwardMode::Stochastic { k: 64, seed: 9 }, 16);
+        let ecfg = cfg.to_engine_config().unwrap();
+        assert_eq!(ecfg.backend, BackendKind::StochasticFused);
+        assert_eq!(ecfg.k, 64);
+        assert_eq!(ecfg.seed, 9);
+        assert_eq!(ecfg.batch.max_batch, 16);
+        assert_eq!(ecfg.batch.linger, Duration::from_millis(5));
+        let (pjrt, p1, pb) = test_cfg(4);
+        let ecfg = pjrt.to_engine_config().unwrap();
+        assert_eq!(ecfg.backend, BackendKind::Xla);
+        assert_eq!(ecfg.input_len(), 4);
+        assert_eq!(ecfg.output_len(), 10);
+        assert_eq!(ecfg.hlo_ladder.len(), 2);
+        std::fs::remove_file(p1).ok();
+        std::fs::remove_file(pb).ok();
     }
 }

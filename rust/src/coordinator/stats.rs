@@ -1,91 +1,7 @@
-//! Serving statistics: latency percentiles and throughput accounting.
+//! Serving statistics.
+//!
+//! [`ServeStats`] now lives in [`crate::engine::metrics`] (every engine
+//! session records one); this module re-exports it so existing
+//! `coordinator::ServeStats` paths keep working.
 
-use std::time::Duration;
-
-/// Records per-request latencies and batch sizes.
-#[derive(Debug, Default, Clone)]
-pub struct ServeStats {
-    latencies_us: Vec<u64>,
-    batch_sizes: Vec<usize>,
-    total_requests: usize,
-}
-
-impl ServeStats {
-    /// New empty recorder.
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    /// Record one completed request.
-    pub fn record(&mut self, latency: Duration, batch: usize) {
-        self.latencies_us.push(latency.as_micros() as u64);
-        self.batch_sizes.push(batch);
-        self.total_requests += 1;
-    }
-
-    /// Requests completed.
-    pub fn count(&self) -> usize {
-        self.total_requests
-    }
-
-    /// Latency percentile in microseconds (p in [0, 100]).
-    pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        if self.latencies_us.is_empty() {
-            return 0;
-        }
-        let mut v = self.latencies_us.clone();
-        v.sort_unstable();
-        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-        v[idx.min(v.len() - 1)]
-    }
-
-    /// Mean batch size executed.
-    pub fn mean_batch(&self) -> f64 {
-        if self.batch_sizes.is_empty() {
-            return 0.0;
-        }
-        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
-    }
-
-    /// Merge another recorder into this one.
-    pub fn merge(&mut self, other: &ServeStats) {
-        self.latencies_us.extend_from_slice(&other.latencies_us);
-        self.batch_sizes.extend_from_slice(&other.batch_sizes);
-        self.total_requests += other.total_requests;
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn percentiles_ordered() {
-        let mut s = ServeStats::new();
-        for i in 1..=100u64 {
-            s.record(Duration::from_micros(i), 1);
-        }
-        assert_eq!(s.count(), 100);
-        assert!(s.latency_percentile_us(50.0) <= s.latency_percentile_us(99.0));
-        assert_eq!(s.latency_percentile_us(0.0), 1);
-        assert_eq!(s.latency_percentile_us(100.0), 100);
-    }
-
-    #[test]
-    fn empty_stats_safe() {
-        let s = ServeStats::new();
-        assert_eq!(s.latency_percentile_us(99.0), 0);
-        assert_eq!(s.mean_batch(), 0.0);
-    }
-
-    #[test]
-    fn merge_adds() {
-        let mut a = ServeStats::new();
-        a.record(Duration::from_micros(5), 2);
-        let mut b = ServeStats::new();
-        b.record(Duration::from_micros(7), 4);
-        a.merge(&b);
-        assert_eq!(a.count(), 2);
-        assert_eq!(a.mean_batch(), 3.0);
-    }
-}
+pub use crate::engine::metrics::ServeStats;

@@ -1,0 +1,286 @@
+//! The pluggable datapath behind a session: one [`Backend`] trait,
+//! implemented by the fused bit-exact SC engine ([`StochasticFused`]), the
+//! per-bit golden reference ([`ReferencePerBit`]), the analytic models
+//! ([`Expectation`], covering expectation / noisy-expectation /
+//! fixed-point), and the PJRT executable ladder ([`Xla`]).
+//!
+//! Backends are built **on the session's worker thread** from a plain
+//! [`EngineConfig`] (which is `Send`), so implementations are free to hold
+//! thread-affine state — raw PJRT handles, scratch arenas — without a
+//! `Send` bound on the trait object.
+
+use crate::accel::layers::NetworkSpec;
+use crate::accel::network::{reference, ForwardPlan, QuantizedWeights, Scratch};
+use crate::engine::config::{BackendKind, EngineConfig};
+use crate::runtime;
+use anyhow::{bail, Result};
+
+/// A datapath that executes validated batches. Inputs arrive as flattened
+/// images in [0, 1] (the serving dtype); implementations convert to their
+/// native precision internally.
+pub trait Backend {
+    /// Stable label (metrics, bench records).
+    fn name(&self) -> &'static str;
+
+    /// Expected flattened input length.
+    fn in_len(&self) -> usize;
+
+    /// Flattened output length (class count).
+    fn out_len(&self) -> usize;
+
+    /// Execute one batch; `inputs` is non-empty and every image has
+    /// `in_len()` elements. Returns one output per input, in order.
+    fn infer_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+}
+
+/// Build the configured backend. Called on the worker thread.
+pub(crate) fn build(cfg: &EngineConfig) -> Result<Box<dyn Backend>> {
+    cfg.validate()?;
+    Ok(match cfg.backend {
+        BackendKind::StochasticFused => Box::new(StochasticFused::from_config(cfg)?),
+        BackendKind::Expectation | BackendKind::NoisyExpectation | BackendKind::FixedPoint => {
+            Box::new(Expectation::from_config(cfg)?)
+        }
+        BackendKind::ReferencePerBit => Box::new(ReferencePerBit::from_config(cfg)?),
+        BackendKind::Xla => Box::new(Xla::from_config(cfg)?),
+    })
+}
+
+/// Shared executor for the `ForwardPlan`-based backends: one compiled plan,
+/// one reusable scratch arena, and the session's thread cap.
+struct PlanExec {
+    plan: ForwardPlan,
+    scratch: Scratch,
+    threads: usize,
+    fbuf: Vec<f64>,
+}
+
+impl PlanExec {
+    fn new(cfg: &EngineConfig) -> Result<Self> {
+        let mode = cfg
+            .backend
+            .forward_mode(cfg.k, cfg.seed)
+            .expect("PlanExec is only built for plan-lowerable backend kinds");
+        let weights = cfg.resolve_weights()?;
+        let plan = ForwardPlan::new(&cfg.net, &weights, mode);
+        Ok(PlanExec { plan, scratch: Scratch::default(), threads: cfg.threads, fbuf: Vec::new() })
+    }
+
+    fn run(&mut self, inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        if inputs.len() == 1 {
+            // Lone requests still get the cores (neuron-parallel); real
+            // batches fan out image-parallel below. Bit-identical either way.
+            self.fbuf.clear();
+            self.fbuf.extend(inputs[0].iter().map(|&v| v as f64));
+            let out = self.plan.run_with_threads(&self.fbuf, &mut self.scratch, self.threads);
+            return vec![out.iter().map(|&v| v as f32).collect()];
+        }
+        let wide: Vec<Vec<f64>> =
+            inputs.iter().map(|img| img.iter().map(|&v| v as f64).collect()).collect();
+        self.plan
+            .run_batch_threads(&wide, self.threads)
+            .iter()
+            .map(|out| out.iter().map(|&v| v as f32).collect())
+            .collect()
+    }
+}
+
+/// The fused allocation-free bit-exact SC engine (word-packed SNG lanes →
+/// `add_xnor_words` → fused B2S/ReLU/S2B), parallel across neurons and
+/// images. Bit-identical to [`ReferencePerBit`] for the same k and seed.
+pub struct StochasticFused {
+    exec: PlanExec,
+}
+
+impl StochasticFused {
+    /// Build from a config with `backend == BackendKind::StochasticFused`.
+    pub fn from_config(cfg: &EngineConfig) -> Result<Self> {
+        Ok(StochasticFused { exec: PlanExec::new(cfg)? })
+    }
+}
+
+impl Backend for StochasticFused {
+    fn name(&self) -> &'static str {
+        BackendKind::StochasticFused.label()
+    }
+
+    fn in_len(&self) -> usize {
+        self.exec.plan.in_len()
+    }
+
+    fn out_len(&self) -> usize {
+        self.exec.plan.out_len()
+    }
+
+    fn infer_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        Ok(self.exec.run(inputs))
+    }
+}
+
+/// The analytic models over the same quantized codes: expectation (no
+/// sampling noise), noisy-expectation (analytic k-cycle noise), and the
+/// fixed-point binary baseline — one backend, three [`BackendKind`]s.
+pub struct Expectation {
+    exec: PlanExec,
+    label: &'static str,
+}
+
+impl Expectation {
+    /// Build from a config with an analytic `backend` kind.
+    pub fn from_config(cfg: &EngineConfig) -> Result<Self> {
+        debug_assert!(matches!(
+            cfg.backend,
+            BackendKind::Expectation | BackendKind::NoisyExpectation | BackendKind::FixedPoint
+        ));
+        Ok(Expectation { exec: PlanExec::new(cfg)?, label: cfg.backend.label() })
+    }
+}
+
+impl Backend for Expectation {
+    fn name(&self) -> &'static str {
+        self.label
+    }
+
+    fn in_len(&self) -> usize {
+        self.exec.plan.in_len()
+    }
+
+    fn out_len(&self) -> usize {
+        self.exec.plan.out_len()
+    }
+
+    fn infer_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        Ok(self.exec.run(inputs))
+    }
+}
+
+/// The pre-fusion per-bit stochastic datapath, kept as the golden model:
+/// every stream generated one bit at a time, every XNOR product allocating,
+/// neurons serial. Slow by design — it exists so every other backend has a
+/// fixed point to agree with (see `tests/engine_parity.rs`).
+pub struct ReferencePerBit {
+    net: NetworkSpec,
+    weights: QuantizedWeights,
+    k: usize,
+    seed: u32,
+    in_len: usize,
+    out_len: usize,
+}
+
+impl ReferencePerBit {
+    /// Build from a config with `backend == BackendKind::ReferencePerBit`.
+    pub fn from_config(cfg: &EngineConfig) -> Result<Self> {
+        Ok(ReferencePerBit {
+            net: cfg.net.clone(),
+            weights: cfg.resolve_weights()?,
+            k: cfg.k,
+            seed: cfg.seed,
+            in_len: cfg.input_len(),
+            out_len: cfg.output_len(),
+        })
+    }
+}
+
+impl Backend for ReferencePerBit {
+    fn name(&self) -> &'static str {
+        BackendKind::ReferencePerBit.label()
+    }
+
+    fn in_len(&self) -> usize {
+        self.in_len
+    }
+
+    fn out_len(&self) -> usize {
+        self.out_len
+    }
+
+    fn infer_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        Ok(inputs
+            .iter()
+            .map(|img| {
+                let wide: Vec<f64> = img.iter().map(|&v| v as f64).collect();
+                reference::forward_stochastic(&self.net, &self.weights, &wide, self.k, self.seed)
+                    .iter()
+                    .map(|&v| v as f32)
+                    .collect()
+            })
+            .collect())
+    }
+}
+
+/// AOT-compiled HLO graphs on the PJRT CPU client, as a (batch_size,
+/// executable) ladder. The batcher's drained set is chunked greedily down
+/// the ladder (largest batch first), so the ladder must include batch 1.
+pub struct Xla {
+    /// Ladder sorted largest batch first.
+    ladder: Vec<(usize, runtime::Engine)>,
+    dims: (usize, usize, usize),
+    in_len: usize,
+    out_len: usize,
+}
+
+impl Xla {
+    /// Build from a config with `backend == BackendKind::Xla` (loads and
+    /// compiles every ladder entry).
+    pub fn from_config(cfg: &EngineConfig) -> Result<Self> {
+        let mut ladder = Vec::with_capacity(cfg.hlo_ladder.len());
+        for (b, path) in &cfg.hlo_ladder {
+            ladder.push((*b, runtime::Engine::load(path)?));
+        }
+        ladder.sort_by(|a, b| b.0.cmp(&a.0));
+        if ladder.last().map(|&(b, _)| b) != Some(1) {
+            bail!("xla backend: the executable ladder must include batch size 1");
+        }
+        Ok(Xla { ladder, dims: cfg.net.input, in_len: cfg.input_len(), out_len: cfg.output_len() })
+    }
+}
+
+impl Backend for Xla {
+    fn name(&self) -> &'static str {
+        BackendKind::Xla.label()
+    }
+
+    fn in_len(&self) -> usize {
+        self.in_len
+    }
+
+    fn out_len(&self) -> usize {
+        self.out_len
+    }
+
+    fn infer_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let (c, h, w) = self.dims;
+        let mut out = Vec::with_capacity(inputs.len());
+        let mut idx = 0;
+        while idx < inputs.len() {
+            let remaining = inputs.len() - idx;
+            let (bsz, engine) = self
+                .ladder
+                .iter()
+                .find(|&&(b, _)| b <= remaining)
+                .map(|(b, e)| (*b, e))
+                .expect("ladder contains batch 1");
+            let chunk = &inputs[idx..idx + bsz];
+            let mut flat = Vec::with_capacity(bsz * self.in_len);
+            for img in chunk {
+                flat.extend_from_slice(img);
+            }
+            let dims = [bsz as i64, c as i64, h as i64, w as i64];
+            let flat_out = engine.run_f32(&flat, &dims)?;
+            if flat_out.len() != bsz * self.out_len {
+                bail!(
+                    "xla backend: graph {} returned {} values for batch {bsz} \
+                     ({} expected)",
+                    engine.source,
+                    flat_out.len(),
+                    bsz * self.out_len
+                );
+            }
+            for logits in flat_out.chunks_exact(self.out_len) {
+                out.push(logits.to_vec());
+            }
+            idx += bsz;
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,435 @@
+//! Typed engine configuration: which datapath to run ([`BackendKind`]),
+//! where weights come from ([`WeightSource`]), how requests coalesce
+//! ([`BatchPolicy`]), and every numeric knob (bitstream length, precision,
+//! threads, modeled technology) in one builder-style [`EngineConfig`] —
+//! replacing the stringly `HashMap<String, String>` flag plumbing that used
+//! to be hand-wired separately in `main.rs`, the examples, and the benches.
+
+use crate::accel::layers::NetworkSpec;
+use crate::accel::network::{ForwardMode, QuantizedWeights};
+use crate::data::ModelWeights;
+use crate::engine::metrics::HardwareEstimate;
+use crate::tech::TechKind;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+use std::str::FromStr;
+use std::time::Duration;
+
+/// Which datapath a session executes. Every kind is constructible from an
+/// [`EngineConfig`] alone; see the crate-level backend matrix for the
+/// accuracy/speed contract of each.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Fused word-packed bit-exact SC engine (the production path).
+    StochasticFused,
+    /// Per-bit allocating golden reference — slow, bit-identical to
+    /// `StochasticFused` by construction (asserted in the parity tests).
+    ReferencePerBit,
+    /// SC expectation model (no sampling noise) over the same quantized
+    /// codes — mirrors the JAX training graph.
+    Expectation,
+    /// Expectation plus analytic k-cycle sampling noise (§V-B methodology).
+    NoisyExpectation,
+    /// Plain fixed-point MAC + hard ReLU (the Fig. 12 binary baseline).
+    FixedPoint,
+    /// AOT-compiled HLO graphs executed through PJRT (the serving ladder).
+    Xla,
+}
+
+impl BackendKind {
+    /// Every backend kind, for sweeps and parity tests.
+    pub const ALL: [BackendKind; 6] = [
+        BackendKind::StochasticFused,
+        BackendKind::ReferencePerBit,
+        BackendKind::Expectation,
+        BackendKind::NoisyExpectation,
+        BackendKind::FixedPoint,
+        BackendKind::Xla,
+    ];
+
+    /// Stable lowercase label (CLI values, metrics, bench records).
+    pub fn label(self) -> &'static str {
+        match self {
+            BackendKind::StochasticFused => "stochastic-fused",
+            BackendKind::ReferencePerBit => "reference-per-bit",
+            BackendKind::Expectation => "expectation",
+            BackendKind::NoisyExpectation => "noisy-expectation",
+            BackendKind::FixedPoint => "fixed-point",
+            BackendKind::Xla => "xla",
+        }
+    }
+
+    /// The [`ForwardMode`] this kind lowers to, for the in-process plan
+    /// backends (`None` for [`BackendKind::ReferencePerBit`] and
+    /// [`BackendKind::Xla`], which do not run through a `ForwardPlan`).
+    pub fn forward_mode(self, k: usize, seed: u32) -> Option<ForwardMode> {
+        match self {
+            BackendKind::StochasticFused => Some(ForwardMode::Stochastic { k, seed }),
+            BackendKind::Expectation => Some(ForwardMode::Expectation),
+            BackendKind::NoisyExpectation => Some(ForwardMode::NoisyExpectation { k, seed }),
+            BackendKind::FixedPoint => Some(ForwardMode::FixedPoint),
+            BackendKind::ReferencePerBit | BackendKind::Xla => None,
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+impl FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "stochastic" | "sc" | "fused" | "stochastic-fused" => BackendKind::StochasticFused,
+            "reference" | "reference-per-bit" | "per-bit" => BackendKind::ReferencePerBit,
+            "expectation" | "exp" => BackendKind::Expectation,
+            "noisy" | "noisy-expectation" => BackendKind::NoisyExpectation,
+            "fixed" | "fixed-point" | "binary" => BackendKind::FixedPoint,
+            "xla" | "pjrt" => BackendKind::Xla,
+            other => bail!(
+                "unknown backend {other:?} \
+                 (stochastic|reference|expectation|noisy|fixed|xla)"
+            ),
+        })
+    }
+}
+
+/// Where a session's weights come from. `Float` and `File` weights are
+/// quantized to [`EngineConfig::bits`] at open; `Quantized` weights carry
+/// their own precision (which must agree with the config).
+#[derive(Debug, Clone)]
+pub enum WeightSource {
+    /// No weights (only valid for [`BackendKind::Xla`]).
+    None,
+    /// Trained float weights, quantized at session open.
+    Float(ModelWeights),
+    /// Pre-quantized codes (bits taken from the payload).
+    Quantized(QuantizedWeights),
+    /// A `SCNNW1` weights file loaded (then quantized) at session open.
+    File(PathBuf),
+}
+
+/// Dynamic-batching policy of a session's worker.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Largest request group executed as one batch.
+    pub max_batch: usize,
+    /// How long the batcher lingers to coalesce concurrent requests.
+    pub linger: Duration,
+    /// Backpressure bound: `submit` blocks once this many requests are
+    /// in flight (queued or executing).
+    pub queue_depth: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, linger: Duration::from_millis(2), queue_depth: 256 }
+    }
+}
+
+/// Typed, builder-style configuration for [`crate::engine::Engine::open`].
+///
+/// ```no_run
+/// use scnn::accel::layers::NetworkSpec;
+/// use scnn::engine::{BackendKind, Engine, EngineConfig};
+///
+/// let cfg = EngineConfig::new(BackendKind::StochasticFused, NetworkSpec::lenet5())
+///     .with_weights_file("artifacts/lenet5_sc.weights.bin")
+///     .with_k(256)
+///     .with_bits(8);
+/// let session = Engine::open(cfg).unwrap();
+/// let _logits = session.infer(vec![0.0; 28 * 28]).unwrap();
+/// ```
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Datapath to execute.
+    pub backend: BackendKind,
+    /// Network topology (also defines input/output lengths for XLA).
+    pub net: NetworkSpec,
+    /// Weight source for the in-process datapaths.
+    pub weights: WeightSource,
+    /// Quantization precision in bits.
+    pub bits: u32,
+    /// Bitstream length (stochastic / noisy kinds).
+    pub k: usize,
+    /// Master seed for every SNG lane / noise draw.
+    pub seed: u32,
+    /// Compute-thread cap for the in-process datapaths (0 = all cores).
+    pub threads: usize,
+    /// Dynamic-batching policy.
+    pub batch: BatchPolicy,
+    /// Modeled logic technology (hardware estimate).
+    pub tech: TechKind,
+    /// Modeled channel count (hardware estimate).
+    pub channels: usize,
+    /// PJRT executable ladder as (batch_size, HLO path); must include
+    /// batch size 1 ([`BackendKind::Xla`] only).
+    pub hlo_ladder: Vec<(usize, PathBuf)>,
+}
+
+impl EngineConfig {
+    /// A configuration with the paper's defaults (k = 32, 8-bit precision,
+    /// RFET 10 nm × 8 channels, 32-deep dynamic batching).
+    pub fn new(backend: BackendKind, net: NetworkSpec) -> Self {
+        EngineConfig {
+            backend,
+            net,
+            weights: WeightSource::None,
+            bits: 8,
+            k: 32,
+            seed: 7,
+            threads: 0,
+            batch: BatchPolicy::default(),
+            tech: TechKind::Rfet10,
+            channels: 8,
+            hlo_ladder: Vec::new(),
+        }
+    }
+
+    /// Use trained float weights (quantized at [`EngineConfig::bits`]).
+    pub fn with_weights(mut self, w: ModelWeights) -> Self {
+        self.weights = WeightSource::Float(w);
+        self
+    }
+
+    /// Use pre-quantized weights (also adopts their precision).
+    pub fn with_quantized(mut self, w: QuantizedWeights) -> Self {
+        self.bits = w.bits;
+        self.weights = WeightSource::Quantized(w);
+        self
+    }
+
+    /// Load weights from a `SCNNW1` file at session open.
+    pub fn with_weights_file(mut self, path: impl Into<PathBuf>) -> Self {
+        self.weights = WeightSource::File(path.into());
+        self
+    }
+
+    /// Set the bitstream length.
+    pub fn with_k(mut self, k: usize) -> Self {
+        self.k = k;
+        self
+    }
+
+    /// Set the SNG/noise master seed.
+    pub fn with_seed(mut self, seed: u32) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Set the quantization precision in bits.
+    pub fn with_bits(mut self, bits: u32) -> Self {
+        self.bits = bits;
+        self
+    }
+
+    /// Cap compute threads (0 = all cores).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Set the dynamic-batching policy.
+    pub fn with_batch(mut self, batch: BatchPolicy) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Set the modeled logic technology.
+    pub fn with_tech(mut self, tech: TechKind) -> Self {
+        self.tech = tech;
+        self
+    }
+
+    /// Set the modeled channel count.
+    pub fn with_channels(mut self, channels: usize) -> Self {
+        self.channels = channels;
+        self
+    }
+
+    /// Set the PJRT executable ladder ([`BackendKind::Xla`]).
+    pub fn with_hlo_ladder(mut self, ladder: Vec<(usize, PathBuf)>) -> Self {
+        self.hlo_ladder = ladder;
+        self
+    }
+
+    /// Flattened input length (c·h·w of the network input).
+    pub fn input_len(&self) -> usize {
+        let (c, h, w) = self.net.input;
+        c * h * w
+    }
+
+    /// Flattened output length (class count).
+    pub fn output_len(&self) -> usize {
+        let (c, h, w) = self.net.output_shape();
+        c * h * w
+    }
+
+    /// Check internal consistency without building anything.
+    pub fn validate(&self) -> Result<()> {
+        if self.net.layers.is_empty() {
+            bail!("engine config: network {:?} has no layers", self.net.name);
+        }
+        match self.backend {
+            BackendKind::Xla => {
+                if self.hlo_ladder.is_empty() {
+                    bail!("engine config: the xla backend needs with_hlo_ladder(...)");
+                }
+            }
+            kind => {
+                if matches!(self.weights, WeightSource::None) {
+                    bail!(
+                        "engine config: backend {kind} needs weights \
+                         (with_weights / with_quantized / with_weights_file)"
+                    );
+                }
+                if self.bits == 0 || self.bits > 16 {
+                    bail!("engine config: precision must be 1..=16 bits, got {}", self.bits);
+                }
+                let needs_k = matches!(
+                    kind,
+                    BackendKind::StochasticFused
+                        | BackendKind::ReferencePerBit
+                        | BackendKind::NoisyExpectation
+                );
+                if needs_k && self.k == 0 {
+                    bail!("engine config: backend {kind} needs a bitstream length k >= 1");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Resolve the configured [`WeightSource`] into quantized codes.
+    pub fn resolve_weights(&self) -> Result<QuantizedWeights> {
+        match &self.weights {
+            WeightSource::Quantized(q) => {
+                if q.bits != self.bits {
+                    bail!(
+                        "engine config: quantized weights are {}-bit but the config says {}-bit",
+                        q.bits,
+                        self.bits
+                    );
+                }
+                Ok(q.clone())
+            }
+            WeightSource::Float(m) => Ok(m.quantize(self.bits)),
+            WeightSource::File(p) => Ok(ModelWeights::load(p)?.quantize(self.bits)),
+            WeightSource::None => {
+                bail!("engine config: backend {} has no weight source", self.backend)
+            }
+        }
+    }
+
+    /// The modeled-hardware estimate for this configuration (`None` for
+    /// [`BackendKind::Xla`]).
+    pub fn estimate(&self) -> Option<HardwareEstimate> {
+        if self.backend == BackendKind::Xla {
+            return None;
+        }
+        Some(HardwareEstimate::for_config(self.tech, self.channels, self.k, &self.net))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::layers::{LayerKind, LayerSpec};
+    use crate::accel::network::LayerWeights;
+    use crate::sc::quantize_bipolar;
+
+    fn tiny_net() -> NetworkSpec {
+        NetworkSpec {
+            name: "tiny".into(),
+            input: (1, 2, 2),
+            layers: vec![LayerSpec {
+                kind: LayerKind::Dense { inputs: 4, outputs: 3 },
+                relu: false,
+            }],
+        }
+    }
+
+    fn tiny_quantized(bits: u32) -> QuantizedWeights {
+        let codes: Vec<Vec<u32>> = (0..3)
+            .map(|oc| (0..4).map(|j| quantize_bipolar((oc + j) as f64 / 6.0, bits)).collect())
+            .collect();
+        QuantizedWeights { bits, layers: vec![LayerWeights { codes, gamma: 1.0, mu: 0.0 }] }
+    }
+
+    #[test]
+    fn backend_kind_parses_aliases() {
+        assert_eq!("sc".parse::<BackendKind>().unwrap(), BackendKind::StochasticFused);
+        assert_eq!("pjrt".parse::<BackendKind>().unwrap(), BackendKind::Xla);
+        assert_eq!("reference".parse::<BackendKind>().unwrap(), BackendKind::ReferencePerBit);
+        assert_eq!("noisy".parse::<BackendKind>().unwrap(), BackendKind::NoisyExpectation);
+        assert_eq!("fixed".parse::<BackendKind>().unwrap(), BackendKind::FixedPoint);
+        assert!("warp-drive".parse::<BackendKind>().is_err());
+        for kind in BackendKind::ALL {
+            assert_eq!(kind.label().parse::<BackendKind>().unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn builder_sets_fields_and_lengths() {
+        let cfg = EngineConfig::new(BackendKind::Expectation, tiny_net())
+            .with_quantized(tiny_quantized(6))
+            .with_k(128)
+            .with_seed(3)
+            .with_threads(2)
+            .with_tech(TechKind::Finfet10)
+            .with_channels(4);
+        assert_eq!(cfg.bits, 6, "with_quantized adopts the payload precision");
+        assert_eq!(cfg.k, 128);
+        assert_eq!(cfg.input_len(), 4);
+        assert_eq!(cfg.output_len(), 3);
+        cfg.validate().unwrap();
+        assert_eq!(cfg.resolve_weights().unwrap().bits, 6);
+    }
+
+    #[test]
+    fn validation_rejects_inconsistent_configs() {
+        // Missing weights.
+        let cfg = EngineConfig::new(BackendKind::StochasticFused, tiny_net());
+        assert!(cfg.validate().is_err());
+        // Missing ladder for xla.
+        let cfg = EngineConfig::new(BackendKind::Xla, tiny_net());
+        assert!(cfg.validate().is_err());
+        // k = 0 for a stochastic kind.
+        let cfg = EngineConfig::new(BackendKind::ReferencePerBit, tiny_net())
+            .with_quantized(tiny_quantized(8))
+            .with_k(0);
+        assert!(cfg.validate().is_err());
+        // Precision mismatch between config and pre-quantized payload.
+        let mut cfg = EngineConfig::new(BackendKind::Expectation, tiny_net())
+            .with_quantized(tiny_quantized(8));
+        cfg.bits = 4;
+        assert!(cfg.resolve_weights().is_err());
+    }
+
+    #[test]
+    fn estimate_present_for_sc_kinds_absent_for_xla() {
+        let cfg = EngineConfig::new(BackendKind::Expectation, tiny_net())
+            .with_quantized(tiny_quantized(8));
+        let est = cfg.estimate().unwrap();
+        assert!(est.metrics.area_mm2 > 0.0);
+        assert!(est.metrics.energy_uj > 0.0);
+        let cfg = EngineConfig::new(BackendKind::Xla, tiny_net());
+        assert!(cfg.estimate().is_none());
+    }
+
+    #[test]
+    fn forward_mode_lowering() {
+        assert_eq!(
+            BackendKind::StochasticFused.forward_mode(64, 5),
+            Some(ForwardMode::Stochastic { k: 64, seed: 5 })
+        );
+        assert_eq!(BackendKind::Expectation.forward_mode(64, 5), Some(ForwardMode::Expectation));
+        assert_eq!(BackendKind::FixedPoint.forward_mode(64, 5), Some(ForwardMode::FixedPoint));
+        assert!(BackendKind::ReferencePerBit.forward_mode(64, 5).is_none());
+        assert!(BackendKind::Xla.forward_mode(64, 5).is_none());
+    }
+}

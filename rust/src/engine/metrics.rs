@@ -1,0 +1,446 @@
+//! Per-session serving metrics: request/latency accounting ([`ServeStats`]),
+//! a log₂-bucketed [`LatencyHistogram`], and the modeled-hardware
+//! [`HardwareEstimate`] derived from [`crate::accel::system::evaluate_with_channel`].
+//!
+//! Every [`crate::engine::Session`] owns one recorder; `serve`, `simulate`,
+//! and `sweep` all report through the same [`SessionMetrics`] snapshot, so a
+//! served workload, a simulated workload, and a design-space point print the
+//! same figures of merit.
+
+use crate::accel::channel::{characterize_channel, ChannelReport};
+use crate::accel::layers::NetworkSpec;
+use crate::accel::memory::MemoryModel;
+use crate::accel::metrics::SystemMetrics;
+use crate::accel::system::{evaluate_with_channel, SystemConfig};
+use crate::tech::sram::SramMacro;
+use crate::tech::TechKind;
+use std::sync::OnceLock;
+use std::time::Duration;
+
+/// Records per-request latencies (for percentiles) and a running batch-size
+/// mean. Memory is bounded: the first [`ServeStats::EXACT_CAP`] latencies
+/// are kept exactly; beyond that, reservoir sampling keeps a uniform sample
+/// over the whole request history, so long-lived serving sessions do not
+/// grow without bound.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    latencies_us: Vec<u64>,
+    batch_sum: u64,
+    total_requests: usize,
+    /// Deterministic xorshift state for reservoir replacement.
+    rng: u64,
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        ServeStats {
+            latencies_us: Vec::new(),
+            batch_sum: 0,
+            total_requests: 0,
+            rng: 0x9E37_79B9_7F4A_7C15,
+        }
+    }
+}
+
+impl ServeStats {
+    /// Latency samples kept (exactly below this count, reservoir beyond).
+    pub const EXACT_CAP: usize = 1 << 16;
+
+    /// New empty recorder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completed request.
+    pub fn record(&mut self, latency: Duration, batch: usize) {
+        self.total_requests += 1;
+        self.batch_sum += batch as u64;
+        let us = latency.as_micros() as u64;
+        if self.latencies_us.len() < Self::EXACT_CAP {
+            self.latencies_us.push(us);
+        } else {
+            // Algorithm R: replace a random slot with probability CAP/n so
+            // the reservoir stays a uniform sample of all n requests.
+            self.rng ^= self.rng << 13;
+            self.rng ^= self.rng >> 7;
+            self.rng ^= self.rng << 17;
+            let j = (self.rng % self.total_requests as u64) as usize;
+            if j < Self::EXACT_CAP {
+                self.latencies_us[j] = us;
+            }
+        }
+    }
+
+    /// Requests completed.
+    pub fn count(&self) -> usize {
+        self.total_requests
+    }
+
+    /// Latency percentile in microseconds (p in [0, 100]), over the
+    /// (sampled) latency record.
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        if self.latencies_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+
+    /// Mean batch size, where "batch" is the coalesced request group the
+    /// batcher handed to the backend in one call — a scheduling metric. A
+    /// backend may further chunk the group internally (the XLA ladder
+    /// executes e.g. 20 requests as 8+8+1+1+1+1); that executable width is
+    /// not what is recorded here.
+    pub fn mean_batch(&self) -> f64 {
+        if self.total_requests == 0 {
+            return 0.0;
+        }
+        self.batch_sum as f64 / self.total_requests as f64
+    }
+
+    /// Merge another recorder into this one (latency samples concatenate
+    /// up to the reservoir cap).
+    pub fn merge(&mut self, other: &ServeStats) {
+        self.latencies_us.extend_from_slice(&other.latencies_us);
+        self.latencies_us.truncate(Self::EXACT_CAP);
+        self.batch_sum += other.batch_sum;
+        self.total_requests += other.total_requests;
+    }
+}
+
+/// Power-of-two latency histogram: bucket 0 holds sub-microsecond requests,
+/// bucket `b ≥ 1` holds latencies in `[2^(b-1), 2^b)` µs. Fixed 32 buckets
+/// (the last one saturates), so snapshots are cheap to clone and merge.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: [u64; 32],
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { buckets: [0; 32] }
+    }
+}
+
+impl LatencyHistogram {
+    /// New empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one latency in microseconds.
+    pub fn record_us(&mut self, us: u64) {
+        let b = (64 - us.leading_zeros() as usize).min(31);
+        self.buckets[b] += 1;
+    }
+
+    /// Total recorded samples.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Occupied buckets as `(lo_us, hi_us_exclusive, count)` triples.
+    pub fn nonzero_buckets(&self) -> Vec<(u64, u64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|&(_, &n)| n > 0)
+            .map(|(b, &n)| {
+                let lo = if b == 0 { 0 } else { 1u64 << (b - 1) };
+                (lo, 1u64 << b, n)
+            })
+            .collect()
+    }
+
+    /// Upper bound (exclusive, µs) of the bucket containing percentile `p`.
+    pub fn percentile_bound_us(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (p / 100.0 * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return 1u64 << b;
+            }
+        }
+        1u64 << 31
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+    }
+}
+
+/// Modeled-hardware figures for the accelerator a session's datapath
+/// simulates: the §V system roll-up (area / latency / energy / power /
+/// TOPS-derived metrics) at the session's technology, channel count, and
+/// bitstream length. `None` for the XLA backend (it models no SC hardware).
+#[derive(Debug, Clone, Copy)]
+pub struct HardwareEstimate {
+    /// Logic technology.
+    pub tech: TechKind,
+    /// Channel count.
+    pub channels: usize,
+    /// Bitstream length the hardware is evaluated at.
+    pub k: usize,
+    /// The system metrics (per-inference latency/energy, ADP/EDP/EDAP...).
+    pub metrics: SystemMetrics,
+}
+
+impl HardwareEstimate {
+    /// Evaluate the paper's system model for one configuration on one
+    /// workload (SRAM/memory fixed at the §V setup). Channel
+    /// characterization is cached per technology for the process lifetime.
+    pub fn for_config(tech: TechKind, channels: usize, k: usize, net: &NetworkSpec) -> Self {
+        let channel = cached_channel_report(tech);
+        let cfg = SystemConfig {
+            tech,
+            channels: channels.max(1),
+            k: k.max(1),
+            sram: SramMacro::paper_10kb(),
+            memory: MemoryModel::gddr5_paper(),
+        };
+        let eval = evaluate_with_channel(&cfg, net, channel);
+        HardwareEstimate { tech, channels: cfg.channels, k: cfg.k, metrics: eval.metrics }
+    }
+}
+
+/// Channel characterization for a technology, computed once per process
+/// (it is deterministic per [`TechKind`] and gate-level-simulation heavy).
+pub fn cached_channel_report(tech: TechKind) -> &'static ChannelReport {
+    static FINFET: OnceLock<ChannelReport> = OnceLock::new();
+    static RFET: OnceLock<ChannelReport> = OnceLock::new();
+    let cell = match tech {
+        TechKind::Finfet10 => &FINFET,
+        TechKind::Rfet10 => &RFET,
+    };
+    cell.get_or_init(|| characterize_channel(tech))
+}
+
+/// Snapshot of one session's serving statistics plus its modeled-hardware
+/// estimate — the single reporting struct behind `serve`, `simulate`, and
+/// `sweep`.
+#[derive(Debug, Clone)]
+pub struct SessionMetrics {
+    /// Backend label (e.g. `stochastic-fused`).
+    pub backend: String,
+    /// Requests completed successfully.
+    pub requests: usize,
+    /// Requests rejected (malformed input).
+    pub rejected: usize,
+    /// Requests that reached the backend but failed during execution.
+    pub failed: usize,
+    /// Batches executed.
+    pub batches: usize,
+    /// Wall time since the session was opened.
+    pub wall: Duration,
+    /// Exact per-request records (percentiles, mean batch).
+    pub serve: ServeStats,
+    /// Log₂ latency histogram.
+    pub histogram: LatencyHistogram,
+    /// Modeled-hardware figures (None for the XLA backend).
+    pub estimate: Option<HardwareEstimate>,
+}
+
+impl SessionMetrics {
+    /// Mean coalesced batch size (see [`ServeStats::mean_batch`]).
+    pub fn mean_batch(&self) -> f64 {
+        self.serve.mean_batch()
+    }
+
+    /// Exact latency percentile in µs.
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        self.serve.latency_percentile_us(p)
+    }
+
+    /// Completed requests per second of session wall time.
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs > 0.0 {
+            self.requests as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Modeled energy for every completed inference (µJ), when the session
+    /// has a hardware estimate.
+    pub fn estimated_total_energy_uj(&self) -> Option<f64> {
+        self.estimate.map(|e| e.metrics.energy_uj * self.requests as f64)
+    }
+
+    /// Multi-line human-readable report (the common tail of `serve` /
+    /// `simulate` output).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "backend {}: {} requests ({} rejected, {} failed) in {} batches, mean batch {:.1}\n",
+            self.backend,
+            self.requests,
+            self.rejected,
+            self.failed,
+            self.batches,
+            self.mean_batch()
+        );
+        s.push_str(&format!(
+            "latency p50 {} µs  p99 {} µs  throughput {:.0} req/s\n",
+            self.latency_percentile_us(50.0),
+            self.latency_percentile_us(99.0),
+            self.throughput_rps()
+        ));
+        if let Some(e) = self.estimate {
+            let m = &e.metrics;
+            s.push_str(&format!(
+                "modeled hardware: {} ×{}ch @ k={} — {:.3} mm², {:.2} µs, {:.3} µJ/inf, \
+                 {:.2} TOPS/W",
+                e.tech,
+                e.channels,
+                e.k,
+                m.area_mm2,
+                m.latency_us,
+                m.energy_uj,
+                m.tops_per_watt()
+            ));
+            if let Some(total) = self.estimated_total_energy_uj() {
+                s.push_str(&format!(" ({total:.1} µJ modeled for this run)"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut s = ServeStats::new();
+        for i in 1..=100u64 {
+            s.record(Duration::from_micros(i), 1);
+        }
+        assert_eq!(s.count(), 100);
+        assert!(s.latency_percentile_us(50.0) <= s.latency_percentile_us(99.0));
+        assert_eq!(s.latency_percentile_us(0.0), 1);
+        assert_eq!(s.latency_percentile_us(100.0), 100);
+    }
+
+    #[test]
+    fn empty_stats_safe() {
+        let s = ServeStats::new();
+        assert_eq!(s.latency_percentile_us(99.0), 0);
+        assert_eq!(s.mean_batch(), 0.0);
+    }
+
+    #[test]
+    fn serve_stats_memory_is_bounded() {
+        let mut s = ServeStats::new();
+        let n = ServeStats::EXACT_CAP + 1000;
+        for i in 0..n {
+            s.record(Duration::from_micros(i as u64 % 500), 2);
+        }
+        assert_eq!(s.count(), n);
+        assert!(s.latencies_us.len() <= ServeStats::EXACT_CAP, "latency reservoir is capped");
+        assert!(s.latency_percentile_us(99.0) < 500, "sampled percentiles stay in range");
+        assert_eq!(s.mean_batch(), 2.0, "batch mean covers every request, not just the sample");
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = ServeStats::new();
+        a.record(Duration::from_micros(5), 2);
+        let mut b = ServeStats::new();
+        b.record(Duration::from_micros(7), 4);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.mean_batch(), 3.0);
+    }
+
+    #[test]
+    fn histogram_buckets_by_power_of_two() {
+        let mut h = LatencyHistogram::new();
+        for us in [0u64, 1, 2, 3, 4, 1000, u64::MAX] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 7);
+        let nz = h.nonzero_buckets();
+        // 0 → [0,1); 1 → [1,2); 2,3 → [2,4); 4 → [4,8); 1000 → [512,1024);
+        // u64::MAX saturates into the last bucket.
+        assert_eq!(nz[0], (0, 1, 1));
+        assert_eq!(nz[1], (1, 2, 1));
+        assert_eq!(nz[2], (2, 4, 2));
+        assert_eq!(nz[3], (4, 8, 1));
+        assert!(nz.iter().any(|&(lo, hi, n)| lo == 512 && hi == 1024 && n == 1));
+        assert_eq!(nz.last().unwrap().2, 1);
+        let total: u64 = nz.iter().map(|&(_, _, n)| n).sum();
+        assert_eq!(total, 7);
+    }
+
+    #[test]
+    fn histogram_percentile_bound_monotone() {
+        let mut h = LatencyHistogram::new();
+        for i in 0..1000u64 {
+            h.record_us(i);
+        }
+        assert!(h.percentile_bound_us(50.0) <= h.percentile_bound_us(99.0));
+        assert!(h.percentile_bound_us(99.0) <= 1024);
+        assert_eq!(LatencyHistogram::new().percentile_bound_us(50.0), 0);
+    }
+
+    #[test]
+    fn histogram_merge_adds() {
+        let mut a = LatencyHistogram::new();
+        a.record_us(3);
+        let mut b = LatencyHistogram::new();
+        b.record_us(3);
+        b.record_us(100);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+    }
+
+    #[test]
+    fn hardware_estimate_matches_direct_evaluation() {
+        use crate::accel::system;
+        let net = NetworkSpec::lenet5();
+        let est = HardwareEstimate::for_config(TechKind::Rfet10, 8, 32, &net);
+        let direct = system::evaluate(&SystemConfig::paper(TechKind::Rfet10, 8), &net);
+        assert!((est.metrics.area_mm2 - direct.metrics.area_mm2).abs() < 1e-12);
+        assert!((est.metrics.energy_uj - direct.metrics.energy_uj).abs() < 1e-12);
+        // Cached characterization: a second call is consistent.
+        let again = HardwareEstimate::for_config(TechKind::Rfet10, 8, 32, &net);
+        assert!((again.metrics.latency_us - est.metrics.latency_us).abs() < 1e-12);
+    }
+
+    #[test]
+    fn session_metrics_summary_mentions_backend_and_estimate() {
+        let net = NetworkSpec::lenet5();
+        let mut serve = ServeStats::new();
+        serve.record(Duration::from_micros(100), 4);
+        let mut histogram = LatencyHistogram::new();
+        histogram.record_us(100);
+        let m = SessionMetrics {
+            backend: "stochastic-fused".into(),
+            requests: 1,
+            rejected: 0,
+            failed: 0,
+            batches: 1,
+            wall: Duration::from_millis(10),
+            serve,
+            histogram,
+            estimate: Some(HardwareEstimate::for_config(TechKind::Rfet10, 8, 32, &net)),
+        };
+        let text = m.summary();
+        assert!(text.contains("stochastic-fused"));
+        assert!(text.contains("modeled hardware"));
+        assert!(m.throughput_rps() > 0.0);
+        assert!(m.estimated_total_energy_uj().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,580 @@
+//! The unified inference engine: **every** way to run the SCNN — fused
+//! bit-exact stochastic, per-bit golden reference, analytic expectation /
+//! noisy-expectation / fixed-point, and the PJRT executable ladder — behind
+//! one [`Session`] opened from one typed [`EngineConfig`].
+//!
+//! ```text
+//! EngineConfig ──Engine::open──▶ Session ──▶ worker thread
+//!   backend kind                   │            │ Box<dyn Backend>
+//!   net + weights                  │ infer      │   StochasticFused
+//!   k / bits / seed                │ infer_batch│   ReferencePerBit
+//!   threads / batch policy         │ submit     │   Expectation(+noisy/fixed)
+//!   tech / channels                │ drain      │   Xla (PJRT ladder)
+//!                                  ▼            ▼
+//!                             SessionMetrics (latency histogram,
+//!                             throughput, modeled energy/area)
+//! ```
+//!
+//! # Why a session object
+//!
+//! The compiled state behind an inference — gather tables, layer randoms,
+//! every weight SNG stream, PJRT executables — is expensive to build and
+//! cheap to reuse. A [`Session`] owns that state on a dedicated worker
+//! thread (PJRT handles are not `Send`-safe to share), batches concurrent
+//! requests through one dynamic batcher for **every** backend, and carries
+//! its own [`SessionMetrics`]: exact latency percentiles, a log₂ histogram,
+//! throughput, and the modeled hardware cost of the run via
+//! [`crate::accel::system`].
+//!
+//! # Request paths
+//!
+//! * [`Session::infer`] — one blocking request (concurrent callers are
+//!   coalesced by the batcher);
+//! * [`Session::infer_batch`] — a whole slice, pipelined through the
+//!   batcher, results in input order;
+//! * [`Session::submit`] / [`Session::drain`] — the streaming serve path:
+//!   `submit` enqueues without waiting (blocking only when
+//!   `BatchPolicy::queue_depth` requests are already in flight —
+//!   backpressure), `drain` collects every outstanding result in
+//!   submission order.
+//!
+//! The free functions `accel::network::forward` / `forward_batch` are
+//! deprecated shims over the same machinery; new code opens a session.
+
+pub mod backend;
+pub mod config;
+pub mod metrics;
+
+pub use backend::Backend;
+pub use config::{BackendKind, BatchPolicy, EngineConfig, WeightSource};
+pub use metrics::{HardwareEstimate, LatencyHistogram, ServeStats, SessionMetrics};
+
+use crate::accel::layers::NetworkSpec;
+use crate::tech::TechKind;
+use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Argmax over a logit slice (the serving dtype). Delegates to the generic
+/// [`crate::accel::network::classify`], so the f32 serving path and the f64
+/// datapath can never diverge on tie or NaN handling.
+pub fn classify(output: &[f32]) -> usize {
+    crate::accel::network::classify(output)
+}
+
+/// The engine entry point: opens [`Session`]s and evaluates configurations.
+pub struct Engine;
+
+impl Engine {
+    /// Open a session: spawn the worker, build the configured backend on
+    /// it (compiling plans / executables), and return once it is ready.
+    pub fn open(config: EngineConfig) -> Result<Session> {
+        Session::open(config)
+    }
+
+    /// The modeled-hardware estimate for a configuration without opening a
+    /// session (`None` for [`BackendKind::Xla`]). This is what `sweep`
+    /// iterates over.
+    pub fn estimate(config: &EngineConfig) -> Option<HardwareEstimate> {
+        config.estimate()
+    }
+}
+
+/// Handle to one in-flight [`Session::submit`] request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Ticket(u64);
+
+/// A classification request travelling to the worker.
+struct Request {
+    image: Vec<f32>,
+    enqueued: Instant,
+    respond: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+/// State shared between the session handle and its worker.
+struct Shared {
+    recorder: Mutex<Recorder>,
+    inflight: Mutex<usize>,
+    done: Condvar,
+}
+
+/// The worker-side metrics recorder.
+#[derive(Default)]
+struct Recorder {
+    serve: ServeStats,
+    hist: LatencyHistogram,
+    batches: usize,
+    rejected: usize,
+    failed: usize,
+}
+
+/// What the worker reports back once its backend is built.
+struct BackendInfo {
+    name: &'static str,
+    in_len: usize,
+    out_len: usize,
+}
+
+/// An open inference session: one backend, one dynamic batcher, one
+/// metrics recorder. Cheap to share by reference across client threads.
+pub struct Session {
+    tx: mpsc::Sender<Request>,
+    shared: Arc<Shared>,
+    pending: Mutex<VecDeque<(Ticket, mpsc::Receiver<Result<Vec<f32>>>)>>,
+    next_ticket: AtomicU64,
+    worker: Option<std::thread::JoinHandle<()>>,
+    info: BackendInfo,
+    /// Inputs for the modeled-hardware estimate (None for XLA), evaluated
+    /// lazily on first [`Session::metrics`] — channel characterization is
+    /// gate-level-simulation heavy and many sessions never read metrics.
+    estimate_inputs: Option<(TechKind, usize, usize, NetworkSpec)>,
+    estimate: OnceLock<Option<HardwareEstimate>>,
+    opened: Instant,
+    queue_depth: usize,
+}
+
+impl Session {
+    /// Open a session from a validated configuration (see [`Engine::open`]).
+    pub fn open(config: EngineConfig) -> Result<Self> {
+        config.validate()?;
+        let estimate_inputs = if config.backend == BackendKind::Xla {
+            None
+        } else {
+            Some((config.tech, config.channels, config.k, config.net.clone()))
+        };
+        let queue_depth = config.batch.queue_depth.max(1);
+        let shared = Arc::new(Shared {
+            recorder: Mutex::new(Recorder::default()),
+            inflight: Mutex::new(0),
+            done: Condvar::new(),
+        });
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<BackendInfo>>();
+        let shared_w = Arc::clone(&shared);
+        let worker = std::thread::Builder::new()
+            .name("scnn-engine".into())
+            .spawn(move || worker_loop(config, rx, shared_w, ready_tx))
+            .map_err(|e| anyhow!("spawning engine worker: {e}"))?;
+        let info = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine worker died during startup"))??;
+        Ok(Session {
+            tx,
+            shared,
+            pending: Mutex::new(VecDeque::new()),
+            next_ticket: AtomicU64::new(0),
+            worker: Some(worker),
+            info,
+            estimate_inputs,
+            estimate: OnceLock::new(),
+            opened: Instant::now(),
+            queue_depth,
+        })
+    }
+
+    /// Backend label (e.g. `stochastic-fused`).
+    pub fn backend(&self) -> &str {
+        self.info.name
+    }
+
+    /// Expected flattened input length.
+    pub fn in_len(&self) -> usize {
+        self.info.in_len
+    }
+
+    /// Flattened output length (class count).
+    pub fn out_len(&self) -> usize {
+        self.info.out_len
+    }
+
+    /// Block until a backpressure slot frees up, then claim it.
+    fn acquire_slot(&self) {
+        let mut n = self.shared.inflight.lock().unwrap();
+        while *n >= self.queue_depth {
+            n = self.shared.done.wait(n).unwrap();
+        }
+        *n += 1;
+    }
+
+    /// Enqueue one request (claiming a backpressure slot) and return the
+    /// response channel.
+    fn send_request(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
+        self.acquire_slot();
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request { image, enqueued: Instant::now(), respond: rtx };
+        if self.tx.send(req).is_err() {
+            release_slots(&self.shared, 1);
+            return Err(anyhow!("engine session stopped"));
+        }
+        Ok(rrx)
+    }
+
+    /// Classify one image (blocking). Returns the logits.
+    pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
+        let rrx = self.send_request(image)?;
+        rrx.recv().map_err(|_| anyhow!("engine worker dropped request"))?
+    }
+
+    /// Run a whole slice through the batcher; results in input order. The
+    /// images are pipelined (submission overlaps execution), so batches
+    /// form even from a single caller thread.
+    pub fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let mut receivers = Vec::with_capacity(images.len());
+        for img in images {
+            receivers.push(self.send_request(img.clone())?);
+        }
+        let mut outs = Vec::with_capacity(receivers.len());
+        for rrx in receivers {
+            outs.push(rrx.recv().map_err(|_| anyhow!("engine worker dropped request"))??);
+        }
+        Ok(outs)
+    }
+
+    /// Enqueue one request without waiting for its result. Blocks only for
+    /// backpressure: at most `BatchPolicy::queue_depth` requests may be in
+    /// flight. Collect results with [`Session::drain`].
+    pub fn submit(&self, image: Vec<f32>) -> Result<Ticket> {
+        self.acquire_slot();
+        // Ticket allocation, channel send, and the pending push happen
+        // under one lock so concurrent submitters cannot interleave them —
+        // drain()'s submission-order contract depends on pending order
+        // matching the worker's arrival order.
+        let mut pending = self.pending.lock().unwrap();
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request { image, enqueued: Instant::now(), respond: rtx };
+        if self.tx.send(req).is_err() {
+            drop(pending);
+            release_slots(&self.shared, 1);
+            return Err(anyhow!("engine session stopped"));
+        }
+        let ticket = Ticket(self.next_ticket.fetch_add(1, Ordering::Relaxed));
+        pending.push_back((ticket, rrx));
+        Ok(ticket)
+    }
+
+    /// Wait for every outstanding [`Session::submit`] and return the
+    /// results in submission order.
+    pub fn drain(&self) -> Vec<(Ticket, Result<Vec<f32>>)> {
+        let mut done = Vec::new();
+        loop {
+            // Pop outside the wait so concurrent submitters are not blocked.
+            let next = self.pending.lock().unwrap().pop_front();
+            match next {
+                None => break,
+                Some((ticket, rrx)) => {
+                    let res = rrx
+                        .recv()
+                        .map_err(|_| anyhow!("engine worker dropped request"))
+                        .and_then(|r| r);
+                    done.push((ticket, res));
+                }
+            }
+        }
+        done
+    }
+
+    /// Number of submitted-but-undrained requests.
+    pub fn outstanding(&self) -> usize {
+        self.pending.lock().unwrap().len()
+    }
+
+    /// Snapshot of this session's metrics. The first call evaluates the
+    /// modeled-hardware estimate (cached for the session's lifetime).
+    pub fn metrics(&self) -> SessionMetrics {
+        let estimate = *self.estimate.get_or_init(|| {
+            self.estimate_inputs
+                .as_ref()
+                .map(|&(tech, channels, k, ref net)| {
+                    HardwareEstimate::for_config(tech, channels, k, net)
+                })
+        });
+        let rec = self.shared.recorder.lock().unwrap();
+        SessionMetrics {
+            backend: self.info.name.to_string(),
+            requests: rec.serve.count(),
+            rejected: rec.rejected,
+            failed: rec.failed,
+            batches: rec.batches,
+            wall: self.opened.elapsed(),
+            serve: rec.serve.clone(),
+            histogram: rec.hist.clone(),
+            estimate,
+        }
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        // Closing the request channel stops the worker loop.
+        let (dummy_tx, _) = mpsc::channel();
+        let _ = std::mem::replace(&mut self.tx, dummy_tx);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn release_slots(shared: &Shared, n: usize) {
+    let mut g = shared.inflight.lock().unwrap();
+    *g = g.saturating_sub(n);
+    shared.done.notify_all();
+}
+
+/// The worker: builds the backend, then drains the queue in dynamic
+/// batches — block for the first request, linger for more, execute, respond.
+fn worker_loop(
+    cfg: EngineConfig,
+    rx: mpsc::Receiver<Request>,
+    shared: Arc<Shared>,
+    ready: mpsc::Sender<Result<BackendInfo>>,
+) {
+    let batch_max = cfg.batch.max_batch.max(1);
+    let linger = cfg.batch.linger;
+    let mut backend = match backend::build(&cfg) {
+        Ok(b) => {
+            let info =
+                BackendInfo { name: b.name(), in_len: b.in_len(), out_len: b.out_len() };
+            let _ = ready.send(Ok(info));
+            b
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let in_len = backend.in_len();
+
+    loop {
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // session dropped
+        };
+        let mut pending = vec![first];
+        let deadline = Instant::now() + linger;
+        while pending.len() < batch_max {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // Reject malformed requests individually; batch the rest.
+        let mut valid: Vec<Request> = Vec::with_capacity(pending.len());
+        let mut rejected = 0usize;
+        for r in pending {
+            if r.image.len() != in_len {
+                let msg = anyhow!(
+                    "request image has {} elements, expected {in_len}",
+                    r.image.len()
+                );
+                let _ = r.respond.send(Err(msg));
+                rejected += 1;
+            } else {
+                valid.push(r);
+            }
+        }
+        if rejected > 0 {
+            shared.recorder.lock().unwrap().rejected += rejected;
+            release_slots(&shared, rejected);
+        }
+        if valid.is_empty() {
+            continue;
+        }
+        let inputs: Vec<Vec<f32>> =
+            valid.iter_mut().map(|r| std::mem::take(&mut r.image)).collect();
+        let bsz = valid.len();
+        match backend.infer_batch(&inputs) {
+            Ok(outs) if outs.len() == bsz => {
+                let mut rec = shared.recorder.lock().unwrap();
+                rec.batches += 1;
+                for (r, out) in valid.iter().zip(outs) {
+                    // Record before responding: clients may read metrics
+                    // right after their reply arrives.
+                    let lat = r.enqueued.elapsed();
+                    rec.serve.record(lat, bsz);
+                    rec.hist.record_us(lat.as_micros() as u64);
+                    let _ = r.respond.send(Ok(out));
+                }
+            }
+            Ok(outs) => {
+                shared.recorder.lock().unwrap().failed += bsz;
+                for r in &valid {
+                    let _ = r.respond.send(Err(anyhow!(
+                        "backend returned {} outputs for a batch of {bsz}",
+                        outs.len()
+                    )));
+                }
+            }
+            Err(e) => {
+                // Count before responding so a failed run is visible in
+                // metrics the moment callers see their errors.
+                shared.recorder.lock().unwrap().failed += bsz;
+                let msg = format!("{e:#}");
+                for r in &valid {
+                    let _ = r.respond.send(Err(anyhow!("batch failed: {msg}")));
+                }
+            }
+        }
+        release_slots(&shared, bsz);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::layers::{LayerKind, LayerSpec, NetworkSpec};
+    use crate::accel::network::{ForwardMode, ForwardPlan, LayerWeights, QuantizedWeights};
+    use crate::sc::quantize_bipolar;
+    use std::time::Duration;
+
+    fn tiny_net() -> NetworkSpec {
+        NetworkSpec {
+            name: "tiny".into(),
+            input: (1, 4, 4),
+            layers: vec![LayerSpec {
+                kind: LayerKind::Dense { inputs: 16, outputs: 3 },
+                relu: false,
+            }],
+        }
+    }
+
+    fn tiny_weights(bits: u32) -> QuantizedWeights {
+        let codes: Vec<Vec<u32>> = (0..3)
+            .map(|oc| {
+                (0..16)
+                    .map(|j| quantize_bipolar(((oc * 7 + j) % 11) as f64 / 5.5 - 1.0, bits))
+                    .collect()
+            })
+            .collect();
+        QuantizedWeights { bits, layers: vec![LayerWeights { codes, gamma: 1.0, mu: 0.0 }] }
+    }
+
+    fn cfg(kind: BackendKind) -> EngineConfig {
+        EngineConfig::new(kind, tiny_net()).with_quantized(tiny_weights(8)).with_k(64)
+    }
+
+    fn image(phase: usize) -> Vec<f32> {
+        (0..16).map(|j| ((j + phase) % 10) as f32 / 10.0).collect()
+    }
+
+    #[test]
+    fn session_matches_direct_plan() {
+        let session = Engine::open(cfg(BackendKind::Expectation)).unwrap();
+        assert_eq!(session.backend(), "expectation");
+        assert_eq!(session.in_len(), 16);
+        assert_eq!(session.out_len(), 3);
+        let served = session.infer(image(0)).unwrap();
+        let plan = ForwardPlan::new(&tiny_net(), &tiny_weights(8), ForwardMode::Expectation);
+        let direct = plan.run(&image(0).iter().map(|&v| v as f64).collect::<Vec<_>>());
+        for (s, d) in served.iter().zip(&direct) {
+            assert!((*s as f64 - d).abs() < 1e-6, "served {s} direct {d}");
+        }
+    }
+
+    #[test]
+    fn fused_session_is_bit_exact_vs_reference_session() {
+        let fused = Engine::open(cfg(BackendKind::StochasticFused)).unwrap();
+        let golden = Engine::open(cfg(BackendKind::ReferencePerBit)).unwrap();
+        for phase in 0..3 {
+            let a = fused.infer(image(phase)).unwrap();
+            let b = golden.infer(image(phase)).unwrap();
+            assert_eq!(a, b, "phase {phase}");
+        }
+    }
+
+    #[test]
+    fn infer_batch_preserves_order_and_matches_infer() {
+        let session = Engine::open(cfg(BackendKind::StochasticFused)).unwrap();
+        let images: Vec<Vec<f32>> = (0..9).map(image).collect();
+        let batch = session.infer_batch(&images).unwrap();
+        assert_eq!(batch.len(), 9);
+        for (i, img) in images.iter().enumerate() {
+            assert_eq!(batch[i], session.infer(img.clone()).unwrap(), "image {i}");
+        }
+    }
+
+    #[test]
+    fn submit_drain_streams_in_order_with_backpressure() {
+        let mut config = cfg(BackendKind::Expectation);
+        config.batch = BatchPolicy {
+            max_batch: 4,
+            linger: Duration::from_millis(1),
+            queue_depth: 2, // force the backpressure path
+        };
+        let session = Engine::open(config).unwrap();
+        let mut tickets = Vec::new();
+        for phase in 0..10 {
+            tickets.push(session.submit(image(phase)).unwrap());
+        }
+        assert_eq!(session.outstanding(), 10);
+        let results = session.drain();
+        assert_eq!(session.outstanding(), 0);
+        assert_eq!(results.len(), 10);
+        for (i, (ticket, res)) in results.iter().enumerate() {
+            assert_eq!(*ticket, tickets[i], "submission order preserved");
+            let logits = res.as_ref().unwrap();
+            assert_eq!(logits, &session.infer(image(i)).unwrap());
+        }
+        assert!(session.drain().is_empty(), "drain on an empty queue is empty");
+    }
+
+    #[test]
+    fn malformed_requests_rejected_and_counted() {
+        let session = Engine::open(cfg(BackendKind::Expectation)).unwrap();
+        assert!(session.infer(vec![0.0; 5]).is_err());
+        let ok = session.infer(image(1));
+        assert!(ok.is_ok(), "valid requests still served after a rejection");
+        let m = session.metrics();
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.requests, 1);
+    }
+
+    #[test]
+    fn metrics_count_requests_batches_and_estimate() {
+        let session = Engine::open(cfg(BackendKind::StochasticFused)).unwrap();
+        let images: Vec<Vec<f32>> = (0..12).map(image).collect();
+        session.infer_batch(&images).unwrap();
+        let m = session.metrics();
+        assert_eq!(m.requests, 12);
+        assert_eq!(m.failed, 0);
+        assert!(m.batches >= 1);
+        assert_eq!(m.histogram.count(), 12);
+        assert_eq!(m.serve.count(), 12);
+        assert!(m.mean_batch() >= 1.0);
+        assert!(m.throughput_rps() > 0.0);
+        let est = m.estimate.expect("SC backends carry a hardware estimate");
+        assert!(est.metrics.energy_uj > 0.0);
+        assert!(m.estimated_total_energy_uj().unwrap() > 0.0);
+        assert!(m.summary().contains("stochastic-fused"));
+    }
+
+    #[test]
+    fn open_fails_on_invalid_config() {
+        // No weights.
+        let bad = EngineConfig::new(BackendKind::StochasticFused, tiny_net());
+        assert!(Engine::open(bad).is_err());
+        // Xla without a ladder.
+        let bad = EngineConfig::new(BackendKind::Xla, tiny_net());
+        assert!(Engine::open(bad).is_err());
+        // Xla with a missing artifact: the error comes from the worker.
+        let bad = EngineConfig::new(BackendKind::Xla, tiny_net())
+            .with_hlo_ladder(vec![(1, std::path::PathBuf::from("/nonexistent.hlo.txt"))]);
+        assert!(Engine::open(bad).is_err());
+    }
+
+    #[test]
+    fn classify_picks_last_argmax_like_network_classify() {
+        assert_eq!(classify(&[0.1, 0.9, -0.3]), 1);
+        assert_eq!(classify(&[-5.0, -2.0, -9.0]), 1);
+        let f64s = [0.25f64, 0.5, 0.5];
+        let f32s = [0.25f32, 0.5, 0.5];
+        assert_eq!(classify(&f32s), crate::accel::network::classify(&f64s));
+    }
+}

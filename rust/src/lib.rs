@@ -2,15 +2,55 @@
 //!
 //! A from-scratch reproduction of *"An Energy-Efficient RFET-Based
 //! Stochastic Computing Neural Network Accelerator"* (Lu et al., 2025)
-//! as a three-layer Rust + JAX + Pallas system:
+//! as a three-layer Rust + JAX + Pallas system.
 //!
-//! * **L3 (this crate)** — the coordinator and every hardware substrate the
-//!   paper depends on: standard-cell technology models ([`tech`]), a
-//!   gate-level netlist builder ([`netlist`]) with logic/timing/power
-//!   simulation ([`sim`]), the stochastic-computing primitive zoo ([`sc`]),
-//!   the accelerator architecture + performance model ([`accel`]), and a
-//!   tokio serving coordinator ([`coordinator`]) that drives AOT-compiled
-//!   JAX graphs through PJRT ([`runtime`]).
+//! ## The engine API
+//!
+//! All inference goes through **one entry point**: [`engine`]. A typed
+//! [`engine::EngineConfig`] selects a datapath, and
+//! [`engine::Engine::open`] returns an [`engine::Session`] that owns the
+//! compiled state (plans, scratch arenas, PJRT executables), dynamically
+//! batches concurrent requests, applies backpressure on the streaming
+//! `submit`/`drain` path, and records per-session metrics — latency
+//! histogram, throughput, and the modeled hardware cost of the run.
+//!
+//! | Backend kind        | What it runs                              | Contract                           |
+//! |---------------------|-------------------------------------------|------------------------------------|
+//! | `StochasticFused`   | fused word-packed bit-exact SC datapath   | bit-identical to `ReferencePerBit` |
+//! | `ReferencePerBit`   | per-bit golden reference (slow)           | the fixed point everything matches |
+//! | `Expectation`       | SC expectation model (no sampling noise)  | ≈ stochastic as k → ∞              |
+//! | `NoisyExpectation`  | expectation + analytic k-cycle noise      | the paper's §V-B methodology       |
+//! | `FixedPoint`        | binary MAC + hard ReLU baseline           | Fig. 12 comparison axis            |
+//! | `Xla`               | AOT-compiled HLO graphs via PJRT          | the trained serving graph          |
+//!
+//! ```no_run
+//! # fn main() -> anyhow::Result<()> {
+//! use scnn::accel::layers::NetworkSpec;
+//! use scnn::engine::{BackendKind, Engine, EngineConfig};
+//!
+//! let cfg = EngineConfig::new(BackendKind::StochasticFused, NetworkSpec::lenet5())
+//!     .with_weights_file("artifacts/lenet5_sc.weights.bin")
+//!     .with_k(256);
+//! let session = Engine::open(cfg)?;
+//! let _logits = session.infer(vec![0.0; 28 * 28])?;
+//! println!("{}", session.metrics().summary());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The pre-engine free functions `accel::network::forward` /
+//! `forward_batch` are `#[deprecated]` shims kept bit-compatible during
+//! the migration window.
+//!
+//! ## Layer map
+//!
+//! * **L3 (this crate)** — the engine/serving stack above, plus every
+//!   hardware substrate the paper depends on: standard-cell technology
+//!   models ([`tech`]), a gate-level netlist builder ([`netlist`]) with
+//!   logic/timing/power simulation ([`sim`]), the stochastic-computing
+//!   primitive zoo ([`sc`]), the accelerator architecture + performance
+//!   model ([`accel`]), and the serving façade ([`coordinator`]) driving
+//!   AOT-compiled JAX graphs through PJRT ([`runtime`]).
 //! * **L2** — the JAX LeNet-5 / SC-equivalent model (`python/compile/model.py`),
 //!   lowered once to HLO text in `artifacts/`.
 //! * **L1** — Pallas kernels for the SC hot-spot (`python/compile/kernels/`).
@@ -18,13 +58,15 @@
 //! Python never runs on the request path; after `make artifacts` the `scnn`
 //! binary is self-contained.
 //!
-//! See `DESIGN.md` for the full system inventory and the experiment index
-//! mapping every table/figure in the paper to a bench target.
+//! See `README.md` for the architecture tour and `DESIGN.md` for the full
+//! system inventory mapping every table/figure in the paper to a bench
+//! target.
 
 pub mod accel;
 pub mod benchutil;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod netlist;
 pub mod runtime;
 pub mod sc;

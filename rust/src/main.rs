@@ -1,47 +1,84 @@
-//! `scnn` — the L3 coordinator CLI.
+//! `scnn` — the L3 coordinator CLI. Every inference subcommand runs
+//! through the unified `scnn::engine` API: one typed `EngineConfig`, one
+//! `Session`, one `SessionMetrics` report.
 //!
 //! Subcommands:
-//! * `serve`     — load AOT artifacts, serve the synthetic test set through
-//!   the dynamic batcher, report accuracy + latency + throughput;
-//! * `simulate`  — bit-exact SC inference (full LFSR→PCC→XNOR→APC→B2S→S2B
-//!   datapath) over the test set, any bitstream length / precision;
-//! * `sweep`     — Fig. 13 channel-count design-space exploration;
+//! * `serve`     — stream the synthetic test set through a session's
+//!   submit/drain path (dynamic batching + backpressure), any backend;
+//! * `simulate`  — batched in-process inference (bit-exact SC, per-bit
+//!   reference, expectation/noisy/fixed-point), any k / precision;
+//! * `sweep`     — Fig. 13 channel-count design-space exploration over
+//!   `Engine::estimate` (the same modeled-hardware struct sessions carry);
 //! * `report`    — regenerate the paper's tables (I, II, III) on stdout;
 //! * `calibrate` — print raw block characterization (debugging aid).
 //!
-//! (Hand-rolled flag parsing: clap is not vendored in this offline
-//! environment — see the Cargo.toml note.)
+//! Flags accept `--key value`, `--key=value`, and bare `--switch`;
+//! unparseable values are errors, not silent defaults. (Hand-rolled
+//! parsing: clap is not vendored in this offline environment — see the
+//! Cargo.toml note.)
 
-use anyhow::{bail, Context, Result};
-use scnn::accel::network::{classify, forward_batch, ForwardMode};
-use scnn::accel::{channel, layers::NetworkSpec, metrics::argmin_by, system};
-use scnn::coordinator::{Coordinator, CoordinatorConfig, ServeBackend};
-use scnn::data::{Artifacts, Dataset, ModelWeights};
+use anyhow::{anyhow, bail, Context, Result};
+use scnn::accel::{channel, layers::NetworkSpec, metrics::argmin_by};
+use scnn::data::{Artifacts, Dataset};
+use scnn::engine::{classify, BackendKind, BatchPolicy, Engine, EngineConfig};
 use scnn::tech::TechKind;
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
+
+/// True when a token introduces a flag (`--name`), as opposed to being a
+/// flag's value. Tokens without the `--` prefix — including negative
+/// numbers like `-3` — are always values (`--offset -3`, `--gain=-2.5`).
+fn looks_like_flag(tok: &str) -> bool {
+    tok.strip_prefix("--")
+        .and_then(|rest| rest.chars().next())
+        .is_some_and(|c| !c.is_ascii_digit())
+}
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut m = HashMap::new();
     let mut i = 0;
     while i < args.len() {
-        if let Some(key) = args[i].strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                m.insert(key.to_string(), args[i + 1].clone());
-                i += 2;
-            } else {
-                m.insert(key.to_string(), "true".to_string());
-                i += 1;
-            }
+        let Some(key) = args[i].strip_prefix("--") else {
+            i += 1;
+            continue;
+        };
+        if let Some((k, v)) = key.split_once('=') {
+            // --key=value (value may be empty, negative, or contain '=').
+            m.insert(k.to_string(), v.to_string());
+            i += 1;
+        } else if i + 1 < args.len() && !looks_like_flag(&args[i + 1]) {
+            m.insert(key.to_string(), args[i + 1].clone());
+            i += 2;
         } else {
+            m.insert(key.to_string(), "true".to_string());
             i += 1;
         }
     }
     m
 }
 
-fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
-    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+/// Typed flag lookup: absent → `default`; present but unparseable → error
+/// (never a silent fallback), keeping the parser's own message so enum
+/// flags still list their valid values.
+fn flag<T>(flags: &HashMap<String, String>, key: &str, default: T) -> Result<T>
+where
+    T: std::str::FromStr,
+    T::Err: std::fmt::Display,
+{
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|e| anyhow!("flag --{key}: cannot parse value {v:?}: {e}")),
+    }
+}
+
+fn parse_tech(s: &str) -> Result<TechKind> {
+    match s {
+        "rfet" => Ok(TechKind::Rfet10),
+        "finfet" => Ok(TechKind::Finfet10),
+        other => bail!("unknown tech {other:?} (rfet|finfet)"),
+    }
 }
 
 fn main() -> Result<()> {
@@ -68,139 +105,154 @@ fn print_help() {
     println!(
         "scnn — RFET stochastic-computing NN accelerator (paper reproduction)\n\
          \n\
-         USAGE: scnn <command> [--flags]\n\
+         USAGE: scnn <command> [--flags]  (--key value or --key=value)\n\
          \n\
          COMMANDS:\n\
-           serve     --artifacts DIR --n N --threads T --backend pjrt|sc\n\
-                     serve the test set (PJRT graph or bit-exact SC engine)\n\
-           simulate  --mode stochastic|expectation|fixed --k K --bits B --n N\n\
-                     batched-parallel bit-exact simulation over the test set\n\
-           sweep     --tech rfet|finfet --max-channels C  Fig. 13 design space\n\
+           serve     --artifacts DIR --n N --backend pjrt|sc|reference|expectation\n\
+                     --k K --bits B --batch-max M --linger-ms L --queue-depth Q\n\
+                     --threads T (compute-thread cap for in-process backends)\n\
+                     stream the test set through an engine session\n\
+           simulate  --mode stochastic|reference|expectation|noisy|fixed\n\
+                     --k K --bits B --n N --threads T --seed S\n\
+                     batched in-process inference over the test set\n\
+           sweep     --tech rfet|finfet --max-channels C --k K\n\
+                     Fig. 13 design space via Engine::estimate\n\
            report    --table 1|2|3                        paper tables\n"
     );
 }
 
+/// Build the lenet5 engine config shared by `serve` and `simulate`.
+fn lenet_config(
+    kind: BackendKind,
+    artifacts: &Artifacts,
+    flags: &HashMap<String, String>,
+) -> Result<EngineConfig> {
+    let mut cfg = EngineConfig::new(kind, NetworkSpec::lenet5())
+        .with_k(flag(flags, "k", 32)?)
+        .with_bits(flag(flags, "bits", 8)?)
+        .with_seed(flag(flags, "seed", 7)?)
+        .with_threads(flag(flags, "threads", 0)?)
+        .with_tech(parse_tech(&flag::<String>(flags, "tech", "rfet".into())?)?)
+        .with_channels(flag(flags, "channels", 8)?)
+        .with_batch({
+            let max_batch: usize = flag(flags, "batch-max", 32)?;
+            BatchPolicy {
+                max_batch,
+                linger: Duration::from_millis(flag(flags, "linger-ms", 2)?),
+                // Default in-flight bound: two batches — latency reported
+                // under open-loop load then reflects bounded queueing, not
+                // the CLI's own submission burst.
+                queue_depth: flag(flags, "queue-depth", 2 * max_batch.max(1))?,
+            }
+        });
+    cfg = if kind == BackendKind::Xla {
+        if !artifacts.present() {
+            bail!("artifacts missing — run `make artifacts` first");
+        }
+        cfg.with_hlo_ladder(vec![
+            (1, artifacts.hlo("lenet5", 1)),
+            (8, artifacts.hlo("lenet5", 8)),
+            (32, artifacts.hlo("lenet5", 32)),
+        ])
+    } else {
+        cfg.with_weights_file(artifacts.weights("lenet5", "sc"))
+    };
+    Ok(cfg)
+}
+
 fn serve(flags: &HashMap<String, String>) -> Result<()> {
-    let artifacts = Artifacts::new(flag::<String>(flags, "artifacts", "artifacts".into()));
-    let n: usize = flag(flags, "n", 200);
-    let threads: usize = flag(flags, "threads", 8);
-    let backend_s: String = flag(flags, "backend", "pjrt".into());
+    let artifacts = Artifacts::new(flag::<String>(flags, "artifacts", "artifacts".into())?);
+    let n: usize = flag(flags, "n", 200)?;
+    let kind: BackendKind = flag(flags, "backend", BackendKind::Xla)?;
     if !artifacts.dataset("digits").exists() {
         bail!("artifacts missing — run `make artifacts` first");
     }
     let ds = Dataset::load(&artifacts.dataset("digits"))?;
     let n = n.min(ds.len());
-    let backend = match backend_s.as_str() {
-        "pjrt" => {
-            if !artifacts.present() {
-                bail!("artifacts missing — run `make artifacts` first");
-            }
-            ServeBackend::Pjrt {
-                hlo_ladder: vec![
-                    (1, artifacts.hlo("lenet5", 1)),
-                    (8, artifacts.hlo("lenet5", 8)),
-                    (32, artifacts.hlo("lenet5", 32)),
-                ],
-            }
-        }
-        "sc" => {
-            // Bit-exact SC serving: one ForwardPlan reused for the whole run.
-            let k: usize = flag(flags, "k", 32);
-            let bits: u32 = flag(flags, "bits", 8);
-            let weights =
-                ModelWeights::load(&artifacts.weights("lenet5", "sc"))?.quantize(bits);
-            ServeBackend::Stochastic {
-                net: NetworkSpec::lenet5(),
-                weights,
-                mode: ForwardMode::Stochastic { k, seed: 7 },
-                batch_max: 32,
-            }
-        }
-        other => bail!("unknown backend {other:?} (pjrt|sc)"),
-    };
-    let cfg = CoordinatorConfig {
-        backend,
-        image_len: ds.shape.0 * ds.shape.1 * ds.shape.2,
-        image_dims: ds.shape,
-        classes: 10,
-        linger: Duration::from_millis(2),
-    };
-    let coord = Coordinator::start(cfg).context("starting coordinator")?;
+    let session =
+        Engine::open(lenet_config(kind, &artifacts, flags)?).context("opening engine session")?;
+
+    // The streaming serve path: submit everything (backpressure caps the
+    // in-flight set), then drain in submission order.
     let t = Instant::now();
-    let preds = coord.infer_all(&ds.images[..n], threads)?;
+    for img in &ds.images[..n] {
+        session.submit(img.clone())?;
+    }
+    let results = session.drain();
     let wall = t.elapsed();
-    let correct = preds
-        .iter()
-        .zip(&ds.labels[..n])
-        .filter(|(&p, &l)| p == l as usize)
-        .count();
-    let st = coord.stats();
-    println!("served {n} requests in {:.1} ms ({:.0} img/s)", wall.as_secs_f64() * 1e3, n as f64 / wall.as_secs_f64());
-    println!("accuracy: {:.2}% ({correct}/{n})", 100.0 * correct as f64 / n as f64);
+    let mut correct = 0usize;
+    for ((_, res), &label) in results.iter().zip(&ds.labels[..n]) {
+        let logits = res.as_ref().map_err(|e| anyhow!("request failed: {e}"))?;
+        correct += (classify(logits) == label as usize) as usize;
+    }
     println!(
-        "latency p50 {} µs, p99 {} µs, mean batch {:.1}",
-        st.latency_percentile_us(50.0),
-        st.latency_percentile_us(99.0),
-        st.mean_batch()
+        "served {n} requests in {:.1} ms ({:.0} img/s)",
+        wall.as_secs_f64() * 1e3,
+        n as f64 / wall.as_secs_f64()
+    );
+    println!("accuracy: {:.2}% ({correct}/{n})", 100.0 * correct as f64 / n as f64);
+    print!("{}", session.metrics().summary());
+    println!(
+        "(open-loop submit/drain: latencies include queueing at depth {})",
+        session_queue_depth(flags)?
     );
     Ok(())
 }
 
+/// The effective serve queue depth (mirrors the `lenet_config` default).
+fn session_queue_depth(flags: &HashMap<String, String>) -> Result<usize> {
+    let max_batch: usize = flag(flags, "batch-max", 32)?;
+    flag(flags, "queue-depth", 2 * max_batch.max(1))
+}
+
 fn simulate(flags: &HashMap<String, String>) -> Result<()> {
-    let artifacts = Artifacts::new(flag::<String>(flags, "artifacts", "artifacts".into()));
-    let n: usize = flag(flags, "n", 50);
-    let k: usize = flag(flags, "k", 32);
-    let bits: u32 = flag(flags, "bits", 8);
-    let mode_s: String = flag(flags, "mode", "stochastic".into());
-    let net = NetworkSpec::lenet5();
+    let artifacts = Artifacts::new(flag::<String>(flags, "artifacts", "artifacts".into())?);
+    let n: usize = flag(flags, "n", 50)?;
+    let kind: BackendKind = flag(flags, "mode", BackendKind::StochasticFused)?;
+    if kind == BackendKind::Xla {
+        bail!("simulate runs the in-process datapaths; use `serve --backend pjrt`");
+    }
     let ds = Dataset::load(&artifacts.dataset("digits"))?;
-    let weights = ModelWeights::load(&artifacts.weights("lenet5", "sc"))?.quantize(bits);
-    let mode = match mode_s.as_str() {
-        "stochastic" => ForwardMode::Stochastic { k, seed: 7 },
-        "expectation" => ForwardMode::Expectation,
-        "fixed" => ForwardMode::FixedPoint,
-        other => bail!("unknown mode {other:?}"),
-    };
     let n = n.min(ds.len());
+    let session = Engine::open(lenet_config(kind, &artifacts, flags)?)?;
     let t = Instant::now();
-    // Batched-parallel forward: the plan (gathers, randoms, weight streams)
-    // is compiled once and the images fan out across cores.
-    let inputs: Vec<Vec<f64>> = ds.images[..n]
-        .iter()
-        .map(|img| img.iter().map(|&v| v as f64).collect())
-        .collect();
-    let outputs = forward_batch(&net, &weights, &inputs, mode);
+    // One pipelined batch: the plan (gathers, randoms, weight streams) is
+    // compiled once at open and the images fan out across cores.
+    let outputs = session.infer_batch(&ds.images[..n])?;
     let correct = outputs
         .iter()
         .zip(&ds.labels[..n])
         .filter(|(out, &l)| classify(out) == l as usize)
         .count();
     println!(
-        "mode={mode_s} k={k} bits={bits}: accuracy {:.2}% ({correct}/{n}) in {:.1} s ({:.1} img/s)",
+        "mode={kind}: accuracy {:.2}% ({correct}/{n}) in {:.1} s ({:.1} img/s)",
         100.0 * correct as f64 / n as f64,
         t.elapsed().as_secs_f64(),
         n as f64 / t.elapsed().as_secs_f64()
     );
+    print!("{}", session.metrics().summary());
     Ok(())
 }
 
 fn sweep(flags: &HashMap<String, String>) -> Result<()> {
-    let tech = match flag::<String>(flags, "tech", "rfet".into()).as_str() {
-        "rfet" => TechKind::Rfet10,
-        "finfet" => TechKind::Finfet10,
-        other => bail!("unknown tech {other:?}"),
-    };
-    let max: usize = flag(flags, "max-channels", 32);
+    let tech = parse_tech(&flag::<String>(flags, "tech", "rfet".into())?)?;
+    let max: usize = flag(flags, "max-channels", 32)?;
+    let k: usize = flag(flags, "k", 32)?;
     let counts: Vec<usize> = (0..).map(|i| 1 << i).take_while(|&c| c <= max).collect();
     let net = NetworkSpec::lenet5();
-    let evals = system::sweep_channels(tech, &net, &counts);
     println!("{tech} on {}:", net.name);
     println!("ch | area mm² | latency µs | energy µJ | ADP | EDP | EDAP");
-    for e in &evals {
-        let m = &e.metrics;
+    let mut ms = Vec::new();
+    for &c in &counts {
+        let cfg = EngineConfig::new(BackendKind::StochasticFused, net.clone())
+            .with_tech(tech)
+            .with_channels(c)
+            .with_k(k);
+        let est = Engine::estimate(&cfg).expect("SC configurations always have an estimate");
+        let m = est.metrics;
         println!(
             "{:>2} | {:.4} | {:.2} | {:.3} | {:.4} | {:.4} | {:.5}",
-            e.channels,
+            c,
             m.area_mm2,
             m.latency_us,
             m.energy_uj,
@@ -208,14 +260,14 @@ fn sweep(flags: &HashMap<String, String>) -> Result<()> {
             m.edp(),
             m.edap()
         );
+        ms.push(m);
     }
-    let ms: Vec<_> = evals.iter().map(|e| e.metrics).collect();
     println!("optimal by EDAP: {} channels", counts[argmin_by(&ms, |m| m.edap())]);
     Ok(())
 }
 
 fn report(flags: &HashMap<String, String>) -> Result<()> {
-    let table: u32 = flag(flags, "table", 1);
+    let table: u32 = flag(flags, "table", 1)?;
     match table {
         1 => {
             println!("Table I — component comparison (measured by our Genus-substitute)");
@@ -246,8 +298,10 @@ fn report(flags: &HashMap<String, String>) -> Result<()> {
             println!("Table III — This Work (8 channels, LeNet-5 workload)");
             let net = NetworkSpec::lenet5();
             for tech in [TechKind::Finfet10, TechKind::Rfet10] {
-                let e = system::evaluate(&system::SystemConfig::paper(tech, 8), &net);
-                let m = &e.metrics;
+                let cfg = EngineConfig::new(BackendKind::StochasticFused, net.clone())
+                    .with_tech(tech)
+                    .with_channels(8);
+                let m = Engine::estimate(&cfg).expect("estimate").metrics;
                 println!(
                     "{tech}: {:.3} mm², {:.1} mW, {:.2} GHz, {:.2} TOPS/W, {:.2} TOPS/mm²",
                     m.area_mm2,
@@ -261,4 +315,70 @@ fn report(flags: &HashMap<String, String>) -> Result<()> {
         other => bail!("unknown table {other}"),
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_space_and_equals_forms() {
+        let m = parse_flags(&args(&["--n", "50", "--backend=sc", "--mode=expectation"]));
+        assert_eq!(m["n"], "50");
+        assert_eq!(m["backend"], "sc");
+        assert_eq!(m["mode"], "expectation");
+    }
+
+    #[test]
+    fn bare_switches_and_following_flags() {
+        let m = parse_flags(&args(&["--verbose", "--n", "10", "--fast", "--k=8"]));
+        assert_eq!(m["verbose"], "true");
+        assert_eq!(m["fast"], "true");
+        assert_eq!(m["n"], "10");
+        assert_eq!(m["k"], "8");
+    }
+
+    #[test]
+    fn negative_numeric_values_are_values() {
+        let m = parse_flags(&args(&["--offset", "-3", "--gain=-2.5", "--bias", "-0.25"]));
+        assert_eq!(m["offset"], "-3");
+        assert_eq!(m["gain"], "-2.5");
+        assert_eq!(m["bias"], "-0.25");
+        assert_eq!(flag::<i64>(&m, "offset", 0).unwrap(), -3);
+        assert_eq!(flag::<f64>(&m, "gain", 0.0).unwrap(), -2.5);
+    }
+
+    #[test]
+    fn equals_value_may_contain_equals_or_be_empty() {
+        let m = parse_flags(&args(&["--expr=a=b", "--empty="]));
+        assert_eq!(m["expr"], "a=b");
+        assert_eq!(m["empty"], "");
+    }
+
+    #[test]
+    fn flag_errors_on_unparseable_instead_of_defaulting() {
+        let m = parse_flags(&args(&["--n", "not-a-number"]));
+        assert!(flag::<usize>(&m, "n", 7).is_err(), "must not silently fall back");
+        assert_eq!(flag::<usize>(&m, "absent", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn backend_kind_flag_round_trips() {
+        let m = parse_flags(&args(&["--backend", "reference", "--mode=noisy"]));
+        assert_eq!(
+            flag::<BackendKind>(&m, "backend", BackendKind::Xla).unwrap(),
+            BackendKind::ReferencePerBit
+        );
+        assert_eq!(
+            flag::<BackendKind>(&m, "mode", BackendKind::StochasticFused).unwrap(),
+            BackendKind::NoisyExpectation
+        );
+        assert!(flag::<BackendKind>(&m, "backend", BackendKind::Xla).is_ok());
+        let bad = parse_flags(&args(&["--backend", "warp-drive"]));
+        assert!(flag::<BackendKind>(&bad, "backend", BackendKind::Xla).is_err());
+    }
 }

@@ -1,0 +1,306 @@
+//! Cross-backend parity property tests for the `engine::Session` API:
+//! every backend, constructed through an `EngineConfig` alone, must agree
+//! with the `ReferencePerBit` golden model on the same seeded inputs —
+//! bit-exactly for the fused SC engine, within a sampling-noise tolerance
+//! for the analytic and XLA backends.
+
+use scnn::accel::layers::{LayerKind, LayerSpec, NetworkSpec};
+use scnn::accel::network::{LayerWeights, QuantizedWeights};
+use scnn::engine::{BackendKind, Engine, EngineConfig, Session};
+use scnn::sc::{dequantize_bipolar, quantize_bipolar};
+use std::io::Write;
+use std::path::PathBuf;
+
+/// Seeded xorshift so case generation is deterministic (proptest is not
+/// vendored; same convention as `tests/prop.rs`).
+struct Gen(u64);
+
+impl Gen {
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+
+    /// Uniform in [-1, 1).
+    fn f64(&mut self) -> f64 {
+        (self.next() % 2000) as f64 / 1000.0 - 1.0
+    }
+}
+
+/// A conv→pool→dense network exercising padding, ReLU, pooling, and the
+/// final affine — the same shape the network-level golden tests use.
+fn conv_net() -> NetworkSpec {
+    NetworkSpec {
+        name: "parity-conv".into(),
+        input: (1, 6, 6),
+        layers: vec![
+            LayerSpec {
+                kind: LayerKind::Conv { in_ch: 1, out_ch: 2, kernel: 3, padding: 1 },
+                relu: true,
+            },
+            LayerSpec { kind: LayerKind::MaxPool { size: 2 }, relu: false },
+            LayerSpec { kind: LayerKind::Dense { inputs: 18, outputs: 3 }, relu: false },
+        ],
+    }
+}
+
+fn conv_weights(bits: u32, seed: u64) -> QuantizedWeights {
+    let mut g = Gen(seed.max(1));
+    let l0: Vec<Vec<u32>> =
+        (0..2).map(|_| (0..9).map(|_| quantize_bipolar(g.f64() * 0.5, bits)).collect()).collect();
+    let l1: Vec<Vec<u32>> =
+        (0..3).map(|_| (0..18).map(|_| quantize_bipolar(g.f64() * 0.9, bits)).collect()).collect();
+    QuantizedWeights {
+        bits,
+        layers: vec![
+            LayerWeights { codes: l0, gamma: 0.35, mu: 0.9 },
+            LayerWeights { codes: l1, gamma: 1.0, mu: 1.2 },
+        ],
+    }
+}
+
+fn conv_image(seed: u64) -> Vec<f32> {
+    let mut g = Gen(seed.max(1) ^ 0xABCD);
+    (0..36).map(|_| (g.next() % 1000) as f32 / 1000.0).collect()
+}
+
+fn open(cfg: EngineConfig) -> Session {
+    Engine::open(cfg).expect("opening session")
+}
+
+fn sc_cfg(kind: BackendKind, k: usize, seed: u32, wseed: u64) -> EngineConfig {
+    EngineConfig::new(kind, conv_net())
+        .with_quantized(conv_weights(8, wseed))
+        .with_k(k)
+        .with_seed(seed)
+}
+
+#[test]
+fn fused_backend_is_bit_exact_vs_reference_per_bit() {
+    // Bitstream lengths below, at, and across the 64-bit word boundary.
+    for k in [16usize, 64, 100] {
+        for seed in [3u32, 7] {
+            let fused = open(sc_cfg(BackendKind::StochasticFused, k, seed, 42));
+            let golden = open(sc_cfg(BackendKind::ReferencePerBit, k, seed, 42));
+            let images: Vec<Vec<f32>> = (0..4).map(|i| conv_image(i as u64 + 1)).collect();
+            let a = fused.infer_batch(&images).unwrap();
+            let b = golden.infer_batch(&images).unwrap();
+            assert_eq!(a, b, "k={k} seed={seed}");
+        }
+    }
+}
+
+#[test]
+fn expectation_backend_tracks_reference_within_tolerance() {
+    // At k=4096 the stochastic sampling noise on these logits (sp domain,
+    // scale 2^m ≈ 32 for fan-in 18) is well under 2.0 mean-absolute.
+    for wseed in [11u64, 29] {
+        let exp = open(sc_cfg(BackendKind::Expectation, 32, 1, wseed));
+        let golden = open(sc_cfg(BackendKind::ReferencePerBit, 4096, 3, wseed));
+        let mut total = 0.0f64;
+        let mut count = 0usize;
+        for i in 0..3u64 {
+            let img = conv_image(100 + i);
+            let e = exp.infer(img.clone()).unwrap();
+            let r = golden.infer(img).unwrap();
+            assert_eq!(e.len(), r.len());
+            total += e.iter().zip(&r).map(|(a, b)| (a - b).abs() as f64).sum::<f64>();
+            count += e.len();
+        }
+        let mean_abs = total / count as f64;
+        assert!(mean_abs < 2.0, "wseed={wseed}: mean |expectation - reference| = {mean_abs}");
+    }
+}
+
+#[test]
+fn noisy_and_fixed_backends_construct_and_stay_in_range() {
+    // NoisyExpectation converges on Expectation as k grows; FixedPoint is
+    // a different model (hard ReLU) but must produce finite logits of the
+    // right arity from the same config surface.
+    let exp = open(sc_cfg(BackendKind::Expectation, 32, 1, 5));
+    let noisy = open(sc_cfg(BackendKind::NoisyExpectation, 1 << 16, 9, 5));
+    let fixed = open(sc_cfg(BackendKind::FixedPoint, 32, 1, 5));
+    for i in 0..3u64 {
+        let img = conv_image(i + 7);
+        let e = exp.infer(img.clone()).unwrap();
+        let n = noisy.infer(img.clone()).unwrap();
+        let f = fixed.infer(img).unwrap();
+        assert_eq!(e.len(), 3);
+        assert_eq!(f.len(), 3);
+        assert!(f.iter().all(|v| v.is_finite()));
+        let mean_abs: f64 =
+            e.iter().zip(&n).map(|(a, b)| (a - b).abs() as f64).sum::<f64>() / e.len() as f64;
+        assert!(mean_abs < 0.5, "image {i}: noisy(k=65536) drifted {mean_abs} from expectation");
+    }
+}
+
+#[test]
+fn batched_and_single_session_paths_are_bit_identical() {
+    for kind in [
+        BackendKind::StochasticFused,
+        BackendKind::ReferencePerBit,
+        BackendKind::Expectation,
+        BackendKind::NoisyExpectation,
+        BackendKind::FixedPoint,
+    ] {
+        let session = open(sc_cfg(kind, 64, 5, 13));
+        let images: Vec<Vec<f32>> = (0..5).map(|i| conv_image(50 + i as u64)).collect();
+        let batch = session.infer_batch(&images).unwrap();
+        for (i, img) in images.iter().enumerate() {
+            let single = session.infer(img.clone()).unwrap();
+            assert_eq!(batch[i], single, "{kind} image {i}");
+        }
+        let m = session.metrics();
+        assert_eq!(m.requests, 10, "{kind}: 5 batched + 5 single");
+        assert!(m.estimate.is_some(), "{kind} models SC hardware");
+    }
+}
+
+// ---- XLA parity on a linear network -------------------------------------
+//
+// The XLA backend runs an AOT graph, so parity is checked on a network
+// whose SC expectation is exactly linear algebra: one Dense layer, no
+// ReLU, gamma=1, mu=0, every weight row constant. With inputs and weights
+// chosen on the 8-bit quantization grid, the expectation logits equal the
+// HLO graph's f32 arithmetic exactly, and the per-bit reference agrees to
+// stochastic sampling noise at large k.
+
+const CLASSES: usize = 10;
+
+/// Weight value per class, on the 8-bit bipolar grid (code 40 + 16c).
+fn xla_weight(c: usize) -> f64 {
+    dequantize_bipolar(40 + 16 * c as u32, 8)
+}
+
+fn linear_net() -> NetworkSpec {
+    NetworkSpec {
+        name: "parity-linear".into(),
+        input: (1, 2, 2),
+        layers: vec![LayerSpec {
+            kind: LayerKind::Dense { inputs: 4, outputs: CLASSES },
+            relu: false,
+        }],
+    }
+}
+
+fn linear_weights() -> QuantizedWeights {
+    let codes: Vec<Vec<u32>> =
+        (0..CLASSES).map(|c| vec![quantize_bipolar(xla_weight(c), 8); 4]).collect();
+    QuantizedWeights { bits: 8, layers: vec![LayerWeights { codes, gamma: 1.0, mu: 0.0 }] }
+}
+
+/// out[b, c] = sum(x[b]) * w[c] — the linear net above as HLO text.
+fn linear_hlo(batch: usize) -> String {
+    let w: Vec<String> = (0..CLASSES).map(|c| format!("{}", xla_weight(c))).collect();
+    format!(
+        r#"HloModule parity_b{batch}, entry_computation_layout={{(f32[{batch},1,2,2]{{3,2,1,0}})->(f32[{batch},{CLASSES}]{{1,0}})}}
+
+add {{
+  a = f32[] parameter(0)
+  b = f32[] parameter(1)
+  ROOT s = f32[] add(a, b)
+}}
+
+ENTRY main {{
+  x = f32[{batch},1,2,2]{{3,2,1,0}} parameter(0)
+  xr = f32[{batch},4]{{1,0}} reshape(x)
+  w = f32[{CLASSES}]{{0}} constant({{{wlist}}})
+  zero = f32[] constant(0)
+  sums = f32[{batch}]{{0}} reduce(xr, zero), dimensions={{1}}, to_apply=add
+  sb = f32[{batch},{CLASSES}]{{1,0}} broadcast(sums), dimensions={{0}}
+  wb = f32[{batch},{CLASSES}]{{1,0}} broadcast(w), dimensions={{1}}
+  prod = f32[{batch},{CLASSES}]{{1,0}} multiply(sb, wb)
+  ROOT out = (f32[{batch},{CLASSES}]{{1,0}}) tuple(prod)
+}}
+"#,
+        wlist = w.join(",")
+    )
+}
+
+fn write_tmp(name: &str, text: &str) -> PathBuf {
+    let p = std::env::temp_dir()
+        .join(format!("scnn_parity_{name}_{}.hlo.txt", std::process::id()));
+    std::fs::File::create(&p).unwrap().write_all(text.as_bytes()).unwrap();
+    p
+}
+
+/// Images whose pixels sit exactly on the 8-bit bipolar grid.
+fn grid_image(seed: u64) -> Vec<f32> {
+    let mut g = Gen(seed.max(1) ^ 0x5EED);
+    (0..4).map(|_| dequantize_bipolar(128 + (g.next() % 128) as u32, 8) as f32).collect()
+}
+
+#[test]
+fn xla_backend_agrees_with_expectation_and_reference() {
+    let p1 = write_tmp("b1", &linear_hlo(1));
+    let p4 = write_tmp("b4", &linear_hlo(4));
+    let xla = open(
+        EngineConfig::new(BackendKind::Xla, linear_net())
+            .with_hlo_ladder(vec![(1, p1.clone()), (4, p4.clone())]),
+    );
+    let exp = open(
+        EngineConfig::new(BackendKind::Expectation, linear_net())
+            .with_quantized(linear_weights()),
+    );
+    let golden = open(
+        EngineConfig::new(BackendKind::ReferencePerBit, linear_net())
+            .with_quantized(linear_weights())
+            .with_k(4096)
+            .with_seed(3),
+    );
+    let images: Vec<Vec<f32>> = (0..6).map(|i| grid_image(i as u64 + 1)).collect();
+    let x = xla.infer_batch(&images).unwrap();
+    let e = exp.infer_batch(&images).unwrap();
+    let r = golden.infer_batch(&images).unwrap();
+    for i in 0..images.len() {
+        assert_eq!(x[i].len(), CLASSES);
+        for c in 0..CLASSES {
+            // On-grid inputs: the SC expectation *is* the graph's f32 math.
+            assert!(
+                (x[i][c] - e[i][c]).abs() < 1e-4,
+                "image {i} class {c}: xla {} vs expectation {}",
+                x[i][c],
+                e[i][c]
+            );
+            // The per-bit reference agrees to sampling noise (k=4096,
+            // fan-in 4 ⇒ sp scale 8; 6σ comfortably under 1.2).
+            assert!(
+                (x[i][c] as f64 - r[i][c] as f64).abs() < 1.2,
+                "image {i} class {c}: xla {} vs reference {}",
+                x[i][c],
+                r[i][c]
+            );
+        }
+    }
+    drop(xla);
+    std::fs::remove_file(p1).ok();
+    std::fs::remove_file(p4).ok();
+}
+
+#[test]
+fn every_backend_constructs_from_config_alone() {
+    // The api contract of the redesign: a plain EngineConfig is sufficient
+    // to open each of the four backend families.
+    for kind in [
+        BackendKind::StochasticFused,
+        BackendKind::ReferencePerBit,
+        BackendKind::Expectation,
+    ] {
+        let session = open(sc_cfg(kind, 32, 1, 3));
+        assert_eq!(session.backend(), kind.label());
+        assert_eq!(session.in_len(), 36);
+        assert_eq!(session.out_len(), 3);
+    }
+    let p1 = write_tmp("ctor_b1", &linear_hlo(1));
+    let xla = open(
+        EngineConfig::new(BackendKind::Xla, linear_net())
+            .with_hlo_ladder(vec![(1, p1.clone())]),
+    );
+    assert_eq!(xla.backend(), "xla");
+    assert_eq!(xla.in_len(), 4);
+    assert_eq!(xla.out_len(), CLASSES);
+    drop(xla);
+    std::fs::remove_file(p1).ok();
+}
