@@ -24,8 +24,9 @@ fn main() {
         return;
     }
     let ds = Dataset::load(&artifacts.dataset("digits")).unwrap();
-    let net = NetworkSpec::lenet5();
-    let raw = ModelWeights::load(&artifacts.weights("lenet5", "sc")).unwrap();
+    // One name drives both the topology (registry) and the artifact paths.
+    let net = NetworkSpec::by_name("lenet5").unwrap();
+    let raw = ModelWeights::load(&artifacts.weights(&net.name, "sc")).unwrap();
     let n = 60.min(ds.len());
     let ks = [32usize, 128, 512, 1024, 2048, 4096];
     let mut rows = Vec::new();

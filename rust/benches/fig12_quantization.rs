@@ -19,9 +19,10 @@ fn main() {
         return;
     }
     let ds = Dataset::load(&artifacts.dataset("digits")).unwrap();
-    let net = NetworkSpec::lenet5();
-    let sc_raw = ModelWeights::load(&artifacts.weights("lenet5", "sc")).unwrap();
-    let fx_raw = ModelWeights::load(&artifacts.weights("lenet5", "fixed")).unwrap();
+    // One name drives both the topology (registry) and the artifact paths.
+    let net = NetworkSpec::by_name("lenet5").unwrap();
+    let sc_raw = ModelWeights::load(&artifacts.weights(&net.name, "sc")).unwrap();
+    let fx_raw = ModelWeights::load(&artifacts.weights(&net.name, "fixed")).unwrap();
     let n = 60.min(ds.len());
     let eval = |raw: &ModelWeights, bits: u32, mode_sc: bool| -> f64 {
         let weights = raw.quantize(bits);

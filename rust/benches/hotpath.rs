@@ -8,21 +8,20 @@
 //! fused/parallel engine), so the speedup column regenerates on any
 //! machine. Before/after numbers live in EXPERIMENTS.md §Perf; a
 //! machine-readable copy is written to `BENCH_hotpath.json` next to the
-//! human output, and the per-backend `engine::Session` batch-throughput
+//! human output, the per-backend `engine::Session` batch-throughput
 //! matrix (stochastic-fused / reference-per-bit / expectation / xla at
-//! k=256 and k=1024) goes to `BENCH_engine.json`.
+//! k=256 and k=1024) goes to `BENCH_engine.json`, and the per-layer stage
+//! breakdown (software median vs modeled hardware delay, per compiled
+//! stage of `lenet5` and `mnist_strided`) goes to `BENCH_layers.json`.
 //! Run with `cargo bench --bench hotpath`.
 
-use scnn::accel::layers::{LayerKind, NetworkSpec};
-use scnn::accel::network::{
-    reference, ForwardMode, ForwardPlan, LayerWeights, QuantizedWeights,
-};
+use scnn::accel::layers::NetworkSpec;
+use scnn::accel::network::{reference, ForwardMode, ForwardPlan, QuantizedWeights};
 use scnn::accel::par;
 use scnn::benchutil::{bench, BenchResult, JsonReport};
 use scnn::data::{Artifacts, Dataset, ModelWeights};
 use scnn::engine::{BackendKind, BatchPolicy, Engine, EngineConfig};
 use scnn::sc::bitstream::{Bitstream, VerticalCounter};
-use scnn::sc::quantize_bipolar;
 use scnn::sc::rng::{self, XorShift64};
 
 /// Record the fused result with its speedup over the reference run; if the
@@ -50,32 +49,6 @@ fn record_pair(
     fields.extend_from_slice(extra);
     json.add(fused, &fields);
     speedup
-}
-
-/// Random-but-deterministic LeNet-5-shaped weights so the inference benches
-/// run without artifacts (same compute cost as trained weights).
-fn synthetic_weights(net: &NetworkSpec, bits: u32, seed: u64) -> QuantizedWeights {
-    let mut g = XorShift64::new(seed);
-    let mut layers = Vec::new();
-    for l in &net.layers {
-        let (rows, cols) = match l.kind {
-            LayerKind::Conv { in_ch, out_ch, kernel, .. } => (out_ch, in_ch * kernel * kernel),
-            LayerKind::Dense { inputs, outputs } => (outputs, inputs),
-            LayerKind::MaxPool { .. } => continue,
-        };
-        let codes: Vec<Vec<u32>> = (0..rows)
-            .map(|_| {
-                (0..cols)
-                    .map(|_| {
-                        let v = (g.next_u64() % 2000) as f64 / 1250.0 - 0.8;
-                        quantize_bipolar(v, bits)
-                    })
-                    .collect()
-            })
-            .collect();
-        layers.push(LayerWeights { codes, gamma: 0.2, mu: 1.0 });
-    }
-    QuantizedWeights { bits, layers }
 }
 
 fn main() {
@@ -177,15 +150,16 @@ fn main() {
     // fused parallel engine, plus the batched serving path. Runs on trained
     // weights when artifacts exist, synthetic weights otherwise (identical
     // compute cost).
-    let net = NetworkSpec::lenet5();
+    let net = NetworkSpec::by_name("lenet5").unwrap();
     let artifacts = Artifacts::default_dir();
     let trained = if artifacts.present() {
-        ModelWeights::load(&artifacts.weights("lenet5", "sc")).ok().map(|w| w.quantize(8))
+        ModelWeights::load(&artifacts.weights(&net.name, "sc")).ok().map(|w| w.quantize(8))
     } else {
         None
     };
     let synthetic = trained.is_none();
-    let weights = trained.unwrap_or_else(|| synthetic_weights(&net, 8, 0x5EED));
+    let weights = trained
+        .unwrap_or_else(|| QuantizedWeights::synthetic(&net, 8, 0x5EED).expect("valid topology"));
     if synthetic {
         println!("(artifacts missing — lenet5 benches use synthetic weights)");
     }
@@ -226,6 +200,73 @@ fn main() {
         );
     });
     json.add(&r, &[]);
+
+    // ---- per-layer stage breakdown (BENCH_layers.json) ----
+    // Software wall time per compiled stage (median over repeated timed
+    // runs, one image, all cores) next to the modeled hardware delay
+    // derived from the *same* stage descriptors by Algorithm 1 — one
+    // record per layer so per-layer regressions are visible across PRs.
+    let mut ljson = JsonReport::new();
+    for lname in ["lenet5", "mnist_strided"] {
+        let lnet = NetworkSpec::by_name(lname).unwrap();
+        let lweights = if lname == net.name {
+            weights.clone()
+        } else {
+            QuantizedWeights::synthetic(&lnet, 8, 0x5EED).expect("valid topology")
+        };
+        let plan = ForwardPlan::new(&lnet, &lweights, ForwardMode::Stochastic { k: 32, seed: 7 });
+        let limg: Vec<f64> = (0..plan.in_len()).map(|i| ((i % 17) as f64) / 17.0).collect();
+        let mut scr = scnn::accel::network::Scratch::default();
+        let mut timings = Vec::new();
+        plan.run_with_timings(&limg, &mut scr, 0, &mut timings); // warm-up
+        let n_steps = timings.len();
+        let runs = 7usize;
+        let mut samples: Vec<Vec<f64>> = vec![Vec::with_capacity(runs); n_steps];
+        for _ in 0..runs {
+            timings.clear();
+            std::hint::black_box(plan.run_with_timings(&limg, &mut scr, 0, &mut timings));
+            for (si, &(_, _, d)) in timings.iter().enumerate() {
+                samples[si].push(d.as_nanos() as f64);
+            }
+        }
+        // Hardware-side per-layer delays from the same descriptors.
+        let stages = lnet.stages().unwrap();
+        let sched_cfg = scnn::accel::pipeline::ScheduleConfig {
+            channels: 8,
+            k: 32,
+            clock_ps: 880.0,
+            memory: scnn::accel::memory::MemoryModel::gddr5_paper(),
+            bytes_per_operand: 1,
+        };
+        let sched = scnn::accel::pipeline::schedule_stages(&stages, &sched_cfg, 1);
+        println!("per-layer breakdown ({lname}, k=32, 1 image):");
+        for (si, &(index, label, _)) in timings.iter().enumerate() {
+            let mut s = samples[si].clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let median = s[s.len() / 2];
+            let mean = s.iter().sum::<f64>() / s.len() as f64;
+            let hw = sched.layers.iter().find(|l| l.layer_index == index);
+            println!(
+                "  {index:>2} {label:<16} {median:>12.0} ns sw | {:>10.1} ns modeled hw",
+                hw.map(|l| l.delay_ns).unwrap_or(0.0)
+            );
+            let r = BenchResult {
+                name: format!("layer({lname},{index}:{label},k=32)"),
+                median_ns: median,
+                mean_ns: mean,
+                iters: runs,
+            };
+            let mut extra = vec![
+                ("layer_index", index as f64),
+                ("macs", stages[index].macs() as f64),
+            ];
+            if let Some(l) = hw {
+                extra.push(("hw_delay_ns", l.delay_ns));
+                extra.push(("hw_dram_bytes", l.dram_bytes as f64));
+            }
+            ljson.add(&r, &extra);
+        }
+    }
 
     // ---- engine::Session per-backend batch throughput ----
     // The serve-path comparison the engine API is judged by: images/s per
@@ -367,5 +408,14 @@ fn main() {
             std::fs::canonicalize(epath).unwrap_or_else(|_| epath.to_path_buf()).display()
         ),
         Err(e) => eprintln!("could not write BENCH_engine.json: {e}"),
+    }
+    let lpath = std::path::Path::new("BENCH_layers.json");
+    match ljson.write(lpath) {
+        Ok(()) => println!(
+            "wrote {} per-layer records to {}",
+            ljson.len(),
+            std::fs::canonicalize(lpath).unwrap_or_else(|_| lpath.to_path_buf()).display()
+        ),
+        Err(e) => eprintln!("could not write BENCH_layers.json: {e}"),
     }
 }

@@ -11,7 +11,10 @@ use scnn::benchutil::{gain_pct, print_table};
 use scnn::tech::TechKind;
 
 fn main() {
-    let net = NetworkSpec::lenet5();
+    // Optional positional arg selects any registered topology:
+    // `cargo run --release --example design_space -- mnist_strided`.
+    let name = std::env::args().nth(1).unwrap_or_else(|| "lenet5".into());
+    let net = NetworkSpec::by_name(&name).expect("known network (see NetworkSpec::NAMES)");
     let counts = [1usize, 2, 4, 8, 16, 32];
 
     for tech in [TechKind::Finfet10, TechKind::Rfet10] {

@@ -34,8 +34,9 @@ fn main() -> Result<()> {
     println!("manifest: {manifest:?}\n");
 
     let ds = Dataset::load(&artifacts.dataset("digits"))?;
-    let net = NetworkSpec::lenet5();
-    let weights = ModelWeights::load(&artifacts.weights("lenet5", "sc"))?.quantize(8);
+    // One name drives both the topology (registry) and the artifact paths.
+    let net = NetworkSpec::by_name("lenet5")?;
+    let weights = ModelWeights::load(&artifacts.weights(&net.name, "sc"))?.quantize(8);
     let batch = BatchPolicy {
         max_batch: 32,
         linger: Duration::from_millis(2),
@@ -46,9 +47,9 @@ fn main() -> Result<()> {
     let xla = Engine::open(
         EngineConfig::new(BackendKind::Xla, net.clone())
             .with_hlo_ladder(vec![
-                (1, artifacts.hlo("lenet5", 1)),
-                (8, artifacts.hlo("lenet5", 8)),
-                (32, artifacts.hlo("lenet5", 32)),
+                (1, artifacts.hlo(&net.name, 1)),
+                (8, artifacts.hlo(&net.name, 8)),
+                (32, artifacts.hlo(&net.name, 32)),
             ])
             .with_batch(batch),
     )

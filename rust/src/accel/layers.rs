@@ -1,16 +1,124 @@
-//! CNN layer and network descriptors: shapes, neuron/fan-in accounting, and
-//! the two evaluation networks of the paper (§V-B) — LeNet-5 for MNIST and
-//! the Yu et al. [45]-style CIFAR network.
+//! CNN layer and network descriptors: the typed layer vocabulary every
+//! backend and the hardware model lower from (via [`crate::accel::stage`]),
+//! plus the built-in topologies — the paper's two evaluation networks
+//! (§V-B: LeNet-5 for MNIST and the Yu et al. [45]-style CIFAR network)
+//! and the strided-conv/avgpool MNIST variant exercising the extended ops.
+//!
+//! Shape inference has two faces:
+//! * [`LayerSpec::try_output_shape`] / [`NetworkSpec::validate`] — the
+//!   non-panicking pass; every malformed stack (channel mismatch,
+//!   non-divisible pool window, dangling residual) is a typed error the
+//!   engine and CLI surface instead of an internal assert;
+//! * [`LayerSpec::output_shape`] / [`NetworkSpec::input_shapes`] — the
+//!   panicking conveniences for code that runs *after* validation.
+
+use anyhow::{bail, Result};
+
+/// A 2-D convolution: rectangular kernel, stride, symmetric zero padding,
+/// optionally depthwise (each output channel reads only its own input
+/// channel). Output spatial size follows the standard floor convention:
+/// `o = (i + 2·padding − kernel) / stride + 1`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2d {
+    /// Input channels.
+    pub in_ch: usize,
+    /// Output channels (must equal `in_ch` when `depthwise`).
+    pub out_ch: usize,
+    /// Kernel size as (height, width).
+    pub kernel: (usize, usize),
+    /// Stride as (vertical, horizontal).
+    pub stride: (usize, usize),
+    /// Symmetric zero padding on every edge.
+    pub padding: usize,
+    /// Depthwise: channel c of the output convolves only channel c of the
+    /// input (fan-in `kh·kw` instead of `in_ch·kh·kw`).
+    pub depthwise: bool,
+}
+
+impl Conv2d {
+    /// Square stride-1 convolution — the paper's original conv vocabulary.
+    pub fn square(in_ch: usize, out_ch: usize, kernel: usize, padding: usize) -> Self {
+        Conv2d {
+            in_ch,
+            out_ch,
+            kernel: (kernel, kernel),
+            stride: (1, 1),
+            padding,
+            depthwise: false,
+        }
+    }
+
+    /// Set a (possibly anisotropic) stride.
+    pub fn with_stride(mut self, sy: usize, sx: usize) -> Self {
+        self.stride = (sy, sx);
+        self
+    }
+
+    /// Set a rectangular kernel.
+    pub fn with_kernel(mut self, kh: usize, kw: usize) -> Self {
+        self.kernel = (kh, kw);
+        self
+    }
+
+    /// Make the convolution depthwise (`out_ch` must equal `in_ch`).
+    pub fn depthwise(mut self) -> Self {
+        self.depthwise = true;
+        self
+    }
+
+    /// Products per neuron.
+    pub fn fan_in(&self) -> usize {
+        let (kh, kw) = self.kernel;
+        if self.depthwise {
+            kh * kw
+        } else {
+            self.in_ch * kh * kw
+        }
+    }
+}
 
 /// One layer of a convolutional network.
 #[derive(Debug, Clone, PartialEq)]
 pub enum LayerKind {
-    /// 2-D convolution (square kernel, stride 1).
-    Conv { in_ch: usize, out_ch: usize, kernel: usize, padding: usize },
-    /// Non-overlapping max pool (square window).
-    MaxPool { size: usize },
+    /// 2-D convolution (see [`Conv2d`] for stride/kernel/depthwise knobs).
+    Conv(Conv2d),
+    /// Non-overlapping max pool (square window; input must divide evenly —
+    /// validation rejects silent truncation).
+    MaxPool {
+        /// Pool window size.
+        size: usize,
+    },
+    /// Non-overlapping average pool (square window, same divisibility
+    /// rule). In SC hardware this is the counter-based scaled add of
+    /// SC-DCNN-style pooling units (`sc::neuron::avg_pool_stream`).
+    AvgPool {
+        /// Pool window size.
+        size: usize,
+    },
+    /// Average over the whole spatial extent: (c, h, w) → (c, 1, 1).
+    GlobalAvgPool,
     /// Fully connected.
-    Dense { inputs: usize, outputs: usize },
+    Dense {
+        /// Flattened input size (must equal c·h·w of the incoming shape).
+        inputs: usize,
+        /// Output neurons.
+        outputs: usize,
+    },
+    /// Elementwise residual merge with the output of an earlier layer:
+    /// `out = (cur + layers[from].output) / 2` — the SC scaled add (a
+    /// MUX with select probability ½), applied on the recovered values at
+    /// the layer boundary by every backend. Shapes must match.
+    Add {
+        /// Index (into `NetworkSpec::layers`) of the merged branch.
+        from: usize,
+    },
+}
+
+impl LayerKind {
+    /// Square stride-1 convolution shorthand (the original vocabulary).
+    pub fn conv(in_ch: usize, out_ch: usize, kernel: usize, padding: usize) -> Self {
+        LayerKind::Conv(Conv2d::square(in_ch, out_ch, kernel, padding))
+    }
 }
 
 /// A layer plus its activation.
@@ -19,7 +127,21 @@ pub struct LayerSpec {
     /// The layer operation.
     pub kind: LayerKind,
     /// Apply ReLU at the layer output (via the correlated-OR trick in SC).
+    /// Only meaningful on compute layers (Conv/Dense); validation rejects
+    /// it elsewhere.
     pub relu: bool,
+}
+
+impl LayerSpec {
+    /// A compute layer with ReLU.
+    pub fn active(kind: LayerKind) -> Self {
+        LayerSpec { kind, relu: true }
+    }
+
+    /// A layer without activation.
+    pub fn linear(kind: LayerKind) -> Self {
+        LayerSpec { kind, relu: false }
+    }
 }
 
 /// (channels, height, width) activation shape.
@@ -28,7 +150,7 @@ pub type Shape = (usize, usize, usize);
 /// A full network description.
 #[derive(Debug, Clone)]
 pub struct NetworkSpec {
-    /// Network name (reports / artifact naming).
+    /// Network name (reports / artifact naming / [`NetworkSpec::by_name`]).
     pub name: String,
     /// Input shape.
     pub input: Shape,
@@ -37,48 +159,162 @@ pub struct NetworkSpec {
 }
 
 impl LayerSpec {
-    /// Output shape given the input shape.
-    pub fn output_shape(&self, input: Shape) -> Shape {
+    /// Output shape given the input shape — non-panicking shape inference.
+    ///
+    /// [`LayerKind::Add`] needs whole-network context (the `from` branch),
+    /// which this per-layer view cannot check; it is shape-preserving
+    /// here and fully validated by [`NetworkSpec::validate`].
+    pub fn try_output_shape(&self, input: Shape) -> Result<Shape> {
         let (c, h, w) = input;
         match &self.kind {
-            LayerKind::Conv { in_ch, out_ch, kernel, padding } => {
-                assert_eq!(*in_ch, c, "conv input channels mismatch");
-                let oh = h + 2 * padding - kernel + 1;
-                let ow = w + 2 * padding - kernel + 1;
-                (*out_ch, oh, ow)
+            LayerKind::Conv(cv) => {
+                if cv.in_ch != c {
+                    bail!("conv expects {} input channels, got {c}", cv.in_ch);
+                }
+                if cv.depthwise && cv.out_ch != cv.in_ch {
+                    bail!(
+                        "depthwise conv must map channels 1:1 ({} in vs {} out)",
+                        cv.in_ch,
+                        cv.out_ch
+                    );
+                }
+                let (kh, kw) = cv.kernel;
+                let (sy, sx) = cv.stride;
+                if kh == 0 || kw == 0 || sy == 0 || sx == 0 || cv.out_ch == 0 {
+                    bail!("conv kernel/stride/channels must be positive (got {cv:?})");
+                }
+                if h + 2 * cv.padding < kh || w + 2 * cv.padding < kw {
+                    bail!(
+                        "conv kernel {kh}x{kw} exceeds padded input {}x{}",
+                        h + 2 * cv.padding,
+                        w + 2 * cv.padding
+                    );
+                }
+                let oh = (h + 2 * cv.padding - kh) / sy + 1;
+                let ow = (w + 2 * cv.padding - kw) / sx + 1;
+                Ok((cv.out_ch, oh, ow))
             }
-            LayerKind::MaxPool { size } => (c, h / size, w / size),
+            LayerKind::MaxPool { size } | LayerKind::AvgPool { size } => {
+                let label = if matches!(self.kind, LayerKind::MaxPool { .. }) {
+                    "maxpool"
+                } else {
+                    "avgpool"
+                };
+                if *size == 0 {
+                    bail!("{label} window must be positive");
+                }
+                if h % size != 0 || w % size != 0 {
+                    bail!(
+                        "{label} window {size} does not divide the {h}x{w} input \
+                         (silent truncation is rejected; pad or resize upstream)"
+                    );
+                }
+                Ok((c, h / size, w / size))
+            }
+            LayerKind::GlobalAvgPool => Ok((c, 1, 1)),
             LayerKind::Dense { inputs, outputs } => {
-                assert_eq!(*inputs, c * h * w, "dense input size mismatch");
-                (*outputs, 1, 1)
+                if *inputs != c * h * w {
+                    bail!(
+                        "dense expects {inputs} inputs but the incoming shape \
+                         {c}x{h}x{w} flattens to {}",
+                        c * h * w
+                    );
+                }
+                Ok((*outputs, 1, 1))
             }
+            LayerKind::Add { .. } => Ok(input),
         }
     }
 
-    /// Number of neurons (MAC-owning outputs) in this layer; pooling has
-    /// none (it rides on the producing layer's correlated streams).
+    /// Output shape given the input shape; panics on malformed stacks (use
+    /// [`LayerSpec::try_output_shape`] / [`NetworkSpec::validate`] first on
+    /// untrusted input).
+    pub fn output_shape(&self, input: Shape) -> Shape {
+        self.try_output_shape(input).expect("layer shape mismatch")
+    }
+
+    /// Number of neurons (MAC-owning outputs) in this layer; pooling and
+    /// residual merges have none (they ride on the producing layer's
+    /// correlated streams / recovered values).
     pub fn neurons(&self, input: Shape) -> usize {
         match &self.kind {
-            LayerKind::Conv { .. } | LayerKind::Dense { .. } => {
+            LayerKind::Conv(_) | LayerKind::Dense { .. } => {
                 let (c, h, w) = self.output_shape(input);
                 c * h * w
             }
-            LayerKind::MaxPool { .. } => 0,
+            _ => 0,
         }
     }
 
     /// Fan-in (products per neuron).
     pub fn fan_in(&self, _input: Shape) -> usize {
         match &self.kind {
-            LayerKind::Conv { in_ch, kernel, .. } => in_ch * kernel * kernel,
+            LayerKind::Conv(cv) => cv.fan_in(),
             LayerKind::Dense { inputs, .. } => *inputs,
-            LayerKind::MaxPool { .. } => 0,
+            _ => 0,
         }
+    }
+
+    /// True for MAC-owning (weight-carrying) layers.
+    pub fn is_compute(&self) -> bool {
+        matches!(self.kind, LayerKind::Conv(_) | LayerKind::Dense { .. })
     }
 }
 
 impl NetworkSpec {
-    /// Per-layer input shapes (same length as `layers`).
+    /// Validate the whole stack: non-panicking shape inference over every
+    /// layer plus the cross-layer rules (residual targets, activation
+    /// placement, at least one compute layer). Returns the per-layer
+    /// *input* shapes (same length as `layers`) so callers get the
+    /// inferred geometry for free; [`crate::accel::stage`] builds the full
+    /// stage IR on top of this.
+    pub fn validate(&self) -> Result<Vec<Shape>> {
+        if self.layers.is_empty() {
+            bail!("network {:?} has no layers", self.name);
+        }
+        let mut shapes = Vec::with_capacity(self.layers.len());
+        let mut s = self.input;
+        if s.0 == 0 || s.1 == 0 || s.2 == 0 {
+            bail!("network {:?} input shape {s:?} has a zero dimension", self.name);
+        }
+        let mut any_compute = false;
+        for (li, l) in self.layers.iter().enumerate() {
+            if l.relu && !l.is_compute() {
+                bail!("layer {li} of {:?}: relu is only defined on conv/dense layers", self.name);
+            }
+            if let LayerKind::Add { from } = l.kind {
+                if from >= li {
+                    bail!(
+                        "layer {li} of {:?}: residual add references layer {from}, \
+                         which is not an earlier layer",
+                        self.name
+                    );
+                }
+                let branch = self.layers[from]
+                    .try_output_shape(shapes[from])
+                    .expect("earlier layers already validated");
+                if branch != s {
+                    bail!(
+                        "layer {li} of {:?}: residual add merges shape {branch:?} \
+                         (layer {from} output) into shape {s:?}",
+                        self.name
+                    );
+                }
+            }
+            shapes.push(s);
+            s = l
+                .try_output_shape(s)
+                .map_err(|e| e.context(format!("layer {li} of network {:?}", self.name)))?;
+            any_compute |= l.is_compute();
+        }
+        if !any_compute {
+            bail!("network {:?} has no compute (conv/dense) layer", self.name);
+        }
+        Ok(shapes)
+    }
+
+    /// Per-layer input shapes (same length as `layers`); panics on
+    /// malformed stacks (validate first on untrusted input).
     pub fn input_shapes(&self) -> Vec<Shape> {
         let mut shapes = Vec::with_capacity(self.layers.len());
         let mut s = self.input;
@@ -112,6 +348,20 @@ impl NetworkSpec {
             .sum()
     }
 
+    /// Names of every built-in topology, in [`NetworkSpec::by_name`] order.
+    pub const NAMES: [&'static str; 3] = ["lenet5", "cifar_net", "mnist_strided"];
+
+    /// The single registry behind every stringly network lookup (CLI
+    /// flags, benches, examples): resolve a built-in topology by name.
+    pub fn by_name(name: &str) -> Result<Self> {
+        match name {
+            "lenet5" => Ok(Self::lenet5()),
+            "cifar_net" => Ok(Self::cifar_net()),
+            "mnist_strided" => Ok(Self::mnist_strided()),
+            other => bail!("unknown network {other:?} (one of {})", Self::NAMES.join("|")),
+        }
+    }
+
     /// LeNet-5 as used for MNIST in §V-B (28×28 input, padding-2 first
     /// conv, 6-16 feature maps, 120-84-10 classifier).
     pub fn lenet5() -> Self {
@@ -119,19 +369,13 @@ impl NetworkSpec {
             name: "lenet5".into(),
             input: (1, 28, 28),
             layers: vec![
-                LayerSpec {
-                    kind: LayerKind::Conv { in_ch: 1, out_ch: 6, kernel: 5, padding: 2 },
-                    relu: true,
-                },
-                LayerSpec { kind: LayerKind::MaxPool { size: 2 }, relu: false },
-                LayerSpec {
-                    kind: LayerKind::Conv { in_ch: 6, out_ch: 16, kernel: 5, padding: 0 },
-                    relu: true,
-                },
-                LayerSpec { kind: LayerKind::MaxPool { size: 2 }, relu: false },
-                LayerSpec { kind: LayerKind::Dense { inputs: 400, outputs: 120 }, relu: true },
-                LayerSpec { kind: LayerKind::Dense { inputs: 120, outputs: 84 }, relu: true },
-                LayerSpec { kind: LayerKind::Dense { inputs: 84, outputs: 10 }, relu: false },
+                LayerSpec::active(LayerKind::conv(1, 6, 5, 2)),
+                LayerSpec::linear(LayerKind::MaxPool { size: 2 }),
+                LayerSpec::active(LayerKind::conv(6, 16, 5, 0)),
+                LayerSpec::linear(LayerKind::MaxPool { size: 2 }),
+                LayerSpec::active(LayerKind::Dense { inputs: 400, outputs: 120 }),
+                LayerSpec::active(LayerKind::Dense { inputs: 120, outputs: 84 }),
+                LayerSpec::linear(LayerKind::Dense { inputs: 84, outputs: 10 }),
             ],
         }
     }
@@ -143,22 +387,45 @@ impl NetworkSpec {
             name: "cifar_net".into(),
             input: (3, 32, 32),
             layers: vec![
-                LayerSpec {
-                    kind: LayerKind::Conv { in_ch: 3, out_ch: 32, kernel: 5, padding: 2 },
-                    relu: true,
-                },
-                LayerSpec { kind: LayerKind::MaxPool { size: 2 }, relu: false },
-                LayerSpec {
-                    kind: LayerKind::Conv { in_ch: 32, out_ch: 32, kernel: 5, padding: 2 },
-                    relu: true,
-                },
-                LayerSpec { kind: LayerKind::MaxPool { size: 2 }, relu: false },
-                LayerSpec {
-                    kind: LayerKind::Conv { in_ch: 32, out_ch: 64, kernel: 5, padding: 2 },
-                    relu: true,
-                },
-                LayerSpec { kind: LayerKind::MaxPool { size: 2 }, relu: false },
-                LayerSpec { kind: LayerKind::Dense { inputs: 1024, outputs: 10 }, relu: false },
+                LayerSpec::active(LayerKind::conv(3, 32, 5, 2)),
+                LayerSpec::linear(LayerKind::MaxPool { size: 2 }),
+                LayerSpec::active(LayerKind::conv(32, 32, 5, 2)),
+                LayerSpec::linear(LayerKind::MaxPool { size: 2 }),
+                LayerSpec::active(LayerKind::conv(32, 64, 5, 2)),
+                LayerSpec::linear(LayerKind::MaxPool { size: 2 }),
+                LayerSpec::linear(LayerKind::Dense { inputs: 1024, outputs: 10 }),
+            ],
+        }
+    }
+
+    /// The strided-conv + average-pool MNIST variant exercising the
+    /// extended vocabulary end to end: a stride-2 stem, a depthwise
+    /// refinement merged back through an SC scaled-add residual, average
+    /// pooling (the SC-DCNN-style counter-based pooling unit), a second
+    /// stride-2 conv, global average pooling, and a linear classifier.
+    ///
+    /// ```text
+    /// (1,28,28) ─conv 3×3 s2 p1─▶ (8,14,14) ─depthwise 3×3─▶ (8,14,14)
+    ///           ─add(from conv1)─▶ (8,14,14) ─avgpool2─▶ (8,7,7)
+    ///           ─conv 3×3 s2 p1─▶ (16,4,4) ─global avg─▶ (16,1,1)
+    ///           ─dense─▶ 10 classes
+    /// ```
+    pub fn mnist_strided() -> Self {
+        NetworkSpec {
+            name: "mnist_strided".into(),
+            input: (1, 28, 28),
+            layers: vec![
+                LayerSpec::active(LayerKind::Conv(
+                    Conv2d::square(1, 8, 3, 1).with_stride(2, 2),
+                )),
+                LayerSpec::active(LayerKind::Conv(Conv2d::square(8, 8, 3, 1).depthwise())),
+                LayerSpec::linear(LayerKind::Add { from: 0 }),
+                LayerSpec::linear(LayerKind::AvgPool { size: 2 }),
+                LayerSpec::active(LayerKind::Conv(
+                    Conv2d::square(8, 16, 3, 1).with_stride(2, 2),
+                )),
+                LayerSpec::linear(LayerKind::GlobalAvgPool),
+                LayerSpec::linear(LayerKind::Dense { inputs: 16, outputs: 10 }),
             ],
         }
     }
@@ -178,6 +445,7 @@ mod tests {
         assert_eq!(net.layers[2].output_shape((6, 14, 14)), (16, 10, 10));
         assert_eq!(net.layers[3].output_shape((16, 10, 10)), (16, 5, 5));
         assert_eq!(net.output_shape(), (10, 1, 1));
+        assert_eq!(net.validate().unwrap(), shapes);
     }
 
     #[test]
@@ -206,9 +474,112 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "dense input size mismatch")]
+    fn mnist_strided_shapes() {
+        let net = NetworkSpec::mnist_strided();
+        let shapes = net.validate().unwrap();
+        assert_eq!(shapes[1], (8, 14, 14)); // stride-2 stem
+        assert_eq!(shapes[3], (8, 14, 14)); // after the residual merge
+        assert_eq!(shapes[4], (8, 7, 7)); // after avgpool
+        assert_eq!(shapes[5], (16, 4, 4)); // second stride-2 conv
+        assert_eq!(net.output_shape(), (10, 1, 1));
+        // Depthwise fan-in is kernel-only.
+        assert_eq!(net.layers[1].fan_in(shapes[1]), 9);
+        assert_eq!(net.layers[0].fan_in(shapes[0]), 9);
+        assert_eq!(net.layers[4].fan_in(shapes[4]), 8 * 9);
+    }
+
+    #[test]
+    fn strided_and_rectangular_conv_shapes() {
+        let l = LayerSpec::linear(LayerKind::Conv(
+            Conv2d::square(3, 4, 3, 1).with_stride(2, 2),
+        ));
+        assert_eq!(l.try_output_shape((3, 28, 28)).unwrap(), (4, 14, 14));
+        // Floor convention on odd extents: (7+2-3)/2+1 = 4.
+        assert_eq!(l.try_output_shape((3, 7, 7)).unwrap(), (4, 4, 4));
+        let rect = LayerSpec::linear(LayerKind::Conv(
+            Conv2d::square(1, 2, 1, 0).with_kernel(3, 5).with_stride(1, 2),
+        ));
+        assert_eq!(rect.try_output_shape((1, 9, 11)).unwrap(), (2, 7, 4));
+    }
+
+    #[test]
+    fn validate_rejects_non_divisible_pool() {
+        // The old silent-truncation bug: 7/2 floored to 3. Now an error.
+        for kind in [LayerKind::MaxPool { size: 2 }, LayerKind::AvgPool { size: 2 }] {
+            let l = LayerSpec::linear(kind);
+            let err = l.try_output_shape((1, 7, 8)).unwrap_err().to_string();
+            assert!(err.contains("does not divide"), "{err}");
+        }
+        let net = NetworkSpec {
+            name: "bad-pool".into(),
+            input: (1, 7, 7),
+            layers: vec![
+                LayerSpec::active(LayerKind::conv(1, 2, 1, 0)),
+                LayerSpec::linear(LayerKind::MaxPool { size: 2 }),
+            ],
+        };
+        let err = net.validate().unwrap_err().to_string();
+        assert!(err.contains("bad-pool") && err.contains("does not divide"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_cross_layer_violations() {
+        // Residual referencing a later layer.
+        let net = NetworkSpec {
+            name: "bad-add".into(),
+            input: (1, 4, 4),
+            layers: vec![
+                LayerSpec::linear(LayerKind::Add { from: 0 }),
+                LayerSpec::linear(LayerKind::Dense { inputs: 16, outputs: 2 }),
+            ],
+        };
+        assert!(net.validate().is_err());
+        // Residual shape mismatch.
+        let net = NetworkSpec {
+            name: "bad-add-shape".into(),
+            input: (1, 4, 4),
+            layers: vec![
+                LayerSpec::active(LayerKind::conv(1, 2, 3, 0)),
+                LayerSpec::linear(LayerKind::Add { from: 0 }),
+            ],
+        };
+        let err = net.validate().unwrap_err().to_string();
+        assert!(err.contains("merges shape"), "{err}");
+        // ReLU on a pooling layer.
+        let net = NetworkSpec {
+            name: "bad-relu".into(),
+            input: (1, 4, 4),
+            layers: vec![
+                LayerSpec::active(LayerKind::conv(1, 2, 3, 1)),
+                LayerSpec::active(LayerKind::MaxPool { size: 2 }),
+            ],
+        };
+        assert!(net.validate().is_err());
+        // Depthwise with a channel expansion.
+        let net = NetworkSpec {
+            name: "bad-dw".into(),
+            input: (2, 4, 4),
+            layers: vec![LayerSpec::active(LayerKind::Conv(
+                Conv2d::square(2, 4, 3, 1).depthwise(),
+            ))],
+        };
+        assert!(net.validate().is_err());
+    }
+
+    #[test]
+    fn by_name_registry_round_trips() {
+        for name in NetworkSpec::NAMES {
+            let net = NetworkSpec::by_name(name).unwrap();
+            assert_eq!(net.name, name);
+            net.validate().unwrap();
+        }
+        assert!(NetworkSpec::by_name("resnet-152").is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "layer shape mismatch")]
     fn dense_mismatch_panics() {
-        let l = LayerSpec { kind: LayerKind::Dense { inputs: 100, outputs: 10 }, relu: false };
+        let l = LayerSpec::linear(LayerKind::Dense { inputs: 100, outputs: 10 });
         l.output_shape((1, 28, 28));
     }
 }

@@ -1,6 +1,10 @@
 //! Accelerator architecture and performance model (§IV, §V).
 //!
-//! * [`layers`] — CNN layer/network descriptors (LeNet-5, CIFAR net);
+//! * [`layers`] — the typed CNN layer vocabulary and built-in topologies
+//!   (LeNet-5, CIFAR net, the strided-conv/avgpool MNIST variant);
+//! * [`stage`] — the compiled per-layer stage IR every backend and the
+//!   hardware model lower from (shape inference, gather tables, value
+//!   kernels);
 //! * [`memory`] — the GDDR5 off-chip model (224 B/ns);
 //! * [`pipeline`] — Algorithm 1: non/partial/full pipelining per layer;
 //! * [`channel`] — Fig. 9 channel assembly + Table I/II characterization;
@@ -16,4 +20,5 @@ pub mod metrics;
 pub mod network;
 pub mod par;
 pub mod pipeline;
+pub mod stage;
 pub mod system;

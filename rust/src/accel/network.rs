@@ -10,12 +10,17 @@
 //!
 //! # Engine architecture
 //!
-//! Inference runs through a [`ForwardPlan`]: every image-independent
-//! quantity — im2col gather windows, the per-layer B2S random sequence,
-//! all weight and padding SNG streams, dequantized weight values — is
-//! computed once at plan build and shared by every image and every thread.
-//! Per image, a reusable [`Scratch`] arena holds the activation streams and
-//! counter planes, so steady-state inference performs **no per-neuron heap
+//! Inference runs through a [`ForwardPlan`], compiled from the **stage IR**
+//! of [`crate::accel::stage`]: [`ForwardPlan::compile`] lowers each
+//! [`StageDescriptor`] into one [`LayerStage`] object — a compute stage
+//! (conv / strided conv / depthwise conv / dense) with its im2col gather
+//! table, per-layer B2S random sequence, and pre-generated weight/padding
+//! SNG streams, or a value stage (max/avg/global pooling, the SC
+//! scaled-add residual merge). Everything image-independent is computed
+//! once at plan
+//! build and shared by every image and every thread. Per image, a reusable
+//! [`Scratch`] arena holds the activation planes (plus saved residual
+//! branches), so steady-state inference performs **no per-neuron heap
 //! allocation**: each neuron is one fused pass (word-packed SNG lanes →
 //! [`VerticalCounter::add_xnor_words`] → [`VerticalCounter::b2s_ones`])
 //! with zero intermediate bitstreams.
@@ -23,21 +28,25 @@
 //! Work is parallelized with [`crate::accel::par`]: [`ForwardPlan::run`]
 //! fans neuron chunks across cores inside each layer;
 //! [`ForwardPlan::run_batch`] fans whole images (the serving-path shape).
-//! Outputs are **bit-identical** for any thread count and to the pre-fusion
-//! per-bit implementation, which is kept in [`reference`] as the golden
-//! model (asserted in tests, measured in `rust/benches/hotpath.rs`).
+//! Outputs are **bit-identical** for any thread count and to the per-bit
+//! implementation kept in [`reference`] as the golden model — which lowers
+//! from the *same* stage descriptors and gather tables, so geometric
+//! parity is by construction (asserted in tests, measured in
+//! `rust/benches/hotpath.rs`).
 //!
 //! This module is the *datapath* layer. The public inference entry point is
 //! [`crate::engine`]: a session owns one plan (or PJRT ladder), batches
 //! requests, and records per-session metrics. The free [`forward`] /
 //! [`forward_batch`] helpers are deprecated shims kept for compatibility.
 
-use crate::accel::layers::{LayerKind, NetworkSpec, Shape};
+use crate::accel::layers::{NetworkSpec, Shape};
 use crate::accel::par;
+use crate::accel::stage::{self, GatherTable, StageDescriptor, StageOp};
 use crate::sc::bitstream::VerticalCounter;
 use crate::sc::neuron;
 use crate::sc::rng;
 use crate::sc::{dequantize_bipolar, quantize_bipolar};
+use anyhow::{bail, Result};
 
 /// One compute layer's quantized weights plus its re-encoder affine.
 ///
@@ -64,6 +73,34 @@ pub struct QuantizedWeights {
     pub bits: u32,
     /// Per compute-layer weights.
     pub layers: Vec<LayerWeights>,
+}
+
+impl QuantizedWeights {
+    /// Random-but-deterministic weights sized from the network's stage IR
+    /// (one tensor per compute stage, [`StageDescriptor::weight_shape`]).
+    /// Same compute cost as trained weights — used by the benches, the
+    /// CLI's `--synthetic` mode, and tests of topologies without trained
+    /// artifacts.
+    pub fn synthetic(net: &NetworkSpec, bits: u32, seed: u64) -> Result<Self> {
+        let stages = net.stages()?;
+        let mut g = rng::XorShift64::new(seed);
+        let mut layers = Vec::new();
+        for st in &stages {
+            let Some((rows, cols)) = st.weight_shape() else { continue };
+            let codes: Vec<Vec<u32>> = (0..rows)
+                .map(|_| {
+                    (0..cols)
+                        .map(|_| {
+                            let v = (g.next_u64() % 2000) as f64 / 1250.0 - 0.8;
+                            quantize_bipolar(v, bits)
+                        })
+                        .collect()
+                })
+                .collect();
+            layers.push(LayerWeights { codes, gamma: 0.2, mu: 1.0 });
+        }
+        Ok(QuantizedWeights { bits, layers })
+    }
 }
 
 /// How a forward pass is executed.
@@ -139,63 +176,6 @@ fn lane_stream_words(code: u32, bits: u32, k: usize, base: u32, lane: u64, out: 
     }
 }
 
-/// Im2col-style gather: the flat input indices feeding each output neuron
-/// of a conv layer (None = zero padding), plus neurons-per-output-channel
-/// bookkeeping handled by the caller.
-fn conv_gather(
-    input: Shape,
-    kernel: usize,
-    padding: usize,
-) -> (Vec<Vec<Option<usize>>>, usize, usize) {
-    let (c, h, w) = input;
-    let oh = h + 2 * padding - kernel + 1;
-    let ow = w + 2 * padding - kernel + 1;
-    let mut windows = Vec::with_capacity(oh * ow);
-    for oy in 0..oh {
-        for ox in 0..ow {
-            let mut idx = Vec::with_capacity(c * kernel * kernel);
-            for ic in 0..c {
-                for ky in 0..kernel {
-                    for kx in 0..kernel {
-                        let iy = oy + ky;
-                        let ix = ox + kx;
-                        if iy < padding || ix < padding || iy - padding >= h || ix - padding >= w
-                        {
-                            idx.push(None);
-                        } else {
-                            idx.push(Some(ic * h * w + (iy - padding) * w + (ix - padding)));
-                        }
-                    }
-                }
-            }
-            windows.push(idx);
-        }
-    }
-    (windows, oh, ow)
-}
-
-/// Max-pool plain values into `out` (the SC pipeline pools on correlated
-/// streams before S2B; on recovered values the same max applies).
-fn max_pool_values_into(v: &[f64], shape: Shape, size: usize, out: &mut Vec<f64>) {
-    let (c, h, w) = shape;
-    let (oh, ow) = (h / size, w / size);
-    out.clear();
-    out.reserve(c * oh * ow);
-    for ic in 0..c {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let mut m = f64::MIN;
-                for ky in 0..size {
-                    for kx in 0..size {
-                        m = m.max(v[ic * h * w + (oy * size + ky) * w + (ox * size + kx)]);
-                    }
-                }
-                out.push(m);
-            }
-        }
-    }
-}
-
 /// Mix the neuron site indices into a noise counter.
 fn noise_ctr(oc: usize, idx: usize) -> u32 {
     (oc as u32).wrapping_mul(0x0101_0101).wrapping_add(idx as u32)
@@ -211,17 +191,126 @@ fn reencode(sp: f64, gamma: f64, mu: f64, final_layer: bool) -> f64 {
     }
 }
 
-/// One step of a compiled forward plan.
-enum PlanStep {
-    /// A Conv/Dense compute layer (with an optionally fused MaxPool).
-    Compute(LayerPlan),
-    /// A standalone MaxPool over values.
-    Pool {
-        /// Pool window size.
-        size: usize,
-        /// Input shape at this step.
-        in_shape: Shape,
-    },
+/// One compiled, executable stage of a [`ForwardPlan`] — the object-safe
+/// face of the stage IR. [`ForwardPlan::compile`] lowers every
+/// [`StageDescriptor`] into one implementation: the compute stage
+/// (conv / strided / depthwise / dense, fused stochastic or analytic) or
+/// a value-domain stage (max/avg/global pooling, the SC scaled-add
+/// residual).
+///
+/// Contract: [`LayerStage::run`] reads the current activation from
+/// `scr.act` and leaves its output in `scr.act` (using `scr.out` as the
+/// double buffer); saved residual branches live in `scr.saved` under the
+/// producing layer's index.
+pub trait LayerStage: Send + Sync {
+    /// Source layer index in the [`NetworkSpec`].
+    fn index(&self) -> usize;
+
+    /// Stage label (see [`StageDescriptor::label`]); reported by
+    /// [`ForwardPlan::run_with_timings`].
+    fn label(&self) -> &'static str;
+
+    /// Keep this stage's output alive for a later residual merge.
+    fn save_output(&self) -> bool;
+
+    /// Execute the stage on the scratch arena with the given worker cap
+    /// (0 = every core). Bit-identical output for any cap.
+    fn run(&self, scr: &mut Scratch, threads: usize);
+}
+
+/// The identity shared by every [`LayerStage`] implementation.
+struct StageMeta {
+    index: usize,
+    label: &'static str,
+    save_output: bool,
+}
+
+impl StageMeta {
+    fn of(st: &StageDescriptor) -> Self {
+        StageMeta { index: st.index, label: st.label(), save_output: st.save_output }
+    }
+}
+
+/// Expands the three metadata getters of [`LayerStage`] from the embedded
+/// [`StageMeta`] (the `run` body stays per-implementation).
+macro_rules! stage_meta_getters {
+    () => {
+        fn index(&self) -> usize {
+            self.meta.index
+        }
+        fn label(&self) -> &'static str {
+            self.meta.label
+        }
+        fn save_output(&self) -> bool {
+            self.meta.save_output
+        }
+    };
+}
+
+/// Max pool over recovered values.
+struct MaxPoolStage {
+    meta: StageMeta,
+    size: usize,
+    in_shape: Shape,
+}
+
+impl LayerStage for MaxPoolStage {
+    stage_meta_getters!();
+
+    fn run(&self, scr: &mut Scratch, _threads: usize) {
+        let (act, out) = (&scr.act, &mut scr.out);
+        stage::max_pool_into(act, self.in_shape, self.size, out);
+        std::mem::swap(&mut scr.act, &mut scr.out);
+    }
+}
+
+/// Average pool (SC counter-based scaled add) over recovered values.
+struct AvgPoolStage {
+    meta: StageMeta,
+    size: usize,
+    in_shape: Shape,
+}
+
+impl LayerStage for AvgPoolStage {
+    stage_meta_getters!();
+
+    fn run(&self, scr: &mut Scratch, _threads: usize) {
+        let (act, out) = (&scr.act, &mut scr.out);
+        stage::avg_pool_into(act, self.in_shape, self.size, out);
+        std::mem::swap(&mut scr.act, &mut scr.out);
+    }
+}
+
+/// Spatial mean per channel.
+struct GlobalAvgPoolStage {
+    meta: StageMeta,
+    in_shape: Shape,
+}
+
+impl LayerStage for GlobalAvgPoolStage {
+    stage_meta_getters!();
+
+    fn run(&self, scr: &mut Scratch, _threads: usize) {
+        let (act, out) = (&scr.act, &mut scr.out);
+        stage::global_avg_pool_into(act, self.in_shape, out);
+        std::mem::swap(&mut scr.act, &mut scr.out);
+    }
+}
+
+/// SC scaled-add residual merge with the saved output of layer `from`.
+struct AddStage {
+    meta: StageMeta,
+    from: usize,
+}
+
+impl LayerStage for AddStage {
+    stage_meta_getters!();
+
+    fn run(&self, scr: &mut Scratch, _threads: usize) {
+        let Scratch { act, out, saved, .. } = scr;
+        stage::scaled_add_into(act, &saved[self.from], out);
+        std::mem::swap(&mut scr.act, &mut scr.out);
+    }
 }
 
 /// Image-independent state of one compute layer.
@@ -230,15 +319,12 @@ struct LayerPlan {
     wl: usize,
     out_ch: usize,
     fan_in: usize,
-    n_win: usize,
-    /// Flat input indices per window (None = zero padding).
-    windows: Vec<Vec<Option<usize>>>,
+    /// The stage's gather table — the *same* structure (and indexing
+    /// implementation) the per-bit reference reads, so the two datapaths
+    /// cannot diverge on geometry.
+    gather: GatherTable,
     /// Activation sites feeding this layer (c·h·w of the input shape).
     in_sites: usize,
-    /// Output shape of the compute op, before any fused pool.
-    conv_shape: Shape,
-    /// Fused following MaxPool size, if any.
-    pool: Option<usize>,
     relu: bool,
     final_layer: bool,
     gamma: f64,
@@ -272,102 +358,90 @@ pub struct Scratch {
     acodes: Vec<u32>,
     aq: Vec<f64>,
     act_words: Vec<u64>,
+    /// Saved step outputs feeding later residual merges, by layer index.
+    saved: Vec<Vec<f64>>,
     vc: VerticalCounter,
 }
 
-/// A compiled forward pass: [`NetworkSpec`] + [`QuantizedWeights`] +
-/// [`ForwardMode`] lowered into per-layer gather tables, random sequences,
-/// and pre-generated weight streams. Build once, run many — the serving
-/// coordinator keeps one plan for its whole lifetime.
+/// One step's wall-clock share of an inference: `(layer index, stage
+/// label, duration)` — see [`ForwardPlan::run_with_timings`].
+pub type StepTiming = (usize, &'static str, std::time::Duration);
+
+/// A compiled forward pass: the [`crate::accel::stage`] IR of a
+/// [`NetworkSpec`] + [`QuantizedWeights`] + [`ForwardMode`] lowered into
+/// per-layer [`LayerStage`] objects — gather tables, random sequences,
+/// and pre-generated weight streams for compute stages; value kernels for
+/// pooling/residual stages. Build once, run many — an engine session
+/// keeps one plan for its whole lifetime.
 pub struct ForwardPlan {
-    mode: ForwardMode,
-    bits: u32,
-    /// Stochastic stream length (0 in analytic modes).
-    k: usize,
-    /// Words per stream.
-    words: usize,
     /// Expected input length (c·h·w of the network input).
     in_len: usize,
     /// Output length (classes).
     out_len: usize,
-    steps: Vec<PlanStep>,
+    steps: Vec<Box<dyn LayerStage>>,
 }
 
 impl ForwardPlan {
-    /// Compile a plan for the given network, weights, and mode.
-    pub fn new(net: &NetworkSpec, weights: &QuantizedWeights, mode: ForwardMode) -> Self {
+    /// Compile a plan for the given network, weights, and mode. Malformed
+    /// networks (see [`NetworkSpec::validate`]) and mismatched weight
+    /// tensors are typed errors, surfaced by `Engine::open` / the CLI.
+    pub fn compile(
+        net: &NetworkSpec,
+        weights: &QuantizedWeights,
+        mode: ForwardMode,
+    ) -> Result<Self> {
+        let stages = net.stages()?;
+        let n_compute = stages.iter().filter(|s| s.is_compute()).count();
+        if weights.layers.len() != n_compute {
+            bail!(
+                "network {:?} has {n_compute} compute layers but the weights carry {}",
+                net.name,
+                weights.layers.len()
+            );
+        }
         let bits = weights.bits;
         let (k, words) = match mode {
             ForwardMode::Stochastic { k, .. } => (k, k.div_ceil(64)),
             _ => (0, 0),
         };
-        let mut steps = Vec::new();
-        let mut shape = net.input;
-        let in_len = shape.0 * shape.1 * shape.2;
-        let mut wl = 0usize;
-        let mut li = 0usize;
-        while li < net.layers.len() {
-            let layer = &net.layers[li];
-            match &layer.kind {
-                LayerKind::Conv { out_ch, kernel, padding, .. } => {
-                    // Fuse a following MaxPool into this layer (the SC
-                    // pipeline pools on correlated streams before S2B).
-                    let pool = match net.layers.get(li + 1) {
-                        Some(l) => match l.kind {
-                            LayerKind::MaxPool { size } => Some(size),
-                            _ => None,
-                        },
-                        None => None,
-                    };
-                    let (windows, oh, ow) = conv_gather(shape, *kernel, *padding);
-                    let lp = build_layer_plan(
-                        weights,
-                        wl,
-                        windows,
-                        *out_ch,
-                        shape.0 * shape.1 * shape.2,
-                        (*out_ch, oh, ow),
-                        pool,
-                        layer.relu,
+        let mut steps: Vec<Box<dyn LayerStage>> = Vec::with_capacity(stages.len());
+        for st in &stages {
+            let meta = StageMeta::of(st);
+            let boxed: Box<dyn LayerStage> = match st.op {
+                StageOp::Conv(_) | StageOp::Dense { .. } => {
+                    let table = stage::gather(st).expect("compute stages have gather tables");
+                    Box::new(ComputeStage {
+                        meta,
+                        lp: build_layer_plan(weights, st, table, mode)?,
                         mode,
-                    );
-                    steps.push(PlanStep::Compute(lp));
-                    shape = match pool {
-                        Some(size) => {
-                            li += 1; // consume the pool layer
-                            (*out_ch, oh / size, ow / size)
-                        }
-                        None => (*out_ch, oh, ow),
-                    };
-                    wl += 1;
+                        k,
+                        words,
+                        bits,
+                    })
                 }
-                LayerKind::Dense { outputs, .. } => {
-                    let n = shape.0 * shape.1 * shape.2;
-                    let windows: Vec<Vec<Option<usize>>> = vec![(0..n).map(Some).collect()];
-                    let lp = build_layer_plan(
-                        weights,
-                        wl,
-                        windows,
-                        *outputs,
-                        n,
-                        (*outputs, 1, 1),
-                        None,
-                        layer.relu,
-                        mode,
-                    );
-                    steps.push(PlanStep::Compute(lp));
-                    shape = (*outputs, 1, 1);
-                    wl += 1;
+                StageOp::MaxPool { size } => {
+                    Box::new(MaxPoolStage { meta, size, in_shape: st.in_shape })
                 }
-                LayerKind::MaxPool { size } => {
-                    steps.push(PlanStep::Pool { size: *size, in_shape: shape });
-                    shape = (shape.0, shape.1 / size, shape.2 / size);
+                StageOp::AvgPool { size } => {
+                    Box::new(AvgPoolStage { meta, size, in_shape: st.in_shape })
                 }
-            }
-            li += 1;
+                StageOp::GlobalAvgPool => {
+                    Box::new(GlobalAvgPoolStage { meta, in_shape: st.in_shape })
+                }
+                StageOp::Add { from } => Box::new(AddStage { meta, from }),
+            };
+            steps.push(boxed);
         }
-        let out_len = shape.0 * shape.1 * shape.2;
-        ForwardPlan { mode, bits, k, words, in_len, out_len, steps }
+        let in_len = stages[0].in_len();
+        let out_len = stages.last().expect("validated networks are non-empty").out_len();
+        Ok(ForwardPlan { in_len, out_len, steps })
+    }
+
+    /// [`ForwardPlan::compile`], panicking on invalid input — for the
+    /// built-in topologies and tests where the stack is known-good.
+    pub fn new(net: &NetworkSpec, weights: &QuantizedWeights, mode: ForwardMode) -> Self {
+        Self::compile(net, weights, mode)
+            .unwrap_or_else(|e| panic!("ForwardPlan::new({}): {e:#}", net.name))
     }
 
     /// Output length (class count) of the compiled network.
@@ -421,31 +495,46 @@ impl ForwardPlan {
     /// most n threads (the engine's per-session thread knob). Output is
     /// bit-identical for any cap.
     pub fn run_with_threads(&self, input: &[f64], scr: &mut Scratch, threads: usize) -> Vec<f64> {
+        self.run_inner(input, scr, threads, None)
+    }
+
+    /// [`ForwardPlan::run_with_threads`] that additionally appends one
+    /// `(layer index, stage label, duration)` record per executed step —
+    /// the per-layer software cost breakdown behind `BENCH_layers.json`.
+    /// Output is bit-identical to the untimed paths.
+    pub fn run_with_timings(
+        &self,
+        input: &[f64],
+        scr: &mut Scratch,
+        threads: usize,
+        timings: &mut Vec<StepTiming>,
+    ) -> Vec<f64> {
+        self.run_inner(input, scr, threads, Some(timings))
+    }
+
+    fn run_inner(
+        &self,
+        input: &[f64],
+        scr: &mut Scratch,
+        threads: usize,
+        mut timings: Option<&mut Vec<StepTiming>>,
+    ) -> Vec<f64> {
         assert_eq!(input.len(), self.in_len, "input length mismatch");
         scr.act.clear();
         scr.act.extend_from_slice(input);
+        if scr.saved.len() < self.steps.len() {
+            scr.saved.resize_with(self.steps.len(), Vec::new);
+        }
         for step in &self.steps {
-            match step {
-                PlanStep::Pool { size, in_shape } => {
-                    let (act, out) = (&scr.act, &mut scr.out);
-                    max_pool_values_into(act, *in_shape, *size, out);
-                    std::mem::swap(&mut scr.act, &mut scr.out);
-                }
-                PlanStep::Compute(lp) => {
-                    match self.mode {
-                        ForwardMode::Stochastic { .. } => {
-                            self.run_layer_stochastic(lp, scr, threads)
-                        }
-                        _ => self.run_layer_analytic(lp, scr, threads),
-                    }
-                    if let Some(size) = lp.pool {
-                        // scr.out holds the compute result; pool it into act.
-                        let (out, act) = (&scr.out, &mut scr.act);
-                        max_pool_values_into(out, lp.conv_shape, size, act);
-                    } else {
-                        std::mem::swap(&mut scr.act, &mut scr.out);
-                    }
-                }
+            let t0 = timings.is_some().then(std::time::Instant::now);
+            step.run(scr, threads);
+            if step.save_output() {
+                let Scratch { act, saved, .. } = scr;
+                saved[step.index()].clear();
+                saved[step.index()].extend_from_slice(act);
+            }
+            if let (Some(ts), Some(t0)) = (timings.as_mut(), t0) {
+                ts.push((step.index(), step.label(), t0.elapsed()));
             }
         }
         scr.act.clone()
@@ -468,11 +557,40 @@ impl ForwardPlan {
         });
         results
     }
+}
 
+/// A Conv/Dense compute layer behind the [`LayerStage`] face: the
+/// [`LayerPlan`] constants plus the mode/precision knobs its executors
+/// need.
+struct ComputeStage {
+    meta: StageMeta,
+    lp: LayerPlan,
+    mode: ForwardMode,
+    /// Stochastic stream length (0 in analytic modes).
+    k: usize,
+    /// Words per stream.
+    words: usize,
+    bits: u32,
+}
+
+impl LayerStage for ComputeStage {
+    stage_meta_getters!();
+
+    fn run(&self, scr: &mut Scratch, threads: usize) {
+        match self.mode {
+            ForwardMode::Stochastic { .. } => self.run_stochastic(scr, threads),
+            _ => self.run_analytic(scr, threads),
+        }
+        std::mem::swap(&mut scr.act, &mut scr.out);
+    }
+}
+
+impl ComputeStage {
     /// The fused stochastic layer: per neuron, one pass of
     /// `add_xnor_words` over the gather window followed by the fused
     /// B2S→ReLU→S2B popcount. Reads `scr.act`, writes `scr.out`.
-    fn run_layer_stochastic(&self, lp: &LayerPlan, scr: &mut Scratch, threads: usize) {
+    fn run_stochastic(&self, scr: &mut Scratch, threads: usize) {
+        let lp = &self.lp;
         let (k, words, bits) = (self.k, self.words, self.bits);
         scr.acodes.clear();
         scr.acodes.extend(scr.act.iter().map(|&v| quantize_bipolar(v, bits)));
@@ -490,7 +608,7 @@ impl ForwardPlan {
                 &mut scr.act_words[p * words..(p + 1) * words],
             );
         }
-        let total = lp.out_ch * lp.n_win;
+        let total = lp.out_ch * lp.gather.n_win;
         scr.out.clear();
         scr.out.resize(total, 0.0);
         let floor = if lp.relu { lp.fan_in as u32 } else { 0 };
@@ -499,10 +617,10 @@ impl ForwardPlan {
         let worker = |vc: &mut VerticalCounter, start: usize, slice: &mut [f64]| {
             for (off, slot) in slice.iter_mut().enumerate() {
                 let g = start + off;
-                let (oc, wi) = (g / lp.n_win, g % lp.n_win);
+                let (oc, wi) = (g / lp.gather.n_win, g % lp.gather.n_win);
                 let wbase = oc * lp.fan_in * words;
                 vc.reset();
-                for (j, &src) in lp.windows[wi].iter().enumerate() {
+                for (j, &src) in lp.gather.window(oc, wi).iter().enumerate() {
                     let a = match src {
                         Some(i) => &act_words[i * words..(i + 1) * words],
                         None => &lp.pad_words[j * words..(j + 1) * words],
@@ -533,14 +651,15 @@ impl ForwardPlan {
 
     /// Expectation / noisy-expectation / fixed-point layer over the same
     /// quantized codes. Reads `scr.act`, writes `scr.out`.
-    fn run_layer_analytic(&self, lp: &LayerPlan, scr: &mut Scratch, threads: usize) {
+    fn run_analytic(&self, scr: &mut Scratch, threads: usize) {
+        let lp = &self.lp;
         let bits = self.bits;
         scr.acodes.clear();
         scr.acodes.extend(scr.act.iter().map(|&v| quantize_bipolar(v, bits)));
         assert_eq!(scr.acodes.len(), lp.in_sites, "layer input size mismatch");
         scr.aq.clear();
         scr.aq.extend(scr.acodes.iter().map(|&c| dequantize_bipolar(c, bits)));
-        let total = lp.out_ch * lp.n_win;
+        let total = lp.out_ch * lp.gather.n_win;
         scr.out.clear();
         scr.out.resize(total, 0.0);
         let aq: &[f64] = &scr.aq;
@@ -550,11 +669,11 @@ impl ForwardPlan {
         let worker = |start: usize, slice: &mut [f64]| {
             for (off, slot) in slice.iter_mut().enumerate() {
                 let g = start + off;
-                let (oc, wi) = (g / lp.n_win, g % lp.n_win);
+                let (oc, wi) = (g / lp.gather.n_win, g % lp.gather.n_win);
                 let wq = &lp.wq[oc * lp.fan_in..(oc + 1) * lp.fan_in];
                 let mut pre = 0.0f64;
                 let mut var = 0.0f64;
-                for (j, &src) in lp.windows[wi].iter().enumerate() {
+                for (j, &src) in lp.gather.window(oc, wi).iter().enumerate() {
                     let a = match src {
                         Some(i) => aq[i],
                         None => lp.zq,
@@ -612,35 +731,44 @@ impl ForwardPlan {
     }
 }
 
-/// Build one compute layer's plan (shared by Conv and Dense).
-#[allow(clippy::too_many_arguments)]
+/// Lower one compute stage into its executable [`LayerPlan`], checking the
+/// weight tensor against [`StageDescriptor::weight_shape`].
 fn build_layer_plan(
     weights: &QuantizedWeights,
-    wl: usize,
-    windows: Vec<Vec<Option<usize>>>,
-    out_ch: usize,
-    in_sites: usize,
-    conv_shape: Shape,
-    pool: Option<usize>,
-    relu: bool,
+    st: &StageDescriptor,
+    table: GatherTable,
     mode: ForwardMode,
-) -> LayerPlan {
+) -> Result<LayerPlan> {
     let bits = weights.bits;
+    let wl = st.weight_layer.expect("compute stages carry a weight layer");
     let lw = &weights.layers[wl];
-    let fan_in = windows[0].len();
-    let n_win = windows.len();
-    let final_layer = wl + 1 == weights.layers.len();
+    let (out_ch, fan_in) = st.weight_shape().expect("compute stages have a weight shape");
+    if lw.codes.len() != out_ch {
+        bail!(
+            "layer {} ({}): weights have {} output rows, expected {out_ch}",
+            st.index,
+            st.label(),
+            lw.codes.len()
+        );
+    }
+    if let Some(row) = lw.codes.iter().find(|row| row.len() != fan_in) {
+        bail!(
+            "layer {} ({}): a weight row has {} codes, expected fan-in {fan_in}",
+            st.index,
+            st.label(),
+            row.len()
+        );
+    }
+    let final_layer = st.final_compute;
     let scale = (1u64 << neuron::m_bits(fan_in)) as f64;
+    let needs_pad = table.needs_padding();
     let mut lp = LayerPlan {
         wl,
         out_ch,
         fan_in,
-        n_win,
-        windows,
-        in_sites,
-        conv_shape,
-        pool,
-        relu,
+        gather: table,
+        in_sites: st.in_len(),
+        relu: st.relu,
         final_layer,
         gamma: lw.gamma,
         mu: lw.mu,
@@ -666,10 +794,8 @@ fn build_layer_plan(
             let words = k.div_ceil(64);
             lp.base = base;
             lp.r4 = layer_r4(fan_in, k, base);
-            assert_eq!(lw.codes.len(), out_ch, "weight output-channel mismatch");
             lp.wgt_words = vec![0u64; out_ch * fan_in * words];
             for (oc, wcodes) in lw.codes.iter().enumerate() {
-                assert_eq!(wcodes.len(), fan_in, "weight fan-in mismatch");
                 for (j, &code) in wcodes.iter().enumerate() {
                     lane_stream_words(
                         code,
@@ -682,7 +808,6 @@ fn build_layer_plan(
                 }
             }
             // Per-lane padding streams, only for layers with border windows.
-            let needs_pad = lp.windows.iter().any(|w| w.iter().any(|s| s.is_none()));
             if needs_pad {
                 let zero_code = quantize_bipolar(0.0, bits);
                 lp.pad_words = vec![0u64; fan_in * words];
@@ -700,15 +825,13 @@ fn build_layer_plan(
         }
         _ => {
             lp.zq = dequantize_bipolar(quantize_bipolar(0.0, bits), bits);
-            assert_eq!(lw.codes.len(), out_ch, "weight output-channel mismatch");
             lp.wq = Vec::with_capacity(out_ch * fan_in);
             for wcodes in &lw.codes {
-                assert_eq!(wcodes.len(), fan_in, "weight fan-in mismatch");
                 lp.wq.extend(wcodes.iter().map(|&c| dequantize_bipolar(c, bits)));
             }
         }
     }
-    lp
+    Ok(lp)
 }
 
 /// One inference through the SCNN.
@@ -769,12 +892,14 @@ pub fn classify<T: PartialOrd>(output: &[T]) -> usize {
         .unwrap()
 }
 
-/// The pre-fusion, per-bit stochastic forward, kept as the golden
-/// reference implementation: every stream is generated one bit at a time
-/// through `from_fn`, every XNOR product allocates, and neurons run
-/// serially — exactly the original datapath. The fused/parallel engine
-/// must match it bit-for-bit (asserted in this module's tests; the speedup
-/// is measured in `rust/benches/hotpath.rs`).
+/// The per-bit stochastic forward, kept as the golden reference
+/// implementation: every stream is generated one bit at a time through
+/// `from_fn`, every XNOR product allocates, and neurons run serially —
+/// exactly the original datapath. It lowers from the **same stage IR and
+/// gather tables** as the fused engine ([`crate::accel::stage`]), so the
+/// two can only diverge on the stream arithmetic itself — which the
+/// golden tests pin bit-for-bit; the speedup is measured in
+/// `rust/benches/hotpath.rs`.
 #[doc(hidden)]
 pub mod reference {
     use super::*;
@@ -791,14 +916,8 @@ pub mod reference {
         })
     }
 
-    /// Max-pool plain values (allocating).
-    fn max_pool_values(v: &[f64], shape: Shape, size: usize) -> Vec<f64> {
-        let mut out = Vec::new();
-        max_pool_values_into(v, shape, size, &mut out);
-        out
-    }
-
-    /// Bit-exact stochastic inference, original per-bit/allocating path.
+    /// Bit-exact stochastic inference, original per-bit/allocating path,
+    /// walking the same compiled stage descriptors as [`ForwardPlan`].
     pub fn forward_stochastic(
         net: &NetworkSpec,
         weights: &QuantizedWeights,
@@ -806,68 +925,60 @@ pub mod reference {
         k: usize,
         seed: u32,
     ) -> Vec<f64> {
+        let stages = net
+            .stages()
+            .unwrap_or_else(|e| panic!("reference::forward_stochastic({}): {e:#}", net.name));
         let bits = weights.bits;
         let mut act: Vec<f64> = input.to_vec();
-        let mut shape = net.input;
-        let mut wl = 0usize;
-        let mut li = 0usize;
-        while li < net.layers.len() {
-            let layer = &net.layers[li];
-            match &layer.kind {
-                LayerKind::Conv { out_ch, kernel, padding, .. } => {
-                    let pool = match net.layers.get(li + 1) {
-                        Some(l) => match l.kind {
-                            LayerKind::MaxPool { size } => Some(size),
-                            _ => None,
-                        },
-                        None => None,
-                    };
-                    let (windows, oh, ow) = conv_gather(shape, *kernel, *padding);
-                    let out =
-                        run_layer(&windows, &act, weights, wl, *out_ch, bits, layer.relu, k, seed);
-                    let (mut new_act, mut new_shape) = (out, (*out_ch, oh, ow));
-                    if let Some(size) = pool {
-                        new_act = max_pool_values(&new_act, new_shape, size);
-                        new_shape = (new_shape.0, new_shape.1 / size, new_shape.2 / size);
-                        li += 1;
-                    }
-                    act = new_act;
-                    shape = new_shape;
-                    wl += 1;
+        let mut saved: Vec<Vec<f64>> = vec![Vec::new(); stages.len()];
+        for st in &stages {
+            act = match st.op {
+                StageOp::Conv(_) | StageOp::Dense { .. } => {
+                    let table = stage::gather(st).expect("compute stages have gather tables");
+                    run_layer(st, &table, &act, weights, bits, k, seed)
                 }
-                LayerKind::Dense { outputs, .. } => {
-                    let n = shape.0 * shape.1 * shape.2;
-                    let windows: Vec<Vec<Option<usize>>> = vec![(0..n).map(Some).collect()];
-                    act =
-                        run_layer(&windows, &act, weights, wl, *outputs, bits, layer.relu, k, seed);
-                    shape = (*outputs, 1, 1);
-                    wl += 1;
+                StageOp::MaxPool { size } => {
+                    let mut next = Vec::new();
+                    stage::max_pool_into(&act, st.in_shape, size, &mut next);
+                    next
                 }
-                LayerKind::MaxPool { size } => {
-                    act = max_pool_values(&act, shape, *size);
-                    shape = (shape.0, shape.1 / size, shape.2 / size);
+                StageOp::AvgPool { size } => {
+                    let mut next = Vec::new();
+                    stage::avg_pool_into(&act, st.in_shape, size, &mut next);
+                    next
                 }
+                StageOp::GlobalAvgPool => {
+                    let mut next = Vec::new();
+                    stage::global_avg_pool_into(&act, st.in_shape, &mut next);
+                    next
+                }
+                StageOp::Add { from } => {
+                    let mut next = Vec::new();
+                    stage::scaled_add_into(&act, &saved[from], &mut next);
+                    next
+                }
+            };
+            if st.save_output {
+                saved[st.index] = act.clone();
             }
-            li += 1;
         }
         act
     }
 
-    #[allow(clippy::too_many_arguments)]
+    /// One per-bit compute layer over a stage's gather table.
     fn run_layer(
-        windows: &[Vec<Option<usize>>],
+        st: &StageDescriptor,
+        table: &GatherTable,
         act: &[f64],
         weights: &QuantizedWeights,
-        wl: usize,
-        out_ch: usize,
         bits: u32,
-        relu: bool,
         k: usize,
         seed: u32,
     ) -> Vec<f64> {
+        let wl = st.weight_layer.expect("compute stages carry a weight layer");
         let lw = &weights.layers[wl];
-        let fan_in = windows[0].len();
-        let final_layer = wl + 1 == weights.layers.len();
+        let (out_ch, fan_in) = st.weight_shape().expect("compute stages have a weight shape");
+        let final_layer = st.final_compute;
         let layer_seed = wl as u32;
         let base = seed ^ layer_seed.wrapping_mul(0x9E37_79B9);
         let r4 = layer_r4(fan_in, k, base);
@@ -882,7 +993,7 @@ pub mod reference {
             .map(|j| lane_stream(zero_code, bits, k, base, (1 << 40) + j as u64))
             .collect();
         let scale = (1u64 << neuron::m_bits(fan_in)) as f64;
-        let mut out = Vec::with_capacity(out_ch * windows.len());
+        let mut out = Vec::with_capacity(out_ch * table.n_win);
         for oc in 0..out_ch {
             let wcodes = &lw.codes[oc];
             assert_eq!(wcodes.len(), fan_in, "weight fan-in mismatch");
@@ -893,9 +1004,9 @@ pub mod reference {
                     lane_stream(c, bits, k, base ^ 0x5EED_CAFE, ((oc as u64) << 20) + j as u64)
                 })
                 .collect();
-            for win in windows {
+            for wi in 0..table.n_win {
                 let mut vc = VerticalCounter::new(k, fan_in);
-                for (j, &src) in win.iter().enumerate() {
+                for (j, &src) in table.window(oc, wi).iter().enumerate() {
                     let a = match src {
                         Some(i) => &act_streams[i],
                         None => &pad_streams[j],
@@ -903,7 +1014,7 @@ pub mod reference {
                     vc.add(&a.xnor(&wgt_streams[j]));
                 }
                 let o = neuron::b2s_stream(&vc, &r4);
-                let o = if relu {
+                let o = if st.relu {
                     o.or(&neuron::relu_zero_stream(fan_in, &r4))
                 } else {
                     o
@@ -920,7 +1031,7 @@ pub mod reference {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::accel::layers::LayerSpec;
+    use crate::accel::layers::{Conv2d, LayerKind, LayerSpec};
 
     /// Shorthands for the non-deprecated one-shots.
     fn fwd(n: &NetworkSpec, w: &QuantizedWeights, i: &[f64], m: ForwardMode) -> Vec<f64> {
@@ -940,14 +1051,41 @@ mod tests {
             name: "tiny".into(),
             input: (1, 6, 6),
             layers: vec![
-                LayerSpec {
-                    kind: LayerKind::Conv { in_ch: 1, out_ch: 2, kernel: 3, padding: 1 },
-                    relu: true,
-                },
-                LayerSpec { kind: LayerKind::MaxPool { size: 2 }, relu: false },
-                LayerSpec { kind: LayerKind::Dense { inputs: 18, outputs: 3 }, relu: false },
+                LayerSpec::active(LayerKind::conv(1, 2, 3, 1)),
+                LayerSpec::linear(LayerKind::MaxPool { size: 2 }),
+                LayerSpec::linear(LayerKind::Dense { inputs: 18, outputs: 3 }),
             ],
         }
+    }
+
+    /// A network exercising every extended op: strided conv, depthwise
+    /// conv, SC scaled-add residual, average pool, global average pool.
+    fn extended_net() -> NetworkSpec {
+        NetworkSpec {
+            name: "tiny-extended".into(),
+            input: (1, 8, 8),
+            layers: vec![
+                LayerSpec::active(LayerKind::Conv(
+                    Conv2d::square(1, 4, 3, 1).with_stride(2, 2),
+                )),
+                LayerSpec::active(LayerKind::Conv(Conv2d::square(4, 4, 3, 1).depthwise())),
+                LayerSpec::linear(LayerKind::Add { from: 0 }),
+                LayerSpec::linear(LayerKind::AvgPool { size: 2 }),
+                LayerSpec::active(LayerKind::Conv(Conv2d::square(4, 6, 1, 0))),
+                LayerSpec::linear(LayerKind::GlobalAvgPool),
+                LayerSpec::linear(LayerKind::Dense { inputs: 6, outputs: 3 }),
+            ],
+        }
+    }
+
+    fn seeded_weights(net: &NetworkSpec, bits: u32, seed: u64) -> QuantizedWeights {
+        // Synthetic codes with per-layer affines in the calibrated range.
+        let mut w = QuantizedWeights::synthetic(net, bits, seed.max(1)).unwrap();
+        for (i, l) in w.layers.iter_mut().enumerate() {
+            l.gamma = 0.35 + 0.1 * i as f64;
+            l.mu = 0.9;
+        }
+        w
     }
 
     fn tiny_weights(bits: u32, seed: u64) -> QuantizedWeights {
@@ -979,6 +1117,10 @@ mod tests {
         (0..36).map(|i| ((i % 7) as f64) / 7.0).collect()
     }
 
+    fn extended_input() -> Vec<f64> {
+        (0..64).map(|i| ((i % 9) as f64) / 9.0).collect()
+    }
+
     #[test]
     fn output_shapes_consistent_across_modes() {
         let net = tiny_net();
@@ -1008,6 +1150,87 @@ mod tests {
                 assert_eq!(fused, golden, "k={k} seed={seed}");
             }
         }
+    }
+
+    #[test]
+    fn extended_ops_fused_matches_reference_bit_exactly() {
+        // Strided conv, depthwise conv, residual add, avgpool, global
+        // avgpool: the fused engine and the per-bit golden model lower the
+        // same stage IR and must agree bit-for-bit.
+        let net = extended_net();
+        let w = seeded_weights(&net, 8, 17);
+        let input = extended_input();
+        for k in [32usize, 100] {
+            for seed in [5u32, 11] {
+                let fused = fwd(&net, &w, &input, ForwardMode::Stochastic { k, seed });
+                let golden = reference::forward_stochastic(&net, &w, &input, k, seed);
+                assert_eq!(fused, golden, "k={k} seed={seed}");
+                assert_eq!(fused.len(), 3);
+                assert!(fused.iter().all(|v| v.is_finite()));
+            }
+        }
+    }
+
+    #[test]
+    fn extended_ops_run_in_every_mode() {
+        let net = extended_net();
+        let w = seeded_weights(&net, 8, 23);
+        let input = extended_input();
+        for mode in [
+            ForwardMode::FixedPoint,
+            ForwardMode::Expectation,
+            ForwardMode::NoisyExpectation { k: 256, seed: 3 },
+            ForwardMode::Stochastic { k: 64, seed: 3 },
+        ] {
+            let out = fwd(&net, &w, &input, mode);
+            assert_eq!(out.len(), 3, "{mode:?}");
+            assert!(out.iter().all(|v| v.is_finite()), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn mnist_strided_topology_runs_end_to_end() {
+        let net = NetworkSpec::mnist_strided();
+        let w = QuantizedWeights::synthetic(&net, 8, 0x5EED).unwrap();
+        let input: Vec<f64> = (0..28 * 28).map(|i| ((i % 13) as f64) / 13.0).collect();
+        let plan = ForwardPlan::new(&net, &w, ForwardMode::Stochastic { k: 32, seed: 7 });
+        assert_eq!(plan.in_len(), 28 * 28);
+        assert_eq!(plan.out_len(), 10);
+        let fused = plan.run(&input);
+        let golden = reference::forward_stochastic(&net, &w, &input, 32, 7);
+        assert_eq!(fused, golden);
+    }
+
+    #[test]
+    fn compile_rejects_malformed_input_without_panicking() {
+        // Wrong weight-layer count.
+        let net = tiny_net();
+        let mut w = tiny_weights(8, 1);
+        w.layers.pop();
+        let err = ForwardPlan::compile(&net, &w, ForwardMode::Expectation)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("compute layers"), "{err}");
+        // Wrong fan-in on one row.
+        let mut w = tiny_weights(8, 1);
+        w.layers[1].codes[2].pop();
+        let err = ForwardPlan::compile(&net, &w, ForwardMode::Expectation)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fan-in"), "{err}");
+        // Invalid network (non-divisible pool) surfaces the shape error.
+        let bad = NetworkSpec {
+            name: "bad".into(),
+            input: (1, 7, 7),
+            layers: vec![
+                LayerSpec::active(LayerKind::conv(1, 2, 1, 0)),
+                LayerSpec::linear(LayerKind::MaxPool { size: 2 }),
+            ],
+        };
+        let err = ForwardPlan::compile(&bad, &tiny_weights(8, 1), ForwardMode::Expectation)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("does not divide"), "{err}");
     }
 
     #[test]
@@ -1045,6 +1268,41 @@ mod tests {
         let c = plan.run(&tiny_input());
         assert_eq!(a, b);
         assert_eq!(a, c);
+    }
+
+    #[test]
+    fn scratch_reuse_covers_residual_saves() {
+        // The saved-branch buffers must reset between images: two different
+        // images through one scratch arena give the same answers as fresh
+        // arenas.
+        let net = extended_net();
+        let w = seeded_weights(&net, 8, 31);
+        let plan = ForwardPlan::new(&net, &w, ForwardMode::Stochastic { k: 48, seed: 9 });
+        let imgs: Vec<Vec<f64>> =
+            (0..3).map(|s| (0..64).map(|i| (((i + s * 7) % 11) as f64) / 11.0).collect()).collect();
+        let mut scr = Scratch::default();
+        for img in &imgs {
+            let reused = plan.run_with(img, &mut scr, false);
+            assert_eq!(reused, plan.run(img));
+        }
+    }
+
+    #[test]
+    fn timed_run_is_bit_identical_and_labels_stages() {
+        let net = extended_net();
+        let w = seeded_weights(&net, 8, 13);
+        let plan = ForwardPlan::new(&net, &w, ForwardMode::Stochastic { k: 32, seed: 1 });
+        let mut scr = Scratch::default();
+        let mut timings = Vec::new();
+        let timed = plan.run_with_timings(&extended_input(), &mut scr, 1, &mut timings);
+        assert_eq!(timed, plan.run(&extended_input()));
+        let labels: Vec<&str> = timings.iter().map(|&(_, l, _)| l).collect();
+        assert_eq!(
+            labels,
+            vec!["conv", "depthwise-conv", "add", "avgpool", "conv", "global-avgpool", "dense"]
+        );
+        let indices: Vec<usize> = timings.iter().map(|&(i, _, _)| i).collect();
+        assert_eq!(indices, (0..7).collect::<Vec<_>>());
     }
 
     #[test]

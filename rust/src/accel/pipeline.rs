@@ -14,9 +14,17 @@
 //!     completely; `D = (groups·incycle_pipe + k) · τ` — the paper's line
 //!     17 with the group factor made explicit (for `groups = 1` the two
 //!     coincide).
+//!
+//! The scheduler consumes the compiled **stage IR**
+//! ([`crate::accel::stage::StageDescriptor`]): each stage's `neurons` /
+//! `fan_in` determine its residency, memory coverage and traffic, so the
+//! hardware model and the software datapaths cost the *same* per-layer
+//! descriptors — there is no separate `NetworkSpec` walk to drift out of
+//! sync.
 
-use crate::accel::layers::{LayerSpec, NetworkSpec, Shape};
+use crate::accel::layers::NetworkSpec;
 use crate::accel::memory::MemoryModel;
+use crate::accel::stage::StageDescriptor;
 
 /// Inputs a MAC unit multiplies per cycle (25 parallel multipliers, §IV-A).
 pub const MAC_WIDTH: usize = 25;
@@ -59,6 +67,10 @@ pub enum PipelineMode {
 /// Schedule of one layer on the accelerator.
 #[derive(Debug, Clone)]
 pub struct LayerSchedule {
+    /// Source layer index in the network (stage descriptor index).
+    pub layer_index: usize,
+    /// Stage label (`conv`, `depthwise-conv`, `dense`, ...).
+    pub label: &'static str,
     /// Regime chosen by Algorithm 1.
     pub mode: PipelineMode,
     /// Neurons resident on chip at once.
@@ -104,28 +116,28 @@ fn regime(n_onchip: usize, n_memcover: usize, groups: usize, k: usize) -> (Pipel
     }
 }
 
-/// Apply Algorithm 1 to one layer.
-pub fn schedule_layer(layer: &LayerSpec, input: Shape, cfg: &ScheduleConfig) -> Option<LayerSchedule> {
-    schedule_layer_batch(layer, input, cfg, 1)
+/// Apply Algorithm 1 to one compiled stage (`None` for stages owning no
+/// MACs — pooling and residual merges ride on the producing layer).
+pub fn schedule_layer(stage: &StageDescriptor, cfg: &ScheduleConfig) -> Option<LayerSchedule> {
+    schedule_layer_batch(stage, cfg, 1)
 }
 
-/// Apply Algorithm 1 to one layer with weight-stationary batching: a
-/// resident neuron group's weights are loaded once and reused across all
-/// `batch` images, so steady-state operand traffic per neuron-image is the
-/// activation bytes plus `1/batch` of the weight bytes. `batch = 1` is
-/// exactly the paper's single-image schedule.
+/// Apply Algorithm 1 to one compiled stage with weight-stationary
+/// batching: a resident neuron group's weights are loaded once and reused
+/// across all `batch` images, so steady-state operand traffic per
+/// neuron-image is the activation bytes plus `1/batch` of the weight
+/// bytes. `batch = 1` is exactly the paper's single-image schedule.
 pub fn schedule_layer_batch(
-    layer: &LayerSpec,
-    input: Shape,
+    stage: &StageDescriptor,
     cfg: &ScheduleConfig,
     batch: usize,
 ) -> Option<LayerSchedule> {
     let batch = batch.max(1);
-    let neurons = layer.neurons(input);
+    let neurons = stage.neurons;
     if neurons == 0 {
-        return None; // pooling layers ride on the producing layer
+        return None; // pooling / residual stages ride on the producing layer
     }
-    let fan_in = layer.fan_in(input);
+    let fan_in = stage.fan_in;
     let macs_per_neuron = fan_in.div_ceil(MAC_WIDTH);
     let n_onchip = (cfg.total_macs() / macs_per_neuron).max(1).min(neurons);
     // Operand bytes per neuron-image: activations at system precision plus
@@ -145,6 +157,8 @@ pub fn schedule_layer_batch(
         (neurons * fan_in * cfg.bytes_per_operand) as u64 * (batch as u64 + 1);
     let active_mac_cycles = neurons as u64 * macs_per_neuron as u64 * cfg.k as u64 * batch as u64;
     Some(LayerSchedule {
+        layer_index: stage.index,
+        label: stage.label(),
         mode,
         n_onchip,
         n_memcover,
@@ -174,7 +188,28 @@ pub struct NetworkSchedule {
     pub utilization: f64,
 }
 
-/// Schedule every compute layer of `net`.
+/// Schedule a compiled stage list (the shared entry point: the software
+/// engine, the system roll-up and the benches all pass the same
+/// descriptors).
+pub fn schedule_stages(
+    stages: &[StageDescriptor],
+    cfg: &ScheduleConfig,
+    batch: usize,
+) -> NetworkSchedule {
+    let layers: Vec<LayerSchedule> =
+        stages.iter().filter_map(|s| schedule_layer_batch(s, cfg, batch)).collect();
+    let latency_ns = layers.iter().map(|l| l.delay_ns).sum();
+    let dram_bytes = layers.iter().map(|l| l.dram_bytes).sum();
+    let active_mac_cycles = layers.iter().map(|l| l.active_mac_cycles).sum();
+    let total_cycles: u64 = layers.iter().map(|l| l.total_cycles).sum();
+    let capacity = total_cycles as f64 * cfg.total_macs() as f64;
+    let utilization =
+        if capacity > 0.0 { (active_mac_cycles as f64 / capacity).min(1.0) } else { 0.0 };
+    NetworkSchedule { layers, latency_ns, dram_bytes, active_mac_cycles, total_cycles, utilization }
+}
+
+/// Schedule every compute layer of `net`. Panics on malformed networks —
+/// compile the stage IR first ([`NetworkSpec::stages`]) on untrusted input.
 pub fn schedule_network(net: &NetworkSpec, cfg: &ScheduleConfig) -> NetworkSchedule {
     schedule_network_batch(net, cfg, 1)
 }
@@ -187,19 +222,10 @@ pub fn schedule_network_batch(
     cfg: &ScheduleConfig,
     batch: usize,
 ) -> NetworkSchedule {
-    let mut layers = Vec::new();
-    for (shape, layer) in net.input_shapes().iter().zip(&net.layers) {
-        if let Some(s) = schedule_layer_batch(layer, *shape, cfg, batch) {
-            layers.push(s);
-        }
-    }
-    let latency_ns = layers.iter().map(|l| l.delay_ns).sum();
-    let dram_bytes = layers.iter().map(|l| l.dram_bytes).sum();
-    let active_mac_cycles = layers.iter().map(|l| l.active_mac_cycles).sum();
-    let total_cycles: u64 = layers.iter().map(|l| l.total_cycles).sum();
-    let capacity = total_cycles as f64 * cfg.total_macs() as f64;
-    let utilization = if capacity > 0.0 { (active_mac_cycles as f64 / capacity).min(1.0) } else { 0.0 };
-    NetworkSchedule { layers, latency_ns, dram_bytes, active_mac_cycles, total_cycles, utilization }
+    let stages = net
+        .stages()
+        .unwrap_or_else(|e| panic!("schedule_network({}): {e:#}", net.name));
+    schedule_stages(&stages, cfg, batch)
 }
 
 #[cfg(test)]
@@ -219,22 +245,24 @@ mod tests {
     #[test]
     fn lenet_conv1_is_memory_bound_at_8_channels() {
         let net = NetworkSpec::lenet5();
-        let shapes = net.input_shapes();
-        let s = schedule_layer(&net.layers[0], shapes[0], &cfg(8)).unwrap();
+        let stages = net.stages().unwrap();
+        let s = schedule_layer(&stages[0], &cfg(8)).unwrap();
         // fan-in 25 ⇒ 50 B/neuron; ~197 B/cycle ⇒ n_memcover = 3;
         // n_onchip = 128 ⇒ incycle = 43 ≥ k=32 ⇒ fully pipelined.
         assert_eq!(s.n_memcover, 3);
         assert_eq!(s.n_onchip, 128);
         assert_eq!(s.mode, PipelineMode::FullyPipelined);
         assert_eq!(s.groups, 4704usize.div_ceil(128));
+        assert_eq!(s.label, "conv");
+        assert_eq!(s.layer_index, 0);
     }
 
     #[test]
     fn tiny_layer_is_not_pipelined() {
         // fc3: 10 neurons of fan-in 84 ⇒ 4 MACs each; memory covers ≥1.
         let net = NetworkSpec::lenet5();
-        let shapes = net.input_shapes();
-        let s = schedule_layer(&net.layers[6], shapes[6], &cfg(8)).unwrap();
+        let stages = net.stages().unwrap();
+        let s = schedule_layer(&stages[6], &cfg(8)).unwrap();
         assert!(s.n_onchip <= 32);
         // 168 B per neuron > 197 B/cycle? 168 < 197 ⇒ memcover = 1;
         // n_onchip = 128/4 = 32 > 1 ⇒ pipelined.
@@ -273,6 +301,28 @@ mod tests {
         let sched = schedule_network(&net, &cfg(8));
         // 7 layers, 2 pools ⇒ 5 compute layers.
         assert_eq!(sched.layers.len(), 5);
+        // Labels and indices come from the stage descriptors.
+        let labels: Vec<&str> = sched.layers.iter().map(|l| l.label).collect();
+        assert_eq!(labels, vec!["conv", "conv", "dense", "dense", "dense"]);
+        let idx: Vec<usize> = sched.layers.iter().map(|l| l.layer_index).collect();
+        assert_eq!(idx, vec![0, 2, 4, 5, 6]);
+    }
+
+    #[test]
+    fn extended_stages_schedule_through_the_same_ir() {
+        // The strided/depthwise/avgpool topology schedules its four
+        // compute stages; pool/add stages own no machine time.
+        let net = NetworkSpec::mnist_strided();
+        let sched = schedule_network(&net, &cfg(8));
+        let labels: Vec<&str> = sched.layers.iter().map(|l| l.label).collect();
+        assert_eq!(labels, vec!["conv", "depthwise-conv", "conv", "dense"]);
+        assert!(sched.latency_ns > 0.0);
+        // Depthwise fan-in (9) needs one MAC per neuron, so the whole MAC
+        // array (8 ch × 16 MACs) fills with resident neurons.
+        assert_eq!(sched.layers[1].n_onchip, 128);
+        let stages = net.stages().unwrap();
+        let direct = schedule_stages(&stages, &cfg(8), 1);
+        assert_eq!(direct.total_cycles, sched.total_cycles);
     }
 
     #[test]
@@ -314,7 +364,8 @@ mod tests {
         let mut c = cfg(1);
         c.memory.bandwidth_bytes_per_ns = 1e6;
         let net = NetworkSpec::lenet5();
-        let s = schedule_layer(&net.layers[0], net.input_shapes()[0], &c).unwrap();
+        let stages = net.stages().unwrap();
+        let s = schedule_layer(&stages[0], &c).unwrap();
         assert_eq!(s.mode, PipelineMode::NonPipelined);
         assert_eq!(s.total_cycles, s.groups as u64 * 32);
     }

@@ -1,0 +1,475 @@
+//! The compiled per-layer **stage IR**: one [`StageDescriptor`] per layer
+//! of a [`NetworkSpec`], produced by the single non-panicking
+//! shape-inference pass [`NetworkSpec::stages`]. Every consumer lowers
+//! from this IR instead of re-walking the layer vocabulary:
+//!
+//! * the fused stochastic engine and the per-bit golden reference build
+//!   their gather tables from [`gather`] (shared, so bit-exact parity of
+//!   the datapaths is parity *by construction*);
+//! * the analytic expectation / noisy / fixed-point paths lower the same
+//!   descriptors to dequantized-weight loops;
+//! * the hardware model ([`crate::accel::pipeline`] /
+//!   [`crate::accel::system`]) derives each layer's schedule, DRAM traffic
+//!   and energy from the descriptor's `neurons`/`fan_in` — no ad-hoc
+//!   `NetworkSpec` walks;
+//! * weight loaders and synthetic-weight generators size their tensors
+//!   from [`StageDescriptor::weight_shape`].
+//!
+//! Stages that own no MACs (pooling, global pooling, residual merges)
+//! operate on the *recovered* values at the layer boundary — the SC
+//! pipeline recovers binary codes at every S2B anyway, so max pooling is a
+//! plain max, average pooling is the counter-based scaled add of SC-DCNN
+//! (behavioral stream kernel in [`crate::sc::neuron::avg_pool_stream`]),
+//! and the residual [`LayerKind::Add`] is the SC MUX scaled add
+//! `(a + b) / 2`. The value kernels live here so every backend executes
+//! the identical f64 math.
+
+use crate::accel::layers::{Conv2d, LayerKind, NetworkSpec, Shape};
+use anyhow::{bail, Result};
+
+/// The operation a compiled stage performs (the layer vocabulary with all
+/// shape questions already answered).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StageOp {
+    /// 2-D convolution (square/rectangular, strided, optionally depthwise).
+    Conv(Conv2d),
+    /// Fully connected.
+    Dense {
+        /// Flattened input size.
+        inputs: usize,
+        /// Output neurons.
+        outputs: usize,
+    },
+    /// Non-overlapping max pool.
+    MaxPool {
+        /// Window size.
+        size: usize,
+    },
+    /// Non-overlapping average pool (SC counter-based scaled add).
+    AvgPool {
+        /// Window size.
+        size: usize,
+    },
+    /// Spatial mean per channel.
+    GlobalAvgPool,
+    /// SC scaled-add residual merge with the saved output of layer `from`.
+    Add {
+        /// Producing layer index.
+        from: usize,
+    },
+}
+
+/// One compiled stage: everything the software backends and the hardware
+/// model need to lower this layer, computed once by [`NetworkSpec::stages`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageDescriptor {
+    /// Layer index in the source [`NetworkSpec`].
+    pub index: usize,
+    /// The operation.
+    pub op: StageOp,
+    /// Fused ReLU at the stage output (compute stages only).
+    pub relu: bool,
+    /// Activation shape entering the stage.
+    pub in_shape: Shape,
+    /// Activation shape leaving the stage.
+    pub out_shape: Shape,
+    /// MAC-owning outputs (0 for pool/add stages).
+    pub neurons: usize,
+    /// Products per neuron (0 for pool/add stages).
+    pub fan_in: usize,
+    /// Index into `QuantizedWeights::layers` (compute stages only).
+    pub weight_layer: Option<usize>,
+    /// This stage's output is consumed later by a residual merge and must
+    /// be kept alive past the next stage.
+    pub save_output: bool,
+    /// Last compute stage of the network (its outputs are logits — the
+    /// re-encoder skips the [0, 1] clamp).
+    pub final_compute: bool,
+}
+
+impl StageDescriptor {
+    /// Stable lowercase label (schedules, bench records, reports).
+    pub fn label(&self) -> &'static str {
+        match self.op {
+            StageOp::Conv(c) if c.depthwise => "depthwise-conv",
+            StageOp::Conv(_) => "conv",
+            StageOp::Dense { .. } => "dense",
+            StageOp::MaxPool { .. } => "maxpool",
+            StageOp::AvgPool { .. } => "avgpool",
+            StageOp::GlobalAvgPool => "global-avgpool",
+            StageOp::Add { .. } => "add",
+        }
+    }
+
+    /// True for MAC-owning (weight-carrying) stages.
+    pub fn is_compute(&self) -> bool {
+        self.weight_layer.is_some()
+    }
+
+    /// Multiply-accumulates this stage performs per inference.
+    pub fn macs(&self) -> u64 {
+        self.neurons as u64 * self.fan_in as u64
+    }
+
+    /// Weight tensor shape `(rows, cols)` — `rows` output channels /
+    /// neurons of `cols = fan_in` codes each — for compute stages.
+    pub fn weight_shape(&self) -> Option<(usize, usize)> {
+        match self.op {
+            StageOp::Conv(c) => Some((c.out_ch, c.fan_in())),
+            StageOp::Dense { inputs, outputs } => Some((outputs, inputs)),
+            _ => None,
+        }
+    }
+
+    /// Flattened input length (c·h·w of `in_shape`).
+    pub fn in_len(&self) -> usize {
+        self.in_shape.0 * self.in_shape.1 * self.in_shape.2
+    }
+
+    /// Flattened output length.
+    pub fn out_len(&self) -> usize {
+        self.out_shape.0 * self.out_shape.1 * self.out_shape.2
+    }
+}
+
+/// Total MACs of a compiled stage list (equals
+/// [`NetworkSpec::total_macs`] on the same network).
+pub fn total_macs(stages: &[StageDescriptor]) -> u64 {
+    stages.iter().map(|s| s.macs()).sum()
+}
+
+impl NetworkSpec {
+    /// Compile the network into its stage IR: one descriptor per layer,
+    /// with shapes inferred, weight layers numbered, residual save points
+    /// marked, and every malformed stack rejected with a typed error (see
+    /// [`NetworkSpec::validate`], which this subsumes).
+    pub fn stages(&self) -> Result<Vec<StageDescriptor>> {
+        let in_shapes = self.validate()?;
+        let mut save = vec![false; self.layers.len()];
+        for l in &self.layers {
+            if let LayerKind::Add { from } = l.kind {
+                save[from] = true;
+            }
+        }
+        let last_compute = self
+            .layers
+            .iter()
+            .rposition(|l| l.is_compute())
+            .expect("validate guarantees a compute layer");
+        let mut wl = 0usize;
+        let mut stages = Vec::with_capacity(self.layers.len());
+        for (li, l) in self.layers.iter().enumerate() {
+            let in_shape = in_shapes[li];
+            let out_shape = l
+                .try_output_shape(in_shape)
+                .expect("validate already inferred every shape");
+            let op = match &l.kind {
+                LayerKind::Conv(c) => StageOp::Conv(*c),
+                LayerKind::Dense { inputs, outputs } => {
+                    StageOp::Dense { inputs: *inputs, outputs: *outputs }
+                }
+                LayerKind::MaxPool { size } => StageOp::MaxPool { size: *size },
+                LayerKind::AvgPool { size } => StageOp::AvgPool { size: *size },
+                LayerKind::GlobalAvgPool => StageOp::GlobalAvgPool,
+                LayerKind::Add { from } => StageOp::Add { from: *from },
+            };
+            let weight_layer = if l.is_compute() {
+                wl += 1;
+                Some(wl - 1)
+            } else {
+                None
+            };
+            stages.push(StageDescriptor {
+                index: li,
+                op,
+                relu: l.relu,
+                in_shape,
+                out_shape,
+                neurons: l.neurons(in_shape),
+                fan_in: l.fan_in(in_shape),
+                weight_layer,
+                save_output: save[li],
+                final_compute: li == last_compute,
+            });
+        }
+        Ok(stages)
+    }
+}
+
+/// Im2col-style gather table of a compute stage: the flat input indices
+/// feeding each output neuron (`None` = zero padding).
+#[derive(Debug, Clone)]
+pub struct GatherTable {
+    /// Gather windows. For `per_channel` tables the layout is
+    /// output-channel-major: window `oc · n_win + wi` feeds output channel
+    /// `oc`'s spatial site `wi`; otherwise all output channels share the
+    /// `n_win` spatial windows.
+    pub windows: Vec<Vec<Option<usize>>>,
+    /// Spatial windows per output channel (`oh · ow`; 1 for dense).
+    pub n_win: usize,
+    /// True when every output channel has its own windows (depthwise).
+    pub per_channel: bool,
+}
+
+impl GatherTable {
+    /// The gather window feeding output channel `oc`, spatial site `wi`.
+    pub fn window(&self, oc: usize, wi: usize) -> &[Option<usize>] {
+        if self.per_channel {
+            &self.windows[oc * self.n_win + wi]
+        } else {
+            &self.windows[wi]
+        }
+    }
+
+    /// True when any window touches zero padding.
+    pub fn needs_padding(&self) -> bool {
+        self.windows.iter().any(|w| w.iter().any(|s| s.is_none()))
+    }
+}
+
+/// Build the gather table of a compute stage (`None` for pool/add stages).
+/// Both the fused word-packed engine and the per-bit reference read their
+/// windows from here, so the two datapaths cannot diverge on geometry.
+pub fn gather(desc: &StageDescriptor) -> Option<GatherTable> {
+    match desc.op {
+        StageOp::Conv(c) => Some(conv_gather(desc.in_shape, &c)),
+        StageOp::Dense { inputs, .. } => Some(GatherTable {
+            windows: vec![(0..inputs).map(Some).collect()],
+            n_win: 1,
+            per_channel: false,
+        }),
+        _ => None,
+    }
+}
+
+/// Gather table of a (possibly strided / rectangular / depthwise)
+/// convolution. Window order is `oy`-major then `ox`; within a window the
+/// lane order is `ic, ky, kx` — identical to the original stride-1 path,
+/// so existing `lenet5`/`cifar_net` streams are bit-compatible.
+fn conv_gather(input: Shape, c: &Conv2d) -> GatherTable {
+    let (ch, h, w) = input;
+    let (kh, kw) = c.kernel;
+    let (sy, sx) = c.stride;
+    let p = c.padding;
+    let oh = (h + 2 * p - kh) / sy + 1;
+    let ow = (w + 2 * p - kw) / sx + 1;
+    let n_win = oh * ow;
+    // Depthwise windows read one channel; shared windows read all of them.
+    let per_channel = c.depthwise;
+    let channel_groups: Vec<Vec<usize>> = if per_channel {
+        (0..ch).map(|ic| vec![ic]).collect()
+    } else {
+        vec![(0..ch).collect()]
+    };
+    let mut windows = Vec::with_capacity(if per_channel { ch * n_win } else { n_win });
+    for group in &channel_groups {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut idx = Vec::with_capacity(group.len() * kh * kw);
+                for &ic in group {
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let iy = oy * sy + ky;
+                            let ix = ox * sx + kx;
+                            if iy < p || ix < p || iy - p >= h || ix - p >= w {
+                                idx.push(None);
+                            } else {
+                                idx.push(Some(ic * h * w + (iy - p) * w + (ix - p)));
+                            }
+                        }
+                    }
+                }
+                windows.push(idx);
+            }
+        }
+    }
+    GatherTable { windows, n_win, per_channel }
+}
+
+// ---- value-domain stage kernels (shared by every backend) ---------------
+
+/// Max-pool plain values into `out` (the SC pipeline pools on correlated
+/// streams before S2B; on recovered values the same max applies).
+pub fn max_pool_into(v: &[f64], shape: Shape, size: usize, out: &mut Vec<f64>) {
+    let (c, h, w) = shape;
+    let (oh, ow) = (h / size, w / size);
+    out.clear();
+    out.reserve(c * oh * ow);
+    for ic in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut m = f64::MIN;
+                for ky in 0..size {
+                    for kx in 0..size {
+                        m = m.max(v[ic * h * w + (oy * size + ky) * w + (ox * size + kx)]);
+                    }
+                }
+                out.push(m);
+            }
+        }
+    }
+}
+
+/// Average-pool plain values into `out` — the recovered-value equivalent
+/// of the counter-based SC scaled add
+/// ([`crate::sc::neuron::avg_pool_stream`] is the stream-level kernel).
+pub fn avg_pool_into(v: &[f64], shape: Shape, size: usize, out: &mut Vec<f64>) {
+    let (c, h, w) = shape;
+    let (oh, ow) = (h / size, w / size);
+    let inv = 1.0 / (size * size) as f64;
+    out.clear();
+    out.reserve(c * oh * ow);
+    for ic in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut s = 0.0;
+                for ky in 0..size {
+                    for kx in 0..size {
+                        s += v[ic * h * w + (oy * size + ky) * w + (ox * size + kx)];
+                    }
+                }
+                out.push(s * inv);
+            }
+        }
+    }
+}
+
+/// Spatial mean per channel into `out`: (c, h, w) → c values.
+pub fn global_avg_pool_into(v: &[f64], shape: Shape, out: &mut Vec<f64>) {
+    let (c, h, w) = shape;
+    let inv = 1.0 / (h * w) as f64;
+    out.clear();
+    out.reserve(c);
+    for ic in 0..c {
+        let s: f64 = v[ic * h * w..(ic + 1) * h * w].iter().sum();
+        out.push(s * inv);
+    }
+}
+
+/// The SC scaled-add residual merge `(a + b) / 2` into `out` — a MUX with
+/// select probability ½ on the two recovered activations.
+pub fn scaled_add_into(a: &[f64], b: &[f64], out: &mut Vec<f64>) {
+    debug_assert_eq!(a.len(), b.len(), "residual operands must agree in size");
+    out.clear();
+    out.extend(a.iter().zip(b).map(|(&x, &y)| 0.5 * (x + y)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::layers::LayerSpec;
+
+    #[test]
+    fn lenet5_stage_ir_matches_layer_walk() {
+        let net = NetworkSpec::lenet5();
+        let stages = net.stages().unwrap();
+        assert_eq!(stages.len(), net.layers.len());
+        // Weight layers number 0..5 over the compute stages.
+        let wls: Vec<Option<usize>> = stages.iter().map(|s| s.weight_layer).collect();
+        assert_eq!(wls, vec![Some(0), None, Some(1), None, Some(2), Some(3), Some(4)]);
+        assert_eq!(total_macs(&stages), net.total_macs());
+        assert!(stages.iter().all(|s| !s.save_output), "no residuals in lenet5");
+        assert_eq!(stages.last().unwrap().out_shape, (10, 1, 1));
+        assert!(stages.last().unwrap().final_compute);
+        assert_eq!(stages[0].weight_shape(), Some((6, 25)));
+        assert_eq!(stages[4].weight_shape(), Some((120, 400)));
+    }
+
+    #[test]
+    fn mnist_strided_stage_ir() {
+        let net = NetworkSpec::mnist_strided();
+        let stages = net.stages().unwrap();
+        assert!(stages[0].save_output, "the stem feeds the residual");
+        assert!(!stages[1].save_output);
+        assert_eq!(stages[2].op, StageOp::Add { from: 0 });
+        assert_eq!(stages[2].neurons, 0);
+        assert_eq!(stages[1].label(), "depthwise-conv");
+        assert_eq!(stages[1].weight_shape(), Some((8, 9)));
+        assert_eq!(stages[5].label(), "global-avgpool");
+        assert_eq!(total_macs(&stages), net.total_macs());
+    }
+
+    #[test]
+    fn conv_gather_matches_stride1_reference_layout() {
+        // 1×4×4 input, 3×3 kernel, padding 1: window (0,0) touches the
+        // top-left padding exactly like the original implementation.
+        let c = Conv2d::square(1, 2, 3, 1);
+        let t = conv_gather((1, 4, 4), &c);
+        assert_eq!(t.n_win, 16);
+        assert!(!t.per_channel);
+        assert!(t.needs_padding());
+        let w00 = t.window(0, 0);
+        assert_eq!(w00.len(), 9);
+        assert_eq!(w00[0], None); // (-1,-1)
+        assert_eq!(w00[4], Some(0)); // center = input (0,0)
+        assert_eq!(w00[8], Some(5)); // (1,1)
+        // Interior window has no padding.
+        let w5 = t.window(1, 5); // shared across output channels
+        assert!(w5.iter().all(|s| s.is_some()));
+    }
+
+    #[test]
+    fn strided_gather_skips_sites() {
+        let c = Conv2d::square(1, 1, 3, 1).with_stride(2, 2);
+        let t = conv_gather((1, 4, 4), &c);
+        // (4+2-3)/2+1 = 2 per axis.
+        assert_eq!(t.n_win, 4);
+        // Window (0,1) centers at input column 2: lane (ky=1,kx=1) reads
+        // flat index 0*4 + 2.
+        let w = t.window(0, 1);
+        assert_eq!(w[4], Some(2));
+    }
+
+    #[test]
+    fn depthwise_gather_is_per_channel() {
+        let c = Conv2d::square(3, 3, 3, 1).depthwise();
+        let t = conv_gather((3, 4, 4), &c);
+        assert!(t.per_channel);
+        assert_eq!(t.windows.len(), 3 * 16);
+        // Channel 2's center lane reads from channel 2's plane: flat
+        // index 2·(4·4) + 1·4 + 1 = 37 for the (1,1) site.
+        let w = t.window(2, 5); // oy=1, ox=1
+        assert_eq!(w.len(), 9);
+        assert_eq!(w[4], Some(37));
+    }
+
+    #[test]
+    fn dense_gather_is_the_identity_window() {
+        let net = NetworkSpec {
+            name: "d".into(),
+            input: (1, 2, 2),
+            layers: vec![LayerSpec::linear(crate::accel::layers::LayerKind::Dense {
+                inputs: 4,
+                outputs: 3,
+            })],
+        };
+        let stages = net.stages().unwrap();
+        let t = gather(&stages[0]).unwrap();
+        assert_eq!(t.n_win, 1);
+        assert_eq!(t.window(2, 0), &[Some(0), Some(1), Some(2), Some(3)][..]);
+        assert!(gather(&StageDescriptor {
+            op: StageOp::GlobalAvgPool,
+            ..stages[0].clone()
+        })
+        .is_none());
+    }
+
+    #[test]
+    fn value_kernels_compute_expected_reductions() {
+        // 1 channel, 2×2.
+        let v = [1.0, 3.0, 5.0, 7.0];
+        let mut out = Vec::new();
+        max_pool_into(&v, (1, 2, 2), 2, &mut out);
+        assert_eq!(out, vec![7.0]);
+        avg_pool_into(&v, (1, 2, 2), 2, &mut out);
+        assert_eq!(out, vec![4.0]);
+        global_avg_pool_into(&v, (1, 2, 2), &mut out);
+        assert_eq!(out, vec![4.0]);
+        // Two channels.
+        let v2 = [1.0, 3.0, 5.0, 7.0, 2.0, 2.0, 2.0, 2.0];
+        global_avg_pool_into(&v2, (2, 2, 2), &mut out);
+        assert_eq!(out, vec![4.0, 2.0]);
+        scaled_add_into(&[0.2, 0.8], &[0.6, 0.0], &mut out);
+        assert_eq!(out, vec![0.4, 0.4]);
+    }
+}

@@ -7,7 +7,8 @@ use crate::accel::channel::{characterize_channel, ChannelReport};
 use crate::accel::layers::NetworkSpec;
 use crate::accel::memory::MemoryModel;
 use crate::accel::metrics::SystemMetrics;
-use crate::accel::pipeline::{schedule_network, NetworkSchedule, ScheduleConfig};
+use crate::accel::pipeline::{schedule_stages, NetworkSchedule, ScheduleConfig};
+use crate::accel::stage;
 use crate::tech::sram::SramMacro;
 use crate::tech::TechKind;
 
@@ -69,12 +70,18 @@ pub struct SystemEvaluation {
 }
 
 /// Evaluate a configuration on a workload, reusing a pre-computed channel
-/// report (characterization is deterministic per technology).
+/// report (characterization is deterministic per technology). The
+/// schedule, DRAM/SRAM traffic, and op counts all derive from the
+/// network's compiled stage descriptors — the same IR the software
+/// backends lower from.
 pub fn evaluate_with_channel(
     cfg: &SystemConfig,
     net: &NetworkSpec,
     channel: &ChannelReport,
 ) -> SystemEvaluation {
+    let stages = net
+        .stages()
+        .unwrap_or_else(|e| panic!("system::evaluate({}): {e:#}", net.name));
     let clock_ps = channel.min_clock_ps;
     let sched_cfg = ScheduleConfig {
         channels: cfg.channels,
@@ -83,7 +90,7 @@ pub fn evaluate_with_channel(
         memory: cfg.memory,
         bytes_per_operand: 1,
     };
-    let schedule = schedule_network(net, &sched_cfg);
+    let schedule = schedule_stages(&stages, &sched_cfg, 1);
 
     // ---- area ----
     let logic_area = cfg.channels as f64 * channel.area_um2;
@@ -117,7 +124,7 @@ pub fn evaluate_with_channel(
     let power_mw = energy_uj / latency_us * 1000.0;
     let clock_ghz = 1000.0 / clock_ps;
     // Binary-equivalent ops: 2 per MAC (multiply + accumulate).
-    let ops = 2.0 * net.total_macs() as f64;
+    let ops = 2.0 * stage::total_macs(&stages) as f64;
     let tops = ops / schedule.latency_ns / 1000.0;
 
     let metrics = SystemMetrics {
@@ -240,6 +247,22 @@ mod tests {
                 "{tech:?}: EDAP optimum at {best} channels"
             );
         }
+    }
+
+    #[test]
+    fn extended_topology_rolls_up_from_the_stage_ir() {
+        // The strided/depthwise/avgpool MNIST variant evaluates through
+        // the same descriptors; it is far smaller than LeNet-5, so its
+        // modeled latency and energy must come in below.
+        let small = evaluate(
+            &SystemConfig::paper(TechKind::Rfet10, 8),
+            &NetworkSpec::mnist_strided(),
+        );
+        let lenet = evaluate(&SystemConfig::paper(TechKind::Rfet10, 8), &NetworkSpec::lenet5());
+        assert!(small.metrics.latency_us < lenet.metrics.latency_us);
+        assert!(small.metrics.energy_uj < lenet.metrics.energy_uj);
+        assert_eq!(small.schedule.layers.len(), 4, "four compute stages");
+        assert_eq!(small.metrics.area_mm2, lenet.metrics.area_mm2, "area is workload-free");
     }
 
     #[test]

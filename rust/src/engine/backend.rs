@@ -62,7 +62,9 @@ impl PlanExec {
             .forward_mode(cfg.k, cfg.seed)
             .expect("PlanExec is only built for plan-lowerable backend kinds");
         let weights = cfg.resolve_weights()?;
-        let plan = ForwardPlan::new(&cfg.net, &weights, mode);
+        // compile (not new): weight/shape mismatches surface as session
+        // open errors, never as panics on the worker thread.
+        let plan = ForwardPlan::compile(&cfg.net, &weights, mode)?;
         Ok(PlanExec { plan, scratch: Scratch::default(), threads: cfg.threads, fbuf: Vec::new() })
     }
 

@@ -269,11 +269,19 @@ impl EngineConfig {
         c * h * w
     }
 
-    /// Check internal consistency without building anything.
+    /// Check internal consistency without building anything. Runs the
+    /// network's full shape-inference pass ([`NetworkSpec::validate`]), so
+    /// malformed stacks — channel mismatches, non-divisible pool windows,
+    /// dangling residuals — surface here as typed errors instead of
+    /// panicking deep inside plan compilation.
     pub fn validate(&self) -> Result<()> {
         if self.net.layers.is_empty() {
             bail!("engine config: network {:?} has no layers", self.net.name);
         }
+        self.net
+            .validate()
+            .map(|_| ())
+            .map_err(|e| e.context(format!("engine config: network {:?}", self.net.name)))?;
         match self.backend {
             BackendKind::Xla => {
                 if self.hlo_ladder.is_empty() {
@@ -408,6 +416,24 @@ mod tests {
             .with_quantized(tiny_quantized(8));
         cfg.bits = 4;
         assert!(cfg.resolve_weights().is_err());
+    }
+
+    #[test]
+    fn validation_surfaces_network_shape_errors() {
+        // The old silent-truncation maxpool bug, now a typed error at the
+        // config boundary (Engine::open refuses instead of asserting).
+        let bad = NetworkSpec {
+            name: "bad-pool".into(),
+            input: (1, 7, 7),
+            layers: vec![
+                LayerSpec::active(LayerKind::conv(1, 2, 1, 0)),
+                LayerSpec::linear(LayerKind::MaxPool { size: 2 }),
+            ],
+        };
+        let cfg =
+            EngineConfig::new(BackendKind::Expectation, bad).with_quantized(tiny_quantized(8));
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("does not divide"), "{err}");
     }
 
     #[test]

@@ -42,6 +42,33 @@
 //! `forward_batch` are `#[deprecated]` shims kept bit-compatible during
 //! the migration window.
 //!
+//! ## The stage IR (how a network becomes a datapath)
+//!
+//! Topologies are described by the typed vocabulary of [`accel::layers`]
+//! — square/strided/rectangular/depthwise `Conv`, `MaxPool`, SC
+//! counter-based `AvgPool`, `GlobalAvgPool`, `Dense`, and the SC
+//! scaled-add residual `Add` — and **compiled** before anything runs:
+//!
+//! ```text
+//! NetworkSpec ──stages()──▶ Vec<StageDescriptor>     (accel::stage)
+//!                 │            shapes, neurons/fan-in, weight shapes,
+//!                 │            residual save points; malformed stacks
+//!                 │            are typed errors, not panics
+//!                 ├─▶ ForwardPlan::compile  — LayerStage objects
+//!                 │                           (fused SC / analytic)
+//!                 ├─▶ network::reference    — per-bit golden model
+//!                 └─▶ accel::pipeline/system — Algorithm 1 schedule,
+//!                     DRAM traffic, energy roll-up
+//! ```
+//!
+//! Because the fused engine and the per-bit reference read the *same*
+//! gather tables from the same descriptors, their bit-exact parity is
+//! structural; and because the hardware model costs the same descriptors,
+//! the modeled schedule can never disagree with the software datapath
+//! about what a layer is. [`accel::layers::NetworkSpec::by_name`] is the
+//! single registry behind every stringly network lookup
+//! (`lenet5` / `cifar_net` / `mnist_strided`).
+//!
 //! ## Layer map
 //!
 //! * **L3 (this crate)** — the engine/serving stack above, plus every

@@ -18,6 +18,7 @@
 //! Cargo.toml note.)
 
 use anyhow::{anyhow, bail, Context, Result};
+use scnn::accel::network::QuantizedWeights;
 use scnn::accel::{channel, layers::NetworkSpec, metrics::argmin_by};
 use scnn::data::{Artifacts, Dataset};
 use scnn::engine::{classify, BackendKind, BatchPolicy, Engine, EngineConfig};
@@ -109,27 +110,57 @@ fn print_help() {
          \n\
          COMMANDS:\n\
            serve     --artifacts DIR --n N --backend pjrt|sc|reference|expectation\n\
-                     --k K --bits B --batch-max M --linger-ms L --queue-depth Q\n\
-                     --threads T (compute-thread cap for in-process backends)\n\
+                     --net lenet5|cifar_net|mnist_strided (--synthetic for\n\
+                     stand-in weights) --k K --bits B --batch-max M\n\
+                     --linger-ms L --queue-depth Q --threads T\n\
                      stream the test set through an engine session\n\
            simulate  --mode stochastic|reference|expectation|noisy|fixed\n\
-                     --k K --bits B --n N --threads T --seed S\n\
-                     batched in-process inference over the test set\n\
-           sweep     --tech rfet|finfet --max-channels C --k K\n\
+                     --net NAME --synthetic --k K --bits B --n N --threads T\n\
+                     --seed S   batched in-process inference over the test set\n\
+           sweep     --tech rfet|finfet --net NAME --max-channels C --k K\n\
                      Fig. 13 design space via Engine::estimate\n\
            report    --table 1|2|3                        paper tables\n"
     );
 }
 
-/// Build the lenet5 engine config shared by `serve` and `simulate`.
-fn lenet_config(
+/// Resolve the `--net` flag through the [`NetworkSpec::by_name`] registry.
+fn net_flag(flags: &HashMap<String, String>) -> Result<NetworkSpec> {
+    NetworkSpec::by_name(&flag::<String>(flags, "net", "lenet5".into())?)
+}
+
+/// `serve`/`simulate` ship only the MNIST digits test set today; reject a
+/// network whose input shape cannot consume it up front, instead of
+/// failing every request with a per-image length error.
+fn check_dataset_fits(ds: &Dataset, net: &NetworkSpec) -> Result<()> {
+    let (c, h, w) = net.input;
+    let expect = c * h * w;
+    if ds.images.first().is_some_and(|img| img.len() != expect) {
+        bail!(
+            "the digits test set has {}-pixel images but network {:?} expects {expect} \
+             (input {c}x{h}x{w}); serve/simulate currently ship only the MNIST digits \
+             set — choose a 28x28 topology (lenet5, mnist_strided)",
+            ds.images[0].len(),
+            net.name
+        );
+    }
+    Ok(())
+}
+
+/// Build the engine config shared by `serve` and `simulate`: the network
+/// comes from `--net` (default `lenet5`); weights come from the trained
+/// artifact for that network, or `--synthetic` generates deterministic
+/// stand-in weights (topologies without trained artifacts still exercise
+/// the full datapath — accuracy is then meaningless, throughput is not).
+fn net_config(
     kind: BackendKind,
     artifacts: &Artifacts,
     flags: &HashMap<String, String>,
 ) -> Result<EngineConfig> {
-    let mut cfg = EngineConfig::new(kind, NetworkSpec::lenet5())
+    let net = net_flag(flags)?;
+    let bits: u32 = flag(flags, "bits", 8)?;
+    let mut cfg = EngineConfig::new(kind, net.clone())
         .with_k(flag(flags, "k", 32)?)
-        .with_bits(flag(flags, "bits", 8)?)
+        .with_bits(bits)
         .with_seed(flag(flags, "seed", 7)?)
         .with_threads(flag(flags, "threads", 0)?)
         .with_tech(parse_tech(&flag::<String>(flags, "tech", "rfet".into())?)?)
@@ -150,12 +181,23 @@ fn lenet_config(
             bail!("artifacts missing — run `make artifacts` first");
         }
         cfg.with_hlo_ladder(vec![
-            (1, artifacts.hlo("lenet5", 1)),
-            (8, artifacts.hlo("lenet5", 8)),
-            (32, artifacts.hlo("lenet5", 32)),
+            (1, artifacts.hlo(&net.name, 1)),
+            (8, artifacts.hlo(&net.name, 8)),
+            (32, artifacts.hlo(&net.name, 32)),
         ])
+    } else if flag(flags, "synthetic", false)? {
+        let seed: u32 = flag(flags, "seed", 7)?;
+        cfg.with_quantized(QuantizedWeights::synthetic(&net, bits, seed as u64)?)
     } else {
-        cfg.with_weights_file(artifacts.weights("lenet5", "sc"))
+        let path = artifacts.weights(&net.name, "sc");
+        if !path.exists() {
+            bail!(
+                "no trained weights at {} — run `make artifacts`, or pass \
+                 --synthetic for deterministic stand-in weights",
+                path.display()
+            );
+        }
+        cfg.with_weights_file(path)
     };
     Ok(cfg)
 }
@@ -168,9 +210,10 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         bail!("artifacts missing — run `make artifacts` first");
     }
     let ds = Dataset::load(&artifacts.dataset("digits"))?;
+    check_dataset_fits(&ds, &net_flag(flags)?)?;
     let n = n.min(ds.len());
     let session =
-        Engine::open(lenet_config(kind, &artifacts, flags)?).context("opening engine session")?;
+        Engine::open(net_config(kind, &artifacts, flags)?).context("opening engine session")?;
 
     // The streaming serve path: submit everything (backpressure caps the
     // in-flight set), then drain in submission order.
@@ -213,8 +256,9 @@ fn simulate(flags: &HashMap<String, String>) -> Result<()> {
         bail!("simulate runs the in-process datapaths; use `serve --backend pjrt`");
     }
     let ds = Dataset::load(&artifacts.dataset("digits"))?;
+    check_dataset_fits(&ds, &net_flag(flags)?)?;
     let n = n.min(ds.len());
-    let session = Engine::open(lenet_config(kind, &artifacts, flags)?)?;
+    let session = Engine::open(net_config(kind, &artifacts, flags)?)?;
     let t = Instant::now();
     // One pipelined batch: the plan (gathers, randoms, weight streams) is
     // compiled once at open and the images fan out across cores.
@@ -239,7 +283,7 @@ fn sweep(flags: &HashMap<String, String>) -> Result<()> {
     let max: usize = flag(flags, "max-channels", 32)?;
     let k: usize = flag(flags, "k", 32)?;
     let counts: Vec<usize> = (0..).map(|i| 1 << i).take_while(|&c| c <= max).collect();
-    let net = NetworkSpec::lenet5();
+    let net = net_flag(flags)?;
     println!("{tech} on {}:", net.name);
     println!("ch | area mm² | latency µs | energy µJ | ADP | EDP | EDAP");
     let mut ms = Vec::new();
@@ -364,6 +408,15 @@ mod tests {
         let m = parse_flags(&args(&["--n", "not-a-number"]));
         assert!(flag::<usize>(&m, "n", 7).is_err(), "must not silently fall back");
         assert_eq!(flag::<usize>(&m, "absent", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn net_flag_resolves_through_the_registry() {
+        let m = parse_flags(&args(&["--net", "mnist_strided"]));
+        assert_eq!(net_flag(&m).unwrap().name, "mnist_strided");
+        assert_eq!(net_flag(&parse_flags(&[])).unwrap().name, "lenet5");
+        let bad = parse_flags(&args(&["--net", "alexnet"]));
+        assert!(net_flag(&bad).is_err());
     }
 
     #[test]

@@ -91,6 +91,38 @@ pub fn max_pool(streams: &[Bitstream]) -> Bitstream {
     streams[1..].iter().fold(streams[0].clone(), |acc, s| acc.or(s))
 }
 
+/// Comparison sequence for the counter-based average pooler over `n`
+/// streams: a sawtooth counter over the 2n-value comparison domain —
+/// exactly stratified whenever 2n divides the stream length, deterministic
+/// for any seed phase. (In hardware: a mod-2n up-counter.)
+pub fn avg_select_seq(n: usize, k: usize, seed: u32) -> Vec<u32> {
+    let domain = 2 * n as u32;
+    (0..k as u32).map(|t| t.wrapping_add(seed) % domain).collect()
+}
+
+/// SC average pooling — the counter-based scaled add of SC-DCNN-style
+/// pooling units: the per-cycle population count `c_t` of the pooled
+/// streams (an APC, no multiplier) is re-encoded as
+/// `out_t = (2·c_t > r_t)` with `r` uniform over `0..2n`
+/// ([`avg_select_seq`]). Since `P(r < 2c) = 2c/2n = c/n` exactly, the
+/// output probability is the *mean* of the input probabilities — a scaled
+/// add with no 1/2^m headroom loss, which is why SC accelerators prefer
+/// average pooling where the model allows it.
+///
+/// The inference engine applies the recovered-value equivalent
+/// ([`crate::accel::stage::avg_pool_into`], a plain mean); this behavioral
+/// kernel pins the stream-level hardware semantics.
+pub fn avg_pool_stream(streams: &[Bitstream], r: &[u32]) -> Bitstream {
+    assert!(!streams.is_empty());
+    let len = streams[0].len();
+    assert_eq!(r.len(), len, "select sequence length mismatch");
+    let mut vc = VerticalCounter::new(len, streams.len());
+    for s in streams {
+        vc.add(s);
+    }
+    Bitstream::from_fn(len, |t| 2 * vc.count_at(t) > r[t])
+}
+
 /// Expected bipolar output value of the neuron for pre-activation sum
 /// `pre = Σ aⱼwⱼ` with fan-in `n`, using a *hard* ReLU — the asymptotic
 /// (zero-variance) oracle.
@@ -302,6 +334,35 @@ mod tests {
         let pooled = max_pool(&streams).value_bipolar();
         let want = exps.iter().fold(f64::MIN, |m, &e| m.max(e));
         assert!((pooled - want).abs() < 0.08, "pooled={pooled} want={want}");
+    }
+
+    #[test]
+    fn avg_pool_stream_takes_the_mean() {
+        let bits = 8;
+        let len = 4096;
+        // Four streams of known bipolar values; the pooled stream's value
+        // must be their mean (the SC scaled add).
+        let vals = [-0.6f64, -0.1, 0.3, 0.8];
+        let codes: Vec<u32> = vals.iter().map(|&v| quantize_bipolar(v, bits)).collect();
+        let streams = gen_correlated(&codes, bits, bits, len, 29);
+        let r = avg_select_seq(streams.len(), len, 5);
+        assert!(r.iter().all(|&x| x < 8), "domain is 2n = 8");
+        let pooled = avg_pool_stream(&streams, &r).value_bipolar();
+        let want: f64 = codes.iter().map(|&c| dequantize_bipolar(c, bits)).sum::<f64>() / 4.0;
+        assert!((pooled - want).abs() < 0.05, "pooled={pooled} want={want}");
+    }
+
+    #[test]
+    fn avg_pool_stream_is_exact_on_stratified_constant_counts() {
+        // All-ones and all-zeros streams: count is constant (2 of 4), so a
+        // full sawtooth period recovers exactly p = 1/2.
+        let len = 512; // multiple of 2n = 8
+        let ones = Bitstream::from_fn(len, |_| true);
+        let zeros = Bitstream::from_fn(len, |_| false);
+        let streams = vec![ones.clone(), ones, zeros.clone(), zeros];
+        let r = avg_select_seq(4, len, 0);
+        let pooled = avg_pool_stream(&streams, &r);
+        assert_eq!(pooled.count_ones() as usize, len / 2);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! bit-exactly for the fused SC engine, within a sampling-noise tolerance
 //! for the analytic and XLA backends.
 
-use scnn::accel::layers::{LayerKind, LayerSpec, NetworkSpec};
+use scnn::accel::layers::{Conv2d, LayerKind, LayerSpec, NetworkSpec};
 use scnn::accel::network::{LayerWeights, QuantizedWeights};
 use scnn::engine::{BackendKind, Engine, EngineConfig, Session};
 use scnn::sc::{dequantize_bipolar, quantize_bipolar};
@@ -36,14 +36,42 @@ fn conv_net() -> NetworkSpec {
         name: "parity-conv".into(),
         input: (1, 6, 6),
         layers: vec![
-            LayerSpec {
-                kind: LayerKind::Conv { in_ch: 1, out_ch: 2, kernel: 3, padding: 1 },
-                relu: true,
-            },
-            LayerSpec { kind: LayerKind::MaxPool { size: 2 }, relu: false },
-            LayerSpec { kind: LayerKind::Dense { inputs: 18, outputs: 3 }, relu: false },
+            LayerSpec::active(LayerKind::conv(1, 2, 3, 1)),
+            LayerSpec::linear(LayerKind::MaxPool { size: 2 }),
+            LayerSpec::linear(LayerKind::Dense { inputs: 18, outputs: 3 }),
         ],
     }
+}
+
+/// The extended vocabulary under the session API: strided conv, depthwise
+/// conv, SC scaled-add residual, average pool, global average pool.
+fn extended_net() -> NetworkSpec {
+    NetworkSpec {
+        name: "parity-extended".into(),
+        input: (1, 8, 8),
+        layers: vec![
+            LayerSpec::active(LayerKind::Conv(Conv2d::square(1, 4, 3, 1).with_stride(2, 2))),
+            LayerSpec::active(LayerKind::Conv(Conv2d::square(4, 4, 3, 1).depthwise())),
+            LayerSpec::linear(LayerKind::Add { from: 0 }),
+            LayerSpec::linear(LayerKind::AvgPool { size: 2 }),
+            LayerSpec::linear(LayerKind::GlobalAvgPool),
+            LayerSpec::linear(LayerKind::Dense { inputs: 4, outputs: 3 }),
+        ],
+    }
+}
+
+fn extended_weights(bits: u32, seed: u64) -> QuantizedWeights {
+    let mut w = QuantizedWeights::synthetic(&extended_net(), bits, seed.max(1)).unwrap();
+    for (i, l) in w.layers.iter_mut().enumerate() {
+        l.gamma = 0.4 + 0.1 * i as f64;
+        l.mu = 0.9;
+    }
+    w
+}
+
+fn extended_image(seed: u64) -> Vec<f32> {
+    let mut g = Gen(seed.max(1) ^ 0xEE77);
+    (0..64).map(|_| (g.next() % 1000) as f32 / 1000.0).collect()
 }
 
 fn conv_weights(bits: u32, seed: u64) -> QuantizedWeights {
@@ -90,6 +118,80 @@ fn fused_backend_is_bit_exact_vs_reference_per_bit() {
             assert_eq!(a, b, "k={k} seed={seed}");
         }
     }
+}
+
+#[test]
+fn extended_ops_fused_backend_is_bit_exact_vs_reference() {
+    // Strided conv, depthwise conv, residual add, avg/global pooling: the
+    // fused and per-bit backends lower the same stage IR through the
+    // session API and must agree bit-for-bit.
+    let mk = |kind: BackendKind, k: usize, seed: u32| {
+        open(
+            EngineConfig::new(kind, extended_net())
+                .with_quantized(extended_weights(8, 19))
+                .with_k(k)
+                .with_seed(seed),
+        )
+    };
+    for k in [32usize, 100] {
+        for seed in [2u32, 9] {
+            let fused = mk(BackendKind::StochasticFused, k, seed);
+            let golden = mk(BackendKind::ReferencePerBit, k, seed);
+            let images: Vec<Vec<f32>> = (0..3).map(|i| extended_image(i as u64 + 1)).collect();
+            assert_eq!(
+                fused.infer_batch(&images).unwrap(),
+                golden.infer_batch(&images).unwrap(),
+                "k={k} seed={seed}"
+            );
+        }
+    }
+}
+
+#[test]
+fn extended_ops_expectation_tracks_reference_within_tolerance() {
+    // Logits live in the sp domain of the final dense layer (fan-in 4 ⇒
+    // scale 8); at k=4096 the sampling noise is well under 1.0 mean-abs.
+    let exp = open(
+        EngineConfig::new(BackendKind::Expectation, extended_net())
+            .with_quantized(extended_weights(8, 7)),
+    );
+    let golden = open(
+        EngineConfig::new(BackendKind::ReferencePerBit, extended_net())
+            .with_quantized(extended_weights(8, 7))
+            .with_k(4096)
+            .with_seed(3),
+    );
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for i in 0..3u64 {
+        let img = extended_image(40 + i);
+        let e = exp.infer(img.clone()).unwrap();
+        let r = golden.infer(img).unwrap();
+        total += e.iter().zip(&r).map(|(a, b)| (a - b).abs() as f64).sum::<f64>();
+        count += e.len();
+    }
+    let mean_abs = total / count as f64;
+    assert!(mean_abs < 1.0, "mean |expectation - reference| = {mean_abs}");
+}
+
+#[test]
+fn invalid_topologies_error_at_open_instead_of_panicking() {
+    // The maxpool silent-truncation bug, surfaced through Engine::open.
+    let bad = NetworkSpec {
+        name: "bad-pool".into(),
+        input: (1, 7, 7),
+        layers: vec![
+            LayerSpec::active(LayerKind::conv(1, 2, 1, 0)),
+            LayerSpec::linear(LayerKind::MaxPool { size: 2 }),
+        ],
+    };
+    let cfg = EngineConfig::new(BackendKind::Expectation, bad)
+        .with_quantized(conv_weights(8, 1));
+    let err = match Engine::open(cfg) {
+        Ok(_) => panic!("opening a truncating-pool network must fail"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("does not divide"), "{err}");
 }
 
 #[test]

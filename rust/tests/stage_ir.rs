@@ -1,0 +1,271 @@
+//! Property tests for the stage IR (proptest-lite convention of
+//! `tests/prop.rs`: seeded pseudo-random case generators, deterministic
+//! replay via the printed seed).
+//!
+//! * shape inference accepts every randomly *grown* stack (layers are only
+//!   appended when they fit) and the compiled stage chain is internally
+//!   consistent (shapes chain, MAC totals match, weight layers number the
+//!   compute stages);
+//! * randomly *corrupted* stacks — channel mismatches, non-divisible
+//!   pools, dense size drift, dangling or misshapen residuals, activation
+//!   on pool layers — are rejected with an error, never a panic;
+//! * on small random valid stacks, the fused stochastic engine and the
+//!   per-bit reference (which lower the same descriptors) agree
+//!   bit-for-bit.
+
+use scnn::accel::layers::{Conv2d, LayerKind, LayerSpec, NetworkSpec, Shape};
+use scnn::accel::network::{reference, ForwardMode, ForwardPlan, QuantizedWeights};
+use scnn::accel::stage::total_macs;
+
+struct Gen(u64);
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen(seed.max(1))
+    }
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next() % (hi - lo)
+    }
+    fn chance(&mut self, percent: u64) -> bool {
+        self.next() % 100 < percent
+    }
+}
+
+/// Grow a random valid network: every appended layer is checked to fit the
+/// running shape, so the result must pass validation by construction.
+fn grow_random_net(g: &mut Gen, max_layers: usize) -> NetworkSpec {
+    let mut shape: Shape = (
+        g.range(1, 4) as usize,
+        2 * g.range(2, 7) as usize,
+        2 * g.range(2, 7) as usize,
+    );
+    let input = shape;
+    let mut layers: Vec<LayerSpec> = Vec::new();
+    let mut out_shapes: Vec<Shape> = Vec::new();
+    fn push(layers: &mut Vec<LayerSpec>, out_shapes: &mut Vec<Shape>, spec: LayerSpec, s: Shape) {
+        layers.push(spec);
+        out_shapes.push(s);
+    }
+    for _ in 0..max_layers {
+        let (c, h, w) = shape;
+        let pick = g.range(0, 100);
+        if pick < 35 && h >= 2 && w >= 2 {
+            // Conv: random kernel/stride/padding that fits.
+            let kh = g.range(1, (h.min(3) + 1) as u64) as usize;
+            let kw = g.range(1, (w.min(3) + 1) as u64) as usize;
+            let stride = if g.chance(40) { 2 } else { 1 };
+            let padding = if g.chance(50) { 1 } else { 0 };
+            if h + 2 * padding < kh || w + 2 * padding < kw {
+                continue;
+            }
+            let depthwise = g.chance(25);
+            let out_ch = if depthwise { c } else { g.range(1, 5) as usize };
+            let conv = Conv2d {
+                in_ch: c,
+                out_ch,
+                kernel: (kh, kw),
+                stride: (stride, stride),
+                padding,
+                depthwise,
+            };
+            let spec = LayerSpec { kind: LayerKind::Conv(conv), relu: g.chance(60) };
+            let s = spec.try_output_shape(shape).unwrap();
+            if s.1 == 0 || s.2 == 0 {
+                continue;
+            }
+            push(&mut layers, &mut out_shapes, spec, s);
+            shape = s;
+        } else if pick < 55 && h % 2 == 0 && w % 2 == 0 && h >= 2 && w >= 2 {
+            let kind = if g.chance(50) {
+                LayerKind::MaxPool { size: 2 }
+            } else {
+                LayerKind::AvgPool { size: 2 }
+            };
+            let spec = LayerSpec::linear(kind);
+            let s = spec.try_output_shape(shape).unwrap();
+            push(&mut layers, &mut out_shapes, spec, s);
+            shape = s;
+        } else if pick < 65 && (h > 1 || w > 1) && g.chance(30) {
+            let spec = LayerSpec::linear(LayerKind::GlobalAvgPool);
+            let s = spec.try_output_shape(shape).unwrap();
+            push(&mut layers, &mut out_shapes, spec, s);
+            shape = s;
+        } else if pick < 80 {
+            // Residual: merge any earlier layer whose output matches.
+            if let Some(from) = (0..out_shapes.len()).rev().find(|&i| out_shapes[i] == shape) {
+                // Do not self-merge the immediately preceding identity
+                // chain forever; one add per site is plenty.
+                if !matches!(layers.last().map(|l| &l.kind), Some(LayerKind::Add { .. })) {
+                    let spec = LayerSpec::linear(LayerKind::Add { from });
+                    push(&mut layers, &mut out_shapes, spec, shape);
+                }
+            }
+        }
+    }
+    // Always close with a dense classifier (guarantees a compute layer).
+    let (c, h, w) = shape;
+    let spec = LayerSpec::linear(LayerKind::Dense {
+        inputs: c * h * w,
+        outputs: g.range(2, 6) as usize,
+    });
+    let s = spec.try_output_shape(shape).unwrap();
+    layers.push(spec);
+    out_shapes.push(s);
+    NetworkSpec { name: "grown".into(), input, layers }
+}
+
+/// Run a property over `n` seeded cases; failures print the case seed.
+fn prop(name: &str, n: usize, mut f: impl FnMut(&mut Gen)) {
+    for case in 0..n {
+        let seed = 0x57A6_E000 + case as u64;
+        let mut g = Gen::new(seed);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+        if let Err(e) = r {
+            panic!("property {name} failed at case seed {seed:#x}: {e:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_grown_stacks_validate_and_stage_chain_is_consistent() {
+    prop("grown-valid", 200, |g| {
+        let net = grow_random_net(g, g.range(1, 8) as usize);
+        let shapes = net.validate().unwrap_or_else(|e| panic!("{}: {e:#}", net.name));
+        assert_eq!(shapes.len(), net.layers.len());
+        let stages = net.stages().unwrap();
+        assert_eq!(stages.len(), net.layers.len());
+        // Shapes chain stage to stage and match validate()'s inference.
+        for (i, st) in stages.iter().enumerate() {
+            assert_eq!(st.in_shape, shapes[i]);
+            if i + 1 < stages.len() {
+                assert_eq!(st.out_shape, stages[i + 1].in_shape);
+            }
+        }
+        assert_eq!(stages.last().unwrap().out_shape, net.output_shape());
+        // MAC totals agree between the IR and the layer walk.
+        assert_eq!(total_macs(&stages), net.total_macs());
+        // Weight layers number the compute stages contiguously.
+        let wls: Vec<usize> = stages.iter().filter_map(|s| s.weight_layer).collect();
+        assert_eq!(wls, (0..wls.len()).collect::<Vec<_>>());
+        // Exactly one final compute stage, and it is the last compute one.
+        let finals: Vec<usize> =
+            stages.iter().filter(|s| s.final_compute).map(|s| s.index).collect();
+        assert_eq!(finals.len(), 1);
+        assert_eq!(
+            finals[0],
+            stages.iter().filter(|s| s.is_compute()).map(|s| s.index).max().unwrap()
+        );
+        // Residual targets are marked for saving.
+        for st in &stages {
+            if let scnn::accel::stage::StageOp::Add { from } = st.op {
+                assert!(stages[from].save_output, "layer {from} feeds an add");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_corrupted_stacks_are_rejected_without_panicking() {
+    prop("corrupted", 200, |g| {
+        let net = grow_random_net(g, g.range(2, 8) as usize);
+        let mut bad = net.clone();
+        let corruption = g.range(0, 5);
+        let applied = match corruption {
+            0 => {
+                // Channel drift on the first conv.
+                bad.layers.iter_mut().any(|l| {
+                    if let LayerKind::Conv(c) = &mut l.kind {
+                        c.in_ch += 1;
+                        true
+                    } else {
+                        false
+                    }
+                })
+            }
+            1 => {
+                // Pool window that cannot divide the input.
+                let shapes = net.validate().unwrap();
+                let mut hit = false;
+                for (i, l) in bad.layers.iter_mut().enumerate() {
+                    if let LayerKind::MaxPool { size } | LayerKind::AvgPool { size } = &mut l.kind
+                    {
+                        let (_, h, _) = shapes[i];
+                        if let Some(s) = (2..=h + 1).find(|s| h % s != 0) {
+                            *size = s;
+                            hit = true;
+                            break;
+                        }
+                    }
+                }
+                hit
+            }
+            2 => {
+                // Dense fan-in drift (the closing classifier always exists).
+                if let Some(LayerKind::Dense { inputs, .. }) =
+                    bad.layers.last_mut().map(|l| &mut l.kind)
+                {
+                    *inputs += 1;
+                    true
+                } else {
+                    false
+                }
+            }
+            3 => {
+                // Residual pointing at itself (not an earlier layer).
+                let mut hit = false;
+                for (i, l) in bad.layers.iter_mut().enumerate() {
+                    if let LayerKind::Add { from } = &mut l.kind {
+                        *from = i;
+                        hit = true;
+                        break;
+                    }
+                }
+                hit
+            }
+            _ => {
+                // Activation on a non-compute layer.
+                bad.layers.iter_mut().any(|l| {
+                    if l.is_compute() {
+                        false
+                    } else {
+                        l.relu = true;
+                        true
+                    }
+                })
+            }
+        };
+        if !applied {
+            return; // this stack has no site for the chosen corruption
+        }
+        assert!(bad.validate().is_err(), "corruption {corruption} must be rejected");
+        assert!(bad.stages().is_err());
+        // And the plan compiler surfaces it as an error too (weights for
+        // the *valid* twin do not matter — validation trips first).
+        let w = QuantizedWeights::synthetic(&net, 6, 1).unwrap();
+        assert!(ForwardPlan::compile(&bad, &w, ForwardMode::Expectation).is_err());
+    });
+}
+
+#[test]
+fn prop_fused_and_reference_agree_on_random_small_stacks() {
+    // The expensive cross-backend property: grown nets are valid by
+    // construction and small (≤ 3 grown layers + the dense tail); keep the
+    // case count modest — the per-bit reference is deliberately slow.
+    prop("fused-vs-reference", 12, |g| {
+        let net = grow_random_net(g, 3);
+        let weights = QuantizedWeights::synthetic(&net, 8, g.next()).unwrap();
+        let in_len = net.input.0 * net.input.1 * net.input.2;
+        let input: Vec<f64> = (0..in_len).map(|i| ((i % 7) as f64) / 7.0).collect();
+        let k = [32usize, 96][g.range(0, 2) as usize];
+        let seed = g.range(1, 1000) as u32;
+        let fused = ForwardPlan::once(&net, &weights, &input, ForwardMode::Stochastic { k, seed });
+        let golden = reference::forward_stochastic(&net, &weights, &input, k, seed);
+        assert_eq!(fused, golden, "k={k} seed={seed}");
+    });
+}
