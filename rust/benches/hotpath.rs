@@ -10,9 +10,11 @@
 //! machine-readable copy is written to `BENCH_hotpath.json` next to the
 //! human output, the per-backend `engine::Session` batch-throughput
 //! matrix (stochastic-fused / reference-per-bit / expectation / xla at
-//! k=256 and k=1024) goes to `BENCH_engine.json`, and the per-layer stage
+//! k=256 and k=1024) goes to `BENCH_engine.json`, the per-layer stage
 //! breakdown (software median vs modeled hardware delay, per compiled
-//! stage of `lenet5` and `mnist_strided`) goes to `BENCH_layers.json`.
+//! stage of `lenet5` and `mnist_strided`) goes to `BENCH_layers.json`,
+//! and the `EnginePool` shard-scaling curve (img/s and p50/p99 vs shard
+//! count, fused backend at k=256) goes to `BENCH_pool.json`.
 //! Run with `cargo bench --bench hotpath`.
 
 use scnn::accel::layers::NetworkSpec;
@@ -378,9 +380,76 @@ fn main() {
         eprintln!("artifacts missing — PJRT hot-path benches skipped");
     }
 
+    // ---- EnginePool scaling (BENCH_pool.json) ----
+    // img/s and latency percentiles vs shard count for the fused backend
+    // at k=256: each point opens `shards` sessions over ONE shared
+    // compiled plan (engine::backend::shared_plan), splits the cores
+    // between the shards, and is driven by 2×shards closed-loop client
+    // threads through the pool router (in-flight concurrency capped at
+    // the client count — not open-loop tail latency).
+    let mut pjson = JsonReport::new();
+    let pool_imgs: Vec<Vec<f32>> = (0..24)
+        .map(|s| (0..28 * 28).map(|i| (((i + s * 29) % 17) as f32) / 17.0).collect())
+        .collect();
+    for shards in [1usize, 2, 4] {
+        let per_shard_threads = (par::max_threads() / shards).max(1);
+        let clients = 2 * shards;
+        // max_batch == the ~2 concurrent clients each shard sees, so every
+        // pool point fires its batches the moment its clients have queued —
+        // no point idles in the linger window more than another (the same
+        // no-linger-idle rule mk_cfg's engine benches follow).
+        let cfg = mk_cfg(BackendKind::StochasticFused, 256, clients / shards)
+            .with_threads(per_shard_threads);
+        let pool = scnn::engine::EnginePool::open(scnn::engine::PoolConfig::replicated(
+            cfg, shards,
+        ))
+        .unwrap();
+        let r = bench(
+            &format!("pool_infer(stochastic-fused,k=256,{shards}shards)"),
+            1,
+            2,
+            || {
+                let cursor = std::sync::atomic::AtomicUsize::new(0);
+                std::thread::scope(|s| {
+                    for _ in 0..clients {
+                        s.spawn(|| loop {
+                            let i =
+                                cursor.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            if i >= pool_imgs.len() {
+                                break;
+                            }
+                            std::hint::black_box(
+                                pool.infer(pool_imgs[i].clone()).unwrap(),
+                            );
+                        });
+                    }
+                });
+            },
+        );
+        let img_s = r.ops_per_sec(pool_imgs.len() as f64);
+        let m = pool.metrics();
+        println!(
+            "  -> {img_s:.1} img/s over {shards} shard(s), p50 {} µs  p99 {} µs",
+            m.latency_percentile_us(50.0),
+            m.latency_percentile_us(99.0)
+        );
+        pjson.add(
+            &r,
+            &[
+                ("shards", shards as f64),
+                ("img_per_s", img_s),
+                ("p50_us", m.latency_percentile_us(50.0) as f64),
+                ("p99_us", m.latency_percentile_us(99.0) as f64),
+                ("threads_per_shard", per_shard_threads as f64),
+                ("k", 256.0),
+            ],
+        );
+    }
+
     // Gate-level simulator throughput (the Genus substitute).
     let lib = scnn::tech::CellLibrary::finfet10();
-    let nl = scnn::sc::apc::build_netlist(25, 32, scnn::sc::apc::FaStyle::CmosCell);
+    let nl = scnn::sc::apc::build_netlist(25, 32, scnn::sc::apc::FaStyle::CmosCell)
+        .expect("25-input k=32 APC is well-formed");
     let r = bench("apc25_power_sim(2048 cycles)", 1, 5, || {
         let mut s = XorShift64::new(1);
         std::hint::black_box(scnn::sim::estimate_power(&nl, &lib, 2048, |_, pins| {
@@ -417,5 +486,14 @@ fn main() {
             std::fs::canonicalize(lpath).unwrap_or_else(|_| lpath.to_path_buf()).display()
         ),
         Err(e) => eprintln!("could not write BENCH_layers.json: {e}"),
+    }
+    let ppath = std::path::Path::new("BENCH_pool.json");
+    match pjson.write(ppath) {
+        Ok(()) => println!(
+            "wrote {} pool-scaling records to {}",
+            pjson.len(),
+            std::fs::canonicalize(ppath).unwrap_or_else(|_| ppath.to_path_buf()).display()
+        ),
+        Err(e) => eprintln!("could not write BENCH_pool.json: {e}"),
     }
 }

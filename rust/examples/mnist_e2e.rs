@@ -59,7 +59,7 @@ fn main() -> Result<()> {
         xla.submit(img.clone())?;
     }
     let mut preds = Vec::with_capacity(ds.len());
-    for (_, res) in xla.drain() {
+    for (_, res) in xla.drain()? {
         preds.push(classify(&res?));
     }
     let wall = t.elapsed();
@@ -103,7 +103,7 @@ fn main() -> Result<()> {
         sc.submit(img.clone())?;
     }
     let mut sc_preds = Vec::with_capacity(n_serve);
-    for (_, res) in sc.drain() {
+    for (_, res) in sc.drain()? {
         sc_preds.push(classify(&res?));
     }
     let sc_wall = t.elapsed();

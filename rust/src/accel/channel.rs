@@ -119,13 +119,15 @@ pub fn characterize_pcc(lib: &CellLibrary) -> sim::BlockReport {
 
 /// Characterize the 25-input APC for `tech` (Table I, APC columns).
 pub fn characterize_apc(lib: &CellLibrary) -> sim::BlockReport {
-    let nl = apc::build_netlist(MAC_WIDTH, BITSTREAM_LEN, fa_style_for(lib.kind));
+    let nl = apc::build_netlist(MAC_WIDTH, BITSTREAM_LEN, fa_style_for(lib.kind))
+        .expect("MAC_WIDTH and BITSTREAM_LEN are nonzero paper constants");
     sim::characterize(&nl, lib, 2048, random_stimulus(0xAAC))
 }
 
 /// Characterize the configurable adder tree (16 operands × 10 bits).
 pub fn characterize_adder_tree(lib: &CellLibrary) -> sim::BlockReport {
-    let nl = adder_tree::build_netlist(MACS_PER_CHANNEL, 10, fa_style_for(lib.kind));
+    let nl = adder_tree::build_netlist(MACS_PER_CHANNEL, 10, fa_style_for(lib.kind))
+        .expect("MACS_PER_CHANNEL is a nonzero paper constant");
     sim::characterize(&nl, lib, 512, random_stimulus(0x7ee))
 }
 
@@ -147,7 +149,8 @@ fn mac_stage_path_ps(lib: &CellLibrary, pcc_delay: f64) -> f64 {
     // Counter-only delay: build the 25-input counter without accumulator.
     let mut nl = Netlist::new("counter25");
     let ins = nl.inputs(MAC_WIDTH);
-    let outs = apc::build_parallel_counter(&mut nl, fa_style_for(lib.kind), &ins);
+    let outs = apc::build_parallel_counter(&mut nl, fa_style_for(lib.kind), &ins)
+        .expect("MAC_WIDTH is a nonzero paper constant");
     for o in outs {
         nl.mark_output(o);
     }

@@ -1,21 +1,32 @@
-//! L3 serving coordinator — a thin façade over [`crate::engine`].
+//! L3 serving coordinator — a thin façade over [`crate::engine`]'s
+//! session pool.
 //!
 //! Historically this module owned the request router, dynamic batcher, and
 //! per-backend worker. That machinery is now the engine subsystem: a
 //! [`Coordinator`] simply translates its [`CoordinatorConfig`] into a typed
-//! [`EngineConfig`], opens one [`Session`], and delegates — every backend
-//! (PJRT ladder or the in-process SC datapaths) batches through the same
-//! engine worker and reports through the same [`SessionMetrics`].
+//! [`PoolConfig`] (N replicated shard sessions behind one router), opens an
+//! [`EnginePool`], and delegates — every backend (PJRT ladder or the
+//! in-process SC datapaths) batches through the same engine workers and
+//! reports through the same [`PoolMetrics`].
 //!
 //! ```text
-//! clients ──infer()──▶ engine::Session ──batcher──▶ Box<dyn Backend>
-//!                                     └─▶ per-session metrics
+//! clients ──infer()──▶ EnginePool router ──▶ shard Session ──▶ Backend
+//!                          │ admission control  └─▶ per-session metrics
+//!                          └─▶ reroute on shard death
 //! ```
 //!
 //! Kept as the serving façade (start / infer / infer_all / stats) because
 //! the CLI and the e2e example speak in datasets and predicted classes;
-//! new code that wants streaming submission, backpressure, or the full
-//! metrics snapshot should open a [`Session`] directly.
+//! new code that wants streaming submission, keyed routing, or the full
+//! metrics snapshot should open an [`EnginePool`] (or a single
+//! [`Session`]) directly.
+//!
+//! The request path is panic-free: a failed request, a dead shard worker,
+//! and a poisoned client-side lock all surface as typed
+//! [`EngineError`]-based results ([`Coordinator::infer_all_detailed`]
+//! reports them per item).
+
+#![deny(clippy::unwrap_used)]
 
 pub mod stats;
 
@@ -23,13 +34,17 @@ pub use stats::ServeStats;
 
 use crate::accel::layers::{LayerKind, LayerSpec, NetworkSpec};
 use crate::accel::network::{ForwardMode, QuantizedWeights};
-use crate::engine::{BackendKind, BatchPolicy, Engine, EngineConfig, Session, SessionMetrics};
+use crate::engine::{
+    BackendKind, BatchPolicy, EngineConfig, EngineError, EnginePool, PoolConfig, PoolMetrics,
+    Session,
+};
 use anyhow::{anyhow, bail, Result};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
-/// What executes batches on the engine worker thread.
+/// What executes batches on the engine worker thread(s).
 #[derive(Debug, Clone)]
 pub enum ServeBackend {
     /// PJRT executable ladder as (batch_size, path); must include batch
@@ -65,6 +80,10 @@ pub struct CoordinatorConfig {
     pub classes: usize,
     /// How long the batcher lingers for more requests.
     pub linger: Duration,
+    /// Session shards behind the front door (1 = the classic single
+    /// session; clamped to ≥ 1). Homogeneous shards share one compiled
+    /// plan through the engine's artifact cache.
+    pub shards: usize,
 }
 
 impl CoordinatorConfig {
@@ -78,7 +97,8 @@ impl CoordinatorConfig {
         }
     }
 
-    /// Lower this serving configuration into a typed [`EngineConfig`].
+    /// Lower this serving configuration into a typed [`EngineConfig`]
+    /// (one shard's worth).
     pub fn to_engine_config(&self) -> Result<EngineConfig> {
         let batch = BatchPolicy {
             max_batch: self.batch_max(),
@@ -125,87 +145,153 @@ impl CoordinatorConfig {
             }
         }
     }
+
+    /// Lower into the pool configuration [`Coordinator::start`] opens:
+    /// `shards` replicas of [`CoordinatorConfig::to_engine_config`].
+    pub fn to_pool_config(&self) -> Result<PoolConfig> {
+        Ok(PoolConfig::replicated(self.to_engine_config()?, self.shards.max(1)))
+    }
 }
 
-/// Handle to a running coordinator: one engine session plus the
+/// Handle to a running coordinator: one engine pool plus the
 /// dataset-level client fan used by the CLI and the e2e example.
 pub struct Coordinator {
-    session: Session,
+    pool: EnginePool,
 }
 
 impl Coordinator {
-    /// Open the engine session (the worker thread loads and compiles the
-    /// executables / forward plan) and validate the configured shapes.
+    /// Open the engine pool (each shard's worker thread loads and compiles
+    /// the executables / forward plan — homogeneous shards share one plan)
+    /// and validate the configured shapes.
     pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
-        let session = Engine::open(cfg.to_engine_config()?)?;
-        if session.in_len() != cfg.image_len {
+        let pool = EnginePool::open(cfg.to_pool_config()?)?;
+        if pool.in_len() != cfg.image_len {
             bail!(
                 "backend expects {} inputs, config says {}",
-                session.in_len(),
+                pool.in_len(),
                 cfg.image_len
             );
         }
-        if session.out_len() != cfg.classes {
+        if pool.out_len() != cfg.classes {
             bail!(
                 "backend emits {} classes, config says {}",
-                session.out_len(),
+                pool.out_len(),
                 cfg.classes
             );
         }
-        Ok(Coordinator { session })
+        Ok(Coordinator { pool })
     }
 
-    /// The underlying engine session (streaming submit/drain, metrics).
+    /// The underlying engine pool (streaming submit/drain, keyed routing,
+    /// shard introspection, metrics).
+    pub fn pool(&self) -> &EnginePool {
+        &self.pool
+    }
+
+    /// The first shard's engine session (kept for callers that want the
+    /// single-session API; prefer [`Coordinator::pool`]).
     pub fn session(&self) -> &Session {
-        &self.session
+        // A pool always has at least one shard (PoolConfig::validate).
+        self.pool.shard_session(0).expect("pool has >= 1 shard")
     }
 
     /// Classify one image (blocking). Returns the logits.
     pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
-        self.session.infer(image)
+        Ok(self.pool.infer(image)?)
     }
 
-    /// Classify a whole set through the batcher from `threads` concurrent
-    /// clients; returns predicted classes in input order.
+    /// Classify a whole set through the pool from `threads` concurrent
+    /// clients; returns predicted classes in input order. Any failed item
+    /// turns the whole call into a typed error naming the item — use
+    /// [`Coordinator::infer_all_detailed`] to keep the partial results.
     pub fn infer_all(&self, images: &[Vec<f32>], threads: usize) -> Result<Vec<usize>> {
+        let detailed = self.infer_all_detailed(images, threads)?;
+        detailed
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| r.map_err(|e| anyhow!("request {i} failed: {e}")))
+            .collect()
+    }
+
+    /// Classify a whole set through the pool from `threads` concurrent
+    /// clients, reporting a typed per-item result: one failed or shed
+    /// request no longer poisons (or panics) the rest of the batch. The
+    /// outer error covers batch-level failures only — a poisoned results
+    /// lock ([`EngineError::LockPoisoned`]) or a panicked client thread.
+    #[allow(clippy::type_complexity)]
+    pub fn infer_all_detailed(
+        &self,
+        images: &[Vec<f32>],
+        threads: usize,
+    ) -> Result<Vec<Result<usize, EngineError>>, EngineError> {
         let n = images.len();
-        let results: Mutex<Vec<Option<usize>>> = Mutex::new(vec![None; n]);
-        let next = std::sync::atomic::AtomicUsize::new(0);
-        std::thread::scope(|s| -> Result<()> {
+        let results: Mutex<Vec<Option<Result<usize, EngineError>>>> = {
+            let mut slots = Vec::with_capacity(n);
+            slots.resize_with(n, || None);
+            Mutex::new(slots)
+        };
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|s| -> Result<(), EngineError> {
             let mut handles = Vec::new();
             for _ in 0..threads.max(1) {
-                handles.push(s.spawn(|| -> Result<()> {
+                handles.push(s.spawn(|| -> Result<(), EngineError> {
                     loop {
-                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= n {
                             return Ok(());
                         }
-                        let logits = self.session.infer(images[i].clone())?;
-                        results.lock().unwrap()[i] = Some(crate::engine::classify(&logits));
+                        let res = self
+                            .pool
+                            .infer(images[i].clone())
+                            .map(|logits| crate::engine::classify(&logits));
+                        let mut slots = results
+                            .lock()
+                            .map_err(|_| EngineError::LockPoisoned("infer_all results"))?;
+                        slots[i] = Some(res);
                     }
                 }));
             }
             for h in handles {
-                h.join().map_err(|_| anyhow!("client thread panicked"))??;
+                match h.join() {
+                    Ok(r) => r?,
+                    Err(_) => {
+                        return Err(EngineError::Request(
+                            "infer_all client thread panicked".into(),
+                        ))
+                    }
+                }
             }
             Ok(())
         })?;
-        Ok(results.into_inner().unwrap().into_iter().map(|p| p.unwrap()).collect())
+        let slots = results
+            .into_inner()
+            .map_err(|_| EngineError::LockPoisoned("infer_all results"))?;
+        Ok(slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, slot)| {
+                slot.unwrap_or_else(|| {
+                    Err(EngineError::Request(format!("request {i} was never served")))
+                })
+            })
+            .collect())
     }
 
-    /// Snapshot of serving statistics (exact latencies and batch sizes).
+    /// Snapshot of serving statistics, merged over all shards (exact
+    /// latencies and batch sizes).
     pub fn stats(&self) -> ServeStats {
-        self.session.metrics().serve
+        self.pool.metrics().serve
     }
 
-    /// Full per-session metrics snapshot (histogram, throughput, modeled
-    /// hardware estimate).
-    pub fn metrics(&self) -> SessionMetrics {
-        self.session.metrics()
+    /// Full pool metrics snapshot (merged histogram, per-shard throughput,
+    /// shed/reroute counters, scaled modeled hardware estimate).
+    pub fn metrics(&self) -> PoolMetrics {
+        self.pool.metrics()
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::accel::network::{ForwardPlan, LayerWeights};
@@ -261,6 +347,7 @@ ENTRY main {{
                 image_dims: (1, 2, 2),
                 classes: 10,
                 linger: Duration::from_millis(5),
+                shards: 1,
             },
             p1,
             pb,
@@ -295,10 +382,12 @@ ENTRY main {{
             "concurrent load should produce real batches (mean {})",
             st.mean_batch()
         );
-        // The façade and the session report the same numbers.
+        // The façade and the pool report the same numbers.
         let m = coord.metrics();
         assert_eq!(m.requests, 32);
         assert_eq!(m.backend, "xla");
+        assert_eq!(m.shards, 1);
+        assert_eq!(m.healthy, 1);
         assert!(m.estimate.is_none(), "the PJRT path models no SC hardware");
         drop(coord);
         std::fs::remove_file(p1).ok();
@@ -315,6 +404,7 @@ ENTRY main {{
             image_dims: (1, 2, 2),
             classes: 10,
             linger: Duration::from_millis(1),
+            shards: 2,
         };
         assert!(Coordinator::start(cfg).is_err());
     }
@@ -358,6 +448,7 @@ ENTRY main {{
             image_dims: (1, 4, 4),
             classes: 3,
             linger: Duration::from_millis(5),
+            shards: 1,
         }
     }
 
@@ -407,6 +498,64 @@ ENTRY main {{
     }
 
     #[test]
+    fn sharded_coordinator_matches_single_shard_bit_exact() {
+        let mode = ForwardMode::Stochastic { k: 64, seed: 9 };
+        let mut sharded_cfg = sc_cfg(mode, 8);
+        sharded_cfg.shards = 3;
+        let sharded = Coordinator::start(sharded_cfg).unwrap();
+        assert_eq!(sharded.pool().shards(), 3);
+        let single = Coordinator::start(sc_cfg(mode, 8)).unwrap();
+        let images: Vec<Vec<f32>> =
+            (0..12).map(|i| (0..16).map(|j| ((i * 3 + j) % 10) as f32 / 10.0).collect()).collect();
+        let a = sharded.infer_all(&images, 6).unwrap();
+        let b = single.infer_all(&images, 2).unwrap();
+        assert_eq!(a, b, "cross-shard results are bit-identical");
+        let m = sharded.metrics();
+        assert_eq!(m.requests, 12);
+        assert_eq!(m.shards, 3);
+    }
+
+    #[test]
+    fn infer_all_propagates_per_item_failures_typed() {
+        let coord = Coordinator::start(sc_cfg(ForwardMode::Expectation, 4)).unwrap();
+        let mut images: Vec<Vec<f32>> = (0..6).map(|i| vec![i as f32 / 6.0; 16]).collect();
+        images[3] = vec![0.0; 5]; // failure injection: malformed request
+        let detailed = coord.infer_all_detailed(&images, 3).unwrap();
+        assert_eq!(detailed.len(), 6);
+        for (i, r) in detailed.iter().enumerate() {
+            if i == 3 {
+                assert!(
+                    matches!(r, Err(EngineError::Request(_))),
+                    "item 3 carries the typed backend rejection, got {r:?}"
+                );
+            } else {
+                assert!(r.is_ok(), "item {i} unaffected by item 3's failure: {r:?}");
+            }
+        }
+        // The aggregate wrapper reports the same failure as a typed error
+        // naming the item — the old code panicked here (`p.unwrap()`).
+        let err = coord.infer_all(&images, 3).unwrap_err().to_string();
+        assert!(err.contains("request 3"), "{err}");
+    }
+
+    #[test]
+    fn infer_all_survives_an_injected_shard_death() {
+        let mut cfg = sc_cfg(ForwardMode::Stochastic { k: 32, seed: 5 }, 8);
+        cfg.shards = 2;
+        let coord = Coordinator::start(cfg).unwrap();
+        // Failure injection: kill shard 0 out from under the router.
+        coord.pool().shard_session(0).unwrap().close();
+        let images: Vec<Vec<f32>> = (0..10)
+            .map(|i| (0..16).map(|j| ((i + j) % 7) as f32 / 7.0).collect())
+            .collect();
+        let preds = coord.infer_all(&images, 4).unwrap();
+        assert_eq!(preds.len(), 10, "the surviving shard serves everything");
+        let m = coord.metrics();
+        assert_eq!(m.healthy, 1, "the dead shard is reported unhealthy");
+        assert!(m.rerouted >= 1, "traffic was rerouted away from the dead shard");
+    }
+
+    #[test]
     fn stochastic_backend_validates_shapes() {
         // classes mismatch caught at startup.
         let mut cfg = sc_cfg(ForwardMode::Expectation, 4);
@@ -426,6 +575,11 @@ ENTRY main {{
         assert_eq!(ecfg.seed, 9);
         assert_eq!(ecfg.batch.max_batch, 16);
         assert_eq!(ecfg.batch.linger, Duration::from_millis(5));
+        let mut sharded = cfg.clone();
+        sharded.shards = 4;
+        let pcfg = sharded.to_pool_config().unwrap();
+        assert_eq!(pcfg.shards.len(), 4);
+        pcfg.validate().unwrap();
         let (pjrt, p1, pb) = test_cfg(4);
         let ecfg = pjrt.to_engine_config().unwrap();
         assert_eq!(ecfg.backend, BackendKind::Xla);

@@ -13,7 +13,10 @@ use crate::accel::layers::NetworkSpec;
 use crate::accel::network::{reference, ForwardPlan, QuantizedWeights, Scratch};
 use crate::engine::config::{BackendKind, EngineConfig};
 use crate::runtime;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
 
 /// A datapath that executes validated batches. Inputs arrive as flattened
 /// images in [0, 1] (the serving dtype); implementations convert to their
@@ -46,10 +49,66 @@ pub(crate) fn build(cfg: &EngineConfig) -> Result<Box<dyn Backend>> {
     })
 }
 
-/// Shared executor for the `ForwardPlan`-based backends: one compiled plan,
-/// one reusable scratch arena, and the session's thread cap.
+/// Process-wide compiled-plan cache keyed by
+/// [`EngineConfig::artifact_fingerprint`]. Entries are weak: a plan lives
+/// exactly as long as some session holds it, so ephemeral sessions (tests,
+/// sweeps) do not accumulate dead plans.
+static PLAN_CACHE: OnceLock<Mutex<HashMap<u128, Weak<ForwardPlan>>>> = OnceLock::new();
+/// Total plan compiles this process has performed (cache observability).
+static PLAN_COMPILES: AtomicUsize = AtomicUsize::new(0);
+
+/// Resolve the compiled [`ForwardPlan`] for a plan-lowerable configuration
+/// through the process-wide shared-artifact cache: pool shards (or any
+/// sessions) with identical compiled-artifact inputs — backend kind, the
+/// lowered forward mode, precision, topology, and weights — share **one**
+/// plan instead of recompiling per shard. `ForwardPlan`'s run methods take
+/// `&self` and every stage is `Send + Sync`, so one plan serves any number
+/// of worker threads; only the scratch arenas stay per-session. XLA
+/// executables are *not* cached here: PJRT handles are thread-affine by
+/// design (see [`crate::runtime`]), so each session loads its own ladder.
+pub fn shared_plan(cfg: &EngineConfig) -> Result<Arc<ForwardPlan>> {
+    let mode = cfg
+        .backend
+        .forward_mode(cfg.k, cfg.seed)
+        .ok_or_else(|| anyhow!("backend {} does not lower to a forward plan", cfg.backend))?;
+    let weights = cfg.resolve_weights()?;
+    let key = cfg.artifact_fingerprint(&weights);
+    let cache = PLAN_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(plan) =
+        crate::engine::lock_recover(cache).get(&key).and_then(Weak::upgrade)
+    {
+        return Ok(plan);
+    }
+    // Compile OUTSIDE the cache lock so distinct artifacts compile
+    // concurrently and cache hits never stall behind a compile. Two
+    // racing opens of the *same* artifact may both compile; the insert
+    // below is double-checked, so exactly one wins and the loser's copy
+    // is dropped (a pool opens its shards sequentially, so the
+    // homogeneous case still compiles once). compile (not new):
+    // weight/shape mismatches surface as session open errors, never as
+    // panics on the worker thread.
+    let plan = Arc::new(ForwardPlan::compile(&cfg.net, &weights, mode)?);
+    PLAN_COMPILES.fetch_add(1, Ordering::Relaxed);
+    let mut g = crate::engine::lock_recover(cache);
+    if let Some(existing) = g.get(&key).and_then(Weak::upgrade) {
+        return Ok(existing);
+    }
+    g.retain(|_, w| w.strong_count() > 0);
+    g.insert(key, Arc::downgrade(&plan));
+    Ok(plan)
+}
+
+/// How many plan compiles this process has performed. A homogeneous
+/// N-shard pool should add 1 to this, not N — asserted in the pool tests.
+pub fn plan_compile_count() -> usize {
+    PLAN_COMPILES.load(Ordering::Relaxed)
+}
+
+/// Shared executor for the `ForwardPlan`-based backends: one (possibly
+/// cache-shared) compiled plan, one private scratch arena, and the
+/// session's thread cap.
 struct PlanExec {
-    plan: ForwardPlan,
+    plan: Arc<ForwardPlan>,
     scratch: Scratch,
     threads: usize,
     fbuf: Vec<f64>,
@@ -57,14 +116,7 @@ struct PlanExec {
 
 impl PlanExec {
     fn new(cfg: &EngineConfig) -> Result<Self> {
-        let mode = cfg
-            .backend
-            .forward_mode(cfg.k, cfg.seed)
-            .expect("PlanExec is only built for plan-lowerable backend kinds");
-        let weights = cfg.resolve_weights()?;
-        // compile (not new): weight/shape mismatches surface as session
-        // open errors, never as panics on the worker thread.
-        let plan = ForwardPlan::compile(&cfg.net, &weights, mode)?;
+        let plan = shared_plan(cfg)?;
         Ok(PlanExec { plan, scratch: Scratch::default(), threads: cfg.threads, fbuf: Vec::new() })
     }
 
@@ -261,7 +313,7 @@ impl Backend for Xla {
                 .iter()
                 .find(|&&(b, _)| b <= remaining)
                 .map(|(b, e)| (*b, e))
-                .expect("ladder contains batch 1");
+                .ok_or_else(|| anyhow!("xla backend: executable ladder lost its batch-1 rung"))?;
             let chunk = &inputs[idx..idx + bsz];
             let mut flat = Vec::with_capacity(bsz * self.in_len);
             for img in chunk {
@@ -284,5 +336,71 @@ impl Backend for Xla {
             idx += bsz;
         }
         Ok(out)
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+    use crate::accel::layers::{LayerKind, LayerSpec};
+    use crate::accel::network::LayerWeights;
+    use crate::sc::quantize_bipolar;
+
+    fn tiny_cfg(k: usize) -> EngineConfig {
+        let net = NetworkSpec {
+            name: "tiny-cache".into(),
+            input: (1, 2, 2),
+            layers: vec![LayerSpec {
+                kind: LayerKind::Dense { inputs: 4, outputs: 2 },
+                relu: false,
+            }],
+        };
+        let codes: Vec<Vec<u32>> = (0..2)
+            .map(|oc| (0..4).map(|j| quantize_bipolar((oc + j) as f64 / 5.0, 8)).collect())
+            .collect();
+        let weights = QuantizedWeights {
+            bits: 8,
+            layers: vec![LayerWeights { codes, gamma: 1.0, mu: 0.0 }],
+        };
+        EngineConfig::new(BackendKind::StochasticFused, net).with_quantized(weights).with_k(k)
+    }
+
+    #[test]
+    fn shared_plan_reuses_identical_artifacts() {
+        let cfg = tiny_cfg(48);
+        let before = plan_compile_count();
+        let p1 = shared_plan(&cfg).unwrap();
+        let p2 = shared_plan(&cfg).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "identical artifact inputs share one plan");
+        // Only runtime knobs differ: still the same plan.
+        let p3 = shared_plan(&cfg.clone().with_threads(2).with_channels(2)).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p3));
+        // A different k is a different compiled artifact.
+        let p4 = shared_plan(&tiny_cfg(56)).unwrap();
+        assert!(!Arc::ptr_eq(&p1, &p4));
+        assert!(plan_compile_count() >= before + 2);
+    }
+
+    #[test]
+    fn shared_plan_entries_die_with_their_sessions() {
+        let cfg = tiny_cfg(40);
+        let p1 = shared_plan(&cfg).unwrap();
+        drop(p1);
+        // The weak entry is dead; a fresh resolve recompiles. Sibling tests
+        // compile plans concurrently, so assert monotonicity rather than an
+        // exact count, plus that the fresh plan is unshared (strong count 1
+        // would be 2+ if a stale strong handle had survived somewhere).
+        let before = plan_compile_count();
+        let p2 = shared_plan(&cfg).unwrap();
+        assert!(plan_compile_count() > before, "dead weak entry recompiles");
+        assert_eq!(Arc::strong_count(&p2), 1, "the recompiled plan starts unshared");
+    }
+
+    #[test]
+    fn shared_plan_rejects_non_plan_backends() {
+        let mut cfg = tiny_cfg(32);
+        cfg.backend = BackendKind::ReferencePerBit;
+        assert!(shared_plan(&cfg).is_err());
     }
 }

@@ -341,9 +341,90 @@ impl EngineConfig {
         }
         Some(HardwareEstimate::for_config(self.tech, self.channels, self.k, &self.net))
     }
+
+    /// Fingerprint of everything that determines the **compiled artifact**
+    /// for this configuration: the backend's lowered forward mode (which
+    /// folds in `k`/`seed` only where the datapath actually samples), the
+    /// quantization precision, the full network structure, and the resolved
+    /// quantized weights. The modeled-technology knobs (`tech`, `channels`)
+    /// are deliberately excluded — they shape the hardware *estimate*, not
+    /// the compiled plan — so pool shards differing only in modeled tech
+    /// still share one plan. Keys the process-wide shared-plan cache
+    /// ([`crate::engine::backend::shared_plan`]).
+    pub fn artifact_fingerprint(&self, weights: &QuantizedWeights) -> u128 {
+        let mut fp = Fingerprint::new();
+        fp.write(self.backend.label().as_bytes());
+        fp.write(format!("{:?}", self.backend.forward_mode(self.k, self.seed)).as_bytes());
+        fp.write(&self.bits.to_le_bytes());
+        // NetworkSpec's Debug form covers the name, input shape, and every
+        // layer descriptor — the whole topology.
+        fp.write(format!("{:?}", self.net).as_bytes());
+        fp.write(&weights.bits.to_le_bytes());
+        fp.write(&(weights.layers.len() as u64).to_le_bytes());
+        for layer in &weights.layers {
+            fp.write(&layer.gamma.to_bits().to_le_bytes());
+            fp.write(&layer.mu.to_bits().to_le_bytes());
+            fp.write(&(layer.codes.len() as u64).to_le_bytes());
+            for codes in &layer.codes {
+                fp.write(&(codes.len() as u64).to_le_bytes());
+                for &c in codes {
+                    fp.write(&c.to_le_bytes());
+                }
+            }
+        }
+        fp.digest()
+    }
+}
+
+/// FNV-1a offset basis / prime — the one pair of constants behind both the
+/// plan-cache fingerprint below and the pool's routing hash.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Plain FNV-1a 64 (stable across processes, unlike `DefaultHasher`).
+/// Shared by [`EngineConfig::artifact_fingerprint`]'s first lane and the
+/// pool router's key hash so one audited implementation serves both.
+pub(crate) fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h = fnv1a_step(h, b);
+    }
+    h
+}
+
+#[inline]
+fn fnv1a_step(h: u64, byte: u8) -> u64 {
+    (h ^ byte as u64).wrapping_mul(FNV_PRIME)
+}
+
+/// Dual-lane FNV-1a: two independently-seeded 64-bit lanes (the second
+/// additionally rotated per byte to decorrelate) concatenated into an
+/// effectively 128-bit digest — collision-safe enough to key the
+/// process-wide compiled-plan cache without storing full keys.
+struct Fingerprint {
+    a: u64,
+    b: u64,
+}
+
+impl Fingerprint {
+    fn new() -> Self {
+        Fingerprint { a: FNV_OFFSET, b: 0x6c62_272e_07bb_0142 }
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &x in bytes {
+            self.a = fnv1a_step(self.a, x);
+            self.b = fnv1a_step(self.b, x).rotate_left(17);
+        }
+    }
+
+    fn digest(&self) -> u128 {
+        ((self.a as u128) << 64) | self.b as u128
+    }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::accel::layers::{LayerKind, LayerSpec};
@@ -445,6 +526,36 @@ mod tests {
         assert!(est.metrics.energy_uj > 0.0);
         let cfg = EngineConfig::new(BackendKind::Xla, tiny_net());
         assert!(cfg.estimate().is_none());
+    }
+
+    #[test]
+    fn artifact_fingerprint_keys_on_compiled_inputs_only() {
+        let base = EngineConfig::new(BackendKind::StochasticFused, tiny_net())
+            .with_quantized(tiny_quantized(8))
+            .with_k(64);
+        let w = base.resolve_weights().unwrap();
+        let fp = base.artifact_fingerprint(&w);
+        // Deterministic.
+        assert_eq!(fp, base.artifact_fingerprint(&w));
+        // Modeled-tech knobs do not change the compiled artifact.
+        let tech = base.clone().with_tech(TechKind::Finfet10).with_channels(4);
+        assert_eq!(fp, tech.artifact_fingerprint(&w));
+        // Thread caps and batch policy are runtime knobs, not artifacts.
+        let threads = base.clone().with_threads(3);
+        assert_eq!(fp, threads.artifact_fingerprint(&w));
+        // k, seed, backend, weights, and topology all change the artifact.
+        assert_ne!(fp, base.clone().with_k(128).artifact_fingerprint(&w));
+        assert_ne!(fp, base.clone().with_seed(99).artifact_fingerprint(&w));
+        let exp = EngineConfig::new(BackendKind::Expectation, tiny_net())
+            .with_quantized(tiny_quantized(8));
+        assert_ne!(fp, exp.artifact_fingerprint(&w));
+        let mut w2 = w.clone();
+        w2.layers[0].codes[0][0] ^= 1;
+        assert_ne!(fp, base.artifact_fingerprint(&w2));
+        // Expectation ignores k (forward mode carries no k), so two
+        // expectation configs at different k share one artifact.
+        let exp_k = exp.clone().with_k(4096);
+        assert_eq!(exp.artifact_fingerprint(&w), exp_k.artifact_fingerprint(&w));
     }
 
     #[test]

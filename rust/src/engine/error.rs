@@ -1,0 +1,166 @@
+//! Typed errors for the request path: every way a [`crate::engine::Session`]
+//! or [`crate::engine::EnginePool`] can refuse or lose a request, as a
+//! matchable enum instead of a panic or an opaque string.
+//!
+//! The request path never panics: a dead worker, a closed session, a full
+//! admission queue, and a poisoned client-side lock all surface as
+//! [`EngineError`] variants, so servers can distinguish "back off and retry"
+//! ([`EngineError::Rejected`]) from "this shard is gone"
+//! ([`EngineError::WorkerDied`]) from "this request was bad"
+//! ([`EngineError::Request`]).
+
+use std::fmt;
+use std::time::Duration;
+
+/// What went wrong on the request path. Convertible into [`anyhow::Error`]
+/// (the crate-wide error type) with `?`, so typed call sites compose with
+/// the rest of the codebase; match on it where the variant matters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineError {
+    /// The session (or pool) was gracefully closed; no new submissions are
+    /// accepted. Previously-submitted work is still drainable.
+    Closed,
+    /// The worker thread behind the session exited without a graceful
+    /// close (backend panic or abnormal shutdown). The session is dead;
+    /// a pool marks the shard unhealthy and reroutes.
+    WorkerDied,
+    /// `drain` was called with nothing outstanding — a protocol misuse
+    /// (submit-then-drain pairs are unbalanced), reported instead of
+    /// silently returning nothing.
+    EmptyQueue,
+    /// Admission control shed this request: the global in-flight queue is
+    /// full. The hint is a backoff estimate derived from recently observed
+    /// service latency — retry after roughly that long.
+    Rejected {
+        /// Suggested client backoff before retrying.
+        retry_after_hint: Duration,
+    },
+    /// Every shard of the pool is unhealthy (all workers died); nothing
+    /// can serve the request.
+    NoHealthyShards,
+    /// A client-side lock was poisoned by a panicking sibling thread. The
+    /// payload names the lock.
+    LockPoisoned(&'static str),
+    /// The request reached a live backend and failed there (malformed
+    /// input, executable error). The payload preserves the backend's
+    /// message.
+    Request(String),
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::Closed => write!(f, "engine session closed (submit after close)"),
+            EngineError::WorkerDied => write!(f, "engine worker thread died"),
+            EngineError::EmptyQueue => {
+                write!(f, "drain called with no outstanding submissions")
+            }
+            EngineError::Rejected { retry_after_hint } => write!(
+                f,
+                "request shed by admission control (queue full); retry after ~{} µs",
+                retry_after_hint.as_micros()
+            ),
+            EngineError::NoHealthyShards => {
+                write!(f, "no healthy shards available to serve the request")
+            }
+            EngineError::LockPoisoned(what) => {
+                write!(f, "lock poisoned by a panicked client thread: {what}")
+            }
+            EngineError::Request(msg) => write!(f, "request failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+impl From<EngineError> for anyhow::Error {
+    fn from(e: EngineError) -> Self {
+        anyhow::Error::msg(e)
+    }
+}
+
+impl EngineError {
+    /// Fold an [`anyhow::Error`] from a session call back into the typed
+    /// space. The vendored `anyhow` stand-in renders errors to strings (no
+    /// downcasting), so the two lifecycle variants are recognized by
+    /// **exact** display equality — the session emits them unwrapped, and
+    /// backend failures are always prefixed (`batch failed: ...`), so a
+    /// request-level error merely *containing* a lifecycle phrase cannot
+    /// be misclassified as a dead shard. Everything else is preserved as
+    /// [`EngineError::Request`]. Used by the pool when a session reported
+    /// through the crate-wide error type.
+    pub fn from_request(e: anyhow::Error) -> Self {
+        let msg = e.to_string();
+        if msg == EngineError::WorkerDied.to_string() {
+            EngineError::WorkerDied
+        } else if msg == EngineError::Closed.to_string() {
+            EngineError::Closed
+        } else {
+            EngineError::Request(msg)
+        }
+    }
+
+    /// True for the variants that mean the serving shard itself is gone
+    /// (as opposed to this one request being bad or shed).
+    pub fn is_shard_fatal(&self) -> bool {
+        matches!(self, EngineError::Closed | EngineError::WorkerDied)
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_are_distinct_and_informative() {
+        let variants: Vec<EngineError> = vec![
+            EngineError::Closed,
+            EngineError::WorkerDied,
+            EngineError::EmptyQueue,
+            EngineError::Rejected { retry_after_hint: Duration::from_micros(250) },
+            EngineError::NoHealthyShards,
+            EngineError::LockPoisoned("results"),
+            EngineError::Request("bad image".into()),
+        ];
+        let mut seen = std::collections::HashSet::new();
+        for v in &variants {
+            assert!(seen.insert(v.to_string()), "duplicate display for {v:?}");
+        }
+        assert!(EngineError::Rejected { retry_after_hint: Duration::from_micros(250) }
+            .to_string()
+            .contains("250"));
+    }
+
+    #[test]
+    fn converts_into_anyhow_preserving_message() {
+        let e: anyhow::Error = EngineError::WorkerDied.into();
+        assert!(e.to_string().contains("worker thread died"));
+        let folded = EngineError::from_request(anyhow::anyhow!("boom"));
+        assert_eq!(folded, EngineError::Request("boom".into()));
+        // The lifecycle variants round-trip through the string error type.
+        assert_eq!(
+            EngineError::from_request(EngineError::WorkerDied.into()),
+            EngineError::WorkerDied
+        );
+        assert_eq!(
+            EngineError::from_request(EngineError::Closed.into()),
+            EngineError::Closed
+        );
+        // A request-level error merely *mentioning* a lifecycle phrase is
+        // NOT misclassified as a dead shard (exact match, not contains).
+        let wrapped =
+            anyhow::anyhow!("batch failed: downstream engine worker thread died mid-call");
+        assert!(matches!(EngineError::from_request(wrapped), EngineError::Request(_)));
+    }
+
+    #[test]
+    fn shard_fatal_classification() {
+        assert!(EngineError::Closed.is_shard_fatal());
+        assert!(EngineError::WorkerDied.is_shard_fatal());
+        assert!(!EngineError::Request("x".into()).is_shard_fatal());
+        assert!(
+            !EngineError::Rejected { retry_after_hint: Duration::ZERO }.is_shard_fatal()
+        );
+    }
+}

@@ -317,7 +317,197 @@ impl SessionMetrics {
     }
 }
 
+/// Aggregated snapshot of an [`crate::engine::EnginePool`]: the merged
+/// roll-up every dashboard wants (one latency record, one histogram, one
+/// throughput figure) plus the per-shard [`SessionMetrics`] behind it and
+/// the pool-level counters no single session can see (admission sheds,
+/// reroutes, shard health).
+#[derive(Debug, Clone)]
+pub struct PoolMetrics {
+    /// Backend label of the shards (`a+b` when heterogeneous).
+    pub backend: String,
+    /// Total shard count.
+    pub shards: usize,
+    /// Shards currently healthy (worker alive, not closed).
+    pub healthy: usize,
+    /// Requests completed successfully, summed over shards.
+    pub requests: usize,
+    /// Requests rejected by sessions (malformed input), summed.
+    pub rejected: usize,
+    /// Requests shed by pool admission control (typed `Rejected`).
+    pub shed: usize,
+    /// Requests rerouted away from a dying shard.
+    pub rerouted: usize,
+    /// Requests that reached a backend and failed there, summed.
+    pub failed: usize,
+    /// Batches executed, summed over shards.
+    pub batches: usize,
+    /// Wall time since the pool was opened.
+    pub wall: Duration,
+    /// Merged per-request latency record (percentiles, mean batch).
+    pub serve: ServeStats,
+    /// Merged log₂ latency histogram.
+    pub histogram: LatencyHistogram,
+    /// The per-shard snapshots the roll-up was built from.
+    pub per_shard: Vec<SessionMetrics>,
+    /// Headline modeled-hardware figures, from the **first
+    /// estimate-bearing shard** (`None` only when no shard models SC
+    /// hardware — e.g. an all-XLA pool). The pool-scaled roll-ups
+    /// ([`PoolMetrics::modeled_area_mm2`],
+    /// [`PoolMetrics::modeled_power_mw`],
+    /// [`PoolMetrics::estimated_total_energy_uj`]) sum over *all* shards,
+    /// so heterogeneous pools stay accounted.
+    pub estimate: Option<HardwareEstimate>,
+}
+
+impl PoolMetrics {
+    /// Merge per-shard snapshots into the pool roll-up. The pool-level
+    /// counters (`healthy`, `shed`, `rerouted`) come from the router, which
+    /// is the only place they exist.
+    pub fn aggregate(
+        per_shard: Vec<SessionMetrics>,
+        healthy: usize,
+        shed: usize,
+        rerouted: usize,
+        wall: Duration,
+    ) -> Self {
+        let mut serve = ServeStats::new();
+        let mut histogram = LatencyHistogram::new();
+        let (mut requests, mut rejected, mut failed, mut batches) = (0, 0, 0, 0);
+        let mut labels: Vec<&str> = Vec::new();
+        for m in &per_shard {
+            serve.merge(&m.serve);
+            histogram.merge(&m.histogram);
+            requests += m.requests;
+            rejected += m.rejected;
+            failed += m.failed;
+            batches += m.batches;
+            if !labels.contains(&m.backend.as_str()) {
+                labels.push(&m.backend);
+            }
+        }
+        PoolMetrics {
+            backend: labels.join("+"),
+            shards: per_shard.len(),
+            healthy,
+            requests,
+            rejected,
+            shed,
+            rerouted,
+            failed,
+            batches,
+            wall,
+            serve,
+            histogram,
+            estimate: per_shard.iter().find_map(|m| m.estimate),
+            per_shard,
+        }
+    }
+
+    /// Mean coalesced batch size over all shards.
+    pub fn mean_batch(&self) -> f64 {
+        self.serve.mean_batch()
+    }
+
+    /// Merged latency percentile in µs.
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        self.serve.latency_percentile_us(p)
+    }
+
+    /// Completed requests per second of pool wall time.
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs > 0.0 {
+            self.requests as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Per-shard throughput (req/s of each shard's own wall time), in
+    /// shard order — the load-balance view.
+    pub fn per_shard_throughput(&self) -> Vec<f64> {
+        self.per_shard.iter().map(SessionMetrics::throughput_rps).collect()
+    }
+
+    /// Modeled silicon area of the whole pool: one accelerator instance
+    /// per shard, summed (scales with shard count).
+    pub fn modeled_area_mm2(&self) -> Option<f64> {
+        sum_some(self.per_shard.iter().map(|m| m.estimate.map(|e| e.metrics.area_mm2)))
+    }
+
+    /// Modeled power of the whole pool (one accelerator per shard, summed).
+    pub fn modeled_power_mw(&self) -> Option<f64> {
+        sum_some(self.per_shard.iter().map(|m| m.estimate.map(|e| e.metrics.power_mw)))
+    }
+
+    /// Modeled energy for every completed inference across all shards (µJ).
+    pub fn estimated_total_energy_uj(&self) -> Option<f64> {
+        sum_some(self.per_shard.iter().map(SessionMetrics::estimated_total_energy_uj))
+    }
+
+    /// Multi-line human-readable report (the pool analogue of
+    /// [`SessionMetrics::summary`]).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "pool [{}]: {}/{} shards healthy — {} requests ({} rejected, {} shed, \
+             {} rerouted, {} failed) in {} batches, mean batch {:.1}\n",
+            self.backend,
+            self.healthy,
+            self.shards,
+            self.requests,
+            self.rejected,
+            self.shed,
+            self.rerouted,
+            self.failed,
+            self.batches,
+            self.mean_batch()
+        );
+        s.push_str(&format!(
+            "latency p50 {} µs  p99 {} µs  throughput {:.0} req/s (per shard: {})\n",
+            self.latency_percentile_us(50.0),
+            self.latency_percentile_us(99.0),
+            self.throughput_rps(),
+            self.per_shard_throughput()
+                .iter()
+                .map(|t| format!("{t:.0}"))
+                .collect::<Vec<_>>()
+                .join("/")
+        ));
+        if let (Some(e), Some(area), Some(power)) =
+            (self.estimate, self.modeled_area_mm2(), self.modeled_power_mw())
+        {
+            // Totals cover exactly the shards that model SC hardware; the
+            // tech/k label describes the first of them (heterogeneous
+            // pools may mix techs and k tiers).
+            let modeled = self.per_shard.iter().filter(|m| m.estimate.is_some()).count();
+            s.push_str(&format!(
+                "modeled hardware ×{modeled} of {} shards (first: {} @ k={}) — \
+                 {:.3} mm² total, {:.1} mW total",
+                self.shards, e.tech, e.k, area, power
+            ));
+            if let Some(total) = self.estimated_total_energy_uj() {
+                s.push_str(&format!(" ({total:.1} µJ modeled for this run)"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Sum an iterator of optional figures; `None` once every element is
+/// `None` (e.g. an all-XLA pool models no SC hardware).
+fn sum_some(it: impl Iterator<Item = Option<f64>>) -> Option<f64> {
+    let vals: Vec<f64> = it.flatten().collect();
+    if vals.is_empty() {
+        None
+    } else {
+        Some(vals.iter().sum())
+    }
+}
+
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 
@@ -417,6 +607,94 @@ mod tests {
         // Cached characterization: a second call is consistent.
         let again = HardwareEstimate::for_config(TechKind::Rfet10, 8, 32, &net);
         assert!((again.metrics.latency_us - est.metrics.latency_us).abs() < 1e-12);
+    }
+
+    fn fake_session_metrics(backend: &str, lat_us: u64, with_estimate: bool) -> SessionMetrics {
+        let net = NetworkSpec::lenet5();
+        let mut serve = ServeStats::new();
+        serve.record(Duration::from_micros(lat_us), 2);
+        serve.record(Duration::from_micros(lat_us * 2), 2);
+        let mut histogram = LatencyHistogram::new();
+        histogram.record_us(lat_us);
+        histogram.record_us(lat_us * 2);
+        SessionMetrics {
+            backend: backend.into(),
+            requests: 2,
+            rejected: 1,
+            failed: 0,
+            batches: 1,
+            wall: Duration::from_millis(10),
+            serve,
+            histogram,
+            estimate: with_estimate
+                .then(|| HardwareEstimate::for_config(TechKind::Rfet10, 8, 32, &net)),
+        }
+    }
+
+    #[test]
+    fn pool_metrics_merge_shards_and_scale_hardware() {
+        let a = fake_session_metrics("stochastic-fused", 100, true);
+        let b = fake_session_metrics("stochastic-fused", 400, true);
+        let one_shard_area = a.estimate.unwrap().metrics.area_mm2;
+        let one_shard_energy = a.estimated_total_energy_uj().unwrap();
+        let m = PoolMetrics::aggregate(vec![a, b], 2, 3, 1, Duration::from_millis(20));
+        assert_eq!(m.backend, "stochastic-fused");
+        assert_eq!(m.shards, 2);
+        assert_eq!(m.healthy, 2);
+        assert_eq!(m.requests, 4);
+        assert_eq!(m.rejected, 2);
+        assert_eq!(m.shed, 3);
+        assert_eq!(m.rerouted, 1);
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.serve.count(), 4);
+        assert_eq!(m.histogram.count(), 4);
+        assert!(m.latency_percentile_us(50.0) <= m.latency_percentile_us(99.0));
+        assert!(m.throughput_rps() > 0.0);
+        assert_eq!(m.per_shard_throughput().len(), 2);
+        // Hardware roll-ups scale with shard count.
+        assert!((m.modeled_area_mm2().unwrap() - 2.0 * one_shard_area).abs() < 1e-9);
+        assert!(
+            (m.estimated_total_energy_uj().unwrap() - 2.0 * one_shard_energy).abs() < 1e-9
+        );
+        let text = m.summary();
+        assert!(text.contains("2/2 shards healthy"), "{text}");
+        assert!(text.contains("3 shed"), "{text}");
+        assert!(text.contains("modeled hardware ×2 of 2 shards"), "{text}");
+    }
+
+    #[test]
+    fn pool_metrics_heterogeneous_labels_and_missing_estimates() {
+        let a = fake_session_metrics("xla", 50, false);
+        let b = fake_session_metrics("expectation", 60, true);
+        let m = PoolMetrics::aggregate(
+            vec![a, b.clone()],
+            1,
+            0,
+            0,
+            Duration::from_millis(5),
+        );
+        assert_eq!(m.backend, "xla+expectation");
+        assert!(
+            m.estimate.is_some(),
+            "the first estimate-bearing shard supplies the headline figures"
+        );
+        assert!(
+            m.summary().contains("modeled hardware"),
+            "a mixed pool still reports its hardware totals: {}",
+            m.summary()
+        );
+        // The scaled roll-ups count exactly the shards that model hardware.
+        let exp_area = b.estimate.unwrap().metrics.area_mm2;
+        assert!((m.modeled_area_mm2().unwrap() - exp_area).abs() < 1e-12);
+        let none = PoolMetrics::aggregate(
+            vec![fake_session_metrics("xla", 50, false)],
+            1,
+            0,
+            0,
+            Duration::from_millis(5),
+        );
+        assert!(none.modeled_area_mm2().is_none());
+        assert!(none.estimated_total_energy_uj().is_none());
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! The unified inference engine: **every** way to run the SCNN — fused
 //! bit-exact stochastic, per-bit golden reference, analytic expectation /
 //! noisy-expectation / fixed-point, and the PJRT executable ladder — behind
-//! one [`Session`] opened from one typed [`EngineConfig`].
+//! one [`Session`] opened from one typed [`EngineConfig`], and scaled out
+//! behind one [`EnginePool`] of session shards.
 //!
 //! ```text
 //! EngineConfig ──Engine::open──▶ Session ──▶ worker thread
@@ -13,6 +14,11 @@
 //!                                  ▼            ▼
 //!                             SessionMetrics (latency histogram,
 //!                             throughput, modeled energy/area)
+//!
+//! PoolConfig ──EnginePool::open──▶ router ──▶ shard 0: Session
+//!   N shard configs                 │    └──▶ shard 1: Session ...
+//!   placement policy                └─ admission control, reroute,
+//!   global queue depth                 PoolMetrics (merged)
 //! ```
 //!
 //! # Why a session object
@@ -38,23 +44,63 @@
 //!   backpressure), `drain` collects every outstanding result in
 //!   submission order.
 //!
+//! # Session lifecycle (the streaming state machine)
+//!
+//! ```text
+//!            submit/infer                close()              queue empty
+//! Open ────────────────────▶ Serving ─────────────▶ Draining ───────────▶ Closed
+//!   │                           │                      │
+//!   └──────── worker panic ─────┴──────────────────────┘─────▶ Dead
+//! ```
+//!
+//! * **Open/Serving** — requests accepted; `submit` blocks only for
+//!   per-session backpressure (`BatchPolicy::queue_depth`).
+//! * **Draining** ([`Session::close`]) — no new submissions
+//!   ([`EngineError::Closed`]); work already queued is still executed and
+//!   responded to; `close` returns once the worker has exited. Results
+//!   remain collectable via [`Session::drain`]. Idempotent.
+//! * **Closed** — `submit`/`infer` return [`EngineError::Closed`];
+//!   `drain` still yields previously-completed results, then
+//!   [`EngineError::EmptyQueue`].
+//! * **Dead** — the worker exited *without* a graceful close (a backend
+//!   panic unwound the worker thread). `submit`/`infer` return
+//!   [`EngineError::WorkerDied`]; outstanding `drain` items resolve to
+//!   per-item `WorkerDied` errors. **Nothing blocks forever**: a worker
+//!   exit guard (armed even across panics) wakes every submitter parked on
+//!   the backpressure condvar, and `drain` never waits on a channel whose
+//!   sender is gone.
+//! * `drain` with nothing outstanding is a protocol misuse and returns
+//!   [`EngineError::EmptyQueue`] instead of silently succeeding.
+//!
+//! [`EnginePool`] composes N sessions behind the same contract (plus
+//! admission-control shedding via [`EngineError::Rejected`] and automatic
+//! rerouting away from Dead shards); see [`pool`].
+//!
 //! The free functions `accel::network::forward` / `forward_batch` are
 //! deprecated shims over the same machinery; new code opens a session.
 
+#![deny(clippy::unwrap_used)]
+
 pub mod backend;
 pub mod config;
+pub mod error;
 pub mod metrics;
+pub mod pool;
 
 pub use backend::Backend;
 pub use config::{BackendKind, BatchPolicy, EngineConfig, WeightSource};
-pub use metrics::{HardwareEstimate, LatencyHistogram, ServeStats, SessionMetrics};
+pub use error::EngineError;
+pub use metrics::{
+    HardwareEstimate, LatencyHistogram, PoolMetrics, ServeStats, SessionMetrics,
+};
+pub use pool::{EnginePool, Placement, PoolConfig, PoolTicket};
 
 use crate::accel::layers::NetworkSpec;
 use crate::tech::TechKind;
 use anyhow::{anyhow, Result};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
 use std::time::Instant;
 
 /// Argmax over a logit slice (the serving dtype). Delegates to the generic
@@ -64,7 +110,16 @@ pub fn classify(output: &[f32]) -> usize {
     crate::accel::network::classify(output)
 }
 
-/// The engine entry point: opens [`Session`]s and evaluates configurations.
+/// Lock a client-side mutex, recovering from poisoning. These locks guard
+/// short counter/metric/queue updates that stay consistent even when a
+/// sibling client thread panicked mid-critical-section, so recovery is
+/// strictly better than propagating the panic across the serving process.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The engine entry point: opens [`Session`]s / [`EnginePool`]s and
+/// evaluates configurations.
 pub struct Engine;
 
 impl Engine {
@@ -72,6 +127,12 @@ impl Engine {
     /// it (compiling plans / executables), and return once it is ready.
     pub fn open(config: EngineConfig) -> Result<Session> {
         Session::open(config)
+    }
+
+    /// Open a sharded pool of sessions behind one front door (see
+    /// [`EnginePool::open`]).
+    pub fn open_pool(config: PoolConfig) -> Result<EnginePool> {
+        EnginePool::open(config)
     }
 
     /// The modeled-hardware estimate for a configuration without opening a
@@ -86,11 +147,32 @@ impl Engine {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct Ticket(u64);
 
+/// Outcome of a non-blocking [`Session::try_submit`]. The image is handed
+/// back on every non-accepted outcome, so callers that probe several
+/// sessions (the pool router) move it along without cloning.
+#[derive(Debug)]
+pub enum TrySubmit {
+    /// Queued; collect the result with [`Session::drain`].
+    Accepted(Ticket),
+    /// The session is at its backpressure bound; the image is returned.
+    Full(Vec<f32>),
+    /// The session cannot accept (closed, or its worker died); the typed
+    /// reason and the image are returned.
+    Refused(EngineError, Vec<f32>),
+}
+
 /// A classification request travelling to the worker.
-struct Request {
+struct InferRequest {
     image: Vec<f32>,
     enqueued: Instant,
     respond: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+/// What travels over the worker channel: work, or the graceful-shutdown
+/// sentinel sent by [`Session::close`].
+enum Request {
+    Infer(InferRequest),
+    Shutdown,
 }
 
 /// State shared between the session handle and its worker.
@@ -98,6 +180,15 @@ struct Shared {
     recorder: Mutex<Recorder>,
     inflight: Mutex<usize>,
     done: Condvar,
+    /// Set by [`Session::close`]: no new submissions.
+    closed: AtomicBool,
+    /// Set by the worker's exit guard (even across panics): the worker is
+    /// gone and nothing will ever release backpressure slots again.
+    worker_exited: AtomicBool,
+    /// Most recently observed request latency (µs), stored by the worker
+    /// as it records metrics — the cheap signal behind the pool's
+    /// `retry_after_hint` (no client dally, no recorder lock).
+    last_latency_us: AtomicU64,
 }
 
 /// The worker-side metrics recorder.
@@ -119,6 +210,7 @@ struct BackendInfo {
 
 /// An open inference session: one backend, one dynamic batcher, one
 /// metrics recorder. Cheap to share by reference across client threads.
+/// See the module docs for the lifecycle state machine.
 pub struct Session {
     tx: mpsc::Sender<Request>,
     shared: Arc<Shared>,
@@ -149,6 +241,9 @@ impl Session {
             recorder: Mutex::new(Recorder::default()),
             inflight: Mutex::new(0),
             done: Condvar::new(),
+            closed: AtomicBool::new(false),
+            worker_exited: AtomicBool::new(false),
+            last_latency_us: AtomicU64::new(0),
         });
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<BackendInfo>>();
@@ -189,32 +284,82 @@ impl Session {
         self.info.out_len
     }
 
-    /// Block until a backpressure slot frees up, then claim it.
-    fn acquire_slot(&self) {
-        let mut n = self.shared.inflight.lock().unwrap();
-        while *n >= self.queue_depth {
-            n = self.shared.done.wait(n).unwrap();
+    /// True once [`Session::close`] has been called (the session accepts no
+    /// new submissions).
+    pub fn is_closed(&self) -> bool {
+        self.shared.closed.load(Ordering::Acquire)
+    }
+
+    /// True while the worker thread is alive. False after a graceful close
+    /// completes **or** after an abnormal worker death — combine with
+    /// [`Session::is_closed`] to distinguish the two (this is what
+    /// [`EnginePool`] does to decide whether to mark a shard unhealthy).
+    pub fn worker_alive(&self) -> bool {
+        !self.shared.worker_exited.load(Ordering::Acquire)
+    }
+
+    /// The most recently observed request latency in µs (0 before any
+    /// request completed), as measured by the worker — enqueue to
+    /// response, queueing included, client-side dally excluded. Feeds the
+    /// pool's shed-backoff hints.
+    pub fn last_latency_us(&self) -> u64 {
+        self.shared.last_latency_us.load(Ordering::Relaxed)
+    }
+
+    /// Block until a backpressure slot frees up, then claim it. Wakes with
+    /// a typed error if the session closes or the worker dies while
+    /// waiting — never parks forever on a dead worker.
+    fn acquire_slot(&self) -> Result<(), EngineError> {
+        let mut n = lock_recover(&self.shared.inflight);
+        loop {
+            if self.shared.closed.load(Ordering::Acquire) {
+                return Err(EngineError::Closed);
+            }
+            if self.shared.worker_exited.load(Ordering::Acquire) {
+                return Err(EngineError::WorkerDied);
+            }
+            if *n < self.queue_depth {
+                *n += 1;
+                return Ok(());
+            }
+            n = self.shared.done.wait(n).unwrap_or_else(PoisonError::into_inner);
         }
-        *n += 1;
+    }
+
+    /// The typed reason a send to the worker failed.
+    fn send_failure(&self) -> EngineError {
+        if self.shared.closed.load(Ordering::Acquire) {
+            EngineError::Closed
+        } else {
+            EngineError::WorkerDied
+        }
     }
 
     /// Enqueue one request (claiming a backpressure slot) and return the
     /// response channel.
-    fn send_request(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
-        self.acquire_slot();
+    fn send_request(
+        &self,
+        image: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>>>, EngineError> {
+        self.acquire_slot()?;
         let (rtx, rrx) = mpsc::channel();
-        let req = Request { image, enqueued: Instant::now(), respond: rtx };
+        let req = Request::Infer(InferRequest { image, enqueued: Instant::now(), respond: rtx });
         if self.tx.send(req).is_err() {
             release_slots(&self.shared, 1);
-            return Err(anyhow!("engine session stopped"));
+            return Err(self.send_failure());
         }
         Ok(rrx)
     }
 
-    /// Classify one image (blocking). Returns the logits.
+    /// Classify one image (blocking). Returns the logits. Typed failures
+    /// ([`EngineError::Closed`] / [`EngineError::WorkerDied`]) convert into
+    /// the crate-wide error type.
     pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
         let rrx = self.send_request(image)?;
-        rrx.recv().map_err(|_| anyhow!("engine worker dropped request"))?
+        // A dropped response channel after a graceful close means the
+        // request raced the shutdown sentinel — report Closed, not a
+        // worker death (send_failure makes that distinction).
+        rrx.recv().map_err(|_| anyhow::Error::from(self.send_failure())).and_then(|r| r)
     }
 
     /// Run a whole slice through the batcher; results in input order. The
@@ -227,27 +372,74 @@ impl Session {
         }
         let mut outs = Vec::with_capacity(receivers.len());
         for rrx in receivers {
-            outs.push(rrx.recv().map_err(|_| anyhow!("engine worker dropped request"))??);
+            outs.push(rrx.recv().map_err(|_| self.send_failure())??);
         }
         Ok(outs)
     }
 
+    /// Non-blocking slot claim: `Ok(false)` instead of parking when the
+    /// session is at `queue_depth`.
+    fn try_acquire_slot(&self) -> Result<bool, EngineError> {
+        let mut n = lock_recover(&self.shared.inflight);
+        if self.shared.closed.load(Ordering::Acquire) {
+            return Err(EngineError::Closed);
+        }
+        if self.shared.worker_exited.load(Ordering::Acquire) {
+            return Err(EngineError::WorkerDied);
+        }
+        if *n < self.queue_depth {
+            *n += 1;
+            Ok(true)
+        } else {
+            Ok(false)
+        }
+    }
+
     /// Enqueue one request without waiting for its result. Blocks only for
     /// backpressure: at most `BatchPolicy::queue_depth` requests may be in
-    /// flight. Collect results with [`Session::drain`].
-    pub fn submit(&self, image: Vec<f32>) -> Result<Ticket> {
-        self.acquire_slot();
+    /// flight. Collect results with [`Session::drain`]. After
+    /// [`Session::close`] returns [`EngineError::Closed`]; after an
+    /// abnormal worker death returns [`EngineError::WorkerDied`].
+    pub fn submit(&self, image: Vec<f32>) -> Result<Ticket, EngineError> {
+        self.acquire_slot()?;
+        self.register_submit(image).map_err(|(e, _)| e)
+    }
+
+    /// Non-blocking [`Session::submit`]: reports [`TrySubmit::Full`] when
+    /// the session is at its backpressure bound instead of parking the
+    /// caller, and hands the image back on every non-accepted outcome.
+    /// The pool's shed-don't-block submit path is built on this.
+    pub fn try_submit(&self, image: Vec<f32>) -> TrySubmit {
+        match self.try_acquire_slot() {
+            Err(e) => return TrySubmit::Refused(e, image),
+            Ok(false) => return TrySubmit::Full(image),
+            Ok(true) => {}
+        }
+        match self.register_submit(image) {
+            Ok(ticket) => TrySubmit::Accepted(ticket),
+            Err((e, image)) => TrySubmit::Refused(e, image),
+        }
+    }
+
+    /// Shared tail of [`Session::submit`]/[`Session::try_submit`], entered
+    /// with a backpressure slot already claimed. A failed send hands the
+    /// image back alongside the typed reason.
+    fn register_submit(&self, image: Vec<f32>) -> Result<Ticket, (EngineError, Vec<f32>)> {
         // Ticket allocation, channel send, and the pending push happen
         // under one lock so concurrent submitters cannot interleave them —
         // drain()'s submission-order contract depends on pending order
         // matching the worker's arrival order.
-        let mut pending = self.pending.lock().unwrap();
+        let mut pending = lock_recover(&self.pending);
         let (rtx, rrx) = mpsc::channel();
-        let req = Request { image, enqueued: Instant::now(), respond: rtx };
-        if self.tx.send(req).is_err() {
+        let req = Request::Infer(InferRequest { image, enqueued: Instant::now(), respond: rtx });
+        if let Err(mpsc::SendError(req)) = self.tx.send(req) {
             drop(pending);
             release_slots(&self.shared, 1);
-            return Err(anyhow!("engine session stopped"));
+            let image = match req {
+                Request::Infer(r) => r.image,
+                Request::Shutdown => Vec::new(), // we only ever send Infer here
+            };
+            return Err((self.send_failure(), image));
         }
         let ticket = Ticket(self.next_ticket.fetch_add(1, Ordering::Relaxed));
         pending.push_back((ticket, rrx));
@@ -255,29 +447,77 @@ impl Session {
     }
 
     /// Wait for every outstanding [`Session::submit`] and return the
-    /// results in submission order.
-    pub fn drain(&self) -> Vec<(Ticket, Result<Vec<f32>>)> {
+    /// results in submission order. With nothing outstanding this is a
+    /// protocol misuse and returns [`EngineError::EmptyQueue`]. Items whose
+    /// worker died before responding resolve to per-item
+    /// [`EngineError::WorkerDied`] errors — drain never blocks on a dead
+    /// worker.
+    #[allow(clippy::type_complexity)]
+    pub fn drain(&self) -> Result<Vec<(Ticket, Result<Vec<f32>>)>, EngineError> {
+        if lock_recover(&self.pending).is_empty() {
+            return Err(EngineError::EmptyQueue);
+        }
         let mut done = Vec::new();
-        loop {
-            // Pop outside the wait so concurrent submitters are not blocked.
-            let next = self.pending.lock().unwrap().pop_front();
-            match next {
-                None => break,
-                Some((ticket, rrx)) => {
-                    let res = rrx
-                        .recv()
-                        .map_err(|_| anyhow!("engine worker dropped request"))
-                        .and_then(|r| r);
-                    done.push((ticket, res));
-                }
+        while let Ok(item) = self.drain_one() {
+            done.push(item);
+        }
+        Ok(done)
+    }
+
+    /// Pop the **oldest** outstanding submission and wait for its result
+    /// (the single-step form of [`Session::drain`]; the pool's ordered
+    /// cross-shard drain is built on it). Returns
+    /// [`EngineError::EmptyQueue`] when nothing is outstanding; an item
+    /// whose worker died resolves to a per-item error, never a hang.
+    #[allow(clippy::type_complexity)]
+    pub fn drain_one(&self) -> Result<(Ticket, Result<Vec<f32>>), EngineError> {
+        // Pop outside the wait so concurrent submitters are not blocked.
+        let next = lock_recover(&self.pending).pop_front();
+        match next {
+            None => Err(EngineError::EmptyQueue),
+            Some((ticket, rrx)) => {
+                // Closed vs WorkerDied per send_failure: an item whose
+                // submit raced a graceful close resolves Closed, not as a
+                // worker death.
+                let res = rrx
+                    .recv()
+                    .map_err(|_| anyhow::Error::from(self.send_failure()))
+                    .and_then(|r| r);
+                Ok((ticket, res))
             }
         }
-        done
     }
 
     /// Number of submitted-but-undrained requests.
     pub fn outstanding(&self) -> usize {
-        self.pending.lock().unwrap().len()
+        lock_recover(&self.pending).len()
+    }
+
+    /// Gracefully close the session (the Draining transition of the state
+    /// machine): new submissions are refused with [`EngineError::Closed`],
+    /// work already queued is executed and responded to, and this call
+    /// returns once the worker thread has exited. Idempotent and safe to
+    /// call from any thread; results of earlier submits stay collectable
+    /// via [`Session::drain`].
+    pub fn close(&self) {
+        if !self.shared.closed.swap(true, Ordering::AcqRel) {
+            // First closer: wake submitters parked on backpressure so they
+            // observe Closed, then send the worker its shutdown sentinel.
+            {
+                let _g = lock_recover(&self.shared.inflight);
+                self.shared.done.notify_all();
+            }
+            let _ = self.tx.send(Request::Shutdown);
+        }
+        let mut g = lock_recover(&self.shared.inflight);
+        while !self.shared.worker_exited.load(Ordering::Acquire) {
+            let (g2, _) = self
+                .shared
+                .done
+                .wait_timeout(g, std::time::Duration::from_millis(20))
+                .unwrap_or_else(PoisonError::into_inner);
+            g = g2;
+        }
     }
 
     /// Snapshot of this session's metrics. The first call evaluates the
@@ -290,7 +530,7 @@ impl Session {
                     HardwareEstimate::for_config(tech, channels, k, net)
                 })
         });
-        let rec = self.shared.recorder.lock().unwrap();
+        let rec = lock_recover(&self.shared.recorder);
         SessionMetrics {
             backend: self.info.name.to_string(),
             requests: rec.serve.count(),
@@ -317,19 +557,33 @@ impl Drop for Session {
 }
 
 fn release_slots(shared: &Shared, n: usize) {
-    let mut g = shared.inflight.lock().unwrap();
+    let mut g = lock_recover(&shared.inflight);
     *g = g.saturating_sub(n);
     shared.done.notify_all();
 }
 
 /// The worker: builds the backend, then drains the queue in dynamic
-/// batches — block for the first request, linger for more, execute, respond.
+/// batches — block for the first request, linger for more, execute,
+/// respond. On a [`Request::Shutdown`] sentinel it finishes the batch in
+/// hand and exits; on *any* exit (including a panic unwinding out of the
+/// backend) the guard below publishes the death and wakes every parked
+/// submitter.
 fn worker_loop(
     cfg: EngineConfig,
     rx: mpsc::Receiver<Request>,
     shared: Arc<Shared>,
     ready: mpsc::Sender<Result<BackendInfo>>,
 ) {
+    struct ExitGuard(Arc<Shared>);
+    impl Drop for ExitGuard {
+        fn drop(&mut self) {
+            let _g = lock_recover(&self.0.inflight);
+            self.0.worker_exited.store(true, Ordering::Release);
+            self.0.done.notify_all();
+        }
+    }
+    let _exit = ExitGuard(Arc::clone(&shared));
+
     let batch_max = cfg.batch.max_batch.max(1);
     let linger = cfg.batch.linger;
     let mut backend = match backend::build(&cfg) {
@@ -346,9 +600,11 @@ fn worker_loop(
     };
     let in_len = backend.in_len();
 
-    loop {
+    let mut shutdown = false;
+    while !shutdown {
         let first = match rx.recv() {
-            Ok(r) => r,
+            Ok(Request::Infer(r)) => r,
+            Ok(Request::Shutdown) => break,
             Err(_) => return, // session dropped
         };
         let mut pending = vec![first];
@@ -359,14 +615,18 @@ fn worker_loop(
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
+                Ok(Request::Infer(r)) => pending.push(r),
+                Ok(Request::Shutdown) => {
+                    shutdown = true;
+                    break;
+                }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
 
         // Reject malformed requests individually; batch the rest.
-        let mut valid: Vec<Request> = Vec::with_capacity(pending.len());
+        let mut valid: Vec<InferRequest> = Vec::with_capacity(pending.len());
         let mut rejected = 0usize;
         for r in pending {
             if r.image.len() != in_len {
@@ -381,7 +641,7 @@ fn worker_loop(
             }
         }
         if rejected > 0 {
-            shared.recorder.lock().unwrap().rejected += rejected;
+            lock_recover(&shared.recorder).rejected += rejected;
             release_slots(&shared, rejected);
         }
         if valid.is_empty() {
@@ -392,7 +652,7 @@ fn worker_loop(
         let bsz = valid.len();
         match backend.infer_batch(&inputs) {
             Ok(outs) if outs.len() == bsz => {
-                let mut rec = shared.recorder.lock().unwrap();
+                let mut rec = lock_recover(&shared.recorder);
                 rec.batches += 1;
                 for (r, out) in valid.iter().zip(outs) {
                     // Record before responding: clients may read metrics
@@ -400,11 +660,14 @@ fn worker_loop(
                     let lat = r.enqueued.elapsed();
                     rec.serve.record(lat, bsz);
                     rec.hist.record_us(lat.as_micros() as u64);
+                    shared
+                        .last_latency_us
+                        .store(lat.as_micros() as u64, Ordering::Relaxed);
                     let _ = r.respond.send(Ok(out));
                 }
             }
             Ok(outs) => {
-                shared.recorder.lock().unwrap().failed += bsz;
+                lock_recover(&shared.recorder).failed += bsz;
                 for r in &valid {
                     let _ = r.respond.send(Err(anyhow!(
                         "backend returned {} outputs for a batch of {bsz}",
@@ -415,7 +678,7 @@ fn worker_loop(
             Err(e) => {
                 // Count before responding so a failed run is visible in
                 // metrics the moment callers see their errors.
-                shared.recorder.lock().unwrap().failed += bsz;
+                lock_recover(&shared.recorder).failed += bsz;
                 let msg = format!("{e:#}");
                 for r in &valid {
                     let _ = r.respond.send(Err(anyhow!("batch failed: {msg}")));
@@ -424,9 +687,20 @@ fn worker_loop(
         }
         release_slots(&shared, bsz);
     }
+
+    // Graceful-close tail: a submit racing with close() may have enqueued
+    // behind the shutdown sentinel — refuse those typed instead of leaving
+    // their callers to a channel error.
+    while let Ok(req) = rx.try_recv() {
+        if let Request::Infer(r) = req {
+            let _ = r.respond.send(Err(EngineError::Closed.into()));
+            release_slots(&shared, 1);
+        }
+    }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::accel::layers::{LayerKind, LayerSpec, NetworkSpec};
@@ -514,7 +788,7 @@ mod tests {
             tickets.push(session.submit(image(phase)).unwrap());
         }
         assert_eq!(session.outstanding(), 10);
-        let results = session.drain();
+        let results = session.drain().unwrap();
         assert_eq!(session.outstanding(), 0);
         assert_eq!(results.len(), 10);
         for (i, (ticket, res)) in results.iter().enumerate() {
@@ -522,7 +796,76 @@ mod tests {
             let logits = res.as_ref().unwrap();
             assert_eq!(logits, &session.infer(image(i)).unwrap());
         }
-        assert!(session.drain().is_empty(), "drain on an empty queue is empty");
+        assert_eq!(
+            session.drain().unwrap_err(),
+            EngineError::EmptyQueue,
+            "drain on an empty queue is a typed protocol error"
+        );
+    }
+
+    #[test]
+    fn try_submit_reports_full_instead_of_blocking() {
+        let mut config = cfg(BackendKind::Expectation);
+        config.batch = BatchPolicy {
+            max_batch: 8,
+            // A long linger holds the first request's backpressure slot
+            // open deterministically while we probe the full queue.
+            linger: Duration::from_millis(200),
+            queue_depth: 1,
+        };
+        let session = Engine::open(config).unwrap();
+        assert!(matches!(session.try_submit(image(0)), TrySubmit::Accepted(_)));
+        // The single slot is held while the worker lingers: try_submit
+        // must report full, not park like submit would — and it hands the
+        // image back untouched.
+        match session.try_submit(image(1)) {
+            TrySubmit::Full(img) => assert_eq!(img, image(1)),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        let results = session.drain().unwrap();
+        assert_eq!(results.len(), 1);
+        // Slot released: accepted again; closed: refused typed with the
+        // image returned.
+        assert!(matches!(session.try_submit(image(2)), TrySubmit::Accepted(_)));
+        session.close();
+        match session.try_submit(image(3)) {
+            TrySubmit::Refused(EngineError::Closed, img) => assert_eq!(img, image(3)),
+            other => panic!("expected Refused(Closed), got {other:?}"),
+        }
+        let tail = session.drain().unwrap();
+        assert_eq!(tail.len(), 1, "the pre-close submission was still served");
+    }
+
+    #[test]
+    fn drain_without_submissions_is_typed_error() {
+        let session = Engine::open(cfg(BackendKind::Expectation)).unwrap();
+        assert_eq!(session.drain().unwrap_err(), EngineError::EmptyQueue);
+    }
+
+    #[test]
+    fn close_refuses_new_work_but_finishes_queued_work() {
+        let session = Engine::open(cfg(BackendKind::Expectation)).unwrap();
+        let mut tickets = Vec::new();
+        for phase in 0..6 {
+            tickets.push(session.submit(image(phase)).unwrap());
+        }
+        assert!(!session.is_closed());
+        session.close();
+        assert!(session.is_closed());
+        assert!(!session.worker_alive(), "close waits for the worker to exit");
+        // New work is refused typed — on both the streaming and blocking paths.
+        assert_eq!(session.submit(image(0)).unwrap_err(), EngineError::Closed);
+        let e = session.infer(image(0)).unwrap_err();
+        assert!(e.to_string().contains("closed"), "{e}");
+        // Queued work was executed before the worker exited.
+        let results = session.drain().unwrap();
+        assert_eq!(results.len(), 6);
+        for (i, (ticket, res)) in results.iter().enumerate() {
+            assert_eq!(*ticket, tickets[i]);
+            assert!(res.is_ok(), "queued request {i} served across close: {res:?}");
+        }
+        // close is idempotent.
+        session.close();
     }
 
     #[test]

@@ -1,0 +1,947 @@
+//! [`EnginePool`] — many session shards behind one front door, for serving
+//! at scale.
+//!
+//! A pool owns N [`Session`] shards (each an [`crate::engine::Engine::open`]
+//! session on its own worker thread), optionally heterogeneous — different
+//! backends, `k` tiers, or even different topologies, as long as every
+//! shard speaks the same input/output shape. On top of the shards it adds
+//! the serving machinery no single session has:
+//!
+//! * **a router** with pluggable [`Placement`]: round-robin (default),
+//!   least-queue-depth (pick the emptiest shard), and hash-by-request-key
+//!   (stable affinity, e.g. for client-side caches);
+//! * **a shared compiled-artifact cache**: shards with identical
+//!   compiled-artifact inputs (backend, topology, weights, k/seed,
+//!   precision) reuse **one** [`crate::accel::network::ForwardPlan`]
+//!   through [`crate::engine::backend::shared_plan`] instead of
+//!   recompiling per shard — opening an 8-shard homogeneous pool compiles
+//!   once;
+//! * **admission control**: a bounded global in-flight queue; when it is
+//!   full — or when every candidate shard's own backpressure queue is full
+//!   ([`crate::engine::Session::try_submit`] keeps the per-shard step
+//!   non-blocking) — streamed requests are *shed* with a typed
+//!   [`EngineError::Rejected`]`{ retry_after_hint }` instead of blocking —
+//!   open-loop clients get an explicit backoff signal whose hint tracks
+//!   recently observed service latency on both the blocking and the
+//!   streaming path;
+//! * **health + rerouting**: a shard whose worker dies (or is closed) is
+//!   marked unhealthy and its traffic reroutes to the survivors; only when
+//!   every shard is gone do callers see [`EngineError::NoHealthyShards`];
+//! * **graceful drain**: [`EnginePool::close`] refuses new work, lets every
+//!   shard finish its queue, and returns when all workers have exited;
+//! * **[`PoolMetrics`]**: merged latency histograms and percentiles,
+//!   per-shard throughput, shed/reroute counters, and the modeled hardware
+//!   estimate scaled by shard count.
+//!
+//! ```no_run
+//! use scnn::accel::layers::NetworkSpec;
+//! use scnn::engine::{BackendKind, EngineConfig, EnginePool, Placement, PoolConfig};
+//!
+//! let cfg = EngineConfig::new(BackendKind::StochasticFused, NetworkSpec::lenet5())
+//!     .with_weights_file("artifacts/lenet5_sc.weights.bin")
+//!     .with_k(256);
+//! let pool = EnginePool::open(
+//!     PoolConfig::replicated(cfg, 4).with_placement(Placement::LeastQueueDepth),
+//! ).unwrap();
+//! let _logits = pool.infer(vec![0.0; 28 * 28]).unwrap();
+//! println!("{}", pool.metrics().summary());
+//! ```
+//!
+//! **Do not submit directly to a shard session while streaming through the
+//! pool** ([`EnginePool::submit`]/[`EnginePool::drain`]): the pool's
+//! ordered drain assumes it is the only submitter on its shards and
+//! reports a typed desynchronization error otherwise.
+
+use crate::engine::config::EngineConfig;
+use crate::engine::error::EngineError;
+use crate::engine::metrics::{PoolMetrics, SessionMetrics};
+use crate::engine::{lock_recover, Session, Ticket, TrySubmit};
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// How the router places a request on a shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Rotate over healthy shards (the default; maximizes batching under
+    /// uniform load).
+    RoundRobin,
+    /// Send each request to the healthy shard with the fewest requests in
+    /// flight (adapts to heterogeneous shards / skewed request cost).
+    LeastQueueDepth,
+    /// Hash the request key onto a shard: the same key always lands on the
+    /// same shard while the shard set's health is unchanged (cache
+    /// affinity). Keyless requests fall back to round-robin.
+    HashKey,
+}
+
+impl Placement {
+    /// Stable lowercase label (CLI values, metrics).
+    pub fn label(self) -> &'static str {
+        match self {
+            Placement::RoundRobin => "round-robin",
+            Placement::LeastQueueDepth => "least-queue-depth",
+            Placement::HashKey => "hash-key",
+        }
+    }
+}
+
+impl std::fmt::Display for Placement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+impl FromStr for Placement {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" | "roundrobin" => Placement::RoundRobin,
+            "least" | "least-queue" | "least-queue-depth" => Placement::LeastQueueDepth,
+            "hash" | "hash-key" | "affinity" => Placement::HashKey,
+            other => bail!("unknown placement {other:?} (rr|least|hash)"),
+        })
+    }
+}
+
+/// Typed, builder-style configuration for [`EnginePool::open`].
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// One engine configuration per shard. Heterogeneous configs are
+    /// allowed (different backends / k tiers / nets behind one front
+    /// door) as long as every shard has the same input and output length.
+    pub shards: Vec<EngineConfig>,
+    /// Router placement policy.
+    pub placement: Placement,
+    /// Global admission bound: the most requests that may be in flight
+    /// (admitted-but-unfinished) across the whole pool before further
+    /// requests are shed with [`EngineError::Rejected`]. `0` (default)
+    /// means the sum of the shards' per-session `BatchPolicy::queue_depth`.
+    pub queue_depth: usize,
+}
+
+impl PoolConfig {
+    /// A homogeneous pool: `n` shards of one configuration (the common
+    /// case; the shared plan cache compiles their artifact once).
+    pub fn replicated(cfg: EngineConfig, n: usize) -> Self {
+        PoolConfig {
+            shards: vec![cfg; n.max(1)],
+            placement: Placement::RoundRobin,
+            queue_depth: 0,
+        }
+    }
+
+    /// A heterogeneous pool from explicit per-shard configurations.
+    pub fn heterogeneous(shards: Vec<EngineConfig>) -> Self {
+        PoolConfig { shards, placement: Placement::RoundRobin, queue_depth: 0 }
+    }
+
+    /// Set the router placement policy.
+    pub fn with_placement(mut self, placement: Placement) -> Self {
+        self.placement = placement;
+        self
+    }
+
+    /// Set the global admission bound (0 = sum of shard queue depths).
+    pub fn with_queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth;
+        self
+    }
+
+    /// The admission bound [`EnginePool::open`] will enforce.
+    pub fn effective_queue_depth(&self) -> usize {
+        if self.queue_depth > 0 {
+            self.queue_depth
+        } else {
+            self.shards
+                .iter()
+                .map(|c| c.batch.queue_depth.max(1))
+                .sum::<usize>()
+                .max(1)
+        }
+    }
+
+    /// Check internal consistency without opening anything: at least one
+    /// shard, every shard config valid, and one front door — all shards
+    /// agree on input and output length.
+    pub fn validate(&self) -> Result<()> {
+        if self.shards.is_empty() {
+            bail!("pool config: a pool needs at least one shard");
+        }
+        for (i, cfg) in self.shards.iter().enumerate() {
+            cfg.validate().with_context(|| format!("pool config: shard {i}"))?;
+        }
+        let (in_len, out_len) = (self.shards[0].input_len(), self.shards[0].output_len());
+        for (i, cfg) in self.shards.iter().enumerate().skip(1) {
+            if cfg.input_len() != in_len || cfg.output_len() != out_len {
+                bail!(
+                    "pool config: shard {i} ({}, {}→{}) disagrees with shard 0 ({}→{}) — \
+                     heterogeneous shards must share one input/output shape",
+                    cfg.net.name,
+                    cfg.input_len(),
+                    cfg.output_len(),
+                    in_len,
+                    out_len
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Handle to one in-flight [`EnginePool::submit`] request. The sequence
+/// number ([`PoolTicket::seq`]) counts pool submissions from 0 in order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PoolTicket(u64);
+
+impl PoolTicket {
+    /// Submission sequence number (0-based, in submission order).
+    pub fn seq(self) -> u64 {
+        self.0
+    }
+}
+
+/// One shard: a session plus the router's view of it.
+struct Shard {
+    session: Session,
+    /// Sticky health flag, cleared when a request observes the shard's
+    /// worker gone. Combined with the session's own liveness at read time.
+    healthy: AtomicBool,
+    /// Requests currently routed to this shard (for least-queue-depth).
+    inflight: AtomicUsize,
+    /// Serializes submit-to-session with pool-pending registration so the
+    /// per-shard pending order always matches pool registration order.
+    submit_gate: Mutex<()>,
+}
+
+/// A pool-level outstanding submission.
+struct PendingEntry {
+    ticket: PoolTicket,
+    shard: usize,
+    inner: Ticket,
+}
+
+/// Why one routed attempt failed: the shard is gone (retry elsewhere) or
+/// the request itself failed on a live shard (propagate).
+enum RouteAttempt {
+    ShardDown,
+    Request(EngineError),
+}
+
+/// N session shards behind one router — see the module docs for the full
+/// feature tour, and the crate README's "Serving at scale" section for
+/// sizing guidance.
+pub struct EnginePool {
+    shards: Vec<Shard>,
+    placement: Placement,
+    queue_depth: usize,
+    rr: AtomicUsize,
+    /// Admitted-but-unfinished requests (the admission-control gauge).
+    admitted: AtomicUsize,
+    shed: AtomicUsize,
+    rerouted: AtomicUsize,
+    next_ticket: AtomicU64,
+    pending: Mutex<VecDeque<PendingEntry>>,
+    /// Serializes drains so concurrent drainers cannot split one shard's
+    /// result stream between them.
+    drain_gate: Mutex<()>,
+    closed: AtomicBool,
+    opened: Instant,
+}
+
+impl EnginePool {
+    /// Open every shard (sequentially; the shared plan cache makes
+    /// homogeneous shards compile their artifact once) and return the
+    /// routing front door.
+    pub fn open(config: PoolConfig) -> Result<Self> {
+        config.validate()?;
+        let queue_depth = config.effective_queue_depth();
+        let placement = config.placement;
+        let mut shards = Vec::with_capacity(config.shards.len());
+        for (i, cfg) in config.shards.into_iter().enumerate() {
+            let session = Session::open(cfg).with_context(|| format!("opening pool shard {i}"))?;
+            shards.push(Shard {
+                session,
+                healthy: AtomicBool::new(true),
+                inflight: AtomicUsize::new(0),
+                submit_gate: Mutex::new(()),
+            });
+        }
+        Ok(EnginePool {
+            shards,
+            placement,
+            queue_depth,
+            rr: AtomicUsize::new(0),
+            admitted: AtomicUsize::new(0),
+            shed: AtomicUsize::new(0),
+            rerouted: AtomicUsize::new(0),
+            next_ticket: AtomicU64::new(0),
+            pending: Mutex::new(VecDeque::new()),
+            drain_gate: Mutex::new(()),
+            closed: AtomicBool::new(false),
+            opened: Instant::now(),
+        })
+    }
+
+    /// Total shard count.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shards currently able to serve (healthy flag + live, unclosed
+    /// worker).
+    pub fn healthy_shards(&self) -> usize {
+        (0..self.shards.len()).filter(|&i| self.shard_healthy(i)).count()
+    }
+
+    /// Expected flattened input length (shard 0; validation guarantees all
+    /// shards agree).
+    pub fn in_len(&self) -> usize {
+        self.shards[0].session.in_len()
+    }
+
+    /// Flattened output length (class count).
+    pub fn out_len(&self) -> usize {
+        self.shards[0].session.out_len()
+    }
+
+    /// Borrow one shard's session (observability, tests, failure
+    /// injection). Do not stream `submit`s through it while also streaming
+    /// through the pool — see the module docs.
+    pub fn shard_session(&self, i: usize) -> Option<&Session> {
+        self.shards.get(i).map(|s| &s.session)
+    }
+
+    /// True once [`EnginePool::close`] has been called.
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    /// Number of submitted-but-undrained pool requests.
+    pub fn outstanding(&self) -> usize {
+        lock_recover(&self.pending).len()
+    }
+
+    /// Full liveness of a shard (sticky flag **and** the session's own
+    /// state) — what [`EnginePool::healthy_shards`] and metrics report.
+    fn shard_healthy(&self, i: usize) -> bool {
+        let s = &self.shards[i];
+        s.healthy.load(Ordering::Acquire)
+            && s.session.worker_alive()
+            && !s.session.is_closed()
+    }
+
+    /// What the router consults: the sticky flag alone. A shard that died
+    /// without the pool noticing yet is still routable; the first request
+    /// to hit it fails fast, marks it down, and reroutes — health is
+    /// *discovered through traffic*, keeping the hot routing path to one
+    /// atomic load.
+    fn shard_routable(&self, i: usize) -> bool {
+        self.shards[i].healthy.load(Ordering::Acquire)
+    }
+
+    fn mark_unhealthy(&self, i: usize) {
+        self.shards[i].healthy.store(false, Ordering::Release);
+    }
+
+    /// Route one request: a starting shard from the placement policy, then
+    /// a deterministic probe to the next routable shard.
+    fn pick(&self, key: Option<u64>) -> Result<usize, EngineError> {
+        let n = self.shards.len();
+        let start = match (self.placement, key) {
+            (Placement::HashKey, Some(h)) => (h % n as u64) as usize,
+            (Placement::LeastQueueDepth, _) => {
+                let mut best: Option<(usize, usize)> = None;
+                for i in 0..n {
+                    if !self.shard_routable(i) {
+                        continue;
+                    }
+                    let q = self.shards[i].inflight.load(Ordering::Relaxed);
+                    if best.is_none_or(|(_, bq)| q < bq) {
+                        best = Some((i, q));
+                    }
+                }
+                return best.map(|(i, _)| i).ok_or(EngineError::NoHealthyShards);
+            }
+            _ => self.rr.fetch_add(1, Ordering::Relaxed) % n,
+        };
+        for off in 0..n {
+            let i = (start + off) % n;
+            if self.shard_routable(i) {
+                return Ok(i);
+            }
+        }
+        Err(EngineError::NoHealthyShards)
+    }
+
+    /// The shard `key` maps to under hash placement right now (stable
+    /// while shard health is unchanged) — exposed for affinity-aware
+    /// clients and tests. This is a **pure** lookup: it consumes no
+    /// routing state (safe to poll from a metrics loop). Under placements
+    /// other than [`Placement::HashKey`] keyed requests ignore affinity;
+    /// the value still tells you where hash placement would put the key.
+    pub fn shard_for_key(&self, key: &str) -> Result<usize, EngineError> {
+        let n = self.shards.len();
+        let start = (hash_key(key) % n as u64) as usize;
+        for off in 0..n {
+            let i = (start + off) % n;
+            if self.shard_routable(i) {
+                return Ok(i);
+            }
+        }
+        Err(EngineError::NoHealthyShards)
+    }
+
+    /// Candidate order for one placement decision: the placement's first
+    /// choice, then every other routable shard (rotation order; sorted by
+    /// queue depth under [`Placement::LeastQueueDepth`]) — so one full
+    /// shard never starves a request another shard could queue.
+    fn candidates(&self, key: Option<u64>) -> Result<Vec<usize>, EngineError> {
+        let n = self.shards.len();
+        let first = self.pick(key)?;
+        let mut order = Vec::with_capacity(n);
+        order.push(first);
+        let mut rest: Vec<usize> = (1..n)
+            .map(|off| (first + off) % n)
+            .filter(|&j| self.shard_routable(j))
+            .collect();
+        if self.placement == Placement::LeastQueueDepth {
+            rest.sort_by_key(|&j| self.shards[j].inflight.load(Ordering::Relaxed));
+        }
+        order.extend(rest);
+        Ok(order)
+    }
+
+    /// Admission control: claim a global in-flight slot or shed.
+    fn admit(&self) -> Result<(), EngineError> {
+        if self.closed.load(Ordering::Acquire) {
+            return Err(EngineError::Closed);
+        }
+        let admitted = self
+            .admitted
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                (n < self.queue_depth).then_some(n + 1)
+            })
+            .is_ok();
+        if admitted {
+            Ok(())
+        } else {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            Err(EngineError::Rejected { retry_after_hint: self.retry_hint() })
+        }
+    }
+
+    fn unadmit(&self, n: usize) {
+        let _ = self.admitted.fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| {
+            Some(v.saturating_sub(n))
+        });
+    }
+
+    /// Backoff hint for shed requests: the worst recently observed request
+    /// latency across the shards, as measured by the session **workers**
+    /// (enqueue → response, queueing included, client-side dally excluded
+    /// — so a client that drains late cannot inflate the hint). Floored at
+    /// 100 µs before any request has completed.
+    fn retry_hint(&self) -> Duration {
+        let worst = self
+            .shards
+            .iter()
+            .map(|s| s.session.last_latency_us())
+            .max()
+            .unwrap_or(0);
+        Duration::from_micros(worst.max(100))
+    }
+
+    /// One blocking attempt on one shard, consuming the image (zero-copy
+    /// into the session on the happy path); classifies failures into
+    /// shard-down (reroutable) vs request-level (terminal).
+    fn infer_on_owned(&self, i: usize, image: Vec<f32>) -> Result<Vec<f32>, RouteAttempt> {
+        let shard = &self.shards[i];
+        shard.inflight.fetch_add(1, Ordering::Relaxed);
+        let res = shard.session.infer(image);
+        shard.inflight.fetch_sub(1, Ordering::Relaxed);
+        match res {
+            Ok(out) => Ok(out),
+            Err(e) => {
+                // Classify by the typed error first: a worker panicking
+                // mid-batch fails our recv before its exit guard flips the
+                // liveness flag, so the snapshot alone can race.
+                let folded = EngineError::from_request(e);
+                if folded.is_shard_fatal()
+                    || !shard.session.worker_alive()
+                    || shard.session.is_closed()
+                {
+                    self.mark_unhealthy(i);
+                    Err(RouteAttempt::ShardDown)
+                } else {
+                    Err(RouteAttempt::Request(folded))
+                }
+            }
+        }
+    }
+
+    /// True when a shard other than `except` is still routable — i.e. a
+    /// reroute after a failure on `except` could actually go somewhere.
+    fn another_routable(&self, except: usize) -> bool {
+        (0..self.shards.len()).any(|j| j != except && self.shard_routable(j))
+    }
+
+    /// Routed inference without admission accounting, consuming the image.
+    /// A retry copy is cloned only when a reroute is actually possible, so
+    /// single-shard pools move the image straight through with zero extra
+    /// allocation (parity with a bare session).
+    fn infer_routed_owned(
+        &self,
+        mut image: Vec<f32>,
+        key: Option<u64>,
+    ) -> Result<Vec<f32>, EngineError> {
+        loop {
+            // Each failed attempt marks its shard unhealthy, so this loop
+            // runs at most shards+1 times before NoHealthyShards.
+            let i = self.pick(key)?;
+            let retry = self.another_routable(i).then(|| image.clone());
+            match self.infer_on_owned(i, image) {
+                Ok(out) => return Ok(out),
+                Err(RouteAttempt::ShardDown) => {
+                    self.rerouted.fetch_add(1, Ordering::Relaxed);
+                    image = match retry {
+                        Some(img) => img,
+                        // The failed shard was the last routable one.
+                        None => return Err(EngineError::NoHealthyShards),
+                    };
+                }
+                Err(RouteAttempt::Request(e)) => return Err(e),
+            }
+        }
+    }
+
+    /// [`EnginePool::infer_routed_owned`] over a borrowed image.
+    fn infer_routed(&self, image: &[f32], key: Option<u64>) -> Result<Vec<f32>, EngineError> {
+        self.infer_routed_owned(image.to_vec(), key)
+    }
+
+    /// Classify one image (blocking), admission-controlled: a full global
+    /// queue sheds with [`EngineError::Rejected`] instead of waiting.
+    pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>, EngineError> {
+        self.admit()?;
+        let res = self.infer_routed_owned(image, None);
+        self.unadmit(1);
+        res
+    }
+
+    /// Classify one image with a routing key: under
+    /// [`Placement::HashKey`], equal keys land on the same healthy shard.
+    pub fn infer_keyed(&self, key: &str, image: Vec<f32>) -> Result<Vec<f32>, EngineError> {
+        self.admit()?;
+        let res = self.infer_routed_owned(image, Some(hash_key(key)));
+        self.unadmit(1);
+        res
+    }
+
+    /// Enqueue one request on a routed shard without waiting for its
+    /// result; collect with [`EnginePool::drain`]. Unlike
+    /// [`crate::engine::Session::submit`], a full pool **never blocks**: it
+    /// sheds with [`EngineError::Rejected`]. The admission slot is held
+    /// until the request is drained.
+    pub fn submit(&self, image: Vec<f32>) -> Result<PoolTicket, EngineError> {
+        self.submit_inner(image, None)
+    }
+
+    /// [`EnginePool::submit`] with a routing key (see
+    /// [`EnginePool::infer_keyed`]).
+    pub fn submit_keyed(&self, key: &str, image: Vec<f32>) -> Result<PoolTicket, EngineError> {
+        self.submit_inner(image, Some(hash_key(key)))
+    }
+
+    fn submit_inner(&self, image: Vec<f32>, key: Option<u64>) -> Result<PoolTicket, EngineError> {
+        self.admit()?;
+        // A full shard queue never parks the caller: the per-shard step is
+        // non-blocking (`Session::try_submit`), every candidate shard is
+        // probed once, and only when all of them report full is the
+        // request shed typed. The image *moves* through the probes —
+        // try_submit hands it back on every non-accepted outcome, so the
+        // streaming hot path never clones. Hash affinity gets exactly one
+        // candidate — spilling a keyed request onto a neighbor would break
+        // keyed caching.
+        let mut image = image;
+        loop {
+            let mut cands = match self.candidates(key) {
+                Ok(c) => c,
+                Err(e) => {
+                    self.unadmit(1);
+                    return Err(e);
+                }
+            };
+            if key.is_some() && self.placement == Placement::HashKey {
+                cands.truncate(1);
+            }
+            let mut saw_full = false;
+            let mut marked_down = false;
+            for i in cands {
+                if !self.shard_routable(i) {
+                    continue; // died since the candidate list was built
+                }
+                // The gate orders session-submit vs pool registration per
+                // shard, so drain can match tickets positionally.
+                let gate = lock_recover(&self.shards[i].submit_gate);
+                match self.shards[i].session.try_submit(image) {
+                    TrySubmit::Accepted(inner) => {
+                        let mut pending = lock_recover(&self.pending);
+                        let ticket =
+                            PoolTicket(self.next_ticket.fetch_add(1, Ordering::Relaxed));
+                        pending.push_back(PendingEntry { ticket, shard: i, inner });
+                        self.shards[i].inflight.fetch_add(1, Ordering::Relaxed);
+                        return Ok(ticket);
+                    }
+                    TrySubmit::Full(img) => {
+                        drop(gate);
+                        image = img;
+                        saw_full = true;
+                    }
+                    TrySubmit::Refused(e, img) if e.is_shard_fatal() => {
+                        drop(gate);
+                        image = img;
+                        self.mark_unhealthy(i);
+                        self.rerouted.fetch_add(1, Ordering::Relaxed);
+                        marked_down = true;
+                    }
+                    TrySubmit::Refused(e, _) => {
+                        drop(gate);
+                        self.unadmit(1);
+                        return Err(e);
+                    }
+                }
+            }
+            if saw_full {
+                self.unadmit(1);
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(EngineError::Rejected { retry_after_hint: self.retry_hint() });
+            }
+            if !marked_down {
+                // Nothing accepted, nothing full, nothing newly dead: no
+                // routable shard remains.
+                self.unadmit(1);
+                return Err(EngineError::NoHealthyShards);
+            }
+            // Some shards died this round: retry with fresh candidates
+            // (each round marks ≥1 shard down, so this terminates).
+        }
+    }
+
+    /// Wait for every outstanding [`EnginePool::submit`] and return the
+    /// results in pool submission order. Items stranded on a dead or
+    /// closed shard resolve to per-item typed lifecycle errors
+    /// ([`EngineError::WorkerDied`] / [`EngineError::Closed`]) and the
+    /// shard is marked unhealthy — a drain never hangs on a dead worker.
+    /// Returns [`EngineError::EmptyQueue`] when nothing is outstanding.
+    #[allow(clippy::type_complexity)]
+    pub fn drain(&self) -> Result<Vec<(PoolTicket, Result<Vec<f32>, EngineError>)>, EngineError> {
+        let _gate = lock_recover(&self.drain_gate);
+        let entries: Vec<PendingEntry> = {
+            let mut pending = lock_recover(&self.pending);
+            if pending.is_empty() {
+                return Err(EngineError::EmptyQueue);
+            }
+            pending.drain(..).collect()
+        };
+        Ok(entries.into_iter().map(|e| self.drain_entry(e)).collect())
+    }
+
+    /// Pop the **oldest** outstanding pool submission and wait for its
+    /// result — the single-step form of [`EnginePool::drain`]. Streaming
+    /// clients use it to drain incrementally on [`EngineError::Rejected`]
+    /// (freeing one admission slot) instead of collapsing the whole
+    /// pipeline, so the shard queues stay fed.
+    #[allow(clippy::type_complexity)]
+    pub fn drain_one(
+        &self,
+    ) -> Result<(PoolTicket, Result<Vec<f32>, EngineError>), EngineError> {
+        let _gate = lock_recover(&self.drain_gate);
+        let entry = match lock_recover(&self.pending).pop_front() {
+            None => return Err(EngineError::EmptyQueue),
+            Some(e) => e,
+        };
+        Ok(self.drain_entry(entry))
+    }
+
+    /// Resolve one pending entry: match it against its shard's oldest
+    /// submission, fold the result typed, update health / latency /
+    /// admission accounting.
+    fn drain_entry(&self, e: PendingEntry) -> (PoolTicket, Result<Vec<f32>, EngineError>) {
+        let res = match self.shards[e.shard].session.drain_one() {
+            Ok((inner, r)) if inner == e.inner => r.map_err(EngineError::from_request),
+            Ok((inner, _)) => Err(EngineError::Request(format!(
+                "pool drain desynchronized on shard {}: expected ticket {:?}, got \
+                 {inner:?} (were requests submitted directly to the shard session?)",
+                e.shard, e.inner
+            ))),
+            Err(EngineError::EmptyQueue) => Err(EngineError::Request(format!(
+                "pool drain desynchronized on shard {}: ticket {:?} already taken \
+                 (was the shard session drained directly?)",
+                e.shard, e.inner
+            ))),
+            Err(err) => Err(err),
+        };
+        let shard = &self.shards[e.shard];
+        if matches!(res, Err(ref err) if err.is_shard_fatal())
+            || !shard.session.worker_alive()
+            || shard.session.is_closed()
+        {
+            self.mark_unhealthy(e.shard);
+        }
+        shard.inflight.fetch_sub(1, Ordering::Relaxed);
+        self.unadmit(1);
+        (e.ticket, res)
+    }
+
+    /// Run a whole slice through the pool, split into contiguous chunks —
+    /// one per healthy shard — each pipelined through that shard's
+    /// [`Session::infer_batch`] (so per-shard dynamic batches fill to
+    /// `max_batch` with no linger stall, exactly like a single session);
+    /// results in input order. This is the **closed-loop** path: it
+    /// bypasses admission shedding (the caller is the only load source and
+    /// per-shard backpressure already bounds memory). For homogeneous SC
+    /// shards the outputs are bit-identical to a single session — all
+    /// shards share one compiled plan, and the stochastic datapath is
+    /// deterministic per image. A chunk stranded by a mid-batch shard
+    /// death is retried image-by-image on the survivors.
+    pub fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, EngineError> {
+        if self.closed.load(Ordering::Acquire) {
+            return Err(EngineError::Closed);
+        }
+        let n = images.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let workers: Vec<usize> =
+            (0..self.shards.len()).filter(|&i| self.shard_routable(i)).collect();
+        if workers.is_empty() {
+            return Err(EngineError::NoHealthyShards);
+        }
+        let per = n.div_ceil(workers.len());
+        let mut slot_init: Vec<Option<Result<Vec<f32>, EngineError>>> = Vec::new();
+        slot_init.resize_with(n, || None);
+        let slots = Mutex::new(slot_init);
+        std::thread::scope(|scope| {
+            for (ci, &wi) in workers.iter().enumerate() {
+                let lo = (ci * per).min(n);
+                let hi = ((ci + 1) * per).min(n);
+                if lo >= hi {
+                    continue;
+                }
+                let chunk = &images[lo..hi];
+                let slots = &slots;
+                scope.spawn(move || {
+                    // Advertise the chunk load so LeastQueueDepth routing
+                    // sees batch-saturated shards; released on completion.
+                    self.shards[wi].inflight.fetch_add(hi - lo, Ordering::Relaxed);
+                    match self.shards[wi].session.infer_batch(chunk) {
+                        Ok(outs) => {
+                            let mut g = lock_recover(slots);
+                            for (off, out) in outs.into_iter().enumerate() {
+                                g[lo + off] = Some(Ok(out));
+                            }
+                        }
+                        Err(e) => {
+                            // Whole-chunk failure. A dead shard strands the
+                            // chunk: mark it down and reroute each image to
+                            // the survivors; a request-level failure is
+                            // recorded for every image of the chunk (the
+                            // session's own infer_batch aborts on the
+                            // first error the same way). Classify by the
+                            // typed error first — the liveness snapshot
+                            // races a panicking worker's exit guard.
+                            let shard = &self.shards[wi].session;
+                            let err = EngineError::from_request(e);
+                            let shard_down = err.is_shard_fatal()
+                                || !shard.worker_alive()
+                                || shard.is_closed();
+                            if shard_down {
+                                self.mark_unhealthy(wi);
+                            }
+                            for (off, img) in chunk.iter().enumerate() {
+                                let res = if shard_down {
+                                    self.rerouted.fetch_add(1, Ordering::Relaxed);
+                                    self.infer_routed(img, None)
+                                } else {
+                                    Err(err.clone())
+                                };
+                                lock_recover(slots)[lo + off] = Some(res);
+                            }
+                        }
+                    }
+                    self.shards[wi].inflight.fetch_sub(hi - lo, Ordering::Relaxed);
+                });
+            }
+        });
+        let filled = slots.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let mut out = Vec::with_capacity(n);
+        for (i, slot) in filled.into_iter().enumerate() {
+            match slot {
+                Some(Ok(v)) => out.push(v),
+                Some(Err(e)) => return Err(e),
+                None => {
+                    return Err(EngineError::Request(format!(
+                        "image {i} was never served (batch worker exited early)"
+                    )))
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Gracefully drain and close the pool: new requests are refused with
+    /// [`EngineError::Closed`], every shard finishes its queued work, and
+    /// this call returns once all workers have exited. Results of earlier
+    /// submits stay collectable via [`EnginePool::drain`]. Idempotent.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        for s in &self.shards {
+            s.session.close();
+        }
+    }
+
+    /// Aggregated pool metrics (merged histograms/percentiles, per-shard
+    /// snapshots, shed/reroute counters, scaled hardware estimate).
+    pub fn metrics(&self) -> PoolMetrics {
+        let per_shard: Vec<SessionMetrics> =
+            self.shards.iter().map(|s| s.session.metrics()).collect();
+        PoolMetrics::aggregate(
+            per_shard,
+            self.healthy_shards(),
+            self.shed.load(Ordering::Relaxed),
+            self.rerouted.load(Ordering::Relaxed),
+            self.opened.elapsed(),
+        )
+    }
+}
+
+/// FNV-1a over the request key (stable across processes, unlike
+/// `DefaultHasher`), so hash affinity survives restarts. Shares the single
+/// audited implementation with the plan-cache fingerprint.
+fn hash_key(key: &str) -> u64 {
+    crate::engine::config::fnv1a_64(key.as_bytes())
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+    use crate::accel::layers::{LayerKind, LayerSpec, NetworkSpec};
+    use crate::accel::network::{LayerWeights, QuantizedWeights};
+    use crate::engine::BackendKind;
+    use crate::sc::quantize_bipolar;
+
+    fn tiny_net(name: &str) -> NetworkSpec {
+        NetworkSpec {
+            name: name.into(),
+            input: (1, 4, 4),
+            layers: vec![LayerSpec {
+                kind: LayerKind::Dense { inputs: 16, outputs: 3 },
+                relu: false,
+            }],
+        }
+    }
+
+    fn tiny_weights() -> QuantizedWeights {
+        let codes: Vec<Vec<u32>> = (0..3)
+            .map(|oc| {
+                (0..16)
+                    .map(|j| quantize_bipolar(((oc * 5 + j) % 9) as f64 / 4.5 - 1.0, 8))
+                    .collect()
+            })
+            .collect();
+        QuantizedWeights { bits: 8, layers: vec![LayerWeights { codes, gamma: 1.0, mu: 0.0 }] }
+    }
+
+    fn cfg() -> EngineConfig {
+        EngineConfig::new(BackendKind::Expectation, tiny_net("tiny-pool"))
+            .with_quantized(tiny_weights())
+    }
+
+    #[test]
+    fn placement_parses_and_round_trips() {
+        for p in [Placement::RoundRobin, Placement::LeastQueueDepth, Placement::HashKey] {
+            assert_eq!(p.label().parse::<Placement>().unwrap(), p);
+        }
+        assert_eq!("rr".parse::<Placement>().unwrap(), Placement::RoundRobin);
+        assert_eq!("least".parse::<Placement>().unwrap(), Placement::LeastQueueDepth);
+        assert_eq!("hash".parse::<Placement>().unwrap(), Placement::HashKey);
+        assert!("sticky".parse::<Placement>().is_err());
+    }
+
+    #[test]
+    fn pool_config_validation() {
+        assert!(PoolConfig::heterogeneous(Vec::new()).validate().is_err());
+        // Each shard config is validated (missing weights).
+        let bad = EngineConfig::new(BackendKind::StochasticFused, tiny_net("noweights"));
+        assert!(PoolConfig::replicated(bad, 2).validate().is_err());
+        // Front-door shape mismatch across shards.
+        let other = NetworkSpec {
+            name: "wide".into(),
+            input: (1, 4, 4),
+            layers: vec![LayerSpec {
+                kind: LayerKind::Dense { inputs: 16, outputs: 5 },
+                relu: false,
+            }],
+        };
+        let codes: Vec<Vec<u32>> = (0..5)
+            .map(|_| (0..16).map(|j| quantize_bipolar(j as f64 / 16.0, 8)).collect())
+            .collect();
+        let wide_cfg = EngineConfig::new(BackendKind::Expectation, other).with_quantized(
+            QuantizedWeights { bits: 8, layers: vec![LayerWeights { codes, gamma: 1.0, mu: 0.0 }] },
+        );
+        let err = PoolConfig::heterogeneous(vec![cfg(), wide_cfg])
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("front"), "{err}");
+        // Valid homogeneous config passes and sizes its admission queue.
+        let pc = PoolConfig::replicated(cfg(), 3);
+        pc.validate().unwrap();
+        assert_eq!(pc.effective_queue_depth(), 3 * cfg().batch.queue_depth);
+        assert_eq!(pc.with_queue_depth(7).effective_queue_depth(), 7);
+    }
+
+    #[test]
+    fn replicated_never_builds_an_empty_pool() {
+        let pc = PoolConfig::replicated(cfg(), 0);
+        assert_eq!(pc.shards.len(), 1, "0 shards clamps to 1");
+    }
+
+    #[test]
+    fn hash_key_is_stable_and_spreads() {
+        let a = hash_key("client-a");
+        assert_eq!(a, hash_key("client-a"));
+        assert_ne!(a, hash_key("client-b"));
+        // Pinned value: affinity must survive process restarts.
+        assert_eq!(hash_key(""), 0xcbf2_9ce4_8422_2325);
+    }
+
+    #[test]
+    fn round_robin_rotates_over_healthy_shards() {
+        let pool = EnginePool::open(PoolConfig::replicated(cfg(), 3)).unwrap();
+        let picks: Vec<usize> = (0..6).map(|_| pool.pick(None).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        pool.mark_unhealthy(1);
+        let picks: Vec<usize> = (0..4).map(|_| pool.pick(None).unwrap()).collect();
+        assert!(!picks.contains(&1), "unhealthy shard skipped: {picks:?}");
+        assert_eq!(pool.healthy_shards(), 2);
+    }
+
+    #[test]
+    fn least_queue_depth_prefers_empty_shards() {
+        let pool = EnginePool::open(
+            PoolConfig::replicated(cfg(), 2).with_placement(Placement::LeastQueueDepth),
+        )
+        .unwrap();
+        pool.shards[0].inflight.store(5, Ordering::Relaxed);
+        assert_eq!(pool.pick(None).unwrap(), 1);
+        pool.shards[1].inflight.store(9, Ordering::Relaxed);
+        assert_eq!(pool.pick(None).unwrap(), 0);
+    }
+}

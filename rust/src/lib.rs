@@ -14,6 +14,16 @@
 //! `submit`/`drain` path, and records per-session metrics — latency
 //! histogram, throughput, and the modeled hardware cost of the run.
 //!
+//! For serving at scale, [`engine::EnginePool`] shards N sessions behind
+//! one router (round-robin / least-queue-depth / hash-affinity placement),
+//! with admission-control shedding (typed
+//! [`engine::EngineError::Rejected`]), automatic rerouting away from dead
+//! shards, graceful drain, a process-wide compiled-plan cache (homogeneous
+//! shards compile once), and merged [`engine::PoolMetrics`]. The request
+//! path is panic-free by construction: `engine/` and `coordinator/` build
+//! under `#![deny(clippy::unwrap_used)]`, and every failure mode is a
+//! typed [`engine::EngineError`].
+//!
 //! | Backend kind        | What it runs                              | Contract                           |
 //! |---------------------|-------------------------------------------|------------------------------------|
 //! | `StochasticFused`   | fused word-packed bit-exact SC datapath   | bit-identical to `ReferencePerBit` |

@@ -21,7 +21,9 @@ use anyhow::{anyhow, bail, Context, Result};
 use scnn::accel::network::QuantizedWeights;
 use scnn::accel::{channel, layers::NetworkSpec, metrics::argmin_by};
 use scnn::data::{Artifacts, Dataset};
-use scnn::engine::{classify, BackendKind, BatchPolicy, Engine, EngineConfig};
+use scnn::engine::{
+    classify, BackendKind, BatchPolicy, Engine, EngineConfig, EngineError, Placement, PoolConfig,
+};
 use scnn::tech::TechKind;
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
@@ -113,10 +115,12 @@ fn print_help() {
                      --net lenet5|cifar_net|mnist_strided (--synthetic for\n\
                      stand-in weights) --k K --bits B --batch-max M\n\
                      --linger-ms L --queue-depth Q --threads T\n\
-                     stream the test set through an engine session\n\
+                     --shards S --placement rr|least|hash --pool-queue-depth P\n\
+                     stream the test set through a sharded engine pool\n\
            simulate  --mode stochastic|reference|expectation|noisy|fixed\n\
                      --net NAME --synthetic --k K --bits B --n N --threads T\n\
-                     --seed S   batched in-process inference over the test set\n\
+                     --seed S --shards S\n\
+                     batched in-process inference over the test set\n\
            sweep     --tech rfet|finfet --net NAME --max-channels C --k K\n\
                      Fig. 13 design space via Engine::estimate\n\
            report    --table 1|2|3                        paper tables\n"
@@ -202,6 +206,21 @@ fn net_config(
     Ok(cfg)
 }
 
+/// Lower the CLI flags into a pool configuration: `--shards` replicas of
+/// the per-session config behind a `--placement` router, with an optional
+/// `--pool-queue-depth` admission bound (0 = sum of shard depths).
+fn pool_config(
+    kind: BackendKind,
+    artifacts: &Artifacts,
+    flags: &HashMap<String, String>,
+) -> Result<PoolConfig> {
+    let shards: usize = flag(flags, "shards", 1)?;
+    let placement: Placement = flag(flags, "placement", Placement::RoundRobin)?;
+    Ok(PoolConfig::replicated(net_config(kind, artifacts, flags)?, shards)
+        .with_placement(placement)
+        .with_queue_depth(flag(flags, "pool-queue-depth", 0)?))
+}
+
 fn serve(flags: &HashMap<String, String>) -> Result<()> {
     let artifacts = Artifacts::new(flag::<String>(flags, "artifacts", "artifacts".into())?);
     let n: usize = flag(flags, "n", 200)?;
@@ -212,20 +231,40 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     let ds = Dataset::load(&artifacts.dataset("digits"))?;
     check_dataset_fits(&ds, &net_flag(flags)?)?;
     let n = n.min(ds.len());
-    let session =
-        Engine::open(net_config(kind, &artifacts, flags)?).context("opening engine session")?;
+    let pcfg = pool_config(kind, &artifacts, flags)?;
+    let admission_depth = pcfg.effective_queue_depth();
+    let pool = Engine::open_pool(pcfg).context("opening engine pool")?;
 
-    // The streaming serve path: submit everything (backpressure caps the
-    // in-flight set), then drain in submission order.
+    // The streaming serve path: submit everything through the pool router,
+    // drain in submission order. A full admission queue sheds with a typed
+    // `Rejected` — the CLI reacts the way a well-behaved client would:
+    // drain ONE completed result (freeing one admission slot) and resubmit,
+    // keeping the shard queues fed instead of collapsing the pipeline.
     let t = Instant::now();
+    let mut collected: Vec<Option<Result<Vec<f32>, EngineError>>> = Vec::with_capacity(n);
+    collected.resize_with(n, || None);
     for img in &ds.images[..n] {
-        session.submit(img.clone())?;
+        loop {
+            match pool.submit(img.clone()) {
+                Ok(_) => break,
+                Err(EngineError::Rejected { .. }) => {
+                    let (ticket, res) = pool.drain_one()?;
+                    collected[ticket.seq() as usize] = Some(res);
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
     }
-    let results = session.drain();
+    if pool.outstanding() > 0 {
+        for (ticket, res) in pool.drain()? {
+            collected[ticket.seq() as usize] = Some(res);
+        }
+    }
     let wall = t.elapsed();
     let mut correct = 0usize;
-    for ((_, res), &label) in results.iter().zip(&ds.labels[..n]) {
-        let logits = res.as_ref().map_err(|e| anyhow!("request failed: {e}"))?;
+    for (i, (slot, &label)) in collected.iter().zip(&ds.labels[..n]).enumerate() {
+        let res = slot.as_ref().ok_or_else(|| anyhow!("request {i} was never drained"))?;
+        let logits = res.as_ref().map_err(|e| anyhow!("request {i} failed: {e}"))?;
         correct += (classify(logits) == label as usize) as usize;
     }
     println!(
@@ -234,18 +273,12 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         n as f64 / wall.as_secs_f64()
     );
     println!("accuracy: {:.2}% ({correct}/{n})", 100.0 * correct as f64 / n as f64);
-    print!("{}", session.metrics().summary());
+    print!("{}", pool.metrics().summary());
     println!(
-        "(open-loop submit/drain: latencies include queueing at depth {})",
-        session_queue_depth(flags)?
+        "(open-loop submit/drain: latencies include queueing; pool admission depth \
+         {admission_depth})"
     );
     Ok(())
-}
-
-/// The effective serve queue depth (mirrors the `lenet_config` default).
-fn session_queue_depth(flags: &HashMap<String, String>) -> Result<usize> {
-    let max_batch: usize = flag(flags, "batch-max", 32)?;
-    flag(flags, "queue-depth", 2 * max_batch.max(1))
 }
 
 fn simulate(flags: &HashMap<String, String>) -> Result<()> {
@@ -258,11 +291,12 @@ fn simulate(flags: &HashMap<String, String>) -> Result<()> {
     let ds = Dataset::load(&artifacts.dataset("digits"))?;
     check_dataset_fits(&ds, &net_flag(flags)?)?;
     let n = n.min(ds.len());
-    let session = Engine::open(net_config(kind, &artifacts, flags)?)?;
+    let pool = Engine::open_pool(pool_config(kind, &artifacts, flags)?)?;
     let t = Instant::now();
-    // One pipelined batch: the plan (gathers, randoms, weight streams) is
-    // compiled once at open and the images fan out across cores.
-    let outputs = session.infer_batch(&ds.images[..n])?;
+    // One pipelined batch fanned over the shards: each shard's plan
+    // (gathers, randoms, weight streams) is compiled once at open — and
+    // homogeneous shards share a single plan through the artifact cache.
+    let outputs = pool.infer_batch(&ds.images[..n])?;
     let correct = outputs
         .iter()
         .zip(&ds.labels[..n])
@@ -274,7 +308,7 @@ fn simulate(flags: &HashMap<String, String>) -> Result<()> {
         t.elapsed().as_secs_f64(),
         n as f64 / t.elapsed().as_secs_f64()
     );
-    print!("{}", session.metrics().summary());
+    print!("{}", pool.metrics().summary());
     Ok(())
 }
 

@@ -1,9 +1,15 @@
 //! Configurable adder tree (§IV-A): sums the APC outputs of several MAC
 //! units so neurons wider than one MAC's 25 inputs (fully connected layers)
 //! can be formed; bypassed for convolutional layers.
+//!
+//! Degenerate inputs (no operands, mismatched widths) are **typed errors**,
+//! not panics: these builders run during session/pool startup and channel
+//! characterization, where a malformed request must surface as a
+//! recoverable error instead of unwinding a worker thread.
 
 use crate::netlist::{NetId, Netlist};
 use crate::sc::apc::FaStyle;
+use anyhow::{bail, Result};
 
 /// Behavioral adder tree: plain summation (the hardware is exact).
 pub fn sum(values: &[u64]) -> u64 {
@@ -11,14 +17,20 @@ pub fn sum(values: &[u64]) -> u64 {
 }
 
 /// Emit a ripple-carry adder for two equal-width operands; returns
-/// `width + 1` output bits (LSB first).
+/// `width + 1` output bits (LSB first). Empty or unequal operands are a
+/// typed error.
 pub fn build_ripple_adder(
     nl: &mut Netlist,
     style: FaStyle,
     a: &[NetId],
     b: &[NetId],
-) -> Vec<NetId> {
-    assert_eq!(a.len(), b.len(), "ripple adder needs equal widths");
+) -> Result<Vec<NetId>> {
+    if a.is_empty() {
+        bail!("ripple adder needs operand width >= 1");
+    }
+    if a.len() != b.len() {
+        bail!("ripple adder needs equal widths, got {} vs {}", a.len(), b.len());
+    }
     let mut out = Vec::with_capacity(a.len() + 1);
     let mut carry: Option<NetId> = None;
     for i in 0..a.len() {
@@ -32,21 +44,29 @@ pub fn build_ripple_adder(
         out.push(s);
         carry = Some(cy);
     }
-    out.push(carry.expect("width >= 1"));
-    out
+    match carry {
+        Some(c) => out.push(c),
+        None => bail!("ripple adder produced no carry for width {}", a.len()),
+    }
+    Ok(out)
 }
 
 /// Build a balanced adder tree over `operands` (each a little-endian bit
 /// vector of identical width). Returns the sum bits (LSB first, width
-/// `w + ceil(log2(m))`).
+/// `w + ceil(log2(m))`). A single operand passes through unchanged; zero
+/// operands (and mismatched widths) are typed errors.
 pub fn build_adder_tree(
     nl: &mut Netlist,
     style: FaStyle,
     operands: &[Vec<NetId>],
-) -> Vec<NetId> {
-    assert!(!operands.is_empty());
+) -> Result<Vec<NetId>> {
+    if operands.is_empty() {
+        bail!("adder tree needs >= 1 operand");
+    }
     let w = operands[0].len();
-    assert!(operands.iter().all(|o| o.len() == w), "operand width mismatch");
+    if let Some(bad) = operands.iter().position(|o| o.len() != w) {
+        bail!("adder tree operand {bad} has width {}, expected {w}", operands[bad].len());
+    }
     let mut level: Vec<Vec<NetId>> = operands.to_vec();
     while level.len() > 1 {
         let mut next = Vec::with_capacity(level.len().div_ceil(2));
@@ -66,26 +86,33 @@ pub fn build_adder_tree(
                 };
                 let a = pad(nl, &pair[0]);
                 let b = pad(nl, &pair[1]);
-                next.push(build_ripple_adder(nl, style, &a, &b));
+                next.push(build_ripple_adder(nl, style, &a, &b)?);
             } else {
                 next.push(pair[0].clone());
             }
         }
         level = next;
     }
-    level.pop().unwrap()
+    match level.pop() {
+        Some(bits) => Ok(bits),
+        None => bail!("adder tree reduction lost its root level"),
+    }
 }
 
 /// Build a standalone adder-tree netlist summing `m` operands of `width`
 /// bits (PIs: operand 0 bits, operand 1 bits, ...; POs: the sum).
-pub fn build_netlist(m: usize, width: usize, style: FaStyle) -> Netlist {
+/// `m == 0` or `width == 0` are typed errors.
+pub fn build_netlist(m: usize, width: usize, style: FaStyle) -> Result<Netlist> {
+    if width == 0 {
+        bail!("adder tree needs operand width >= 1");
+    }
     let mut nl = Netlist::new(format!("adder_tree_{m}x{width}b_{style:?}"));
     let operands: Vec<Vec<NetId>> = (0..m).map(|_| nl.inputs(width)).collect();
-    let sum_bits = build_adder_tree(&mut nl, style, &operands);
+    let sum_bits = build_adder_tree(&mut nl, style, &operands)?;
     for &b in &sum_bits {
         nl.mark_output(b);
     }
-    nl
+    Ok(nl)
 }
 
 #[cfg(test)]
@@ -110,7 +137,7 @@ mod tests {
             let mut nl = Netlist::new("add");
             let a = nl.inputs(6);
             let b = nl.inputs(6);
-            let out = build_ripple_adder(&mut nl, style, &a, &b);
+            let out = build_ripple_adder(&mut nl, style, &a, &b).unwrap();
             for &o in &out {
                 nl.mark_output(o);
             }
@@ -131,10 +158,23 @@ mod tests {
     }
 
     #[test]
+    fn ripple_adder_rejects_degenerate_operands() {
+        let mut nl = Netlist::new("bad");
+        // Empty operands.
+        let err = build_ripple_adder(&mut nl, FaStyle::CmosCell, &[], &[]).unwrap_err();
+        assert!(err.to_string().contains("width >= 1"), "{err}");
+        // Mismatched widths.
+        let a = nl.inputs(3);
+        let b = nl.inputs(2);
+        let err = build_ripple_adder(&mut nl, FaStyle::CmosCell, &a, &b).unwrap_err();
+        assert!(err.to_string().contains("equal widths"), "{err}");
+    }
+
+    #[test]
     fn tree_sums_many_operands() {
         for m in [2usize, 3, 6, 16] {
             let width = 5;
-            let nl = build_netlist(m, width, FaStyle::CmosCell);
+            let nl = build_netlist(m, width, FaStyle::CmosCell).unwrap();
             let mut ev = Evaluator::new(&nl);
             let mut rng = xorshift(m as u64);
             for _ in 0..50 {
@@ -150,6 +190,42 @@ mod tests {
                 assert_eq!(decode_output(&ev.outputs()), sum(&vals), "m={m} {vals:?}");
             }
         }
+    }
+
+    #[test]
+    fn zero_operands_is_a_typed_error() {
+        let mut nl = Netlist::new("empty");
+        let err = build_adder_tree(&mut nl, FaStyle::CmosCell, &[]).unwrap_err();
+        assert!(err.to_string().contains(">= 1 operand"), "{err}");
+        assert!(build_netlist(0, 5, FaStyle::CmosCell).is_err());
+        assert!(build_netlist(4, 0, FaStyle::CmosCell).is_err());
+    }
+
+    #[test]
+    fn one_operand_passes_through_identity() {
+        // The 1-input tree adds no gates: the sum IS the operand.
+        let mut nl = Netlist::new("one");
+        let op = nl.inputs(4);
+        let out = build_adder_tree(&mut nl, FaStyle::RfetCompact, &[op.clone()]).unwrap();
+        assert_eq!(out, op, "single operand returned unchanged");
+        // And evaluates as the identity through a full netlist.
+        let nl = build_netlist(1, 4, FaStyle::CmosCell).unwrap();
+        let mut ev = Evaluator::new(&nl);
+        for v in [0u64, 5, 15] {
+            let pins: Vec<bool> = (0..4).map(|i| (v >> i) & 1 == 1).collect();
+            ev.set_inputs(&pins);
+            ev.propagate();
+            assert_eq!(decode_output(&ev.outputs()), v);
+        }
+    }
+
+    #[test]
+    fn mismatched_operand_widths_are_typed_errors() {
+        let mut nl = Netlist::new("mixed");
+        let a = nl.inputs(4);
+        let b = nl.inputs(3);
+        let err = build_adder_tree(&mut nl, FaStyle::CmosCell, &[a, b]).unwrap_err();
+        assert!(err.to_string().contains("width"), "{err}");
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! the cost of an upward bias for correlated/high-density inputs.
 
 use crate::netlist::{NetId, Netlist};
+use anyhow::{bail, Result};
 
 /// Which full-adder implementation the netlist instantiates.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -97,43 +98,50 @@ fn fa(nl: &mut Netlist, style: FaStyle, a: NetId, b: NetId, c: NetId) -> (NetId,
 }
 
 /// Reduce `inputs` weight-1 bits to a binary count (LSB first) with a
-/// Wallace-style column reduction of FAs/HAs.
+/// Wallace-style column reduction of FAs/HAs. An empty input slice is a
+/// typed error (the reduction has no defined output width), and the column
+/// pops are checked: a malformed reduction surfaces as an error instead of
+/// a panic during session/channel construction.
 pub fn build_parallel_counter(
     nl: &mut Netlist,
     style: FaStyle,
     inputs: &[NetId],
-) -> Vec<NetId> {
-    assert!(!inputs.is_empty());
+) -> Result<Vec<NetId>> {
+    if inputs.is_empty() {
+        bail!("parallel counter needs >= 1 input");
+    }
     let out_bits = (usize::BITS - inputs.len().leading_zeros()) as usize;
     let mut columns: Vec<Vec<NetId>> = vec![Vec::new(); out_bits];
     columns[0] = inputs.to_vec();
     for w in 0..out_bits {
         while columns[w].len() > 1 {
-            if columns[w].len() >= 3 {
-                let c = columns[w].pop().unwrap();
-                let b = columns[w].pop().unwrap();
-                let a = columns[w].pop().unwrap();
-                let (s, cy) = fa(nl, style, a, b, c);
-                columns[w].insert(0, s);
-                if w + 1 < out_bits {
-                    columns[w + 1].push(cy);
+            let (s, cy) = if columns[w].len() >= 3 {
+                match (columns[w].pop(), columns[w].pop(), columns[w].pop()) {
+                    (Some(c), Some(b), Some(a)) => fa(nl, style, a, b, c),
+                    _ => bail!("parallel counter column {w} under-ran a full adder"),
                 }
-                // A full column at max weight cannot carry out: the count
-                // fits in out_bits by construction.
             } else {
-                let b = columns[w].pop().unwrap();
-                let a = columns[w].pop().unwrap();
-                let (s, cy) = nl.half_adder(a, b);
-                columns[w].insert(0, s);
-                if w + 1 < out_bits {
-                    columns[w + 1].push(cy);
+                match (columns[w].pop(), columns[w].pop()) {
+                    (Some(b), Some(a)) => nl.half_adder(a, b),
+                    _ => bail!("parallel counter column {w} under-ran a half adder"),
                 }
+            };
+            columns[w].insert(0, s);
+            if w + 1 < out_bits {
+                columns[w + 1].push(cy);
             }
+            // A full column at max weight cannot carry out: the count
+            // fits in out_bits by construction.
         }
     }
     columns
         .into_iter()
-        .map(|col| col.into_iter().next().expect("column reduced to one bit"))
+        .enumerate()
+        .map(|(w, col)| {
+            col.into_iter()
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("counter column {w} empty after reduction"))
+        })
         .collect()
 }
 
@@ -141,11 +149,15 @@ pub fn build_parallel_counter(
 /// sized for `max_cycles` of accumulation.
 ///
 /// Primary inputs: the `inputs` parallel bits. Primary outputs: the
-/// accumulator register (LSB first).
-pub fn build_netlist(inputs: usize, max_cycles: usize, style: FaStyle) -> Netlist {
+/// accumulator register (LSB first). `inputs == 0` and `max_cycles == 0`
+/// (which has no defined accumulator width) are typed errors.
+pub fn build_netlist(inputs: usize, max_cycles: usize, style: FaStyle) -> Result<Netlist> {
+    if max_cycles == 0 {
+        bail!("APC needs max_cycles >= 1 to size its accumulator");
+    }
     let mut nl = Netlist::new(format!("apc_{inputs}in_{max_cycles}cyc_{style:?}"));
     let ins = nl.inputs(inputs);
-    let count = build_parallel_counter(&mut nl, style, &ins);
+    let count = build_parallel_counter(&mut nl, style, &ins)?;
     let cnt_bits = count.len();
     // Accumulator width: counter bits + ceil(log2(max_cycles)).
     let acc_bits = cnt_bits + (usize::BITS - (max_cycles - 1).leading_zeros()) as usize;
@@ -186,7 +198,7 @@ pub fn build_netlist(inputs: usize, max_cycles: usize, style: FaStyle) -> Netlis
     for &q in &qs {
         nl.mark_output(q);
     }
-    nl
+    Ok(nl)
 }
 
 /// Read an accumulator value from netlist outputs (LSB first).
@@ -221,10 +233,10 @@ mod tests {
     #[test]
     fn parallel_counter_counts_exactly() {
         for style in [FaStyle::CmosCell, FaStyle::RfetCompact] {
-            for n in [3usize, 7, 15, 25] {
+            for n in [1usize, 2, 3, 7, 15, 25] {
                 let mut nl = Netlist::new("pc");
                 let ins = nl.inputs(n);
-                let outs = build_parallel_counter(&mut nl, style, &ins);
+                let outs = build_parallel_counter(&mut nl, style, &ins).unwrap();
                 for &o in &outs {
                     nl.mark_output(o);
                 }
@@ -247,22 +259,56 @@ mod tests {
         // The 25-input counter must use 20 FA + 2 HA (DESIGN.md §Calibration).
         let mut nl = Netlist::new("pc25");
         let ins = nl.inputs(25);
-        let _ = build_parallel_counter(&mut nl, FaStyle::CmosCell, &ins);
+        let _ = build_parallel_counter(&mut nl, FaStyle::CmosCell, &ins).unwrap();
         let counts = nl.cell_counts();
         assert_eq!(counts[&CellKind::FullAdder], 20);
         assert_eq!(counts[&CellKind::HalfAdder], 2);
     }
 
     #[test]
+    fn degenerate_inputs_are_typed_errors() {
+        // 0-input counter: no defined output width.
+        let mut nl = Netlist::new("pc0");
+        let err = build_parallel_counter(&mut nl, FaStyle::CmosCell, &[]).unwrap_err();
+        assert!(err.to_string().contains(">= 1 input"), "{err}");
+        assert!(build_netlist(0, 32, FaStyle::CmosCell).is_err());
+        // 0-cycle APC: the accumulator-width formula would underflow.
+        let err = build_netlist(25, 0, FaStyle::CmosCell).unwrap_err();
+        assert!(err.to_string().contains("max_cycles"), "{err}");
+    }
+
+    #[test]
+    fn one_input_counter_is_a_wire() {
+        // The 1-input counter adds no arithmetic cells: count == the bit.
+        let mut nl = Netlist::new("pc1");
+        let ins = nl.inputs(1);
+        let outs = build_parallel_counter(&mut nl, FaStyle::CmosCell, &ins).unwrap();
+        assert_eq!(outs, ins);
+        let counts = nl.cell_counts();
+        assert!(!counts.contains_key(&CellKind::FullAdder));
+        assert!(!counts.contains_key(&CellKind::HalfAdder));
+        // And a full 1-input APC still accumulates correctly.
+        let nl = build_netlist(1, 8, FaStyle::CmosCell).unwrap();
+        let mut ev = Evaluator::new(&nl);
+        for _ in 0..5 {
+            ev.set_inputs(&[true]);
+            ev.propagate();
+            ev.tick();
+        }
+        ev.propagate();
+        assert_eq!(decode_output(&ev.outputs()), 5);
+    }
+
+    #[test]
     fn apc25_structure_matches_calibration() {
         // Full APC (k=32): 24 FA + 8 HA + 10 DFF.
-        let nl = build_netlist(25, 32, FaStyle::CmosCell);
+        let nl = build_netlist(25, 32, FaStyle::CmosCell).unwrap();
         let counts = nl.cell_counts();
         assert_eq!(counts[&CellKind::FullAdder], 24);
         assert_eq!(counts[&CellKind::HalfAdder], 8);
         assert_eq!(counts[&CellKind::Dff], 10);
         // RFET flavor: 24 XOR3 + 24 MAJ3 (+ 2 inv each) instead of FA cells.
-        let rf = build_netlist(25, 32, FaStyle::RfetCompact);
+        let rf = build_netlist(25, 32, FaStyle::RfetCompact).unwrap();
         let rc = rf.cell_counts();
         assert_eq!(rc[&CellKind::Xor3], 24);
         assert_eq!(rc[&CellKind::Maj3], 24);
@@ -275,7 +321,7 @@ mod tests {
         for style in [FaStyle::CmosCell, FaStyle::RfetCompact] {
             let n = 15;
             let k = 32;
-            let nl = build_netlist(n, k, style);
+            let nl = build_netlist(n, k, style).unwrap();
             let mut ev = Evaluator::new(&nl);
             let mut model = Apc::new(n);
             let mut rng = xorshift(99);

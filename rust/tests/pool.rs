@@ -1,0 +1,288 @@
+//! Integration tests for `engine::EnginePool`: cross-shard bit-exactness,
+//! admission-control load shedding, hash-affinity routing, worker-death
+//! recovery, graceful close, and shared-plan reuse — the serving contract
+//! of ISSUE 4's acceptance criteria.
+
+use scnn::accel::layers::{LayerKind, LayerSpec, NetworkSpec};
+use scnn::accel::network::{LayerWeights, QuantizedWeights};
+use scnn::engine::{
+    backend, BackendKind, BatchPolicy, Engine, EngineConfig, EngineError, EnginePool, Placement,
+    PoolConfig,
+};
+use scnn::sc::quantize_bipolar;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tiny_net() -> NetworkSpec {
+    NetworkSpec {
+        name: "pool-tiny".into(),
+        input: (1, 4, 4),
+        layers: vec![LayerSpec {
+            kind: LayerKind::Dense { inputs: 16, outputs: 4 },
+            relu: false,
+        }],
+    }
+}
+
+fn tiny_weights() -> QuantizedWeights {
+    let codes: Vec<Vec<u32>> = (0..4)
+        .map(|oc| {
+            (0..16)
+                .map(|j| quantize_bipolar(((oc * 3 + j) % 13) as f64 / 6.5 - 1.0, 8))
+                .collect()
+        })
+        .collect();
+    QuantizedWeights { bits: 8, layers: vec![LayerWeights { codes, gamma: 1.0, mu: 0.0 }] }
+}
+
+fn fused_cfg(k: usize) -> EngineConfig {
+    EngineConfig::new(BackendKind::StochasticFused, tiny_net())
+        .with_quantized(tiny_weights())
+        .with_k(k)
+        .with_batch(BatchPolicy { linger: Duration::from_millis(1), ..BatchPolicy::default() })
+}
+
+fn images(n: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|i| (0..16).map(|j| ((i * 5 + j) % 11) as f32 / 11.0).collect()).collect()
+}
+
+#[test]
+fn multi_shard_pool_is_bit_identical_to_single_session() {
+    let imgs = images(16);
+    let single = Engine::open(fused_cfg(64)).unwrap();
+    let expected = single.infer_batch(&imgs).unwrap();
+
+    for shards in [2usize, 3] {
+        let pool = EnginePool::open(PoolConfig::replicated(fused_cfg(64), shards)).unwrap();
+        assert_eq!(pool.shards(), shards);
+        assert_eq!(pool.healthy_shards(), shards);
+        // The closed-loop batch path (fans across every shard).
+        let batch = pool.infer_batch(&imgs).unwrap();
+        assert_eq!(batch, expected, "{shards}-shard batch is bit-identical");
+        // The routed single-request path.
+        for (i, img) in imgs.iter().enumerate() {
+            assert_eq!(
+                pool.infer(img.clone()).unwrap(),
+                expected[i],
+                "{shards}-shard infer image {i}"
+            );
+        }
+        // The streaming path, in submission order.
+        let mut tickets = Vec::new();
+        for img in &imgs {
+            tickets.push(pool.submit(img.clone()).unwrap());
+        }
+        assert_eq!(pool.outstanding(), imgs.len());
+        let drained = pool.drain().unwrap();
+        assert_eq!(pool.outstanding(), 0);
+        for (i, (ticket, res)) in drained.iter().enumerate() {
+            assert_eq!(*ticket, tickets[i], "pool submission order preserved");
+            assert_eq!(ticket.seq() as usize, i);
+            assert_eq!(res.as_ref().unwrap(), &expected[i], "streamed image {i}");
+        }
+        let m = pool.metrics();
+        assert_eq!(m.shards, shards);
+        assert_eq!(m.requests, 3 * imgs.len());
+        assert_eq!(m.failed, 0);
+        assert_eq!(m.shed, 0);
+    }
+}
+
+#[test]
+fn homogeneous_shards_share_one_compiled_plan() {
+    // A unique k isolates this test's cache line from the others.
+    let cfg = fused_cfg(72);
+    let p1 = backend::shared_plan(&cfg).unwrap();
+    assert_eq!(Arc::strong_count(&p1), 1);
+    let pool = EnginePool::open(PoolConfig::replicated(cfg.clone(), 4)).unwrap();
+    // One handle here + one per shard, all pointing at a single compile:
+    // the strong count is exact, unlike the global compile counter, which
+    // sibling tests bump concurrently.
+    assert_eq!(Arc::strong_count(&p1), 5, "4 shards share one compiled plan");
+    let p2 = backend::shared_plan(&cfg).unwrap();
+    assert!(Arc::ptr_eq(&p1, &p2));
+    assert!(backend::plan_compile_count() >= 1);
+    drop(pool);
+}
+
+#[test]
+fn full_admission_queue_sheds_with_typed_rejected() {
+    let pool = EnginePool::open(
+        PoolConfig::replicated(fused_cfg(32), 1).with_queue_depth(4),
+    )
+    .unwrap();
+    let imgs = images(10);
+    let mut accepted = 0;
+    let mut rejections = Vec::new();
+    for img in &imgs {
+        match pool.submit(img.clone()) {
+            Ok(_) => accepted += 1,
+            Err(e) => rejections.push(e),
+        }
+    }
+    assert_eq!(accepted, 4, "exactly the admission depth is accepted");
+    assert_eq!(rejections.len(), 6);
+    for e in &rejections {
+        match e {
+            EngineError::Rejected { retry_after_hint } => {
+                assert!(*retry_after_hint >= Duration::from_micros(100));
+            }
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+    }
+    let m = pool.metrics();
+    assert_eq!(m.shed, 6);
+    // Incremental drain frees exactly one admission slot: one more
+    // submission is admitted, the next is shed again.
+    let (t0, r0) = pool.drain_one().unwrap();
+    assert_eq!(t0.seq(), 0, "drain_one pops the oldest submission");
+    assert!(r0.is_ok());
+    pool.submit(imgs[4].clone()).unwrap();
+    assert!(matches!(pool.submit(imgs[5].clone()), Err(EngineError::Rejected { .. })));
+    // A full drain frees the rest; the pool accepts again.
+    let drained = pool.drain().unwrap();
+    assert_eq!(drained.len(), 4);
+    assert!(drained.iter().all(|(_, r)| r.is_ok()));
+    pool.submit(imgs[0].clone()).unwrap();
+    let after = pool.drain().unwrap();
+    assert_eq!(after.len(), 1);
+}
+
+#[test]
+fn full_shard_queues_shed_instead_of_blocking_submit() {
+    let mut cfg = fused_cfg(32);
+    // One backpressure slot per shard, held open by a long linger.
+    cfg.batch = BatchPolicy {
+        max_batch: 8,
+        linger: Duration::from_millis(300),
+        queue_depth: 1,
+    };
+    // Generous global admission so the shed below is the per-shard path.
+    let pool = EnginePool::open(PoolConfig::replicated(cfg, 2).with_queue_depth(64)).unwrap();
+    let imgs = images(3);
+    pool.submit(imgs[0].clone()).unwrap();
+    pool.submit(imgs[1].clone()).unwrap();
+    // Both shard queues are full: the pool must shed typed, never park.
+    match pool.submit(imgs[2].clone()) {
+        Err(EngineError::Rejected { retry_after_hint }) => {
+            assert!(retry_after_hint >= Duration::from_micros(100));
+        }
+        other => panic!("expected Rejected when every shard queue is full, got {other:?}"),
+    }
+    assert_eq!(pool.metrics().shed, 1);
+    let drained = pool.drain().unwrap();
+    assert_eq!(drained.len(), 2);
+    assert!(drained.iter().all(|(_, r)| r.is_ok()));
+    // Queues drained: the pool accepts again.
+    pool.submit(imgs[2].clone()).unwrap();
+    assert_eq!(pool.drain().unwrap().len(), 1);
+}
+
+#[test]
+fn hash_affinity_is_stable_and_serves_keyed_requests() {
+    let pool = EnginePool::open(
+        PoolConfig::replicated(fused_cfg(32), 4).with_placement(Placement::HashKey),
+    )
+    .unwrap();
+    let keys: Vec<String> = (0..16).map(|i| format!("client-{i}")).collect();
+    let routed: Vec<usize> = keys.iter().map(|k| pool.shard_for_key(k).unwrap()).collect();
+    // Stability: the same key maps to the same shard, call after call.
+    for _ in 0..50 {
+        for (k, &expect) in keys.iter().zip(&routed) {
+            assert_eq!(pool.shard_for_key(k).unwrap(), expect, "key {k}");
+        }
+    }
+    // Spread: 16 keys over 4 shards hit more than one shard.
+    let distinct: std::collections::HashSet<usize> = routed.iter().copied().collect();
+    assert!(distinct.len() > 1, "keys spread over shards: {routed:?}");
+    // Keyed inference matches unkeyed results bit-for-bit (same plan).
+    let single = Engine::open(fused_cfg(32)).unwrap();
+    for (i, img) in images(8).into_iter().enumerate() {
+        let expected = single.infer(img.clone()).unwrap();
+        let got = pool.infer_keyed(&keys[i], img).unwrap();
+        assert_eq!(got, expected, "keyed image {i}");
+    }
+}
+
+#[test]
+fn injected_shard_death_reroutes_without_panicking() {
+    let imgs = images(12);
+    let single = Engine::open(fused_cfg(64)).unwrap();
+    let expected = single.infer_batch(&imgs).unwrap();
+
+    let pool = EnginePool::open(PoolConfig::replicated(fused_cfg(64), 2)).unwrap();
+    // Warm both shards, then kill shard 1 out from under the router.
+    pool.infer(imgs[0].clone()).unwrap();
+    pool.shard_session(1).unwrap().close();
+    // Every request still succeeds, bit-identical, via rerouting.
+    for (i, img) in imgs.iter().enumerate() {
+        assert_eq!(pool.infer(img.clone()).unwrap(), expected[i], "image {i}");
+    }
+    let m = pool.metrics();
+    assert_eq!(m.healthy, 1, "the dead shard is marked unhealthy");
+    assert!(m.rerouted >= 1, "its traffic was rerouted");
+    // The batch path also survives with one shard down.
+    assert_eq!(pool.infer_batch(&imgs).unwrap(), expected);
+    // Kill the survivor: requests now fail typed, never hang or panic.
+    pool.shard_session(0).unwrap().close();
+    match pool.infer(imgs[0].clone()) {
+        Err(EngineError::NoHealthyShards) => {}
+        other => panic!("expected NoHealthyShards, got {other:?}"),
+    }
+    assert_eq!(pool.healthy_shards(), 0);
+}
+
+#[test]
+fn heterogeneous_shards_serve_behind_one_front_door() {
+    // A fused shard and an expectation shard: same net, same shapes,
+    // different datapaths — the router serves from both.
+    let shards = vec![fused_cfg(32), {
+        EngineConfig::new(BackendKind::Expectation, tiny_net()).with_quantized(tiny_weights())
+    }];
+    let pool = EnginePool::open(PoolConfig::heterogeneous(shards)).unwrap();
+    assert_eq!(pool.shards(), 2);
+    for img in images(6) {
+        let out = pool.infer(img).unwrap();
+        assert_eq!(out.len(), 4);
+    }
+    let m = pool.metrics();
+    assert_eq!(m.requests, 6);
+    assert!(m.backend.contains("stochastic-fused") && m.backend.contains("expectation"));
+}
+
+#[test]
+fn graceful_close_drains_and_refuses_typed() {
+    let pool = EnginePool::open(PoolConfig::replicated(fused_cfg(32), 2)).unwrap();
+    let imgs = images(8);
+    let mut tickets = Vec::new();
+    for img in &imgs {
+        tickets.push(pool.submit(img.clone()).unwrap());
+    }
+    pool.close();
+    assert!(pool.is_closed());
+    // New work is refused typed on every front door.
+    match pool.submit(imgs[0].clone()) {
+        Err(EngineError::Closed) => {}
+        other => panic!("expected Closed, got {other:?}"),
+    }
+    match pool.infer(imgs[0].clone()) {
+        Err(EngineError::Closed) => {}
+        other => panic!("expected Closed, got {other:?}"),
+    }
+    match pool.infer_batch(&imgs) {
+        Err(EngineError::Closed) => {}
+        other => panic!("expected Closed, got {other:?}"),
+    }
+    // Work queued before the close was executed and is still drainable.
+    let drained = pool.drain().unwrap();
+    assert_eq!(drained.len(), 8);
+    for (i, (ticket, res)) in drained.iter().enumerate() {
+        assert_eq!(*ticket, tickets[i]);
+        assert!(res.is_ok(), "queued request {i} served across close: {res:?}");
+    }
+    // A drained, closed pool reports the empty queue typed.
+    match pool.drain() {
+        Err(EngineError::EmptyQueue) => {}
+        other => panic!("expected EmptyQueue, got {other:?}"),
+    }
+}
