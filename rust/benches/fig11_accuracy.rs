@@ -1,5 +1,8 @@
 //! Fig. 11 regenerator: accuracy vs bitstream length at several system
-//! precisions (the paper's SC-math-model methodology, §V-B).
+//! precisions (the paper's SC-math-model methodology, §V-B) — now driven
+//! through the `accel::precision` policy layer, so the same sweep covers
+//! uniform plans, hand-written per-layer plans, and the greedy
+//! accuracy-budget autotuner, each with its modeled per-layer-k energy.
 //!
 //! Known deviation (EXPERIMENTS.md): our training is not yet noise-aware,
 //! so the learned signal sits lower relative to the SC sampling floor and
@@ -8,13 +11,25 @@
 
 use scnn::accel::layers::NetworkSpec;
 use scnn::accel::network::{classify, ForwardMode, ForwardPlan, QuantizedWeights};
+use scnn::accel::precision::{autotune, AutoTuneConfig, PrecisionPlan};
 use scnn::benchutil::{bench, print_table};
 use scnn::data::{Artifacts, Dataset, ModelWeights};
+use scnn::engine::HardwareEstimate;
+use scnn::tech::TechKind;
 
-// Per-image seeds make plan reuse impossible here; the analytic plan
-// build is cheap, so the one-shot `ForwardPlan::once` is the right call.
-fn fwd(n: &NetworkSpec, w: &QuantizedWeights, i: &[f64], m: ForwardMode) -> Vec<f64> {
-    ForwardPlan::once(n, w, i, m)
+// Per-image noise seeds make plan reuse impossible here; the analytic
+// plan build is cheap, so compiling per (image, plan) is the right call.
+fn fwd_plan(
+    n: &NetworkSpec,
+    w: &QuantizedWeights,
+    i: &[f64],
+    plan: &PrecisionPlan,
+    seed: u32,
+) -> Vec<f64> {
+    let mode = ForwardMode::NoisyExpectation { k: plan.max_k(), seed };
+    ForwardPlan::compile_with_precision(n, w, mode, plan)
+        .expect("valid plan")
+        .run(i)
 }
 
 fn main() {
@@ -28,25 +43,28 @@ fn main() {
     let net = NetworkSpec::by_name("lenet5").unwrap();
     let raw = ModelWeights::load(&artifacts.weights(&net.name, "sc")).unwrap();
     let n = 60.min(ds.len());
+    let n_compute = net.n_compute();
+    // Accuracy of one precision plan over the first n test images.
+    let acc = |w: &QuantizedWeights, plan: &PrecisionPlan| -> f64 {
+        (0..n)
+            .map(|i| {
+                let img: Vec<f64> = ds.images[i].iter().map(|&v| v as f64).collect();
+                let p = classify(&fwd_plan(&net, w, &img, plan, 1 + i as u32));
+                (p == ds.labels[i] as usize) as usize
+            })
+            .sum::<usize>() as f64
+            / n as f64
+    };
+
+    // ---- the classic Fig. 11 sweep, as Uniform(k) policies ----
     let ks = [32usize, 128, 512, 1024, 2048, 4096];
     let mut rows = Vec::new();
     for bits in [3u32, 4, 5, 6, 8] {
         let weights = raw.quantize(bits);
         let mut row = vec![format!("{bits}-bit")];
         for &k in &ks {
-            let correct: usize = (0..n)
-                .map(|i| {
-                    let img: Vec<f64> = ds.images[i].iter().map(|&v| v as f64).collect();
-                    let p = classify(&fwd(
-                        &net,
-                        &weights,
-                        &img,
-                        ForwardMode::NoisyExpectation { k, seed: 1 + i as u32 },
-                    ));
-                    (p == ds.labels[i] as usize) as usize
-                })
-                .sum();
-            row.push(format!("{:.0}%", 100.0 * correct as f64 / n as f64));
+            let a = acc(&weights, &PrecisionPlan::uniform(k, n_compute));
+            row.push(format!("{:.0}%", 100.0 * a));
         }
         rows.push(row);
     }
@@ -57,25 +75,67 @@ fn main() {
 
     // Shape assertions: accuracy at the largest k beats the smallest, and
     // higher precision ceilings dominate lower ones at the ceiling.
-    let acc = |bits: u32, k: usize| -> f64 {
-        let weights = raw.quantize(bits);
-        (0..n)
-            .map(|i| {
-                let img: Vec<f64> = ds.images[i].iter().map(|&v| v as f64).collect();
-                let p = classify(&fwd(
-                    &net,
-                    &weights,
-                    &img,
-                    ForwardMode::NoisyExpectation { k, seed: 1 + i as u32 },
-                ));
-                (p == ds.labels[i] as usize) as usize
-            })
-            .sum::<usize>() as f64
-            / n as f64
+    let w8 = raw.quantize(8);
+    let w3 = raw.quantize(3);
+    let a8_hi = acc(&w8, &PrecisionPlan::uniform(4096, n_compute));
+    assert!(
+        a8_hi > acc(&w8, &PrecisionPlan::uniform(32, n_compute)) + 0.3,
+        "accuracy must rise with k"
+    );
+    assert!(
+        a8_hi >= acc(&w3, &PrecisionPlan::uniform(4096, n_compute)),
+        "precision ceiling ordering"
+    );
+
+    // ---- uniform vs per-layer vs autotuned plans (8-bit weights) ----
+    // Each row: the plan, its accuracy under the §V-B noise model, and the
+    // modeled per-layer-k energy of the paper's 8-channel RFET system.
+    let energy = |plan: &PrecisionPlan| {
+        HardwareEstimate::for_plan(TechKind::Rfet10, 8, plan, &net).metrics.energy_uj
     };
-    assert!(acc(8, 4096) > acc(8, 32) + 0.3, "accuracy must rise with k");
-    assert!(acc(8, 4096) >= acc(3, 4096), "precision ceiling ordering");
+    let budget = 0.05;
+    let tuned = autotune(
+        &net,
+        &w8,
+        7,
+        &AutoTuneConfig { accuracy_budget: budget, k_max: 1024, k_min: 32, calib_images: 12 },
+    )
+    .unwrap();
+    let uniform_hi = PrecisionPlan::uniform(1024, n_compute);
+    let plans: Vec<(String, PrecisionPlan)> = vec![
+        ("uniform k=1024".into(), uniform_hi.clone()),
+        ("uniform k=256".into(), PrecisionPlan::uniform(256, n_compute)),
+        (
+            "per-layer 1024,512,256,128,1024".into(),
+            PrecisionPlan::per_layer(vec![1024, 512, 256, 128, 1024]),
+        ),
+        (format!("autotuned (budget {budget}) {:?}", tuned.ks()), tuned.clone()),
+    ];
+    let rows: Vec<Vec<String>> = plans
+        .iter()
+        .map(|(label, plan)| {
+            vec![
+                label.clone(),
+                format!("{:.0}%", 100.0 * acc(&w8, plan)),
+                format!("{:.3} µJ", energy(plan)),
+                format!("{}", plan.total_cycles()),
+            ]
+        })
+        .collect();
+    print_table(
+        "Fig. 11b — uniform vs per-layer precision plans (8-bit, lenet5)",
+        &["plan", "accuracy", "modeled energy", "stream cycles"],
+        &rows,
+    );
+    // The per-layer headline: the tuned plan undercuts the uniform-1024
+    // ceiling on modeled energy while staying within the stated budget.
+    assert!(energy(&tuned) < energy(&uniform_hi), "tuned plan must save energy");
+    assert!(
+        acc(&w8, &tuned) + budget + 0.051 >= acc(&w8, &uniform_hi),
+        "tuned plan must hold the accuracy budget (plus test-set slack)"
+    );
+
     bench("fig11_point(8-bit, k=1024, 60 imgs)", 0, 1, || {
-        std::hint::black_box(acc(8, 1024));
+        std::hint::black_box(acc(&w8, &PrecisionPlan::uniform(1024, n_compute)));
     });
 }

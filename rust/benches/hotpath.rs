@@ -20,9 +20,10 @@
 use scnn::accel::layers::NetworkSpec;
 use scnn::accel::network::{reference, ForwardMode, ForwardPlan, QuantizedWeights};
 use scnn::accel::par;
+use scnn::accel::precision::{autotune, AutoTuneConfig, PrecisionPlan};
 use scnn::benchutil::{bench, BenchResult, JsonReport};
 use scnn::data::{Artifacts, Dataset, ModelWeights};
-use scnn::engine::{BackendKind, BatchPolicy, Engine, EngineConfig};
+use scnn::engine::{classify, BackendKind, BatchPolicy, Engine, EngineConfig, Precision};
 use scnn::sc::bitstream::{Bitstream, VerticalCounter};
 use scnn::sc::rng::{self, XorShift64};
 
@@ -446,6 +447,55 @@ fn main() {
         );
     }
 
+    // ---- per-layer precision plans (BENCH_precision.json) ----
+    // The headline the PrecisionPlan refactor buys: throughput and
+    // modeled energy of the fused engine at uniform k=256 vs a greedily
+    // autotuned per-layer plan at (calibration-)equal accuracy. The
+    // agreement column is measured against the noise-free expectation
+    // argmax on the same 16 images.
+    let mut prjson = JsonReport::new();
+    let tuner = AutoTuneConfig { accuracy_budget: 0.1, k_max: 256, k_min: 32, calib_images: 12 };
+    let tuned = autotune(&net, &weights, 7, &tuner).expect("autotune on lenet5");
+    println!(
+        "autotuned per-layer plan (budget {}, ceiling k={}): {:?}",
+        tuner.accuracy_budget,
+        tuner.k_max,
+        tuned.ks()
+    );
+    let exp_session = Engine::open(mk_cfg(BackendKind::Expectation, 256, 16)).unwrap();
+    let ideal: Vec<usize> =
+        exp_session.infer_batch(&fimgs).unwrap().iter().map(|o| classify(o)).collect();
+    for (label, plan) in [
+        ("uniform-k256", PrecisionPlan::uniform(256, tuned.len())),
+        ("autotuned", tuned.clone()),
+    ] {
+        let cfg = mk_cfg(BackendKind::StochasticFused, 256, 16)
+            .with_precision(Precision::PerLayer(plan.ks().to_vec()));
+        let session = Engine::open(cfg).unwrap();
+        let r = bench(&format!("precision({label},k<=256,16imgs)"), 1, 3, || {
+            std::hint::black_box(session.infer_batch(&fimgs).unwrap());
+        });
+        let img_s = r.ops_per_sec(16.0);
+        let outs = session.infer_batch(&fimgs).unwrap();
+        let agree =
+            outs.iter().zip(&ideal).filter(|(o, &t)| classify(o) == t).count();
+        let est = session.metrics().estimate.expect("SC sessions carry an estimate");
+        println!(
+            "  -> {img_s:.1} img/s, {:.3} µJ modeled, {agree}/16 agree with expectation",
+            est.metrics.energy_uj
+        );
+        prjson.add(
+            &r,
+            &[
+                ("img_per_s", img_s),
+                ("modeled_energy_uj", est.metrics.energy_uj),
+                ("agreement_pct", 100.0 * agree as f64 / 16.0),
+                ("stream_cycles", plan.total_cycles() as f64),
+                ("max_k", plan.max_k() as f64),
+            ],
+        );
+    }
+
     // Gate-level simulator throughput (the Genus substitute).
     let lib = scnn::tech::CellLibrary::finfet10();
     let nl = scnn::sc::apc::build_netlist(25, 32, scnn::sc::apc::FaStyle::CmosCell)
@@ -495,5 +545,14 @@ fn main() {
             std::fs::canonicalize(ppath).unwrap_or_else(|_| ppath.to_path_buf()).display()
         ),
         Err(e) => eprintln!("could not write BENCH_pool.json: {e}"),
+    }
+    let prpath = std::path::Path::new("BENCH_precision.json");
+    match prjson.write(prpath) {
+        Ok(()) => println!(
+            "wrote {} precision records to {}",
+            prjson.len(),
+            std::fs::canonicalize(prpath).unwrap_or_else(|_| prpath.to_path_buf()).display()
+        ),
+        Err(e) => eprintln!("could not write BENCH_precision.json: {e}"),
     }
 }

@@ -330,6 +330,12 @@ impl NetworkSpec {
         self.layers.iter().fold(self.input, |s, l| l.output_shape(s))
     }
 
+    /// Number of MAC-owning (weight-carrying) layers — what a weight
+    /// tensor or a per-layer precision plan must cover, one entry each.
+    pub fn n_compute(&self) -> usize {
+        self.layers.iter().filter(|l| l.is_compute()).count()
+    }
+
     /// Total multiply-accumulate operations for one inference.
     pub fn total_macs(&self) -> u64 {
         self.input_shapes()

@@ -5,6 +5,9 @@
 //! * [`stage`] — the compiled per-layer stage IR every backend and the
 //!   hardware model lower from (shape inference, gather tables, value
 //!   kernels);
+//! * [`precision`] — per-layer bitstream-length plans ([`precision::PrecisionPlan`]),
+//!   the typed [`precision::Precision`] policy, and the accuracy-budget
+//!   autotuner;
 //! * [`memory`] — the GDDR5 off-chip model (224 B/ns);
 //! * [`pipeline`] — Algorithm 1: non/partial/full pipelining per layer;
 //! * [`channel`] — Fig. 9 channel assembly + Table I/II characterization;
@@ -20,5 +23,6 @@ pub mod metrics;
 pub mod network;
 pub mod par;
 pub mod pipeline;
+pub mod precision;
 pub mod stage;
 pub mod system;

@@ -41,6 +41,7 @@
 
 use crate::accel::layers::{NetworkSpec, Shape};
 use crate::accel::par;
+use crate::accel::precision::{self, PrecisionPlan};
 use crate::accel::stage::{self, GatherTable, StageDescriptor, StageOp};
 use crate::sc::bitstream::VerticalCounter;
 use crate::sc::neuron;
@@ -127,6 +128,39 @@ pub enum ForwardMode {
     },
     /// Plain fixed-point MAC + hard ReLU (the Fig. 12 baseline).
     FixedPoint,
+}
+
+impl ForwardMode {
+    /// The bitstream length this mode models (`None` for the analytic
+    /// modes that own no `k`).
+    pub fn k(&self) -> Option<usize> {
+        match *self {
+            ForwardMode::Stochastic { k, .. } | ForwardMode::NoisyExpectation { k, .. } => {
+                Some(k)
+            }
+            ForwardMode::Expectation | ForwardMode::FixedPoint => None,
+        }
+    }
+
+    /// True when the mode's arithmetic depends on `k` — the modes a
+    /// [`PrecisionPlan`] applies to.
+    pub fn uses_k(&self) -> bool {
+        self.k().is_some()
+    }
+
+    /// This mode with its `k` replaced by one stage's planned length (the
+    /// analytic modes pass through unchanged) — how
+    /// [`ForwardPlan::compile_with_precision`] specializes the shared mode
+    /// per compute stage.
+    pub fn with_stage_k(self, k: usize) -> Self {
+        match self {
+            ForwardMode::Stochastic { seed, .. } => ForwardMode::Stochastic { k, seed },
+            ForwardMode::NoisyExpectation { seed, .. } => {
+                ForwardMode::NoisyExpectation { k, seed }
+            }
+            other => other,
+        }
+    }
 }
 
 /// Bit-reverse the low `bits` bits of `t` (van der Corput sequence) —
@@ -378,17 +412,43 @@ pub struct ForwardPlan {
     in_len: usize,
     /// Output length (classes).
     out_len: usize,
+    /// Per-compute-stage bitstream lengths this plan was compiled with
+    /// (a uniform placeholder for the analytic modes that own no `k`).
+    precision: PrecisionPlan,
     steps: Vec<Box<dyn LayerStage>>,
 }
 
 impl ForwardPlan {
-    /// Compile a plan for the given network, weights, and mode. Malformed
-    /// networks (see [`NetworkSpec::validate`]) and mismatched weight
-    /// tensors are typed errors, surfaced by `Engine::open` / the CLI.
+    /// Compile a plan for the given network, weights, and mode, with a
+    /// **uniform** precision taken from the mode's own `k`. Malformed
+    /// networks (see [`NetworkSpec::validate`]), mismatched weight
+    /// tensors, and degenerate bitstream lengths (`k == 0`, non-multiples
+    /// of [`precision::WORD`]) are typed errors, surfaced by
+    /// `Engine::open` / the CLI.
     pub fn compile(
         net: &NetworkSpec,
         weights: &QuantizedWeights,
         mode: ForwardMode,
+    ) -> Result<Self> {
+        let plan = PrecisionPlan::uniform(mode.k().unwrap_or(precision::WORD), net.n_compute());
+        Self::compile_with_precision(net, weights, mode, &plan)
+    }
+
+    /// [`ForwardPlan::compile`] with a per-compute-stage [`PrecisionPlan`]:
+    /// each compute stage generates, accumulates, and recovers streams of
+    /// its **own** planned length (the mode's `k` is a placeholder for the
+    /// k-sensitive modes — the plan wins per stage). Adjacent stages with
+    /// different `k` rescale through the S2B→B2S value boundary every
+    /// stage already owns; the fused engine and the per-bit reference stay
+    /// bit-identical under any valid plan (property-tested in
+    /// `tests/stage_ir.rs`). The plan is validated against the network —
+    /// wrong length, `k == 0`, or [`precision::WORD`]-misaligned stages
+    /// are typed errors.
+    pub fn compile_with_precision(
+        net: &NetworkSpec,
+        weights: &QuantizedWeights,
+        mode: ForwardMode,
+        precision: &PrecisionPlan,
     ) -> Result<Self> {
         let stages = net.stages()?;
         let n_compute = stages.iter().filter(|s| s.is_compute()).count();
@@ -399,17 +459,30 @@ impl ForwardPlan {
                 weights.layers.len()
             );
         }
+        if mode.uses_k() {
+            precision
+                .validate_for(n_compute)
+                .map_err(|e| anyhow::anyhow!("network {:?}: {e}", net.name))?;
+        }
         let bits = weights.bits;
-        let (k, words) = match mode {
-            ForwardMode::Stochastic { k, .. } => (k, k.div_ceil(64)),
-            _ => (0, 0),
-        };
         let mut steps: Vec<Box<dyn LayerStage>> = Vec::with_capacity(stages.len());
         for st in &stages {
             let meta = StageMeta::of(st);
             let boxed: Box<dyn LayerStage> = match st.op {
                 StageOp::Conv(_) | StageOp::Dense { .. } => {
                     let table = stage::gather(st).expect("compute stages have gather tables");
+                    let wl = st.weight_layer.expect("compute stages carry a weight layer");
+                    // Specialize the shared mode to this stage's planned k
+                    // (no-op for the analytic modes).
+                    let mode = if mode.uses_k() {
+                        mode.with_stage_k(precision.k_for(wl))
+                    } else {
+                        mode
+                    };
+                    let (k, words) = match mode {
+                        ForwardMode::Stochastic { k, .. } => (k, k.div_ceil(64)),
+                        _ => (0, 0),
+                    };
                     Box::new(ComputeStage {
                         meta,
                         lp: build_layer_plan(weights, st, table, mode)?,
@@ -434,7 +507,7 @@ impl ForwardPlan {
         }
         let in_len = stages[0].in_len();
         let out_len = stages.last().expect("validated networks are non-empty").out_len();
-        Ok(ForwardPlan { in_len, out_len, steps })
+        Ok(ForwardPlan { in_len, out_len, precision: precision.clone(), steps })
     }
 
     /// [`ForwardPlan::compile`], panicking on invalid input — for the
@@ -452,6 +525,18 @@ impl ForwardPlan {
     /// Expected input length (c·h·w).
     pub fn in_len(&self) -> usize {
         self.in_len
+    }
+
+    /// The per-compute-stage precision this plan was compiled with.
+    ///
+    /// Contract note: for the **analytic** modes (expectation /
+    /// fixed-point), which own no `k`, the plan is a placeholder and the
+    /// shared-plan cache deliberately keys without it — a cache-shared
+    /// analytic plan reports whichever equivalent config compiled first.
+    /// Read a session's own resolved plan via `Session::precision()`; this
+    /// accessor is authoritative only for the k-sensitive modes.
+    pub fn precision(&self) -> &PrecisionPlan {
+        &self.precision
     }
 
     /// One inference with a fresh scratch arena, parallelized across
@@ -917,7 +1002,8 @@ pub mod reference {
     }
 
     /// Bit-exact stochastic inference, original per-bit/allocating path,
-    /// walking the same compiled stage descriptors as [`ForwardPlan`].
+    /// walking the same compiled stage descriptors as [`ForwardPlan`]
+    /// with one uniform bitstream length.
     pub fn forward_stochastic(
         net: &NetworkSpec,
         weights: &QuantizedWeights,
@@ -925,9 +1011,31 @@ pub mod reference {
         k: usize,
         seed: u32,
     ) -> Vec<f64> {
+        let plan = PrecisionPlan::uniform(k, net.n_compute());
+        forward_stochastic_plan(net, weights, input, &plan, seed)
+    }
+
+    /// [`forward_stochastic`] under a per-layer [`PrecisionPlan`]: every
+    /// compute stage runs at its own planned length, rescaling through the
+    /// S2B→B2S value boundary exactly like the fused engine — the golden
+    /// model the per-layer parity property tests pin against.
+    pub fn forward_stochastic_plan(
+        net: &NetworkSpec,
+        weights: &QuantizedWeights,
+        input: &[f64],
+        precision: &PrecisionPlan,
+        seed: u32,
+    ) -> Vec<f64> {
         let stages = net
             .stages()
             .unwrap_or_else(|e| panic!("reference::forward_stochastic({}): {e:#}", net.name));
+        let n_compute = stages.iter().filter(|s| s.is_compute()).count();
+        assert_eq!(
+            precision.len(),
+            n_compute,
+            "precision plan must cover every compute stage of {}",
+            net.name
+        );
         let bits = weights.bits;
         let mut act: Vec<f64> = input.to_vec();
         let mut saved: Vec<Vec<f64>> = vec![Vec::new(); stages.len()];
@@ -935,7 +1043,8 @@ pub mod reference {
             act = match st.op {
                 StageOp::Conv(_) | StageOp::Dense { .. } => {
                     let table = stage::gather(st).expect("compute stages have gather tables");
-                    run_layer(st, &table, &act, weights, bits, k, seed)
+                    let wl = st.weight_layer.expect("compute stages carry a weight layer");
+                    run_layer(st, &table, &act, weights, bits, precision.k_for(wl), seed)
                 }
                 StageOp::MaxPool { size } => {
                     let mut next = Vec::new();
@@ -1142,8 +1251,8 @@ mod tests {
         let net = tiny_net();
         let w = tiny_weights(8, 42);
         let input = tiny_input();
-        // Lengths below, at, and across the word boundary.
-        for k in [16usize, 64, 100] {
+        // Lengths below, at, and across the 64-bit packing boundary.
+        for k in [16usize, 64, 104] {
             for seed in [3u32, 7] {
                 let fused = fwd(&net, &w, &input, ForwardMode::Stochastic { k, seed });
                 let golden = reference::forward_stochastic(&net, &w, &input, k, seed);
@@ -1160,7 +1269,7 @@ mod tests {
         let net = extended_net();
         let w = seeded_weights(&net, 8, 17);
         let input = extended_input();
-        for k in [32usize, 100] {
+        for k in [32usize, 104] {
             for seed in [5u32, 11] {
                 let fused = fwd(&net, &w, &input, ForwardMode::Stochastic { k, seed });
                 let golden = reference::forward_stochastic(&net, &w, &input, k, seed);
@@ -1199,6 +1308,93 @@ mod tests {
         let fused = plan.run(&input);
         let golden = reference::forward_stochastic(&net, &w, &input, 32, 7);
         assert_eq!(fused, golden);
+    }
+
+    #[test]
+    fn uniform_precision_plan_is_bit_exact_with_scalar_k() {
+        // The back-compat contract: compiling through an explicit
+        // Uniform-k PrecisionPlan is the same artifact as the scalar-k
+        // path — bit-for-bit, fused and reference.
+        let net = tiny_net();
+        let w = tiny_weights(8, 42);
+        let input = tiny_input();
+        for k in [16usize, 64, 104] {
+            let mode = ForwardMode::Stochastic { k, seed: 7 };
+            let scalar = fwd(&net, &w, &input, mode);
+            let plan = PrecisionPlan::uniform(k, 2);
+            let planned = ForwardPlan::compile_with_precision(&net, &w, mode, &plan)
+                .unwrap()
+                .run(&input);
+            assert_eq!(scalar, planned, "k={k}");
+            assert_eq!(
+                planned,
+                reference::forward_stochastic_plan(&net, &w, &input, &plan, 7)
+            );
+        }
+    }
+
+    #[test]
+    fn per_layer_plans_rescale_across_stage_boundaries_bit_exactly() {
+        // Adjacent stages at different k: the fused engine and the
+        // per-bit reference agree bit-for-bit through the S2B→B2S
+        // rescaling boundary, on both the simple and extended stacks.
+        let net = tiny_net();
+        let w = tiny_weights(8, 42);
+        let input = tiny_input();
+        for ks in [vec![64usize, 16], vec![16, 104], vec![32, 32]] {
+            let plan = PrecisionPlan::per_layer(ks.clone());
+            let mode = ForwardMode::Stochastic { k: plan.max_k(), seed: 5 };
+            let fused = ForwardPlan::compile_with_precision(&net, &w, mode, &plan)
+                .unwrap()
+                .run(&input);
+            let golden = reference::forward_stochastic_plan(&net, &w, &input, &plan, 5);
+            assert_eq!(fused, golden, "ks={ks:?}");
+            assert!(fused.iter().all(|v| v.is_finite()));
+        }
+        let net = extended_net();
+        let w = seeded_weights(&net, 8, 17);
+        let input = extended_input();
+        let plan = PrecisionPlan::per_layer(vec![96, 32, 64, 16]);
+        let mode = ForwardMode::Stochastic { k: 96, seed: 11 };
+        let plan_fwd = ForwardPlan::compile_with_precision(&net, &w, mode, &plan).unwrap();
+        assert_eq!(plan_fwd.precision(), &plan);
+        assert_eq!(
+            plan_fwd.run(&input),
+            reference::forward_stochastic_plan(&net, &w, &input, &plan, 11)
+        );
+    }
+
+    #[test]
+    fn compile_rejects_degenerate_bitstream_lengths() {
+        let net = tiny_net();
+        let w = tiny_weights(8, 1);
+        let input_mode = |k| ForwardMode::Stochastic { k, seed: 1 };
+        // k == 0 and word-misaligned k are typed errors, not kernel UB.
+        for bad_k in [0usize, 100, 7] {
+            let err = ForwardPlan::compile(&net, &w, input_mode(bad_k))
+                .unwrap_err()
+                .to_string();
+            assert!(
+                err.contains("k = 0") || err.contains("multiple"),
+                "k={bad_k}: {err}"
+            );
+        }
+        // A per-layer plan of the wrong length is rejected too.
+        let plan = PrecisionPlan::per_layer(vec![32]);
+        let err = ForwardPlan::compile_with_precision(&net, &w, input_mode(32), &plan)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("compute layers"), "{err}");
+        // NoisyExpectation is k-sensitive and validated the same way...
+        assert!(ForwardPlan::compile(
+            &net,
+            &w,
+            ForwardMode::NoisyExpectation { k: 100, seed: 1 }
+        )
+        .is_err());
+        // ...while the analytic modes own no k and ignore the plan length.
+        assert!(ForwardPlan::compile(&net, &w, ForwardMode::Expectation).is_ok());
+        assert!(ForwardPlan::compile(&net, &w, ForwardMode::FixedPoint).is_ok());
     }
 
     #[test]

@@ -24,6 +24,7 @@
 
 use crate::accel::layers::NetworkSpec;
 use crate::accel::memory::MemoryModel;
+use crate::accel::precision::PrecisionPlan;
 use crate::accel::stage::StageDescriptor;
 
 /// Inputs a MAC unit multiplies per cycle (25 parallel multipliers, §IV-A).
@@ -73,6 +74,9 @@ pub struct LayerSchedule {
     pub label: &'static str,
     /// Regime chosen by Algorithm 1.
     pub mode: PipelineMode,
+    /// Bitstream length this layer was scheduled at (per-layer under a
+    /// [`PrecisionPlan`], the global `k` otherwise).
+    pub k: usize,
     /// Neurons resident on chip at once.
     pub n_onchip: usize,
     /// Neurons whose operands memory covers per clock cycle.
@@ -132,6 +136,20 @@ pub fn schedule_layer_batch(
     cfg: &ScheduleConfig,
     batch: usize,
 ) -> Option<LayerSchedule> {
+    schedule_layer_k(stage, cfg, batch, cfg.k)
+}
+
+/// [`schedule_layer_batch`] at an explicit per-layer bitstream length
+/// (overriding `cfg.k`) — the building block of the precision-aware
+/// schedule: every Algorithm 1 quantity that scales with the stream
+/// length (the regime decision, the compute window, the active MAC·cycle
+/// count) is evaluated at **this layer's** `k`.
+pub fn schedule_layer_k(
+    stage: &StageDescriptor,
+    cfg: &ScheduleConfig,
+    batch: usize,
+    k: usize,
+) -> Option<LayerSchedule> {
     let batch = batch.max(1);
     let neurons = stage.neurons;
     if neurons == 0 {
@@ -148,18 +166,19 @@ pub fn schedule_layer_batch(
         ((cfg.memory.bytes_per_cycle(cfg.clock_ps) / bytes_per_neuron).floor() as usize).max(1);
     let groups = neurons.div_ceil(n_onchip);
 
-    let (mode, per_image_cycles) = regime(n_onchip, n_memcover, groups, cfg.k);
+    let (mode, per_image_cycles) = regime(n_onchip, n_memcover, groups, k);
     let total_cycles = per_image_cycles * batch as u64;
     let incycle_pipe = n_onchip.div_ceil(n_memcover);
     let delay_ns = total_cycles as f64 * cfg.clock_ps / 1000.0;
     // Off-chip traffic: activations per image, weights once per batch.
     let dram_bytes =
         (neurons * fan_in * cfg.bytes_per_operand) as u64 * (batch as u64 + 1);
-    let active_mac_cycles = neurons as u64 * macs_per_neuron as u64 * cfg.k as u64 * batch as u64;
+    let active_mac_cycles = neurons as u64 * macs_per_neuron as u64 * k as u64 * batch as u64;
     Some(LayerSchedule {
         layer_index: stage.index,
         label: stage.label(),
         mode,
+        k,
         n_onchip,
         n_memcover,
         incycle_pipe,
@@ -196,8 +215,39 @@ pub fn schedule_stages(
     cfg: &ScheduleConfig,
     batch: usize,
 ) -> NetworkSchedule {
+    schedule_stages_with(stages, cfg, batch, |_| cfg.k)
+}
+
+/// Schedule a compiled stage list under a per-layer [`PrecisionPlan`]:
+/// each compute stage is costed at its **own** planned bitstream length
+/// (by `weight_layer` index), so modeled delay, energy-relevant
+/// MAC·cycles, and utilization reflect the same per-layer `k` the
+/// software datapaths execute. The plan must cover every compute stage
+/// (compile it through `ForwardPlan`/`EngineConfig` first); stages beyond
+/// the plan fall back to `cfg.k` defensively.
+pub fn schedule_stages_precise(
+    stages: &[StageDescriptor],
+    cfg: &ScheduleConfig,
+    precision: &PrecisionPlan,
+    batch: usize,
+) -> NetworkSchedule {
+    schedule_stages_with(stages, cfg, batch, |s| {
+        s.weight_layer
+            .and_then(|wl| precision.ks().get(wl).copied())
+            .unwrap_or(cfg.k)
+    })
+}
+
+/// Shared body of [`schedule_stages`] / [`schedule_stages_precise`]:
+/// schedule every MAC-owning stage at the length `k_of` assigns it.
+fn schedule_stages_with(
+    stages: &[StageDescriptor],
+    cfg: &ScheduleConfig,
+    batch: usize,
+    k_of: impl Fn(&StageDescriptor) -> usize,
+) -> NetworkSchedule {
     let layers: Vec<LayerSchedule> =
-        stages.iter().filter_map(|s| schedule_layer_batch(s, cfg, batch)).collect();
+        stages.iter().filter_map(|s| schedule_layer_k(s, cfg, batch, k_of(s))).collect();
     let latency_ns = layers.iter().map(|l| l.delay_ns).sum();
     let dram_bytes = layers.iter().map(|l| l.dram_bytes).sum();
     let active_mac_cycles = layers.iter().map(|l| l.active_mac_cycles).sum();
@@ -356,6 +406,34 @@ mod tests {
         );
         // Per-image latency must not degrade.
         assert!(batched.latency_ns / 32.0 <= single.latency_ns * 1.001);
+    }
+
+    #[test]
+    fn precise_schedule_costs_each_layer_at_its_own_k() {
+        let net = NetworkSpec::lenet5();
+        let stages = net.stages().unwrap();
+        let c = cfg(8);
+        // A uniform plan reproduces the scalar-k schedule exactly.
+        let uniform = schedule_stages_precise(
+            &stages,
+            &c,
+            &PrecisionPlan::uniform(32, 5),
+            1,
+        );
+        let scalar = schedule_stages(&stages, &c, 1);
+        assert_eq!(uniform.total_cycles, scalar.total_cycles);
+        assert_eq!(uniform.active_mac_cycles, scalar.active_mac_cycles);
+        assert!(uniform.layers.iter().all(|l| l.k == 32));
+        // Shrinking one layer's k shrinks only that layer's cycles; DRAM
+        // traffic is k-independent.
+        let plan = PrecisionPlan::per_layer(vec![32, 16, 32, 32, 32]);
+        let mixed = schedule_stages_precise(&stages, &c, &plan, 1);
+        assert_eq!(mixed.layers[1].k, 16);
+        assert!(mixed.layers[1].total_cycles < scalar.layers[1].total_cycles);
+        assert_eq!(mixed.layers[0].total_cycles, scalar.layers[0].total_cycles);
+        assert_eq!(mixed.dram_bytes, scalar.dram_bytes);
+        assert!(mixed.active_mac_cycles < scalar.active_mac_cycles);
+        assert!(mixed.latency_ns < scalar.latency_ns);
     }
 
     #[test]

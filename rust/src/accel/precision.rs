@@ -1,0 +1,493 @@
+//! Per-layer bitstream precision: the compiled [`PrecisionPlan`], the
+//! typed [`Precision`] policy it is resolved from, and the greedy
+//! accuracy-budget [`autotune`]r.
+//!
+//! In stochastic computing, latency and energy scale **linearly** with the
+//! bitstream length `k`, so `k` is the single most valuable knob the
+//! system owns — and one global scalar wastes it: early conv layers feed
+//! wide fan-ins whose averaging already suppresses sampling noise, while a
+//! 10-way classifier head lives or dies by its stream resolution (the
+//! SC-DCNN observation: optimize precision per network component, not per
+//! network). A [`PrecisionPlan`] assigns every *compute* stage of the
+//! [`crate::accel::stage`] IR its own `k`, and is honored identically by
+//! the fused engine, the per-bit golden reference, the analytic
+//! noisy-expectation model, and the hardware schedule/energy roll-up
+//! ([`crate::accel::pipeline`] / [`crate::accel::system`]).
+//!
+//! # Inter-stage rescaling
+//!
+//! Adjacent stages with different `k` need no explicit stream-domain
+//! converter in this architecture: every compute stage already ends in an
+//! S2B counter (recovering a binary value from its own `k_i` cycles) and
+//! the next stage's SNG re-samples that value at its own `k_{i+1}` — the
+//! S2B→B2S boundary *is* the rescaler, and it is exercised bit-exactly by
+//! the cross-backend parity tests. What changes with a plan is the length
+//! of every stream a stage generates, counts, and compares — per stage.
+//!
+//! # Word alignment
+//!
+//! Stage lengths must be positive multiples of [`WORD`] cycles: the
+//! SNG/APC datapath generates and drains streams in word-granular chunks
+//! (and the hardware counters are read out on word boundaries), so a
+//! ragged tail would model cycles the machine cannot schedule. Degenerate
+//! lengths (`k == 0`, misaligned `k`) are typed [`PrecisionError`]s,
+//! rejected by [`PrecisionPlan::validate`] — and therefore by
+//! `EngineConfig::validate` and `ForwardPlan::compile` — instead of
+//! flowing silently into the kernels.
+
+use crate::accel::layers::NetworkSpec;
+use crate::accel::network::{classify, ForwardMode, ForwardPlan, QuantizedWeights, Scratch};
+use crate::sc::rng::XorShift64;
+use anyhow::{anyhow, Result};
+use std::fmt;
+
+/// Stream-length granularity in cycles: every stage `k` must be a
+/// positive multiple of this (see the module docs on word alignment).
+pub const WORD: usize = 8;
+
+/// Why a precision plan (or policy) failed validation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PrecisionError {
+    /// A stage was assigned a zero-cycle stream. `stage` is the compute
+    /// layer index when known (`None` for a uniform policy).
+    ZeroK {
+        /// Compute-layer index, when per-layer.
+        stage: Option<usize>,
+    },
+    /// A stage length is not a multiple of [`WORD`] cycles.
+    Misaligned {
+        /// Compute-layer index, when per-layer.
+        stage: Option<usize>,
+        /// The offending length.
+        k: usize,
+    },
+    /// A per-layer plan's length disagrees with the network's compute
+    /// stage count.
+    WrongLength {
+        /// Compute stages in the network.
+        expected: usize,
+        /// Entries in the plan.
+        got: usize,
+    },
+    /// The plan carries no stages at all.
+    Empty,
+    /// An autotune accuracy budget outside `[0, 1)`.
+    BadBudget {
+        /// The offending budget.
+        budget: f64,
+    },
+}
+
+impl fmt::Display for PrecisionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let at = |stage: &Option<usize>| match stage {
+            Some(s) => format!(" (compute layer {s})"),
+            None => String::new(),
+        };
+        match self {
+            PrecisionError::ZeroK { stage } => {
+                write!(f, "bitstream length k = 0{}: every stage needs k >= {WORD}", at(stage))
+            }
+            PrecisionError::Misaligned { stage, k } => write!(
+                f,
+                "bitstream length k = {k}{} is not a multiple of the {WORD}-cycle word",
+                at(stage)
+            ),
+            PrecisionError::WrongLength { expected, got } => write!(
+                f,
+                "per-layer precision plan has {got} entries but the network has \
+                 {expected} compute layers"
+            ),
+            PrecisionError::Empty => write!(f, "precision plan covers no compute layers"),
+            PrecisionError::BadBudget { budget } => {
+                write!(f, "accuracy budget {budget} outside [0, 1)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PrecisionError {}
+
+/// `Some(k)` when every length in `ks` is the same `k` (`None` when empty
+/// or mixed) — the one uniformity check behind
+/// [`PrecisionPlan::as_uniform`] and `EngineConfig::uniform_k`.
+pub fn uniform_of(ks: &[usize]) -> Option<usize> {
+    match ks.split_first() {
+        Some((k, rest)) if rest.iter().all(|x| x == k) => Some(*k),
+        _ => None,
+    }
+}
+
+/// Check one stage length: positive and [`WORD`]-aligned.
+pub fn check_k(k: usize, stage: Option<usize>) -> Result<(), PrecisionError> {
+    if k == 0 {
+        Err(PrecisionError::ZeroK { stage })
+    } else if k % WORD != 0 {
+        Err(PrecisionError::Misaligned { stage, k })
+    } else {
+        Ok(())
+    }
+}
+
+/// A compiled per-layer precision assignment: one bitstream length per
+/// **compute** stage (indexed like `QuantizedWeights::layers`, i.e. by
+/// [`crate::accel::stage::StageDescriptor::weight_layer`]). Pool/residual
+/// stages operate on recovered values and carry no `k`.
+///
+/// Built from a [`Precision`] policy (`EngineConfig::resolved_precision`)
+/// or directly; compiled into `ForwardPlan` alongside the stage IR and
+/// threaded through the hardware model, so the software datapaths and the
+/// modeled schedule can never disagree about a layer's stream length.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PrecisionPlan {
+    ks: Vec<usize>,
+}
+
+impl PrecisionPlan {
+    /// The same `k` for every one of `n_layers` compute stages — exactly
+    /// today's scalar-`k` behavior.
+    pub fn uniform(k: usize, n_layers: usize) -> Self {
+        PrecisionPlan { ks: vec![k; n_layers] }
+    }
+
+    /// One `k` per compute stage, front to back.
+    pub fn per_layer(ks: Vec<usize>) -> Self {
+        PrecisionPlan { ks }
+    }
+
+    /// Per-compute-stage lengths, front to back.
+    pub fn ks(&self) -> &[usize] {
+        &self.ks
+    }
+
+    /// Compute stages covered.
+    pub fn len(&self) -> usize {
+        self.ks.len()
+    }
+
+    /// True when the plan covers no stages.
+    pub fn is_empty(&self) -> bool {
+        self.ks.is_empty()
+    }
+
+    /// The bitstream length of compute stage `wl` (the stage's
+    /// `weight_layer` index). Panics on out-of-range `wl` — validate the
+    /// plan against the network first.
+    pub fn k_for(&self, wl: usize) -> usize {
+        self.ks[wl]
+    }
+
+    /// The largest stage length (0 for an empty plan) — the figure a
+    /// single-`k` consumer (labels, mode placeholders) should quote.
+    pub fn max_k(&self) -> usize {
+        self.ks.iter().copied().max().unwrap_or(0)
+    }
+
+    /// `Some(k)` when every stage shares one length.
+    pub fn as_uniform(&self) -> Option<usize> {
+        uniform_of(&self.ks)
+    }
+
+    /// Sum of the per-stage lengths — the serial stream-cycle count the
+    /// plan spends per inference (the latency/energy proxy a tuner
+    /// minimizes).
+    pub fn total_cycles(&self) -> usize {
+        self.ks.iter().sum()
+    }
+
+    /// Every stage length positive and [`WORD`]-aligned, plan non-empty.
+    pub fn validate(&self) -> Result<(), PrecisionError> {
+        if self.ks.is_empty() {
+            return Err(PrecisionError::Empty);
+        }
+        for (wl, &k) in self.ks.iter().enumerate() {
+            check_k(k, Some(wl))?;
+        }
+        Ok(())
+    }
+
+    /// [`PrecisionPlan::validate`] plus the length check against a
+    /// network's compute-stage count.
+    pub fn validate_for(&self, n_compute: usize) -> Result<(), PrecisionError> {
+        if self.ks.len() != n_compute {
+            return Err(PrecisionError::WrongLength { expected: n_compute, got: self.ks.len() });
+        }
+        self.validate()
+    }
+}
+
+/// The typed precision policy an `EngineConfig` carries: how the per-layer
+/// [`PrecisionPlan`] is produced at session open.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Precision {
+    /// One global `k` (back-compat: `EngineConfig::with_k` sets this).
+    Uniform(usize),
+    /// Explicit per-compute-layer lengths, front to back (CLI
+    /// `--k-per-layer`).
+    PerLayer(Vec<usize>),
+    /// Let the greedy [`autotune`]r shrink per-layer `k` front-to-back
+    /// against a held-out calibration batch until the budget binds (CLI
+    /// `--k-auto-budget`).
+    Auto {
+        /// Largest tolerated drop in calibration agreement, in `[0, 1)`
+        /// (e.g. `0.05` = five points of calibration accuracy).
+        accuracy_budget: f64,
+    },
+}
+
+impl Precision {
+    /// Stable lowercase label (metrics, bench records).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Precision::Uniform(_) => "uniform",
+            Precision::PerLayer(_) => "per-layer",
+            Precision::Auto { .. } => "auto",
+        }
+    }
+}
+
+/// Knobs of the greedy autotuner. `Precision::Auto` uses
+/// [`AutoTuneConfig::new`] with the policy's budget; benches and tests
+/// tighten `k_max`/`calib_images` for speed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoTuneConfig {
+    /// Largest tolerated drop in calibration agreement, in `[0, 1)`.
+    /// Resolution is `1 / calib_images` — budgets below that allow no
+    /// flips at all.
+    pub accuracy_budget: f64,
+    /// Starting (and maximum) uniform length — the accuracy ceiling the
+    /// budget is measured against.
+    pub k_max: usize,
+    /// Smallest length a stage may shrink to (the paper's base k = 32 by
+    /// default).
+    pub k_min: usize,
+    /// Held-out calibration images (deterministic from the seed).
+    pub calib_images: usize,
+}
+
+impl AutoTuneConfig {
+    /// Defaults: shrink from a k = 1024 ceiling toward the paper's k = 32
+    /// floor over 12 calibration images.
+    pub fn new(accuracy_budget: f64) -> Self {
+        AutoTuneConfig { accuracy_budget, k_max: 1024, k_min: 32, calib_images: 12 }
+    }
+}
+
+/// Greedily shrink per-layer bitstream lengths front-to-back until the
+/// accuracy budget binds.
+///
+/// Methodology (the paper's own §V-B accuracy harness): candidate plans
+/// are scored with the **analytic noisy-expectation model** at the plan's
+/// per-layer `k` — the same O(1/k) sampling-error model Fig. 11/12 are
+/// generated from — against the noise-free expectation argmax on a
+/// deterministic held-out calibration batch, so a tuning run costs
+/// analytic forwards, not bit-level simulation. Starting from uniform
+/// `k_max`, each layer's `k` is halved (front to back, staying
+/// [`WORD`]-aligned and `>= k_min`) while calibration agreement stays
+/// within `accuracy_budget` of the `k_max` baseline; the first rejected
+/// halving freezes that layer.
+///
+/// Fully deterministic for a fixed `(net, weights, seed, config)` — the
+/// calibration batch, the noise draws, and the greedy order all derive
+/// from the arguments (asserted in `tests/stage_ir.rs`).
+pub fn autotune(
+    net: &NetworkSpec,
+    weights: &QuantizedWeights,
+    seed: u32,
+    cfg: &AutoTuneConfig,
+) -> Result<PrecisionPlan> {
+    if !(0.0..1.0).contains(&cfg.accuracy_budget) {
+        return Err(anyhow!("{}", PrecisionError::BadBudget { budget: cfg.accuracy_budget }));
+    }
+    check_k(cfg.k_max, None).map_err(|e| anyhow!("autotune k_max: {e}"))?;
+    check_k(cfg.k_min, None).map_err(|e| anyhow!("autotune k_min: {e}"))?;
+    if cfg.k_min > cfg.k_max {
+        return Err(anyhow!("autotune: k_min {} exceeds k_max {}", cfg.k_min, cfg.k_max));
+    }
+    let stages = net.stages()?;
+    let n = stages.iter().filter(|s| s.is_compute()).count();
+    let in_len = stages[0].in_len();
+
+    // Deterministic held-out calibration batch in [0, 1).
+    let mut g = XorShift64::new(((seed as u64) << 1) | 1);
+    let calib: Vec<Vec<f64>> = (0..cfg.calib_images.max(1))
+        .map(|_| (0..in_len).map(|_| (g.next_u64() % 1000) as f64 / 1000.0).collect())
+        .collect();
+
+    // Noise-free ideal predictions — the agreement target.
+    let exp = ForwardPlan::compile(net, weights, ForwardMode::Expectation)?;
+    let mut scr = Scratch::default();
+    let truth: Vec<usize> =
+        calib.iter().map(|img| classify(&exp.run_with(img, &mut scr, false))).collect();
+
+    // Calibration agreement of one candidate plan under the per-layer
+    // noisy-expectation model (per-image noise seeds, like fig11).
+    let score = |ks: &[usize]| -> Result<f64> {
+        let plan = PrecisionPlan::per_layer(ks.to_vec());
+        let mut scr = Scratch::default();
+        let mut agree = 0usize;
+        for (i, img) in calib.iter().enumerate() {
+            let mode = ForwardMode::NoisyExpectation {
+                k: plan.max_k(),
+                seed: seed ^ 0x9E37_79B9u32.wrapping_mul(i as u32 + 1),
+            };
+            let p = ForwardPlan::compile_with_precision(net, weights, mode, &plan)?;
+            agree += (classify(&p.run_with(img, &mut scr, false)) == truth[i]) as usize;
+        }
+        Ok(agree as f64 / calib.len() as f64)
+    };
+
+    let mut ks = vec![cfg.k_max; n];
+    let baseline = score(&ks)?;
+    let floor = baseline - cfg.accuracy_budget;
+    for i in 0..n {
+        loop {
+            let cand = ks[i] / 2;
+            if cand < cfg.k_min || cand % WORD != 0 {
+                break;
+            }
+            let prev = ks[i];
+            ks[i] = cand;
+            if score(&ks)? + 1e-12 < floor {
+                ks[i] = prev; // this halving broke the budget: freeze the layer
+                break;
+            }
+        }
+    }
+    Ok(PrecisionPlan::per_layer(ks))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::system::{evaluate_with_channel_precise, SystemConfig};
+    use crate::engine::metrics::cached_channel_report;
+    use crate::tech::TechKind;
+
+    #[test]
+    fn plan_accessors_and_uniformity() {
+        let u = PrecisionPlan::uniform(64, 3);
+        assert_eq!(u.ks(), &[64, 64, 64]);
+        assert_eq!(u.len(), 3);
+        assert_eq!(u.as_uniform(), Some(64));
+        assert_eq!(u.max_k(), 64);
+        assert_eq!(u.total_cycles(), 192);
+        let p = PrecisionPlan::per_layer(vec![128, 64, 32]);
+        assert_eq!(p.as_uniform(), None);
+        assert_eq!(p.max_k(), 128);
+        assert_eq!(p.k_for(2), 32);
+        assert!(!p.is_empty());
+        assert!(PrecisionPlan::per_layer(vec![]).is_empty());
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_lengths() {
+        assert!(PrecisionPlan::uniform(64, 2).validate().is_ok());
+        assert_eq!(
+            PrecisionPlan::per_layer(vec![]).validate(),
+            Err(PrecisionError::Empty)
+        );
+        assert_eq!(
+            PrecisionPlan::per_layer(vec![64, 0]).validate(),
+            Err(PrecisionError::ZeroK { stage: Some(1) })
+        );
+        assert_eq!(
+            PrecisionPlan::per_layer(vec![64, 100]).validate(),
+            Err(PrecisionError::Misaligned { stage: Some(1), k: 100 })
+        );
+        assert_eq!(
+            PrecisionPlan::uniform(64, 2).validate_for(3),
+            Err(PrecisionError::WrongLength { expected: 3, got: 2 })
+        );
+        assert!(PrecisionPlan::uniform(64, 3).validate_for(3).is_ok());
+        // Every error renders a distinct, informative message.
+        let msgs: Vec<String> = [
+            PrecisionError::ZeroK { stage: None },
+            PrecisionError::ZeroK { stage: Some(2) },
+            PrecisionError::Misaligned { stage: Some(1), k: 100 },
+            PrecisionError::WrongLength { expected: 3, got: 2 },
+            PrecisionError::Empty,
+            PrecisionError::BadBudget { budget: 1.5 },
+        ]
+        .iter()
+        .map(|e| e.to_string())
+        .collect();
+        let mut seen = std::collections::HashSet::new();
+        for m in &msgs {
+            assert!(seen.insert(m.clone()), "duplicate display: {m}");
+        }
+        assert!(msgs[2].contains("multiple"), "{}", msgs[2]);
+    }
+
+    #[test]
+    fn policy_labels() {
+        assert_eq!(Precision::Uniform(32).label(), "uniform");
+        assert_eq!(Precision::PerLayer(vec![32]).label(), "per-layer");
+        assert_eq!(Precision::Auto { accuracy_budget: 0.1 }.label(), "auto");
+    }
+
+    #[test]
+    fn autotune_rejects_bad_knobs() {
+        let net = NetworkSpec::mnist_strided();
+        let w = QuantizedWeights::synthetic(&net, 8, 1).unwrap();
+        let bad = AutoTuneConfig { accuracy_budget: 1.5, ..AutoTuneConfig::new(0.1) };
+        assert!(autotune(&net, &w, 7, &bad).is_err());
+        let bad = AutoTuneConfig { k_max: 100, ..AutoTuneConfig::new(0.1) };
+        assert!(autotune(&net, &w, 7, &bad).is_err());
+        let bad = AutoTuneConfig { k_min: 512, k_max: 256, ..AutoTuneConfig::new(0.1) };
+        assert!(autotune(&net, &w, 7, &bad).is_err());
+    }
+
+    #[test]
+    fn autotune_is_deterministic_and_respects_bounds() {
+        let net = NetworkSpec::mnist_strided();
+        let w = QuantizedWeights::synthetic(&net, 8, 0x5EED).unwrap();
+        let cfg = AutoTuneConfig {
+            accuracy_budget: 0.25,
+            k_max: 256,
+            k_min: 32,
+            calib_images: 6,
+        };
+        let a = autotune(&net, &w, 7, &cfg).unwrap();
+        let b = autotune(&net, &w, 7, &cfg).unwrap();
+        assert_eq!(a, b, "same inputs must tune to the same plan");
+        assert_eq!(a.len(), 4, "mnist_strided has four compute stages");
+        for &k in a.ks() {
+            assert!((cfg.k_min..=cfg.k_max).contains(&k), "k {k} out of bounds");
+            assert_eq!(k % WORD, 0, "k {k} must stay word-aligned");
+        }
+        a.validate_for(4).unwrap();
+    }
+
+    #[test]
+    fn tuned_plan_beats_uniform_ceiling_on_modeled_energy() {
+        // The headline claim: an autotuned plan spends strictly less
+        // modeled energy than the uniform k_max ceiling it was budgeted
+        // against, on a bundled MNIST topology.
+        let net = NetworkSpec::mnist_strided();
+        let w = QuantizedWeights::synthetic(&net, 8, 0x5EED).unwrap();
+        let cfg = AutoTuneConfig {
+            accuracy_budget: 0.34,
+            k_max: 1024,
+            k_min: 32,
+            calib_images: 6,
+        };
+        let tuned = autotune(&net, &w, 7, &cfg).unwrap();
+        assert!(
+            tuned.total_cycles() < tuned.len() * cfg.k_max,
+            "a generous budget must shrink at least one layer: {tuned:?}"
+        );
+        let channel = cached_channel_report(TechKind::Rfet10);
+        let sys = SystemConfig::paper(TechKind::Rfet10, 8);
+        let uniform =
+            evaluate_with_channel_precise(&sys, &net, channel, &PrecisionPlan::uniform(1024, 4));
+        let shrunk = evaluate_with_channel_precise(&sys, &net, channel, &tuned);
+        assert!(
+            shrunk.metrics.energy_uj < uniform.metrics.energy_uj,
+            "tuned {} µJ vs uniform-1024 {} µJ",
+            shrunk.metrics.energy_uj,
+            uniform.metrics.energy_uj
+        );
+        assert!(shrunk.metrics.latency_us < uniform.metrics.latency_us);
+    }
+}

@@ -7,7 +7,8 @@ use crate::accel::channel::{characterize_channel, ChannelReport};
 use crate::accel::layers::NetworkSpec;
 use crate::accel::memory::MemoryModel;
 use crate::accel::metrics::SystemMetrics;
-use crate::accel::pipeline::{schedule_stages, NetworkSchedule, ScheduleConfig};
+use crate::accel::pipeline::{schedule_stages_precise, NetworkSchedule, ScheduleConfig};
+use crate::accel::precision::PrecisionPlan;
 use crate::accel::stage;
 use crate::tech::sram::SramMacro;
 use crate::tech::TechKind;
@@ -79,6 +80,24 @@ pub fn evaluate_with_channel(
     net: &NetworkSpec,
     channel: &ChannelReport,
 ) -> SystemEvaluation {
+    let plan = PrecisionPlan::uniform(cfg.k, net.n_compute());
+    evaluate_with_channel_precise(cfg, net, channel, &plan)
+}
+
+/// [`evaluate_with_channel`] under a per-layer [`PrecisionPlan`]: the
+/// Algorithm 1 schedule — and through it every k-scaled figure (delay,
+/// switching energy, utilization, leakage-over-latency) — is costed at
+/// each compute layer's **own** bitstream length, while the k-independent
+/// parts (area, DRAM/SRAM traffic) are unchanged. This is the roll-up
+/// behind the per-layer-precision headline: same workload, shorter
+/// streams where the network tolerates them, strictly less modeled
+/// energy.
+pub fn evaluate_with_channel_precise(
+    cfg: &SystemConfig,
+    net: &NetworkSpec,
+    channel: &ChannelReport,
+    precision: &PrecisionPlan,
+) -> SystemEvaluation {
     let stages = net
         .stages()
         .unwrap_or_else(|e| panic!("system::evaluate({}): {e:#}", net.name));
@@ -90,7 +109,7 @@ pub fn evaluate_with_channel(
         memory: cfg.memory,
         bytes_per_operand: 1,
     };
-    let schedule = schedule_stages(&stages, &sched_cfg, 1);
+    let schedule = schedule_stages_precise(&stages, &sched_cfg, precision, 1);
 
     // ---- area ----
     let logic_area = cfg.channels as f64 * channel.area_um2;
@@ -263,6 +282,37 @@ mod tests {
         assert!(small.metrics.energy_uj < lenet.metrics.energy_uj);
         assert_eq!(small.schedule.layers.len(), 4, "four compute stages");
         assert_eq!(small.metrics.area_mm2, lenet.metrics.area_mm2, "area is workload-free");
+    }
+
+    #[test]
+    fn per_layer_precision_lowers_energy_not_area() {
+        // Shrinking any layer below the uniform ceiling strictly lowers
+        // modeled energy and latency; area and off-chip traffic are
+        // k-independent.
+        let net = NetworkSpec::lenet5();
+        let channel = characterize_channel(TechKind::Rfet10);
+        let mut cfg = SystemConfig::paper(TechKind::Rfet10, 8);
+        cfg.k = 1024;
+        let uniform = evaluate_with_channel_precise(
+            &cfg,
+            &net,
+            &channel,
+            &PrecisionPlan::uniform(1024, 5),
+        );
+        let tapered = evaluate_with_channel_precise(
+            &cfg,
+            &net,
+            &channel,
+            &PrecisionPlan::per_layer(vec![256, 256, 128, 64, 1024]),
+        );
+        assert!(tapered.metrics.energy_uj < uniform.metrics.energy_uj);
+        assert!(tapered.metrics.latency_us < uniform.metrics.latency_us);
+        assert_eq!(tapered.metrics.area_mm2, uniform.metrics.area_mm2);
+        assert_eq!(tapered.schedule.dram_bytes, uniform.schedule.dram_bytes);
+        // The uniform-plan path is exactly the scalar path.
+        let scalar = evaluate_with_channel(&cfg, &net, &channel);
+        assert_eq!(scalar.metrics.energy_uj, uniform.metrics.energy_uj);
+        assert_eq!(scalar.schedule.total_cycles, uniform.schedule.total_cycles);
     }
 
     #[test]

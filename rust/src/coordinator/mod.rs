@@ -571,7 +571,8 @@ ENTRY main {{
         let cfg = sc_cfg(ForwardMode::Stochastic { k: 64, seed: 9 }, 16);
         let ecfg = cfg.to_engine_config().unwrap();
         assert_eq!(ecfg.backend, BackendKind::StochasticFused);
-        assert_eq!(ecfg.k, 64);
+        assert_eq!(ecfg.precision, crate::engine::Precision::Uniform(64));
+        assert_eq!(ecfg.uniform_k(), Some(64));
         assert_eq!(ecfg.seed, 9);
         assert_eq!(ecfg.batch.max_batch, 16);
         assert_eq!(ecfg.batch.linger, Duration::from_millis(5));

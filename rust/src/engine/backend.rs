@@ -11,6 +11,7 @@
 
 use crate::accel::layers::NetworkSpec;
 use crate::accel::network::{reference, ForwardPlan, QuantizedWeights, Scratch};
+use crate::accel::precision::PrecisionPlan;
 use crate::engine::config::{BackendKind, EngineConfig};
 use crate::runtime;
 use anyhow::{anyhow, bail, Result};
@@ -36,17 +37,33 @@ pub trait Backend {
     fn infer_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
 }
 
-/// Build the configured backend. Called on the worker thread.
-pub(crate) fn build(cfg: &EngineConfig) -> Result<Box<dyn Backend>> {
+/// Build the configured backend, resolving the precision policy exactly
+/// once (weights + plan feed every constructor **and** travel back to the
+/// session for its per-layer-k-aware hardware estimate). Called on the
+/// worker thread. The plan is `None` only for [`BackendKind::Xla`], which
+/// models no SC hardware.
+pub(crate) fn build(
+    cfg: &EngineConfig,
+) -> Result<(Box<dyn Backend>, Option<PrecisionPlan>)> {
     cfg.validate()?;
-    Ok(match cfg.backend {
-        BackendKind::StochasticFused => Box::new(StochasticFused::from_config(cfg)?),
-        BackendKind::Expectation | BackendKind::NoisyExpectation | BackendKind::FixedPoint => {
-            Box::new(Expectation::from_config(cfg)?)
+    if cfg.backend == BackendKind::Xla {
+        return Ok((Box::new(Xla::from_config(cfg)?), None));
+    }
+    let weights = cfg.resolve_weights()?;
+    let precision = cfg.resolved_precision(&weights)?;
+    let backend: Box<dyn Backend> = match cfg.backend {
+        BackendKind::StochasticFused => {
+            Box::new(StochasticFused::from_resolved(cfg, &weights, &precision)?)
         }
-        BackendKind::ReferencePerBit => Box::new(ReferencePerBit::from_config(cfg)?),
-        BackendKind::Xla => Box::new(Xla::from_config(cfg)?),
-    })
+        BackendKind::Expectation | BackendKind::NoisyExpectation | BackendKind::FixedPoint => {
+            Box::new(Expectation::from_resolved(cfg, &weights, &precision)?)
+        }
+        BackendKind::ReferencePerBit => {
+            Box::new(ReferencePerBit::from_resolved(cfg, weights, precision.clone()))
+        }
+        BackendKind::Xla => unreachable!("handled above"),
+    };
+    Ok((backend, Some(precision)))
 }
 
 /// Process-wide compiled-plan cache keyed by
@@ -67,12 +84,26 @@ static PLAN_COMPILES: AtomicUsize = AtomicUsize::new(0);
 /// executables are *not* cached here: PJRT handles are thread-affine by
 /// design (see [`crate::runtime`]), so each session loads its own ladder.
 pub fn shared_plan(cfg: &EngineConfig) -> Result<Arc<ForwardPlan>> {
+    let weights = cfg.resolve_weights()?;
+    let precision = cfg.resolved_precision(&weights)?;
+    shared_plan_with(cfg, &weights, &precision)
+}
+
+/// [`shared_plan`] with the weights and precision plan already resolved
+/// (the worker-thread build path resolves them once for the backend *and*
+/// the cache key, so an autotuned policy never tunes twice per open).
+pub(crate) fn shared_plan_with(
+    cfg: &EngineConfig,
+    weights: &QuantizedWeights,
+    precision: &PrecisionPlan,
+) -> Result<Arc<ForwardPlan>> {
+    // The mode's k is a placeholder: compile_with_precision specializes
+    // every compute stage to the plan's own length.
     let mode = cfg
         .backend
-        .forward_mode(cfg.k, cfg.seed)
+        .forward_mode(precision.max_k(), cfg.seed)
         .ok_or_else(|| anyhow!("backend {} does not lower to a forward plan", cfg.backend))?;
-    let weights = cfg.resolve_weights()?;
-    let key = cfg.artifact_fingerprint(&weights);
+    let key = cfg.artifact_fingerprint(weights, precision);
     let cache = PLAN_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
     if let Some(plan) =
         crate::engine::lock_recover(cache).get(&key).and_then(Weak::upgrade)
@@ -87,7 +118,8 @@ pub fn shared_plan(cfg: &EngineConfig) -> Result<Arc<ForwardPlan>> {
     // homogeneous case still compiles once). compile (not new):
     // weight/shape mismatches surface as session open errors, never as
     // panics on the worker thread.
-    let plan = Arc::new(ForwardPlan::compile(&cfg.net, &weights, mode)?);
+    let plan =
+        Arc::new(ForwardPlan::compile_with_precision(&cfg.net, weights, mode, precision)?);
     PLAN_COMPILES.fetch_add(1, Ordering::Relaxed);
     let mut g = crate::engine::lock_recover(cache);
     if let Some(existing) = g.get(&key).and_then(Weak::upgrade) {
@@ -115,8 +147,12 @@ struct PlanExec {
 }
 
 impl PlanExec {
-    fn new(cfg: &EngineConfig) -> Result<Self> {
-        let plan = shared_plan(cfg)?;
+    fn new(
+        cfg: &EngineConfig,
+        weights: &QuantizedWeights,
+        precision: &PrecisionPlan,
+    ) -> Result<Self> {
+        let plan = shared_plan_with(cfg, weights, precision)?;
         Ok(PlanExec { plan, scratch: Scratch::default(), threads: cfg.threads, fbuf: Vec::new() })
     }
 
@@ -147,9 +183,23 @@ pub struct StochasticFused {
 }
 
 impl StochasticFused {
-    /// Build from a config with `backend == BackendKind::StochasticFused`.
+    /// Build from a config with `backend == BackendKind::StochasticFused`
+    /// (resolves weights and the precision policy itself).
     pub fn from_config(cfg: &EngineConfig) -> Result<Self> {
-        Ok(StochasticFused { exec: PlanExec::new(cfg)? })
+        let weights = cfg.resolve_weights()?;
+        let precision = cfg.resolved_precision(&weights)?;
+        Self::from_resolved(cfg, &weights, &precision)
+    }
+
+    /// The shared constructor body: weights and precision already
+    /// resolved (the worker-thread [`build`] path resolves once for the
+    /// backend *and* the session's plan report).
+    fn from_resolved(
+        cfg: &EngineConfig,
+        weights: &QuantizedWeights,
+        precision: &PrecisionPlan,
+    ) -> Result<Self> {
+        Ok(StochasticFused { exec: PlanExec::new(cfg, weights, precision)? })
     }
 }
 
@@ -180,13 +230,28 @@ pub struct Expectation {
 }
 
 impl Expectation {
-    /// Build from a config with an analytic `backend` kind.
+    /// Build from a config with an analytic `backend` kind (resolves
+    /// weights and the precision policy itself).
     pub fn from_config(cfg: &EngineConfig) -> Result<Self> {
+        let weights = cfg.resolve_weights()?;
+        let precision = cfg.resolved_precision(&weights)?;
+        Self::from_resolved(cfg, &weights, &precision)
+    }
+
+    /// The shared constructor body (see [`StochasticFused::from_resolved`]).
+    fn from_resolved(
+        cfg: &EngineConfig,
+        weights: &QuantizedWeights,
+        precision: &PrecisionPlan,
+    ) -> Result<Self> {
         debug_assert!(matches!(
             cfg.backend,
             BackendKind::Expectation | BackendKind::NoisyExpectation | BackendKind::FixedPoint
         ));
-        Ok(Expectation { exec: PlanExec::new(cfg)?, label: cfg.backend.label() })
+        Ok(Expectation {
+            exec: PlanExec::new(cfg, weights, precision)?,
+            label: cfg.backend.label(),
+        })
     }
 }
 
@@ -215,23 +280,38 @@ impl Backend for Expectation {
 pub struct ReferencePerBit {
     net: NetworkSpec,
     weights: QuantizedWeights,
-    k: usize,
+    /// Resolved per-layer bitstream lengths (the reference honors the
+    /// same plan as the fused engine — parity by construction).
+    precision: PrecisionPlan,
     seed: u32,
     in_len: usize,
     out_len: usize,
 }
 
 impl ReferencePerBit {
-    /// Build from a config with `backend == BackendKind::ReferencePerBit`.
+    /// Build from a config with `backend == BackendKind::ReferencePerBit`
+    /// (resolves weights and the precision policy itself).
     pub fn from_config(cfg: &EngineConfig) -> Result<Self> {
-        Ok(ReferencePerBit {
+        let weights = cfg.resolve_weights()?;
+        let precision = cfg.resolved_precision(&weights)?;
+        Ok(Self::from_resolved(cfg, weights, precision))
+    }
+
+    /// The shared constructor body (see [`StochasticFused::from_resolved`]);
+    /// infallible once the inputs are resolved.
+    fn from_resolved(
+        cfg: &EngineConfig,
+        weights: QuantizedWeights,
+        precision: PrecisionPlan,
+    ) -> Self {
+        ReferencePerBit {
             net: cfg.net.clone(),
-            weights: cfg.resolve_weights()?,
-            k: cfg.k,
+            weights,
+            precision,
             seed: cfg.seed,
             in_len: cfg.input_len(),
             out_len: cfg.output_len(),
-        })
+        }
     }
 }
 
@@ -253,10 +333,16 @@ impl Backend for ReferencePerBit {
             .iter()
             .map(|img| {
                 let wide: Vec<f64> = img.iter().map(|&v| v as f64).collect();
-                reference::forward_stochastic(&self.net, &self.weights, &wide, self.k, self.seed)
-                    .iter()
-                    .map(|&v| v as f32)
-                    .collect()
+                reference::forward_stochastic_plan(
+                    &self.net,
+                    &self.weights,
+                    &wide,
+                    &self.precision,
+                    self.seed,
+                )
+                .iter()
+                .map(|&v| v as f32)
+                .collect()
             })
             .collect())
     }
@@ -395,6 +481,22 @@ mod tests {
         let p2 = shared_plan(&cfg).unwrap();
         assert!(plan_compile_count() > before, "dead weak entry recompiles");
         assert_eq!(Arc::strong_count(&p2), 1, "the recompiled plan starts unshared");
+    }
+
+    #[test]
+    fn shared_plan_keys_on_the_resolved_precision_plan() {
+        use crate::accel::precision::Precision;
+        // A per-layer policy equal to the uniform one resolves to the SAME
+        // compiled artifact; a genuinely different assignment does not.
+        let uni = tiny_cfg(64);
+        let same = tiny_cfg(64).with_precision(Precision::PerLayer(vec![64]));
+        let diff = tiny_cfg(64).with_precision(Precision::PerLayer(vec![96]));
+        let p_uni = shared_plan(&uni).unwrap();
+        let p_same = shared_plan(&same).unwrap();
+        let p_diff = shared_plan(&diff).unwrap();
+        assert!(Arc::ptr_eq(&p_uni, &p_same), "equal plans share one artifact");
+        assert!(!Arc::ptr_eq(&p_uni, &p_diff));
+        assert_eq!(p_diff.precision().ks(), &[96]);
     }
 
     #[test]

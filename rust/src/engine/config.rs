@@ -7,12 +7,18 @@
 
 use crate::accel::layers::NetworkSpec;
 use crate::accel::network::{ForwardMode, QuantizedWeights};
+use crate::accel::precision::{
+    self, AutoTuneConfig, Precision, PrecisionError, PrecisionPlan,
+};
 use crate::data::ModelWeights;
+use crate::engine::error::EngineError;
 use crate::engine::metrics::HardwareEstimate;
 use crate::tech::TechKind;
 use anyhow::{bail, Result};
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::str::FromStr;
+use std::sync::{Mutex, OnceLock};
 use std::time::Duration;
 
 /// Which datapath a session executes. Every kind is constructible from an
@@ -154,8 +160,12 @@ pub struct EngineConfig {
     pub weights: WeightSource,
     /// Quantization precision in bits.
     pub bits: u32,
-    /// Bitstream length (stochastic / noisy kinds).
-    pub k: usize,
+    /// Bitstream-length policy (stochastic / noisy kinds): one global `k`
+    /// ([`Precision::Uniform`], what [`EngineConfig::with_k`] sets), an
+    /// explicit per-compute-layer assignment ([`Precision::PerLayer`]), or
+    /// the greedy accuracy-budget autotuner ([`Precision::Auto`]). Resolved
+    /// into a compiled [`PrecisionPlan`] at session open.
+    pub precision: Precision,
     /// Master seed for every SNG lane / noise draw.
     pub seed: u32,
     /// Compute-thread cap for the in-process datapaths (0 = all cores).
@@ -180,7 +190,7 @@ impl EngineConfig {
             net,
             weights: WeightSource::None,
             bits: 8,
-            k: 32,
+            precision: Precision::Uniform(32),
             seed: 7,
             threads: 0,
             batch: BatchPolicy::default(),
@@ -209,10 +219,28 @@ impl EngineConfig {
         self
     }
 
-    /// Set the bitstream length.
+    /// Set a uniform bitstream length (shorthand for
+    /// `with_precision(Precision::Uniform(k))` — the back-compat path).
     pub fn with_k(mut self, k: usize) -> Self {
-        self.k = k;
+        self.precision = Precision::Uniform(k);
         self
+    }
+
+    /// Set the full bitstream-length policy (uniform / per-layer / auto).
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
+    /// `Some(k)` when the policy is a single global length (uniform, or a
+    /// per-layer plan whose stages all agree) — the replacement for
+    /// reading the old scalar `k` field.
+    pub fn uniform_k(&self) -> Option<usize> {
+        match &self.precision {
+            Precision::Uniform(k) => Some(*k),
+            Precision::PerLayer(ks) => precision::uniform_of(ks),
+            Precision::Auto { .. } => None,
+        }
     }
 
     /// Set the SNG/noise master seed.
@@ -298,18 +326,113 @@ impl EngineConfig {
                 if self.bits == 0 || self.bits > 16 {
                     bail!("engine config: precision must be 1..=16 bits, got {}", self.bits);
                 }
-                let needs_k = matches!(
-                    kind,
-                    BackendKind::StochasticFused
-                        | BackendKind::ReferencePerBit
-                        | BackendKind::NoisyExpectation
-                );
-                if needs_k && self.k == 0 {
-                    bail!("engine config: backend {kind} needs a bitstream length k >= 1");
+                self.validate_precision().map_err(|e| {
+                    anyhow::Error::from(EngineError::InvalidPrecision(e.to_string()))
+                        .context(format!("engine config: backend {kind}"))
+                })?;
+            }
+        }
+        Ok(())
+    }
+
+    /// True when the configured backend's arithmetic depends on the
+    /// bitstream length (the analytic expectation / fixed-point kinds use
+    /// `k` only for the hardware estimate).
+    fn k_sensitive(&self) -> bool {
+        matches!(
+            self.backend,
+            BackendKind::StochasticFused
+                | BackendKind::ReferencePerBit
+                | BackendKind::NoisyExpectation
+        )
+    }
+
+    /// Typed precision-policy validation: for k-sensitive backends every
+    /// stage length must be a positive [`precision::WORD`]-multiple;
+    /// per-layer plans must cover the compute stages exactly; autotune
+    /// budgets must lie in `[0, 1)`. Before this check, a bad `k` flowed
+    /// silently into the kernels. Public so estimate-only consumers (the
+    /// `sweep` CLI) can refuse malformed plans with the same typed error
+    /// the serving path raises at open.
+    pub fn validate_precision(&self) -> Result<(), PrecisionError> {
+        match &self.precision {
+            Precision::Uniform(k) => {
+                if self.k_sensitive() {
+                    precision::check_k(*k, None)?;
+                }
+            }
+            Precision::PerLayer(ks) => {
+                let plan = PrecisionPlan::per_layer(ks.clone());
+                plan.validate_for(self.net.n_compute())?;
+            }
+            Precision::Auto { accuracy_budget } => {
+                if !(0.0..1.0).contains(accuracy_budget) {
+                    return Err(PrecisionError::BadBudget { budget: *accuracy_budget });
                 }
             }
         }
         Ok(())
+    }
+
+    /// Lower the non-tuning policies into their plan (`None` for
+    /// [`Precision::Auto`], which needs weights) — the ONE place the
+    /// Uniform/PerLayer lowering lives, shared by
+    /// [`EngineConfig::resolved_precision`] and [`EngineConfig::estimate`].
+    fn static_plan(&self) -> Option<PrecisionPlan> {
+        match &self.precision {
+            Precision::Uniform(k) => Some(PrecisionPlan::uniform(*k, self.net.n_compute())),
+            Precision::PerLayer(ks) => Some(PrecisionPlan::per_layer(ks.clone())),
+            Precision::Auto { .. } => None,
+        }
+    }
+
+    /// Resolve the precision policy into the compiled per-layer
+    /// [`PrecisionPlan`] for this network: uniform and per-layer policies
+    /// lower directly; [`Precision::Auto`] runs the greedy
+    /// [`precision::autotune`]r against `weights` (deterministic for a
+    /// fixed config, and memoized process-wide so the shards of a
+    /// homogeneous pool tune **once**).
+    pub fn resolved_precision(&self, weights: &QuantizedWeights) -> Result<PrecisionPlan> {
+        let plan = if let Precision::Auto { accuracy_budget } = &self.precision {
+            self.tuned_plan(weights, &AutoTuneConfig::new(*accuracy_budget))?
+        } else {
+            self.static_plan().expect("non-Auto policies lower statically")
+        };
+        if self.k_sensitive() {
+            plan.validate_for(self.net.n_compute()).map_err(|e| {
+                anyhow::Error::from(EngineError::InvalidPrecision(e.to_string()))
+            })?;
+        }
+        Ok(plan)
+    }
+
+    /// Autotune through the process-wide memo: the tuner is deterministic
+    /// per (net, weights, seed, knobs), so identical configs — e.g. the N
+    /// shards of a replicated pool — pay for exactly one tuning run.
+    fn tuned_plan(
+        &self,
+        weights: &QuantizedWeights,
+        tcfg: &AutoTuneConfig,
+    ) -> Result<PrecisionPlan> {
+        static TUNED: OnceLock<Mutex<HashMap<u128, PrecisionPlan>>> = OnceLock::new();
+        let mut fp = Fingerprint::new();
+        fp.write(format!("{:?}", self.net).as_bytes());
+        write_weights(&mut fp, weights);
+        fp.write(&self.seed.to_le_bytes());
+        fp.write(&tcfg.accuracy_budget.to_bits().to_le_bytes());
+        fp.write(&(tcfg.k_max as u64).to_le_bytes());
+        fp.write(&(tcfg.k_min as u64).to_le_bytes());
+        fp.write(&(tcfg.calib_images as u64).to_le_bytes());
+        let key = fp.digest();
+        let cache = TUNED.get_or_init(|| Mutex::new(HashMap::new()));
+        if let Some(hit) = crate::engine::lock_recover(cache).get(&key) {
+            return Ok(hit.clone());
+        }
+        // Tune OUTSIDE the lock (a tuning run is many analytic forwards);
+        // determinism makes a racing duplicate harmless.
+        let plan = precision::autotune(&self.net, weights, self.seed, tcfg)?;
+        crate::engine::lock_recover(cache).insert(key, plan.clone());
+        Ok(plan)
     }
 
     /// Resolve the configured [`WeightSource`] into quantized codes.
@@ -333,46 +456,78 @@ impl EngineConfig {
         }
     }
 
-    /// The modeled-hardware estimate for this configuration (`None` for
-    /// [`BackendKind::Xla`]).
+    /// The modeled-hardware estimate for this configuration. `None` for
+    /// [`BackendKind::Xla`], for a precision policy that fails
+    /// [`EngineConfig::validate_precision`] (a malformed plan must not
+    /// silently shape the model — `sweep` surfaces the typed error
+    /// instead), or when an [`Precision::Auto`] policy cannot resolve
+    /// because the weights are unavailable. Per-layer policies produce a
+    /// per-layer-k-exact schedule.
     pub fn estimate(&self) -> Option<HardwareEstimate> {
-        if self.backend == BackendKind::Xla {
+        if self.backend == BackendKind::Xla || self.validate_precision().is_err() {
             return None;
         }
-        Some(HardwareEstimate::for_config(self.tech, self.channels, self.k, &self.net))
+        // Zero-k analytic configs are legal and clamped inside for_plan,
+        // preserving the old for_config(k.max(1)) robustness.
+        let plan = match self.static_plan() {
+            Some(plan) => plan,
+            None => {
+                let w = self.resolve_weights().ok()?;
+                self.resolved_precision(&w).ok()?
+            }
+        };
+        Some(HardwareEstimate::for_plan(self.tech, self.channels, &plan, &self.net))
     }
 
     /// Fingerprint of everything that determines the **compiled artifact**
-    /// for this configuration: the backend's lowered forward mode (which
-    /// folds in `k`/`seed` only where the datapath actually samples), the
-    /// quantization precision, the full network structure, and the resolved
-    /// quantized weights. The modeled-technology knobs (`tech`, `channels`)
-    /// are deliberately excluded — they shape the hardware *estimate*, not
-    /// the compiled plan — so pool shards differing only in modeled tech
-    /// still share one plan. Keys the process-wide shared-plan cache
+    /// for this configuration: the backend kind, the seed and the
+    /// **resolved per-layer precision plan** (folded in only where the
+    /// datapath actually samples — the analytic expectation / fixed-point
+    /// kinds ignore `k`), the quantization precision, the full network
+    /// structure, and the resolved quantized weights. The modeled-tech
+    /// knobs (`tech`, `channels`) are deliberately excluded — they shape
+    /// the hardware *estimate*, not the compiled plan — so pool shards
+    /// differing only in modeled tech still share one plan, and shards
+    /// sharing one resolved plan (including an autotuned one) share one
+    /// compiled artifact. Keys the process-wide shared-plan cache
     /// ([`crate::engine::backend::shared_plan`]).
-    pub fn artifact_fingerprint(&self, weights: &QuantizedWeights) -> u128 {
+    pub fn artifact_fingerprint(
+        &self,
+        weights: &QuantizedWeights,
+        precision: &PrecisionPlan,
+    ) -> u128 {
         let mut fp = Fingerprint::new();
         fp.write(self.backend.label().as_bytes());
-        fp.write(format!("{:?}", self.backend.forward_mode(self.k, self.seed)).as_bytes());
+        if self.k_sensitive() {
+            fp.write(&self.seed.to_le_bytes());
+            for &k in precision.ks() {
+                fp.write(&(k as u64).to_le_bytes());
+            }
+        }
         fp.write(&self.bits.to_le_bytes());
         // NetworkSpec's Debug form covers the name, input shape, and every
         // layer descriptor — the whole topology.
         fp.write(format!("{:?}", self.net).as_bytes());
-        fp.write(&weights.bits.to_le_bytes());
-        fp.write(&(weights.layers.len() as u64).to_le_bytes());
-        for layer in &weights.layers {
-            fp.write(&layer.gamma.to_bits().to_le_bytes());
-            fp.write(&layer.mu.to_bits().to_le_bytes());
-            fp.write(&(layer.codes.len() as u64).to_le_bytes());
-            for codes in &layer.codes {
-                fp.write(&(codes.len() as u64).to_le_bytes());
-                for &c in codes {
-                    fp.write(&c.to_le_bytes());
-                }
+        write_weights(&mut fp, weights);
+        fp.digest()
+    }
+}
+
+/// Fold a quantized weight tensor into a fingerprint (shared by the
+/// artifact fingerprint and the autotune memo key).
+fn write_weights(fp: &mut Fingerprint, weights: &QuantizedWeights) {
+    fp.write(&weights.bits.to_le_bytes());
+    fp.write(&(weights.layers.len() as u64).to_le_bytes());
+    for layer in &weights.layers {
+        fp.write(&layer.gamma.to_bits().to_le_bytes());
+        fp.write(&layer.mu.to_bits().to_le_bytes());
+        fp.write(&(layer.codes.len() as u64).to_le_bytes());
+        for codes in &layer.codes {
+            fp.write(&(codes.len() as u64).to_le_bytes());
+            for &c in codes {
+                fp.write(&c.to_le_bytes());
             }
         }
-        fp.digest()
     }
 }
 
@@ -472,7 +627,8 @@ mod tests {
             .with_tech(TechKind::Finfet10)
             .with_channels(4);
         assert_eq!(cfg.bits, 6, "with_quantized adopts the payload precision");
-        assert_eq!(cfg.k, 128);
+        assert_eq!(cfg.precision, Precision::Uniform(128));
+        assert_eq!(cfg.uniform_k(), Some(128));
         assert_eq!(cfg.input_len(), 4);
         assert_eq!(cfg.output_len(), 3);
         cfg.validate().unwrap();
@@ -534,28 +690,130 @@ mod tests {
             .with_quantized(tiny_quantized(8))
             .with_k(64);
         let w = base.resolve_weights().unwrap();
-        let fp = base.artifact_fingerprint(&w);
+        let plan = |cfg: &EngineConfig| cfg.resolved_precision(&w).unwrap();
+        let fp = base.artifact_fingerprint(&w, &plan(&base));
         // Deterministic.
-        assert_eq!(fp, base.artifact_fingerprint(&w));
+        assert_eq!(fp, base.artifact_fingerprint(&w, &plan(&base)));
         // Modeled-tech knobs do not change the compiled artifact.
         let tech = base.clone().with_tech(TechKind::Finfet10).with_channels(4);
-        assert_eq!(fp, tech.artifact_fingerprint(&w));
+        assert_eq!(fp, tech.artifact_fingerprint(&w, &plan(&tech)));
         // Thread caps and batch policy are runtime knobs, not artifacts.
         let threads = base.clone().with_threads(3);
-        assert_eq!(fp, threads.artifact_fingerprint(&w));
+        assert_eq!(fp, threads.artifact_fingerprint(&w, &plan(&threads)));
         // k, seed, backend, weights, and topology all change the artifact.
-        assert_ne!(fp, base.clone().with_k(128).artifact_fingerprint(&w));
-        assert_ne!(fp, base.clone().with_seed(99).artifact_fingerprint(&w));
+        let k128 = base.clone().with_k(128);
+        assert_ne!(fp, k128.artifact_fingerprint(&w, &plan(&k128)));
+        let reseeded = base.clone().with_seed(99);
+        assert_ne!(fp, reseeded.artifact_fingerprint(&w, &plan(&reseeded)));
         let exp = EngineConfig::new(BackendKind::Expectation, tiny_net())
             .with_quantized(tiny_quantized(8));
-        assert_ne!(fp, exp.artifact_fingerprint(&w));
+        assert_ne!(fp, exp.artifact_fingerprint(&w, &plan(&exp)));
         let mut w2 = w.clone();
         w2.layers[0].codes[0][0] ^= 1;
-        assert_ne!(fp, base.artifact_fingerprint(&w2));
-        // Expectation ignores k (forward mode carries no k), so two
-        // expectation configs at different k share one artifact.
+        assert_ne!(fp, base.artifact_fingerprint(&w2, &plan(&base)));
+        // Expectation ignores k, so two expectation configs at different k
+        // share one artifact.
         let exp_k = exp.clone().with_k(4096);
-        assert_eq!(exp.artifact_fingerprint(&w), exp_k.artifact_fingerprint(&w));
+        assert_eq!(
+            exp.artifact_fingerprint(&w, &plan(&exp)),
+            exp_k.artifact_fingerprint(&w, &plan(&exp_k))
+        );
+        // A per-layer plan equal to the uniform one IS the same artifact;
+        // a different per-layer assignment is not.
+        let same = base.clone().with_precision(Precision::PerLayer(vec![64]));
+        assert_eq!(fp, same.artifact_fingerprint(&w, &plan(&same)));
+        let tapered = base.clone().with_precision(Precision::PerLayer(vec![32]));
+        assert_ne!(fp, tapered.artifact_fingerprint(&w, &plan(&tapered)));
+    }
+
+    #[test]
+    fn precision_policies_validate_typed() {
+        let ok = |p: Precision| {
+            EngineConfig::new(BackendKind::StochasticFused, tiny_net())
+                .with_quantized(tiny_quantized(8))
+                .with_precision(p)
+                .validate()
+        };
+        ok(Precision::Uniform(64)).unwrap();
+        ok(Precision::PerLayer(vec![64])).unwrap();
+        ok(Precision::Auto { accuracy_budget: 0.05 }).unwrap();
+        // Degenerate lengths are typed errors, not silent kernel inputs.
+        let err = ok(Precision::Uniform(100)).unwrap_err().to_string();
+        assert!(err.contains("invalid precision policy"), "{err}");
+        assert!(err.contains("multiple"), "{err}");
+        assert!(ok(Precision::Uniform(0)).is_err());
+        assert!(ok(Precision::PerLayer(vec![64, 64])).is_err(), "wrong plan length");
+        assert!(ok(Precision::PerLayer(vec![])).is_err());
+        assert!(ok(Precision::Auto { accuracy_budget: 1.0 }).is_err());
+        assert!(ok(Precision::Auto { accuracy_budget: -0.1 }).is_err());
+        // Analytic backends ignore a uniform k they do not execute...
+        EngineConfig::new(BackendKind::Expectation, tiny_net())
+            .with_quantized(tiny_quantized(8))
+            .with_precision(Precision::Uniform(100))
+            .validate()
+            .unwrap();
+        // ...but a malformed per-layer plan is rejected everywhere.
+        assert!(EngineConfig::new(BackendKind::Expectation, tiny_net())
+            .with_quantized(tiny_quantized(8))
+            .with_precision(Precision::PerLayer(vec![64, 64]))
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn resolved_precision_lowers_policies_to_plans() {
+        let base = EngineConfig::new(BackendKind::StochasticFused, tiny_net())
+            .with_quantized(tiny_quantized(8));
+        let w = base.resolve_weights().unwrap();
+        let uni = base.clone().with_k(64).resolved_precision(&w).unwrap();
+        assert_eq!(uni, PrecisionPlan::uniform(64, 1));
+        let per = base
+            .clone()
+            .with_precision(Precision::PerLayer(vec![96]))
+            .resolved_precision(&w)
+            .unwrap();
+        assert_eq!(per.ks(), &[96]);
+        // Auto resolves deterministically (memoized process-wide) to a
+        // valid word-aligned plan within the tuner's bounds.
+        let auto_cfg = base.clone().with_precision(Precision::Auto { accuracy_budget: 0.2 });
+        let a = auto_cfg.resolved_precision(&w).unwrap();
+        let b = auto_cfg.resolved_precision(&w).unwrap();
+        assert_eq!(a, b);
+        a.validate_for(1).unwrap();
+        assert!(a.max_k() <= 1024);
+        // A k-sensitive backend refuses to resolve a degenerate plan.
+        assert!(base
+            .clone()
+            .with_precision(Precision::PerLayer(vec![100]))
+            .resolved_precision(&w)
+            .is_err());
+    }
+
+    #[test]
+    fn estimate_reflects_per_layer_precision() {
+        let base = EngineConfig::new(BackendKind::StochasticFused, tiny_net())
+            .with_quantized(tiny_quantized(8));
+        let hi = base.clone().with_k(1024).estimate().unwrap();
+        let lo = base
+            .clone()
+            .with_precision(Precision::PerLayer(vec![64]))
+            .estimate()
+            .unwrap();
+        assert!(lo.metrics.energy_uj < hi.metrics.energy_uj);
+        assert_eq!(lo.k, 64);
+        // A malformed plan never silently shapes the model: estimate
+        // refuses (sweep turns this into the typed InvalidPrecision).
+        assert!(base
+            .clone()
+            .with_precision(Precision::PerLayer(vec![0]))
+            .estimate()
+            .is_none());
+        assert!(base
+            .clone()
+            .with_precision(Precision::PerLayer(vec![64, 64]))
+            .estimate()
+            .is_none());
+        assert!(base.clone().with_k(0).estimate().is_none(), "k-sensitive uniform 0");
     }
 
     #[test]

@@ -38,6 +38,12 @@ pub enum EngineError {
     /// Every shard of the pool is unhealthy (all workers died); nothing
     /// can serve the request.
     NoHealthyShards,
+    /// A precision policy failed validation at the config boundary:
+    /// `k == 0`, a stage length that is not a multiple of the
+    /// [`crate::accel::precision::WORD`]-cycle word, a per-layer plan of
+    /// the wrong length, or an out-of-range autotune budget. The payload
+    /// is the rendered [`crate::accel::precision::PrecisionError`].
+    InvalidPrecision(String),
     /// A client-side lock was poisoned by a panicking sibling thread. The
     /// payload names the lock.
     LockPoisoned(&'static str),
@@ -62,6 +68,9 @@ impl fmt::Display for EngineError {
             ),
             EngineError::NoHealthyShards => {
                 write!(f, "no healthy shards available to serve the request")
+            }
+            EngineError::InvalidPrecision(what) => {
+                write!(f, "invalid precision policy: {what}")
             }
             EngineError::LockPoisoned(what) => {
                 write!(f, "lock poisoned by a panicked client thread: {what}")
@@ -120,6 +129,7 @@ mod tests {
             EngineError::EmptyQueue,
             EngineError::Rejected { retry_after_hint: Duration::from_micros(250) },
             EngineError::NoHealthyShards,
+            EngineError::InvalidPrecision("k = 100 is not a multiple of 8".into()),
             EngineError::LockPoisoned("results"),
             EngineError::Request("bad image".into()),
         ];

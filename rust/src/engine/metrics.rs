@@ -11,7 +11,8 @@ use crate::accel::channel::{characterize_channel, ChannelReport};
 use crate::accel::layers::NetworkSpec;
 use crate::accel::memory::MemoryModel;
 use crate::accel::metrics::SystemMetrics;
-use crate::accel::system::{evaluate_with_channel, SystemConfig};
+use crate::accel::precision::PrecisionPlan;
+use crate::accel::system::{evaluate_with_channel_precise, SystemConfig};
 use crate::tech::sram::SramMacro;
 use crate::tech::TechKind;
 use std::sync::OnceLock;
@@ -189,26 +190,52 @@ pub struct HardwareEstimate {
     pub tech: TechKind,
     /// Channel count.
     pub channels: usize,
-    /// Bitstream length the hardware is evaluated at.
+    /// Bitstream length the hardware is evaluated at — the largest
+    /// per-stage length under a per-layer plan (the `k` for uniform
+    /// plans); the schedule behind `metrics` is per-layer-k exact either
+    /// way.
     pub k: usize,
     /// The system metrics (per-inference latency/energy, ADP/EDP/EDAP...).
     pub metrics: SystemMetrics,
 }
 
 impl HardwareEstimate {
-    /// Evaluate the paper's system model for one configuration on one
-    /// workload (SRAM/memory fixed at the §V setup). Channel
+    /// Evaluate the paper's system model for one uniform-`k` configuration
+    /// on one workload (SRAM/memory fixed at the §V setup). Channel
     /// characterization is cached per technology for the process lifetime.
     pub fn for_config(tech: TechKind, channels: usize, k: usize, net: &NetworkSpec) -> Self {
+        Self::for_plan(tech, channels, &PrecisionPlan::uniform(k.max(1), net.n_compute()), net)
+    }
+
+    /// [`HardwareEstimate::for_config`] under a per-layer
+    /// [`PrecisionPlan`]: the modeled schedule costs each compute layer at
+    /// its own bitstream length (`k` reports the plan's maximum).
+    pub fn for_plan(
+        tech: TechKind,
+        channels: usize,
+        precision: &PrecisionPlan,
+        net: &NetworkSpec,
+    ) -> Self {
+        // Same robustness contract as for_config's k.max(1): a zero-cycle
+        // stage would evaluate to a zero-latency layer and poison the
+        // power quotient. (Engine paths validate plans before this.)
+        let clamped;
+        let precision = if precision.ks().contains(&0) {
+            clamped =
+                PrecisionPlan::per_layer(precision.ks().iter().map(|&k| k.max(1)).collect());
+            &clamped
+        } else {
+            precision
+        };
         let channel = cached_channel_report(tech);
         let cfg = SystemConfig {
             tech,
             channels: channels.max(1),
-            k: k.max(1),
+            k: precision.max_k().max(1),
             sram: SramMacro::paper_10kb(),
             memory: MemoryModel::gddr5_paper(),
         };
-        let eval = evaluate_with_channel(&cfg, net, channel);
+        let eval = evaluate_with_channel_precise(&cfg, net, channel, precision);
         HardwareEstimate { tech, channels: cfg.channels, k: cfg.k, metrics: eval.metrics }
     }
 }
@@ -607,6 +634,25 @@ mod tests {
         // Cached characterization: a second call is consistent.
         let again = HardwareEstimate::for_config(TechKind::Rfet10, 8, 32, &net);
         assert!((again.metrics.latency_us - est.metrics.latency_us).abs() < 1e-12);
+    }
+
+    #[test]
+    fn for_plan_matches_for_config_on_uniform_and_reports_max_k() {
+        let net = NetworkSpec::lenet5();
+        let uniform = HardwareEstimate::for_config(TechKind::Rfet10, 8, 64, &net);
+        let planned =
+            HardwareEstimate::for_plan(TechKind::Rfet10, 8, &PrecisionPlan::uniform(64, 5), &net);
+        assert_eq!(planned.k, 64);
+        assert!((planned.metrics.energy_uj - uniform.metrics.energy_uj).abs() < 1e-12);
+        assert!((planned.metrics.latency_us - uniform.metrics.latency_us).abs() < 1e-12);
+        let tapered = HardwareEstimate::for_plan(
+            TechKind::Rfet10,
+            8,
+            &PrecisionPlan::per_layer(vec![64, 32, 32, 32, 64]),
+            &net,
+        );
+        assert_eq!(tapered.k, 64, "the estimate labels the plan's largest k");
+        assert!(tapered.metrics.energy_uj < uniform.metrics.energy_uj);
     }
 
     fn fake_session_metrics(backend: &str, lat_us: u64, with_estimate: bool) -> SessionMetrics {

@@ -87,6 +87,7 @@ pub mod error;
 pub mod metrics;
 pub mod pool;
 
+pub use crate::accel::precision::{Precision, PrecisionPlan};
 pub use backend::Backend;
 pub use config::{BackendKind, BatchPolicy, EngineConfig, WeightSource};
 pub use error::EngineError;
@@ -206,6 +207,11 @@ struct BackendInfo {
     name: &'static str,
     in_len: usize,
     out_len: usize,
+    /// The resolved per-layer precision plan (None for XLA) — resolved on
+    /// the worker (an `Auto` policy runs the tuner there) and reported
+    /// back so the session's hardware estimate and introspection see the
+    /// same plan the datapath executes.
+    precision: Option<PrecisionPlan>,
 }
 
 /// An open inference session: one backend, one dynamic batcher, one
@@ -221,7 +227,9 @@ pub struct Session {
     /// Inputs for the modeled-hardware estimate (None for XLA), evaluated
     /// lazily on first [`Session::metrics`] — channel characterization is
     /// gate-level-simulation heavy and many sessions never read metrics.
-    estimate_inputs: Option<(TechKind, usize, usize, NetworkSpec)>,
+    /// The per-layer precision the estimate is costed at comes from the
+    /// worker-resolved plan in [`BackendInfo`].
+    estimate_inputs: Option<(TechKind, usize, NetworkSpec)>,
     estimate: OnceLock<Option<HardwareEstimate>>,
     opened: Instant,
     queue_depth: usize,
@@ -234,7 +242,7 @@ impl Session {
         let estimate_inputs = if config.backend == BackendKind::Xla {
             None
         } else {
-            Some((config.tech, config.channels, config.k, config.net.clone()))
+            Some((config.tech, config.channels, config.net.clone()))
         };
         let queue_depth = config.batch.queue_depth.max(1);
         let shared = Arc::new(Shared {
@@ -282,6 +290,13 @@ impl Session {
     /// Flattened output length (class count).
     pub fn out_len(&self) -> usize {
         self.info.out_len
+    }
+
+    /// The per-layer bitstream lengths this session's datapath executes —
+    /// the resolved [`PrecisionPlan`] (including an autotuned one), `None`
+    /// for the XLA backend. What the hardware estimate is costed at.
+    pub fn precision(&self) -> Option<&PrecisionPlan> {
+        self.info.precision.as_ref()
     }
 
     /// True once [`Session::close`] has been called (the session accepts no
@@ -524,11 +539,12 @@ impl Session {
     /// modeled-hardware estimate (cached for the session's lifetime).
     pub fn metrics(&self) -> SessionMetrics {
         let estimate = *self.estimate.get_or_init(|| {
-            self.estimate_inputs
-                .as_ref()
-                .map(|&(tech, channels, k, ref net)| {
-                    HardwareEstimate::for_config(tech, channels, k, net)
-                })
+            match (&self.estimate_inputs, &self.info.precision) {
+                (Some((tech, channels, net)), Some(plan)) => {
+                    Some(HardwareEstimate::for_plan(*tech, *channels, plan, net))
+                }
+                _ => None,
+            }
         });
         let rec = lock_recover(&self.shared.recorder);
         SessionMetrics {
@@ -587,9 +603,13 @@ fn worker_loop(
     let batch_max = cfg.batch.max_batch.max(1);
     let linger = cfg.batch.linger;
     let mut backend = match backend::build(&cfg) {
-        Ok(b) => {
-            let info =
-                BackendInfo { name: b.name(), in_len: b.in_len(), out_len: b.out_len() };
+        Ok((b, precision)) => {
+            let info = BackendInfo {
+                name: b.name(),
+                in_len: b.in_len(),
+                out_len: b.out_len(),
+                precision,
+            };
             let _ = ready.send(Ok(info));
             b
         }
@@ -761,6 +781,36 @@ mod tests {
             let b = golden.infer(image(phase)).unwrap();
             assert_eq!(a, b, "phase {phase}");
         }
+    }
+
+    #[test]
+    fn session_reports_its_resolved_precision_plan() {
+        let session = Engine::open(cfg(BackendKind::StochasticFused)).unwrap();
+        assert_eq!(
+            session.precision().map(PrecisionPlan::ks),
+            Some(&[64usize][..]),
+            "a uniform k resolves to a uniform plan"
+        );
+        let per = Engine::open(
+            cfg(BackendKind::StochasticFused).with_precision(Precision::PerLayer(vec![48])),
+        )
+        .unwrap();
+        assert_eq!(per.precision().map(PrecisionPlan::ks), Some(&[48usize][..]));
+        // The per-layer session is bit-exact vs the reference at the same
+        // plan, and its hardware estimate is costed at the plan's k.
+        let golden = Engine::open(
+            cfg(BackendKind::ReferencePerBit).with_precision(Precision::PerLayer(vec![48])),
+        )
+        .unwrap();
+        for phase in 0..2 {
+            assert_eq!(
+                per.infer(image(phase)).unwrap(),
+                golden.infer(image(phase)).unwrap(),
+                "phase {phase}"
+            );
+        }
+        let m = per.metrics();
+        assert_eq!(m.estimate.expect("SC backends carry an estimate").k, 48);
     }
 
     #[test]

@@ -64,18 +64,30 @@
 //!                 │            shapes, neurons/fan-in, weight shapes,
 //!                 │            residual save points; malformed stacks
 //!                 │            are typed errors, not panics
-//!                 ├─▶ ForwardPlan::compile  — LayerStage objects
-//!                 │                           (fused SC / analytic)
-//!                 ├─▶ network::reference    — per-bit golden model
+//!                 │
+//! Precision ─resolve─▶ PrecisionPlan                 (accel::precision)
+//!   Uniform(k)           one bitstream length per compute stage
+//!   PerLayer([k…])       (word-multiple, typed-validated; the Auto
+//!   Auto{budget}          policy runs the greedy accuracy-budget tuner)
+//!                 │
+//!                 ├─▶ ForwardPlan::compile_with_precision
+//!                 │       — LayerStage objects (fused SC / analytic),
+//!                 │         each compute stage at its own k
+//!                 ├─▶ network::reference    — per-bit golden model,
+//!                 │                           same per-layer plan
 //!                 └─▶ accel::pipeline/system — Algorithm 1 schedule,
-//!                     DRAM traffic, energy roll-up
+//!                     DRAM traffic, energy roll-up, per-layer-k exact
 //! ```
 //!
 //! Because the fused engine and the per-bit reference read the *same*
-//! gather tables from the same descriptors, their bit-exact parity is
-//! structural; and because the hardware model costs the same descriptors,
-//! the modeled schedule can never disagree with the software datapath
-//! about what a layer is. [`accel::layers::NetworkSpec::by_name`] is the
+//! gather tables from the same descriptors — and honor the *same*
+//! [`accel::precision::PrecisionPlan`] — their bit-exact parity is
+//! structural; and because the hardware model costs the same descriptors
+//! at the same per-layer lengths, the modeled schedule can never disagree
+//! with the software datapath about what a layer is or how many stream
+//! cycles it spends. Adjacent stages at different `k` rescale through the
+//! S2B→B2S value boundary every stage already owns.
+//! [`accel::layers::NetworkSpec::by_name`] is the
 //! single registry behind every stringly network lookup
 //! (`lenet5` / `cifar_net` / `mnist_strided`).
 //!

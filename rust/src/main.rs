@@ -23,6 +23,7 @@ use scnn::accel::{channel, layers::NetworkSpec, metrics::argmin_by};
 use scnn::data::{Artifacts, Dataset};
 use scnn::engine::{
     classify, BackendKind, BatchPolicy, Engine, EngineConfig, EngineError, Placement, PoolConfig,
+    Precision,
 };
 use scnn::tech::TechKind;
 use std::collections::HashMap;
@@ -76,6 +77,40 @@ where
     }
 }
 
+/// Parse a comma-separated `--k-per-layer` list (one entry per compute
+/// layer, front to back).
+fn parse_k_list(list: &str) -> Result<Vec<usize>> {
+    list.split(',')
+        .map(|tok| {
+            tok.trim()
+                .parse::<usize>()
+                .map_err(|e| anyhow!("flag --k-per-layer: cannot parse {tok:?}: {e}"))
+        })
+        .collect()
+}
+
+/// Lower the precision flags onto a config: `--k-per-layer a,b,...` or
+/// `--k-auto-budget B` replace the uniform `--k` (mutually exclusive).
+/// Malformed policies (k = 0, non-word-multiples, wrong layer counts)
+/// surface as typed errors from `EngineConfig::validate` at open.
+fn apply_precision_flags(
+    mut cfg: EngineConfig,
+    flags: &HashMap<String, String>,
+) -> Result<EngineConfig> {
+    match (flags.get("k-per-layer"), flags.get("k-auto-budget")) {
+        (Some(_), Some(_)) => {
+            bail!("--k-per-layer and --k-auto-budget are mutually exclusive")
+        }
+        (Some(list), None) => cfg = cfg.with_precision(Precision::PerLayer(parse_k_list(list)?)),
+        (None, Some(_)) => {
+            let accuracy_budget: f64 = flag(flags, "k-auto-budget", 0.02)?;
+            cfg = cfg.with_precision(Precision::Auto { accuracy_budget });
+        }
+        (None, None) => {}
+    }
+    Ok(cfg)
+}
+
 fn parse_tech(s: &str) -> Result<TechKind> {
     match s {
         "rfet" => Ok(TechKind::Rfet10),
@@ -116,12 +151,15 @@ fn print_help() {
                      stand-in weights) --k K --bits B --batch-max M\n\
                      --linger-ms L --queue-depth Q --threads T\n\
                      --shards S --placement rr|least|hash --pool-queue-depth P\n\
+                     --k-per-layer K1,K2,... (one per compute layer) or\n\
+                     --k-auto-budget B (greedy per-layer autotune)\n\
                      stream the test set through a sharded engine pool\n\
            simulate  --mode stochastic|reference|expectation|noisy|fixed\n\
                      --net NAME --synthetic --k K --bits B --n N --threads T\n\
-                     --seed S --shards S\n\
+                     --seed S --shards S --k-per-layer L --k-auto-budget B\n\
                      batched in-process inference over the test set\n\
            sweep     --tech rfet|finfet --net NAME --max-channels C --k K\n\
+                     --k-per-layer K1,K2,...\n\
                      Fig. 13 design space via Engine::estimate\n\
            report    --table 1|2|3                        paper tables\n"
     );
@@ -203,7 +241,7 @@ fn net_config(
         }
         cfg.with_weights_file(path)
     };
-    Ok(cfg)
+    apply_precision_flags(cfg, flags)
 }
 
 /// Lower the CLI flags into a pool configuration: `--shards` replicas of
@@ -322,11 +360,24 @@ fn sweep(flags: &HashMap<String, String>) -> Result<()> {
     println!("ch | area mm² | latency µs | energy µJ | ADP | EDP | EDAP");
     let mut ms = Vec::new();
     for &c in &counts {
-        let cfg = EngineConfig::new(BackendKind::StochasticFused, net.clone())
-            .with_tech(tech)
-            .with_channels(c)
-            .with_k(k);
-        let est = Engine::estimate(&cfg).expect("SC configurations always have an estimate");
+        let cfg = apply_precision_flags(
+            EngineConfig::new(BackendKind::StochasticFused, net.clone())
+                .with_tech(tech)
+                .with_channels(c)
+                .with_k(k),
+            flags,
+        )?;
+        // Refuse malformed plans with the same typed error serve/simulate
+        // raise at open — a bad --k-per-layer must not silently shape the
+        // modeled numbers.
+        cfg.validate_precision()
+            .map_err(|e| anyhow::Error::from(EngineError::InvalidPrecision(e.to_string())))?;
+        let est = Engine::estimate(&cfg).ok_or_else(|| {
+            anyhow!(
+                "no hardware estimate for this configuration (an --k-auto-budget \
+                 sweep needs weights — use --k or --k-per-layer here)"
+            )
+        })?;
         let m = est.metrics;
         println!(
             "{:>2} | {:.4} | {:.2} | {:.3} | {:.4} | {:.4} | {:.5}",
@@ -451,6 +502,48 @@ mod tests {
         assert_eq!(net_flag(&parse_flags(&[])).unwrap().name, "lenet5");
         let bad = parse_flags(&args(&["--net", "alexnet"]));
         assert!(net_flag(&bad).is_err());
+    }
+
+    #[test]
+    fn precision_flags_lower_to_typed_policies() {
+        let base = || {
+            EngineConfig::new(
+                BackendKind::StochasticFused,
+                scnn::accel::layers::NetworkSpec::lenet5(),
+            )
+        };
+        // Plain --k stays uniform.
+        let cfg = apply_precision_flags(base().with_k(64), &parse_flags(&[])).unwrap();
+        assert_eq!(cfg.precision, Precision::Uniform(64));
+        // --k-per-layer parses a comma list.
+        let m = parse_flags(&args(&["--k-per-layer", "256, 128,64,32,32"]));
+        let cfg = apply_precision_flags(base(), &m).unwrap();
+        assert_eq!(cfg.precision, Precision::PerLayer(vec![256, 128, 64, 32, 32]));
+        // --k-auto-budget lowers to the autotune policy.
+        let m = parse_flags(&args(&["--k-auto-budget", "0.05"]));
+        let cfg = apply_precision_flags(base(), &m).unwrap();
+        assert_eq!(cfg.precision, Precision::Auto { accuracy_budget: 0.05 });
+        // Unparseable lists and conflicting flags are errors.
+        assert!(parse_k_list("64,banana").is_err());
+        let both = parse_flags(&args(&["--k-per-layer=64", "--k-auto-budget=0.1"]));
+        assert!(apply_precision_flags(base(), &both).is_err());
+        // A malformed per-layer policy is rejected by validate (typed),
+        // exactly what the CLI surfaces at open.
+        let bad = parse_flags(&args(&["--k-per-layer", "100"]));
+        let cfg = apply_precision_flags(
+            base().with_quantized(
+                scnn::accel::network::QuantizedWeights::synthetic(
+                    &scnn::accel::layers::NetworkSpec::lenet5(),
+                    8,
+                    1,
+                )
+                .unwrap(),
+            ),
+            &bad,
+        )
+        .unwrap();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("invalid precision policy"), "{err}");
     }
 
     #[test]

@@ -6,7 +6,7 @@
 
 use scnn::accel::layers::{Conv2d, LayerKind, LayerSpec, NetworkSpec};
 use scnn::accel::network::{LayerWeights, QuantizedWeights};
-use scnn::engine::{BackendKind, Engine, EngineConfig, Session};
+use scnn::engine::{BackendKind, Engine, EngineConfig, Precision, Session};
 use scnn::sc::{dequantize_bipolar, quantize_bipolar};
 use std::io::Write;
 use std::path::PathBuf;
@@ -107,8 +107,8 @@ fn sc_cfg(kind: BackendKind, k: usize, seed: u32, wseed: u64) -> EngineConfig {
 
 #[test]
 fn fused_backend_is_bit_exact_vs_reference_per_bit() {
-    // Bitstream lengths below, at, and across the 64-bit word boundary.
-    for k in [16usize, 64, 100] {
+    // Bitstream lengths below, at, and across the 64-bit packing boundary.
+    for k in [16usize, 64, 104] {
         for seed in [3u32, 7] {
             let fused = open(sc_cfg(BackendKind::StochasticFused, k, seed, 42));
             let golden = open(sc_cfg(BackendKind::ReferencePerBit, k, seed, 42));
@@ -133,7 +133,7 @@ fn extended_ops_fused_backend_is_bit_exact_vs_reference() {
                 .with_seed(seed),
         )
     };
-    for k in [32usize, 100] {
+    for k in [32usize, 104] {
         for seed in [2u32, 9] {
             let fused = mk(BackendKind::StochasticFused, k, seed);
             let golden = mk(BackendKind::ReferencePerBit, k, seed);
@@ -145,6 +145,67 @@ fn extended_ops_fused_backend_is_bit_exact_vs_reference() {
             );
         }
     }
+}
+
+#[test]
+fn per_layer_precision_sessions_are_bit_exact_vs_reference() {
+    // The session-level face of the PrecisionPlan refactor: a per-layer
+    // policy with different adjacent ks, fused vs per-bit reference,
+    // bit-for-bit through the typed config alone — on the extended
+    // vocabulary (strided, depthwise, residual, pooling).
+    let mk = |kind: BackendKind, ks: Vec<usize>| {
+        open(
+            EngineConfig::new(kind, extended_net())
+                .with_quantized(extended_weights(8, 19))
+                .with_precision(Precision::PerLayer(ks))
+                .with_seed(6),
+        )
+    };
+    // extended_net has three compute stages (two convs + the dense head).
+    for ks in [vec![64usize, 32, 96], vec![16, 104, 64]] {
+        let fused = mk(BackendKind::StochasticFused, ks.clone());
+        let golden = mk(BackendKind::ReferencePerBit, ks.clone());
+        assert_eq!(
+            fused.precision().map(|p| p.ks().to_vec()),
+            Some(ks.clone()),
+            "the session reports the plan it executes"
+        );
+        let images: Vec<Vec<f32>> = (0..3).map(|i| extended_image(i as u64 + 1)).collect();
+        assert_eq!(
+            fused.infer_batch(&images).unwrap(),
+            golden.infer_batch(&images).unwrap(),
+            "ks={ks:?}"
+        );
+    }
+    // Uniform(k) through the policy surface is bit-exact with the legacy
+    // scalar with_k path (they are the same resolved plan).
+    let legacy = open(
+        EngineConfig::new(BackendKind::StochasticFused, extended_net())
+            .with_quantized(extended_weights(8, 19))
+            .with_k(64)
+            .with_seed(6),
+    );
+    let policy = mk(BackendKind::StochasticFused, vec![64, 64, 64]);
+    let img = extended_image(9);
+    assert_eq!(legacy.infer(img.clone()).unwrap(), policy.infer(img).unwrap());
+}
+
+#[test]
+fn degenerate_precision_errors_at_open_instead_of_reaching_kernels() {
+    let mk = |p: Precision| {
+        Engine::open(
+            EngineConfig::new(BackendKind::StochasticFused, extended_net())
+                .with_quantized(extended_weights(8, 19))
+                .with_precision(p),
+        )
+    };
+    let err = mk(Precision::Uniform(0)).unwrap_err().to_string();
+    assert!(err.contains("invalid precision policy"), "{err}");
+    let err = mk(Precision::Uniform(100)).unwrap_err().to_string();
+    assert!(err.contains("multiple"), "{err}");
+    let err = mk(Precision::PerLayer(vec![64, 64])).unwrap_err().to_string();
+    assert!(err.contains("compute layers"), "{err}");
+    assert!(mk(Precision::Auto { accuracy_budget: 1.2 }).is_err());
 }
 
 #[test]

@@ -106,6 +106,35 @@ fn homogeneous_shards_share_one_compiled_plan() {
 }
 
 #[test]
+fn per_layer_precision_pool_is_bit_identical_and_shares_one_plan() {
+    // Shards under a per-layer precision policy resolve to ONE compiled
+    // plan per artifact fingerprint (the plan's ks are part of the key)
+    // and stay bit-identical to a single session on the same plan. 88 is
+    // a unique k for cache-line isolation, like the test above.
+    let cfg = fused_cfg(64).with_precision(scnn::engine::Precision::PerLayer(vec![88]));
+    let p1 = backend::shared_plan(&cfg).unwrap();
+    assert_eq!(p1.precision().ks(), &[88]);
+    let single = Engine::open(cfg.clone()).unwrap();
+    let pool = EnginePool::open(PoolConfig::replicated(cfg.clone(), 3)).unwrap();
+    assert_eq!(
+        Arc::strong_count(&p1),
+        5,
+        "1 handle + 1 single session + 3 shards share one compiled plan"
+    );
+    let imgs = images(12);
+    assert_eq!(
+        pool.infer_batch(&imgs).unwrap(),
+        single.infer_batch(&imgs).unwrap(),
+        "per-layer pool output is bit-identical to a single session"
+    );
+    // A different per-layer assignment is a different artifact.
+    let other =
+        fused_cfg(64).with_precision(scnn::engine::Precision::PerLayer(vec![96]));
+    let p_other = backend::shared_plan(&other).unwrap();
+    assert!(!Arc::ptr_eq(&p1, &p_other));
+}
+
+#[test]
 fn full_admission_queue_sheds_with_typed_rejected() {
     let pool = EnginePool::open(
         PoolConfig::replicated(fused_cfg(32), 1).with_queue_depth(4),

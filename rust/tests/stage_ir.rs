@@ -15,6 +15,7 @@
 
 use scnn::accel::layers::{Conv2d, LayerKind, LayerSpec, NetworkSpec, Shape};
 use scnn::accel::network::{reference, ForwardMode, ForwardPlan, QuantizedWeights};
+use scnn::accel::precision::{autotune, AutoTuneConfig, PrecisionPlan, WORD};
 use scnn::accel::stage::total_macs;
 
 struct Gen(u64);
@@ -250,6 +251,68 @@ fn prop_corrupted_stacks_are_rejected_without_panicking() {
         let w = QuantizedWeights::synthetic(&net, 6, 1).unwrap();
         assert!(ForwardPlan::compile(&bad, &w, ForwardMode::Expectation).is_err());
     });
+}
+
+#[test]
+fn prop_random_per_layer_plans_fused_matches_reference_bit_exactly() {
+    // Per-layer precision: random word-aligned k per compute stage
+    // (adjacent stages almost always differ), fused vs per-bit reference
+    // through the same plan — bit-for-bit, including the S2B→B2S
+    // rescaling at every stage boundary.
+    prop("per-layer-plans", 10, |g| {
+        let net = grow_random_net(g, 3);
+        let weights = QuantizedWeights::synthetic(&net, 8, g.next()).unwrap();
+        let stages = net.stages().unwrap();
+        let n_compute = stages.iter().filter(|s| s.is_compute()).count();
+        let ks: Vec<usize> =
+            (0..n_compute).map(|_| WORD * g.range(2, 15) as usize).collect();
+        let plan = PrecisionPlan::per_layer(ks.clone());
+        plan.validate_for(n_compute).unwrap();
+        let in_len = net.input.0 * net.input.1 * net.input.2;
+        let input: Vec<f64> = (0..in_len).map(|i| ((i % 7) as f64) / 7.0).collect();
+        let seed = g.range(1, 1000) as u32;
+        let mode = ForwardMode::Stochastic { k: plan.max_k(), seed };
+        let fused = ForwardPlan::compile_with_precision(&net, &weights, mode, &plan)
+            .unwrap()
+            .run(&input);
+        let golden =
+            reference::forward_stochastic_plan(&net, &weights, &input, &plan, seed);
+        assert_eq!(fused, golden, "ks={ks:?} seed={seed}");
+        assert!(fused.iter().all(|v| v.is_finite()));
+    });
+}
+
+#[test]
+fn auto_tuned_plans_are_deterministic_for_a_fixed_seed() {
+    // The Auto policy's contract: same (net, weights, seed, knobs) — same
+    // plan, bit for bit; tuned stages stay word-aligned inside the
+    // tuner's bounds and the resulting plan compiles and runs.
+    let mut g = Gen::new(0xA07_0);
+    let net = grow_random_net(&mut g, 2);
+    let weights = QuantizedWeights::synthetic(&net, 8, 99).unwrap();
+    let cfg = AutoTuneConfig {
+        accuracy_budget: 0.25,
+        k_max: 128,
+        k_min: 16,
+        calib_images: 5,
+    };
+    let a = autotune(&net, &weights, 13, &cfg).unwrap();
+    let b = autotune(&net, &weights, 13, &cfg).unwrap();
+    assert_eq!(a, b, "autotune must be deterministic for a fixed seed");
+    for &k in a.ks() {
+        assert!((cfg.k_min..=cfg.k_max).contains(&k));
+        assert_eq!(k % WORD, 0);
+    }
+    let in_len = net.input.0 * net.input.1 * net.input.2;
+    let input: Vec<f64> = (0..in_len).map(|i| ((i % 5) as f64) / 5.0).collect();
+    let mode = ForwardMode::Stochastic { k: a.max_k(), seed: 13 };
+    let fused =
+        ForwardPlan::compile_with_precision(&net, &weights, mode, &a).unwrap().run(&input);
+    assert_eq!(
+        fused,
+        reference::forward_stochastic_plan(&net, &weights, &input, &a, 13),
+        "the tuned plan stays on the bit-exact contract"
+    );
 }
 
 #[test]
