@@ -34,7 +34,7 @@ fn main() {
     let bits = 8;
     bench("pcc_transfer_measure(8-bit, 3 kinds, k=16384)", 1, 3, || {
         for kind in PccKind::ALL {
-            let mut l = Lfsr::new(bits, 1);
+            let mut l = Lfsr::new(bits, 1).expect("8-bit LFSR");
             let mut ones = 0u32;
             for _ in 0..16384 {
                 let r = l.value();

@@ -14,7 +14,10 @@
 //! breakdown (software median vs modeled hardware delay, per compiled
 //! stage of `lenet5` and `mnist_strided`) goes to `BENCH_layers.json`,
 //! and the `EnginePool` shard-scaling curve (img/s and p50/p99 vs shard
-//! count, fused backend at k=256) goes to `BENCH_pool.json`.
+//! count, fused backend at k=256) goes to `BENCH_pool.json`, and the
+//! fault-injection degradation curves (argmax agreement vs injected
+//! bit-flip rate, stochastic at three stream lengths vs the binary
+//! expectation datapath) go to `BENCH_faults.json`.
 //! Run with `cargo bench --bench hotpath`.
 
 use scnn::accel::layers::NetworkSpec;
@@ -496,6 +499,94 @@ fn main() {
         );
     }
 
+    // ---- fault injection: graceful degradation vs the binary cliff ----
+    // (BENCH_faults.json) Argmax agreement against the clean expectation
+    // baseline as the injected bit-flip rate rises, for the stochastic
+    // datapath (flips land on the SC bitstreams, where one flipped bit
+    // moves a value by 2/k) vs the analytic expectation datapath (the
+    // same rate lands on the binary activation codes, where one flipped
+    // MSB moves a value by half the range). Three stream lengths show how
+    // longer streams buy more tolerance — the paper's error-resilience
+    // claim, measured end to end on both 28x28 topologies.
+    let mut fjson = JsonReport::new();
+    let fault_rates = [0.0f64, 1e-3, 1e-2, 5e-2];
+    let fault_ks = [32usize, 128, 512];
+    for fname in ["lenet5", "mnist_strided"] {
+        let fnet = NetworkSpec::by_name(fname).unwrap();
+        let fweights = if fname == net.name {
+            weights.clone()
+        } else {
+            QuantizedWeights::synthetic(&fnet, 8, 0x5EED).expect("valid topology")
+        };
+        let clean = ForwardPlan::new(&fnet, &fweights, ForwardMode::Expectation);
+        let fault_imgs: Vec<Vec<f64>> = (0..16)
+            .map(|s| {
+                (0..clean.in_len()).map(|i| (((i + s * 13) % 17) as f64) / 17.0).collect()
+            })
+            .collect();
+        let ideal: Vec<usize> = fault_imgs
+            .iter()
+            .map(|im| scnn::accel::network::classify(&clean.run(im)))
+            .collect();
+        let agreement = |plan: &ForwardPlan| -> f64 {
+            let outs = plan.run_batch(&fault_imgs);
+            let agree = outs
+                .iter()
+                .zip(&ideal)
+                .filter(|(o, &t)| scnn::accel::network::classify(o) == t)
+                .count();
+            100.0 * agree as f64 / fault_imgs.len() as f64
+        };
+        println!("fault injection ({fname}, 16 images, agreement vs clean expectation):");
+        for &rate in &fault_rates {
+            let fp = scnn::faults::FaultPlan::new(0xFA_417).with_bit_flip_rate(rate);
+            let faults = (rate > 0.0).then_some(&fp);
+            for &k in &fault_ks {
+                let plan = ForwardPlan::compile_with_precision_faults(
+                    &fnet,
+                    &fweights,
+                    ForwardMode::Stochastic { k, seed: 7 },
+                    &PrecisionPlan::uniform(k, fnet.n_compute()),
+                    faults,
+                )
+                .unwrap();
+                let t0 = std::time::Instant::now();
+                let pct = agreement(&plan);
+                let dt = t0.elapsed().as_nanos() as f64;
+                println!("  stochastic k={k:<4} rate={rate:<6}: {pct:.1}% agree");
+                let r = BenchResult {
+                    name: format!("faults({fname},stochastic,k={k},rate={rate})"),
+                    median_ns: dt,
+                    mean_ns: dt,
+                    iters: 1,
+                };
+                fjson.add(
+                    &r,
+                    &[("bit_flip_rate", rate), ("k", k as f64), ("agreement_pct", pct)],
+                );
+            }
+            let plan = ForwardPlan::compile_with_precision_faults(
+                &fnet,
+                &fweights,
+                ForwardMode::Expectation,
+                &PrecisionPlan::uniform(32, fnet.n_compute()),
+                faults,
+            )
+            .unwrap();
+            let t0 = std::time::Instant::now();
+            let pct = agreement(&plan);
+            let dt = t0.elapsed().as_nanos() as f64;
+            println!("  binary expectation  rate={rate:<6}: {pct:.1}% agree");
+            let r = BenchResult {
+                name: format!("faults({fname},expectation,rate={rate})"),
+                median_ns: dt,
+                mean_ns: dt,
+                iters: 1,
+            };
+            fjson.add(&r, &[("bit_flip_rate", rate), ("agreement_pct", pct)]);
+        }
+    }
+
     // Gate-level simulator throughput (the Genus substitute).
     let lib = scnn::tech::CellLibrary::finfet10();
     let nl = scnn::sc::apc::build_netlist(25, 32, scnn::sc::apc::FaStyle::CmosCell)
@@ -554,5 +645,14 @@ fn main() {
             std::fs::canonicalize(prpath).unwrap_or_else(|_| prpath.to_path_buf()).display()
         ),
         Err(e) => eprintln!("could not write BENCH_precision.json: {e}"),
+    }
+    let fpath = std::path::Path::new("BENCH_faults.json");
+    match fjson.write(fpath) {
+        Ok(()) => println!(
+            "wrote {} fault-injection records to {}",
+            fjson.len(),
+            std::fs::canonicalize(fpath).unwrap_or_else(|_| fpath.to_path_buf()).display()
+        ),
+        Err(e) => eprintln!("could not write BENCH_faults.json: {e}"),
     }
 }

@@ -15,7 +15,7 @@ fn measure_transfer(kind: PccKind, bits: u32, len: usize) -> Vec<(u32, f64)> {
     // Long-LFSR measurement (matches the paper's simulation setup).
     (0..(1u32 << bits))
         .map(|x| {
-            let mut l = Lfsr::new(bits.max(3), 1);
+            let mut l = Lfsr::new(bits.max(3), 1).expect("supported LFSR width");
             let ones = (0..len)
                 .filter(|_| {
                     let r = l.value() & ((1 << bits) - 1);

@@ -26,8 +26,8 @@ fn main() {
     let w_val = -0.25f64;
     let a_code = quantize_bipolar(a_val, bits);
     let w_code = quantize_bipolar(w_val, bits);
-    let mut sng_a = Sng::new(bits, PccKind::Comparator, 17);
-    let mut sng_w = Sng::new(bits + 3, PccKind::Comparator, 101); // decorrelated RNS
+    let mut sng_a = Sng::new(bits, PccKind::Comparator, 17).expect("8-bit SNG");
+    let mut sng_w = Sng::new(bits + 3, PccKind::Comparator, 101).expect("11-bit SNG"); // decorrelated RNS
     let a = sng_a.generate(a_code, k);
     let w = sng_w.generate(w_code & ((1 << bits) - 1), k);
     println!("a = {a_val} -> code {a_code} -> stream value {:+.3}", a.value_bipolar());
@@ -56,7 +56,7 @@ fn main() {
     let acts = sng_a.generate_correlated(&acodes, k);
     let wgts = sng_w.generate_correlated(&wcodes, k);
     let r4: Vec<u32> = {
-        let mut l = scnn::sc::Lfsr::new(8, 5);
+        let mut l = scnn::sc::Lfsr::new(8, 5).expect("8-bit LFSR");
         (0..k)
             .map(|_| {
                 let v = l.value() & 0x3F;
@@ -82,7 +82,7 @@ fn main() {
     println!("value 0.3 -> code {} ({}-bit)", quantize_bipolar(0.3, bits), bits);
     let x = quantize_bipolar(0.3, bits);
     for kind in PccKind::ALL {
-        let mut sng = Sng::new(bits, kind, 99);
+        let mut sng = Sng::new(bits, kind, 99).expect("8-bit SNG");
         let bs = sng.generate(x, 4096);
         println!(
             "  {kind:?}: stream p = {:.4} (ideal {:.4}, closed-form {:.4})",

@@ -32,9 +32,28 @@ impl MemoryModel {
     }
 }
 
+/// Apply a single-event upset to a stored `width`-bit word: flip bit
+/// `bit % width`. The fault-injection subsystem (`crate::faults`) routes
+/// every SRAM weight upset through this one function so the fused engine
+/// and the per-bit reference corrupt storage identically.
+pub fn upset_word(code: u32, width: u32, bit: u32) -> u32 {
+    code ^ (1 << (bit % width.max(1)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn upset_flips_exactly_one_in_range_bit() {
+        for bit in 0..16 {
+            let c = upset_word(0xAB, 8, bit);
+            assert_eq!((c ^ 0xAB).count_ones(), 1);
+            assert!((c ^ 0xAB).trailing_zeros() < 8, "upset stays in the word");
+        }
+        assert_eq!(upset_word(upset_word(0x5A, 8, 3), 8, 3), 0x5A, "involutive");
+        assert_eq!(upset_word(0, 0, 7), 1, "zero width degrades to bit 0");
+    }
 
     #[test]
     fn paper_bandwidth() {

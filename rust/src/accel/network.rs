@@ -43,11 +43,13 @@ use crate::accel::layers::{NetworkSpec, Shape};
 use crate::accel::par;
 use crate::accel::precision::{self, PrecisionPlan};
 use crate::accel::stage::{self, GatherTable, StageDescriptor, StageOp};
+use crate::faults::FaultPlan;
 use crate::sc::bitstream::VerticalCounter;
 use crate::sc::neuron;
 use crate::sc::rng;
 use crate::sc::{dequantize_bipolar, quantize_bipolar};
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// One compute layer's quantized weights plus its re-encoder affine.
 ///
@@ -450,6 +452,40 @@ impl ForwardPlan {
         mode: ForwardMode,
         precision: &PrecisionPlan,
     ) -> Result<Self> {
+        Self::compile_with_precision_faults(net, weights, mode, precision, None)
+    }
+
+    /// [`ForwardPlan::compile_with_precision`] with an optional
+    /// [`FaultPlan`] compiled into the datapath: SRAM weight upsets are
+    /// applied to the stored codes before lowering (all modes), and the
+    /// stochastic stages inject stream bit flips, stuck-at APC lanes, and
+    /// SNG correlation faults exactly as described on [`FaultPlan`]. The
+    /// analytic (expectation / fixed-point) stages map the same
+    /// `bit_flip_rate` onto the quantized activation-code bits — the
+    /// binary side of the robustness comparison. The fused engine and the
+    /// per-bit reference ([`reference::forward_stochastic_plan_faulted`])
+    /// stay **bit-exact** under any identical fault plan, because every
+    /// injected fault is a pure function of the plan seed and the stream's
+    /// own generation key.
+    pub fn compile_with_precision_faults(
+        net: &NetworkSpec,
+        weights: &QuantizedWeights,
+        mode: ForwardMode,
+        precision: &PrecisionPlan,
+        faults: Option<&FaultPlan>,
+    ) -> Result<Self> {
+        // Storage faults strike before any datapath runs: corrupt the
+        // weight SRAM once, then lower the corrupted tensor normally.
+        let corrupted;
+        let weights = match faults {
+            Some(f) if f.sram_upset_rate > 0.0 => {
+                corrupted = f.corrupt_weights(weights);
+                &corrupted
+            }
+            _ => weights,
+        };
+        let faults: Option<Arc<FaultPlan>> =
+            faults.filter(|f| !f.is_noop()).map(|f| Arc::new(f.clone()));
         let stages = net.stages()?;
         let n_compute = stages.iter().filter(|s| s.is_compute()).count();
         if weights.layers.len() != n_compute {
@@ -485,11 +521,12 @@ impl ForwardPlan {
                     };
                     Box::new(ComputeStage {
                         meta,
-                        lp: build_layer_plan(weights, st, table, mode)?,
+                        lp: build_layer_plan(weights, st, table, mode, faults.as_deref())?,
                         mode,
                         k,
                         words,
                         bits,
+                        faults: faults.clone(),
                     })
                 }
                 StageOp::MaxPool { size } => {
@@ -656,6 +693,8 @@ struct ComputeStage {
     /// Words per stream.
     words: usize,
     bits: u32,
+    /// Compiled-in fault injection (`None` = clean datapath).
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl LayerStage for ComputeStage {
@@ -680,19 +719,22 @@ impl ComputeStage {
         scr.acodes.clear();
         scr.acodes.extend(scr.act.iter().map(|&v| quantize_bipolar(v, bits)));
         assert_eq!(scr.acodes.len(), lp.in_sites, "layer input size mismatch");
+        let faults = self.faults.as_deref();
         // Per-image activation SNG streams, one packed lane per site.
         scr.act_words.clear();
         scr.act_words.resize(lp.in_sites * words, 0);
         for (p, &code) in scr.acodes.iter().enumerate() {
-            lane_stream_words(
-                code,
-                bits,
-                k,
-                lp.base,
-                p as u64,
-                &mut scr.act_words[p * words..(p + 1) * words],
-            );
+            let slot = &mut scr.act_words[p * words..(p + 1) * words];
+            lane_stream_words(code, bits, k, lp.base, p as u64, slot);
+            if let Some(f) = faults {
+                f.flip_words(lp.base, p as u64, k, slot);
+            }
         }
+        // Constant streams for stuck-at APC lanes (XNOR with all-ones is
+        // the identity, so a dead lane reuses the live accumulate path).
+        let stuck_const: Option<(Vec<u64>, Vec<u64>)> = faults
+            .filter(|f| !f.stuck_lanes.is_empty())
+            .map(|_| (vec![!0u64; words], vec![0u64; words]));
         let total = lp.out_ch * lp.gather.n_win;
         scr.out.clear();
         scr.out.resize(total, 0.0);
@@ -706,6 +748,12 @@ impl ComputeStage {
                 let wbase = oc * lp.fan_in * words;
                 vc.reset();
                 for (j, &src) in lp.gather.window(oc, wi).iter().enumerate() {
+                    if let Some((ones, zeros)) = &stuck_const {
+                        if let Some(v) = faults.and_then(|f| f.stuck(lp.wl, j)) {
+                            vc.add_xnor_words(if v { ones } else { zeros }, ones);
+                            continue;
+                        }
+                    }
                     let a = match src {
                         Some(i) => &act_words[i * words..(i + 1) * words],
                         None => &lp.pad_words[j * words..(j + 1) * words],
@@ -742,6 +790,14 @@ impl ComputeStage {
         scr.acodes.clear();
         scr.acodes.extend(scr.act.iter().map(|&v| quantize_bipolar(v, bits)));
         assert_eq!(scr.acodes.len(), lp.in_sites, "layer input size mismatch");
+        if let Some(f) = self.faults.as_deref() {
+            // The binary datapath's view of the same upset rate: flips land
+            // on binary-weighted code bits, so a single hit can swing the
+            // value by half its range — the cliff the SC streams avoid.
+            for (p, code) in scr.acodes.iter_mut().enumerate() {
+                *code ^= f.flip_code(lp.wl, p, bits);
+            }
+        }
         scr.aq.clear();
         scr.aq.extend(scr.acodes.iter().map(|&c| dequantize_bipolar(c, bits)));
         let total = lp.out_ch * lp.gather.n_win;
@@ -823,6 +879,7 @@ fn build_layer_plan(
     st: &StageDescriptor,
     table: GatherTable,
     mode: ForwardMode,
+    faults: Option<&FaultPlan>,
 ) -> Result<LayerPlan> {
     let bits = weights.bits;
     let wl = st.weight_layer.expect("compute stages carry a weight layer");
@@ -882,14 +939,24 @@ fn build_layer_plan(
             lp.wgt_words = vec![0u64; out_ch * fan_in * words];
             for (oc, wcodes) in lw.codes.iter().enumerate() {
                 for (j, &code) in wcodes.iter().enumerate() {
-                    lane_stream_words(
-                        code,
-                        bits,
-                        k,
-                        base ^ 0x5EED_CAFE,
-                        ((oc as u64) << 20) + j as u64,
-                        &mut lp.wgt_words[(oc * fan_in + j) * words..][..words],
-                    );
+                    // An SNG correlation fault drops the lane's wire
+                    // shuffle: the PCC compares its own code against the
+                    // *raw activation RNS* of site j — the correlated-
+                    // product failure mode the per-lane keys exist to
+                    // prevent. Flip masks key on the actual generation
+                    // key, so fused and reference inject identically.
+                    let correlated =
+                        faults.is_some_and(|f| f.correlated_weight_lane(wl, oc, j));
+                    let (lbase, lane) = if correlated {
+                        (base, j as u64)
+                    } else {
+                        (base ^ 0x5EED_CAFE, ((oc as u64) << 20) + j as u64)
+                    };
+                    let slot = &mut lp.wgt_words[(oc * fan_in + j) * words..][..words];
+                    lane_stream_words(code, bits, k, lbase, lane, slot);
+                    if let Some(f) = faults {
+                        f.flip_words(lbase, lane, k, slot);
+                    }
                 }
             }
             // Per-lane padding streams, only for layers with border windows.
@@ -897,14 +964,11 @@ fn build_layer_plan(
                 let zero_code = quantize_bipolar(0.0, bits);
                 lp.pad_words = vec![0u64; fan_in * words];
                 for j in 0..fan_in {
-                    lane_stream_words(
-                        zero_code,
-                        bits,
-                        k,
-                        base,
-                        (1u64 << 40) + j as u64,
-                        &mut lp.pad_words[j * words..][..words],
-                    );
+                    let slot = &mut lp.pad_words[j * words..][..words];
+                    lane_stream_words(zero_code, bits, k, base, (1u64 << 40) + j as u64, slot);
+                    if let Some(f) = faults {
+                        f.flip_words(base, (1u64 << 40) + j as u64, k, slot);
+                    }
                 }
             }
         }
@@ -1026,6 +1090,34 @@ pub mod reference {
         precision: &PrecisionPlan,
         seed: u32,
     ) -> Vec<f64> {
+        forward_stochastic_plan_faulted(net, weights, input, precision, seed, None)
+    }
+
+    /// [`forward_stochastic_plan`] under an optional [`FaultPlan`]: the
+    /// per-bit golden model of
+    /// `ForwardPlan::compile_with_precision_faults` — SRAM upsets corrupt
+    /// the stored weights first, then every stream is generated one bit at
+    /// a time with flips, stuck lanes, and correlation faults injected
+    /// through [`FaultPlan::flip_bit`] / [`FaultPlan::stuck`] /
+    /// [`FaultPlan::correlated_weight_lane`]. Must stay bit-exact with the
+    /// fused engine under any identical plan.
+    pub fn forward_stochastic_plan_faulted(
+        net: &NetworkSpec,
+        weights: &QuantizedWeights,
+        input: &[f64],
+        precision: &PrecisionPlan,
+        seed: u32,
+        faults: Option<&FaultPlan>,
+    ) -> Vec<f64> {
+        let corrupted;
+        let weights = match faults {
+            Some(f) if f.sram_upset_rate > 0.0 => {
+                corrupted = f.corrupt_weights(weights);
+                &corrupted
+            }
+            _ => weights,
+        };
+        let faults = faults.filter(|f| !f.is_noop());
         let stages = net
             .stages()
             .unwrap_or_else(|e| panic!("reference::forward_stochastic({}): {e:#}", net.name));
@@ -1044,7 +1136,7 @@ pub mod reference {
                 StageOp::Conv(_) | StageOp::Dense { .. } => {
                     let table = stage::gather(st).expect("compute stages have gather tables");
                     let wl = st.weight_layer.expect("compute stages carry a weight layer");
-                    run_layer(st, &table, &act, weights, bits, precision.k_for(wl), seed)
+                    run_layer(st, &table, &act, weights, bits, precision.k_for(wl), seed, faults)
                 }
                 StageOp::MaxPool { size } => {
                     let mut next = Vec::new();
@@ -1074,7 +1166,27 @@ pub mod reference {
         act
     }
 
+    /// A lane stream with the fault plan's per-bit flips applied — the
+    /// per-bit view of the word-mask injection the fused engine performs.
+    fn lane_stream_faulted(
+        code: u32,
+        bits: u32,
+        k: usize,
+        base: u32,
+        lane: u64,
+        faults: Option<&FaultPlan>,
+    ) -> Bitstream {
+        let s = lane_stream(code, bits, k, base, lane);
+        match faults {
+            Some(f) if f.bit_flip_rate > 0.0 => {
+                Bitstream::from_fn(k, |t| s.get(t) ^ f.flip_bit(base, lane, t))
+            }
+            _ => s,
+        }
+    }
+
     /// One per-bit compute layer over a stage's gather table.
+    #[allow(clippy::too_many_arguments)]
     fn run_layer(
         st: &StageDescriptor,
         table: &GatherTable,
@@ -1083,6 +1195,7 @@ pub mod reference {
         bits: u32,
         k: usize,
         seed: u32,
+        faults: Option<&FaultPlan>,
     ) -> Vec<f64> {
         let wl = st.weight_layer.expect("compute stages carry a weight layer");
         let lw = &weights.layers[wl];
@@ -1095,11 +1208,11 @@ pub mod reference {
         let act_streams: Vec<Bitstream> = acodes
             .iter()
             .enumerate()
-            .map(|(p, &c)| lane_stream(c, bits, k, base, p as u64))
+            .map(|(p, &c)| lane_stream_faulted(c, bits, k, base, p as u64, faults))
             .collect();
         let zero_code = quantize_bipolar(0.0, bits);
         let pad_streams: Vec<Bitstream> = (0..fan_in)
-            .map(|j| lane_stream(zero_code, bits, k, base, (1 << 40) + j as u64))
+            .map(|j| lane_stream_faulted(zero_code, bits, k, base, (1 << 40) + j as u64, faults))
             .collect();
         let scale = (1u64 << neuron::m_bits(fan_in)) as f64;
         let mut out = Vec::with_capacity(out_ch * table.n_win);
@@ -1110,12 +1223,24 @@ pub mod reference {
                 .iter()
                 .enumerate()
                 .map(|(j, &c)| {
-                    lane_stream(c, bits, k, base ^ 0x5EED_CAFE, ((oc as u64) << 20) + j as u64)
+                    // Same correlation-fault key selection as the fused
+                    // engine: a hit lane shares the raw activation RNS.
+                    let (lbase, lane) =
+                        if faults.is_some_and(|f| f.correlated_weight_lane(wl, oc, j)) {
+                            (base, j as u64)
+                        } else {
+                            (base ^ 0x5EED_CAFE, ((oc as u64) << 20) + j as u64)
+                        };
+                    lane_stream_faulted(c, bits, k, lbase, lane, faults)
                 })
                 .collect();
             for wi in 0..table.n_win {
                 let mut vc = VerticalCounter::new(k, fan_in);
                 for (j, &src) in table.window(oc, wi).iter().enumerate() {
+                    if let Some(v) = faults.and_then(|f| f.stuck(wl, j)) {
+                        vc.add(&if v { Bitstream::ones(k) } else { Bitstream::zeros(k) });
+                        continue;
+                    }
                     let a = match src {
                         Some(i) => &act_streams[i],
                         None => &pad_streams[j],
@@ -1587,6 +1712,161 @@ mod tests {
             agree += (p8 == p6) as usize;
         }
         assert!(agree >= 7, "agreement {agree}");
+    }
+
+    /// Fused forward under a fault plan (uniform k).
+    fn fwd_faulted(
+        net: &NetworkSpec,
+        w: &QuantizedWeights,
+        input: &[f64],
+        k: usize,
+        seed: u32,
+        f: &crate::faults::FaultPlan,
+    ) -> Vec<f64> {
+        let plan = PrecisionPlan::uniform(k, net.n_compute());
+        ForwardPlan::compile_with_precision_faults(
+            net,
+            w,
+            ForwardMode::Stochastic { k, seed },
+            &plan,
+            Some(f),
+        )
+        .unwrap()
+        .run(input)
+    }
+
+    #[test]
+    fn fused_matches_reference_under_every_fault_class() {
+        use crate::faults::FaultPlan;
+        let net = tiny_net();
+        let w = tiny_weights(8, 42);
+        let input = tiny_input();
+        let plans = [
+            FaultPlan::new(1).with_bit_flip_rate(0.02),
+            FaultPlan::new(2).with_stuck_lane(0, 4, true).with_stuck_lane(1, 2, false),
+            FaultPlan::new(3).with_sng_correlation_rate(0.3),
+            FaultPlan::new(4).with_sram_upset_rate(0.2),
+            // Everything at once, across the word boundary.
+            FaultPlan::new(5)
+                .with_bit_flip_rate(0.01)
+                .with_stuck_lane(1, 0, true)
+                .with_sng_correlation_rate(0.15)
+                .with_sram_upset_rate(0.1),
+        ];
+        for f in &plans {
+            for k in [64usize, 104] {
+                let fused = fwd_faulted(&net, &w, &input, k, 7, f);
+                let precision = PrecisionPlan::uniform(k, 2);
+                let golden = reference::forward_stochastic_plan_faulted(
+                    &net,
+                    &w,
+                    &input,
+                    &precision,
+                    7,
+                    Some(f),
+                );
+                assert_eq!(fused, golden, "faults={f:?} k={k}");
+                assert!(fused.iter().all(|v| v.is_finite()));
+            }
+        }
+    }
+
+    #[test]
+    fn extended_ops_stay_bit_exact_under_faults() {
+        use crate::faults::FaultPlan;
+        let net = extended_net();
+        let w = seeded_weights(&net, 8, 17);
+        let input = extended_input();
+        let f = FaultPlan::new(11)
+            .with_bit_flip_rate(0.02)
+            .with_stuck_lane(2, 1, false)
+            .with_sng_correlation_rate(0.2)
+            .with_sram_upset_rate(0.05);
+        let precision = PrecisionPlan::per_layer(vec![96, 32, 64, 16]);
+        let mode = ForwardMode::Stochastic { k: 96, seed: 9 };
+        let fused = ForwardPlan::compile_with_precision_faults(
+            &net,
+            &w,
+            mode,
+            &precision,
+            Some(&f),
+        )
+        .unwrap()
+        .run(&input);
+        let golden = reference::forward_stochastic_plan_faulted(
+            &net,
+            &w,
+            &input,
+            &precision,
+            9,
+            Some(&f),
+        );
+        assert_eq!(fused, golden);
+    }
+
+    #[test]
+    fn noop_fault_plan_compiles_to_the_clean_datapath() {
+        use crate::faults::FaultPlan;
+        let net = tiny_net();
+        let w = tiny_weights(8, 42);
+        let input = tiny_input();
+        let clean = fwd(&net, &w, &input, ForwardMode::Stochastic { k: 64, seed: 3 });
+        let noop = FaultPlan::new(123);
+        assert_eq!(clean, fwd_faulted(&net, &w, &input, 64, 3, &noop));
+    }
+
+    #[test]
+    fn faulted_runs_are_deterministic_and_seed_keyed() {
+        use crate::faults::FaultPlan;
+        let net = tiny_net();
+        let w = tiny_weights(8, 42);
+        let input = tiny_input();
+        let f = FaultPlan::new(7).with_bit_flip_rate(0.05);
+        let a = fwd_faulted(&net, &w, &input, 64, 3, &f);
+        let b = fwd_faulted(&net, &w, &input, 64, 3, &f);
+        assert_eq!(a, b, "same plan, same output");
+        // At 5% flips over every lane of a 36-site layer, two different
+        // fault seeds producing identical outputs is astronomically
+        // unlikely — and a heavily faulted run differs from clean.
+        let c = fwd_faulted(&net, &w, &input, 64, 3, &FaultPlan::new(8).with_bit_flip_rate(0.05));
+        assert_ne!(a, c, "fault seed keys the injection");
+        let clean = fwd(&net, &w, &input, ForwardMode::Stochastic { k: 64, seed: 3 });
+        assert_ne!(a, clean, "5% stream flips must perturb the output");
+    }
+
+    #[test]
+    fn analytic_modes_take_code_flips_through_the_same_plan() {
+        use crate::faults::FaultPlan;
+        let net = tiny_net();
+        let w = tiny_weights(8, 42);
+        let input = tiny_input();
+        let f = FaultPlan::new(21).with_bit_flip_rate(0.05);
+        for mode in [ForwardMode::Expectation, ForwardMode::FixedPoint] {
+            let plan = PrecisionPlan::uniform(precision::WORD, 2);
+            let faulted = ForwardPlan::compile_with_precision_faults(
+                &net,
+                &w,
+                mode,
+                &plan,
+                Some(&f),
+            )
+            .unwrap()
+            .run(&input);
+            let clean = fwd(&net, &w, &input, mode);
+            assert_ne!(faulted, clean, "{mode:?}: code flips must land");
+            assert!(faulted.iter().all(|v| v.is_finite()));
+            // Deterministic here too.
+            let again = ForwardPlan::compile_with_precision_faults(
+                &net,
+                &w,
+                mode,
+                &plan,
+                Some(&f),
+            )
+            .unwrap()
+            .run(&input);
+            assert_eq!(faulted, again);
+        }
     }
 
     #[test]

@@ -118,8 +118,13 @@ pub(crate) fn shared_plan_with(
     // homogeneous case still compiles once). compile (not new):
     // weight/shape mismatches surface as session open errors, never as
     // panics on the worker thread.
-    let plan =
-        Arc::new(ForwardPlan::compile_with_precision(&cfg.net, weights, mode, precision)?);
+    let plan = Arc::new(ForwardPlan::compile_with_precision_faults(
+        &cfg.net,
+        weights,
+        mode,
+        precision,
+        cfg.faults.as_ref(),
+    )?);
     PLAN_COMPILES.fetch_add(1, Ordering::Relaxed);
     let mut g = crate::engine::lock_recover(cache);
     if let Some(existing) = g.get(&key).and_then(Weak::upgrade) {
@@ -283,6 +288,9 @@ pub struct ReferencePerBit {
     /// Resolved per-layer bitstream lengths (the reference honors the
     /// same plan as the fused engine — parity by construction).
     precision: PrecisionPlan,
+    /// Compiled-in fault plan (the reference injects the same faults as
+    /// the fused engine — parity under faults by construction).
+    faults: Option<crate::faults::FaultPlan>,
     seed: u32,
     in_len: usize,
     out_len: usize,
@@ -308,6 +316,7 @@ impl ReferencePerBit {
             net: cfg.net.clone(),
             weights,
             precision,
+            faults: cfg.faults.clone(),
             seed: cfg.seed,
             in_len: cfg.input_len(),
             out_len: cfg.output_len(),
@@ -333,12 +342,13 @@ impl Backend for ReferencePerBit {
             .iter()
             .map(|img| {
                 let wide: Vec<f64> = img.iter().map(|&v| v as f64).collect();
-                reference::forward_stochastic_plan(
+                reference::forward_stochastic_plan_faulted(
                     &self.net,
                     &self.weights,
                     &wide,
                     &self.precision,
                     self.seed,
+                    self.faults.as_ref(),
                 )
                 .iter()
                 .map(|&v| v as f32)

@@ -7,6 +7,7 @@
 
 use crate::accel::layers::NetworkSpec;
 use crate::accel::network::{ForwardMode, QuantizedWeights};
+use crate::faults::FaultPlan;
 use crate::accel::precision::{
     self, AutoTuneConfig, Precision, PrecisionError, PrecisionPlan,
 };
@@ -137,6 +138,35 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Graceful-degradation policy of a session's worker: when service quality
+/// breaches the SLO for a sustained window — batch latency over
+/// [`DegradePolicy::latency_slo`], or a failing backend — the worker falls
+/// back to a cheaper [`PrecisionPlan`] (halving every stage's `k`, floored
+/// at [`DegradePolicy::min_k`]) instead of letting the session drown or
+/// die. Transitions are counted in
+/// [`crate::engine::SessionMetrics::degrade_events`].
+#[derive(Debug, Clone, Copy)]
+pub struct DegradePolicy {
+    /// Per-batch service-latency objective; a batch slower than this is
+    /// one breach.
+    pub latency_slo: Duration,
+    /// Consecutive breaches before the worker degrades one precision step.
+    pub breach_window: usize,
+    /// Lowest per-stage bitstream length the fallback may reach (clamped
+    /// to the [`precision::WORD`] alignment the kernels require).
+    pub min_k: usize,
+}
+
+impl Default for DegradePolicy {
+    fn default() -> Self {
+        DegradePolicy {
+            latency_slo: Duration::from_millis(250),
+            breach_window: 8,
+            min_k: precision::WORD,
+        }
+    }
+}
+
 /// Typed, builder-style configuration for [`crate::engine::Engine::open`].
 ///
 /// ```no_run
@@ -179,6 +209,23 @@ pub struct EngineConfig {
     /// PJRT executable ladder as (batch_size, HLO path); must include
     /// batch size 1 ([`BackendKind::Xla`] only).
     pub hlo_ladder: Vec<(usize, PathBuf)>,
+    /// Optional fault-injection plan compiled into the datapath (see
+    /// [`crate::faults::FaultPlan`]); `None` = clean silicon.
+    pub faults: Option<FaultPlan>,
+    /// Optional client-side deadline: `infer` / `drain` calls stop waiting
+    /// after this long and return [`EngineError::Timeout`] instead of
+    /// blocking forever on a stuck worker.
+    pub deadline: Option<Duration>,
+    /// Optional graceful-degradation policy (see [`DegradePolicy`]).
+    pub degrade: Option<DegradePolicy>,
+    /// Chaos hook: the worker panics (while holding the metrics lock)
+    /// after serving this many requests — exercises shard-death rerouting
+    /// and lock-poisoning recovery under test. Never set in production.
+    pub chaos_panic_after: Option<usize>,
+    /// Chaos hook: the worker sleeps this long before every batch —
+    /// injects a slow shard for SLO/timeout tests. Never set in
+    /// production.
+    pub chaos_slow: Option<Duration>,
 }
 
 impl EngineConfig {
@@ -197,6 +244,11 @@ impl EngineConfig {
             tech: TechKind::Rfet10,
             channels: 8,
             hlo_ladder: Vec::new(),
+            faults: None,
+            deadline: None,
+            degrade: None,
+            chaos_panic_after: None,
+            chaos_slow: None,
         }
     }
 
@@ -282,6 +334,36 @@ impl EngineConfig {
     /// Set the PJRT executable ladder ([`BackendKind::Xla`]).
     pub fn with_hlo_ladder(mut self, ladder: Vec<(usize, PathBuf)>) -> Self {
         self.hlo_ladder = ladder;
+        self
+    }
+
+    /// Compile a fault-injection plan into the datapath.
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
+    /// Set a client-side deadline for `infer` / `drain` waits.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Enable graceful precision degradation under sustained SLO breach.
+    pub fn with_degrade(mut self, policy: DegradePolicy) -> Self {
+        self.degrade = Some(policy);
+        self
+    }
+
+    /// Chaos hook: panic the worker after serving `n` requests (tests).
+    pub fn with_chaos_panic_after(mut self, n: usize) -> Self {
+        self.chaos_panic_after = Some(n);
+        self
+    }
+
+    /// Chaos hook: sleep before every batch (slow-shard injection, tests).
+    pub fn with_chaos_slow(mut self, delay: Duration) -> Self {
+        self.chaos_slow = Some(delay);
         self
     }
 
@@ -509,6 +591,22 @@ impl EngineConfig {
         // layer descriptor — the whole topology.
         fp.write(format!("{:?}", self.net).as_bytes());
         write_weights(&mut fp, weights);
+        // A compiled-in fault plan changes every injected stream (and, via
+        // SRAM upsets, the effective weights), so it is part of the
+        // artifact for every backend. A noop plan hashes like None, so a
+        // quiet plan still shares the clean artifact.
+        if let Some(f) = self.faults.as_ref().filter(|f| !f.is_noop()) {
+            fp.write(b"faults");
+            fp.write(&f.seed.to_le_bytes());
+            fp.write(&f.bit_flip_rate.to_bits().to_le_bytes());
+            fp.write(&f.sng_correlation_rate.to_bits().to_le_bytes());
+            fp.write(&f.sram_upset_rate.to_bits().to_le_bytes());
+            for s in &f.stuck_lanes {
+                fp.write(&(s.wl as u64).to_le_bytes());
+                fp.write(&(s.lane as u64).to_le_bytes());
+                fp.write(&[s.stuck_one as u8]);
+            }
+        }
         fp.digest()
     }
 }
@@ -814,6 +912,40 @@ mod tests {
             .estimate()
             .is_none());
         assert!(base.clone().with_k(0).estimate().is_none(), "k-sensitive uniform 0");
+    }
+
+    #[test]
+    fn fault_and_resilience_knobs_build_and_fingerprint() {
+        let base = EngineConfig::new(BackendKind::StochasticFused, tiny_net())
+            .with_quantized(tiny_quantized(8))
+            .with_k(64);
+        let w = base.resolve_weights().unwrap();
+        let plan = base.resolved_precision(&w).unwrap();
+        let fp = base.artifact_fingerprint(&w, &plan);
+        // Resilience knobs that do not change the compiled artifact.
+        let runtime = base
+            .clone()
+            .with_deadline(Duration::from_millis(50))
+            .with_degrade(DegradePolicy::default())
+            .with_chaos_panic_after(3)
+            .with_chaos_slow(Duration::from_millis(1));
+        assert_eq!(fp, runtime.artifact_fingerprint(&w, &plan));
+        runtime.validate().unwrap();
+        // A noop fault plan shares the clean artifact; a live one does not.
+        let quiet = base.clone().with_faults(FaultPlan::new(9));
+        assert_eq!(fp, quiet.artifact_fingerprint(&w, &plan));
+        let flipped =
+            base.clone().with_faults(FaultPlan::new(9).with_bit_flip_rate(0.01));
+        assert_ne!(fp, flipped.artifact_fingerprint(&w, &plan));
+        // Distinct fault plans are distinct artifacts.
+        let reseeded =
+            base.clone().with_faults(FaultPlan::new(10).with_bit_flip_rate(0.01));
+        assert_ne!(
+            flipped.artifact_fingerprint(&w, &plan),
+            reseeded.artifact_fingerprint(&w, &plan)
+        );
+        let stuck = base.clone().with_faults(FaultPlan::new(9).with_stuck_lane(0, 1, true));
+        assert_ne!(fp, stuck.artifact_fingerprint(&w, &plan));
     }
 
     #[test]

@@ -47,6 +47,15 @@ pub enum EngineError {
     /// A client-side lock was poisoned by a panicking sibling thread. The
     /// payload names the lock.
     LockPoisoned(&'static str),
+    /// The client-side deadline configured via
+    /// `EngineConfig::with_deadline` elapsed before the worker responded.
+    /// The request itself is NOT cancelled — the worker still serves it
+    /// and frees its admission slot — but this caller stops waiting. The
+    /// shard is not presumed dead (see [`EngineError::is_shard_fatal`]).
+    Timeout {
+        /// How long the caller waited before giving up.
+        elapsed: Duration,
+    },
     /// The request reached a live backend and failed there (malformed
     /// input, executable error). The payload preserves the backend's
     /// message.
@@ -75,6 +84,11 @@ impl fmt::Display for EngineError {
             EngineError::LockPoisoned(what) => {
                 write!(f, "lock poisoned by a panicked client thread: {what}")
             }
+            EngineError::Timeout { elapsed } => write!(
+                f,
+                "request deadline exceeded after {} µs",
+                elapsed.as_micros()
+            ),
             EngineError::Request(msg) => write!(f, "request failed: {msg}"),
         }
     }
@@ -104,6 +118,15 @@ impl EngineError {
             EngineError::WorkerDied
         } else if msg == EngineError::Closed.to_string() {
             EngineError::Closed
+        } else if let Some(us) = msg
+            .strip_prefix("request deadline exceeded after ")
+            .and_then(|rest| rest.strip_suffix(" µs"))
+            .and_then(|n| n.parse::<u64>().ok())
+        {
+            // Timeout carries a variable elapsed time, so it is recognized
+            // by its unambiguous prefix/suffix frame rather than exact
+            // equality; a backend message would arrive prefixed.
+            EngineError::Timeout { elapsed: Duration::from_micros(us) }
         } else {
             EngineError::Request(msg)
         }
@@ -131,6 +154,7 @@ mod tests {
             EngineError::NoHealthyShards,
             EngineError::InvalidPrecision("k = 100 is not a multiple of 8".into()),
             EngineError::LockPoisoned("results"),
+            EngineError::Timeout { elapsed: Duration::from_micros(5000) },
             EngineError::Request("bad image".into()),
         ];
         let mut seen = std::collections::HashSet::new();
@@ -162,6 +186,12 @@ mod tests {
         let wrapped =
             anyhow::anyhow!("batch failed: downstream engine worker thread died mid-call");
         assert!(matches!(EngineError::from_request(wrapped), EngineError::Request(_)));
+        // Timeout round-trips with its elapsed time intact...
+        let t = EngineError::Timeout { elapsed: Duration::from_micros(1234) };
+        assert_eq!(EngineError::from_request(t.clone().into()), t);
+        // ...and a message merely containing the phrase stays a Request.
+        let fake = anyhow::anyhow!("batch failed: request deadline exceeded after 9 µs");
+        assert!(matches!(EngineError::from_request(fake), EngineError::Request(_)));
     }
 
     #[test]
@@ -172,5 +202,7 @@ mod tests {
         assert!(
             !EngineError::Rejected { retry_after_hint: Duration::ZERO }.is_shard_fatal()
         );
+        // A deadline miss says nothing about shard health.
+        assert!(!EngineError::Timeout { elapsed: Duration::from_millis(5) }.is_shard_fatal());
     }
 }

@@ -267,6 +267,12 @@ pub struct SessionMetrics {
     pub failed: usize,
     /// Batches executed.
     pub batches: usize,
+    /// Client-side deadline misses (`EngineConfig::with_deadline`): waits
+    /// that resolved to a typed `Timeout` instead of a response.
+    pub timeouts: usize,
+    /// Times the worker fell back to a degraded precision plan after
+    /// sustained SLO breaches (`EngineConfig::with_degrade`).
+    pub degrade_events: usize,
     /// Wall time since the session was opened.
     pub wall: Duration,
     /// Exact per-request records (percentiles, mean batch).
@@ -322,6 +328,12 @@ impl SessionMetrics {
             self.latency_percentile_us(99.0),
             self.throughput_rps()
         ));
+        if self.timeouts > 0 || self.degrade_events > 0 {
+            s.push_str(&format!(
+                "resilience: {} deadline timeouts, {} precision degrade events\n",
+                self.timeouts, self.degrade_events
+            ));
+        }
         if let Some(e) = self.estimate {
             let m = &e.metrics;
             s.push_str(&format!(
@@ -369,6 +381,11 @@ pub struct PoolMetrics {
     pub failed: usize,
     /// Batches executed, summed over shards.
     pub batches: usize,
+    /// Client-side deadline misses, summed over shards.
+    pub timeouts: usize,
+    /// Precision degrade events, summed over shards — how often workers
+    /// fell back to cheaper plans instead of failing their SLO.
+    pub degrade_events: usize,
     /// Wall time since the pool was opened.
     pub wall: Duration,
     /// Merged per-request latency record (percentiles, mean batch).
@@ -401,6 +418,7 @@ impl PoolMetrics {
         let mut serve = ServeStats::new();
         let mut histogram = LatencyHistogram::new();
         let (mut requests, mut rejected, mut failed, mut batches) = (0, 0, 0, 0);
+        let (mut timeouts, mut degrade_events) = (0, 0);
         let mut labels: Vec<&str> = Vec::new();
         for m in &per_shard {
             serve.merge(&m.serve);
@@ -409,6 +427,8 @@ impl PoolMetrics {
             rejected += m.rejected;
             failed += m.failed;
             batches += m.batches;
+            timeouts += m.timeouts;
+            degrade_events += m.degrade_events;
             if !labels.contains(&m.backend.as_str()) {
                 labels.push(&m.backend);
             }
@@ -423,6 +443,8 @@ impl PoolMetrics {
             rerouted,
             failed,
             batches,
+            timeouts,
+            degrade_events,
             wall,
             serve,
             histogram,
@@ -501,6 +523,12 @@ impl PoolMetrics {
                 .collect::<Vec<_>>()
                 .join("/")
         ));
+        if self.timeouts > 0 || self.degrade_events > 0 {
+            s.push_str(&format!(
+                "resilience: {} deadline timeouts, {} precision degrade events\n",
+                self.timeouts, self.degrade_events
+            ));
+        }
         if let (Some(e), Some(area), Some(power)) =
             (self.estimate, self.modeled_area_mm2(), self.modeled_power_mw())
         {
@@ -669,6 +697,8 @@ mod tests {
             rejected: 1,
             failed: 0,
             batches: 1,
+            timeouts: 1,
+            degrade_events: 2,
             wall: Duration::from_millis(10),
             serve,
             histogram,
@@ -692,6 +722,9 @@ mod tests {
         assert_eq!(m.shed, 3);
         assert_eq!(m.rerouted, 1);
         assert_eq!(m.batches, 2);
+        assert_eq!(m.timeouts, 2, "deadline misses sum over shards");
+        assert_eq!(m.degrade_events, 4, "degrade events sum over shards");
+        assert!(m.summary().contains("2 deadline timeouts, 4 precision degrade events"));
         assert_eq!(m.serve.count(), 4);
         assert_eq!(m.histogram.count(), 4);
         assert!(m.latency_percentile_us(50.0) <= m.latency_percentile_us(99.0));
@@ -756,6 +789,8 @@ mod tests {
             rejected: 0,
             failed: 0,
             batches: 1,
+            timeouts: 0,
+            degrade_events: 0,
             wall: Duration::from_millis(10),
             serve,
             histogram,
@@ -764,6 +799,12 @@ mod tests {
         let text = m.summary();
         assert!(text.contains("stochastic-fused"));
         assert!(text.contains("modeled hardware"));
+        assert!(
+            !text.contains("resilience:"),
+            "a clean run's summary carries no resilience line: {text}"
+        );
+        let degraded = SessionMetrics { degrade_events: 1, ..m.clone() };
+        assert!(degraded.summary().contains("0 deadline timeouts, 1 precision degrade"));
         assert!(m.throughput_rps() > 0.0);
         assert!(m.estimated_total_energy_uj().unwrap() > 0.0);
     }

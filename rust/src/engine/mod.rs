@@ -89,7 +89,7 @@ pub mod pool;
 
 pub use crate::accel::precision::{Precision, PrecisionPlan};
 pub use backend::Backend;
-pub use config::{BackendKind, BatchPolicy, EngineConfig, WeightSource};
+pub use config::{BackendKind, BatchPolicy, DegradePolicy, EngineConfig, WeightSource};
 pub use error::EngineError;
 pub use metrics::{
     HardwareEstimate, LatencyHistogram, PoolMetrics, ServeStats, SessionMetrics,
@@ -102,7 +102,7 @@ use anyhow::{anyhow, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Argmax over a logit slice (the serving dtype). Delegates to the generic
 /// [`crate::accel::network::classify`], so the f32 serving path and the f64
@@ -190,6 +190,9 @@ struct Shared {
     /// as it records metrics — the cheap signal behind the pool's
     /// `retry_after_hint` (no client dally, no recorder lock).
     last_latency_us: AtomicU64,
+    /// Client-side deadline misses (see `EngineConfig::with_deadline`).
+    /// Counted on the client path, so it lives outside the recorder.
+    timeouts: AtomicU64,
 }
 
 /// The worker-side metrics recorder.
@@ -200,6 +203,9 @@ struct Recorder {
     batches: usize,
     rejected: usize,
     failed: usize,
+    /// Times the worker swapped in a degraded precision plan after
+    /// sustained SLO breaches (see `EngineConfig::with_degrade`).
+    degrade_events: usize,
 }
 
 /// What the worker reports back once its backend is built.
@@ -233,6 +239,10 @@ pub struct Session {
     estimate: OnceLock<Option<HardwareEstimate>>,
     opened: Instant,
     queue_depth: usize,
+    /// Client-side wait bound (`EngineConfig::with_deadline`): how long
+    /// any blocking wait for a response may last before it resolves to
+    /// [`EngineError::Timeout`] instead of parking forever.
+    deadline: Option<Duration>,
 }
 
 impl Session {
@@ -245,6 +255,7 @@ impl Session {
             Some((config.tech, config.channels, config.net.clone()))
         };
         let queue_depth = config.batch.queue_depth.max(1);
+        let deadline = config.deadline;
         let shared = Arc::new(Shared {
             recorder: Mutex::new(Recorder::default()),
             inflight: Mutex::new(0),
@@ -252,6 +263,7 @@ impl Session {
             closed: AtomicBool::new(false),
             worker_exited: AtomicBool::new(false),
             last_latency_us: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
         });
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<BackendInfo>>();
@@ -274,6 +286,7 @@ impl Session {
             estimate: OnceLock::new(),
             opened: Instant::now(),
             queue_depth,
+            deadline,
         })
     }
 
@@ -366,15 +379,41 @@ impl Session {
         Ok(rrx)
     }
 
+    /// Wait for one response, honoring the session deadline. Without a
+    /// deadline this blocks until the worker responds or dies; with one it
+    /// resolves to [`EngineError::Timeout`] after `deadline` — the worker
+    /// still serves the request and frees its slot, only this caller stops
+    /// waiting. A dropped response channel after a graceful close means
+    /// the request raced the shutdown sentinel — report Closed, not a
+    /// worker death (send_failure makes that distinction).
+    fn await_response(&self, rrx: mpsc::Receiver<Result<Vec<f32>>>) -> Result<Vec<f32>> {
+        match self.deadline {
+            None => rrx
+                .recv()
+                .map_err(|_| anyhow::Error::from(self.send_failure()))
+                .and_then(|r| r),
+            Some(d) => {
+                let started = Instant::now();
+                match rrx.recv_timeout(d) {
+                    Ok(r) => r,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        self.shared.timeouts.fetch_add(1, Ordering::Relaxed);
+                        Err(EngineError::Timeout { elapsed: started.elapsed() }.into())
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        Err(self.send_failure().into())
+                    }
+                }
+            }
+        }
+    }
+
     /// Classify one image (blocking). Returns the logits. Typed failures
-    /// ([`EngineError::Closed`] / [`EngineError::WorkerDied`]) convert into
-    /// the crate-wide error type.
+    /// ([`EngineError::Closed`] / [`EngineError::WorkerDied`] /
+    /// [`EngineError::Timeout`]) convert into the crate-wide error type.
     pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
         let rrx = self.send_request(image)?;
-        // A dropped response channel after a graceful close means the
-        // request raced the shutdown sentinel — report Closed, not a
-        // worker death (send_failure makes that distinction).
-        rrx.recv().map_err(|_| anyhow::Error::from(self.send_failure())).and_then(|r| r)
+        self.await_response(rrx)
     }
 
     /// Run a whole slice through the batcher; results in input order. The
@@ -387,7 +426,7 @@ impl Session {
         }
         let mut outs = Vec::with_capacity(receivers.len());
         for rrx in receivers {
-            outs.push(rrx.recv().map_err(|_| self.send_failure())??);
+            outs.push(self.await_response(rrx)?);
         }
         Ok(outs)
     }
@@ -491,13 +530,10 @@ impl Session {
         match next {
             None => Err(EngineError::EmptyQueue),
             Some((ticket, rrx)) => {
-                // Closed vs WorkerDied per send_failure: an item whose
-                // submit raced a graceful close resolves Closed, not as a
-                // worker death.
-                let res = rrx
-                    .recv()
-                    .map_err(|_| anyhow::Error::from(self.send_failure()))
-                    .and_then(|r| r);
+                // Closed vs WorkerDied vs Timeout per await_response: an
+                // item whose submit raced a graceful close resolves
+                // Closed, not as a worker death.
+                let res = self.await_response(rrx);
                 Ok((ticket, res))
             }
         }
@@ -553,6 +589,8 @@ impl Session {
             rejected: rec.rejected,
             failed: rec.failed,
             batches: rec.batches,
+            timeouts: self.shared.timeouts.load(Ordering::Relaxed) as usize,
+            degrade_events: rec.degrade_events,
             wall: self.opened.elapsed(),
             serve: rec.serve.clone(),
             histogram: rec.hist.clone(),
@@ -569,6 +607,23 @@ impl Drop for Session {
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
+    }
+}
+
+/// One graceful-degradation step: halve every per-layer stage length,
+/// keeping each a positive multiple of the precision
+/// [`crate::accel::precision::WORD`] and clamping to the policy floor.
+/// `None` when the plan is already at the floor everywhere (nothing left
+/// to give up).
+fn degraded_ks(plan: &PrecisionPlan, min_k: usize) -> Option<Vec<usize>> {
+    use crate::accel::precision::WORD;
+    let floor = (min_k.max(WORD) / WORD) * WORD;
+    let ks: Vec<usize> =
+        plan.ks().iter().map(|&k| ((k / 2) / WORD * WORD).max(floor)).collect();
+    if ks == plan.ks() {
+        None
+    } else {
+        Some(ks)
     }
 }
 
@@ -602,16 +657,16 @@ fn worker_loop(
 
     let batch_max = cfg.batch.max_batch.max(1);
     let linger = cfg.batch.linger;
-    let mut backend = match backend::build(&cfg) {
+    let (mut backend, mut current_plan) = match backend::build(&cfg) {
         Ok((b, precision)) => {
             let info = BackendInfo {
                 name: b.name(),
                 in_len: b.in_len(),
                 out_len: b.out_len(),
-                precision,
+                precision: precision.clone(),
             };
             let _ = ready.send(Ok(info));
-            b
+            (b, precision)
         }
         Err(e) => {
             let _ = ready.send(Err(e));
@@ -619,6 +674,13 @@ fn worker_loop(
         }
     };
     let in_len = backend.in_len();
+
+    // Graceful-degradation state: consecutive SLO breaches, and whether
+    // the plan has already hit its floor (no point retrying every batch).
+    let mut breaches = 0usize;
+    let mut degrade_exhausted = false;
+    // Chaos accounting (`EngineConfig::with_chaos_panic_after`).
+    let mut served_total = 0usize;
 
     let mut shutdown = false;
     while !shutdown {
@@ -645,16 +707,18 @@ fn worker_loop(
             }
         }
 
-        // Reject malformed requests individually; batch the rest.
+        // Reject malformed requests individually (typed, so clients and
+        // the pool can fold them back into [`EngineError::Request`]
+        // without string matching); batch the rest.
         let mut valid: Vec<InferRequest> = Vec::with_capacity(pending.len());
         let mut rejected = 0usize;
         for r in pending {
             if r.image.len() != in_len {
-                let msg = anyhow!(
+                let e = EngineError::Request(format!(
                     "request image has {} elements, expected {in_len}",
                     r.image.len()
-                );
-                let _ = r.respond.send(Err(msg));
+                ));
+                let _ = r.respond.send(Err(e.into()));
                 rejected += 1;
             } else {
                 valid.push(r);
@@ -670,14 +734,21 @@ fn worker_loop(
         let inputs: Vec<Vec<f32>> =
             valid.iter_mut().map(|r| std::mem::take(&mut r.image)).collect();
         let bsz = valid.len();
-        match backend.infer_batch(&inputs) {
+        // Chaos hook: an injected per-batch stall, for exercising the
+        // deadline and shed paths under test without a slow backend.
+        if let Some(d) = cfg.chaos_slow {
+            std::thread::sleep(d);
+        }
+        let breached = match backend.infer_batch(&inputs) {
             Ok(outs) if outs.len() == bsz => {
                 let mut rec = lock_recover(&shared.recorder);
                 rec.batches += 1;
+                let mut slowest = Duration::ZERO;
                 for (r, out) in valid.iter().zip(outs) {
                     // Record before responding: clients may read metrics
                     // right after their reply arrives.
                     let lat = r.enqueued.elapsed();
+                    slowest = slowest.max(lat);
                     rec.serve.record(lat, bsz);
                     rec.hist.record_us(lat.as_micros() as u64);
                     shared
@@ -685,6 +756,7 @@ fn worker_loop(
                         .store(lat.as_micros() as u64, Ordering::Relaxed);
                     let _ = r.respond.send(Ok(out));
                 }
+                cfg.degrade.is_some_and(|p| slowest > p.latency_slo)
             }
             Ok(outs) => {
                 lock_recover(&shared.recorder).failed += bsz;
@@ -694,6 +766,7 @@ fn worker_loop(
                         outs.len()
                     )));
                 }
+                true
             }
             Err(e) => {
                 // Count before responding so a failed run is visible in
@@ -703,9 +776,45 @@ fn worker_loop(
                 for r in &valid {
                     let _ = r.respond.send(Err(anyhow!("batch failed: {msg}")));
                 }
+                true
+            }
+        };
+        release_slots(&shared, bsz);
+        served_total += bsz;
+
+        // Graceful degradation: after `breach_window` consecutive SLO
+        // breaches (or failed batches), swap in a cheaper precision plan —
+        // halved per-layer stage lengths, clamped to the policy floor —
+        // instead of letting the session miss its SLO indefinitely.
+        if let Some(policy) = cfg.degrade {
+            breaches = if breached { breaches + 1 } else { 0 };
+            if breaches >= policy.breach_window && !degrade_exhausted {
+                breaches = 0;
+                match current_plan.as_ref().and_then(|p| degraded_ks(p, policy.min_k)) {
+                    Some(ks) => {
+                        let dcfg =
+                            cfg.clone().with_precision(Precision::PerLayer(ks));
+                        match backend::build(&dcfg) {
+                            Ok((b, plan)) => {
+                                backend = b;
+                                current_plan = plan;
+                                lock_recover(&shared.recorder).degrade_events += 1;
+                            }
+                            Err(_) => degrade_exhausted = true,
+                        }
+                    }
+                    None => degrade_exhausted = true,
+                }
             }
         }
-        release_slots(&shared, bsz);
+
+        // Chaos hook: die abnormally after N served requests — while
+        // holding the recorder lock, so the chaos tests exercise shard
+        // rerouting and client-side lock-poison recovery in one blow.
+        if cfg.chaos_panic_after.is_some_and(|n| served_total >= n) {
+            let _g = lock_recover(&shared.recorder);
+            panic!("chaos: injected worker panic after {served_total} requests");
+        }
     }
 
     // Graceful-close tail: a submit racing with close() may have enqueued
@@ -927,6 +1036,49 @@ mod tests {
         let m = session.metrics();
         assert_eq!(m.rejected, 1);
         assert_eq!(m.requests, 1);
+    }
+
+    #[test]
+    fn malformed_reject_folds_back_to_a_typed_request_error() {
+        let session = Engine::open(cfg(BackendKind::Expectation)).unwrap();
+        let e = session.infer(vec![0.0; 5]).unwrap_err();
+        match EngineError::from_request(e) {
+            EngineError::Request(msg) => {
+                assert!(msg.contains("5 elements, expected 16"), "{msg}");
+            }
+            other => panic!("expected Request, got {other:?}"),
+        }
+        assert_eq!(session.metrics().rejected, 1);
+    }
+
+    #[test]
+    fn deadline_resolves_to_typed_timeout_instead_of_blocking() {
+        let config = cfg(BackendKind::Expectation)
+            .with_deadline(Duration::from_millis(1))
+            .with_chaos_slow(Duration::from_millis(400));
+        let session = Engine::open(config).unwrap();
+        let e = session.infer(image(0)).unwrap_err();
+        match EngineError::from_request(e) {
+            EngineError::Timeout { elapsed } => {
+                assert!(elapsed >= Duration::from_millis(1), "elapsed {elapsed:?}");
+            }
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        let m = session.metrics();
+        assert_eq!(m.timeouts, 1, "the deadline miss is surfaced in metrics");
+    }
+
+    #[test]
+    fn degraded_ks_halves_word_aligned_down_to_the_floor() {
+        let plan = PrecisionPlan::per_layer(vec![512, 104, 16]);
+        assert_eq!(degraded_ks(&plan, 8), Some(vec![256, 48, 8]));
+        let floor = PrecisionPlan::per_layer(vec![8, 8]);
+        assert_eq!(degraded_ks(&floor, 8), None, "nothing left to give up");
+        // A floor above some stages clamps them instead of halving below it.
+        let plan = PrecisionPlan::per_layer(vec![128, 32]);
+        assert_eq!(degraded_ks(&plan, 32), Some(vec![64, 32]));
+        assert_eq!(degraded_ks(&PrecisionPlan::per_layer(vec![64, 32]), 32), Some(vec![32, 32]));
+        assert_eq!(degraded_ks(&PrecisionPlan::per_layer(vec![32, 32]), 32), None);
     }
 
     #[test]

@@ -26,7 +26,13 @@
 //!   streaming path;
 //! * **health + rerouting**: a shard whose worker dies (or is closed) is
 //!   marked unhealthy and its traffic reroutes to the survivors; only when
-//!   every shard is gone do callers see [`EngineError::NoHealthyShards`];
+//!   every shard is gone do callers see [`EngineError::NoHealthyShards`].
+//!   Injected faults (`EngineConfig::with_chaos_panic_after`) exercise this
+//!   path deterministically under test;
+//! * **typed deadlines**: shards opened with `EngineConfig::with_deadline`
+//!   resolve stuck waits to [`EngineError::Timeout`] — classified as a
+//!   request-level failure, not a shard death, so one slow request never
+//!   takes a healthy shard out of rotation;
 //! * **graceful drain**: [`EnginePool::close`] refuses new work, lets every
 //!   shard finish its queue, and returns when all workers have exited;
 //! * **[`PoolMetrics`]**: merged latency histograms and percentiles,

@@ -1,0 +1,353 @@
+//! Deterministic fault injection for the SC datapath and serving stack.
+//!
+//! The paper's robustness argument (§I) is that a single upset bit in a
+//! k-cycle stochastic stream perturbs the carried value by 1/k, while the
+//! same upset in a binary word can flip a high-order bit and swing the
+//! value by half its range. This module turns that claim into a testable
+//! artifact: a seeded [`FaultPlan`] describing device-level faults that the
+//! fused engine and the per-bit golden reference honor **identically**, so
+//! the bit-exactness contract of `accel::network` survives any fault plan.
+//!
+//! Four fault classes, all derived from one seed:
+//!
+//! * **Stream bit flips** — every bit of every SNG lane (activation,
+//!   weight, and padding streams) flips independently with probability
+//!   [`FaultPlan::bit_flip_rate`]. In the analytic (binary expectation /
+//!   fixed-point) datapaths the same rate flips the bits of the quantized
+//!   activation codes instead — the per-bit apples-to-apples comparison
+//!   behind `BENCH_faults.json`.
+//! * **Stuck-at APC lanes** — selected adder-tree inputs read constant 0/1
+//!   streams ([`StuckLane`]), modeling a dead XNOR/APC column.
+//! * **SNG correlation faults** — selected weight lanes lose their per-lane
+//!   wire shuffle and share the raw activation RNS (the correlated-stream
+//!   failure mode §I warns about).
+//! * **SRAM word upsets** — stored weight codes take deterministic one-bit
+//!   upsets ([`FaultPlan::corrupt_weights`], via
+//!   [`crate::accel::memory::upset_word`]) before plan compilation.
+//!
+//! Every draw is a pure function of `(plan seed, generation key)` — the
+//! same keys both datapaths already use to generate the streams — so fused
+//! and reference inject byte-identical faults without sharing any state.
+
+use crate::accel::memory;
+use crate::accel::network::QuantizedWeights;
+use crate::sc::rng;
+
+/// Salt separating weight-lane correlation draws from bit-flip draws.
+const CORR_SALT: u64 = 0xC0_44E1;
+/// Salt separating SRAM upset draws from the stream-flip namespace.
+const SRAM_SALT: u64 = 0x54A3_0B17;
+/// Salt for analytic (binary-code) bit flips.
+const CODE_SALT: u64 = 0xB1_4A47;
+
+/// One adder-tree input lane forced to a constant stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StuckLane {
+    /// Compute-layer index (the weight-layer index `wl`).
+    pub wl: usize,
+    /// Fan-in lane index within the layer's gather window.
+    pub lane: usize,
+    /// `true` = stuck-at-1, `false` = stuck-at-0.
+    pub stuck_one: bool,
+}
+
+/// A seeded, deterministic fault-injection plan. Compiled into a
+/// [`crate::accel::network::ForwardPlan`] via
+/// `ForwardPlan::compile_with_precision_faults`, honored identically by the
+/// per-bit reference via `reference::forward_stochastic_plan_faulted`, and
+/// carried by [`crate::engine::EngineConfig::with_faults`] for serving.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Master seed for every fault draw (independent of the SNG seed).
+    pub seed: u64,
+    /// Per-bit upset probability in the datapath's native representation:
+    /// SC stream bits for the stochastic paths, quantized activation-code
+    /// bits for the analytic paths.
+    pub bit_flip_rate: f64,
+    /// Adder-tree lanes forced to constant streams.
+    pub stuck_lanes: Vec<StuckLane>,
+    /// Probability that a weight SNG lane loses its wire shuffle and
+    /// shares the raw activation RNS (correlated products).
+    pub sng_correlation_rate: f64,
+    /// Probability that a stored weight code takes a one-bit SRAM upset.
+    pub sram_upset_rate: f64,
+}
+
+impl FaultPlan {
+    /// An all-quiet plan with the given seed; compose with the builders.
+    pub fn new(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            bit_flip_rate: 0.0,
+            stuck_lanes: Vec::new(),
+            sng_correlation_rate: 0.0,
+            sram_upset_rate: 0.0,
+        }
+    }
+
+    /// Set the per-bit upset probability (clamped to [0, 1]).
+    pub fn with_bit_flip_rate(mut self, rate: f64) -> Self {
+        self.bit_flip_rate = rate.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Force one adder-tree lane of compute layer `wl` to a constant.
+    pub fn with_stuck_lane(mut self, wl: usize, lane: usize, stuck_one: bool) -> Self {
+        self.stuck_lanes.push(StuckLane { wl, lane, stuck_one });
+        self
+    }
+
+    /// Set the weight-lane RNS-correlation probability (clamped to [0, 1]).
+    pub fn with_sng_correlation_rate(mut self, rate: f64) -> Self {
+        self.sng_correlation_rate = rate.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Set the per-code SRAM upset probability (clamped to [0, 1]).
+    pub fn with_sram_upset_rate(mut self, rate: f64) -> Self {
+        self.sram_upset_rate = rate.clamp(0.0, 1.0);
+        self
+    }
+
+    /// True when the plan injects nothing (compiles to the clean datapath).
+    pub fn is_noop(&self) -> bool {
+        self.bit_flip_rate <= 0.0
+            && self.stuck_lanes.is_empty()
+            && self.sng_correlation_rate <= 0.0
+            && self.sram_upset_rate <= 0.0
+    }
+
+    /// The flip mask for word `w` of the stream generated with SNG key
+    /// `(base, lane)`: bit `i` is set iff stream bit `64·w + i` flips.
+    /// Pure in `(seed, base, lane, w)` — the fused engine XORs whole words,
+    /// the per-bit reference picks single bits, and both see the same mask.
+    pub fn flip_word(&self, base: u32, lane: u64, w: usize) -> u64 {
+        if self.bit_flip_rate <= 0.0 {
+            return 0;
+        }
+        let thr = bernoulli_threshold(self.bit_flip_rate);
+        let key =
+            rng::mix64((base as u64) << 32 ^ lane) ^ (w as u64).wrapping_mul(rng::GOLDEN_GAMMA);
+        let mut state = rng::mix64(self.seed ^ key) | 1;
+        let mut word = 0u64;
+        for i in 0..64 {
+            state = rng::xorshift64_step(state);
+            word |= (((state as u32 as u64) < thr) as u64) << i;
+        }
+        word
+    }
+
+    /// Whether stream bit `t` of the `(base, lane)` stream flips — the
+    /// per-bit view of [`FaultPlan::flip_word`].
+    pub fn flip_bit(&self, base: u32, lane: u64, t: usize) -> bool {
+        (self.flip_word(base, lane, t / 64) >> (t % 64)) & 1 == 1
+    }
+
+    /// XOR the flip masks into a packed `k`-cycle stream in place, masking
+    /// the partial final word so no garbage lands past cycle `k`.
+    pub fn flip_words(&self, base: u32, lane: u64, k: usize, words: &mut [u64]) {
+        if self.bit_flip_rate <= 0.0 {
+            return;
+        }
+        let last = words.len().wrapping_sub(1);
+        for (w, word) in words.iter_mut().enumerate() {
+            let mut m = self.flip_word(base, lane, w);
+            if w == last && k % 64 != 0 {
+                m &= (1u64 << (k % 64)) - 1;
+            }
+            *word ^= m;
+        }
+    }
+
+    /// The stuck value of adder-tree lane `lane` in compute layer `wl`,
+    /// `None` when the lane is healthy (first matching entry wins).
+    pub fn stuck(&self, wl: usize, lane: usize) -> Option<bool> {
+        self.stuck_lanes
+            .iter()
+            .find(|s| s.wl == wl && s.lane == lane)
+            .map(|s| s.stuck_one)
+    }
+
+    /// Whether the weight lane `(wl, oc, j)` suffers the RNS-correlation
+    /// fault (generated on the activation RNS at lane `j` instead of its
+    /// shuffled weight-namespace key).
+    pub fn correlated_weight_lane(&self, wl: usize, oc: usize, j: usize) -> bool {
+        if self.sng_correlation_rate <= 0.0 {
+            return false;
+        }
+        let thr = bernoulli_threshold(self.sng_correlation_rate);
+        let key = ((wl as u64) << 44) ^ ((oc as u64) << 22) ^ j as u64;
+        (rng::mix64(self.seed ^ CORR_SALT ^ rng::mix64(key)) as u32 as u64) < thr
+    }
+
+    /// The flip mask for the quantized activation code at `site` of compute
+    /// layer `wl` in the **analytic** datapaths: each of the low `bits`
+    /// binary-weighted bits flips with [`FaultPlan::bit_flip_rate`]. This is
+    /// the binary side of the graceful-vs-cliff comparison.
+    pub fn flip_code(&self, wl: usize, site: usize, bits: u32) -> u32 {
+        if self.bit_flip_rate <= 0.0 {
+            return 0;
+        }
+        let thr = bernoulli_threshold(self.bit_flip_rate);
+        let key = ((wl as u64) << 40) ^ site as u64;
+        let mut state = rng::mix64(self.seed ^ CODE_SALT ^ rng::mix64(key)) | 1;
+        let mut mask = 0u32;
+        for b in 0..bits.min(32) {
+            state = rng::xorshift64_step(state);
+            mask |= (((state as u32 as u64) < thr) as u32) << b;
+        }
+        mask
+    }
+
+    /// Apply deterministic SRAM word upsets to a stored weight tensor: each
+    /// code takes a one-bit upset with [`FaultPlan::sram_upset_rate`]. Both
+    /// datapaths corrupt the weights through this one function before
+    /// compiling, so parity under SRAM faults holds by construction.
+    pub fn corrupt_weights(&self, weights: &QuantizedWeights) -> QuantizedWeights {
+        let mut out = weights.clone();
+        if self.sram_upset_rate <= 0.0 {
+            return out;
+        }
+        let thr = bernoulli_threshold(self.sram_upset_rate);
+        for (wl, layer) in out.layers.iter_mut().enumerate() {
+            for (oc, row) in layer.codes.iter_mut().enumerate() {
+                for (j, code) in row.iter_mut().enumerate() {
+                    let key = ((wl as u64) << 44) ^ ((oc as u64) << 22) ^ j as u64;
+                    let draw = rng::mix64(self.seed ^ SRAM_SALT ^ rng::mix64(key));
+                    if (draw as u32 as u64) < thr {
+                        // The high half of the same draw picks the bit, so
+                        // one mix covers both decisions.
+                        *code = memory::upset_word(*code, weights.bits, (draw >> 32) as u32);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Map a probability in [0, 1] onto a 33-bit threshold for `u32` draws
+/// (rate 1.0 exceeds every draw; rate 0.0 accepts none).
+fn bernoulli_threshold(rate: f64) -> u64 {
+    (rate.clamp(0.0, 1.0) * 4_294_967_296.0) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::layers::NetworkSpec;
+
+    fn weights() -> QuantizedWeights {
+        QuantizedWeights::synthetic(&NetworkSpec::lenet5(), 8, 0x5EED).unwrap()
+    }
+
+    #[test]
+    fn noop_plan_injects_nothing() {
+        let f = FaultPlan::new(7);
+        assert!(f.is_noop());
+        assert_eq!(f.flip_word(3, 5, 0), 0);
+        assert_eq!(f.flip_code(0, 0, 8), 0);
+        assert!(f.stuck(0, 0).is_none());
+        assert!(!f.correlated_weight_lane(0, 0, 0));
+        let w = weights();
+        let c = f.corrupt_weights(&w);
+        assert_eq!(c.layers[0].codes, w.layers[0].codes);
+    }
+
+    #[test]
+    fn flip_masks_are_deterministic_and_keyed() {
+        let f = FaultPlan::new(42).with_bit_flip_rate(0.25);
+        assert!(!f.is_noop());
+        assert_eq!(f.flip_word(1, 2, 3), f.flip_word(1, 2, 3));
+        // Distinct keys give distinct masks (astronomically unlikely to
+        // collide at rate 0.25 over 64 bits).
+        assert_ne!(f.flip_word(1, 2, 3), f.flip_word(1, 2, 4));
+        assert_ne!(f.flip_word(1, 2, 3), f.flip_word(1, 3, 3));
+        assert_ne!(f.flip_word(1, 2, 3), f.flip_word(2, 2, 3));
+        assert_ne!(
+            f.flip_word(1, 2, 3),
+            FaultPlan::new(43).with_bit_flip_rate(0.25).flip_word(1, 2, 3)
+        );
+        // flip_bit is the per-bit view of flip_word.
+        for t in [0usize, 1, 63, 64, 130] {
+            assert_eq!(
+                f.flip_bit(9, 9, t),
+                (f.flip_word(9, 9, t / 64) >> (t % 64)) & 1 == 1
+            );
+        }
+    }
+
+    #[test]
+    fn flip_rate_tracks_the_requested_probability() {
+        let f = FaultPlan::new(11).with_bit_flip_rate(0.1);
+        let n = 1000usize;
+        let ones: u32 = (0..n).map(|w| f.flip_word(0, 0, w).count_ones()).sum();
+        let frac = ones as f64 / (64 * n) as f64;
+        assert!((frac - 0.1).abs() < 0.01, "measured flip rate {frac}");
+        // Extremes behave.
+        assert_eq!(FaultPlan::new(1).with_bit_flip_rate(1.0).flip_word(0, 0, 0), !0u64);
+        assert_eq!(FaultPlan::new(1).with_bit_flip_rate(0.0).flip_word(0, 0, 0), 0);
+    }
+
+    #[test]
+    fn flip_words_masks_the_partial_tail() {
+        let f = FaultPlan::new(5).with_bit_flip_rate(1.0);
+        let k = 70;
+        let mut words = vec![0u64; 2];
+        f.flip_words(7, 1, k, &mut words);
+        assert_eq!(words[0], !0u64);
+        assert_eq!(words[1], (1u64 << (k % 64)) - 1, "no flips past cycle k");
+    }
+
+    #[test]
+    fn stuck_lanes_match_by_layer_and_lane() {
+        let f = FaultPlan::new(1).with_stuck_lane(2, 7, true).with_stuck_lane(0, 1, false);
+        assert_eq!(f.stuck(2, 7), Some(true));
+        assert_eq!(f.stuck(0, 1), Some(false));
+        assert_eq!(f.stuck(2, 8), None);
+        assert_eq!(f.stuck(1, 7), None);
+    }
+
+    #[test]
+    fn sram_upsets_flip_exactly_one_bit_per_hit() {
+        let f = FaultPlan::new(99).with_sram_upset_rate(1.0);
+        let w = weights();
+        let c = f.corrupt_weights(&w);
+        let mut hits = 0usize;
+        for (lw, lc) in w.layers.iter().zip(&c.layers) {
+            for (rw, rc) in lw.codes.iter().zip(&lc.codes) {
+                for (&a, &b) in rw.iter().zip(rc) {
+                    assert_eq!((a ^ b).count_ones(), 1, "one-bit upset per word");
+                    hits += 1;
+                }
+            }
+        }
+        assert!(hits > 0);
+        // Deterministic: the same plan corrupts the same way twice.
+        assert_eq!(c.layers[0].codes, f.corrupt_weights(&w).layers[0].codes);
+    }
+
+    #[test]
+    fn correlation_rate_tracks_probability() {
+        let f = FaultPlan::new(3).with_sng_correlation_rate(0.2);
+        let n = 5000usize;
+        let hits = (0..n).filter(|&j| f.correlated_weight_lane(0, 0, j)).count();
+        let frac = hits as f64 / n as f64;
+        assert!((frac - 0.2).abs() < 0.03, "measured correlation rate {frac}");
+        assert_eq!(
+            f.correlated_weight_lane(1, 2, 3),
+            f.correlated_weight_lane(1, 2, 3),
+            "deterministic"
+        );
+    }
+
+    #[test]
+    fn code_flips_stay_within_the_quantization_width() {
+        let f = FaultPlan::new(17).with_bit_flip_rate(1.0);
+        let mask = f.flip_code(0, 0, 8);
+        assert_eq!(mask, 0xFF, "rate 1.0 flips every code bit");
+        assert_eq!(f.flip_code(0, 0, 4) >> 4, 0, "no flips above the width");
+        let none = FaultPlan::new(17).with_bit_flip_rate(0.0);
+        assert_eq!(none.flip_code(0, 0, 8), 0);
+    }
+}

@@ -116,6 +116,7 @@ pub mod benchutil;
 pub mod coordinator;
 pub mod data;
 pub mod engine;
+pub mod faults;
 pub mod netlist;
 pub mod runtime;
 pub mod sc;

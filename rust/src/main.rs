@@ -25,6 +25,7 @@ use scnn::engine::{
     classify, BackendKind, BatchPolicy, Engine, EngineConfig, EngineError, Placement, PoolConfig,
     Precision,
 };
+use scnn::faults::FaultPlan;
 use scnn::tech::TechKind;
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
@@ -111,6 +112,32 @@ fn apply_precision_flags(
     Ok(cfg)
 }
 
+/// Lower the `--fault-*` flags onto a config: a deterministic
+/// [`FaultPlan`] (bit flips on the SC streams, SRAM weight upsets, SNG
+/// correlation faults — all seeded, so runs reproduce exactly) plus an
+/// optional client-side `--deadline-us` that turns stuck waits into typed
+/// `EngineError::Timeout`s.
+fn apply_fault_flags(
+    mut cfg: EngineConfig,
+    flags: &HashMap<String, String>,
+) -> Result<EngineConfig> {
+    let bit_flip: f64 = flag(flags, "fault-bit-flip", 0.0)?;
+    let sram: f64 = flag(flags, "fault-sram", 0.0)?;
+    let corr: f64 = flag(flags, "fault-corr", 0.0)?;
+    if bit_flip > 0.0 || sram > 0.0 || corr > 0.0 {
+        let plan = FaultPlan::new(flag(flags, "fault-seed", 0xFA_417)?)
+            .with_bit_flip_rate(bit_flip)
+            .with_sram_upset_rate(sram)
+            .with_sng_correlation_rate(corr);
+        cfg = cfg.with_faults(plan);
+    }
+    let deadline_us: u64 = flag(flags, "deadline-us", 0)?;
+    if deadline_us > 0 {
+        cfg = cfg.with_deadline(Duration::from_micros(deadline_us));
+    }
+    Ok(cfg)
+}
+
 fn parse_tech(s: &str) -> Result<TechKind> {
     match s {
         "rfet" => Ok(TechKind::Rfet10),
@@ -153,6 +180,9 @@ fn print_help() {
                      --shards S --placement rr|least|hash --pool-queue-depth P\n\
                      --k-per-layer K1,K2,... (one per compute layer) or\n\
                      --k-auto-budget B (greedy per-layer autotune)\n\
+                     --fault-seed S --fault-bit-flip R --fault-sram R\n\
+                     --fault-corr R (seeded fault injection, also accepted\n\
+                     by simulate) --deadline-us D (typed client timeout)\n\
                      stream the test set through a sharded engine pool\n\
            simulate  --mode stochastic|reference|expectation|noisy|fixed\n\
                      --net NAME --synthetic --k K --bits B --n N --threads T\n\
@@ -241,7 +271,7 @@ fn net_config(
         }
         cfg.with_weights_file(path)
     };
-    apply_precision_flags(cfg, flags)
+    apply_fault_flags(apply_precision_flags(cfg, flags)?, flags)
 }
 
 /// Lower the CLI flags into a pool configuration: `--shards` replicas of
@@ -276,16 +306,25 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     // The streaming serve path: submit everything through the pool router,
     // drain in submission order. A full admission queue sheds with a typed
     // `Rejected` — the CLI reacts the way a well-behaved client would:
-    // drain ONE completed result (freeing one admission slot) and resubmit,
+    // honor the backoff hint (capped, with deterministic jitter so
+    // simultaneous clients desynchronize reproducibly), drain ONE
+    // completed result (freeing one admission slot), and resubmit —
     // keeping the shard queues fed instead of collapsing the pipeline.
     let t = Instant::now();
     let mut collected: Vec<Option<Result<Vec<f32>, EngineError>>> = Vec::with_capacity(n);
     collected.resize_with(n, || None);
+    let mut backoffs = 0usize;
     for img in &ds.images[..n] {
         loop {
             match pool.submit(img.clone()) {
                 Ok(_) => break,
-                Err(EngineError::Rejected { .. }) => {
+                Err(EngineError::Rejected { retry_after_hint }) => {
+                    backoffs += 1;
+                    let jitter =
+                        Duration::from_micros(scnn::sc::rng::mix64(backoffs as u64) % 101);
+                    std::thread::sleep(
+                        (retry_after_hint + jitter).min(Duration::from_millis(5)),
+                    );
                     let (ticket, res) = pool.drain_one()?;
                     collected[ticket.seq() as usize] = Some(res);
                 }
@@ -314,7 +353,7 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     print!("{}", pool.metrics().summary());
     println!(
         "(open-loop submit/drain: latencies include queueing; pool admission depth \
-         {admission_depth})"
+         {admission_depth}; {backoffs} backoffs honoring retry hints)"
     );
     Ok(())
 }
@@ -544,6 +583,36 @@ mod tests {
         .unwrap();
         let err = cfg.validate().unwrap_err().to_string();
         assert!(err.contains("invalid precision policy"), "{err}");
+    }
+
+    #[test]
+    fn fault_flags_lower_to_a_plan_and_deadline() {
+        let base = || {
+            EngineConfig::new(
+                BackendKind::Expectation,
+                scnn::accel::layers::NetworkSpec::lenet5(),
+            )
+        };
+        let m = parse_flags(&args(&[
+            "--fault-bit-flip",
+            "0.01",
+            "--fault-seed",
+            "9",
+            "--deadline-us",
+            "2500",
+        ]));
+        let cfg = apply_fault_flags(base(), &m).unwrap();
+        let f = cfg.faults.expect("a nonzero rate builds a plan");
+        assert_eq!(f.seed, 9);
+        assert!((f.bit_flip_rate - 0.01).abs() < 1e-12);
+        assert_eq!(cfg.deadline, Some(Duration::from_micros(2500)));
+        // No fault flags: the clean datapath, no plan, no deadline.
+        let clean = apply_fault_flags(base(), &parse_flags(&[])).unwrap();
+        assert!(clean.faults.is_none());
+        assert!(clean.deadline.is_none());
+        // An unparseable rate is an error, not a silent default.
+        let bad = parse_flags(&args(&["--fault-sram", "lots"]));
+        assert!(apply_fault_flags(base(), &bad).is_err());
     }
 
     #[test]

@@ -10,7 +10,7 @@
 
 use crate::netlist::Netlist;
 use crate::sc::bitstream::Bitstream;
-use crate::sc::lfsr::Lfsr;
+use crate::sc::lfsr::{Lfsr, UnsupportedLfsrWidth};
 
 /// Behavioral B2S: stream whose bit t is `code > r_t` for a shared random
 /// sequence `rs` (values uniform in 0..2^bits). P(1) = code / 2^bits.
@@ -18,14 +18,15 @@ pub fn b2s_with_randoms(code: u32, rs: &[u32]) -> Bitstream {
     Bitstream::from_fn(rs.len(), |t| code > rs[t])
 }
 
-/// Behavioral B2S driving its own LFSR (independent output).
-pub fn b2s(code: u32, bits: u32, len: usize, seed: u32) -> Bitstream {
-    let mut lfsr = Lfsr::new(bits, seed);
-    Bitstream::from_fn(len, |_| {
+/// Behavioral B2S driving its own LFSR (independent output). Widths
+/// outside the LFSR table (3..=16) are a typed error, not a panic.
+pub fn b2s(code: u32, bits: u32, len: usize, seed: u32) -> Result<Bitstream, UnsupportedLfsrWidth> {
+    let mut lfsr = Lfsr::new(bits, seed)?;
+    Ok(Bitstream::from_fn(len, |_| {
         let r = lfsr.value();
         lfsr.step();
         code > r
-    })
+    }))
 }
 
 /// Behavioral S2B: the count of ones (the unipolar code of the stream,
@@ -80,7 +81,7 @@ mod tests {
         let bits = 8;
         let len = 255;
         for code in [0u32, 50, 128, 255] {
-            let bs = b2s(code, bits, len, 1);
+            let bs = b2s(code, bits, len, 1).unwrap();
             // Over a full period R covers 1..=255 once: ones = max(code−1,0).
             assert_eq!(bs.count_ones(), code.saturating_sub(1));
         }
@@ -89,7 +90,7 @@ mod tests {
     #[test]
     fn shared_randoms_correlate_b2s_outputs() {
         let rs: Vec<u32> = {
-            let mut l = Lfsr::new(8, 5);
+            let mut l = Lfsr::new(8, 5).unwrap();
             (0..255)
                 .map(|_| {
                     let v = l.value();

@@ -24,6 +24,30 @@ const TAPS: [(u32, u32); 14] = [
     (16, 0b1101000000001000),  // x16 + x15 + x13 + x4 + 1
 ];
 
+/// Typed error for a register width outside the tabulated 3..=16 range —
+/// the request path must never panic on a malformed width, so the table
+/// miss is a matchable error instead of an assertion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UnsupportedLfsrWidth(pub u32);
+
+impl std::fmt::Display for UnsupportedLfsrWidth {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "no primitive polynomial for {}-bit LFSR (3..=16)", self.0)
+    }
+}
+
+impl std::error::Error for UnsupportedLfsrWidth {}
+
+/// Tap mask of the primitive polynomial for width `bits` — the one table
+/// behind both the behavioral [`Lfsr`] and the SNG netlist builder
+/// ([`crate::sc::sng::build_netlist`]).
+pub fn taps_for(bits: u32) -> Result<u32, UnsupportedLfsrWidth> {
+    TAPS.iter()
+        .find(|&&(b, _)| b == bits)
+        .map(|&(_, t)| t)
+        .ok_or(UnsupportedLfsrWidth(bits))
+}
+
 /// A maximal-length Fibonacci LFSR of 3–16 bits.
 #[derive(Debug, Clone)]
 pub struct Lfsr {
@@ -35,15 +59,12 @@ pub struct Lfsr {
 impl Lfsr {
     /// Create an LFSR of width `bits` seeded with `seed` (any non-zero
     /// value; zero is mapped to 1, the all-zero state being absorbing).
-    pub fn new(bits: u32, seed: u32) -> Self {
-        let taps = TAPS
-            .iter()
-            .find(|&&(b, _)| b == bits)
-            .unwrap_or_else(|| panic!("no primitive polynomial for {bits}-bit LFSR (3..=16)"))
-            .1;
+    /// Widths outside 3..=16 are a typed [`UnsupportedLfsrWidth`] error.
+    pub fn new(bits: u32, seed: u32) -> Result<Self, UnsupportedLfsrWidth> {
+        let taps = taps_for(bits)?;
         let mask = (1u32 << bits) - 1;
         let state = if seed & mask == 0 { 1 } else { seed & mask };
-        Lfsr { state, taps, bits }
+        Ok(Lfsr { state, taps, bits })
     }
 
     /// Register width.
@@ -77,7 +98,7 @@ mod tests {
     #[test]
     fn all_widths_are_maximal_length() {
         for bits in 3..=16u32 {
-            let mut l = Lfsr::new(bits, 1);
+            let mut l = Lfsr::new(bits, 1).unwrap();
             let period = l.period();
             // For large widths, walk the full period only up to 16 bits
             // (65535 steps) — cheap enough to verify exhaustively.
@@ -100,7 +121,7 @@ mod tests {
 
     #[test]
     fn zero_seed_is_corrected() {
-        let l = Lfsr::new(8, 0);
+        let l = Lfsr::new(8, 0).unwrap();
         assert_ne!(l.value(), 0);
     }
 
@@ -108,7 +129,7 @@ mod tests {
     fn state_distribution_is_near_uniform() {
         // Over a full period every non-zero state appears exactly once, so
         // the mean state value is 2^{n-1} (+ tiny bias from missing zero).
-        let mut l = Lfsr::new(10, 123);
+        let mut l = Lfsr::new(10, 123).unwrap();
         let period = l.period();
         let mut sum = 0u64;
         for _ in 0..period {
@@ -119,8 +140,13 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "no primitive polynomial")]
-    fn unsupported_width_panics() {
-        Lfsr::new(17, 1);
+    fn unsupported_width_is_a_typed_error() {
+        for bits in [0u32, 1, 2, 17, 32] {
+            let err = Lfsr::new(bits, 1).unwrap_err();
+            assert_eq!(err, UnsupportedLfsrWidth(bits));
+            assert!(err.to_string().contains("no primitive polynomial"), "{err}");
+            assert_eq!(taps_for(bits).unwrap_err(), UnsupportedLfsrWidth(bits));
+        }
+        assert_eq!(taps_for(4).unwrap(), 0b1100);
     }
 }

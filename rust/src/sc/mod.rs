@@ -27,7 +27,7 @@ pub mod rng;
 pub mod sng;
 
 pub use bitstream::Bitstream;
-pub use lfsr::Lfsr;
+pub use lfsr::{Lfsr, UnsupportedLfsrWidth};
 pub use pcc::PccKind;
 
 /// Quantize a real value in [0, 1] to an `bits`-bit unipolar code.

@@ -204,7 +204,7 @@ mod tests {
         len: usize,
         seed: u32,
     ) -> Vec<Bitstream> {
-        let mut l = Lfsr::new(lfsr_bits, seed);
+        let mut l = Lfsr::new(lfsr_bits, seed).unwrap();
         let mask = (1u32 << bits) - 1;
         let rs: Vec<u32> = (0..len)
             .map(|_| {
@@ -221,7 +221,7 @@ mod tests {
 
     fn r4_sequence(n: usize, len: usize, seed: u32) -> Vec<u32> {
         let m1 = m_bits(n) + 1;
-        let mut l = Lfsr::new(m1.max(3), seed);
+        let mut l = Lfsr::new(m1.max(3), seed).unwrap();
         (0..len)
             .map(|_| {
                 let v = l.value() & ((1 << m1) - 1);

@@ -4,7 +4,7 @@
 
 use crate::netlist::Netlist;
 use crate::sc::bitstream::Bitstream;
-use crate::sc::lfsr::Lfsr;
+use crate::sc::lfsr::{self, Lfsr, UnsupportedLfsrWidth};
 use crate::sc::pcc::{self, PccKind};
 
 /// A single binary→stochastic generator.
@@ -16,9 +16,10 @@ pub struct Sng {
 }
 
 impl Sng {
-    /// SNG of `bits` precision using PCC `kind`, seeded at `seed`.
-    pub fn new(bits: u32, kind: PccKind, seed: u32) -> Self {
-        Sng { lfsr: Lfsr::new(bits, seed), kind, bits }
+    /// SNG of `bits` precision using PCC `kind`, seeded at `seed`. Widths
+    /// outside the LFSR table (3..=16) are a typed error, not a panic.
+    pub fn new(bits: u32, kind: PccKind, seed: u32) -> Result<Self, UnsupportedLfsrWidth> {
+        Ok(Sng { lfsr: Lfsr::new(bits, seed)?, kind, bits })
     }
 
     /// Precision in bits.
@@ -62,9 +63,9 @@ pub struct SharedRns {
 }
 
 impl SharedRns {
-    /// Shared RNS of width `bits`.
-    pub fn new(bits: u32, seed: u32) -> Self {
-        SharedRns { lfsr: Lfsr::new(bits, seed), bits }
+    /// Shared RNS of width `bits` (3..=16; typed error otherwise).
+    pub fn new(bits: u32, seed: u32) -> Result<Self, UnsupportedLfsrWidth> {
+        Ok(SharedRns { lfsr: Lfsr::new(bits, seed)?, bits })
     }
 
     /// Advance one cycle and return per-consumer shuffled views of the
@@ -114,7 +115,11 @@ impl SharedRns {
 /// Primary inputs: the X code bits (LSB first), then a 1-bit `seed_in` that
 /// XORs into the feedback — pulsing it once kicks the register out of the
 /// absorbing all-zero reset state (the hardware equivalent of a preset pin).
-pub fn build_netlist(kind: PccKind, bits: u32) -> Netlist {
+///
+/// Widths outside the tabulated 3..=16 range are a typed
+/// [`UnsupportedLfsrWidth`] error (previously a panic).
+pub fn build_netlist(kind: PccKind, bits: u32) -> Result<Netlist, UnsupportedLfsrWidth> {
+    let tap_mask = lfsr::taps_for(bits)?;
     let mut nl = Netlist::new(format!("sng_{kind:?}_{bits}b"));
     let x = nl.inputs(bits as usize);
     let seed_in = nl.input();
@@ -130,9 +135,9 @@ pub fn build_netlist(kind: PccKind, bits: u32) -> Netlist {
         d = q;
     }
     // Feedback = XOR of tap-stage Qs (same primitive polynomials as the
-    // behavioral `Lfsr`), XORed with seed_in.
+    // behavioral `Lfsr` — one shared table), XORed with seed_in.
     let tap_qs: Vec<_> = (0..bits)
-        .filter(|i| (lfsr_tap_mask(bits) >> i) & 1 == 1)
+        .filter(|i| (tap_mask >> i) & 1 == 1)
         .map(|i| qs[i as usize])
         .collect();
     let mut fb = tap_qs[0];
@@ -148,33 +153,7 @@ pub fn build_netlist(kind: PccKind, bits: u32) -> Netlist {
     bind.extend(qs.iter().copied());
     let outs = nl.absorb(&pcc_nl, &bind);
     nl.mark_output(outs[0]);
-    nl
-}
-
-/// Tap mask of the primitive polynomial used for width `bits` — kept in
-/// sync with [`crate::sc::lfsr`] (asserted by tests replaying the netlist
-/// against the behavioral LFSR).
-fn lfsr_tap_mask(bits: u32) -> u32 {
-    const TAPS: [(u32, u32); 14] = [
-        (3, 0b110),
-        (4, 0b1100),
-        (5, 0b10100),
-        (6, 0b110000),
-        (7, 0b1100000),
-        (8, 0b10111000),
-        (9, 0b100010000),
-        (10, 0b1001000000),
-        (11, 0b10100000000),
-        (12, 0b111000001000),
-        (13, 0b1110010000000),
-        (14, 0b11100000000010),
-        (15, 0b110000000000000),
-        (16, 0b1101000000001000),
-    ];
-    TAPS.iter()
-        .find(|&&(b, _)| b == bits)
-        .unwrap_or_else(|| panic!("no primitive polynomial for {bits}-bit LFSR"))
-        .1
+    Ok(nl)
 }
 
 #[cfg(test)]
@@ -189,7 +168,7 @@ mod tests {
         let bits = 8;
         for &v in &[0.125f64, 0.5, 0.9] {
             let x = quantize_unipolar(v, bits);
-            let mut sng = Sng::new(bits, PccKind::Comparator, 1);
+            let mut sng = Sng::new(bits, PccKind::Comparator, 1).unwrap();
             let len = (1usize << bits) - 1;
             let bs = sng.generate(x, len);
             // X > R for R in 1..=255 happens exactly x−1 times... R covers
@@ -203,7 +182,7 @@ mod tests {
 
     #[test]
     fn correlated_generation_yields_scc_one() {
-        let mut sng = Sng::new(8, PccKind::Comparator, 7);
+        let mut sng = Sng::new(8, PccKind::Comparator, 7).unwrap();
         let streams = sng.generate_correlated(&[60, 180], 255);
         assert!(streams[0].scc(&streams[1]) > 0.99);
         // And OR gives max, not sum (the [29] trick).
@@ -213,7 +192,7 @@ mod tests {
 
     #[test]
     fn shared_rns_streams_decorrelated_enough_to_multiply() {
-        let mut rns = SharedRns::new(10, 33);
+        let mut rns = SharedRns::new(10, 33).unwrap();
         let len = 1023;
         let a_code = 3 * 1024 / 4; // 0.75
         let b_code = 1024 / 2; // 0.5
@@ -223,16 +202,29 @@ mod tests {
     }
 
     #[test]
+    fn unsupported_widths_are_typed_errors() {
+        assert_eq!(
+            Sng::new(17, PccKind::Comparator, 1).unwrap_err(),
+            UnsupportedLfsrWidth(17)
+        );
+        assert_eq!(SharedRns::new(2, 1).unwrap_err(), UnsupportedLfsrWidth(2));
+        assert_eq!(
+            build_netlist(PccKind::Comparator, 20).unwrap_err(),
+            UnsupportedLfsrWidth(20)
+        );
+    }
+
+    #[test]
     fn sng_netlist_matches_behavioral_sequence() {
         use crate::sim::Evaluator;
         let bits = 4;
         for kind in PccKind::ALL {
             for x in [0u32, 0b1010, 0b1111] {
-                let nl = build_netlist(kind, bits);
+                let nl = build_netlist(kind, bits).unwrap();
                 let mut ev = Evaluator::new(&nl);
                 // Pulse seed_in on cycle 0: the ring leaves the absorbing
                 // all-zero state into state 1 — the behavioral LFSR's seed.
-                let mut behavioral = Sng::new(bits, kind, 1);
+                let mut behavioral = Sng::new(bits, kind, 1).unwrap();
                 let len = 40;
                 let reference = behavioral.generate(x, len);
                 let mut pins: Vec<bool> = (0..bits).map(|i| (x >> i) & 1 == 1).collect();

@@ -1,0 +1,198 @@
+//! Chaos and fault-injection integration tests: the resilience contract of
+//! ISSUE 6's acceptance criteria.
+//!
+//! * a seeded [`FaultPlan`] perturbs the fused engine and the per-bit
+//!   reference identically — bit-exact parity holds under injected faults
+//!   exactly as it does on the clean datapath;
+//! * an injected worker panic (`EngineConfig::with_chaos_panic_after`)
+//!   kills a pool shard mid-service and the router reroutes with only
+//!   typed errors — zero client panics;
+//! * a panic while holding the metrics lock poisons it without taking
+//!   `Session::metrics` down (lock recovery);
+//! * client deadlines resolve stuck requests to [`EngineError::Timeout`]
+//!   instead of blocking forever;
+//! * a sustained latency-SLO breach triggers the graceful-degradation
+//!   fallback to a coarser precision plan — requests keep succeeding and
+//!   the transition is visible in `SessionMetrics::degrade_events`;
+//! * work queued before `close` is still served and drainable; new work
+//!   is refused typed.
+
+use scnn::accel::layers::{LayerKind, LayerSpec, NetworkSpec};
+use scnn::accel::network::{reference, ForwardMode, ForwardPlan, LayerWeights, QuantizedWeights};
+use scnn::accel::precision::PrecisionPlan;
+use scnn::engine::{
+    BackendKind, BatchPolicy, DegradePolicy, Engine, EngineConfig, EngineError, EnginePool,
+    PoolConfig,
+};
+use scnn::faults::FaultPlan;
+use scnn::sc::quantize_bipolar;
+use std::time::Duration;
+
+fn tiny_net() -> NetworkSpec {
+    NetworkSpec {
+        name: "faults-tiny".into(),
+        input: (1, 4, 4),
+        layers: vec![LayerSpec {
+            kind: LayerKind::Dense { inputs: 16, outputs: 4 },
+            relu: false,
+        }],
+    }
+}
+
+fn tiny_weights() -> QuantizedWeights {
+    let codes: Vec<Vec<u32>> = (0..4)
+        .map(|oc| {
+            (0..16)
+                .map(|j| quantize_bipolar(((oc * 3 + j) % 13) as f64 / 6.5 - 1.0, 8))
+                .collect()
+        })
+        .collect();
+    QuantizedWeights { bits: 8, layers: vec![LayerWeights { codes, gamma: 1.0, mu: 0.0 }] }
+}
+
+fn exp_cfg() -> EngineConfig {
+    EngineConfig::new(BackendKind::Expectation, tiny_net()).with_quantized(tiny_weights())
+}
+
+fn fused_cfg(k: usize) -> EngineConfig {
+    EngineConfig::new(BackendKind::StochasticFused, tiny_net())
+        .with_quantized(tiny_weights())
+        .with_k(k)
+        .with_batch(BatchPolicy { linger: Duration::from_millis(1), ..BatchPolicy::default() })
+}
+
+fn images(n: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|i| (0..16).map(|j| ((i * 5 + j) % 11) as f32 / 11.0).collect()).collect()
+}
+
+#[test]
+fn randomized_fault_plans_keep_fused_and_reference_bit_exact() {
+    // Every fault class at once, at escalating rates: the fused word-level
+    // engine and the per-bit reference must inject the *same* faults and
+    // stay bit-for-bit identical (the clean-datapath contract, extended).
+    let net = tiny_net();
+    let weights = tiny_weights();
+    let input: Vec<f64> = (0..16).map(|i| ((i % 7) as f64) / 7.0).collect();
+    let plan = PrecisionPlan::uniform(64, 1);
+    for case in 0..6u64 {
+        let fp = FaultPlan::new(0xFA_417 + case)
+            .with_bit_flip_rate(0.002 * case as f64)
+            .with_sng_correlation_rate(0.05 * case as f64)
+            .with_sram_upset_rate(0.001 * case as f64)
+            .with_stuck_lane(0, case as usize % 4, case % 2 == 0);
+        let fused = ForwardPlan::compile_with_precision_faults(
+            &net,
+            &weights,
+            ForwardMode::Stochastic { k: 64, seed: 9 },
+            &plan,
+            Some(&fp),
+        )
+        .unwrap()
+        .run(&input);
+        let golden =
+            reference::forward_stochastic_plan_faulted(&net, &weights, &input, &plan, 9, Some(&fp));
+        assert_eq!(fused, golden, "fault case {case}");
+        assert!(fused.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn injected_worker_panic_reroutes_with_only_typed_errors() {
+    // One shard is rigged to panic after serving two requests; the pool
+    // must detect the death, mark the shard unhealthy, and serve every
+    // client request from the survivor — no panics reach the client.
+    let imgs = images(10);
+    let single = Engine::open(exp_cfg()).unwrap();
+    let expected = single.infer_batch(&imgs).unwrap();
+    let chaos = exp_cfg().with_chaos_panic_after(2);
+    let pool = EnginePool::open(PoolConfig::heterogeneous(vec![chaos, exp_cfg()])).unwrap();
+    for (i, img) in imgs.iter().enumerate() {
+        assert_eq!(pool.infer(img.clone()).unwrap(), expected[i], "image {i}");
+    }
+    let m = pool.metrics();
+    assert_eq!(m.healthy, 1, "the chaos shard died and was detected");
+    assert!(m.rerouted >= 1, "its traffic was rerouted to the survivor");
+    // The poisoned shard's metrics still aggregate (lock recovery).
+    assert!(m.requests >= imgs.len());
+}
+
+#[test]
+fn metrics_survive_a_panic_that_poisons_the_recorder_lock() {
+    // The chaos panic fires while the worker holds the metrics lock; the
+    // session must recover the poisoned lock instead of propagating the
+    // panic, and later requests must fail typed.
+    let s = Engine::open(exp_cfg().with_chaos_panic_after(1)).unwrap();
+    let img = images(1).pop().unwrap();
+    assert!(s.infer(img.clone()).is_ok(), "the request before the panic succeeds");
+    while s.worker_alive() {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let m = s.metrics();
+    assert_eq!(m.requests, 1, "metrics survive the poisoned lock");
+    match EngineError::from_request(s.infer(img).unwrap_err()) {
+        EngineError::WorkerDied => {}
+        other => panic!("expected WorkerDied, got {other:?}"),
+    }
+}
+
+#[test]
+fn deadline_breaches_resolve_typed_and_count_in_metrics() {
+    // A 2 ms client deadline against a shard injected to sleep 300 ms per
+    // batch: `infer` must return `EngineError::Timeout` instead of
+    // blocking for the worker.
+    let cfg = exp_cfg()
+        .with_deadline(Duration::from_millis(2))
+        .with_chaos_slow(Duration::from_millis(300));
+    let s = Engine::open(cfg).unwrap();
+    match EngineError::from_request(s.infer(images(1).pop().unwrap()).unwrap_err()) {
+        EngineError::Timeout { elapsed } => assert!(elapsed >= Duration::from_millis(2)),
+        other => panic!("expected Timeout, got {other:?}"),
+    }
+    assert_eq!(s.metrics().timeouts, 1);
+}
+
+#[test]
+fn latency_slo_breach_degrades_precision_instead_of_failing() {
+    // An impossible SLO (zero latency budget) breached on every batch: the
+    // worker must fall back to coarser precision plans — visible in the
+    // metrics — while every request keeps succeeding.
+    let cfg = fused_cfg(64).with_degrade(DegradePolicy {
+        latency_slo: Duration::ZERO,
+        breach_window: 2,
+        min_k: 8,
+    });
+    let s = Engine::open(cfg).unwrap();
+    for img in images(8) {
+        assert_eq!(s.infer(img).unwrap().len(), 4, "requests keep succeeding");
+    }
+    let m = s.metrics();
+    assert!(m.degrade_events >= 1, "the SLO breach triggered a precision fallback");
+    assert_eq!(m.requests, 8);
+}
+
+#[test]
+fn work_queued_before_close_survives_and_new_work_is_refused_typed() {
+    let s = Engine::open(exp_cfg()).unwrap();
+    let imgs = images(4);
+    let mut tickets = Vec::new();
+    for img in &imgs {
+        tickets.push(s.submit(img.clone()).unwrap());
+    }
+    s.close();
+    assert!(s.is_closed());
+    match s.submit(imgs[0].clone()) {
+        Err(EngineError::Closed) => {}
+        other => panic!("expected Closed, got {other:?}"),
+    }
+    // Queued-before-close work was executed and is still drainable.
+    let drained = s.drain().unwrap();
+    assert_eq!(drained.len(), 4);
+    for (i, (ticket, res)) in drained.iter().enumerate() {
+        assert_eq!(*ticket, tickets[i]);
+        assert!(res.is_ok(), "queued request {i} served across close");
+    }
+    match s.drain() {
+        Err(EngineError::EmptyQueue) => {}
+        other => panic!("expected EmptyQueue, got {other:?}"),
+    }
+}

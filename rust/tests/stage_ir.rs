@@ -11,12 +11,14 @@
 //!   on pool layers — are rejected with an error, never a panic;
 //! * on small random valid stacks, the fused stochastic engine and the
 //!   per-bit reference (which lower the same descriptors) agree
-//!   bit-for-bit.
+//!   bit-for-bit — including under randomized injected fault plans
+//!   (`scnn::faults`), which both datapaths must honor identically.
 
 use scnn::accel::layers::{Conv2d, LayerKind, LayerSpec, NetworkSpec, Shape};
 use scnn::accel::network::{reference, ForwardMode, ForwardPlan, QuantizedWeights};
 use scnn::accel::precision::{autotune, AutoTuneConfig, PrecisionPlan, WORD};
 use scnn::accel::stage::total_macs;
+use scnn::faults::FaultPlan;
 
 struct Gen(u64);
 
@@ -278,6 +280,52 @@ fn prop_random_per_layer_plans_fused_matches_reference_bit_exactly() {
         let golden =
             reference::forward_stochastic_plan(&net, &weights, &input, &plan, seed);
         assert_eq!(fused, golden, "ks={ks:?} seed={seed}");
+        assert!(fused.iter().all(|v| v.is_finite()));
+    });
+}
+
+#[test]
+fn prop_random_fault_plans_keep_fused_and_reference_bit_exact() {
+    // The resilience extension of the bit-exact contract: a seeded
+    // `FaultPlan` (stream bit flips, SNG correlation collisions, SRAM
+    // weight upsets, a stuck APC lane) is a pure function of the same
+    // generation keys both datapaths use — so the fused word-level engine
+    // and the per-bit reference must inject identical faults and stay
+    // bit-for-bit, on random nets under random per-layer plans.
+    prop("faulted-parity", 8, |g| {
+        let net = grow_random_net(g, 3);
+        let weights = QuantizedWeights::synthetic(&net, 8, g.next()).unwrap();
+        let n_compute = net.stages().unwrap().iter().filter(|s| s.is_compute()).count();
+        let ks: Vec<usize> = (0..n_compute).map(|_| WORD * g.range(2, 10) as usize).collect();
+        let plan = PrecisionPlan::per_layer(ks.clone());
+        let mut fp = FaultPlan::new(g.next())
+            .with_bit_flip_rate(g.range(0, 50) as f64 / 1000.0)
+            .with_sng_correlation_rate(g.range(0, 30) as f64 / 100.0)
+            .with_sram_upset_rate(g.range(0, 20) as f64 / 1000.0);
+        if g.chance(60) {
+            fp = fp.with_stuck_lane(
+                g.range(0, n_compute as u64) as usize,
+                g.range(0, 4) as usize,
+                g.chance(50),
+            );
+        }
+        let in_len = net.input.0 * net.input.1 * net.input.2;
+        let input: Vec<f64> = (0..in_len).map(|i| ((i % 7) as f64) / 7.0).collect();
+        let seed = g.range(1, 1000) as u32;
+        let mode = ForwardMode::Stochastic { k: plan.max_k(), seed };
+        let fused =
+            ForwardPlan::compile_with_precision_faults(&net, &weights, mode, &plan, Some(&fp))
+                .unwrap()
+                .run(&input);
+        let golden = reference::forward_stochastic_plan_faulted(
+            &net,
+            &weights,
+            &input,
+            &plan,
+            seed,
+            Some(&fp),
+        );
+        assert_eq!(fused, golden, "ks={ks:?} seed={seed} faults={fp:?}");
         assert!(fused.iter().all(|v| v.is_finite()));
     });
 }
