@@ -36,8 +36,8 @@
 //!
 //! This module is the *datapath* layer. The public inference entry point is
 //! [`crate::engine`]: a session owns one plan (or PJRT ladder), batches
-//! requests, and records per-session metrics. The free [`forward`] /
-//! [`forward_batch`] helpers are deprecated shims kept for compatibility.
+//! requests, and records per-session metrics. For one-shot raw-f64
+//! plan-level access, use [`ForwardPlan::once`] / [`ForwardPlan::once_batch`].
 
 use crate::accel::layers::{NetworkSpec, Shape};
 use crate::accel::par;
@@ -583,7 +583,7 @@ impl ForwardPlan {
         self.run_with(input, &mut scr, true)
     }
 
-    /// Compile a plan and run it once — the non-deprecated one-shot for
+    /// Compile a plan and run it once — the supported one-shot for
     /// tests/tools that genuinely want compile-plus-run per call. Repeated
     /// inference should build one plan (or open an `engine::Session`).
     pub fn once(
@@ -983,52 +983,6 @@ fn build_layer_plan(
     Ok(lp)
 }
 
-/// One inference through the SCNN.
-///
-/// `input`: bipolar values in [−1, 1], flattened (c·h·w). Returns the
-/// output-layer values (bipolar stream values for stochastic/expectation
-/// modes; raw pre-activation sums for fixed-point).
-///
-/// **Deprecated shim**: recompiles the whole plan (gather tables, randoms,
-/// every weight SNG stream) on every call. New code opens one
-/// `engine::Session` (`scnn::engine::Engine::open`) — or, for raw-f64
-/// plan-level access, builds one [`ForwardPlan`] and reuses it. Kept
-/// bit-compatible with the default session's datapath; scheduled for
-/// removal once external callers have migrated.
-#[deprecated(
-    since = "0.3.0",
-    note = "open a session via scnn::engine::Engine::open(EngineConfig) \
-            (or reuse a ForwardPlan directly); this shim recompiles the plan per call"
-)]
-pub fn forward(
-    net: &NetworkSpec,
-    weights: &QuantizedWeights,
-    input: &[f64],
-    mode: ForwardMode,
-) -> Vec<f64> {
-    ForwardPlan::once(net, weights, input, mode)
-}
-
-/// Batched inference over a freshly compiled plan. Output `[i]` is
-/// bit-identical to `forward(net, weights, &inputs[i], mode)`.
-///
-/// **Deprecated shim**: see [`forward`] — new code opens one
-/// `engine::Session` and calls `infer_batch`, which adds dynamic batching,
-/// backpressure, and per-session metrics on the same datapath.
-#[deprecated(
-    since = "0.3.0",
-    note = "open a session via scnn::engine::Engine::open(EngineConfig) and use \
-            Session::infer_batch; this shim recompiles the plan per call"
-)]
-pub fn forward_batch(
-    net: &NetworkSpec,
-    weights: &QuantizedWeights,
-    inputs: &[Vec<f64>],
-    mode: ForwardMode,
-) -> Vec<Vec<f64>> {
-    ForwardPlan::once_batch(net, weights, inputs, mode)
-}
-
 /// Argmax over the final layer values (ties resolve to the last maximal
 /// index). Generic over the element type so the f64 datapath and the f32
 /// serving path (`crate::engine::classify`) share one implementation.
@@ -1267,7 +1221,7 @@ mod tests {
     use super::*;
     use crate::accel::layers::{Conv2d, LayerKind, LayerSpec};
 
-    /// Shorthands for the non-deprecated one-shots.
+    /// Shorthands for the plan-level one-shots.
     fn fwd(n: &NetworkSpec, w: &QuantizedWeights, i: &[f64], m: ForwardMode) -> Vec<f64> {
         ForwardPlan::once(n, w, i, m)
     }
@@ -1873,23 +1827,5 @@ mod tests {
     fn classify_picks_argmax() {
         assert_eq!(classify(&[0.1, 0.9, -0.3]), 1);
         assert_eq!(classify(&[-5.0, -2.0, -9.0]), 1);
-    }
-
-    /// The deprecation contract: the shims must stay bit-compatible with
-    /// the plan API until removal. This is the one place outside the shim
-    /// definitions where using them is intentional.
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_delegate_bit_exactly() {
-        let net = tiny_net();
-        let w = tiny_weights(8, 33);
-        let input = tiny_input();
-        let mode = ForwardMode::Stochastic { k: 96, seed: 4 };
-        assert_eq!(forward(&net, &w, &input, mode), fwd(&net, &w, &input, mode));
-        let inputs = vec![tiny_input(), tiny_input()];
-        assert_eq!(
-            forward_batch(&net, &w, &inputs, mode),
-            fwd_batch(&net, &w, &inputs, mode)
-        );
     }
 }

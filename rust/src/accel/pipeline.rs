@@ -266,7 +266,7 @@ pub fn schedule_network(net: &NetworkSpec, cfg: &ScheduleConfig) -> NetworkSched
 
 /// Schedule every compute layer of `net` for a `batch` of images with
 /// weight-stationary reuse (the hardware analogue of the software engine's
-/// `forward_batch`: per-layer constants amortized across the batch).
+/// batched forward: per-layer constants amortized across the batch).
 pub fn schedule_network_batch(
     net: &NetworkSpec,
     cfg: &ScheduleConfig,

@@ -1,0 +1,291 @@
+//! `loadgen` — open-loop load generator for the HTTP front door.
+//!
+//! Sweeps offered load × shard count against a self-hosted server
+//! (synthetic weights, ephemeral port — no artifacts needed) and emits
+//! `BENCH_serve.json` with goodput and p50/p99/p999 latency per point:
+//! the measured saturation curve behind EXPERIMENTS.md §Serving.
+//!
+//! Open-loop means request *i* is due at `t0 + i/rate` regardless of how
+//! slow earlier responses were — the arrival process does not slow down
+//! when the server saturates, which is what exposes the latency knee.
+//!
+//! ```text
+//! cargo run --release --bin loadgen -- \
+//!     --shards 1,2,4 --rates 50,100,200,400 --secs 2 --conns 8
+//! ```
+//!
+//! `--addr HOST:PORT` instead drives an already-running external server
+//! (one sweep; the shard list is ignored).
+
+use anyhow::{anyhow, Context, Result};
+use scnn::accel::layers::NetworkSpec;
+use scnn::accel::network::QuantizedWeights;
+use scnn::benchutil::{BenchResult, JsonReport};
+use scnn::engine::{BackendKind, Engine, EngineConfig, PoolConfig};
+use scnn::serve::{read_response, ServeConfig, Server, TenantRegistry};
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let Some(key) = args[i].strip_prefix("--") else {
+            i += 1;
+            continue;
+        };
+        if let Some((k, v)) = key.split_once('=') {
+            m.insert(k.to_string(), v.to_string());
+            i += 1;
+        } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            m.insert(key.to_string(), args[i + 1].clone());
+            i += 2;
+        } else {
+            m.insert(key.to_string(), "true".to_string());
+            i += 1;
+        }
+    }
+    m
+}
+
+fn flag<T>(flags: &HashMap<String, String>, key: &str, default: T) -> Result<T>
+where
+    T: std::str::FromStr,
+    T::Err: std::fmt::Display,
+{
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|e| anyhow!("flag --{key}: cannot parse value {v:?}: {e}")),
+    }
+}
+
+fn parse_list(flags: &HashMap<String, String>, key: &str, default: &str) -> Result<Vec<usize>> {
+    let text = flags.get(key).cloned().unwrap_or_else(|| default.to_string());
+    text.split(',')
+        .map(|tok| {
+            tok.trim()
+                .parse::<usize>()
+                .map_err(|e| anyhow!("flag --{key}: cannot parse {tok:?}: {e}"))
+        })
+        .collect()
+}
+
+/// One request's fate, as seen by a load-gen worker.
+struct Sample {
+    status: u16,
+    latency_us: u64,
+}
+
+/// Sends one keep-alive request, reconnecting on failure. Returns the
+/// status code; any transport error surfaces as `Err`.
+fn send_request(conn: &mut Option<TcpStream>, addr: &str, request: &[u8]) -> std::io::Result<u16> {
+    if conn.is_none() {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+        *conn = Some(stream);
+    }
+    // The unwrap-free take/put dance keeps the connection out of the
+    // Option only while it can still fail.
+    let mut stream = match conn.take() {
+        Some(s) => s,
+        None => return Err(std::io::Error::other("no connection")),
+    };
+    let outcome = stream.write_all(request).and_then(|()| read_response(&mut stream));
+    match outcome {
+        Ok((status, headers, _body)) => {
+            let closing = headers.iter().any(|(k, v)| k == "connection" && v == "close");
+            if !closing {
+                *conn = Some(stream);
+            }
+            Ok(status)
+        }
+        Err(e) => Err(e),
+    }
+}
+
+/// Drives `total` requests open-loop at `rate` req/s over `conns`
+/// keep-alive connections. Returns every sample plus the i/o error count.
+fn run_point(addr: &str, body: &str, rate: f64, total: usize, conns: usize) -> (Vec<Sample>, u64) {
+    let request = format!(
+        "POST /v1/infer HTTP/1.1\r\nHost: loadgen\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )
+    .into_bytes();
+    let next = AtomicUsize::new(0);
+    let t0 = Instant::now();
+    let mut merged = Vec::with_capacity(total);
+    let mut io_errors = 0u64;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(conns);
+        for _ in 0..conns {
+            let request = &request;
+            let next = &next;
+            handles.push(scope.spawn(move || {
+                let mut conn: Option<TcpStream> = None;
+                let mut samples = Vec::new();
+                let mut errors = 0u64;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= total {
+                        break;
+                    }
+                    // Open-loop schedule: request i is due at t0 + i/rate,
+                    // no matter how the server is doing.
+                    let due = Duration::from_secs_f64(i as f64 / rate);
+                    let elapsed = t0.elapsed();
+                    if due > elapsed {
+                        std::thread::sleep(due - elapsed);
+                    }
+                    let t = Instant::now();
+                    match send_request(&mut conn, addr, request) {
+                        Ok(status) => samples.push(Sample {
+                            status,
+                            latency_us: t.elapsed().as_micros() as u64,
+                        }),
+                        Err(_) => {
+                            errors += 1;
+                            conn = None;
+                        }
+                    }
+                }
+                (samples, errors)
+            }));
+        }
+        for handle in handles {
+            if let Ok((samples, errors)) = handle.join() {
+                merged.extend(samples);
+                io_errors += errors;
+            }
+        }
+    });
+    (merged, io_errors)
+}
+
+fn percentile(sorted_us: &[u64], p: f64) -> u64 {
+    if sorted_us.is_empty() {
+        return 0;
+    }
+    let rank = (sorted_us.len() as f64 * p / 100.0).ceil() as usize;
+    sorted_us[rank.clamp(1, sorted_us.len()) - 1]
+}
+
+/// Deterministic input image sized for `net` (values in [0, 1)).
+fn synthetic_image(net: &NetworkSpec) -> Vec<f32> {
+    let (c, h, w) = net.input;
+    (0..c * h * w).map(|i| (i % 17) as f32 / 17.0).collect()
+}
+
+fn measure_sweep(
+    report: &mut JsonReport,
+    addr: &str,
+    shards: usize,
+    body: &str,
+    rates: &[usize],
+    secs: f64,
+    conns: usize,
+) {
+    for &rate in rates {
+        let total = ((rate as f64) * secs).round() as usize;
+        let (samples, io_errors) = run_point(addr, body, rate as f64, total.max(1), conns);
+        let mut ok_us: Vec<u64> =
+            samples.iter().filter(|s| s.status == 200).map(|s| s.latency_us).collect();
+        ok_us.sort_unstable();
+        let http_200 = ok_us.len();
+        let http_429 = samples.iter().filter(|s| s.status == 429).count();
+        let other = samples.len() - http_200 - http_429;
+        let goodput = http_200 as f64 / secs;
+        let p50 = percentile(&ok_us, 50.0);
+        let p99 = percentile(&ok_us, 99.0);
+        let p999 = percentile(&ok_us, 99.9);
+        let mean_us = if ok_us.is_empty() {
+            0.0
+        } else {
+            ok_us.iter().sum::<u64>() as f64 / ok_us.len() as f64
+        };
+        let result = BenchResult {
+            name: format!("serve/shards={shards}/offered={rate}"),
+            median_ns: p50 as f64 * 1e3,
+            mean_ns: mean_us * 1e3,
+            iters: samples.len().max(1),
+        };
+        println!(
+            "shards={shards} offered={rate}/s -> goodput {goodput:.0}/s  p50 {p50} µs  \
+             p99 {p99} µs  p999 {p999} µs  (200: {http_200}, 429: {http_429}, \
+             other: {other}, io: {io_errors})"
+        );
+        report.add(
+            &result,
+            &[
+                ("shards", shards as f64),
+                ("offered_rps", rate as f64),
+                ("goodput_rps", goodput),
+                ("p50_us", p50 as f64),
+                ("p99_us", p99 as f64),
+                ("p999_us", p999 as f64),
+                ("http_200", http_200 as f64),
+                ("http_429", http_429 as f64),
+                ("http_other", other as f64),
+                ("io_errors", io_errors as f64),
+            ],
+        );
+    }
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let flags = parse_flags(&args);
+    let net = NetworkSpec::by_name(&flag::<String>(&flags, "net", "lenet5".into())?)?;
+    let kind: BackendKind = flag(&flags, "backend", BackendKind::Expectation)?;
+    let shard_counts = parse_list(&flags, "shards", "1,2,4")?;
+    let rates = parse_list(&flags, "rates", "50,100,200,400")?;
+    let secs: f64 = flag(&flags, "secs", 2.0)?;
+    let conns: usize = flag(&flags, "conns", 8)?;
+    let out: String = flag(&flags, "out", "BENCH_serve.json".into())?;
+    let external: String = flag(&flags, "addr", String::new())?;
+    let bits: u32 = flag(&flags, "bits", 8)?;
+    let k: usize = flag(&flags, "k", 32)?;
+
+    let image = synthetic_image(&net);
+    let body = format!("{{\"image\":{}}}", scnn::serve::json::render_f32s(&image));
+    let mut report = JsonReport::new();
+
+    if !external.is_empty() {
+        println!("driving external server at {external}");
+        measure_sweep(&mut report, &external, 0, &body, &rates, secs, conns);
+    } else {
+        for &shards in &shard_counts {
+            let cfg = EngineConfig::new(kind, net.clone())
+                .with_quantized(QuantizedWeights::synthetic(&net, bits, 7)?)
+                .with_bits(bits)
+                .with_k(k);
+            let pool = Arc::new(
+                Engine::open_pool(PoolConfig::replicated(cfg, shards))
+                    .context("opening engine pool")?,
+            );
+            let server = Server::start(
+                Arc::clone(&pool),
+                TenantRegistry::open(),
+                "127.0.0.1:0",
+                ServeConfig::default(),
+            )?;
+            let addr = server.local_addr().to_string();
+            println!("== {shards} shard(s) on {addr} ==");
+            measure_sweep(&mut report, &addr, shards, &body, &rates, secs, conns);
+            server.shutdown();
+        }
+    }
+
+    let path = std::path::Path::new(&out);
+    report.write(path).with_context(|| format!("writing {}", path.display()))?;
+    println!("wrote {} ({} points)", path.display(), report.len());
+    Ok(())
+}

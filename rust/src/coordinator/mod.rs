@@ -452,8 +452,8 @@ ENTRY main {{
         }
     }
 
-    /// Plan-level forward for the cross-checks below (the old `forward`
-    /// free function is a deprecated shim).
+    /// Plan-level forward for the cross-checks below (the `forward` free
+    /// function was removed; this is the plan-level path).
     fn direct_forward(mode: ForwardMode, image: &[f32]) -> Vec<f64> {
         let wide: Vec<f64> = image.iter().map(|&v| v as f64).collect();
         ForwardPlan::once(&tiny_net(), &tiny_weights(8), &wide, mode)

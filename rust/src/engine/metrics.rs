@@ -356,6 +356,25 @@ impl SessionMetrics {
     }
 }
 
+/// Per-tenant request accounting, recorded by the serving front door via
+/// [`crate::engine::EnginePool::note_tenant`] and surfaced both here and
+/// in the Prometheus exposition.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantStats {
+    /// Tenant name (`"anonymous"` when no tenants are configured).
+    pub tenant: String,
+    /// Requests answered successfully.
+    pub requests: u64,
+    /// Requests bounced by the tenant's own token-bucket quota.
+    pub quota_rejected: u64,
+    /// Requests shed by pool admission control while acting for this
+    /// tenant.
+    pub shed: u64,
+    /// Requests that failed for any other reason (backend error,
+    /// timeout, malformed input).
+    pub failed: u64,
+}
+
 /// Aggregated snapshot of an [`crate::engine::EnginePool`]: the merged
 /// roll-up every dashboard wants (one latency record, one histogram, one
 /// throughput figure) plus the per-shard [`SessionMetrics`] behind it and
@@ -402,6 +421,10 @@ pub struct PoolMetrics {
     /// [`PoolMetrics::estimated_total_energy_uj`]) sum over *all* shards,
     /// so heterogeneous pools stay accounted.
     pub estimate: Option<HardwareEstimate>,
+    /// Per-tenant accounting (sorted by tenant name), populated by
+    /// [`crate::engine::EnginePool::metrics`] when a serving front door
+    /// has recorded tenant outcomes; empty for in-process pools.
+    pub tenants: Vec<TenantStats>,
 }
 
 impl PoolMetrics {
@@ -450,6 +473,7 @@ impl PoolMetrics {
             histogram,
             estimate: per_shard.iter().find_map(|m| m.estimate),
             per_shard,
+            tenants: Vec::new(),
         }
     }
 
@@ -545,6 +569,12 @@ impl PoolMetrics {
                 s.push_str(&format!(" ({total:.1} µJ modeled for this run)"));
             }
             s.push('\n');
+        }
+        for t in &self.tenants {
+            s.push_str(&format!(
+                "tenant {}: {} ok, {} quota-rejected, {} shed, {} failed\n",
+                t.tenant, t.requests, t.quota_rejected, t.shed, t.failed
+            ));
         }
         s
     }

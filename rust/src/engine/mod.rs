@@ -76,8 +76,8 @@
 //! admission-control shedding via [`EngineError::Rejected`] and automatic
 //! rerouting away from Dead shards); see [`pool`].
 //!
-//! The free functions `accel::network::forward` / `forward_batch` are
-//! deprecated shims over the same machinery; new code opens a session.
+//! The HTTP front door over a pool lives in [`crate::serve`]; it records
+//! per-tenant outcomes here via [`EnginePool::note_tenant`].
 
 #![deny(clippy::unwrap_used)]
 
@@ -92,9 +92,9 @@ pub use backend::Backend;
 pub use config::{BackendKind, BatchPolicy, DegradePolicy, EngineConfig, WeightSource};
 pub use error::EngineError;
 pub use metrics::{
-    HardwareEstimate, LatencyHistogram, PoolMetrics, ServeStats, SessionMetrics,
+    HardwareEstimate, LatencyHistogram, PoolMetrics, ServeStats, SessionMetrics, TenantStats,
 };
-pub use pool::{EnginePool, Placement, PoolConfig, PoolTicket};
+pub use pool::{EnginePool, Placement, PoolConfig, PoolTicket, TenantOutcome};
 
 use crate::accel::layers::NetworkSpec;
 use crate::tech::TechKind;

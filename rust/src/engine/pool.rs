@@ -60,10 +60,10 @@
 
 use crate::engine::config::EngineConfig;
 use crate::engine::error::EngineError;
-use crate::engine::metrics::{PoolMetrics, SessionMetrics};
+use crate::engine::metrics::{PoolMetrics, SessionMetrics, TenantStats};
 use crate::engine::{lock_recover, Session, Ticket, TrySubmit};
 use anyhow::{bail, Context, Result};
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::str::FromStr;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -257,6 +257,31 @@ pub struct EnginePool {
     drain_gate: Mutex<()>,
     closed: AtomicBool,
     opened: Instant,
+    /// Per-tenant outcome counters, keyed by tenant name. Written by the
+    /// serving front door ([`EnginePool::note_tenant`]); a BTreeMap keeps
+    /// the metrics exposition sorted and stable.
+    tenant_counters: Mutex<BTreeMap<String, TenantCounters>>,
+}
+
+/// How a tenant-attributed request ended, for [`EnginePool::note_tenant`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TenantOutcome {
+    /// Answered successfully.
+    Ok,
+    /// Bounced by the tenant's own quota before reaching the pool.
+    QuotaRejected,
+    /// Shed by pool admission control.
+    Shed,
+    /// Failed anywhere else (backend error, timeout, malformed input).
+    Failed,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct TenantCounters {
+    ok: u64,
+    quota_rejected: u64,
+    shed: u64,
+    failed: u64,
 }
 
 impl EnginePool {
@@ -290,6 +315,7 @@ impl EnginePool {
             drain_gate: Mutex::new(()),
             closed: AtomicBool::new(false),
             opened: Instant::now(),
+            tenant_counters: Mutex::new(BTreeMap::new()),
         })
     }
 
@@ -816,13 +842,39 @@ impl EnginePool {
     pub fn metrics(&self) -> PoolMetrics {
         let per_shard: Vec<SessionMetrics> =
             self.shards.iter().map(|s| s.session.metrics()).collect();
-        PoolMetrics::aggregate(
+        let mut m = PoolMetrics::aggregate(
             per_shard,
             self.healthy_shards(),
             self.shed.load(Ordering::Relaxed),
             self.rerouted.load(Ordering::Relaxed),
             self.opened.elapsed(),
-        )
+        );
+        let counters = lock_recover(&self.tenant_counters);
+        m.tenants = counters
+            .iter()
+            .map(|(name, c)| TenantStats {
+                tenant: name.clone(),
+                requests: c.ok,
+                quota_rejected: c.quota_rejected,
+                shed: c.shed,
+                failed: c.failed,
+            })
+            .collect();
+        m
+    }
+
+    /// Records how a tenant-attributed request ended. Called by the
+    /// serving front door; the counters surface in
+    /// [`PoolMetrics::tenants`] and the Prometheus exposition.
+    pub fn note_tenant(&self, tenant: &str, outcome: TenantOutcome) {
+        let mut counters = lock_recover(&self.tenant_counters);
+        let entry = counters.entry(tenant.to_string()).or_default();
+        match outcome {
+            TenantOutcome::Ok => entry.ok += 1,
+            TenantOutcome::QuotaRejected => entry.quota_rejected += 1,
+            TenantOutcome::Shed => entry.shed += 1,
+            TenantOutcome::Failed => entry.failed += 1,
+        }
     }
 }
 
@@ -949,5 +1001,25 @@ mod tests {
         assert_eq!(pool.pick(None).unwrap(), 1);
         pool.shards[1].inflight.store(9, Ordering::Relaxed);
         assert_eq!(pool.pick(None).unwrap(), 0);
+    }
+
+    #[test]
+    fn tenant_counters_roll_up_sorted_into_metrics() {
+        let pool = EnginePool::open(PoolConfig::replicated(cfg(), 1)).unwrap();
+        pool.note_tenant("beta", TenantOutcome::Ok);
+        pool.note_tenant("beta", TenantOutcome::Shed);
+        pool.note_tenant("alpha", TenantOutcome::Ok);
+        pool.note_tenant("alpha", TenantOutcome::Ok);
+        pool.note_tenant("alpha", TenantOutcome::QuotaRejected);
+        pool.note_tenant("alpha", TenantOutcome::Failed);
+        let m = pool.metrics();
+        let names: Vec<&str> = m.tenants.iter().map(|t| t.tenant.as_str()).collect();
+        assert_eq!(names, vec!["alpha", "beta"], "sorted by tenant name");
+        assert_eq!(m.tenants[0].requests, 2);
+        assert_eq!(m.tenants[0].quota_rejected, 1);
+        assert_eq!(m.tenants[0].failed, 1);
+        assert_eq!(m.tenants[1].requests, 1);
+        assert_eq!(m.tenants[1].shed, 1);
+        assert!(m.summary().contains("tenant alpha: 2 ok"));
     }
 }

@@ -48,9 +48,10 @@
 //! # }
 //! ```
 //!
-//! The pre-engine free functions `accel::network::forward` /
-//! `forward_batch` are `#[deprecated]` shims kept bit-compatible during
-//! the migration window.
+//! Beyond in-process calls, [`serve`] exposes a pool over HTTP/1.1
+//! (`/v1/infer`, `/v1/batch`, `/metrics`, `/healthz`) with API-key
+//! tenants, token-bucket quotas, and Prometheus metrics — all on
+//! `std::net`, since the deployment container is offline.
 //!
 //! ## The stage IR (how a network becomes a datapath)
 //!
@@ -120,6 +121,7 @@ pub mod faults;
 pub mod netlist;
 pub mod runtime;
 pub mod sc;
+pub mod serve;
 pub mod sim;
 pub mod tech;
 

@@ -5,6 +5,9 @@
 //! Subcommands:
 //! * `serve`     — stream the synthetic test set through a session's
 //!   submit/drain path (dynamic batching + backpressure), any backend;
+//!   with `--listen HOST:PORT` it instead starts the HTTP/1.1 front door
+//!   (`scnn::serve`): `/v1/infer`, `/v1/batch`, `/metrics`, `/healthz`,
+//!   API-key tenants and quotas via `--tenants`;
 //! * `simulate`  — batched in-process inference (bit-exact SC, per-bit
 //!   reference, expectation/noisy/fixed-point), any k / precision;
 //! * `sweep`     — Fig. 13 channel-count design-space exploration over
@@ -26,8 +29,10 @@ use scnn::engine::{
     Precision,
 };
 use scnn::faults::FaultPlan;
+use scnn::serve::{ServeConfig, Server, TenantRegistry};
 use scnn::tech::TechKind;
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// True when a token introduces a flag (`--name`), as opposed to being a
@@ -183,7 +188,14 @@ fn print_help() {
                      --fault-seed S --fault-bit-flip R --fault-sram R\n\
                      --fault-corr R (seeded fault injection, also accepted\n\
                      by simulate) --deadline-us D (typed client timeout)\n\
-                     stream the test set through a sharded engine pool\n\
+                     stream the test set through a sharded engine pool;\n\
+                     --listen HOST:PORT starts the HTTP front door instead\n\
+                     (POST /v1/infer, POST /v1/batch, GET /metrics,\n\
+                     GET /healthz) — no dataset needed, --synthetic works:\n\
+                     --tenants 'name:key[:rps[:burst]];...' (or a file path)\n\
+                     --max-body BYTES (request body cap, default 1 MiB)\n\
+                     --serve-for-ms MS (0 = run until killed; otherwise a\n\
+                     bounded run ending in a graceful pool drain)\n\
            simulate  --mode stochastic|reference|expectation|noisy|fixed\n\
                      --net NAME --synthetic --k K --bits B --n N --threads T\n\
                      --seed S --shards S --k-per-layer L --k-auto-budget B\n\
@@ -290,6 +302,10 @@ fn pool_config(
 }
 
 fn serve(flags: &HashMap<String, String>) -> Result<()> {
+    let listen: String = flag(flags, "listen", String::new())?;
+    if !listen.is_empty() {
+        return serve_network(&listen, flags);
+    }
     let artifacts = Artifacts::new(flag::<String>(flags, "artifacts", "artifacts".into())?);
     let n: usize = flag(flags, "n", 200)?;
     let kind: BackendKind = flag(flags, "backend", BackendKind::Xla)?;
@@ -310,6 +326,10 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     // simultaneous clients desynchronize reproducibly), drain ONE
     // completed result (freeing one admission slot), and resubmit —
     // keeping the shard queues fed instead of collapsing the pipeline.
+    // Sleeping inline is correct *here* because this loop is the one and
+    // only client; the network front door (`--listen`) instead runs its
+    // backoff inside each connection worker (`serve::server`), so a shed
+    // tenant can never stall the accept path or unrelated connections.
     let t = Instant::now();
     let mut collected: Vec<Option<Result<Vec<f32>, EngineError>>> = Vec::with_capacity(n);
     collected.resize_with(n, || None);
@@ -355,6 +375,54 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         "(open-loop submit/drain: latencies include queueing; pool admission depth \
          {admission_depth}; {backoffs} backoffs honoring retry hints)"
     );
+    Ok(())
+}
+
+/// The HTTP front door: open a pool, bind `--listen`, and serve until
+/// killed (or for `--serve-for-ms`, ending in a graceful drain — stop
+/// accepting, let in-flight connections finish, `close()` the pool).
+/// Unlike the dataset-streaming path above this needs no artifacts at
+/// all when `--synthetic` is passed, so it runs in a bare checkout.
+fn serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()> {
+    let artifacts = Artifacts::new(flag::<String>(flags, "artifacts", "artifacts".into())?);
+    let kind: BackendKind = flag(flags, "backend", BackendKind::Expectation)?;
+    let pool = Arc::new(Engine::open_pool(pool_config(kind, &artifacts, flags)?)?);
+    let spec: String = flag(flags, "tenants", String::new())?;
+    let registry = if spec.is_empty() {
+        TenantRegistry::open()
+    } else {
+        // The flag value may be a path to a spec file, keeping API keys
+        // out of `ps` output.
+        let text = if std::path::Path::new(&spec).is_file() {
+            std::fs::read_to_string(&spec).with_context(|| format!("reading {spec}"))?
+        } else {
+            spec
+        };
+        TenantRegistry::parse(&text).map_err(|e| anyhow!("--tenants: {e}"))?
+    };
+    let tenants = registry.len();
+    let serve_cfg = ServeConfig {
+        max_body: flag(flags, "max-body", ServeConfig::default().max_body)?,
+        ..ServeConfig::default()
+    };
+    let server = Server::start(Arc::clone(&pool), registry, listen, serve_cfg)?;
+    println!(
+        "listening on http://{} — {} shards, {} tenants ({})",
+        server.local_addr(),
+        pool.shards(),
+        tenants,
+        if tenants == 0 { "open access" } else { "API keys required" }
+    );
+    let serve_for_ms: u64 = flag(flags, "serve-for-ms", 0)?;
+    if serve_for_ms == 0 {
+        println!("serving until killed (pass --serve-for-ms to bound the run)");
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_millis(serve_for_ms));
+    server.shutdown();
+    print!("{}", pool.metrics().summary());
     Ok(())
 }
 

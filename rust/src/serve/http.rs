@@ -1,0 +1,545 @@
+//! Incremental, bounded HTTP/1.1 message framing.
+//!
+//! The parser reads from any [`Read`] stream (loopback TCP in production,
+//! [`std::io::Cursor`] in unit tests), keeps leftover bytes between
+//! requests so keep-alive pipelining works, and enforces hard limits on
+//! head and body size *before* buffering, so an oversized or malformed
+//! client costs one bounded allocation and a typed reject — never a panic
+//! and never unbounded memory.
+
+use std::io::Read;
+use std::time::Duration;
+
+/// Maximum size of the request head (request line + headers) in bytes.
+pub const DEFAULT_MAX_HEAD: usize = 16 * 1024;
+
+/// A typed framing-layer failure. Each variant maps to exactly one HTTP
+/// status so the connection worker can answer without string matching.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Malformed request line, header, or body encoding → 400.
+    BadRequest(String),
+    /// Request head exceeded the configured bound → 431.
+    HeadersTooLarge(usize),
+    /// Declared `Content-Length` exceeded the configured bound → 413.
+    BodyTooLarge {
+        /// What the client declared.
+        declared: usize,
+        /// The server's limit.
+        max: usize,
+    },
+    /// A body-bearing method arrived without `Content-Length` → 411.
+    LengthRequired,
+    /// `Transfer-Encoding` is not supported by this server → 501.
+    UnsupportedTransfer(String),
+    /// The peer closed the connection cleanly between requests.
+    Eof,
+    /// The read timed out (socket read timeout) → 408.
+    Timeout,
+    /// Any other transport failure; the connection is dropped.
+    Io(std::io::Error),
+}
+
+impl HttpError {
+    /// The HTTP status code this error maps to (0 for Eof/Io, which
+    /// close the connection without a response).
+    pub fn status(&self) -> u16 {
+        match self {
+            HttpError::BadRequest(_) => 400,
+            HttpError::HeadersTooLarge(_) => 431,
+            HttpError::BodyTooLarge { .. } => 413,
+            HttpError::LengthRequired => 411,
+            HttpError::UnsupportedTransfer(_) => 501,
+            HttpError::Timeout => 408,
+            HttpError::Eof | HttpError::Io(_) => 0,
+        }
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::BadRequest(msg) => write!(f, "malformed request: {msg}"),
+            HttpError::HeadersTooLarge(max) => {
+                write!(f, "request head exceeds {max} bytes")
+            }
+            HttpError::BodyTooLarge { declared, max } => {
+                write!(f, "declared body of {declared} bytes exceeds limit of {max}")
+            }
+            HttpError::LengthRequired => write!(f, "Content-Length required"),
+            HttpError::UnsupportedTransfer(enc) => {
+                write!(f, "transfer-encoding {enc:?} not supported")
+            }
+            HttpError::Eof => write!(f, "connection closed"),
+            HttpError::Timeout => write!(f, "read timed out"),
+            HttpError::Io(e) => write!(f, "i/o failure: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// A parsed request: method, target path, lower-cased headers, raw body.
+#[derive(Debug)]
+pub struct Request {
+    /// Upper-case method token (`GET`, `POST`, ...).
+    pub method: String,
+    /// Request target as sent (path + optional query).
+    pub target: String,
+    /// Headers with lower-cased names, in arrival order.
+    pub headers: Vec<(String, String)>,
+    /// Raw body bytes (empty when no `Content-Length`).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup; returns the first match.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Path portion of the target (query string stripped).
+    pub fn path(&self) -> &str {
+        self.target.split('?').next().unwrap_or(&self.target)
+    }
+
+    /// Whether the client asked to close the connection after this
+    /// exchange (`Connection: close`).
+    pub fn wants_close(&self) -> bool {
+        self.header("connection")
+            .is_some_and(|v| v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// Limits applied while framing a single request.
+#[derive(Debug, Clone, Copy)]
+pub struct Limits {
+    /// Maximum request-head bytes (request line + headers).
+    pub max_head: usize,
+    /// Maximum declared body bytes.
+    pub max_body: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits { max_head: DEFAULT_MAX_HEAD, max_body: 1 << 20 }
+    }
+}
+
+/// Incremental connection reader. Owns the leftover buffer between
+/// keep-alive requests.
+pub struct HttpConn<S> {
+    stream: S,
+    buf: Vec<u8>,
+    limits: Limits,
+}
+
+impl<S: Read> HttpConn<S> {
+    /// Wraps a stream with the given limits.
+    pub fn new(stream: S, limits: Limits) -> Self {
+        HttpConn { stream, buf: Vec::with_capacity(1024), limits }
+    }
+
+    /// Reads and parses the next request off the connection.
+    pub fn next_request(&mut self) -> Result<Request, HttpError> {
+        let head_end = self.read_head()?;
+        let head_bytes = self.buf[..head_end].to_vec();
+        // `head_end` includes the blank line; drop it from the buffer.
+        self.buf.drain(..head_end + 4);
+        let head = std::str::from_utf8(&head_bytes)
+            .map_err(|_| HttpError::BadRequest("head is not valid UTF-8".to_string()))?;
+        let mut lines = head.split("\r\n");
+        let request_line = lines
+            .next()
+            .ok_or_else(|| HttpError::BadRequest("empty head".to_string()))?;
+        let (method, target) = parse_request_line(request_line)?;
+        let mut headers = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let (name, value) = line.split_once(':').ok_or_else(|| {
+                HttpError::BadRequest(format!("header line without ':': {line:?}"))
+            })?;
+            if name.is_empty() || name.contains(' ') {
+                return Err(HttpError::BadRequest(format!("invalid header name {name:?}")));
+            }
+            headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+        }
+        let request = Request { method, target, headers, body: Vec::new() };
+        let body = self.read_body(&request)?;
+        Ok(Request { body, ..request })
+    }
+
+    /// Reads until the head terminator, returning the offset of `\r\n\r\n`.
+    fn read_head(&mut self) -> Result<usize, HttpError> {
+        let mut scanned = 0usize;
+        loop {
+            if let Some(pos) = find_terminator(&self.buf, scanned.saturating_sub(3)) {
+                if pos > self.limits.max_head {
+                    return Err(HttpError::HeadersTooLarge(self.limits.max_head));
+                }
+                return Ok(pos);
+            }
+            scanned = self.buf.len();
+            if scanned > self.limits.max_head {
+                return Err(HttpError::HeadersTooLarge(self.limits.max_head));
+            }
+            let at_start = self.buf.is_empty();
+            self.fill(at_start)?;
+        }
+    }
+
+    fn read_body(&mut self, request: &Request) -> Result<Vec<u8>, HttpError> {
+        if let Some(enc) = request.header("transfer-encoding") {
+            return Err(HttpError::UnsupportedTransfer(enc.to_string()));
+        }
+        let declared = match request.header("content-length") {
+            Some(v) => v
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| HttpError::BadRequest(format!("bad Content-Length {v:?}")))?,
+            None => {
+                if request.method == "POST" || request.method == "PUT" {
+                    return Err(HttpError::LengthRequired);
+                }
+                return Ok(Vec::new());
+            }
+        };
+        if declared > self.limits.max_body {
+            return Err(HttpError::BodyTooLarge { declared, max: self.limits.max_body });
+        }
+        while self.buf.len() < declared {
+            self.fill(false)?;
+        }
+        let body: Vec<u8> = self.buf.drain(..declared).collect();
+        Ok(body)
+    }
+
+    /// Pulls more bytes from the stream into the buffer.
+    ///
+    /// `idle` marks a read happening between requests, where a clean
+    /// close is Eof rather than a truncation error.
+    fn fill(&mut self, idle: bool) -> Result<(), HttpError> {
+        let mut chunk = [0u8; 4096];
+        match self.stream.read(&mut chunk) {
+            Ok(0) => {
+                if idle {
+                    Err(HttpError::Eof)
+                } else {
+                    Err(HttpError::BadRequest("connection closed mid-request".to_string()))
+                }
+            }
+            Ok(n) => {
+                self.buf.extend_from_slice(&chunk[..n]);
+                Ok(())
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // An idle keep-alive connection timing out is a normal
+                // close, not a client error; mid-request stalls are 408s.
+                if idle {
+                    Err(HttpError::Eof)
+                } else {
+                    Err(HttpError::Timeout)
+                }
+            }
+            Err(e) => Err(HttpError::Io(e)),
+        }
+    }
+}
+
+fn find_terminator(buf: &[u8], from: usize) -> Option<usize> {
+    buf.get(from..)
+        .and_then(|tail| tail.windows(4).position(|w| w == b"\r\n\r\n"))
+        .map(|p| p + from)
+}
+
+fn parse_request_line(line: &str) -> Result<(String, String), HttpError> {
+    let mut parts = line.split(' ');
+    let method = parts.next().unwrap_or_default();
+    let target = parts.next().unwrap_or_default();
+    let version = parts.next().unwrap_or_default();
+    if parts.next().is_some() || method.is_empty() || target.is_empty() {
+        return Err(HttpError::BadRequest(format!("bad request line {line:?}")));
+    }
+    if !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(HttpError::BadRequest(format!("bad method {method:?}")));
+    }
+    if !target.starts_with('/') {
+        return Err(HttpError::BadRequest(format!("bad target {target:?}")));
+    }
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(HttpError::BadRequest(format!("unsupported version {version:?}")));
+    }
+    Ok((method.to_string(), target.to_string()))
+}
+
+/// An outgoing response.
+#[derive(Debug)]
+pub struct Response {
+    /// HTTP status code.
+    pub status: u16,
+    /// Extra headers beyond the auto-emitted ones.
+    pub headers: Vec<(String, String)>,
+    /// Response body bytes.
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// A JSON response with the given status.
+    pub fn json(status: u16, body: String) -> Self {
+        Response {
+            status,
+            headers: vec![("Content-Type".to_string(), "application/json".to_string())],
+            body: body.into_bytes(),
+        }
+    }
+
+    /// A plain-text response with the given status.
+    pub fn text(status: u16, body: String) -> Self {
+        Response {
+            status,
+            headers: vec![(
+                "Content-Type".to_string(),
+                "text/plain; version=0.0.4; charset=utf-8".to_string(),
+            )],
+            body: body.into_bytes(),
+        }
+    }
+
+    /// Adds a header, consuming and returning self for chaining.
+    pub fn with_header(mut self, name: &str, value: String) -> Self {
+        self.headers.push((name.to_string(), value));
+        self
+    }
+
+    /// Serializes the response onto `w`. `close` controls the
+    /// `Connection` header.
+    pub fn write_to<W: std::io::Write>(&self, w: &mut W, close: bool) -> std::io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Length: {}\r\n",
+            self.status,
+            status_reason(self.status),
+            self.body.len()
+        );
+        for (name, value) in &self.headers {
+            head.push_str(name);
+            head.push_str(": ");
+            head.push_str(value);
+            head.push_str("\r\n");
+        }
+        if close {
+            head.push_str("Connection: close\r\n\r\n");
+        } else {
+            head.push_str("Connection: keep-alive\r\n\r\n");
+        }
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Reason phrase for the status codes this server emits.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        401 => "Unauthorized",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Reads one complete HTTP/1.1 response off `stream`.
+///
+/// A small client-side helper shared by the loopback tests and the load
+/// generator; only `Content-Length`-framed responses are supported, which
+/// is all this server emits.
+pub fn read_response<S: Read>(
+    stream: &mut S,
+) -> std::io::Result<(u16, Vec<(String, String)>, Vec<u8>)> {
+    let mut buf = Vec::with_capacity(1024);
+    let head_end = loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos;
+        }
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed before response head",
+            ));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).to_string();
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or_default();
+    let status = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("bad status line {status_line:?}"),
+            )
+        })?;
+    let mut headers = Vec::new();
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            let name = name.to_ascii_lowercase();
+            let value = value.trim().to_string();
+            if name == "content-length" {
+                content_length = value.parse().unwrap_or(0);
+            }
+            headers.push((name, value));
+        }
+    }
+    let mut body: Vec<u8> = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed mid-body",
+            ));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok((status, headers, body))
+}
+
+/// Suggested socket read timeout for serving connections.
+pub const DEFAULT_READ_TIMEOUT: Duration = Duration::from_secs(5);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn conn(raw: &str) -> HttpConn<Cursor<Vec<u8>>> {
+        HttpConn::new(Cursor::new(raw.as_bytes().to_vec()), Limits::default())
+    }
+
+    #[test]
+    #[allow(clippy::unwrap_used)]
+    fn parses_post_with_body() {
+        let mut c = conn("POST /v1/infer HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello");
+        let req = c.next_request().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path(), "/v1/infer");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.body, b"hello");
+    }
+
+    #[test]
+    #[allow(clippy::unwrap_used)]
+    fn keep_alive_parses_pipelined_requests() {
+        let mut c = conn(
+            "GET /healthz HTTP/1.1\r\n\r\nGET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n",
+        );
+        let first = c.next_request().unwrap();
+        assert_eq!(first.path(), "/healthz");
+        assert!(!first.wants_close());
+        let second = c.next_request().unwrap();
+        assert_eq!(second.path(), "/metrics");
+        assert!(second.wants_close());
+        assert!(matches!(c.next_request(), Err(HttpError::Eof)));
+    }
+
+    #[test]
+    fn rejects_malformed_request_lines() {
+        for raw in [
+            "GARBAGE\r\n\r\n",
+            "GET\r\n\r\n",
+            "get /x HTTP/1.1\r\n\r\n",
+            "GET x HTTP/1.1\r\n\r\n",
+            "GET /x HTTP/2.0\r\n\r\n",
+            "GET /x HTTP/1.1 extra\r\n\r\n",
+        ] {
+            let err = conn(raw).next_request();
+            assert!(
+                matches!(err, Err(HttpError::BadRequest(_))),
+                "expected BadRequest for {raw:?}, got {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_header_without_colon() {
+        let err = conn("GET / HTTP/1.1\r\nno colon here\r\n\r\n").next_request();
+        assert!(matches!(err, Err(HttpError::BadRequest(_))));
+    }
+
+    #[test]
+    fn rejects_oversized_declared_body_before_reading() {
+        let mut c = HttpConn::new(
+            Cursor::new(b"POST / HTTP/1.1\r\nContent-Length: 999999\r\n\r\n".to_vec()),
+            Limits { max_head: DEFAULT_MAX_HEAD, max_body: 1024 },
+        );
+        match c.next_request() {
+            Err(HttpError::BodyTooLarge { declared, max }) => {
+                assert_eq!(declared, 999_999);
+                assert_eq!(max, 1024);
+            }
+            other => panic!("expected BodyTooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_head() {
+        let huge = format!("GET / HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(64 * 1024));
+        let mut c = HttpConn::new(
+            Cursor::new(huge.into_bytes()),
+            Limits { max_head: 1024, max_body: 1024 },
+        );
+        assert!(matches!(c.next_request(), Err(HttpError::HeadersTooLarge(_))));
+    }
+
+    #[test]
+    fn post_without_length_is_length_required() {
+        let err = conn("POST /v1/infer HTTP/1.1\r\n\r\n").next_request();
+        assert!(matches!(err, Err(HttpError::LengthRequired)));
+    }
+
+    #[test]
+    fn transfer_encoding_is_unsupported() {
+        let err = conn("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n").next_request();
+        assert!(matches!(err, Err(HttpError::UnsupportedTransfer(_))));
+    }
+
+    #[test]
+    #[allow(clippy::unwrap_used)]
+    fn response_round_trips_through_client_reader() {
+        let resp = Response::json(200, "{\"ok\":true}".to_string())
+            .with_header("Retry-After", "2".to_string());
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire, true).unwrap();
+        let (status, headers, body) = read_response(&mut Cursor::new(wire)).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"{\"ok\":true}");
+        assert!(headers.iter().any(|(k, v)| k == "retry-after" && v == "2"));
+        assert!(headers.iter().any(|(k, v)| k == "connection" && v == "close"));
+    }
+}

@@ -1,0 +1,400 @@
+//! Minimal JSON parser and renderer for the serving wire format.
+//!
+//! The container is offline, so the HTTP front door cannot pull in serde.
+//! This module implements the small JSON subset the request path needs:
+//! a recursive-descent parser with a hard depth limit (malicious nesting
+//! must not blow the connection thread's stack) and a renderer whose f32
+//! output round-trips bit-exactly through Rust's shortest-representation
+//! `Display` (non-finite values render as `null`, since `NaN`/`inf` are
+//! not valid JSON).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Maximum nesting depth accepted by [`parse`]. Requests deeper than this
+/// are rejected as malformed rather than risking stack exhaustion.
+pub const MAX_DEPTH: usize = 32;
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any JSON number, held as f64 (the wire format only carries f32s).
+    Num(f64),
+    /// A string literal (escapes already resolved).
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object; key order is normalized (sorted) since the wire format
+    /// never depends on ordering.
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    /// Looks up `key` if this value is an object.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(map) => map.get(key),
+            _ => None,
+        }
+    }
+
+    /// Interprets this value as a dense `f32` vector.
+    ///
+    /// Accepts an array of finite numbers; anything else is an error
+    /// naming what was found, so the server can surface a typed 400.
+    pub fn as_f32_vec(&self) -> Result<Vec<f32>, String> {
+        let items = match self {
+            Json::Arr(items) => items,
+            other => return Err(format!("expected an array of numbers, got {}", other.kind())),
+        };
+        let mut out = Vec::with_capacity(items.len());
+        for (i, item) in items.iter().enumerate() {
+            match item {
+                Json::Num(n) if n.is_finite() => out.push(*n as f32),
+                Json::Num(_) => return Err(format!("element {i} is not finite")),
+                other => return Err(format!("element {i} is {}, expected a number", other.kind())),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Short human-readable name for this value's type, used in errors.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Json::Null => "null",
+            Json::Bool(_) => "a bool",
+            Json::Num(_) => "a number",
+            Json::Str(_) => "a string",
+            Json::Arr(_) => "an array",
+            Json::Obj(_) => "an object",
+        }
+    }
+}
+
+/// Parses a complete JSON document; trailing non-whitespace is an error.
+pub fn parse(text: &str) -> Result<Json, String> {
+    let bytes = text.as_bytes();
+    let mut pos = 0usize;
+    let value = parse_value(bytes, &mut pos, 0)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        return Err(format!("trailing data at byte {pos}"));
+    }
+    Ok(value)
+}
+
+/// Renders an f32 slice as a JSON array.
+///
+/// Finite values use `Display`, Rust's shortest round-trip representation,
+/// so `render_f32s -> parse -> as_f32_vec` is bit-exact. Non-finite values
+/// become `null`.
+pub fn render_f32s(values: &[f32]) -> String {
+    let mut out = String::with_capacity(values.len() * 8 + 2);
+    out.push('[');
+    for (i, v) in values.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if v.is_finite() {
+            // Infallible: writing to a String cannot fail.
+            let _ = write!(out, "{v}");
+        } else {
+            out.push_str("null");
+        }
+    }
+    out.push(']');
+    out
+}
+
+/// Escapes a string for embedding in a JSON document (adds the quotes).
+pub fn escape_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                // Infallible String write.
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len() && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(bytes: &[u8], pos: &mut usize, depth: usize) -> Result<Json, String> {
+    if depth > MAX_DEPTH {
+        return Err(format!("nesting deeper than {MAX_DEPTH} levels"));
+    }
+    skip_ws(bytes, pos);
+    match bytes.get(*pos) {
+        None => Err("unexpected end of input".to_string()),
+        Some(b'n') => parse_lit(bytes, pos, "null", Json::Null),
+        Some(b't') => parse_lit(bytes, pos, "true", Json::Bool(true)),
+        Some(b'f') => parse_lit(bytes, pos, "false", Json::Bool(false)),
+        Some(b'"') => parse_string(bytes, pos).map(Json::Str),
+        Some(b'[') => parse_array(bytes, pos, depth),
+        Some(b'{') => parse_object(bytes, pos, depth),
+        Some(b'-' | b'0'..=b'9') => parse_number(bytes, pos),
+        Some(&c) => Err(format!("unexpected byte {:?} at {}", c as char, *pos)),
+    }
+}
+
+fn parse_lit(bytes: &[u8], pos: &mut usize, lit: &str, value: Json) -> Result<Json, String> {
+    if bytes[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(value)
+    } else {
+        Err(format!("invalid literal at byte {}", *pos))
+    }
+}
+
+fn parse_number(bytes: &[u8], pos: &mut usize) -> Result<Json, String> {
+    let start = *pos;
+    if bytes.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    while *pos < bytes.len()
+        && matches!(bytes[*pos], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+    {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&bytes[start..*pos])
+        .map_err(|_| format!("invalid number encoding at byte {start}"))?;
+    text.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("invalid number {text:?} at byte {start}"))
+}
+
+fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String, String> {
+    debug_assert_eq!(bytes.get(*pos), Some(&b'"'));
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        let c = *bytes.get(*pos).ok_or_else(|| "unterminated string".to_string())?;
+        *pos += 1;
+        match c {
+            b'"' => return Ok(out),
+            b'\\' => {
+                let esc = *bytes.get(*pos).ok_or_else(|| "unterminated escape".to_string())?;
+                *pos += 1;
+                match esc {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'u' => {
+                        let hi = parse_hex4(bytes, pos)?;
+                        let code = if (0xd800..0xdc00).contains(&hi) {
+                            // Surrogate pair: expect \uXXXX low half next.
+                            if bytes.get(*pos) == Some(&b'\\') && bytes.get(*pos + 1) == Some(&b'u')
+                            {
+                                *pos += 2;
+                                let lo = parse_hex4(bytes, pos)?;
+                                if !(0xdc00..0xe000).contains(&lo) {
+                                    return Err("invalid low surrogate".to_string());
+                                }
+                                0x10000 + ((hi - 0xd800) << 10) + (lo - 0xdc00)
+                            } else {
+                                return Err("unpaired surrogate".to_string());
+                            }
+                        } else if (0xdc00..0xe000).contains(&hi) {
+                            return Err("unpaired low surrogate".to_string());
+                        } else {
+                            hi
+                        };
+                        out.push(
+                            char::from_u32(code)
+                                .ok_or_else(|| format!("invalid code point {code:#x}"))?,
+                        );
+                    }
+                    other => return Err(format!("invalid escape \\{}", other as char)),
+                }
+            }
+            c if c < 0x20 => return Err("unescaped control byte in string".to_string()),
+            c if c < 0x80 => out.push(c as char),
+            _ => {
+                // Multi-byte UTF-8: re-decode from the byte before `pos`.
+                let start = *pos - 1;
+                let len = utf8_len(c)?;
+                let end = start + len;
+                let chunk =
+                    bytes.get(start..end).ok_or_else(|| "truncated UTF-8 sequence".to_string())?;
+                let s = std::str::from_utf8(chunk)
+                    .map_err(|_| format!("invalid UTF-8 at byte {start}"))?;
+                out.push_str(s);
+                *pos = end;
+            }
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> Result<usize, String> {
+    match first {
+        0xc0..=0xdf => Ok(2),
+        0xe0..=0xef => Ok(3),
+        0xf0..=0xf7 => Ok(4),
+        _ => Err("invalid UTF-8 lead byte".to_string()),
+    }
+}
+
+fn parse_hex4(bytes: &[u8], pos: &mut usize) -> Result<u32, String> {
+    let chunk = bytes.get(*pos..*pos + 4).ok_or_else(|| "truncated \\u escape".to_string())?;
+    let text = std::str::from_utf8(chunk).map_err(|_| "invalid \\u escape".to_string())?;
+    let value = u32::from_str_radix(text, 16).map_err(|_| format!("invalid \\u{text}"))?;
+    *pos += 4;
+    Ok(value)
+}
+
+fn parse_array(bytes: &[u8], pos: &mut usize, depth: usize) -> Result<Json, String> {
+    *pos += 1; // consume '['
+    let mut items = Vec::new();
+    skip_ws(bytes, pos);
+    if bytes.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(bytes, pos, depth + 1)?);
+        skip_ws(bytes, pos);
+        match bytes.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            _ => return Err(format!("expected ',' or ']' at byte {}", *pos)),
+        }
+    }
+}
+
+fn parse_object(bytes: &[u8], pos: &mut usize, depth: usize) -> Result<Json, String> {
+    *pos += 1; // consume '{'
+    let mut map = BTreeMap::new();
+    skip_ws(bytes, pos);
+    if bytes.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(Json::Obj(map));
+    }
+    loop {
+        skip_ws(bytes, pos);
+        if bytes.get(*pos) != Some(&b'"') {
+            return Err(format!("expected object key at byte {}", *pos));
+        }
+        let key = parse_string(bytes, pos)?;
+        skip_ws(bytes, pos);
+        if bytes.get(*pos) != Some(&b':') {
+            return Err(format!("expected ':' at byte {}", *pos));
+        }
+        *pos += 1;
+        let value = parse_value(bytes, pos, depth + 1)?;
+        map.insert(key, value);
+        skip_ws(bytes, pos);
+        match bytes.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(map));
+            }
+            _ => return Err(format!("expected ',' or '}}' at byte {}", *pos)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[allow(clippy::unwrap_used)]
+    fn parses_scalars_and_containers() {
+        assert_eq!(parse("null").unwrap(), Json::Null);
+        assert_eq!(parse(" true ").unwrap(), Json::Bool(true));
+        assert_eq!(parse("-1.5e2").unwrap(), Json::Num(-150.0));
+        assert_eq!(parse("\"a\\nb\"").unwrap(), Json::Str("a\nb".into()));
+        let arr = parse("[1, 2, 3]").unwrap();
+        assert_eq!(arr.as_f32_vec().unwrap(), vec![1.0, 2.0, 3.0]);
+        let obj = parse("{\"image\": [0.5], \"id\": \"x\"}").unwrap();
+        assert_eq!(obj.get("id"), Some(&Json::Str("x".into())));
+    }
+
+    #[test]
+    #[allow(clippy::unwrap_used)]
+    fn handles_unicode_escapes() {
+        assert_eq!(parse("\"\\u00e9\"").unwrap(), Json::Str("é".into()));
+        // Surrogate pair for U+1F600.
+        assert_eq!(
+            parse("\"\\ud83d\\ude00\"").unwrap(),
+            Json::Str("\u{1f600}".into())
+        );
+        assert_eq!(parse("\"héllo\"").unwrap(), Json::Str("héllo".into()));
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in [
+            "",
+            "{",
+            "[1,",
+            "\"open",
+            "nul",
+            "{\"a\" 1}",
+            "[1] trailing",
+            "\"\\ud800\"",
+            "01a",
+        ] {
+            assert!(parse(bad).is_err(), "expected parse error for {bad:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_pathological_nesting() {
+        let deep = "[".repeat(MAX_DEPTH + 2) + &"]".repeat(MAX_DEPTH + 2);
+        assert!(parse(&deep).is_err());
+    }
+
+    #[test]
+    #[allow(clippy::unwrap_used)]
+    fn f32_round_trip_is_bit_exact() {
+        let values = vec![0.1f32, -3.75, 1.0e-20, f32::MAX, 0.0, -0.0, f32::NAN];
+        let rendered = render_f32s(&values);
+        let parsed = parse(&rendered).unwrap();
+        let items = match parsed {
+            Json::Arr(items) => items,
+            other => panic!("expected array, got {other:?}"),
+        };
+        for (orig, got) in values.iter().zip(items.iter()) {
+            match got {
+                Json::Num(n) => assert_eq!(orig.to_bits(), (*n as f32).to_bits()),
+                Json::Null => assert!(!orig.is_finite()),
+                other => panic!("unexpected element {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn escape_str_covers_specials() {
+        assert_eq!(escape_str("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+        assert_eq!(escape_str("\u{1}"), "\"\\u0001\"");
+    }
+}

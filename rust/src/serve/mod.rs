@@ -1,0 +1,39 @@
+//! The network front door: a hand-rolled HTTP/1.1 server over
+//! [`crate::engine::EnginePool`].
+//!
+//! The deployment target is an offline container, so the whole stack —
+//! framing, JSON, auth, quotas, metrics exposition — is built on
+//! `std::net` with no async runtime. Each accepted connection gets a
+//! worker thread running a keep-alive request loop; a single drainer
+//! thread demultiplexes the pool's globally-ordered ticket stream back
+//! to streaming clients.
+//!
+//! Endpoints:
+//!
+//! | Endpoint        | Method | Purpose                                          |
+//! |-----------------|--------|--------------------------------------------------|
+//! | `/v1/infer`     | POST   | One image in, logits + argmax class out.         |
+//! | `/v1/batch`     | POST   | Many images via pool submit/drain, order kept.   |
+//! | `/metrics`      | GET    | Prometheus text exposition of pool + HTTP stats. |
+//! | `/healthz`      | GET    | Shard health and drain state.                    |
+//!
+//! Multi-tenancy: [`TenantRegistry`] maps API keys to tenant names that
+//! double as pool placement keys (shard affinity) and to token-bucket
+//! quotas. Quota exhaustion and pool admission sheds both answer `429`
+//! with a `Retry-After` header; client deadlines surface as `408` via
+//! [`crate::engine::EngineError::Timeout`]; malformed or oversized
+//! requests get typed `4xx` rejects from the bounded incremental parser
+//! in [`http`] — never a panic.
+
+#![deny(clippy::unwrap_used)]
+
+pub mod http;
+pub mod json;
+pub mod prometheus;
+pub mod server;
+pub mod tenant;
+
+pub use http::{read_response, HttpConn, HttpError, Limits, Request, Response};
+pub use prometheus::HttpSnapshot;
+pub use server::{ServeConfig, Server};
+pub use tenant::{retry_after_secs, Identity, Tenant, TenantRegistry};

@@ -1,0 +1,188 @@
+//! Prometheus text exposition (version 0.0.4) for pool and HTTP metrics.
+//!
+//! Hand-rolled like the rest of the wire layer: the renderer walks a
+//! [`PoolMetrics`] snapshot plus the server's own HTTP counters and emits
+//! `# HELP`/`# TYPE` annotated families. Counter semantics hold because
+//! every source counter is monotone for the life of the process.
+
+use std::fmt::Write as _;
+
+use crate::engine::PoolMetrics;
+
+/// Server-side HTTP counters, sampled at scrape time.
+#[derive(Debug, Clone, Default)]
+pub struct HttpSnapshot {
+    /// Connections accepted since startup.
+    pub connections: u64,
+    /// Responses emitted, by status code (sorted by code).
+    pub responses: Vec<(u16, u64)>,
+    /// Seconds since the server started listening.
+    pub uptime_secs: f64,
+}
+
+/// Escapes a label value per the exposition format.
+fn escape_label(value: &str) -> String {
+    let mut out = String::with_capacity(value.len());
+    for c in value.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn family(out: &mut String, name: &str, kind: &str, help: &str) {
+    // Writing to a String is infallible.
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+/// Renders the full exposition document.
+pub fn render(m: &PoolMetrics, http: Option<&HttpSnapshot>) -> String {
+    let mut out = String::with_capacity(4096);
+
+    family(&mut out, "scnn_pool_shards", "gauge", "Total shards in the pool.");
+    let _ = writeln!(out, "scnn_pool_shards {}", m.shards);
+    family(&mut out, "scnn_pool_healthy_shards", "gauge", "Shards currently healthy.");
+    let _ = writeln!(out, "scnn_pool_healthy_shards {}", m.healthy);
+    family(&mut out, "scnn_pool_uptime_seconds", "gauge", "Seconds since the pool opened.");
+    let _ = writeln!(out, "scnn_pool_uptime_seconds {:.3}", m.wall.as_secs_f64());
+
+    let counters: [(&str, usize, &str); 8] = [
+        ("scnn_requests_total", m.requests, "Requests completed successfully."),
+        ("scnn_requests_rejected_total", m.rejected, "Requests rejected as malformed."),
+        ("scnn_requests_shed_total", m.shed, "Requests shed by admission control."),
+        ("scnn_requests_rerouted_total", m.rerouted, "Requests rerouted off dying shards."),
+        ("scnn_requests_failed_total", m.failed, "Requests failed in a backend."),
+        ("scnn_batches_total", m.batches, "Coalesced batches executed."),
+        ("scnn_timeouts_total", m.timeouts, "Client deadline misses."),
+        ("scnn_degrade_events_total", m.degrade_events, "Precision degrade events."),
+    ];
+    for (name, value, help) in counters {
+        family(&mut out, name, "counter", help);
+        let _ = writeln!(out, "{name} {value}");
+    }
+
+    family(
+        &mut out,
+        "scnn_request_latency_microseconds",
+        "summary",
+        "Per-request latency quantiles, merged over shards.",
+    );
+    for (q, p) in [("0.5", 50.0), ("0.99", 99.0), ("0.999", 99.9)] {
+        let _ = writeln!(
+            out,
+            "scnn_request_latency_microseconds{{quantile=\"{q}\"}} {}",
+            m.latency_percentile_us(p)
+        );
+    }
+    let _ = writeln!(out, "scnn_request_latency_microseconds_count {}", m.serve.count());
+
+    family(
+        &mut out,
+        "scnn_request_latency_us_bucket",
+        "histogram",
+        "Log2 latency histogram, merged over shards.",
+    );
+    let mut cumulative = 0u64;
+    for (_, hi, count) in m.histogram.nonzero_buckets() {
+        cumulative += count;
+        let _ = writeln!(out, "scnn_request_latency_us_bucket{{le=\"{hi}\"}} {cumulative}");
+    }
+    let _ = writeln!(out, "scnn_request_latency_us_bucket{{le=\"+Inf\"}} {cumulative}");
+    let _ = writeln!(out, "scnn_request_latency_us_count {cumulative}");
+
+    if !m.tenants.is_empty() {
+        let tenant_families: [(&str, &str); 4] = [
+            ("scnn_tenant_requests_total", "Requests answered per tenant."),
+            ("scnn_tenant_quota_rejected_total", "Requests bounced by tenant quota."),
+            ("scnn_tenant_shed_total", "Requests shed by admission control per tenant."),
+            ("scnn_tenant_failed_total", "Requests failed per tenant."),
+        ];
+        for (i, (name, help)) in tenant_families.iter().enumerate() {
+            family(&mut out, name, "counter", help);
+            for t in &m.tenants {
+                let value = match i {
+                    0 => t.requests,
+                    1 => t.quota_rejected,
+                    2 => t.shed,
+                    _ => t.failed,
+                };
+                let _ =
+                    writeln!(out, "{name}{{tenant=\"{}\"}} {value}", escape_label(&t.tenant));
+            }
+        }
+    }
+
+    if let Some(http) = http {
+        family(&mut out, "scnn_http_connections_total", "counter", "TCP connections accepted.");
+        let _ = writeln!(out, "scnn_http_connections_total {}", http.connections);
+        family(&mut out, "scnn_http_responses_total", "counter", "HTTP responses by status.");
+        for (code, count) in &http.responses {
+            let _ = writeln!(out, "scnn_http_responses_total{{code=\"{code}\"}} {count}");
+        }
+        family(&mut out, "scnn_http_uptime_seconds", "gauge", "Seconds since listen started.");
+        let _ = writeln!(out, "scnn_http_uptime_seconds {:.3}", http.uptime_secs);
+    }
+
+    out
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+    use crate::engine::{PoolMetrics, TenantStats};
+    use std::time::Duration;
+
+    fn sample() -> PoolMetrics {
+        let mut m = PoolMetrics::aggregate(Vec::new(), 2, 3, 1, Duration::from_millis(1500));
+        m.shards = 2;
+        m.tenants = vec![TenantStats {
+            tenant: "a\"b".to_string(),
+            requests: 7,
+            quota_rejected: 2,
+            shed: 1,
+            failed: 0,
+        }];
+        m
+    }
+
+    #[test]
+    fn renders_core_families_and_labels() {
+        let http = HttpSnapshot {
+            connections: 5,
+            responses: vec![(200, 4), (429, 1)],
+            uptime_secs: 1.25,
+        };
+        let text = render(&sample(), Some(&http));
+        assert!(text.contains("# TYPE scnn_pool_shards gauge"));
+        assert!(text.contains("scnn_pool_shards 2"));
+        assert!(text.contains("scnn_pool_healthy_shards 2"));
+        assert!(text.contains("scnn_requests_shed_total 3"));
+        assert!(text.contains("scnn_requests_rerouted_total 1"));
+        assert!(text.contains("scnn_tenant_requests_total{tenant=\"a\\\"b\"} 7"));
+        assert!(text.contains("scnn_tenant_quota_rejected_total{tenant=\"a\\\"b\"} 2"));
+        assert!(text.contains("scnn_http_responses_total{code=\"429\"} 1"));
+        assert!(text.contains("scnn_request_latency_us_bucket{le=\"+Inf\"} 0"));
+        // Every non-comment line is `name[{labels}] value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+            assert!(parts.next().is_some(), "no metric name in {line:?}");
+        }
+    }
+
+    #[test]
+    fn omits_tenant_and_http_families_when_absent() {
+        let mut m = sample();
+        m.tenants.clear();
+        let text = render(&m, None);
+        assert!(!text.contains("scnn_tenant_"));
+        assert!(!text.contains("scnn_http_"));
+    }
+}

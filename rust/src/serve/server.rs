@@ -1,0 +1,574 @@
+//! The listener, connection workers, router, and result-drain hub.
+//!
+//! One thread blocks on `accept`; each connection gets its own worker
+//! thread running a keep-alive request loop. The accept path never
+//! sleeps and never touches the pool, so a shed or throttled tenant can
+//! only ever stall its own connection — backoff/retry for pool admission
+//! rejects runs inside the connection worker that owns the request.
+//!
+//! Streaming (`/v1/batch`) rides the pool's submit/drain queue. Pool
+//! tickets are a single global FIFO across all submitters, so a lone
+//! drainer thread pulls results and a hub demultiplexes them back to the
+//! waiting connection workers by ticket sequence number.
+
+use std::collections::{BTreeMap, HashMap};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::engine::{lock_recover, EngineError, EnginePool, TenantOutcome};
+use crate::serve::http::{HttpConn, HttpError, Limits, Request, Response};
+use crate::serve::json::{self, Json};
+use crate::serve::prometheus::{self, HttpSnapshot};
+use crate::serve::tenant::{retry_after_secs, Identity, TenantRegistry};
+
+/// Tunables for the serving front door.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Maximum request-body bytes (413 beyond this).
+    pub max_body: usize,
+    /// Maximum request-head bytes (431 beyond this).
+    pub max_head: usize,
+    /// Socket read timeout; idle keep-alive connections close after it.
+    pub read_timeout: Duration,
+    /// Upper bound on a single admission-reject backoff sleep.
+    pub backoff_cap: Duration,
+    /// Total time a `/v1/batch` worker spends retrying shed submits
+    /// before giving up with 429.
+    pub batch_retry_budget: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_body: 1 << 20,
+            max_head: 16 * 1024,
+            read_timeout: Duration::from_secs(5),
+            backoff_cap: Duration::from_millis(5),
+            batch_retry_budget: Duration::from_millis(250),
+        }
+    }
+}
+
+/// Result type flowing from the drainer back to batch waiters.
+type DrainResult = std::result::Result<Vec<f32>, EngineError>;
+
+/// Demultiplexes globally-FIFO pool drain results back to per-request
+/// waiters by ticket sequence number.
+struct Hub {
+    state: Mutex<HubState>,
+}
+
+struct HubState {
+    waiters: HashMap<u64, mpsc::Sender<DrainResult>>,
+    /// Results drained before their waiter registered (submit returns
+    /// the ticket *after* the drainer may have already pulled it).
+    orphans: HashMap<u64, DrainResult>,
+}
+
+/// What a batch worker holds while its ticket is in flight.
+enum Waiter {
+    /// The drainer beat us to registration; the result is already here.
+    Ready(DrainResult),
+    /// Result will arrive on this channel.
+    Pending(mpsc::Receiver<DrainResult>),
+}
+
+impl Hub {
+    fn new() -> Self {
+        Hub { state: Mutex::new(HubState { waiters: HashMap::new(), orphans: HashMap::new() }) }
+    }
+
+    fn register(&self, seq: u64) -> Waiter {
+        let mut st = lock_recover(&self.state);
+        if let Some(res) = st.orphans.remove(&seq) {
+            return Waiter::Ready(res);
+        }
+        let (tx, rx) = mpsc::channel();
+        st.waiters.insert(seq, tx);
+        Waiter::Pending(rx)
+    }
+
+    fn deliver(&self, seq: u64, res: DrainResult) {
+        let mut st = lock_recover(&self.state);
+        match st.waiters.remove(&seq) {
+            // A send error means the waiter gave up; drop the result.
+            Some(tx) => {
+                let _ = tx.send(res);
+            }
+            None => {
+                st.orphans.insert(seq, res);
+            }
+        }
+    }
+}
+
+impl Waiter {
+    fn claim(self, timeout: Duration) -> Option<DrainResult> {
+        match self {
+            Waiter::Ready(res) => Some(res),
+            Waiter::Pending(rx) => rx.recv_timeout(timeout).ok(),
+        }
+    }
+}
+
+struct Inner {
+    pool: Arc<EnginePool>,
+    registry: TenantRegistry,
+    cfg: ServeConfig,
+    stop: AtomicBool,
+    addr: std::net::SocketAddr,
+    started: Instant,
+    connections: AtomicU64,
+    active: AtomicUsize,
+    responses: Mutex<BTreeMap<u16, u64>>,
+    hub: Hub,
+}
+
+/// Decrements the active-connection gauge even if the worker panics.
+struct ActiveGuard<'a>(&'a AtomicUsize);
+
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Release);
+    }
+}
+
+/// A running HTTP front door over an [`EnginePool`].
+pub struct Server {
+    inner: Arc<Inner>,
+    accept: Mutex<Option<std::thread::JoinHandle<()>>>,
+    drainer: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Server {
+    /// Binds `listen` (e.g. `127.0.0.1:0` for an ephemeral port) and
+    /// starts the accept and drainer threads.
+    pub fn start(
+        pool: Arc<EnginePool>,
+        registry: TenantRegistry,
+        listen: &str,
+        cfg: ServeConfig,
+    ) -> Result<Server> {
+        let listener = TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let inner = Arc::new(Inner {
+            pool,
+            registry,
+            cfg,
+            stop: AtomicBool::new(false),
+            addr,
+            started: Instant::now(),
+            connections: AtomicU64::new(0),
+            active: AtomicUsize::new(0),
+            responses: Mutex::new(BTreeMap::new()),
+            hub: Hub::new(),
+        });
+        let accept_inner = Arc::clone(&inner);
+        let accept = std::thread::Builder::new()
+            .name("scnn-serve-accept".to_string())
+            .spawn(move || accept_loop(&accept_inner, &listener))
+            .context("spawning accept thread")?;
+        let drain_inner = Arc::clone(&inner);
+        let drainer = std::thread::Builder::new()
+            .name("scnn-serve-drain".to_string())
+            .spawn(move || drain_loop(&drain_inner))
+            .context("spawning drainer thread")?;
+        Ok(Server {
+            inner,
+            accept: Mutex::new(Some(accept)),
+            drainer: Mutex::new(Some(drainer)),
+        })
+    }
+
+    /// The address the server is listening on.
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.inner.addr
+    }
+
+    /// Graceful drain: stop accepting, let in-flight connections finish
+    /// (bounded by the read timeout plus a grace period), close the
+    /// pool, and join the worker threads. Idempotent.
+    pub fn shutdown(&self) {
+        if self.inner.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Unblock the accept thread; it re-checks the stop flag per
+        // connection.
+        let _ = TcpStream::connect(self.inner.addr);
+        if let Some(h) = lock_recover(&self.accept).take() {
+            let _ = h.join();
+        }
+        let grace = self.inner.cfg.read_timeout + Duration::from_secs(1);
+        let deadline = Instant::now() + grace;
+        while self.inner.active.load(Ordering::Acquire) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        self.inner.pool.close();
+        if let Some(h) = lock_recover(&self.drainer).take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(inner: &Arc<Inner>, listener: &TcpListener) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if inner.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                // Transient accept failure (fd pressure): don't spin hot.
+                std::thread::sleep(Duration::from_millis(1));
+                continue;
+            }
+        };
+        if inner.stop.load(Ordering::Acquire) {
+            return;
+        }
+        inner.connections.fetch_add(1, Ordering::Relaxed);
+        inner.active.fetch_add(1, Ordering::Acquire);
+        let conn_inner = Arc::clone(inner);
+        let spawned = std::thread::Builder::new()
+            .name("scnn-serve-conn".to_string())
+            .spawn(move || {
+                let _guard = ActiveGuard(&conn_inner.active);
+                handle_connection(&conn_inner, stream);
+            });
+        if spawned.is_err() {
+            inner.active.fetch_sub(1, Ordering::Release);
+        }
+    }
+}
+
+/// Pulls globally-ordered drain results and routes them to waiters.
+fn drain_loop(inner: &Arc<Inner>) {
+    loop {
+        if inner.pool.outstanding() == 0 {
+            if inner.stop.load(Ordering::Acquire) && inner.pool.is_closed() {
+                return;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+            continue;
+        }
+        match inner.pool.drain_one() {
+            Ok((ticket, res)) => inner.hub.deliver(ticket.seq(), res),
+            Err(EngineError::EmptyQueue) => std::thread::sleep(Duration::from_micros(200)),
+            Err(_) => std::thread::sleep(Duration::from_millis(1)),
+        }
+    }
+}
+
+fn handle_connection(inner: &Arc<Inner>, stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(inner.cfg.read_timeout));
+    let _ = stream.set_nodelay(true);
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let limits = Limits { max_head: inner.cfg.max_head, max_body: inner.cfg.max_body };
+    let mut conn = HttpConn::new(stream, limits);
+    loop {
+        match conn.next_request() {
+            Ok(req) => {
+                let close = req.wants_close() || inner.stop.load(Ordering::Acquire);
+                let resp = route(inner, &req);
+                count_response(inner, resp.status);
+                if resp.write_to(&mut writer, close).is_err() || close {
+                    return;
+                }
+            }
+            Err(HttpError::Eof) | Err(HttpError::Io(_)) => return,
+            Err(err) => {
+                // Typed framing reject: answer once, then close (the
+                // stream position is unreliable after a parse error).
+                let resp = Response::json(
+                    err.status(),
+                    error_body("malformed_request", &err.to_string()),
+                );
+                count_response(inner, resp.status);
+                let _ = resp.write_to(&mut writer, true);
+                return;
+            }
+        }
+    }
+}
+
+fn count_response(inner: &Inner, status: u16) {
+    *lock_recover(&inner.responses).entry(status).or_insert(0) += 1;
+}
+
+fn error_body(kind: &str, msg: &str) -> String {
+    format!("{{\"error\":{},\"kind\":{}}}", json::escape_str(msg), json::escape_str(kind))
+}
+
+/// Maps a pool/session error to a response, per the serving contract:
+/// shed → 429 with `Retry-After`, deadline → 408, no capacity → 503,
+/// malformed input → 400, anything else → 500.
+fn error_response(err: &EngineError) -> Response {
+    match err {
+        EngineError::Rejected { retry_after_hint } => {
+            Response::json(429, error_body("shed", &err.to_string()))
+                .with_header("Retry-After", retry_after_secs(*retry_after_hint).to_string())
+        }
+        EngineError::Timeout { .. } => {
+            Response::json(408, error_body("timeout", &err.to_string()))
+        }
+        EngineError::Closed | EngineError::NoHealthyShards | EngineError::WorkerDied => {
+            Response::json(503, error_body("unavailable", &err.to_string()))
+        }
+        EngineError::Request(msg) => Response::json(400, error_body("bad_request", msg)),
+        other => Response::json(500, error_body("internal", &other.to_string())),
+    }
+}
+
+fn route(inner: &Arc<Inner>, req: &Request) -> Response {
+    match (req.method.as_str(), req.path()) {
+        ("GET", "/healthz") => healthz(inner),
+        ("GET", "/metrics") => metrics(inner),
+        ("POST", "/v1/infer") => infer(inner, req),
+        ("POST", "/v1/batch") => batch(inner, req),
+        (_, "/healthz" | "/metrics" | "/v1/infer" | "/v1/batch") => {
+            Response::json(405, error_body("method_not_allowed", "wrong method for this path"))
+        }
+        (_, path) => {
+            Response::json(404, error_body("not_found", &format!("no such endpoint {path}")))
+        }
+    }
+}
+
+fn healthz(inner: &Inner) -> Response {
+    let healthy = inner.pool.healthy_shards();
+    let shards = inner.pool.shards();
+    let draining = inner.stop.load(Ordering::Acquire) || inner.pool.is_closed();
+    let status = if draining {
+        "draining"
+    } else if healthy == shards {
+        "ok"
+    } else if healthy > 0 {
+        "degraded"
+    } else {
+        "unhealthy"
+    };
+    let body = format!(
+        "{{\"status\":\"{status}\",\"shards\":{shards},\"healthy\":{healthy},\
+         \"outstanding\":{}}}",
+        inner.pool.outstanding()
+    );
+    let code = if healthy > 0 && !draining { 200 } else { 503 };
+    Response::json(code, body)
+}
+
+fn metrics(inner: &Inner) -> Response {
+    let snapshot = HttpSnapshot {
+        connections: inner.connections.load(Ordering::Relaxed),
+        responses: lock_recover(&inner.responses).iter().map(|(k, v)| (*k, *v)).collect(),
+        uptime_secs: inner.started.elapsed().as_secs_f64(),
+    };
+    Response::text(200, prometheus::render(&inner.pool.metrics(), Some(&snapshot)))
+}
+
+/// Extracts the API key from `Authorization: Bearer` or `X-Api-Key`.
+fn api_key(req: &Request) -> Option<&str> {
+    if let Some(auth) = req.header("authorization") {
+        if let Some(rest) = auth.strip_prefix("Bearer ") {
+            return Some(rest.trim());
+        }
+    }
+    req.header("x-api-key").map(str::trim)
+}
+
+/// Authenticates and charges quota; `cost` is the token count (one per
+/// image). On failure the tenant outcome is already recorded.
+fn admit(inner: &Inner, req: &Request, cost: f64) -> std::result::Result<Identity, Response> {
+    let id = match inner.registry.authenticate(api_key(req)) {
+        Some(id) => id,
+        None => {
+            return Err(Response::json(
+                401,
+                error_body("unauthorized", "missing or unknown API key"),
+            ))
+        }
+    };
+    if let Err(wait) = inner.registry.admit(id, cost) {
+        inner.pool.note_tenant(inner.registry.name(id), TenantOutcome::QuotaRejected);
+        let secs = retry_after_secs(wait);
+        return Err(Response::json(
+            429,
+            error_body("quota", &format!("tenant quota exhausted; retry in ~{secs}s")),
+        )
+        .with_header("Retry-After", secs.to_string()));
+    }
+    Ok(id)
+}
+
+/// Pulls the image vector out of `{"image": [...]}` or a bare array.
+fn parse_image(body: &[u8]) -> std::result::Result<Vec<f32>, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let doc = json::parse(text)?;
+    match doc.get("image") {
+        Some(arr) => arr.as_f32_vec(),
+        None => doc.as_f32_vec(),
+    }
+    .map_err(|e| format!("image: {e}"))
+}
+
+/// Pulls the image list out of `{"images": [[...], ...]}` or a bare
+/// array of arrays.
+fn parse_images(body: &[u8]) -> std::result::Result<Vec<Vec<f32>>, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let doc = json::parse(text)?;
+    let arr = match doc.get("images") {
+        Some(arr) => arr,
+        None => &doc,
+    };
+    let items = match arr {
+        Json::Arr(items) => items,
+        other => return Err(format!("images: expected an array, got {}", other.kind())),
+    };
+    let mut out = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        out.push(item.as_f32_vec().map_err(|e| format!("images[{i}]: {e}"))?);
+    }
+    Ok(out)
+}
+
+fn infer(inner: &Inner, req: &Request) -> Response {
+    let id = match admit(inner, req, 1.0) {
+        Ok(id) => id,
+        Err(resp) => return resp,
+    };
+    let tenant = inner.registry.name(id).to_string();
+    let image = match parse_image(&req.body) {
+        Ok(image) => image,
+        Err(msg) => {
+            inner.pool.note_tenant(&tenant, TenantOutcome::Failed);
+            return Response::json(400, error_body("bad_request", &msg));
+        }
+    };
+    // Tenant-keyed requests keep shard affinity; open access round-robins
+    // so anonymous load still spreads over every shard.
+    let result = if inner.registry.is_empty() {
+        inner.pool.infer(image)
+    } else {
+        inner.pool.infer_keyed(&tenant, image)
+    };
+    match result {
+        Ok(output) => {
+            inner.pool.note_tenant(&tenant, TenantOutcome::Ok);
+            let class = crate::engine::classify(&output);
+            let body =
+                format!("{{\"output\":{},\"class\":{class}}}", json::render_f32s(&output));
+            Response::json(200, body)
+        }
+        Err(err) => {
+            let outcome = match err {
+                EngineError::Rejected { .. } => TenantOutcome::Shed,
+                _ => TenantOutcome::Failed,
+            };
+            inner.pool.note_tenant(&tenant, outcome);
+            error_response(&err)
+        }
+    }
+}
+
+/// Submits one image, absorbing admission rejects with jittered backoff
+/// *inside this worker thread* — the accept loop and unrelated
+/// connections never sleep on another tenant's shed traffic.
+fn submit_with_backoff(
+    inner: &Inner,
+    key: Option<&str>,
+    image: &[f32],
+) -> std::result::Result<u64, EngineError> {
+    let deadline = Instant::now() + inner.cfg.batch_retry_budget;
+    let mut attempt = 0u64;
+    loop {
+        let submitted = match key {
+            Some(key) => inner.pool.submit_keyed(key, image.to_vec()),
+            None => inner.pool.submit(image.to_vec()),
+        };
+        match submitted {
+            Ok(ticket) => return Ok(ticket.seq()),
+            Err(EngineError::Rejected { retry_after_hint }) => {
+                if Instant::now() >= deadline {
+                    return Err(EngineError::Rejected { retry_after_hint });
+                }
+                attempt += 1;
+                let jitter = Duration::from_micros(crate::sc::rng::mix64(attempt) % 101);
+                std::thread::sleep((retry_after_hint + jitter).min(inner.cfg.backoff_cap));
+            }
+            Err(err) => return Err(err),
+        }
+    }
+}
+
+fn batch(inner: &Inner, req: &Request) -> Response {
+    let images = match parse_images(&req.body) {
+        Ok(images) if !images.is_empty() => images,
+        Ok(_) => return Response::json(400, error_body("bad_request", "images is empty")),
+        Err(msg) => return Response::json(400, error_body("bad_request", &msg)),
+    };
+    let id = match admit(inner, req, images.len() as f64) {
+        Ok(id) => id,
+        Err(resp) => return resp,
+    };
+    let tenant = inner.registry.name(id).to_string();
+    let key = if inner.registry.is_empty() { None } else { Some(tenant.as_str()) };
+
+    // Submit everything first (tickets record submission order), then
+    // claim results in the same order — the pool's FIFO guarantee makes
+    // the response order deterministic per tenant.
+    let mut waiters = Vec::with_capacity(images.len());
+    let mut failure: Option<EngineError> = None;
+    for image in &images {
+        match submit_with_backoff(inner, key, image) {
+            Ok(seq) => waiters.push(inner.hub.register(seq)),
+            Err(err) => {
+                failure = Some(err);
+                break;
+            }
+        }
+    }
+    // Even on a mid-batch failure every registered waiter is claimed, so
+    // no drained result leaks into the hub's orphan map.
+    let mut results = Vec::with_capacity(waiters.len());
+    for waiter in waiters {
+        match waiter.claim(Duration::from_secs(30)) {
+            Some(Ok(output)) => results.push(output),
+            Some(Err(err)) => failure = failure.or(Some(err)),
+            None => {
+                failure = failure
+                    .or_else(|| Some(EngineError::Request("result wait timed out".to_string())));
+            }
+        }
+    }
+    if let Some(err) = failure {
+        let outcome = match err {
+            EngineError::Rejected { .. } => TenantOutcome::Shed,
+            _ => TenantOutcome::Failed,
+        };
+        inner.pool.note_tenant(&tenant, outcome);
+        return error_response(&err);
+    }
+    inner.pool.note_tenant(&tenant, TenantOutcome::Ok);
+    let mut body = String::with_capacity(results.len() * 32 + 32);
+    body.push_str("{\"results\":[");
+    for (i, output) in results.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push_str(&json::render_f32s(output));
+    }
+    body.push_str(&format!("],\"count\":{}}}", results.len()));
+    Response::json(200, body)
+}

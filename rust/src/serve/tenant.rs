@@ -1,0 +1,246 @@
+//! Tenant registry: API-key authentication and token-bucket quotas.
+//!
+//! Tenants are declared with `--tenants` as `name:key[:rps[:burst]]`
+//! entries separated by `;` or newlines (the flag value may also be a
+//! path to a file holding the same format, so keys stay out of `ps`
+//! output). Each tenant's name doubles as the pool placement key, so a
+//! tenant's requests stick to one shard and its cache/queue locality,
+//! and each tenant gets an independent token bucket: `rps` tokens per
+//! second refill, `burst` capacity, `rps = 0` meaning unlimited.
+
+use std::time::{Duration, Instant};
+
+use crate::engine::lock_recover;
+
+/// One declared tenant.
+#[derive(Debug, Clone)]
+pub struct Tenant {
+    /// Tenant name; also used as the pool placement key.
+    pub name: String,
+    /// API key presented via `Authorization: Bearer` or `X-Api-Key`.
+    pub key: String,
+    /// Sustained requests per second (0 = unlimited).
+    pub rps: f64,
+    /// Token-bucket capacity.
+    pub burst: f64,
+}
+
+/// Who a request is acting as, after authentication.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Identity {
+    /// No tenants are configured; all requests share one identity.
+    Anonymous,
+    /// Index into the registry's tenant table.
+    Tenant(usize),
+}
+
+struct Bucket {
+    tokens: f64,
+    refreshed: Instant,
+}
+
+/// Registry of tenants plus their live quota buckets.
+pub struct TenantRegistry {
+    tenants: Vec<Tenant>,
+    buckets: std::sync::Mutex<Vec<Bucket>>,
+}
+
+impl TenantRegistry {
+    /// An open registry: no tenants, no auth, no quotas.
+    pub fn open() -> Self {
+        TenantRegistry { tenants: Vec::new(), buckets: std::sync::Mutex::new(Vec::new()) }
+    }
+
+    /// Parses a `--tenants` spec: `name:key[:rps[:burst]]` entries
+    /// separated by `;` or newlines. Empty entries are skipped; names
+    /// and keys must be unique and non-empty.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut tenants: Vec<Tenant> = Vec::new();
+        for entry in spec.split(|c| c == ';' || c == '\n') {
+            let entry = entry.trim();
+            if entry.is_empty() || entry.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = entry.split(':').collect();
+            if parts.len() < 2 || parts.len() > 4 {
+                return Err(format!("tenant entry {entry:?} must be name:key[:rps[:burst]]"));
+            }
+            let name = parts[0].trim().to_string();
+            let key = parts[1].trim().to_string();
+            if name.is_empty() || key.is_empty() {
+                return Err(format!("tenant entry {entry:?} has an empty name or key"));
+            }
+            let rps = match parts.get(2) {
+                Some(v) => v
+                    .trim()
+                    .parse::<f64>()
+                    .ok()
+                    .filter(|r| r.is_finite() && *r >= 0.0)
+                    .ok_or_else(|| format!("tenant {name}: bad rps {v:?}"))?,
+                None => 0.0,
+            };
+            let burst = match parts.get(3) {
+                Some(v) => v
+                    .trim()
+                    .parse::<f64>()
+                    .ok()
+                    .filter(|b| b.is_finite() && *b >= 1.0)
+                    .ok_or_else(|| format!("tenant {name}: bad burst {v:?}"))?,
+                None => rps.max(1.0),
+            };
+            if tenants.iter().any(|t| t.name == name) {
+                return Err(format!("duplicate tenant name {name:?}"));
+            }
+            if tenants.iter().any(|t| t.key == key) {
+                return Err(format!("duplicate tenant key (tenant {name:?})"));
+            }
+            tenants.push(Tenant { name, key, rps, burst });
+        }
+        let now = Instant::now();
+        let mut buckets = Vec::with_capacity(tenants.len());
+        for t in &tenants {
+            buckets.push(Bucket { tokens: t.burst, refreshed: now });
+        }
+        Ok(TenantRegistry { tenants, buckets: std::sync::Mutex::new(buckets) })
+    }
+
+    /// Number of configured tenants (0 means open access).
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Whether the registry has no tenants configured.
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// Maps a presented API key to an identity.
+    ///
+    /// With no tenants configured everyone is [`Identity::Anonymous`];
+    /// otherwise a missing or unknown key is `None` (→ 401).
+    pub fn authenticate(&self, key: Option<&str>) -> Option<Identity> {
+        if self.tenants.is_empty() {
+            return Some(Identity::Anonymous);
+        }
+        let key = key?;
+        self.tenants.iter().position(|t| t.key == key).map(Identity::Tenant)
+    }
+
+    /// The tenant name for an identity (`"anonymous"` for open access).
+    pub fn name(&self, id: Identity) -> &str {
+        match id {
+            Identity::Anonymous => "anonymous",
+            Identity::Tenant(i) => {
+                self.tenants.get(i).map(|t| t.name.as_str()).unwrap_or("anonymous")
+            }
+        }
+    }
+
+    /// Takes `cost` tokens from the identity's bucket, or reports how
+    /// long until that many tokens will be available.
+    ///
+    /// Anonymous access and `rps = 0` tenants are never throttled.
+    pub fn admit(&self, id: Identity, cost: f64) -> Result<(), Duration> {
+        let idx = match id {
+            Identity::Anonymous => return Ok(()),
+            Identity::Tenant(i) => i,
+        };
+        let tenant = match self.tenants.get(idx) {
+            Some(t) if t.rps > 0.0 => t,
+            _ => return Ok(()),
+        };
+        let mut buckets = lock_recover(&self.buckets);
+        let bucket = match buckets.get_mut(idx) {
+            Some(b) => b,
+            None => return Ok(()),
+        };
+        let now = Instant::now();
+        let elapsed = now.duration_since(bucket.refreshed).as_secs_f64();
+        bucket.tokens = (bucket.tokens + elapsed * tenant.rps).min(tenant.burst);
+        bucket.refreshed = now;
+        if bucket.tokens >= cost {
+            bucket.tokens -= cost;
+            Ok(())
+        } else {
+            let deficit = cost - bucket.tokens;
+            Err(Duration::from_secs_f64(deficit / tenant.rps))
+        }
+    }
+
+    /// All configured tenant names, for metric pre-registration.
+    pub fn names(&self) -> Vec<String> {
+        self.tenants.iter().map(|t| t.name.clone()).collect()
+    }
+}
+
+/// Formats a retry hint as a `Retry-After` header value: whole seconds,
+/// rounded up, at least 1.
+pub fn retry_after_secs(hint: Duration) -> u64 {
+    (hint.as_secs_f64().ceil() as u64).max(1)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_spec_with_defaults() {
+        let reg = TenantRegistry::parse("alice:ka:10;bob:kb:2:8; carol:kc ").unwrap();
+        assert_eq!(reg.len(), 3);
+        assert_eq!(reg.authenticate(Some("kb")), Some(Identity::Tenant(1)));
+        assert_eq!(reg.name(Identity::Tenant(2)), "carol");
+        assert_eq!(reg.authenticate(Some("nope")), None);
+        assert_eq!(reg.authenticate(None), None);
+    }
+
+    #[test]
+    fn open_registry_admits_everyone() {
+        let reg = TenantRegistry::open();
+        assert_eq!(reg.authenticate(None), Some(Identity::Anonymous));
+        assert_eq!(reg.name(Identity::Anonymous), "anonymous");
+        assert!(reg.admit(Identity::Anonymous, 1.0).is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        for bad in [
+            "justaname",
+            "a:k:fast",
+            "a:k:1:0.5",
+            "a:k;a:k2",
+            "a:k;b:k",
+            ":k",
+            "a:",
+            "a:k:-1",
+        ] {
+            assert!(TenantRegistry::parse(bad).is_err(), "expected error for {bad:?}");
+        }
+    }
+
+    #[test]
+    fn bucket_exhaustion_reports_deficit() {
+        // 0.5 rps, burst 1: the first request drains the bucket; the
+        // second must wait ~2s for one token to refill.
+        let reg = TenantRegistry::parse("a:k:0.5:1").unwrap();
+        assert!(reg.admit(Identity::Tenant(0), 1.0).is_ok());
+        let wait = reg.admit(Identity::Tenant(0), 1.0).unwrap_err();
+        assert!(wait > Duration::from_millis(1500), "wait was {wait:?}");
+        assert!(wait <= Duration::from_millis(2100), "wait was {wait:?}");
+        assert_eq!(retry_after_secs(wait), 2);
+    }
+
+    #[test]
+    fn unlimited_tenant_is_never_throttled() {
+        let reg = TenantRegistry::parse("a:k").unwrap();
+        for _ in 0..10_000 {
+            assert!(reg.admit(Identity::Tenant(0), 1.0).is_ok());
+        }
+    }
+
+    #[test]
+    fn retry_after_rounds_up_to_at_least_one_second() {
+        assert_eq!(retry_after_secs(Duration::from_micros(100)), 1);
+        assert_eq!(retry_after_secs(Duration::from_millis(1200)), 2);
+    }
+}

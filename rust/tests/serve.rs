@@ -1,0 +1,380 @@
+//! Loopback integration tests for the `scnn::serve` front door: HTTP
+//! inference bit-identical to a direct `Session`, typed 4xx rejects for
+//! oversized/malformed traffic, tenant quotas with `Retry-After`,
+//! ticket-ordered concurrent batches, a parseable Prometheus exposition,
+//! and the regression guard for admission backoff running in connection
+//! workers rather than the accept path.
+
+use scnn::accel::layers::{LayerKind, LayerSpec, NetworkSpec};
+use scnn::accel::network::{LayerWeights, QuantizedWeights};
+use scnn::engine::{BackendKind, Engine, EngineConfig, EnginePool, Placement, PoolConfig};
+use scnn::sc::quantize_bipolar;
+use scnn::serve::json::{self, Json};
+use scnn::serve::{read_response, ServeConfig, Server, TenantRegistry};
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn tiny_net() -> NetworkSpec {
+    NetworkSpec {
+        name: "serve-tiny".into(),
+        input: (1, 4, 4),
+        layers: vec![LayerSpec {
+            kind: LayerKind::Dense { inputs: 16, outputs: 3 },
+            relu: false,
+        }],
+    }
+}
+
+fn tiny_weights() -> QuantizedWeights {
+    let codes: Vec<Vec<u32>> = (0..3)
+        .map(|oc| {
+            (0..16)
+                .map(|j| quantize_bipolar(((oc * 5 + j) % 9) as f64 / 4.5 - 1.0, 8))
+                .collect()
+        })
+        .collect();
+    QuantizedWeights { bits: 8, layers: vec![LayerWeights { codes, gamma: 1.0, mu: 0.0 }] }
+}
+
+fn engine_cfg() -> EngineConfig {
+    EngineConfig::new(BackendKind::Expectation, tiny_net()).with_quantized(tiny_weights())
+}
+
+fn images(n: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|i| (0..16).map(|j| ((i * 7 + j) % 11) as f32 / 11.0).collect()).collect()
+}
+
+/// Opens a pool and a server on an ephemeral loopback port.
+fn start(
+    pool_cfg: PoolConfig,
+    registry: TenantRegistry,
+    scfg: ServeConfig,
+) -> (Server, Arc<EnginePool>, String) {
+    let pool = Arc::new(EnginePool::open(pool_cfg).unwrap());
+    let server = Server::start(Arc::clone(&pool), registry, "127.0.0.1:0", scfg).unwrap();
+    let addr = server.local_addr().to_string();
+    (server, pool, addr)
+}
+
+/// One raw request on a fresh connection; returns status, headers, body.
+fn send_raw(addr: &str, raw: &[u8]) -> (u16, Vec<(String, String)>, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream.write_all(raw).unwrap();
+    let (status, headers, body) = read_response(&mut stream).unwrap();
+    (status, headers, String::from_utf8_lossy(&body).into_owned())
+}
+
+fn post(
+    addr: &str,
+    path: &str,
+    body: &str,
+    extra: &[(&str, &str)],
+) -> (u16, Vec<(String, String)>, String) {
+    let mut req = format!("POST {path} HTTP/1.1\r\nHost: t\r\n");
+    req.push_str(&format!("Content-Length: {}\r\n", body.len()));
+    for (k, v) in extra {
+        req.push_str(&format!("{k}: {v}\r\n"));
+    }
+    req.push_str("\r\n");
+    req.push_str(body);
+    send_raw(addr, req.as_bytes())
+}
+
+fn get(addr: &str, path: &str) -> (u16, Vec<(String, String)>, String) {
+    send_raw(addr, format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n").as_bytes())
+}
+
+fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+}
+
+fn image_body(img: &[f32]) -> String {
+    format!("{{\"image\":{}}}", json::render_f32s(img))
+}
+
+#[test]
+fn infer_over_http_is_bit_identical_to_a_direct_session() {
+    let pc = PoolConfig::replicated(engine_cfg(), 2);
+    let (_server, _pool, addr) = start(pc, TenantRegistry::open(), ServeConfig::default());
+    let single = Engine::open(engine_cfg()).unwrap();
+    for (i, img) in images(6).into_iter().enumerate() {
+        let expected = single.infer(img.clone()).unwrap();
+        let (status, _, resp) = post(&addr, "/v1/infer", &image_body(&img), &[]);
+        assert_eq!(status, 200, "image {i}: {resp}");
+        let doc = json::parse(&resp).unwrap();
+        let output = doc.get("output").unwrap().as_f32_vec().unwrap();
+        assert_eq!(output, expected, "image {i} is bit-identical over HTTP");
+        let class = match doc.get("class") {
+            Some(Json::Num(n)) => *n as usize,
+            other => panic!("bad class field: {other:?}"),
+        };
+        assert_eq!(class, scnn::engine::classify(&expected), "image {i} argmax");
+    }
+    // A bare top-level array is accepted too.
+    let img = images(1).remove(0);
+    let (status, _, resp) = post(&addr, "/v1/infer", &json::render_f32s(&img), &[]);
+    assert_eq!(status, 200);
+    let doc = json::parse(&resp).unwrap();
+    let output = doc.get("output").unwrap().as_f32_vec().unwrap();
+    assert_eq!(output, single.infer(img).unwrap(), "bare-array body");
+}
+
+#[test]
+fn oversized_bodies_get_413_and_the_server_survives() {
+    let scfg = ServeConfig { max_body: 256, ..ServeConfig::default() };
+    let pc = PoolConfig::replicated(engine_cfg(), 1);
+    let (_server, _pool, addr) = start(pc, TenantRegistry::open(), scfg);
+    let huge = "x".repeat(4096);
+    let (status, _, resp) = post(&addr, "/v1/infer", &huge, &[]);
+    assert_eq!(status, 413, "declared 4096 > max 256: {resp}");
+    // The reject is typed and the listener is still serving.
+    let img = images(1).remove(0);
+    let (status, _, _) = post(&addr, "/v1/infer", &image_body(&img), &[]);
+    assert_eq!(status, 200, "server healthy after an oversized body");
+}
+
+#[test]
+fn malformed_traffic_gets_typed_4xx_and_never_kills_the_server() {
+    let pc = PoolConfig::replicated(engine_cfg(), 1);
+    let (_server, pool, addr) = start(pc, TenantRegistry::open(), ServeConfig::default());
+    // Garbage request line.
+    let (status, _, resp) = send_raw(&addr, b"NOT AN HTTP REQUEST\r\n\r\n");
+    assert_eq!(status, 400, "garbage request line: {resp}");
+    // Colon-less header.
+    let (status, _, _) = send_raw(&addr, b"GET /healthz HTTP/1.1\r\nHost t\r\n\r\n");
+    assert_eq!(status, 400, "colon-less header");
+    // Body that is not JSON.
+    let (status, _, resp) = post(&addr, "/v1/infer", "{not json", &[]);
+    assert_eq!(status, 400, "malformed JSON");
+    assert!(resp.contains("bad_request"), "typed reject body: {resp}");
+    // Wrong element type inside the image array.
+    let (status, _, _) = post(&addr, "/v1/infer", "{\"image\":[1,\"two\"]}", &[]);
+    assert_eq!(status, 400, "non-numeric image element");
+    // Wrong method and unknown path are typed, not panics.
+    let (status, _, _) = get(&addr, "/v1/infer");
+    assert_eq!(status, 405, "GET on a POST endpoint");
+    let (status, _, _) = get(&addr, "/nope");
+    assert_eq!(status, 404, "unknown endpoint");
+    // After all of that the pool is untouched and healthz is green.
+    let (status, _, body) = get(&addr, "/healthz");
+    assert_eq!(status, 200, "healthz after abuse: {body}");
+    assert!(body.contains("\"status\":\"ok\""), "healthz body: {body}");
+    assert_eq!(pool.healthy_shards(), 1);
+}
+
+#[test]
+fn quota_exhaustion_returns_429_with_retry_after() {
+    // 0.5 tokens/s with burst 1: the second request must wait ~2 s.
+    let registry = TenantRegistry::parse("slow:key-slow:0.5:1").unwrap();
+    let pc = PoolConfig::replicated(engine_cfg(), 1);
+    let (_server, pool, addr) = start(pc, registry, ServeConfig::default());
+    let img = images(1).remove(0);
+    let body = image_body(&img);
+    let auth = [("X-Api-Key", "key-slow")];
+    // No key at all: 401, not 429.
+    let (status, _, resp) = post(&addr, "/v1/infer", &body, &[]);
+    assert_eq!(status, 401, "tenanted server requires a key: {resp}");
+    let (status, _, _) = post(&addr, "/v1/infer", &body, &[("X-Api-Key", "wrong")]);
+    assert_eq!(status, 401, "unknown key");
+    // First keyed request drains the burst.
+    let (status, _, resp) = post(&addr, "/v1/infer", &body, &auth);
+    assert_eq!(status, 200, "first request within burst: {resp}");
+    // Second is over quota: 429 with a ceil'd Retry-After.
+    let (status, headers, resp) = post(&addr, "/v1/infer", &body, &auth);
+    assert_eq!(status, 429, "second request over quota: {resp}");
+    assert_eq!(header(&headers, "retry-after"), Some("2"), "ceil(1/0.5) seconds");
+    assert!(resp.contains("quota"), "typed quota body: {resp}");
+    // The Bearer form authenticates the same tenant.
+    let bearer = [("Authorization", "Bearer key-slow")];
+    let (status, _, _) = post(&addr, "/v1/infer", &body, &bearer);
+    assert_eq!(status, 429, "same bucket via Authorization: Bearer");
+    // The rejects are on the tenant's ledger, not the pool's shed count.
+    let m = pool.metrics();
+    let t = m.tenants.iter().find(|t| t.tenant == "slow").unwrap();
+    assert_eq!(t.requests, 1);
+    assert_eq!(t.quota_rejected, 2);
+    assert_eq!(m.shed, 0, "quota rejects never reach the pool");
+}
+
+#[test]
+fn concurrent_tenant_batches_come_back_in_submission_order() {
+    let spec = "alpha:key-a:10000:10000;beta:key-b:10000:10000";
+    let registry = TenantRegistry::parse(spec).unwrap();
+    let pc = PoolConfig::replicated(engine_cfg(), 2).with_placement(Placement::HashKey);
+    let (_server, _pool, addr) = start(pc, registry, ServeConfig::default());
+    let single = Engine::open(engine_cfg()).unwrap();
+    let jobs = [("key-a", images(12)), ("key-b", images(9))];
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (key, imgs) in &jobs {
+            let addr = addr.as_str();
+            handles.push(scope.spawn(move || {
+                let mut body = String::from("{\"images\":[");
+                for (i, img) in imgs.iter().enumerate() {
+                    if i > 0 {
+                        body.push(',');
+                    }
+                    body.push_str(&json::render_f32s(img));
+                }
+                body.push_str("]}");
+                post(addr, "/v1/batch", &body, &[("X-Api-Key", *key)])
+            }));
+        }
+        for (handle, (_, imgs)) in handles.into_iter().zip(&jobs) {
+            let (status, _, resp) = handle.join().unwrap();
+            assert_eq!(status, 200, "batch: {resp}");
+            let doc = json::parse(&resp).unwrap();
+            let results = match doc.get("results") {
+                Some(Json::Arr(items)) => items,
+                other => panic!("bad results field: {other:?}"),
+            };
+            assert_eq!(results.len(), imgs.len());
+            let expected = single.infer_batch(imgs).unwrap();
+            for (i, item) in results.iter().enumerate() {
+                let got = item.as_f32_vec().unwrap();
+                assert_eq!(got, expected[i], "result {i} in submission order, bit-exact");
+            }
+        }
+    });
+}
+
+/// Minimal Prometheus text-format check: every line is a comment or a
+/// `name{labels} value` sample whose value parses as a float.
+fn assert_prometheus_parses(text: &str) -> usize {
+    let mut samples = 0;
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name_part, value) = line.rsplit_once(' ').unwrap_or_else(|| {
+            panic!("sample line has no value: {line:?}");
+        });
+        assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+        let metric = match name_part.split_once('{') {
+            Some((metric, labels)) => {
+                assert!(labels.ends_with('}'), "unterminated labels in {line:?}");
+                metric
+            }
+            None => name_part,
+        };
+        assert!(!metric.is_empty(), "empty metric name in {line:?}");
+        let ok = metric
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':');
+        assert!(ok, "bad metric name {metric:?}");
+        samples += 1;
+    }
+    samples
+}
+
+#[test]
+fn metrics_expose_parseable_prometheus_with_tenant_counters() {
+    let registry = TenantRegistry::parse("alpha:key-a:1000:1000").unwrap();
+    let pc = PoolConfig::replicated(engine_cfg(), 2);
+    let (_server, _pool, addr) = start(pc, registry, ServeConfig::default());
+    let img = images(1).remove(0);
+    for _ in 0..3 {
+        let (status, _, _) =
+            post(&addr, "/v1/infer", &image_body(&img), &[("X-Api-Key", "key-a")]);
+        assert_eq!(status, 200);
+    }
+    let (status, headers, text) = get(&addr, "/metrics");
+    assert_eq!(status, 200);
+    let ctype = header(&headers, "content-type").unwrap();
+    assert!(ctype.starts_with("text/plain"), "exposition content type: {ctype}");
+    let samples = assert_prometheus_parses(&text);
+    assert!(samples > 10, "a real exposition has many samples, got {samples}");
+    for family in [
+        "scnn_pool_shards 2",
+        "scnn_requests_total 3",
+        "scnn_request_latency_microseconds_count 3",
+        "scnn_tenant_requests_total{tenant=\"alpha\"} 3",
+        "scnn_http_connections_total",
+        "scnn_http_responses_total{code=\"200\"}",
+    ] {
+        assert!(text.contains(family), "missing {family:?} in exposition:\n{text}");
+    }
+}
+
+/// Regression test for the accept-path backoff bug: admission-reject
+/// backoff must run in the connection worker that owns the throttled
+/// request, so an unrelated client connecting at the same time is served
+/// immediately instead of queueing behind another tenant's retry sleeps.
+#[test]
+fn shed_backoff_stalls_only_the_throttled_connection() {
+    let spec = "alpha:key-a:100000:100000;beta:key-b:100000:100000";
+    let registry = TenantRegistry::parse(spec).unwrap();
+    // One shard, one admission slot, 20 ms per inference: a batch of 8
+    // spends most of its wall-clock retrying shed submits.
+    let ecfg = engine_cfg().with_chaos_slow(Duration::from_millis(20));
+    let pc = PoolConfig::replicated(ecfg, 1).with_queue_depth(1);
+    let scfg =
+        ServeConfig { batch_retry_budget: Duration::from_secs(20), ..ServeConfig::default() };
+    let (_server, _pool, addr) = start(pc, registry, scfg);
+
+    let imgs = images(8);
+    let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let batch_done = Arc::clone(&done);
+    let batch_addr = addr.clone();
+    let batch = std::thread::spawn(move || {
+        let mut body = String::from("{\"images\":[");
+        for (i, img) in imgs.iter().enumerate() {
+            if i > 0 {
+                body.push(',');
+            }
+            body.push_str(&json::render_f32s(img));
+        }
+        body.push_str("]}");
+        let out = post(&batch_addr, "/v1/batch", &body, &[("X-Api-Key", "key-a")]);
+        batch_done.store(true, std::sync::atomic::Ordering::Release);
+        out
+    });
+    // While the batch is backing off in its own worker, a second tenant
+    // keeps getting served promptly. The bound is loose (threads, CI) but
+    // far below the batch's multi-hundred-ms retry phase.
+    let mut probes = 0;
+    while !done.load(std::sync::atomic::Ordering::Acquire) && probes < 200 {
+        let t = Instant::now();
+        let (status, _, _) = get(&addr, "/healthz");
+        assert_eq!(status, 200);
+        assert!(
+            t.elapsed() < Duration::from_secs(2),
+            "healthz stalled behind another tenant's backoff"
+        );
+        probes += 1;
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(probes > 0, "probed at least once while the batch ran");
+    let (status, _, resp) = batch.join().unwrap();
+    assert_eq!(status, 200, "throttled batch eventually completes: {resp}");
+    let doc = json::parse(&resp).unwrap();
+    match doc.get("count") {
+        Some(Json::Num(n)) => assert_eq!(*n as usize, 8),
+        other => panic!("bad count field: {other:?}"),
+    }
+}
+
+#[test]
+fn graceful_shutdown_drains_and_refuses_new_connections() {
+    let pc = PoolConfig::replicated(engine_cfg(), 1);
+    let (server, pool, addr) = start(pc, TenantRegistry::open(), ServeConfig::default());
+    let img = images(1).remove(0);
+    let (status, _, _) = post(&addr, "/v1/infer", &image_body(&img), &[]);
+    assert_eq!(status, 200);
+    server.shutdown();
+    server.shutdown(); // idempotent
+    assert!(pool.is_closed(), "shutdown closes the pool");
+    // The listener is gone: a fresh connection either fails to connect
+    // or is never answered.
+    match TcpStream::connect(&addr) {
+        Err(_) => {}
+        Ok(mut stream) => {
+            stream.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+            let _ = stream.write_all(b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+            assert!(read_response(&mut stream).is_err(), "no one serves after shutdown");
+        }
+    }
+}
