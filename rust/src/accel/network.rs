@@ -44,6 +44,7 @@ use crate::accel::par;
 use crate::accel::precision::{self, PrecisionPlan};
 use crate::accel::stage::{self, GatherTable, StageDescriptor, StageOp};
 use crate::faults::FaultPlan;
+use crate::sc::bitplane;
 use crate::sc::bitstream::VerticalCounter;
 use crate::sc::neuron;
 use crate::sc::rng;
@@ -160,6 +161,53 @@ impl ForwardMode {
             ForwardMode::NoisyExpectation { seed, .. } => {
                 ForwardMode::NoisyExpectation { k, seed }
             }
+            other => other,
+        }
+    }
+}
+
+/// Which SC compute kernel a stochastic compute stage lowers to at
+/// [`ForwardPlan::compile_with_opts`] time. All three paths (including the
+/// per-bit [`reference`]) are **bit-exact** with each other — they share
+/// the same SNG generation keys, gather tables, and B2S randoms — so the
+/// choice is purely a speed/falsifiability knob (property-tested in
+/// `tests/stage_ir.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelPath {
+    /// Resolve per stage: currently the bit-plane transposed kernel for
+    /// every stochastic compute stage (the fastest path). The default.
+    #[default]
+    Auto,
+    /// The lane-at-a-time fused kernel: one
+    /// [`VerticalCounter::add_xnor_words`] pass per fan-in lane, then the
+    /// fused B2S/ReLU/S2B popcount. Kept selectable as the speedup
+    /// baseline and as a mid-point between `Transposed` and [`reference`].
+    Fused,
+    /// The 64-lane bit-plane transposed kernel: weight streams are
+    /// re-packed at compile into cycle-major planes
+    /// ([`crate::sc::bitplane`]), activations are transposed in L1-sized
+    /// tiles per gather window, and one XNOR+`count_ones` word covers 64
+    /// fan-in lanes at once.
+    Transposed,
+}
+
+impl KernelPath {
+    /// Stable label, folded into the engine's compiled-artifact
+    /// fingerprint and printed by the benches.
+    pub fn label(&self) -> &'static str {
+        match self {
+            KernelPath::Auto => "auto",
+            KernelPath::Fused => "fused",
+            KernelPath::Transposed => "transposed",
+        }
+    }
+
+    /// The concrete kernel `Auto` resolves to for stochastic compute
+    /// stages (`Fused`/`Transposed` pass through). `Auto` and its
+    /// resolution compile to the same artifact and share one cache entry.
+    pub fn resolved(self) -> KernelPath {
+        match self {
+            KernelPath::Auto => KernelPath::Transposed,
             other => other,
         }
     }
@@ -367,6 +415,10 @@ struct LayerPlan {
     mu: f64,
     /// 2^m for this fan-in (the SC scaled-add divisor).
     scale: f64,
+    /// Compiled B2S/ReLU comparison floor: `fan_in` when the stage applies
+    /// the correlated-OR ReLU, 0 otherwise. Hoisted out of the per-image
+    /// kernels — one `max(2c, floor) > r4` per cycle is all that remains.
+    floor: u32,
     // --- stochastic-mode constants (empty in analytic modes) ---
     /// Lane seed base for this layer.
     base: u32,
@@ -384,6 +436,81 @@ struct LayerPlan {
     zq: f64,
 }
 
+/// Compile-time state of the bit-plane transposed kernel
+/// ([`KernelPath::Transposed`]): the weight SNG streams re-packed
+/// cycle-major so one `u64` word holds 64 fan-in lanes of one cycle.
+///
+/// Layout: `wgt_tr[((oc·k_words + cw)·64 + t)·lane_blocks + b]` bit `l` is
+/// weight lane `b·64 + l`'s XNOR operand bit at cycle `cw·64 + t`. Tail
+/// lanes (`≥ fan_in`) carry all-ones weight bits and the runtime tile
+/// carries all-zero activation bits there, so XNOR yields 0 and no lane
+/// mask is needed in the hot loop. Stuck-at APC lanes are resolved here
+/// too: the lane's weight bits become the stuck constant and the runtime
+/// tile feeds all-ones (XNOR identity), reproducing the fused path's
+/// constant-stream accumulate bit-for-bit.
+struct TransposedPlan {
+    /// Fan-in lane blocks of 64 (`fan_in.div_ceil(64)`).
+    lane_blocks: usize,
+    /// Transposed weight planes (see layout above).
+    wgt_tr: Vec<u64>,
+    /// Per-lane stuck-at flags (`stuck[j]` = lane j is dead); empty when
+    /// the fault plan pins no lane of this layer.
+    stuck: Vec<bool>,
+}
+
+impl TransposedPlan {
+    /// Re-pack a stochastic [`LayerPlan`]'s lane-major weight words into
+    /// transposed bit planes, one 64×64 [`bitplane::transpose64`] tile at
+    /// a time. Pure layout: the stream bits (keys, faults, padding) are
+    /// exactly the ones the fused path would read.
+    fn build(lp: &LayerPlan, words: usize, faults: Option<&FaultPlan>) -> Self {
+        let fan_in = lp.fan_in;
+        let lane_blocks = fan_in.div_ceil(bitplane::LANES);
+        let stuck: Vec<bool> = match faults {
+            Some(f) if !f.stuck_lanes.is_empty() => {
+                let v: Vec<bool> = (0..fan_in).map(|j| f.stuck(lp.wl, j).is_some()).collect();
+                if v.iter().any(|&s| s) {
+                    v
+                } else {
+                    Vec::new()
+                }
+            }
+            _ => Vec::new(),
+        };
+        let mut wgt_tr = vec![0u64; lp.out_ch * words * bitplane::LANES * lane_blocks];
+        let mut cols = [0u64; bitplane::LANES];
+        for oc in 0..lp.out_ch {
+            for b in 0..lane_blocks {
+                for cw in 0..words {
+                    for (l, col) in cols.iter_mut().enumerate() {
+                        let j = b * bitplane::LANES + l;
+                        *col = if j >= fan_in {
+                            // Tail lane: all-ones vs the tile's all-zeros.
+                            !0u64
+                        } else if let Some(v) = faults.and_then(|f| f.stuck(lp.wl, j)) {
+                            // Stuck lane: the constant vs the tile's
+                            // all-ones (XNOR identity).
+                            if v {
+                                !0u64
+                            } else {
+                                0u64
+                            }
+                        } else {
+                            lp.wgt_words[(oc * fan_in + j) * words + cw]
+                        };
+                    }
+                    bitplane::transpose64(&mut cols);
+                    let dst = (oc * words + cw) * bitplane::LANES * lane_blocks + b;
+                    for (t, &row) in cols.iter().enumerate() {
+                        wgt_tr[dst + t * lane_blocks] = row;
+                    }
+                }
+            }
+        }
+        TransposedPlan { lane_blocks, wgt_tr, stuck }
+    }
+}
+
 /// Reusable per-image scratch arena: all buffers grow to the largest layer
 /// once and are reused across layers and calls — the engine's steady state
 /// allocates nothing per neuron.
@@ -397,6 +524,41 @@ pub struct Scratch {
     /// Saved step outputs feeding later residual merges, by layer index.
     saved: Vec<Vec<f64>>,
     vc: VerticalCounter,
+    /// Transposed-kernel tile buffers, reused across stages and images.
+    tr: TrScratch,
+    /// Window-major staging of the transposed kernel's outputs before the
+    /// scatter back to the engine's channel-major layout.
+    tr_out: Vec<f64>,
+}
+
+/// Worker-local scratch of the bit-plane transposed kernel: the activation
+/// tile for one (window, cycle-word) pair, the 64×64 transpose staging
+/// block, and the per-neuron S2B accumulators for the window's output
+/// channels. Grown once per stage shape ([`TrScratch::reconfigure`]
+/// reuses the allocations, like [`VerticalCounter::reconfigure`]).
+struct TrScratch {
+    /// Activation tile: 64 cycles × `lane_blocks` words, cycle-major.
+    tile: Vec<u64>,
+    /// Transpose staging: one 64-lane × 64-cycle bit block.
+    cols: [u64; bitplane::LANES],
+    /// Per-output-channel S2B `ones` accumulators.
+    ones: Vec<u32>,
+}
+
+impl Default for TrScratch {
+    fn default() -> Self {
+        TrScratch { tile: Vec::new(), cols: [0; bitplane::LANES], ones: Vec::new() }
+    }
+}
+
+impl TrScratch {
+    /// Size the buffers for a stage (keeps capacity across calls).
+    fn reconfigure(&mut self, lane_blocks: usize, out_ch: usize) {
+        self.tile.clear();
+        self.tile.resize(bitplane::LANES * lane_blocks, 0);
+        self.ones.clear();
+        self.ones.resize(out_ch, 0);
+    }
 }
 
 /// One step's wall-clock share of an inference: `(layer index, stage
@@ -474,6 +636,24 @@ impl ForwardPlan {
         precision: &PrecisionPlan,
         faults: Option<&FaultPlan>,
     ) -> Result<Self> {
+        Self::compile_with_opts(net, weights, mode, precision, faults, KernelPath::default())
+    }
+
+    /// The full compile entry point:
+    /// [`ForwardPlan::compile_with_precision_faults`] plus an explicit
+    /// [`KernelPath`] selecting which stochastic compute kernel each stage
+    /// lowers to. `Auto` (the default everywhere else) resolves to the
+    /// bit-plane transposed kernel; `Fused` keeps the lane-at-a-time
+    /// kernel as a baseline. The choice never changes outputs — all paths
+    /// are bit-exact — only the compiled layout and speed.
+    pub fn compile_with_opts(
+        net: &NetworkSpec,
+        weights: &QuantizedWeights,
+        mode: ForwardMode,
+        precision: &PrecisionPlan,
+        faults: Option<&FaultPlan>,
+        kernel: KernelPath,
+    ) -> Result<Self> {
         // Storage faults strike before any datapath runs: corrupt the
         // weight SRAM once, then lower the corrupted tensor normally.
         let corrupted;
@@ -519,14 +699,27 @@ impl ForwardPlan {
                         ForwardMode::Stochastic { k, .. } => (k, k.div_ceil(64)),
                         _ => (0, 0),
                     };
+                    let mut lp = build_layer_plan(weights, st, table, mode, faults.as_deref())?;
+                    let tr = match (mode, kernel.resolved()) {
+                        (ForwardMode::Stochastic { .. }, KernelPath::Transposed) => {
+                            let tr = TransposedPlan::build(&lp, words, faults.as_deref());
+                            // The transposed planes replace the lane-major
+                            // weight copy — only the activation/padding
+                            // gathers still read lane-major words.
+                            lp.wgt_words = Vec::new();
+                            Some(tr)
+                        }
+                        _ => None,
+                    };
                     Box::new(ComputeStage {
                         meta,
-                        lp: build_layer_plan(weights, st, table, mode, faults.as_deref())?,
+                        lp,
                         mode,
                         k,
                         words,
                         bits,
                         faults: faults.clone(),
+                        tr,
                     })
                 }
                 StageOp::MaxPool { size } => {
@@ -695,6 +888,9 @@ struct ComputeStage {
     bits: u32,
     /// Compiled-in fault injection (`None` = clean datapath).
     faults: Option<Arc<FaultPlan>>,
+    /// Transposed bit-plane layout (`Some` iff the stage lowered to
+    /// [`KernelPath::Transposed`]).
+    tr: Option<TransposedPlan>,
 }
 
 impl LayerStage for ComputeStage {
@@ -702,6 +898,9 @@ impl LayerStage for ComputeStage {
 
     fn run(&self, scr: &mut Scratch, threads: usize) {
         match self.mode {
+            ForwardMode::Stochastic { .. } if self.tr.is_some() => {
+                self.run_stochastic_transposed(scr, threads)
+            }
             ForwardMode::Stochastic { .. } => self.run_stochastic(scr, threads),
             _ => self.run_analytic(scr, threads),
         }
@@ -715,21 +914,9 @@ impl ComputeStage {
     /// B2S→ReLU→S2B popcount. Reads `scr.act`, writes `scr.out`.
     fn run_stochastic(&self, scr: &mut Scratch, threads: usize) {
         let lp = &self.lp;
-        let (k, words, bits) = (self.k, self.words, self.bits);
-        scr.acodes.clear();
-        scr.acodes.extend(scr.act.iter().map(|&v| quantize_bipolar(v, bits)));
-        assert_eq!(scr.acodes.len(), lp.in_sites, "layer input size mismatch");
+        let (k, words) = (self.k, self.words);
+        self.gen_act_streams(scr);
         let faults = self.faults.as_deref();
-        // Per-image activation SNG streams, one packed lane per site.
-        scr.act_words.clear();
-        scr.act_words.resize(lp.in_sites * words, 0);
-        for (p, &code) in scr.acodes.iter().enumerate() {
-            let slot = &mut scr.act_words[p * words..(p + 1) * words];
-            lane_stream_words(code, bits, k, lp.base, p as u64, slot);
-            if let Some(f) = faults {
-                f.flip_words(lp.base, p as u64, k, slot);
-            }
-        }
         // Constant streams for stuck-at APC lanes (XNOR with all-ones is
         // the identity, so a dead lane reuses the live accumulate path).
         let stuck_const: Option<(Vec<u64>, Vec<u64>)> = faults
@@ -738,7 +925,7 @@ impl ComputeStage {
         let total = lp.out_ch * lp.gather.n_win;
         scr.out.clear();
         scr.out.resize(total, 0.0);
-        let floor = if lp.relu { lp.fan_in as u32 } else { 0 };
+        let floor = lp.floor;
         let act_words: &[u64] = &scr.act_words;
         let out: &mut [f64] = &mut scr.out;
         let worker = |vc: &mut VerticalCounter, start: usize, slice: &mut [f64]| {
@@ -779,6 +966,162 @@ impl ComputeStage {
         } else {
             scr.vc.reconfigure(k, lp.fan_in);
             worker(&mut scr.vc, 0, out);
+        }
+    }
+
+    /// Quantize `scr.act` and generate the per-image activation SNG
+    /// streams (one packed lane per input site, bit-flip faults applied)
+    /// into `scr.act_words` — shared by both stochastic kernels. Weight
+    /// and padding streams are compile-time plan state, so across a batch
+    /// only this per-image step repeats: the SNG work for every weight
+    /// lane is reused by every image and every thread.
+    fn gen_act_streams(&self, scr: &mut Scratch) {
+        let lp = &self.lp;
+        let (k, words, bits) = (self.k, self.words, self.bits);
+        scr.acodes.clear();
+        scr.acodes.extend(scr.act.iter().map(|&v| quantize_bipolar(v, bits)));
+        assert_eq!(scr.acodes.len(), lp.in_sites, "layer input size mismatch");
+        let faults = self.faults.as_deref();
+        // Per-image activation SNG streams, one packed lane per site.
+        scr.act_words.clear();
+        scr.act_words.resize(lp.in_sites * words, 0);
+        for (p, &code) in scr.acodes.iter().enumerate() {
+            let slot = &mut scr.act_words[p * words..(p + 1) * words];
+            lane_stream_words(code, bits, k, lp.base, p as u64, slot);
+            if let Some(f) = faults {
+                f.flip_words(lp.base, p as u64, k, slot);
+            }
+        }
+    }
+
+    /// The bit-plane transposed stochastic layer ([`KernelPath::Transposed`]):
+    /// per (window, cycle-word) pair, gather the window's lane-major
+    /// activation words into an L1-sized tile, [`bitplane::transpose64`]
+    /// it cycle-major, and accumulate every output channel's B2S `ones`
+    /// with one XNOR+`count_ones` word per 64 fan-in lanes per cycle —
+    /// the tile is built once and shared across all output channels of
+    /// the window (depthwise tables re-tile per channel). Produces
+    /// bit-identical `ones` counts to [`ComputeStage::run_stochastic`] and
+    /// the per-bit [`reference`]: the streams, the gather geometry, and
+    /// the `max(2c, floor) > r4` comparison are all exactly shared — only
+    /// the iteration order over (lane, cycle) changes, and integer
+    /// popcount sums are order-independent. Reads `scr.act`, writes
+    /// `scr.out`.
+    fn run_stochastic_transposed(&self, scr: &mut Scratch, threads: usize) {
+        let lp = &self.lp;
+        let tr = self.tr.as_ref().expect("transposed stages carry their planes");
+        let (k, words) = (self.k, self.words);
+        self.gen_act_streams(scr);
+        let (out_ch, n_win) = (lp.out_ch, lp.gather.n_win);
+        let total = out_ch * n_win;
+        let lb = tr.lane_blocks;
+        let fan_in = lp.fan_in;
+        let per_channel = lp.gather.per_channel;
+        let floor = lp.floor;
+        let Scratch { act_words, out, tr_out, tr: tr_scr, .. } = scr;
+        out.clear();
+        out.resize(total, 0.0);
+        tr_out.clear();
+        tr_out.resize(total, 0.0);
+        let act_words: &[u64] = act_words;
+        let tr_out: &mut [f64] = tr_out.as_mut_slice();
+        // Build one (window, cycle-word) activation tile: the 64
+        // lane-major stream words of each lane block, transposed
+        // cycle-major. 64·lane_blocks words — L1-resident for every
+        // shipped topology.
+        let build_tile = |st: &mut TrScratch, oc: usize, wi: usize, cw: usize| {
+            let window = lp.gather.window(oc, wi);
+            for b in 0..lb {
+                for (l, col) in st.cols.iter_mut().enumerate() {
+                    let j = b * bitplane::LANES + l;
+                    *col = if j >= fan_in {
+                        // Tail lane: zeros against the plane's all-ones.
+                        0
+                    } else if !tr.stuck.is_empty() && tr.stuck[j] {
+                        // Stuck lane: the XNOR identity against the
+                        // compiled-in constant.
+                        !0u64
+                    } else {
+                        match window[j] {
+                            Some(i) => act_words[i * words + cw],
+                            None => lp.pad_words[j * words + cw],
+                        }
+                    };
+                }
+                bitplane::transpose64(&mut st.cols);
+                for (t, &row) in st.cols.iter().enumerate() {
+                    st.tile[t * lb + b] = row;
+                }
+            }
+        };
+        // Window-major worker over flat units g = wi·out_ch + oc, so a
+        // chunk walks whole (window, channel-range) groups and the tile
+        // build amortizes across the group. Dense stages (n_win = 1)
+        // split their single window's channel range across workers.
+        let worker = |st: &mut TrScratch, start: usize, slice: &mut [f64]| {
+            let end = start + slice.len();
+            let mut g = start;
+            while g < end {
+                let wi = g / out_ch;
+                let oc0 = g - wi * out_ch;
+                let gend = end.min((wi + 1) * out_ch);
+                let nn = gend - g;
+                st.ones[..nn].fill(0);
+                for cw in 0..words {
+                    let valid = (k - cw * 64).min(64);
+                    let r4 = &lp.r4[cw * 64..cw * 64 + valid];
+                    if !per_channel {
+                        build_tile(st, 0, wi, cw);
+                    }
+                    for oi in 0..nn {
+                        let oc = oc0 + oi;
+                        if per_channel {
+                            build_tile(st, oc, wi, cw);
+                        }
+                        let wrow = &tr.wgt_tr[(oc * words + cw) * bitplane::LANES * lb..]
+                            [..bitplane::LANES * lb];
+                        let mut ones = 0u32;
+                        for (t, &r) in r4.iter().enumerate() {
+                            let c = bitplane::xnor_count(
+                                &st.tile[t * lb..(t + 1) * lb],
+                                &wrow[t * lb..(t + 1) * lb],
+                            );
+                            ones += ((2 * c).max(floor) > r) as u32;
+                        }
+                        st.ones[oi] += ones;
+                    }
+                }
+                for (oi, slot) in slice[g - start..gend - start].iter_mut().enumerate() {
+                    let v = 2.0 * (st.ones[oi] as f64 / k as f64) - 1.0;
+                    let sp = (v + 1.0) * lp.scale - fan_in as f64;
+                    *slot = reencode(sp, lp.gamma, lp.mu, lp.final_layer);
+                }
+                g = gend;
+            }
+        };
+        if threads != 1 && total > 1 {
+            let chunk = par::balanced_chunk_len_for(total, threads);
+            par::par_chunks_mut_with_threads(
+                &mut *tr_out,
+                chunk,
+                threads,
+                || {
+                    let mut st = TrScratch::default();
+                    st.reconfigure(lb, out_ch);
+                    st
+                },
+                |st, ci, slice| worker(st, ci * chunk, slice),
+            );
+        } else {
+            tr_scr.reconfigure(lb, out_ch);
+            worker(tr_scr, 0, &mut *tr_out);
+        }
+        // Scatter window-major staging back to the engine's
+        // channel-major activation layout.
+        for wi in 0..n_win {
+            for oc in 0..out_ch {
+                out[oc * n_win + wi] = tr_out[wi * out_ch + oc];
+            }
         }
     }
 
@@ -827,7 +1170,11 @@ impl ComputeStage {
                 let sp = match mode {
                     ForwardMode::Expectation | ForwardMode::NoisyExpectation { .. } => {
                         if lp.relu {
-                            let v = neuron::expectation_smooth_relu(pre, var, lp.fan_in);
+                            // `lp.scale` is the compiled 2^m — the per-call
+                            // m_bits shift is hoisted out of this loop.
+                            let v = neuron::expectation_smooth_relu_scaled(
+                                pre, var, lp.fan_in, lp.scale,
+                            );
                             (v + 1.0) * lp.scale - lp.fan_in as f64
                         } else {
                             pre
@@ -915,6 +1262,7 @@ fn build_layer_plan(
         gamma: lw.gamma,
         mu: lw.mu,
         scale,
+        floor: if st.relu { fan_in as u32 } else { 0 },
         base: 0,
         r4: Vec::new(),
         wgt_words: Vec::new(),
@@ -1356,6 +1704,131 @@ mod tests {
                 assert_eq!(fused.len(), 3);
                 assert!(fused.iter().all(|v| v.is_finite()));
             }
+        }
+    }
+
+    /// Forward with an explicitly pinned kernel path (uniform k).
+    fn fwd_kernel(
+        net: &NetworkSpec,
+        w: &QuantizedWeights,
+        input: &[f64],
+        k: usize,
+        seed: u32,
+        kernel: KernelPath,
+        faults: Option<&crate::faults::FaultPlan>,
+    ) -> Vec<f64> {
+        let plan = PrecisionPlan::uniform(k, net.n_compute());
+        ForwardPlan::compile_with_opts(
+            net,
+            w,
+            ForwardMode::Stochastic { k, seed },
+            &plan,
+            faults,
+            kernel,
+        )
+        .unwrap()
+        .run(input)
+    }
+
+    #[test]
+    fn kernel_paths_agree_bit_exactly_across_packing_boundaries() {
+        // Fused, transposed, and per-bit reference on fan-ins (9, 18) and
+        // stream lengths (104, 136) that are NOT multiples of 64 — the
+        // tail-cycle and tail-lane handling of the transposed layout.
+        let net = tiny_net();
+        let w = tiny_weights(8, 42);
+        let input = tiny_input();
+        for k in [16usize, 64, 104, 136] {
+            let fused = fwd_kernel(&net, &w, &input, k, 7, KernelPath::Fused, None);
+            let tr = fwd_kernel(&net, &w, &input, k, 7, KernelPath::Transposed, None);
+            assert_eq!(fused, tr, "k={k}");
+            assert_eq!(tr, reference::forward_stochastic(&net, &w, &input, k, 7), "k={k}");
+        }
+    }
+
+    #[test]
+    fn transposed_kernel_covers_extended_ops_and_faults() {
+        // Strided, depthwise (per-channel tiles), residual, pooling —
+        // clean and under every fault class at once, including stuck
+        // lanes inside the depthwise stage.
+        let net = extended_net();
+        let w = seeded_weights(&net, 8, 17);
+        let input = extended_input();
+        let f = crate::faults::FaultPlan::new(11)
+            .with_bit_flip_rate(0.02)
+            .with_stuck_lane(2, 1, false)
+            .with_stuck_lane(1, 0, true)
+            .with_sng_correlation_rate(0.2)
+            .with_sram_upset_rate(0.05);
+        for faults in [None, Some(&f)] {
+            for k in [32usize, 104] {
+                let fused = fwd_kernel(&net, &w, &input, k, 5, KernelPath::Fused, faults);
+                let tr = fwd_kernel(&net, &w, &input, k, 5, KernelPath::Transposed, faults);
+                assert_eq!(fused, tr, "k={k} faulted={}", faults.is_some());
+                let plan = PrecisionPlan::uniform(k, net.n_compute());
+                let golden = reference::forward_stochastic_plan_faulted(
+                    &net, &w, &input, &plan, 5, faults,
+                );
+                assert_eq!(tr, golden, "k={k} faulted={}", faults.is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn transposed_kernel_crosses_lane_block_boundaries() {
+        // Dense fan-ins straddling the 64-lane block width (63, 64, 65,
+        // 130): tail lanes must contribute exactly zero.
+        for inputs in [63usize, 64, 65, 130] {
+            let net = NetworkSpec {
+                name: format!("lanes-{inputs}"),
+                input: (1, 1, inputs),
+                layers: vec![
+                    LayerSpec::active(LayerKind::Dense { inputs, outputs: 4 }),
+                    LayerSpec::linear(LayerKind::Dense { inputs: 4, outputs: 2 }),
+                ],
+            };
+            let w = seeded_weights(&net, 8, inputs as u64);
+            let input: Vec<f64> = (0..inputs).map(|i| ((i % 11) as f64) / 11.0).collect();
+            for k in [64usize, 104] {
+                let fused = fwd_kernel(&net, &w, &input, k, 9, KernelPath::Fused, None);
+                let tr = fwd_kernel(&net, &w, &input, k, 9, KernelPath::Transposed, None);
+                assert_eq!(fused, tr, "inputs={inputs} k={k}");
+                assert_eq!(
+                    tr,
+                    reference::forward_stochastic(&net, &w, &input, k, 9),
+                    "inputs={inputs} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn transposed_kernel_is_thread_count_invariant() {
+        let net = extended_net();
+        let w = seeded_weights(&net, 8, 23);
+        let input = extended_input();
+        let plan = PrecisionPlan::uniform(128, net.n_compute());
+        let fp = ForwardPlan::compile_with_opts(
+            &net,
+            &w,
+            ForwardMode::Stochastic { k: 128, seed: 3 },
+            &plan,
+            None,
+            KernelPath::Transposed,
+        )
+        .unwrap();
+        let mut scr = Scratch::default();
+        let serial = fp.run_with_threads(&input, &mut scr, 1);
+        for threads in [0usize, 2, 3] {
+            assert_eq!(
+                serial,
+                fp.run_with_threads(&input, &mut scr, threads),
+                "threads={threads}"
+            );
+        }
+        let imgs = vec![input.clone(); 5];
+        for out in fp.run_batch(&imgs) {
+            assert_eq!(out, serial);
         }
     }
 

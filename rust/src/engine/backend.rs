@@ -118,12 +118,13 @@ pub(crate) fn shared_plan_with(
     // homogeneous case still compiles once). compile (not new):
     // weight/shape mismatches surface as session open errors, never as
     // panics on the worker thread.
-    let plan = Arc::new(ForwardPlan::compile_with_precision_faults(
+    let plan = Arc::new(ForwardPlan::compile_with_opts(
         &cfg.net,
         weights,
         mode,
         precision,
         cfg.faults.as_ref(),
+        cfg.kernel,
     )?);
     PLAN_COMPILES.fetch_add(1, Ordering::Relaxed);
     let mut g = crate::engine::lock_recover(cache);

@@ -6,7 +6,7 @@
 //! to be hand-wired separately in `main.rs`, the examples, and the benches.
 
 use crate::accel::layers::NetworkSpec;
-use crate::accel::network::{ForwardMode, QuantizedWeights};
+use crate::accel::network::{ForwardMode, KernelPath, QuantizedWeights};
 use crate::faults::FaultPlan;
 use crate::accel::precision::{
     self, AutoTuneConfig, Precision, PrecisionError, PrecisionPlan,
@@ -212,6 +212,11 @@ pub struct EngineConfig {
     /// Optional fault-injection plan compiled into the datapath (see
     /// [`crate::faults::FaultPlan`]); `None` = clean silicon.
     pub faults: Option<FaultPlan>,
+    /// Stochastic compute-kernel selection (see [`KernelPath`]):
+    /// `Auto` (default) resolves to the bit-plane transposed kernel;
+    /// `Fused` pins the lane-at-a-time baseline. Bit-exact either way —
+    /// only [`BackendKind::StochasticFused`] plans are affected.
+    pub kernel: KernelPath,
     /// Optional client-side deadline: `infer` / `drain` calls stop waiting
     /// after this long and return [`EngineError::Timeout`] instead of
     /// blocking forever on a stuck worker.
@@ -245,6 +250,7 @@ impl EngineConfig {
             channels: 8,
             hlo_ladder: Vec::new(),
             faults: None,
+            kernel: KernelPath::Auto,
             deadline: None,
             degrade: None,
             chaos_panic_after: None,
@@ -340,6 +346,14 @@ impl EngineConfig {
     /// Compile a fault-injection plan into the datapath.
     pub fn with_faults(mut self, faults: FaultPlan) -> Self {
         self.faults = Some(faults);
+        self
+    }
+
+    /// Select the stochastic compute kernel (fused baseline vs bit-plane
+    /// transposed; `Auto` = transposed). A compiled-artifact input: plans
+    /// differing only in their resolved kernel are distinct cache entries.
+    pub fn with_kernel(mut self, kernel: KernelPath) -> Self {
+        self.kernel = kernel;
         self
     }
 
@@ -586,6 +600,13 @@ impl EngineConfig {
                 fp.write(&(k as u64).to_le_bytes());
             }
         }
+        // The kernel path changes the compiled layout (lane-major vs
+        // transposed weight planes), so it is part of the artifact for the
+        // one backend that lowers stochastic kernels. Hashing the
+        // *resolved* path keeps `Auto` sharing the transposed artifact.
+        if self.backend == BackendKind::StochasticFused {
+            fp.write(self.kernel.resolved().label().as_bytes());
+        }
         fp.write(&self.bits.to_le_bytes());
         // NetworkSpec's Debug form covers the name, input shape, and every
         // layer descriptor — the whole topology.
@@ -822,6 +843,19 @@ mod tests {
         assert_eq!(fp, same.artifact_fingerprint(&w, &plan(&same)));
         let tapered = base.clone().with_precision(Precision::PerLayer(vec![32]));
         assert_ne!(fp, tapered.artifact_fingerprint(&w, &plan(&tapered)));
+        // The kernel path is a compiled input: Auto resolves to the
+        // transposed layout (same artifact), the fused baseline does not.
+        let transposed = base.clone().with_kernel(KernelPath::Transposed);
+        assert_eq!(fp, transposed.artifact_fingerprint(&w, &plan(&transposed)));
+        let fused = base.clone().with_kernel(KernelPath::Fused);
+        assert_ne!(fp, fused.artifact_fingerprint(&w, &plan(&fused)));
+        // Analytic backends never lower a stochastic kernel, so the knob
+        // does not split their cache entries.
+        let exp_fused = exp.clone().with_kernel(KernelPath::Fused);
+        assert_eq!(
+            exp.artifact_fingerprint(&w, &plan(&exp)),
+            exp_fused.artifact_fingerprint(&w, &plan(&exp_fused))
+        );
     }
 
     #[test]

@@ -87,6 +87,7 @@ pub mod error;
 pub mod metrics;
 pub mod pool;
 
+pub use crate::accel::network::KernelPath;
 pub use crate::accel::precision::{Precision, PrecisionPlan};
 pub use backend::Backend;
 pub use config::{BackendKind, BatchPolicy, DegradePolicy, EngineConfig, WeightSource};

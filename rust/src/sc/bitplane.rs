@@ -1,0 +1,154 @@
+//! Bit-plane transposed stream primitives: the data-layout core of the
+//! 64-lane SC compute kernel (`accel::network`'s transposed path).
+//!
+//! The fused kernels walk one SNG lane at a time — for every lane of a
+//! neuron's fan-in they XNOR `k/64` stream words into a
+//! [`crate::sc::bitstream::VerticalCounter`]. The transposed layout packs
+//! the streams the *other* way: one `u64` word holds the same cycle `t` of
+//! **64 adjacent lanes**, so the per-cycle APC count `c_t` of a whole
+//! 64-lane block is a single `XNOR + count_ones`, and the B2S comparison
+//! `max(2·c_t, floor) > r4[t]` runs immediately on the finished count —
+//! no bit-plane ripple adder, no per-lane pass.
+//!
+//! ```text
+//! lane-major (fused):             bit-plane transposed:
+//!   word[lane][cw] bit t            word[t][block] bit l
+//!   = lane's cycle cw·64+t          = lane block·64+l's cycle t
+//! ```
+//!
+//! The pivot between the two layouts is [`transpose64`], an in-place
+//! 64×64 bit-matrix transpose (recursive butterfly, LSB-first
+//! convention matching the stream packing of `accel::network`): gather 64
+//! lane-major words for one cycle-word, transpose, and the rows come out
+//! cycle-major. Weights are transposed once at `ForwardPlan` compile;
+//! activations are transposed per L1-sized tile at run time.
+
+/// Lanes covered by one transposed word (the `u64` width).
+pub const LANES: usize = 64;
+
+/// In-place 64×64 bit-matrix transpose with the **LSB-first** bit
+/// convention used by the packed SNG streams: on return,
+/// `out[r] bit c == in[c] bit r`.
+///
+/// Classic recursive block-swap (Hacker's Delight §7-3, mirrored for
+/// LSB-first packing): at step size `j`, swap the high-`j` bits of word
+/// `k` with the low-`j` bits of word `k|j` for every `k` with bit `j`
+/// clear. Runs in 6·64 word operations — far below the cost of the
+/// per-bit gathers it replaces.
+pub fn transpose64(a: &mut [u64; 64]) {
+    let mut j = 32usize;
+    let mut m = 0x0000_0000_FFFF_FFFFu64;
+    loop {
+        let mut k = 0;
+        while k < 64 {
+            let t = ((a[k] >> j) ^ a[k | j]) & m;
+            a[k] ^= t << j;
+            a[k | j] ^= t;
+            k = (k + j + 1) & !j;
+        }
+        j >>= 1;
+        if j == 0 {
+            break;
+        }
+        m ^= m << j;
+    }
+}
+
+/// The per-cycle APC count of a transposed row pair: the number of lanes
+/// whose XNOR product bit is 1 at this cycle, summed over the row's lane
+/// blocks. `a` and `w` are one cycle's activation / weight rows
+/// (`lane_blocks` words each); lanes beyond the fan-in must already be
+/// arranged to contribute 0 (the compiled weight planes pair all-ones
+/// tail-lane weight bits with all-zero tail-lane activation bits, so no
+/// runtime mask is needed).
+#[inline]
+pub fn xnor_count(a: &[u64], w: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), w.len());
+    a.iter().zip(w).map(|(&x, &y)| (!(x ^ y)).count_ones()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Gen(u64);
+    impl Gen {
+        fn next(&mut self) -> u64 {
+            self.0 ^= self.0 << 13;
+            self.0 ^= self.0 >> 7;
+            self.0 ^= self.0 << 17;
+            self.0
+        }
+    }
+
+    fn naive_transpose(a: &[u64; 64]) -> [u64; 64] {
+        let mut out = [0u64; 64];
+        for (r, slot) in out.iter_mut().enumerate() {
+            for (c, &word) in a.iter().enumerate() {
+                *slot |= ((word >> r) & 1) << c;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn transpose64_matches_naive_per_bit_transpose() {
+        let mut g = Gen(0xB17_9A7E5);
+        for _ in 0..50 {
+            let mut a = [0u64; 64];
+            for w in a.iter_mut() {
+                *w = g.next();
+            }
+            let want = naive_transpose(&a);
+            let mut got = a;
+            transpose64(&mut got);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn transpose64_is_an_involution() {
+        let mut g = Gen(0x5EED);
+        let mut a = [0u64; 64];
+        for w in a.iter_mut() {
+            *w = g.next();
+        }
+        let orig = a;
+        transpose64(&mut a);
+        transpose64(&mut a);
+        assert_eq!(a, orig);
+    }
+
+    #[test]
+    fn transpose64_on_identity_and_edges() {
+        // Identity matrix (bit r of word r) is its own transpose.
+        let mut eye = [0u64; 64];
+        for (r, w) in eye.iter_mut().enumerate() {
+            *w = 1u64 << r;
+        }
+        let mut t = eye;
+        transpose64(&mut t);
+        assert_eq!(t, eye);
+        // A single row becomes a single column.
+        let mut a = [0u64; 64];
+        a[5] = !0;
+        transpose64(&mut a);
+        assert!(a.iter().all(|&w| w == 1 << 5));
+    }
+
+    #[test]
+    fn xnor_count_matches_per_bit_count() {
+        let mut g = Gen(0xC0DE);
+        for len in [1usize, 2, 7] {
+            let a: Vec<u64> = (0..len).map(|_| g.next()).collect();
+            let w: Vec<u64> = (0..len).map(|_| g.next()).collect();
+            let mut want = 0u32;
+            for (x, y) in a.iter().zip(&w) {
+                for b in 0..64 {
+                    want += (((x >> b) & 1) == ((y >> b) & 1)) as u32;
+                }
+            }
+            assert_eq!(xnor_count(&a, &w), want);
+        }
+    }
+}

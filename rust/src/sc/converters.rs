@@ -20,13 +20,21 @@ pub fn b2s_with_randoms(code: u32, rs: &[u32]) -> Bitstream {
 
 /// Behavioral B2S driving its own LFSR (independent output). Widths
 /// outside the LFSR table (3..=16) are a typed error, not a panic.
+///
+/// The random sequence is materialized once and compared through
+/// [`b2s_with_randoms`] — the same hoist the compiled engine applies at
+/// `ForwardPlan::compile`, where each layer's comparison sequence and
+/// threshold floor are stage constants rather than per-call work.
 pub fn b2s(code: u32, bits: u32, len: usize, seed: u32) -> Result<Bitstream, UnsupportedLfsrWidth> {
     let mut lfsr = Lfsr::new(bits, seed)?;
-    Ok(Bitstream::from_fn(len, |_| {
-        let r = lfsr.value();
-        lfsr.step();
-        code > r
-    }))
+    let rs: Vec<u32> = (0..len)
+        .map(|_| {
+            let r = lfsr.value();
+            lfsr.step();
+            r
+        })
+        .collect();
+    Ok(b2s_with_randoms(code, &rs))
 }
 
 /// Behavioral S2B: the count of ones (the unipolar code of the stream,

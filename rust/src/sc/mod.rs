@@ -6,6 +6,8 @@
 //!
 //! Components (paper section in parentheses):
 //! * [`bitstream`] — packed bitstreams, SC multiply, correlation (II-A);
+//! * [`bitplane`] — transposed bit-plane layout: 64-lane XNOR+popcount
+//!   words and the 64×64 bit transpose behind the fast kernels (II-A);
 //! * [`lfsr`] — maximal-length LFSR random-number sources (II-C);
 //! * [`pcc`] — CMP / MUX-chain / RFET NAND-NOR probability-conversion
 //!   circuits, incl. Lemma 1's inverter-insertion rule (II-C, III-A);
@@ -18,6 +20,7 @@
 
 pub mod adder_tree;
 pub mod apc;
+pub mod bitplane;
 pub mod bitstream;
 pub mod converters;
 pub mod lfsr;

@@ -144,7 +144,14 @@ pub fn expectation(pre: f64, n: usize, relu: bool) -> f64 {
 /// This is the exact model `python/compile/model.py` trains through — SC
 /// hardware implements a softplus-like activation, not a sharp ReLU.
 pub fn expectation_smooth_relu(pre: f64, sigma2: f64, n: usize) -> f64 {
-    let scale = (1u64 << m_bits(n)) as f64;
+    expectation_smooth_relu_scaled(pre, sigma2, n, (1u64 << m_bits(n)) as f64)
+}
+
+/// [`expectation_smooth_relu`] with the 2^m divisor precomputed — the
+/// compiled-stage form: `accel::network` stores `scale` once per layer at
+/// `ForwardPlan::compile` and hoists the per-call [`m_bits`] shift out of
+/// its per-neuron loops.
+pub fn expectation_smooth_relu_scaled(pre: f64, sigma2: f64, n: usize, scale: f64) -> f64 {
     let sigma = sigma2.max(0.0).sqrt();
     let softplus = if sigma < 1e-9 {
         pre.max(0.0)

@@ -12,10 +12,14 @@
 //! * on small random valid stacks, the fused stochastic engine and the
 //!   per-bit reference (which lower the same descriptors) agree
 //!   bit-for-bit — including under randomized injected fault plans
-//!   (`scnn::faults`), which both datapaths must honor identically.
+//!   (`scnn::faults`), which both datapaths must honor identically;
+//! * the transposed bit-plane kernel is a third lowering of the same IR
+//!   and must agree with both, on random topologies × random per-layer
+//!   plans × random fault plans, and on the packing edge cases (fan-ins
+//!   and stream lengths that are not multiples of the 64-lane word).
 
 use scnn::accel::layers::{Conv2d, LayerKind, LayerSpec, NetworkSpec, Shape};
-use scnn::accel::network::{reference, ForwardMode, ForwardPlan, QuantizedWeights};
+use scnn::accel::network::{reference, ForwardMode, ForwardPlan, KernelPath, QuantizedWeights};
 use scnn::accel::precision::{autotune, AutoTuneConfig, PrecisionPlan, WORD};
 use scnn::accel::stage::total_macs;
 use scnn::faults::FaultPlan;
@@ -328,6 +332,86 @@ fn prop_random_fault_plans_keep_fused_and_reference_bit_exact() {
         assert_eq!(fused, golden, "ks={ks:?} seed={seed} faults={fp:?}");
         assert!(fused.iter().all(|v| v.is_finite()));
     });
+}
+
+#[test]
+fn prop_transposed_fused_reference_three_way_bit_exact() {
+    // The kernel-path contract: the transposed bit-plane kernel, the fused
+    // lane-major kernel, and the per-bit reference are three lowerings of
+    // the same stage IR — bit-for-bit identical on random topologies under
+    // random per-layer precision plans AND random fault plans.
+    prop("kernel-three-way", 8, |g| {
+        let net = grow_random_net(g, 3);
+        let weights = QuantizedWeights::synthetic(&net, 8, g.next()).unwrap();
+        let n_compute = net.stages().unwrap().iter().filter(|s| s.is_compute()).count();
+        let ks: Vec<usize> = (0..n_compute).map(|_| WORD * g.range(2, 12) as usize).collect();
+        let plan = PrecisionPlan::per_layer(ks.clone());
+        let mut fp = FaultPlan::new(g.next())
+            .with_bit_flip_rate(g.range(0, 40) as f64 / 1000.0)
+            .with_sng_correlation_rate(g.range(0, 25) as f64 / 100.0)
+            .with_sram_upset_rate(g.range(0, 15) as f64 / 1000.0);
+        if g.chance(50) {
+            fp = fp.with_stuck_lane(
+                g.range(0, n_compute as u64) as usize,
+                g.range(0, 4) as usize,
+                g.chance(50),
+            );
+        }
+        let faults = g.chance(70).then_some(&fp);
+        let in_len = net.input.0 * net.input.1 * net.input.2;
+        let input: Vec<f64> = (0..in_len).map(|i| ((i % 7) as f64) / 7.0).collect();
+        let seed = g.range(1, 1000) as u32;
+        let mode = ForwardMode::Stochastic { k: plan.max_k(), seed };
+        let run = |kernel: KernelPath| {
+            ForwardPlan::compile_with_opts(&net, &weights, mode, &plan, faults, kernel)
+                .unwrap()
+                .run(&input)
+        };
+        let transposed = run(KernelPath::Transposed);
+        assert_eq!(transposed, run(KernelPath::Fused), "ks={ks:?} seed={seed} faults={fp:?}");
+        let golden = reference::forward_stochastic_plan_faulted(
+            &net, &weights, &input, &plan, seed, faults,
+        );
+        assert_eq!(transposed, golden, "ks={ks:?} seed={seed} faults={fp:?}");
+        assert!(transposed.iter().all(|v| v.is_finite()));
+    });
+}
+
+#[test]
+fn transposed_kernel_odd_fanin_odd_k_edge_cases() {
+    // The packing edge cases of the bit-plane layout: fan-ins that are not
+    // multiples of the 64-lane block (9, 25, 63, 65, 100 — tail lanes must
+    // contribute exactly zero) against stream lengths that are WORD-aligned
+    // but not 64-bit-word multiples (8, 104, 136 — tail cycles must be
+    // clipped, not counted).
+    for &(inputs, hidden) in &[(9usize, 5usize), (25, 3), (63, 4), (65, 4), (100, 2)] {
+        let net = NetworkSpec {
+            name: format!("odd-{inputs}"),
+            input: (1, 1, inputs),
+            layers: vec![
+                LayerSpec::active(LayerKind::Dense { inputs, outputs: hidden }),
+                LayerSpec::linear(LayerKind::Dense { inputs: hidden, outputs: 2 }),
+            ],
+        };
+        let weights = QuantizedWeights::synthetic(&net, 8, inputs as u64).unwrap();
+        let input: Vec<f64> = (0..inputs).map(|i| ((i % 9) as f64) / 9.0).collect();
+        for k in [8usize, 104, 136] {
+            let plan = PrecisionPlan::uniform(k, 2);
+            let mode = ForwardMode::Stochastic { k, seed: 3 };
+            let run = |kernel: KernelPath| {
+                ForwardPlan::compile_with_opts(&net, &weights, mode, &plan, None, kernel)
+                    .unwrap()
+                    .run(&input)
+            };
+            let transposed = run(KernelPath::Transposed);
+            assert_eq!(transposed, run(KernelPath::Fused), "inputs={inputs} k={k}");
+            assert_eq!(
+                transposed,
+                reference::forward_stochastic(&net, &weights, &input, k, 3),
+                "inputs={inputs} k={k}"
+            );
+        }
+    }
 }
 
 #[test]
