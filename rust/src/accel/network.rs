@@ -664,9 +664,18 @@ impl ForwardPlan {
             }
             _ => weights,
         };
+        let stages = net.stages()?;
+        // Site-addressed faults must land inside the compiled plan: a
+        // stuck lane aimed at a nonexistent layer/lane would silently
+        // never fire, and a fault campaign "surviving" it proves nothing.
+        // (This check runs before the is_noop filter — a plan carrying
+        // only out-of-bounds sites is exactly the mistake it catches.)
+        if let Some(f) = faults {
+            f.validate_sites(&stages)
+                .map_err(|e| anyhow::anyhow!("network {:?}: {e}", net.name))?;
+        }
         let faults: Option<Arc<FaultPlan>> =
             faults.filter(|f| !f.is_noop()).map(|f| Arc::new(f.clone()));
-        let stages = net.stages()?;
         let n_compute = stages.iter().filter(|s| s.is_compute()).count();
         if weights.layers.len() != n_compute {
             bail!(
@@ -1979,6 +1988,35 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("does not divide"), "{err}");
+    }
+
+    #[test]
+    fn compile_rejects_fault_sites_outside_the_plan() {
+        let net = tiny_net();
+        let w = tiny_weights(8, 1);
+        let mode = ForwardMode::Stochastic { k: 32, seed: 1 };
+        let plan = PrecisionPlan::uniform(32, 2);
+        // tiny_net compute layers: conv fan-in 9, dense fan-in 18.
+        for (bad, needle) in [
+            (FaultPlan::new(1).with_stuck_lane(0, 9, true), "fan-in"),
+            (FaultPlan::new(1).with_stuck_lane(1, 18, false), "fan-in"),
+            (FaultPlan::new(1).with_stuck_lane(2, 0, true), "compute layers"),
+        ] {
+            let err = ForwardPlan::compile_with_precision_faults(
+                &net,
+                &w,
+                mode,
+                &plan,
+                Some(&bad),
+            )
+            .unwrap_err()
+            .to_string();
+            assert!(err.contains(needle), "{err}");
+        }
+        // The boundary sites compile.
+        let ok = FaultPlan::new(1).with_stuck_lane(0, 8, true).with_stuck_lane(1, 17, false);
+        assert!(ForwardPlan::compile_with_precision_faults(&net, &w, mode, &plan, Some(&ok))
+            .is_ok());
     }
 
     #[test]

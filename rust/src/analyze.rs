@@ -1,0 +1,1043 @@
+//! `sc-lint` — static analysis over the full configuration space, run
+//! WITHOUT executing a single SC cycle.
+//!
+//! Stochastic-computing correctness hazards are notoriously silent:
+//! correlated bitstreams bias every XNOR multiply they feed, an undersized
+//! accumulator clips counts instead of overflowing loudly, and a fault
+//! plan aimed at a lane that does not exist simply never fires. This
+//! module walks the *same* compiled artifacts the kernels execute — the
+//! stage IR ([`crate::accel::stage`]), the keyed SNG stream-generation
+//! scheme of `accel::network`, the resolved [`PrecisionPlan`], the
+//! [`FaultPlan`], and the serving configuration — and proves a set of
+//! invariants about them, emitting typed, coded [`Diagnostic`]s where a
+//! proof fails.
+//!
+//! The analyses:
+//!
+//! * **Stream-correlation lint** (`SC001`/`SC002`) — the engine keys every
+//!   SNG stream as `(base, lane)` with `base = seed ^ wl·0x9E37_79B9`:
+//!   activation site `p` uses `(base, p)`, padding lane `j` uses
+//!   `(base, 2⁴⁰ + j)`, and weight lane `(oc, j)` uses
+//!   `(base ^ 0x5EED_CAFE, (oc << 20) + j)`. Two streams feeding one XNOR
+//!   are decorrelated iff their keys differ, so the lint proves the key
+//!   spaces are disjoint and injective: activation sites stay below the
+//!   2⁴⁰ padding offset, and weight-lane packing stays injective only
+//!   while `fan_in ≤ 2²⁰` — a wider stage aliases weight lanes across
+//!   output channels (`SC001`, Error). Collisions deliberately induced by
+//!   [`FaultPlan::correlated_weight_lane`] are *declared* and downgrade to
+//!   `SC002` Info, with the exact collapsed-lane count (every draw is a
+//!   pure function of the plan seed, so the analyzer enumerates them
+//!   without running the datapath).
+//! * **Counter-width sufficiency** (`SC003`) — per compute stage, prove
+//!   the `m = ⌈log₂(fan_in+1)⌉`-bit APC/`VerticalCounter` planes hold the
+//!   per-cycle count, the `2^(m+1)` B2S comparator domain holds the
+//!   doubled count `2c`, and the 32-bit `ones` accumulators of the
+//!   transposed kernel hold a full stage's cycle count (`k ≤ 2³² − 1`;
+//!   tail lanes of the 64-lane bit-plane packing are XNOR identities and
+//!   provably contribute zero, so the per-cycle bound is `fan_in`, not the
+//!   padded lane count).
+//! * **IR dataflow lints** (`SC007`/`SC008`) — every gather-table index
+//!   stays inside the stage's input sites; stage shapes chain; residual
+//!   `Add{from}` branches reference earlier, saved, shape-compatible
+//!   stages; saved branches are actually consumed (a dead save is a
+//!   warning, not a crash — it only wastes memory).
+//! * **Precision lints** (`SC004`/`SC005`) — a stage `k` below the
+//!   `2^bits` quantization resolution floor aliases adjacent codes to one
+//!   stream probability (`SC004`, Warning); a degrade-policy `min_k` that
+//!   is zero, word-misaligned, or *above* a resolved stage length would
+//!   make the first SLO-breach fallback step raise precision (`SC005`).
+//! * **Deployment lints** (`SC006`/`SC009`/`SC010`) — fault-plan sites
+//!   beyond the compiled stage/lane bounds, tenant aggregate sustained rps
+//!   against the modeled pool throughput, and a pool admission queue too
+//!   shallow to keep every shard busy.
+//!
+//! Three consumers: `Engine::open` runs [`analyze_engine_config`] as a
+//! pre-flight (errors become [`crate::engine::EngineError::Analysis`],
+//! warnings surface in `SessionMetrics::analysis_warnings`); the
+//! `scnn analyze` CLI subcommand renders reports as text or JSON over the
+//! whole topology zoo; and CI gates every PR on a zero-error,
+//! zero-warning pass (`--deny-warnings`).
+//!
+//! The closed-loop invariant (property-tested in `tests/stage_ir.rs`):
+//! any configuration this analyzer passes with **zero errors** runs
+//! fused == transposed == reference bit-exact.
+
+#![deny(clippy::unwrap_used)]
+
+use crate::accel::layers::NetworkSpec;
+use crate::accel::precision::{PrecisionPlan, WORD};
+use crate::accel::stage::{self, StageDescriptor, StageOp};
+use crate::engine::{DegradePolicy, EngineConfig, HardwareEstimate};
+use crate::faults::FaultPlan;
+use crate::sc::neuron;
+use crate::serve::Tenant;
+use std::fmt;
+
+/// The weight-lane key packs `(oc, j)` as `(oc << 20) + j`; injectivity
+/// (and therefore pairwise stream decorrelation) holds only while every
+/// fan-in index fits the shift.
+pub const WEIGHT_LANE_SPAN: usize = 1 << 20;
+
+/// Padding lanes are keyed at `2^40 + j`, so activation site indices must
+/// stay below this offset to keep the two families disjoint.
+pub const PAD_LANE_OFFSET: u64 = 1 << 40;
+
+/// Diagnostic severity, ordered `Info < Warning < Error`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Expected/declared behavior worth surfacing (e.g. collisions the
+    /// fault plan asked for).
+    Info,
+    /// Suspicious but runnable; `--deny-warnings` promotes these to
+    /// failures in CI.
+    Warning,
+    /// The configuration is wrong; `Engine::open` refuses it.
+    Error,
+}
+
+impl Severity {
+    /// Lowercase label used by the text and JSON renderings.
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// One coded finding. `code` is stable (`SC001`..) so tests, CI gates, and
+/// humans can match on it; `stage`/`lane` locate the finding when it has a
+/// span; `suggested_fix` says what to change, not just what is wrong.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    /// Stable diagnostic code (`SC001`..`SC010`, `SC000` for an invalid
+    /// network/plan).
+    pub code: &'static str,
+    /// How bad it is.
+    pub severity: Severity,
+    /// Layer index in the [`NetworkSpec`] the finding is anchored to.
+    pub stage: Option<usize>,
+    /// Fan-in lane index, when the finding names one.
+    pub lane: Option<usize>,
+    /// What is wrong (one sentence, self-contained).
+    pub message: String,
+    /// What to change to make it pass.
+    pub suggested_fix: Option<String>,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}]", self.severity, self.code)?;
+        if let Some(s) = self.stage {
+            write!(f, " stage {s}")?;
+        }
+        if let Some(l) = self.lane {
+            write!(f, " lane {l}")?;
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+/// An analysis result: every diagnostic, ordered worst-first.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    diags: Vec<Diagnostic>,
+}
+
+impl Report {
+    /// An empty (all-clear) report.
+    pub fn new() -> Self {
+        Report::default()
+    }
+
+    fn push(
+        &mut self,
+        code: &'static str,
+        severity: Severity,
+        stage: Option<usize>,
+        lane: Option<usize>,
+        message: String,
+        fix: Option<String>,
+    ) {
+        self.diags.push(Diagnostic { code, severity, stage, lane, message, suggested_fix: fix });
+    }
+
+    /// Fold another report's diagnostics into this one.
+    pub fn merge(&mut self, other: Report) {
+        self.diags.extend(other.diags);
+    }
+
+    /// Every diagnostic, errors first (stable within a severity).
+    pub fn diagnostics(&self) -> Vec<&Diagnostic> {
+        let mut v: Vec<&Diagnostic> = self.diags.iter().collect();
+        v.sort_by(|a, b| b.severity.cmp(&a.severity));
+        v
+    }
+
+    /// Diagnostics at exactly `severity`.
+    pub fn at(&self, severity: Severity) -> impl Iterator<Item = &Diagnostic> {
+        self.diags.iter().filter(move |d| d.severity == severity)
+    }
+
+    /// Number of `Error` diagnostics.
+    pub fn error_count(&self) -> usize {
+        self.at(Severity::Error).count()
+    }
+
+    /// Number of `Warning` diagnostics.
+    pub fn warning_count(&self) -> usize {
+        self.at(Severity::Warning).count()
+    }
+
+    /// Number of `Info` diagnostics.
+    pub fn info_count(&self) -> usize {
+        self.at(Severity::Info).count()
+    }
+
+    /// True when any diagnostic is an `Error`.
+    pub fn has_errors(&self) -> bool {
+        self.error_count() > 0
+    }
+
+    /// True when a given code was emitted at any severity.
+    pub fn has_code(&self, code: &str) -> bool {
+        self.diags.iter().any(|d| d.code == code)
+    }
+
+    /// One line per error, `; `-joined — the payload of
+    /// [`crate::engine::EngineError::Analysis`].
+    pub fn error_summary(&self) -> String {
+        self.at(Severity::Error).map(|d| d.to_string()).collect::<Vec<_>>().join("; ")
+    }
+
+    /// Human-readable rendering: one line per diagnostic (worst first)
+    /// plus an indented fix line where one is suggested.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for d in self.diagnostics() {
+            out.push_str(&d.to_string());
+            out.push('\n');
+            if let Some(fix) = &d.suggested_fix {
+                out.push_str(&format!("  fix: {fix}\n"));
+            }
+        }
+        out
+    }
+
+    /// Machine-readable rendering: a JSON array of diagnostic objects
+    /// (hand-rolled — serde is not vendored in this offline environment).
+    pub fn render_json(&self) -> String {
+        let items: Vec<String> = self
+            .diagnostics()
+            .iter()
+            .map(|d| {
+                let mut fields = vec![
+                    format!("\"code\": \"{}\"", d.code),
+                    format!("\"severity\": \"{}\"", d.severity.label()),
+                ];
+                if let Some(s) = d.stage {
+                    fields.push(format!("\"stage\": {s}"));
+                }
+                if let Some(l) = d.lane {
+                    fields.push(format!("\"lane\": {l}"));
+                }
+                fields.push(format!("\"message\": \"{}\"", json_escape(&d.message)));
+                if let Some(fix) = &d.suggested_fix {
+                    fields.push(format!("\"suggested_fix\": \"{}\"", json_escape(fix)));
+                }
+                format!("{{{}}}", fields.join(", "))
+            })
+            .collect();
+        format!("[{}]", items.join(", "))
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Analyze a network under a resolved per-layer precision plan, an
+/// optional fault plan, and the quantization width. Never executes the
+/// datapath and never panics: an invalid network or a plan that does not
+/// fit it becomes an `SC000` Error diagnostic instead.
+pub fn analyze_network(
+    net: &NetworkSpec,
+    precision: &PrecisionPlan,
+    bits: u32,
+    faults: Option<&FaultPlan>,
+) -> Report {
+    let mut r = Report::new();
+    let stages = match net.stages() {
+        Ok(s) => s,
+        Err(e) => {
+            r.push(
+                "SC000",
+                Severity::Error,
+                None,
+                None,
+                format!("network {:?} fails shape validation: {e:#}", net.name),
+                Some("fix the layer stack so NetworkSpec::validate accepts it".into()),
+            );
+            return r;
+        }
+    };
+    let n_compute = stages.iter().filter(|s| s.is_compute()).count();
+    if let Err(e) = precision.validate_for(n_compute) {
+        r.push(
+            "SC000",
+            Severity::Error,
+            None,
+            None,
+            format!("precision plan does not fit network {:?}: {e}", net.name),
+            Some(format!(
+                "supply one positive multiple of {WORD} per compute layer ({n_compute} here)"
+            )),
+        );
+        return r;
+    }
+    r.merge(analyze_stages(&stages, precision, bits, faults));
+    r
+}
+
+/// Analyze an already-compiled stage chain (the lower-level entry point —
+/// tests use it to probe hand-built descriptor lists the high-level
+/// [`NetworkSpec::stages`] compiler would never emit).
+pub fn analyze_stages(
+    stages: &[StageDescriptor],
+    precision: &PrecisionPlan,
+    bits: u32,
+    faults: Option<&FaultPlan>,
+) -> Report {
+    let mut r = Report::new();
+    lint_dataflow(&mut r, stages);
+    for st in stages.iter().filter(|s| s.is_compute()) {
+        lint_compute_stage(&mut r, st, precision, bits, faults);
+    }
+    lint_fault_sites(&mut r, stages, faults);
+    r
+}
+
+/// `SC007`/`SC008`: gather bounds, stage chaining, residual dataflow.
+fn lint_dataflow(r: &mut Report, stages: &[StageDescriptor]) {
+    let mut consumed = vec![false; stages.len()];
+    for (i, st) in stages.iter().enumerate() {
+        if st.index != i {
+            r.push(
+                "SC008",
+                Severity::Error,
+                Some(i),
+                None,
+                format!("stage at position {i} carries index {} — the chain is not contiguous", st.index),
+                Some("renumber the stage descriptors 0..n in execution order".into()),
+            );
+        }
+        if let Some(next) = stages.get(i + 1) {
+            if st.out_shape != next.in_shape {
+                r.push(
+                    "SC008",
+                    Severity::Error,
+                    Some(i),
+                    None,
+                    format!(
+                        "stage {i} ({}) emits {:?} but stage {} consumes {:?} — shapes do not chain",
+                        st.label(),
+                        st.out_shape,
+                        i + 1,
+                        next.in_shape
+                    ),
+                    Some("make each stage's out_shape the next stage's in_shape".into()),
+                );
+            }
+        }
+        if let StageOp::Add { from } = st.op {
+            if from >= i {
+                r.push(
+                    "SC008",
+                    Severity::Error,
+                    Some(i),
+                    None,
+                    format!("residual add at stage {i} references stage {from}, which is not earlier"),
+                    Some("point Add{from} at an already-executed stage".into()),
+                );
+            } else {
+                consumed[from] = true;
+                if !stages[from].save_output {
+                    r.push(
+                        "SC008",
+                        Severity::Error,
+                        Some(i),
+                        None,
+                        format!(
+                            "residual add at stage {i} reads stage {from}, whose output is never saved"
+                        ),
+                        Some(format!("mark stage {from} save_output so the branch survives")),
+                    );
+                }
+                if stages[from].out_shape != st.in_shape {
+                    r.push(
+                        "SC008",
+                        Severity::Error,
+                        Some(i),
+                        None,
+                        format!(
+                            "residual add at stage {i} merges {:?} into {:?} — branch shapes differ",
+                            stages[from].out_shape, st.in_shape
+                        ),
+                        Some("merge only branches with identical output shapes".into()),
+                    );
+                }
+            }
+        }
+    }
+    for (i, st) in stages.iter().enumerate() {
+        if st.save_output && !consumed[i] {
+            r.push(
+                "SC008",
+                Severity::Warning,
+                Some(i),
+                None,
+                format!(
+                    "stage {i} ({}) saves its output but no later residual add consumes it — a dead branch holding {} values alive",
+                    st.label(),
+                    st.out_len()
+                ),
+                Some("drop save_output (or the vestigial Add that once read it)".into()),
+            );
+        }
+    }
+    // Gather-table bounds proof: every window index addresses a real input
+    // site of its stage.
+    for st in stages.iter().filter(|s| s.is_compute()) {
+        if let Some(table) = stage::gather(st) {
+            let in_len = st.in_len();
+            'windows: for (wi, window) in table.windows.iter().enumerate() {
+                for (j, site) in window.iter().enumerate() {
+                    if let Some(p) = site {
+                        if *p >= in_len {
+                            r.push(
+                                "SC007",
+                                Severity::Error,
+                                Some(st.index),
+                                Some(j),
+                                format!(
+                                    "gather window {wi} reads input site {p} but stage {} has only {in_len} sites",
+                                    st.index
+                                ),
+                                Some("regenerate the gather table from the stage geometry".into()),
+                            );
+                            break 'windows; // one proof failure per stage is plenty
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The per-compute-stage lints: stream-key injectivity (`SC001`),
+/// declared correlation collisions (`SC002`), counter/accumulator width
+/// (`SC003`), and the quantization resolution floor (`SC004`).
+fn lint_compute_stage(
+    r: &mut Report,
+    st: &StageDescriptor,
+    precision: &PrecisionPlan,
+    bits: u32,
+    faults: Option<&FaultPlan>,
+) {
+    let Some(wl) = st.weight_layer else {
+        r.push(
+            "SC008",
+            Severity::Error,
+            Some(st.index),
+            None,
+            format!("compute stage {} carries no weight-layer index", st.index),
+            Some("number the compute stages' weight layers contiguously".into()),
+        );
+        return;
+    };
+    let Some((out_ch, fan_in)) = st.weight_shape() else {
+        return;
+    };
+    // `PrecisionPlan::k_for` panics out of range; the analyzer must not.
+    let Some(&k) = precision.ks().get(wl) else {
+        r.push(
+            "SC000",
+            Severity::Error,
+            Some(st.index),
+            None,
+            format!(
+                "precision plan covers {} compute layers but stage {} is weight layer {wl}",
+                precision.len(),
+                st.index
+            ),
+            Some("supply one stream length per compute layer".into()),
+        );
+        return;
+    };
+
+    // --- SC001: stream-key injectivity. The three key families feeding a
+    // stage's XNORs are (base, p) for activation sites, (base, 2^40 + j)
+    // for padding lanes, and (base ^ 0x5EED_CAFE, (oc << 20) + j) for
+    // weight lanes. The weight family is base-disjoint from the other two
+    // (the XOR constant is nonzero), activation/padding stay disjoint
+    // while every site index is below 2^40, and the weight-lane packing is
+    // injective only while fan_in fits the 20-bit shift.
+    if fan_in > WEIGHT_LANE_SPAN {
+        r.push(
+            "SC001",
+            Severity::Error,
+            Some(st.index),
+            Some(WEIGHT_LANE_SPAN),
+            format!(
+                "stage {} fan-in {fan_in} exceeds the 2^20 weight-lane key span: lane (oc, j) and \
+                 (oc+1, j-2^20) generate from the SAME LFSR state, correlating XNOR products \
+                 across output channels",
+                st.index
+            ),
+            Some(format!(
+                "keep compute-stage fan-in at or below {WEIGHT_LANE_SPAN}, or widen the lane-key \
+                 packing shift in build_layer_plan AND reference::lane_stream together"
+            )),
+        );
+    }
+    if st.in_len() as u64 >= PAD_LANE_OFFSET {
+        r.push(
+            "SC001",
+            Severity::Error,
+            Some(st.index),
+            None,
+            format!(
+                "stage {} has {} input sites, reaching the 2^40 padding-lane key offset: an \
+                 activation stream and a padding stream would share one SNG key",
+                st.index,
+                st.in_len()
+            ),
+            Some("shrink the stage input or raise the padding-lane key offset".into()),
+        );
+    }
+
+    // --- SC002: declared correlation collisions. Every
+    // FaultPlan::correlated_weight_lane draw is a pure function of (plan
+    // seed, wl, oc, j), so the exact set of collapsed lanes is known
+    // statically. Declared means Info, not Error — the closed-loop
+    // bit-exactness contract still holds because fused, transposed, and
+    // reference all honor the same collapsed keys.
+    if let Some(f) = faults.filter(|f| f.sng_correlation_rate > 0.0) {
+        let lanes = out_ch * fan_in;
+        let collapsed = (0..out_ch)
+            .flat_map(|oc| (0..fan_in).map(move |j| (oc, j)))
+            .filter(|&(oc, j)| f.correlated_weight_lane(wl, oc, j))
+            .count();
+        if collapsed > 0 {
+            r.push(
+                "SC002",
+                Severity::Info,
+                Some(st.index),
+                None,
+                format!(
+                    "fault plan (seed {}, sng_correlation_rate {}) collapses {collapsed}/{lanes} \
+                     weight lanes of stage {} onto the raw activation RNS — declared correlated \
+                     XNOR products",
+                    f.seed,
+                    f.sng_correlation_rate,
+                    st.index
+                ),
+                Some("intended by the fault plan; drop with_sng_correlation_rate to restore \
+                      per-lane decorrelation"
+                    .into()),
+            );
+        }
+    }
+
+    // --- SC003: counter-width sufficiency. m = ceil(log2(fan_in + 1))
+    // plans hold per-cycle counts in [0, fan_in]; the B2S comparator works
+    // in the doubled 2^(m+1) domain; and the transposed kernel's per-
+    // neuron `ones` accumulator is 32-bit. Transposed tail lanes (the
+    // 64-lane padding above fan_in) are XNOR identities contributing zero,
+    // so fan_in — not the padded lane count — is the true per-cycle bound.
+    if fan_in == 0 {
+        r.push(
+            "SC003",
+            Severity::Error,
+            Some(st.index),
+            None,
+            format!("compute stage {} has zero fan-in — no counter width is meaningful", st.index),
+            Some("give the stage at least one input lane".into()),
+        );
+        return;
+    }
+    let m = neuron::m_bits(fan_in);
+    if (fan_in as u64) > (1u64 << m) - 1 {
+        r.push(
+            "SC003",
+            Severity::Error,
+            Some(st.index),
+            None,
+            format!(
+                "stage {}: an {m}-bit counter holds at most {} but the per-cycle count reaches \
+                 fan-in {fan_in}",
+                st.index,
+                (1u64 << m) - 1
+            ),
+            Some("widen the APC/VerticalCounter planes to ceil(log2(fan_in + 1)) bits".into()),
+        );
+    }
+    if 2 * (fan_in as u64) >= 1u64 << (m + 1) {
+        r.push(
+            "SC003",
+            Severity::Error,
+            Some(st.index),
+            None,
+            format!(
+                "stage {}: the 2^{} B2S comparator domain cannot represent the doubled count \
+                 2·{fan_in}",
+                st.index,
+                m + 1
+            ),
+            Some("widen the B2S comparator to m+1 bits for m = ceil(log2(fan_in + 1))".into()),
+        );
+    }
+    if k as u64 > u32::MAX as u64 {
+        r.push(
+            "SC003",
+            Severity::Error,
+            Some(st.index),
+            None,
+            format!(
+                "stage {} bitstream length k={k} overflows the 32-bit B2S `ones` accumulator \
+                 (at most {} cycles can be counted)",
+                st.index,
+                u32::MAX
+            ),
+            Some(format!(
+                "cap the stage's planned k at {} (the word-aligned 32-bit maximum)",
+                (u32::MAX as usize / WORD) * WORD
+            )),
+        );
+    }
+
+    // --- SC004: quantization resolution floor. A k-cycle stream resolves
+    // probabilities on a 1/k grid; below 2^bits cycles, adjacent quantized
+    // codes alias to the same stream and the extra weight precision is
+    // silently thrown away.
+    let floor = 1usize << bits.min(31);
+    if k < floor {
+        r.push(
+            "SC004",
+            Severity::Warning,
+            Some(st.index),
+            None,
+            format!(
+                "stage {} runs k={k} cycles below the 2^{bits}={floor} quantization resolution \
+                 floor — adjacent {bits}-bit codes alias to the same stream probability",
+                st.index
+            ),
+            Some(format!("raise the stage's k to at least {floor}, or lower --bits")),
+        );
+    }
+}
+
+/// `SC006`: fault-plan sites beyond the compiled stage/lane bounds. The
+/// analyzer warns (the sites simply never fire);
+/// `ForwardPlan::compile_with_precision_faults` rejects the same sites
+/// with a typed error via [`FaultPlan::validate_sites`].
+fn lint_fault_sites(r: &mut Report, stages: &[StageDescriptor], faults: Option<&FaultPlan>) {
+    let Some(f) = faults else { return };
+    let fan_ins: Vec<(usize, usize)> = stages
+        .iter()
+        .filter(|s| s.is_compute())
+        .filter_map(|s| Some((s.index, s.weight_shape()?.1)))
+        .collect();
+    for s in &f.stuck_lanes {
+        match fan_ins.get(s.wl) {
+            None => r.push(
+                "SC006",
+                Severity::Warning,
+                None,
+                Some(s.lane),
+                format!(
+                    "fault plan pins a stuck lane on compute layer {} but the network has only \
+                     {} compute layers — the site can never fire",
+                    s.wl,
+                    fan_ins.len()
+                ),
+                Some(format!("target a compute layer below {}", fan_ins.len())),
+            ),
+            Some(&(stage_idx, fan_in)) if s.lane >= fan_in => r.push(
+                "SC006",
+                Severity::Warning,
+                Some(stage_idx),
+                Some(s.lane),
+                format!(
+                    "fault plan pins stuck lane {} on compute layer {} (stage {stage_idx}) whose \
+                     fan-in is only {fan_in} — the site can never fire",
+                    s.lane, s.wl
+                ),
+                Some(format!("pick a lane below {fan_in}")),
+            ),
+            Some(_) => {}
+        }
+    }
+}
+
+/// Analyze a full engine configuration against its **resolved** precision
+/// plan: the network/stage lints plus the degrade-policy compatibility
+/// check (`SC005`). The k-dependent lints are skipped for the analytic
+/// backends, whose arithmetic never samples a stream.
+pub fn analyze_engine_config(cfg: &EngineConfig, resolved: &PrecisionPlan) -> Report {
+    let faults = cfg.faults.as_ref().filter(|f| !f.is_noop());
+    let mut r = if cfg.k_sensitive() {
+        analyze_network(&cfg.net, resolved, cfg.bits, faults)
+    } else {
+        // Analytic datapaths own no k: run the structural lints under a
+        // nominal full-resolution plan so SC003/SC004 cannot misfire.
+        let nominal =
+            PrecisionPlan::uniform(1usize << cfg.bits.min(16), cfg.net.n_compute().max(1));
+        analyze_network(&cfg.net, &nominal, cfg.bits, faults)
+    };
+    if let Some(policy) = &cfg.degrade {
+        lint_degrade_policy(&mut r, policy, resolved, cfg.k_sensitive());
+    }
+    r
+}
+
+/// `SC005`: degrade-policy `min_k` compatibility with the resolved plan.
+fn lint_degrade_policy(
+    r: &mut Report,
+    policy: &DegradePolicy,
+    resolved: &PrecisionPlan,
+    k_sensitive: bool,
+) {
+    if policy.min_k == 0 || policy.min_k % WORD != 0 {
+        r.push(
+            "SC005",
+            Severity::Error,
+            None,
+            None,
+            format!(
+                "degrade policy min_k={} is not a positive multiple of the {WORD}-cycle word — \
+                 degraded plans would fail precision validation",
+                policy.min_k
+            ),
+            Some(format!("set min_k to a positive multiple of {WORD}")),
+        );
+        return;
+    }
+    if !k_sensitive {
+        return;
+    }
+    if resolved.ks().iter().any(|&k| k < policy.min_k) {
+        r.push(
+            "SC005",
+            Severity::Error,
+            None,
+            None,
+            format!(
+                "degrade policy min_k={} exceeds a resolved stage length (plan {:?}) — the first \
+                 SLO-breach fallback would RAISE precision instead of shedding work",
+                policy.min_k,
+                resolved.ks()
+            ),
+            Some("lower min_k to at most the smallest resolved stage k".into()),
+        );
+    } else if resolved.ks().iter().all(|&k| k <= policy.min_k) {
+        r.push(
+            "SC005",
+            Severity::Warning,
+            None,
+            None,
+            format!(
+                "degrade policy min_k={} already equals every resolved stage length — the policy \
+                 can never shed precision under an SLO breach",
+                policy.min_k
+            ),
+            Some("lower min_k (or raise the plan) so degradation has somewhere to go".into()),
+        );
+    }
+}
+
+/// Deployment lints over the serving configuration: tenant aggregate
+/// sustained rps against the modeled pool throughput (`SC009`) and the
+/// pool admission queue depth against the shard count (`SC010`). The
+/// estimate is optional — without one (e.g. the XLA backend) the
+/// throughput lint is skipped rather than guessed.
+pub fn analyze_deployment(
+    shards: usize,
+    pool_queue_depth: usize,
+    tenants: &[Tenant],
+    estimate: Option<&HardwareEstimate>,
+) -> Report {
+    let mut r = Report::new();
+    if pool_queue_depth > 0 && shards > 0 && pool_queue_depth < shards {
+        r.push(
+            "SC010",
+            Severity::Warning,
+            None,
+            None,
+            format!(
+                "pool admission queue depth {pool_queue_depth} is below the shard count {shards} \
+                 — admission control can never keep every shard busy"
+            ),
+            Some(format!(
+                "raise the pool queue depth to at least {shards} (0 = sum of shard depths)"
+            )),
+        );
+    }
+    let aggregate_rps: f64 = tenants.iter().map(|t| t.rps).filter(|r| *r > 0.0).sum();
+    if aggregate_rps > 0.0 {
+        if let Some(est) = estimate {
+            let latency_us = est.metrics.latency_us;
+            if latency_us > 0.0 {
+                let capacity = shards.max(1) as f64 * 1e6 / latency_us;
+                if aggregate_rps > capacity {
+                    r.push(
+                        "SC009",
+                        Severity::Warning,
+                        None,
+                        None,
+                        format!(
+                            "tenant aggregate sustained quota {aggregate_rps:.0} rps exceeds the \
+                             modeled pool throughput {capacity:.0} rps ({:.2} µs modeled \
+                             inference × {} shard{})",
+                            latency_us,
+                            shards.max(1),
+                            if shards == 1 { "" } else { "s" }
+                        ),
+                        Some("add shards, lower the tenants' rps quotas, or shrink the \
+                              per-layer k so the modeled inference gets faster"
+                            .into()),
+                    );
+                }
+            }
+        }
+    }
+    r
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+    use crate::accel::layers::{LayerKind, LayerSpec};
+    use crate::engine::BackendKind;
+
+    fn dense_net(inputs: usize, outputs: usize) -> NetworkSpec {
+        NetworkSpec {
+            name: format!("dense-{inputs}x{outputs}"),
+            input: (1, 1, inputs),
+            layers: vec![LayerSpec::linear(LayerKind::Dense { inputs, outputs })],
+        }
+    }
+
+    #[test]
+    fn shipped_topologies_are_clean_at_the_resolution_floor() {
+        for name in NetworkSpec::NAMES {
+            let net = NetworkSpec::by_name(name).unwrap();
+            let plan = PrecisionPlan::uniform(256, net.n_compute());
+            let r = analyze_network(&net, &plan, 8, None);
+            assert_eq!(r.error_count(), 0, "{name}: {}", r.render_text());
+            assert_eq!(r.warning_count(), 0, "{name}: {}", r.render_text());
+        }
+    }
+
+    #[test]
+    fn weight_lane_key_aliasing_is_flagged_sc001() {
+        let net = dense_net(WEIGHT_LANE_SPAN + 1, 2);
+        let plan = PrecisionPlan::uniform(32, 1);
+        let r = analyze_network(&net, &plan, 8, None);
+        assert!(r.has_code("SC001"), "{}", r.render_text());
+        assert!(r.has_errors());
+    }
+
+    #[test]
+    fn ones_accumulator_overflow_is_flagged_sc003() {
+        let net = dense_net(16, 4);
+        let k = ((u32::MAX as usize) + 1 + WORD) / WORD * WORD; // > 2^32, word-aligned
+        let plan = PrecisionPlan::uniform(k, 1);
+        let r = analyze_network(&net, &plan, 8, None);
+        assert!(r.has_code("SC003"), "{}", r.render_text());
+        assert!(r.has_errors());
+        assert!(!r.has_code("SC001"), "distinct code from the collision lint");
+    }
+
+    #[test]
+    fn resolution_floor_warning_sc004_is_a_warning_not_an_error() {
+        let net = dense_net(16, 4);
+        let r = analyze_network(&net, &PrecisionPlan::uniform(32, 1), 8, None);
+        assert!(r.has_code("SC004"), "{}", r.render_text());
+        assert_eq!(r.error_count(), 0);
+        assert!(r.warning_count() > 0);
+    }
+
+    #[test]
+    fn declared_correlation_downgrades_to_info_sc002() {
+        let net = dense_net(16, 4);
+        let plan = PrecisionPlan::uniform(256, 1);
+        let f = FaultPlan::new(3).with_sng_correlation_rate(0.5);
+        let r = analyze_network(&net, &plan, 8, Some(&f));
+        assert!(r.has_code("SC002"), "{}", r.render_text());
+        assert_eq!(r.error_count(), 0, "declared collisions are not errors");
+        assert!(r.info_count() > 0);
+    }
+
+    #[test]
+    fn fault_sites_beyond_bounds_warn_sc006() {
+        let net = dense_net(16, 4);
+        let plan = PrecisionPlan::uniform(256, 1);
+        let f = FaultPlan::new(1)
+            .with_stuck_lane(0, 16, true) // lane beyond fan-in
+            .with_stuck_lane(5, 0, false) // layer beyond the network
+            .with_stuck_lane(0, 3, true); // in bounds
+        let r = analyze_network(&net, &plan, 8, Some(&f));
+        assert_eq!(r.at(Severity::Warning).filter(|d| d.code == "SC006").count(), 2);
+        assert_eq!(r.error_count(), 0);
+    }
+
+    #[test]
+    fn dead_saved_branch_and_bad_residuals_are_flagged_sc008() {
+        let net = NetworkSpec::mnist_strided();
+        let mut stages = net.stages().unwrap();
+        // Orphan the saved residual source by retargeting the add.
+        for st in &mut stages {
+            if let StageOp::Add { from } = &mut st.op {
+                *from = 1;
+            }
+        }
+        let plan = PrecisionPlan::uniform(256, net.n_compute());
+        let r = analyze_stages(&stages, &plan, 8, None);
+        assert!(r.has_code("SC008"), "{}", r.render_text());
+        assert!(r.has_errors(), "reading a never-saved branch is an error");
+        assert!(
+            r.at(Severity::Warning).any(|d| d.code == "SC008"),
+            "the orphaned save is a dead-branch warning: {}",
+            r.render_text()
+        );
+    }
+
+    #[test]
+    fn gather_bounds_violations_are_flagged_sc007() {
+        let net = dense_net(16, 4);
+        let mut stages = net.stages().unwrap();
+        // A dense stage gathers sites 0..16; shrink the claimed input so
+        // the (unchanged) gather table indexes out of bounds.
+        stages[0].in_shape = (1, 1, 8);
+        let plan = PrecisionPlan::uniform(256, 1);
+        let r = analyze_stages(&stages, &plan, 8, None);
+        assert!(r.has_code("SC007"), "{}", r.render_text());
+        assert!(r.has_errors());
+    }
+
+    #[test]
+    fn degrade_policy_lints_sc005() {
+        let net = dense_net(16, 4);
+        let base = EngineConfig::new(BackendKind::StochasticFused, net.clone()).with_k(64);
+        let resolved = PrecisionPlan::uniform(64, 1);
+        // Misaligned floor: error.
+        let cfg = base.clone().with_degrade(DegradePolicy {
+            min_k: 13,
+            ..DegradePolicy::default()
+        });
+        let r = analyze_engine_config(&cfg, &resolved);
+        assert!(r.at(Severity::Error).any(|d| d.code == "SC005"), "{}", r.render_text());
+        // Floor above the plan: error (degrading would raise precision).
+        let cfg = base.clone().with_degrade(DegradePolicy {
+            min_k: 128,
+            ..DegradePolicy::default()
+        });
+        let r = analyze_engine_config(&cfg, &resolved);
+        assert!(r.at(Severity::Error).any(|d| d.code == "SC005"), "{}", r.render_text());
+        // Floor equal to the whole plan: inert policy, warning.
+        let cfg = base.clone().with_degrade(DegradePolicy {
+            min_k: 64,
+            ..DegradePolicy::default()
+        });
+        let r = analyze_engine_config(&cfg, &resolved);
+        assert!(r.at(Severity::Warning).any(|d| d.code == "SC005"), "{}", r.render_text());
+        // A sane policy below the plan is clean.
+        let cfg = base.with_degrade(DegradePolicy { min_k: 8, ..DegradePolicy::default() });
+        let r = analyze_engine_config(&cfg, &resolved);
+        assert!(!r.has_code("SC005"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn deployment_lints_sc009_sc010() {
+        let t = |rps: f64| Tenant {
+            name: "t".into(),
+            key: "k".into(),
+            rps,
+            burst: rps.max(1.0),
+        };
+        // Queue shallower than the shard count.
+        let r = analyze_deployment(4, 2, &[], None);
+        assert!(r.has_code("SC010"), "{}", r.render_text());
+        // Queue depth 0 means "sum of shard depths" and is fine.
+        assert!(!analyze_deployment(4, 0, &[], None).has_code("SC010"));
+        // Aggregate quota far above the modeled throughput.
+        let net = NetworkSpec::lenet5();
+        let est = HardwareEstimate::for_config(
+            crate::tech::TechKind::Rfet10,
+            8,
+            1024,
+            &net,
+        );
+        let capacity = 1e6 / est.metrics.latency_us;
+        let r = analyze_deployment(1, 0, &[t(capacity * 10.0)], Some(&est));
+        assert!(r.has_code("SC009"), "{}", r.render_text());
+        // Under capacity: clean. Unlimited (rps = 0) tenants never count.
+        let r = analyze_deployment(1, 0, &[t(capacity * 0.1), t(0.0)], Some(&est));
+        assert!(!r.has_code("SC009"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn invalid_networks_become_sc000_not_panics() {
+        let mut net = dense_net(16, 4);
+        net.layers.push(LayerSpec::linear(LayerKind::Dense { inputs: 99, outputs: 2 }));
+        let r = analyze_network(&net, &PrecisionPlan::uniform(32, 2), 8, None);
+        assert!(r.has_code("SC000"), "{}", r.render_text());
+        assert!(r.has_errors());
+        // A plan that does not fit the network is SC000 too.
+        let net = dense_net(16, 4);
+        let r = analyze_network(&net, &PrecisionPlan::uniform(0, 1), 8, None);
+        assert!(r.has_code("SC000"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn renderings_carry_codes_fixes_and_valid_json() {
+        let net = dense_net(16, 4);
+        let f = FaultPlan::new(1).with_stuck_lane(9, 9, true);
+        let r = analyze_network(&net, &PrecisionPlan::uniform(32, 1), 8, Some(&f));
+        let text = r.render_text();
+        assert!(text.contains("warning[SC006]"), "{text}");
+        assert!(text.contains("fix:"), "{text}");
+        let json = r.render_json();
+        // The vendored serve-side parser must accept the analyzer's JSON.
+        let parsed = crate::serve::json::parse(&json).expect("analyzer JSON parses");
+        match parsed {
+            crate::serve::json::Json::Arr(items) => assert!(!items.is_empty()),
+            other => panic!("expected an array, got {other:?}"),
+        }
+        // Errors sort first in the rendered order.
+        let worst_first = r.diagnostics();
+        for pair in worst_first.windows(2) {
+            assert!(pair[0].severity >= pair[1].severity);
+        }
+    }
+}

@@ -433,8 +433,10 @@ impl EngineConfig {
 
     /// True when the configured backend's arithmetic depends on the
     /// bitstream length (the analytic expectation / fixed-point kinds use
-    /// `k` only for the hardware estimate).
-    fn k_sensitive(&self) -> bool {
+    /// `k` only for the hardware estimate). Crate-visible so the
+    /// [`crate::analyze`] pre-flight can skip the k-dependent lints for
+    /// the analytic backends.
+    pub(crate) fn k_sensitive(&self) -> bool {
         matches!(
             self.backend,
             BackendKind::StochasticFused

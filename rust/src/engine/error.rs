@@ -56,6 +56,13 @@ pub enum EngineError {
         /// How long the caller waited before giving up.
         elapsed: Duration,
     },
+    /// The configuration failed the [`crate::analyze`] static pre-flight
+    /// at session open: at least one `Error`-severity diagnostic (stream
+    /// correlation, counter overflow, dataflow, degrade-policy...) proves
+    /// the datapath would misbehave. The payload is the analyzer's
+    /// error summary (`; `-joined coded diagnostics). Warnings never
+    /// produce this — they surface in `SessionMetrics::analysis_warnings`.
+    Analysis(String),
     /// The request reached a live backend and failed there (malformed
     /// input, executable error). The payload preserves the backend's
     /// message.
@@ -89,6 +96,9 @@ impl fmt::Display for EngineError {
                 "request deadline exceeded after {} µs",
                 elapsed.as_micros()
             ),
+            EngineError::Analysis(what) => {
+                write!(f, "configuration failed static analysis: {what}")
+            }
             EngineError::Request(msg) => write!(f, "request failed: {msg}"),
         }
     }
@@ -155,6 +165,7 @@ mod tests {
             EngineError::InvalidPrecision("k = 100 is not a multiple of 8".into()),
             EngineError::LockPoisoned("results"),
             EngineError::Timeout { elapsed: Duration::from_micros(5000) },
+            EngineError::Analysis("error[SC001] stage 0: aliased weight-lane keys".into()),
             EngineError::Request("bad image".into()),
         ];
         let mut seen = std::collections::HashSet::new();

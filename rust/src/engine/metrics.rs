@@ -273,6 +273,11 @@ pub struct SessionMetrics {
     /// Times the worker fell back to a degraded precision plan after
     /// sustained SLO breaches (`EngineConfig::with_degrade`).
     pub degrade_events: usize,
+    /// Warning-severity diagnostics the [`crate::analyze`] pre-flight
+    /// raised when the session opened (error-severity diagnostics refuse
+    /// the open with `EngineError::Analysis` instead, so a live session
+    /// never carries errors here).
+    pub analysis_warnings: usize,
     /// Wall time since the session was opened.
     pub wall: Duration,
     /// Exact per-request records (percentiles, mean batch).
@@ -332,6 +337,12 @@ impl SessionMetrics {
             s.push_str(&format!(
                 "resilience: {} deadline timeouts, {} precision degrade events\n",
                 self.timeouts, self.degrade_events
+            ));
+        }
+        if self.analysis_warnings > 0 {
+            s.push_str(&format!(
+                "static analysis: {} warning(s) at open (run `scnn analyze` for details)\n",
+                self.analysis_warnings
             ));
         }
         if let Some(e) = self.estimate {
@@ -405,6 +416,8 @@ pub struct PoolMetrics {
     /// Precision degrade events, summed over shards — how often workers
     /// fell back to cheaper plans instead of failing their SLO.
     pub degrade_events: usize,
+    /// Static-analysis warnings raised at shard open, summed over shards.
+    pub analysis_warnings: usize,
     /// Wall time since the pool was opened.
     pub wall: Duration,
     /// Merged per-request latency record (percentiles, mean batch).
@@ -441,7 +454,7 @@ impl PoolMetrics {
         let mut serve = ServeStats::new();
         let mut histogram = LatencyHistogram::new();
         let (mut requests, mut rejected, mut failed, mut batches) = (0, 0, 0, 0);
-        let (mut timeouts, mut degrade_events) = (0, 0);
+        let (mut timeouts, mut degrade_events, mut analysis_warnings) = (0, 0, 0);
         let mut labels: Vec<&str> = Vec::new();
         for m in &per_shard {
             serve.merge(&m.serve);
@@ -452,6 +465,7 @@ impl PoolMetrics {
             batches += m.batches;
             timeouts += m.timeouts;
             degrade_events += m.degrade_events;
+            analysis_warnings += m.analysis_warnings;
             if !labels.contains(&m.backend.as_str()) {
                 labels.push(&m.backend);
             }
@@ -468,6 +482,7 @@ impl PoolMetrics {
             batches,
             timeouts,
             degrade_events,
+            analysis_warnings,
             wall,
             serve,
             histogram,
@@ -551,6 +566,12 @@ impl PoolMetrics {
             s.push_str(&format!(
                 "resilience: {} deadline timeouts, {} precision degrade events\n",
                 self.timeouts, self.degrade_events
+            ));
+        }
+        if self.analysis_warnings > 0 {
+            s.push_str(&format!(
+                "static analysis: {} warning(s) at shard open\n",
+                self.analysis_warnings
             ));
         }
         if let (Some(e), Some(area), Some(power)) =
@@ -729,6 +750,7 @@ mod tests {
             batches: 1,
             timeouts: 1,
             degrade_events: 2,
+            analysis_warnings: 0,
             wall: Duration::from_millis(10),
             serve,
             histogram,
@@ -821,6 +843,7 @@ mod tests {
             batches: 1,
             timeouts: 0,
             degrade_events: 0,
+            analysis_warnings: 0,
             wall: Duration::from_millis(10),
             serve,
             histogram,
@@ -835,6 +858,12 @@ mod tests {
         );
         let degraded = SessionMetrics { degrade_events: 1, ..m.clone() };
         assert!(degraded.summary().contains("0 deadline timeouts, 1 precision degrade"));
+        assert!(
+            !m.summary().contains("static analysis:"),
+            "a clean open's summary carries no analysis line"
+        );
+        let warned = SessionMetrics { analysis_warnings: 2, ..m.clone() };
+        assert!(warned.summary().contains("static analysis: 2 warning"));
         assert!(m.throughput_rps() > 0.0);
         assert!(m.estimated_total_energy_uj().unwrap() > 0.0);
     }

@@ -244,12 +244,36 @@ pub struct Session {
     /// any blocking wait for a response may last before it resolves to
     /// [`EngineError::Timeout`] instead of parking forever.
     deadline: Option<Duration>,
+    /// Warning-severity diagnostics the [`crate::analyze`] pre-flight
+    /// raised at open (errors refuse the session instead) — surfaced in
+    /// [`SessionMetrics::analysis_warnings`].
+    analysis_warnings: usize,
 }
 
 impl Session {
     /// Open a session from a validated configuration (see [`Engine::open`]).
+    ///
+    /// After the cheap shape validation, the [`crate::analyze`] static
+    /// pre-flight runs over the resolved configuration (in-process
+    /// backends only): any `Error`-severity diagnostic — correlated SNG
+    /// streams, an overflowable accumulator, a broken residual, an
+    /// incompatible degrade floor — refuses the session with
+    /// [`EngineError::Analysis`] before a worker thread is ever spawned.
+    /// Warnings are tolerated and counted in
+    /// [`SessionMetrics::analysis_warnings`].
     pub fn open(config: EngineConfig) -> Result<Self> {
         config.validate()?;
+        let analysis_warnings = if config.backend == BackendKind::Xla {
+            0 // the XLA path owns no SC datapath to analyze
+        } else {
+            let weights = config.resolve_weights()?;
+            let resolved = config.resolved_precision(&weights)?;
+            let report = crate::analyze::analyze_engine_config(&config, &resolved);
+            if report.has_errors() {
+                return Err(EngineError::Analysis(report.error_summary()).into());
+            }
+            report.warning_count()
+        };
         let estimate_inputs = if config.backend == BackendKind::Xla {
             None
         } else {
@@ -288,6 +312,7 @@ impl Session {
             opened: Instant::now(),
             queue_depth,
             deadline,
+            analysis_warnings,
         })
     }
 
@@ -592,6 +617,7 @@ impl Session {
             batches: rec.batches,
             timeouts: self.shared.timeouts.load(Ordering::Relaxed) as usize,
             degrade_events: rec.degrade_events,
+            analysis_warnings: self.analysis_warnings,
             wall: self.opened.elapsed(),
             serve: rec.serve.clone(),
             histogram: rec.hist.clone(),

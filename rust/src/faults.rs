@@ -29,8 +29,11 @@
 //! same keys both datapaths already use to generate the streams — so fused
 //! and reference inject byte-identical faults without sharing any state.
 
+#![deny(clippy::unwrap_used)]
+
 use crate::accel::memory;
 use crate::accel::network::QuantizedWeights;
+use crate::accel::stage::StageDescriptor;
 use crate::sc::rng;
 
 /// Salt separating weight-lane correlation draws from bit-flip draws.
@@ -199,6 +202,39 @@ impl FaultPlan {
         mask
     }
 
+    /// Check every site-addressed fault against a compiled stage chain:
+    /// each [`StuckLane`] must name an existing compute layer and a lane
+    /// inside that layer's fan-in. A site that misses would silently never
+    /// fire — a fault campaign "surviving" faults that were never injected
+    /// — so `ForwardPlan::compile_with_precision_faults` rejects such plans
+    /// with the returned message (`scnn::analyze` reports the same sites as
+    /// `SC006` warnings before compilation is ever attempted).
+    pub fn validate_sites(&self, stages: &[StageDescriptor]) -> Result<(), String> {
+        let fan_ins: Vec<usize> = stages
+            .iter()
+            .filter(|s| s.is_compute())
+            .filter_map(|s| s.weight_shape().map(|(_, fan_in)| fan_in))
+            .collect();
+        for s in &self.stuck_lanes {
+            let Some(&fan_in) = fan_ins.get(s.wl) else {
+                return Err(format!(
+                    "fault plan targets a stuck lane on compute layer {} but the network has \
+                     only {} compute layers",
+                    s.wl,
+                    fan_ins.len()
+                ));
+            };
+            if s.lane >= fan_in {
+                return Err(format!(
+                    "fault plan targets stuck lane {} on compute layer {} whose fan-in is only \
+                     {fan_in}",
+                    s.lane, s.wl
+                ));
+            }
+        }
+        Ok(())
+    }
+
     /// Apply deterministic SRAM word upsets to a stored weight tensor: each
     /// code takes a one-bit upset with [`FaultPlan::sram_upset_rate`]. Both
     /// datapaths corrupt the weights through this one function before
@@ -233,6 +269,7 @@ fn bernoulli_threshold(rate: f64) -> u64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::accel::layers::NetworkSpec;
@@ -339,6 +376,29 @@ mod tests {
             f.correlated_weight_lane(1, 2, 3),
             "deterministic"
         );
+    }
+
+    #[test]
+    fn validate_sites_rejects_lanes_outside_the_compiled_plan() {
+        let stages = NetworkSpec::lenet5().stages().unwrap();
+        // lenet5 compute layer 0: conv 1->6 5x5, fan-in 25.
+        assert!(FaultPlan::new(1).with_stuck_lane(0, 24, true).validate_sites(&stages).is_ok());
+        let e = FaultPlan::new(1)
+            .with_stuck_lane(0, 25, true)
+            .validate_sites(&stages)
+            .unwrap_err();
+        assert!(e.contains("fan-in"), "{e}");
+        let e = FaultPlan::new(1)
+            .with_stuck_lane(99, 0, false)
+            .validate_sites(&stages)
+            .unwrap_err();
+        assert!(e.contains("compute layers"), "{e}");
+        // Non-site faults (rates) validate against any plan.
+        assert!(FaultPlan::new(1)
+            .with_bit_flip_rate(0.5)
+            .with_sng_correlation_rate(0.5)
+            .validate_sites(&stages)
+            .is_ok());
     }
 
     #[test]

@@ -113,6 +113,7 @@
 //! target.
 
 pub mod accel;
+pub mod analyze;
 pub mod benchutil;
 pub mod coordinator;
 pub mod data;

@@ -13,6 +13,11 @@
 //! * `sweep`     — Fig. 13 channel-count design-space exploration over
 //!   `Engine::estimate` (the same modeled-hardware struct sessions carry);
 //! * `report`    — regenerate the paper's tables (I, II, III) on stdout;
+//! * `analyze`   — the `scnn::analyze` static analyzer (sc-lint): prove
+//!   stream decorrelation, counter widths, IR dataflow, precision floors,
+//!   and deployment quotas for a configuration (or `--all` topologies)
+//!   WITHOUT running a single SC cycle; text or `--json`, CI-gateable via
+//!   `--deny-warnings`, `--out` for `BENCH_analyze.json`;
 //! * `calibrate` — print raw block characterization (debugging aid).
 //!
 //! Flags accept `--key value`, `--key=value`, and bare `--switch`;
@@ -117,11 +122,37 @@ fn apply_precision_flags(
     Ok(cfg)
 }
 
+/// Parse a comma-separated `--fault-stuck` list of `wl:lane[:0|1]` sites
+/// (compute layer, fan-in lane, optional stuck value — default stuck-at-1).
+fn parse_stuck_list(list: &str) -> Result<Vec<(usize, usize, bool)>> {
+    list.split(',')
+        .map(|tok| {
+            let parts: Vec<&str> = tok.trim().split(':').collect();
+            let parse = |s: &str, what: &str| {
+                s.parse::<usize>()
+                    .map_err(|e| anyhow!("flag --fault-stuck: bad {what} in {tok:?}: {e}"))
+            };
+            match parts.as_slice() {
+                [wl, lane] => Ok((parse(wl, "layer")?, parse(lane, "lane")?, true)),
+                [wl, lane, v] => {
+                    let stuck_one = match *v {
+                        "0" => false,
+                        "1" => true,
+                        other => bail!("flag --fault-stuck: stuck value must be 0|1, got {other:?}"),
+                    };
+                    Ok((parse(wl, "layer")?, parse(lane, "lane")?, stuck_one))
+                }
+                _ => bail!("flag --fault-stuck: expected wl:lane[:0|1], got {tok:?}"),
+            }
+        })
+        .collect()
+}
+
 /// Lower the `--fault-*` flags onto a config: a deterministic
 /// [`FaultPlan`] (bit flips on the SC streams, SRAM weight upsets, SNG
-/// correlation faults — all seeded, so runs reproduce exactly) plus an
-/// optional client-side `--deadline-us` that turns stuck waits into typed
-/// `EngineError::Timeout`s.
+/// correlation faults, stuck-at APC lanes — all seeded, so runs reproduce
+/// exactly) plus an optional client-side `--deadline-us` that turns stuck
+/// waits into typed `EngineError::Timeout`s.
 fn apply_fault_flags(
     mut cfg: EngineConfig,
     flags: &HashMap<String, String>,
@@ -129,11 +160,17 @@ fn apply_fault_flags(
     let bit_flip: f64 = flag(flags, "fault-bit-flip", 0.0)?;
     let sram: f64 = flag(flags, "fault-sram", 0.0)?;
     let corr: f64 = flag(flags, "fault-corr", 0.0)?;
-    if bit_flip > 0.0 || sram > 0.0 || corr > 0.0 {
-        let plan = FaultPlan::new(flag(flags, "fault-seed", 0xFA_417)?)
+    let stuck_spec: String = flag(flags, "fault-stuck", String::new())?;
+    let stuck =
+        if stuck_spec.is_empty() { Vec::new() } else { parse_stuck_list(&stuck_spec)? };
+    if bit_flip > 0.0 || sram > 0.0 || corr > 0.0 || !stuck.is_empty() {
+        let mut plan = FaultPlan::new(flag(flags, "fault-seed", 0xFA_417)?)
             .with_bit_flip_rate(bit_flip)
             .with_sram_upset_rate(sram)
             .with_sng_correlation_rate(corr);
+        for (wl, lane, stuck_one) in stuck {
+            plan = plan.with_stuck_lane(wl, lane, stuck_one);
+        }
         cfg = cfg.with_faults(plan);
     }
     let deadline_us: u64 = flag(flags, "deadline-us", 0)?;
@@ -160,6 +197,7 @@ fn main() -> Result<()> {
         "simulate" => simulate(&flags),
         "sweep" => sweep(&flags),
         "report" => report(&flags),
+        "analyze" => analyze(&flags),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -203,7 +241,19 @@ fn print_help() {
            sweep     --tech rfet|finfet --net NAME --max-channels C --k K\n\
                      --k-per-layer K1,K2,...\n\
                      Fig. 13 design space via Engine::estimate\n\
-           report    --table 1|2|3                        paper tables\n"
+           report    --table 1|2|3                        paper tables\n\
+           analyze   --net NAME or --all (every topology) --k K --bits B\n\
+                     --seed S --k-per-layer L --k-auto-budget B\n\
+                     --fault-seed S --fault-bit-flip R --fault-sram R\n\
+                     --fault-corr R --fault-stuck wl:lane[:0|1],...\n\
+                     --shards S --pool-queue-depth P\n\
+                     --tenants 'name:key[:rps[:burst]];...' (or a file)\n\
+                     --json (machine output) --deny-warnings (CI gate)\n\
+                     --out FILE (BENCH_analyze.json diagnostics+timing)\n\
+                     static sc-lint over the configuration — stream\n\
+                     correlation, counter widths, IR dataflow, precision\n\
+                     floors, deployment quotas — no SC cycle executed;\n\
+                     default k is 2^bits (the resolution floor)\n"
     );
 }
 
@@ -387,19 +437,7 @@ fn serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()> {
     let artifacts = Artifacts::new(flag::<String>(flags, "artifacts", "artifacts".into())?);
     let kind: BackendKind = flag(flags, "backend", BackendKind::Expectation)?;
     let pool = Arc::new(Engine::open_pool(pool_config(kind, &artifacts, flags)?)?);
-    let spec: String = flag(flags, "tenants", String::new())?;
-    let registry = if spec.is_empty() {
-        TenantRegistry::open()
-    } else {
-        // The flag value may be a path to a spec file, keeping API keys
-        // out of `ps` output.
-        let text = if std::path::Path::new(&spec).is_file() {
-            std::fs::read_to_string(&spec).with_context(|| format!("reading {spec}"))?
-        } else {
-            spec
-        };
-        TenantRegistry::parse(&text).map_err(|e| anyhow!("--tenants: {e}"))?
-    };
+    let registry = tenant_registry(flags)?;
     let tenants = registry.len();
     let serve_cfg = ServeConfig {
         max_body: flag(flags, "max-body", ServeConfig::default().max_body)?,
@@ -423,6 +461,146 @@ fn serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()> {
     std::thread::sleep(Duration::from_millis(serve_for_ms));
     server.shutdown();
     print!("{}", pool.metrics().summary());
+    Ok(())
+}
+
+/// Resolve the `--tenants` flag into a registry. The value is either an
+/// inline `name:key[:rps[:burst]];...` spec or a path to a file holding
+/// one (keeping API keys out of `ps` output). Shared by the HTTP front
+/// door and the deployment lints of `analyze`.
+fn tenant_registry(flags: &HashMap<String, String>) -> Result<TenantRegistry> {
+    let spec: String = flag(flags, "tenants", String::new())?;
+    if spec.is_empty() {
+        return Ok(TenantRegistry::open());
+    }
+    let text = if std::path::Path::new(&spec).is_file() {
+        std::fs::read_to_string(&spec).with_context(|| format!("reading {spec}"))?
+    } else {
+        spec
+    };
+    TenantRegistry::parse(&text).map_err(|e| anyhow!("--tenants: {e}"))
+}
+
+/// `scnn analyze` — run the `scnn::analyze` static analyzer over one
+/// network (`--net`) or the whole topology zoo (`--all`) without
+/// executing any SC cycle. Weights are deterministic synthetics (stream
+/// keying, counter widths, and dataflow do not depend on trained values).
+/// Exits nonzero on any `Error` diagnostic, or on any `Warning` under
+/// `--deny-warnings` — the CI gate.
+fn analyze(flags: &HashMap<String, String>) -> Result<()> {
+    use scnn::analyze::analyze_deployment;
+    let bits: u32 = flag(flags, "bits", 8)?;
+    // Default k = 2^bits: the smallest stream length that resolves every
+    // quantized code (shorter streams alias adjacent codes — SC004).
+    let k: usize = flag(flags, "k", 1usize << bits.min(16))?;
+    let seed: u32 = flag(flags, "seed", 7)?;
+    let json = flag(flags, "json", false)?;
+    let deny_warnings = flag(flags, "deny-warnings", false)?;
+    let shards: usize = flag(flags, "shards", 1)?;
+    let pool_queue_depth: usize = flag(flags, "pool-queue-depth", 0)?;
+    let registry = tenant_registry(flags)?;
+    let nets: Vec<NetworkSpec> = if flag(flags, "all", false)? {
+        NetworkSpec::NAMES
+            .iter()
+            .map(|n| NetworkSpec::by_name(n))
+            .collect::<Result<_>>()?
+    } else {
+        vec![net_flag(flags)?]
+    };
+    let (mut errors, mut warnings) = (0usize, 0usize);
+    let mut bench = scnn::benchutil::JsonReport::new();
+    let mut json_items: Vec<String> = Vec::new();
+    for net in &nets {
+        let t = Instant::now();
+        let cfg = apply_fault_flags(
+            apply_precision_flags(
+                EngineConfig::new(BackendKind::StochasticFused, net.clone())
+                    .with_k(k)
+                    .with_bits(bits)
+                    .with_seed(seed)
+                    .with_quantized(QuantizedWeights::synthetic(net, bits, seed as u64)?),
+                flags,
+            )?,
+            flags,
+        )?;
+        // A precision policy that cannot even resolve is a typed error in
+        // its own right (InvalidPrecision) — surface it before analysis.
+        let weights = cfg.resolve_weights()?;
+        let resolved = cfg.resolved_precision(&weights)?;
+        let mut report = scnn::analyze::analyze_engine_config(&cfg, &resolved);
+        if !registry.tenants().is_empty() || pool_queue_depth > 0 {
+            // The hardware model (gate-level channel characterization) is
+            // only consulted when a tenant actually carries a sustained
+            // quota to weigh against it.
+            let est = registry
+                .tenants()
+                .iter()
+                .any(|t| t.rps > 0.0)
+                .then(|| cfg.estimate())
+                .flatten();
+            report.merge(analyze_deployment(
+                shards,
+                pool_queue_depth,
+                registry.tenants(),
+                est.as_ref(),
+            ));
+        }
+        let wall = t.elapsed();
+        errors += report.error_count();
+        warnings += report.warning_count();
+        if json {
+            json_items.push(format!(
+                "{{\"net\": \"{}\", \"k\": {k}, \"bits\": {bits}, \"errors\": {}, \
+                 \"warnings\": {}, \"infos\": {}, \"analysis_us\": {:.1}, \
+                 \"diagnostics\": {}}}",
+                net.name,
+                report.error_count(),
+                report.warning_count(),
+                report.info_count(),
+                wall.as_secs_f64() * 1e6,
+                report.render_json()
+            ));
+        } else {
+            println!(
+                "{}: {} error(s), {} warning(s), {} info(s) — analyzed in {:.1} µs",
+                net.name,
+                report.error_count(),
+                report.warning_count(),
+                report.info_count(),
+                wall.as_secs_f64() * 1e6
+            );
+            print!("{}", report.render_text());
+        }
+        bench.add(
+            &scnn::benchutil::BenchResult {
+                name: format!("analyze/{}", net.name),
+                median_ns: wall.as_nanos() as f64,
+                mean_ns: wall.as_nanos() as f64,
+                iters: 1,
+            },
+            &[
+                ("errors", report.error_count() as f64),
+                ("warnings", report.warning_count() as f64),
+                ("infos", report.info_count() as f64),
+            ],
+        );
+    }
+    if json {
+        println!("[{}]", json_items.join(", "));
+    }
+    let out: String = flag(flags, "out", String::new())?;
+    if !out.is_empty() {
+        bench.write(std::path::Path::new(&out))?;
+        if !json {
+            println!("wrote {out}");
+        }
+    }
+    if errors > 0 {
+        bail!("analysis found {errors} error(s)");
+    }
+    if deny_warnings && warnings > 0 {
+        bail!("analysis found {warnings} warning(s) (--deny-warnings)");
+    }
     Ok(())
 }
 
@@ -681,6 +859,40 @@ mod tests {
         // An unparseable rate is an error, not a silent default.
         let bad = parse_flags(&args(&["--fault-sram", "lots"]));
         assert!(apply_fault_flags(base(), &bad).is_err());
+    }
+
+    #[test]
+    fn stuck_lists_parse_sites_with_optional_values() {
+        assert_eq!(parse_stuck_list("0:24").unwrap(), vec![(0, 24, true)]);
+        assert_eq!(parse_stuck_list("1:3:0").unwrap(), vec![(1, 3, false)]);
+        assert_eq!(
+            parse_stuck_list("0:24, 1:3:0 ,2:0:1").unwrap(),
+            vec![(0, 24, true), (1, 3, false), (2, 0, true)]
+        );
+        for bad in ["0", "0:24:2", "a:1", "0:b", "0:1:yes", ""] {
+            assert!(parse_stuck_list(bad).is_err(), "expected error for {bad:?}");
+        }
+    }
+
+    #[test]
+    fn stuck_flag_alone_builds_a_fault_plan() {
+        let base = EngineConfig::new(
+            BackendKind::Expectation,
+            scnn::accel::layers::NetworkSpec::lenet5(),
+        );
+        let m = parse_flags(&args(&["--fault-stuck", "0:24,1:3:0"]));
+        let cfg = apply_fault_flags(base, &m).unwrap();
+        let f = cfg.faults.expect("stuck sites alone must build a plan");
+        assert_eq!(f.stuck_lanes.len(), 2);
+        assert_eq!(
+            (f.stuck_lanes[0].wl, f.stuck_lanes[0].lane, f.stuck_lanes[0].stuck_one),
+            (0, 24, true)
+        );
+        assert_eq!(
+            (f.stuck_lanes[1].wl, f.stuck_lanes[1].lane, f.stuck_lanes[1].stuck_one),
+            (1, 3, false)
+        );
+        assert!(f.bit_flip_rate.abs() < 1e-12);
     }
 
     #[test]

@@ -116,6 +116,7 @@ pub fn build_netlist(m: usize, width: usize, style: FaStyle) -> Result<Netlist> 
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::sc::apc::decode_output;

@@ -207,6 +207,7 @@ pub fn decode_output(bits: &[bool]) -> u64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::sc::rng::XorShift64;

@@ -68,6 +68,7 @@ pub fn xnor_count(a: &[u64], w: &[u64]) -> u32 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

@@ -479,6 +479,7 @@ impl VerticalCounter {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::sc::rng::XorShift64;

@@ -79,6 +79,7 @@ pub fn build_b2s_netlist(bits: u32) -> Netlist {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::sc::apc::decode_output;

@@ -18,6 +18,11 @@
 //! * [`converters`] — B2S and S2B converters (II-B, IV-A);
 //! * [`neuron`] — the Frasser correlated SC neuron [29] (II-B).
 
+// The SC datapath is the bit-exactness contract of the whole crate: a
+// panic here takes down a serving shard mid-request, so fallible paths
+// must return typed errors (tests opt back in per-module).
+#![deny(clippy::unwrap_used)]
+
 pub mod adder_tree;
 pub mod apc;
 pub mod bitplane;
@@ -57,6 +62,7 @@ pub fn dequantize_bipolar(code: u32, bits: u32) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

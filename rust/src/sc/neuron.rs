@@ -193,6 +193,7 @@ pub fn erf(x: f64) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::sc::lfsr::Lfsr;

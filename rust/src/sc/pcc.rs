@@ -158,6 +158,7 @@ pub fn nandnor_inverter_count(n: u32) -> u32 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::sim::Evaluator;

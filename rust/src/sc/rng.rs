@@ -101,6 +101,7 @@ pub fn gauss(site: u32, stream: u32) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

@@ -157,6 +157,7 @@ pub fn build_netlist(kind: PccKind, bits: u32) -> Result<Netlist, UnsupportedLfs
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::sc::{dequantize_unipolar, quantize_unipolar};

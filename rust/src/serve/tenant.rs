@@ -109,6 +109,13 @@ impl TenantRegistry {
         self.tenants.len()
     }
 
+    /// The configured tenants, in registry order — what the
+    /// [`crate::analyze`] deployment lints read to weigh aggregate
+    /// sustained quotas against modeled pool throughput.
+    pub fn tenants(&self) -> &[Tenant] {
+        &self.tenants
+    }
+
     /// Whether the registry has no tenants configured.
     pub fn is_empty(&self) -> bool {
         self.tenants.is_empty()

@@ -127,6 +127,18 @@ fn grow_random_net(g: &mut Gen, max_layers: usize) -> NetworkSpec {
     NetworkSpec { name: "grown".into(), input, layers }
 }
 
+/// Per-compute-layer fan-ins of a net's compiled stages — the lane bound
+/// `FaultPlan::validate_sites` enforces at compile time, so random stuck
+/// sites must be drawn inside it.
+fn compute_fan_ins(net: &NetworkSpec) -> Vec<usize> {
+    net.stages()
+        .unwrap()
+        .iter()
+        .filter(|s| s.is_compute())
+        .filter_map(|s| s.weight_shape().map(|(_, fan_in)| fan_in))
+        .collect()
+}
+
 /// Run a property over `n` seeded cases; failures print the case seed.
 fn prop(name: &str, n: usize, mut f: impl FnMut(&mut Gen)) {
     for case in 0..n {
@@ -299,7 +311,8 @@ fn prop_random_fault_plans_keep_fused_and_reference_bit_exact() {
     prop("faulted-parity", 8, |g| {
         let net = grow_random_net(g, 3);
         let weights = QuantizedWeights::synthetic(&net, 8, g.next()).unwrap();
-        let n_compute = net.stages().unwrap().iter().filter(|s| s.is_compute()).count();
+        let fan_ins = compute_fan_ins(&net);
+        let n_compute = fan_ins.len();
         let ks: Vec<usize> = (0..n_compute).map(|_| WORD * g.range(2, 10) as usize).collect();
         let plan = PrecisionPlan::per_layer(ks.clone());
         let mut fp = FaultPlan::new(g.next())
@@ -307,11 +320,10 @@ fn prop_random_fault_plans_keep_fused_and_reference_bit_exact() {
             .with_sng_correlation_rate(g.range(0, 30) as f64 / 100.0)
             .with_sram_upset_rate(g.range(0, 20) as f64 / 1000.0);
         if g.chance(60) {
-            fp = fp.with_stuck_lane(
-                g.range(0, n_compute as u64) as usize,
-                g.range(0, 4) as usize,
-                g.chance(50),
-            );
+            // Sites are drawn inside the compiled plan: compile now
+            // rejects out-of-bounds stuck lanes with a typed error.
+            let wl = g.range(0, fan_ins.len() as u64) as usize;
+            fp = fp.with_stuck_lane(wl, g.range(0, fan_ins[wl] as u64) as usize, g.chance(50));
         }
         let in_len = net.input.0 * net.input.1 * net.input.2;
         let input: Vec<f64> = (0..in_len).map(|i| ((i % 7) as f64) / 7.0).collect();
@@ -343,7 +355,8 @@ fn prop_transposed_fused_reference_three_way_bit_exact() {
     prop("kernel-three-way", 8, |g| {
         let net = grow_random_net(g, 3);
         let weights = QuantizedWeights::synthetic(&net, 8, g.next()).unwrap();
-        let n_compute = net.stages().unwrap().iter().filter(|s| s.is_compute()).count();
+        let fan_ins = compute_fan_ins(&net);
+        let n_compute = fan_ins.len();
         let ks: Vec<usize> = (0..n_compute).map(|_| WORD * g.range(2, 12) as usize).collect();
         let plan = PrecisionPlan::per_layer(ks.clone());
         let mut fp = FaultPlan::new(g.next())
@@ -351,11 +364,8 @@ fn prop_transposed_fused_reference_three_way_bit_exact() {
             .with_sng_correlation_rate(g.range(0, 25) as f64 / 100.0)
             .with_sram_upset_rate(g.range(0, 15) as f64 / 1000.0);
         if g.chance(50) {
-            fp = fp.with_stuck_lane(
-                g.range(0, n_compute as u64) as usize,
-                g.range(0, 4) as usize,
-                g.chance(50),
-            );
+            let wl = g.range(0, fan_ins.len() as u64) as usize;
+            fp = fp.with_stuck_lane(wl, g.range(0, fan_ins[wl] as u64) as usize, g.chance(50));
         }
         let faults = g.chance(70).then_some(&fp);
         let in_len = net.input.0 * net.input.1 * net.input.2;
@@ -445,6 +455,103 @@ fn auto_tuned_plans_are_deterministic_for_a_fixed_seed() {
         reference::forward_stochastic_plan(&net, &weights, &input, &a, 13),
         "the tuned plan stays on the bit-exact contract"
     );
+}
+
+#[test]
+fn prop_zero_analyzer_errors_imply_three_way_bit_exactness() {
+    // The analyzer's closed-loop contract (`scnn::analyze`): a config it
+    // passes with zero errors runs bit-exactly on all three lowerings of
+    // the stage IR. Grown nets with in-bounds fault sites must analyze
+    // clean — and then the fused, transposed, and per-bit paths agree.
+    prop("analyze-clean-bit-exact", 8, |g| {
+        let net = grow_random_net(g, 3);
+        let weights = QuantizedWeights::synthetic(&net, 8, g.next()).unwrap();
+        let fan_ins = compute_fan_ins(&net);
+        let ks: Vec<usize> =
+            (0..fan_ins.len()).map(|_| WORD * g.range(2, 12) as usize).collect();
+        let plan = PrecisionPlan::per_layer(ks.clone());
+        let mut fp = FaultPlan::new(g.next())
+            .with_bit_flip_rate(g.range(0, 40) as f64 / 1000.0)
+            .with_sng_correlation_rate(g.range(0, 25) as f64 / 100.0)
+            .with_sram_upset_rate(g.range(0, 15) as f64 / 1000.0);
+        if g.chance(50) {
+            let wl = g.range(0, fan_ins.len() as u64) as usize;
+            fp = fp.with_stuck_lane(wl, g.range(0, fan_ins[wl] as u64) as usize, g.chance(50));
+        }
+        let faults = g.chance(70).then_some(&fp);
+        let report = scnn::analyze::analyze_network(&net, &plan, 8, faults);
+        assert!(
+            !report.has_errors(),
+            "grown configs must analyze clean, got: {}",
+            report.error_summary()
+        );
+        let in_len = net.input.0 * net.input.1 * net.input.2;
+        let input: Vec<f64> = (0..in_len).map(|i| ((i % 7) as f64) / 7.0).collect();
+        let seed = g.range(1, 1000) as u32;
+        let mode = ForwardMode::Stochastic { k: plan.max_k(), seed };
+        let run = |kernel: KernelPath| {
+            ForwardPlan::compile_with_opts(&net, &weights, mode, &plan, faults, kernel)
+                .unwrap()
+                .run(&input)
+        };
+        let transposed = run(KernelPath::Transposed);
+        assert_eq!(transposed, run(KernelPath::Fused), "ks={ks:?} seed={seed} faults={fp:?}");
+        assert_eq!(
+            transposed,
+            reference::forward_stochastic_plan_faulted(
+                &net, &weights, &input, &plan, seed, faults,
+            ),
+            "ks={ks:?} seed={seed} faults={fp:?}"
+        );
+    });
+}
+
+#[test]
+fn seeded_collision_and_overflow_constructions_get_distinct_codes() {
+    use scnn::analyze::{analyze_network, WEIGHT_LANE_SPAN};
+    // A dense fan-in wider than the 2^20 weight-lane key span makes SNG
+    // streams collide across output channels — flagged SC001, an error,
+    // with no counter-width complaint on the side.
+    let wide = NetworkSpec {
+        name: "aliased".into(),
+        input: (1, 1, WEIGHT_LANE_SPAN + 1),
+        layers: vec![LayerSpec::linear(LayerKind::Dense {
+            inputs: WEIGHT_LANE_SPAN + 1,
+            outputs: 2,
+        })],
+    };
+    let r = analyze_network(&wide, &PrecisionPlan::uniform(4 * WORD, 1), 8, None);
+    assert!(r.has_errors());
+    assert!(r.has_code("SC001"), "aliased keys must be SC001: {}", r.error_summary());
+    assert!(!r.has_code("SC003"), "no width complaint on a narrow counter");
+
+    // A stream length past the transposed kernel's 32-bit ones
+    // accumulator overflows the popcount tally — flagged SC003, a
+    // *different* code, on a topology whose key space is fine.
+    let narrow = NetworkSpec {
+        name: "overflow".into(),
+        input: (1, 1, 4),
+        layers: vec![LayerSpec::linear(LayerKind::Dense { inputs: 4, outputs: 2 })],
+    };
+    let k = 1usize << 32; // word-aligned and > u32::MAX
+    let r = analyze_network(&narrow, &PrecisionPlan::uniform(k, 1), 8, None);
+    assert!(r.has_errors());
+    assert!(r.has_code("SC003"), "accumulator overflow must be SC003: {}", r.error_summary());
+    assert!(!r.has_code("SC001"), "the key space itself is injective here");
+}
+
+#[test]
+fn shipped_topologies_analyze_with_zero_errors_at_defaults() {
+    // Every built-in network, analyzed at the CLI's defaults (8-bit
+    // weights, k = 2^bits = 256, no faults), must report zero errors —
+    // the same gate `scnn analyze --all` enforces in CI.
+    for name in NetworkSpec::NAMES {
+        let net = NetworkSpec::by_name(name).unwrap();
+        let n_compute = compute_fan_ins(&net).len();
+        let plan = PrecisionPlan::uniform(256, n_compute);
+        let r = scnn::analyze::analyze_network(&net, &plan, 8, None);
+        assert_eq!(r.error_count(), 0, "{name} must analyze clean: {}", r.error_summary());
+    }
 }
 
 #[test]
