@@ -20,7 +20,11 @@
 //! expectation datapath) go to `BENCH_faults.json`, and the bit-plane
 //! transposed kernel comparison (img/s fused vs transposed at k=256 and
 //! k=1024 on both 28x28 topologies, with the per-stage breakdown and the
-//! >=2x speedup gate at k=1024) goes to `BENCH_bitplane.json`.
+//! >=2x speedup gate at k=1024) goes to `BENCH_bitplane.json`, and the
+//! compiled-sparsity comparison (img/s and modeled energy, sparse vs
+//! dense plans over channel-structured zeroed weights at densities
+//! {100%, 50%, 25%} × k in {256, 1024}, argmax agreement asserted before
+//! timing) goes to `BENCH_sparsity.json`.
 //! Run with `cargo bench --bench hotpath`.
 //!
 //! Plans and scratch buffers are always built OUTSIDE the timed closures:
@@ -28,7 +32,10 @@
 //! judged in, so compile cost never masquerades as inference cost.
 
 use scnn::accel::layers::NetworkSpec;
-use scnn::accel::network::{reference, ForwardMode, ForwardPlan, KernelPath, QuantizedWeights};
+use scnn::accel::network::{
+    reference, weight_densities, ForwardMode, ForwardPlan, KernelPath, QuantizedWeights,
+    SparsityPolicy,
+};
 use scnn::accel::par;
 use scnn::accel::precision::{autotune, AutoTuneConfig, PrecisionPlan};
 use scnn::benchutil::{bench, BenchResult, JsonReport};
@@ -311,16 +318,163 @@ fn main() {
                         0,
                         &mut timings,
                     ));
-                    for &(index, lbl, d) in &timings {
+                    for t in &timings {
                         let r = BenchResult {
-                            name: format!("bitplane_layer({bname},{label},{index}:{lbl},k=1024)"),
-                            median_ns: d.as_nanos() as f64,
-                            mean_ns: d.as_nanos() as f64,
+                            name: format!(
+                                "bitplane_layer({bname},{label},{}:{},k=1024)",
+                                t.layer, t.label
+                            ),
+                            median_ns: t.elapsed.as_nanos() as f64,
+                            mean_ns: t.elapsed.as_nanos() as f64,
                             iters: 1,
                         };
-                        bjson.add(&r, &[("layer_index", index as f64), ("k", 1024.0)]);
+                        bjson.add(
+                            &r,
+                            &[
+                                ("layer_index", t.layer as f64),
+                                ("k", 1024.0),
+                                ("ops_executed", t.ops_executed as f64),
+                                ("ops_skipped", t.ops_skipped as f64),
+                            ],
+                        );
                     }
                 }
+            }
+        }
+    }
+
+    // ---- sparsity: compiled zero-skipping (BENCH_sparsity.json) ----
+    // Channel-structured zeroing at weight densities {100%, 50%, 25%}:
+    // lane j of EVERY output channel is zeroed when j % step != 0, so the
+    // pruned plan's per-channel skip lists collapse to one shared window.
+    // Both plans compile the SAME zeroed tensor — dense runs it unpruned,
+    // sparse compiles a magnitude threshold of 1/256 (one 8-bit LSB) that
+    // prunes exactly the zeroed lanes. Argmax agreement sparse-vs-dense
+    // is asserted on the full batch BEFORE anything is timed (pruning
+    // replaces each zero lane's sampled ~0.5 stream with its folded
+    // expectation, so outputs are close but not bit-identical), and CI
+    // gates that no sparse point is slower than dense and that 25%
+    // density at k=1024 clears 1.5x on at least one topology.
+    let mut sjson = JsonReport::new();
+    let zero_code = scnn::sc::quantize_bipolar(0.0, 8);
+    let sparsity = SparsityPolicy::threshold(1.0 / 256.0);
+    for sname in ["lenet5", "mnist_strided"] {
+        let snet = NetworkSpec::by_name(sname).unwrap();
+        let base_w = if sname == net.name {
+            weights.clone()
+        } else {
+            QuantizedWeights::synthetic(&snet, 8, 0x5EED).expect("valid topology")
+        };
+        for (density_pct, step) in [(100usize, 1usize), (50, 2), (25, 4)] {
+            let mut sw = base_w.clone();
+            if step > 1 {
+                for lw in &mut sw.layers {
+                    for row in &mut lw.codes {
+                        for (j, c) in row.iter_mut().enumerate() {
+                            if j % step != 0 {
+                                *c = zero_code;
+                            }
+                        }
+                    }
+                }
+            }
+            let densities = weight_densities(&sw, sparsity);
+            for (k, nimg, warm, iters) in [(256usize, 16usize, 1usize, 3usize), (1024, 8, 1, 2)] {
+                let prec = PrecisionPlan::uniform(k, snet.n_compute());
+                let mode = ForwardMode::Stochastic { k, seed: 7 };
+                let dense_plan = ForwardPlan::compile_with_opts(
+                    &snet, &sw, mode, &prec, None, KernelPath::Auto,
+                )
+                .unwrap();
+                let sparse_plan = ForwardPlan::compile_with_sparsity(
+                    &snet, &sw, mode, &prec, None, KernelPath::Auto, sparsity,
+                )
+                .unwrap();
+                let simgs: Vec<Vec<f64>> = (0..nimg)
+                    .map(|s| {
+                        (0..dense_plan.in_len())
+                            .map(|i| (((i + s * 13) % 17) as f64) / 17.0)
+                            .collect()
+                    })
+                    .collect();
+                let dense_out = dense_plan.run_batch(&simgs);
+                let sparse_out = sparse_plan.run_batch(&simgs);
+                let agree = dense_out
+                    .iter()
+                    .zip(&sparse_out)
+                    .filter(|(d, s)| {
+                        scnn::accel::network::classify(d) == scnn::accel::network::classify(s)
+                    })
+                    .count();
+                assert!(
+                    agree * 8 >= nimg * 7,
+                    "sparsity({sname},density={density_pct}%,k={k}): argmax agreement \
+                     {agree}/{nimg} is below the pre-timing bar"
+                );
+                let r_d = bench(
+                    &format!("sparsity({sname},dense,density={density_pct},k={k},{nimg}imgs)"),
+                    warm,
+                    iters,
+                    || {
+                        std::hint::black_box(dense_plan.run_batch(&simgs));
+                    },
+                );
+                let r_s = bench(
+                    &format!("sparsity({sname},sparse,density={density_pct},k={k},{nimg}imgs)"),
+                    warm,
+                    iters,
+                    || {
+                        std::hint::black_box(sparse_plan.run_batch(&simgs));
+                    },
+                );
+                let dense_img_s = r_d.ops_per_sec(nimg as f64);
+                let sparse_img_s = r_s.ops_per_sec(nimg as f64);
+                let speedup = r_d.median_ns / r_s.median_ns;
+                let (executed, skipped) = sparse_plan.ops_per_image();
+                let est = scnn::engine::HardwareEstimate::for_plan_density(
+                    scnn::tech::TechKind::Rfet10,
+                    8,
+                    &prec,
+                    &snet,
+                    &densities,
+                );
+                let dense_est = scnn::engine::HardwareEstimate::for_plan_density(
+                    scnn::tech::TechKind::Rfet10,
+                    8,
+                    &prec,
+                    &snet,
+                    &[],
+                );
+                println!(
+                    "  -> {sparse_img_s:.1} img/s sparse vs {dense_img_s:.1} dense at \
+                     {density_pct}% density, k={k}: {speedup:.2}x; {agree}/{nimg} argmax agree; \
+                     {:.3} µJ modeled vs {:.3} dense",
+                    est.metrics.energy_uj, dense_est.metrics.energy_uj
+                );
+                sjson.add(
+                    &r_d,
+                    &[
+                        ("img_per_s", dense_img_s),
+                        ("k", k as f64),
+                        ("density_pct", density_pct as f64),
+                        ("batch", nimg as f64),
+                        ("modeled_energy_uj", dense_est.metrics.energy_uj),
+                    ],
+                );
+                sjson.add(
+                    &r_s,
+                    &[
+                        ("img_per_s", sparse_img_s),
+                        ("k", k as f64),
+                        ("density_pct", density_pct as f64),
+                        ("batch", nimg as f64),
+                        ("speedup_vs_dense", speedup),
+                        ("agreement_pct", 100.0 * agree as f64 / nimg as f64),
+                        ("ops_executed", executed as f64),
+                        ("ops_skipped", skipped as f64),
+                        ("modeled_energy_uj", est.metrics.energy_uj),
+                    ],
+                );
             }
         }
     }
@@ -349,8 +503,8 @@ fn main() {
         for _ in 0..runs {
             timings.clear();
             std::hint::black_box(plan.run_with_timings(&limg, &mut scr, 0, &mut timings));
-            for (si, &(_, _, d)) in timings.iter().enumerate() {
-                samples[si].push(d.as_nanos() as f64);
+            for (si, t) in timings.iter().enumerate() {
+                samples[si].push(t.elapsed.as_nanos() as f64);
             }
         }
         // Hardware-side per-layer delays from the same descriptors.
@@ -364,15 +518,19 @@ fn main() {
         };
         let sched = scnn::accel::pipeline::schedule_stages(&stages, &sched_cfg, 1);
         println!("per-layer breakdown ({lname}, k=32, 1 image):");
-        for (si, &(index, label, _)) in timings.iter().enumerate() {
+        for (si, t) in timings.iter().enumerate() {
+            let (index, label) = (t.layer, t.label);
             let mut s = samples[si].clone();
             s.sort_by(|a, b| a.partial_cmp(b).unwrap());
             let median = s[s.len() / 2];
             let mean = s.iter().sum::<f64>() / s.len() as f64;
             let hw = sched.layers.iter().find(|l| l.layer_index == index);
             println!(
-                "  {index:>2} {label:<16} {median:>12.0} ns sw | {:>10.1} ns modeled hw",
-                hw.map(|l| l.delay_ns).unwrap_or(0.0)
+                "  {index:>2} {label:<16} {median:>12.0} ns sw | {:>10.1} ns modeled hw | \
+                 {} ops executed, {} skipped",
+                hw.map(|l| l.delay_ns).unwrap_or(0.0),
+                t.ops_executed,
+                t.ops_skipped
             );
             let r = BenchResult {
                 name: format!("layer({lname},{index}:{label},k=32)"),
@@ -383,6 +541,8 @@ fn main() {
             let mut extra = vec![
                 ("layer_index", index as f64),
                 ("macs", stages[index].macs() as f64),
+                ("ops_executed", t.ops_executed as f64),
+                ("ops_skipped", t.ops_skipped as f64),
             ];
             if let Some(l) = hw {
                 extra.push(("hw_delay_ns", l.delay_ns));
@@ -781,5 +941,14 @@ fn main() {
             std::fs::canonicalize(bpath).unwrap_or_else(|_| bpath.to_path_buf()).display()
         ),
         Err(e) => eprintln!("could not write BENCH_bitplane.json: {e}"),
+    }
+    let spath = std::path::Path::new("BENCH_sparsity.json");
+    match sjson.write(spath) {
+        Ok(()) => println!(
+            "wrote {} sparsity records to {}",
+            sjson.len(),
+            std::fs::canonicalize(spath).unwrap_or_else(|_| spath.to_path_buf()).display()
+        ),
+        Err(e) => eprintln!("could not write BENCH_sparsity.json: {e}"),
     }
 }

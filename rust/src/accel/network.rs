@@ -202,15 +202,151 @@ impl KernelPath {
         }
     }
 
-    /// The concrete kernel `Auto` resolves to for stochastic compute
-    /// stages (`Fused`/`Transposed` pass through). `Auto` and its
-    /// resolution compile to the same artifact and share one cache entry.
+    /// The concrete kernel `Auto` resolves to for **dense** stochastic
+    /// compute stages (`Fused`/`Transposed` pass through). For dense
+    /// plans `Auto` and its resolution compile to the same artifact and
+    /// share one cache entry; under an active [`SparsityPolicy`] `Auto`
+    /// additionally resolves per stage by pruning structure (see
+    /// [`ForwardPlan::compile_with_sparsity`]), so sparse fingerprints
+    /// key on the unresolved label instead.
     pub fn resolved(self) -> KernelPath {
         match self {
             KernelPath::Auto => KernelPath::Transposed,
             other => other,
         }
     }
+}
+
+/// Compile-time weight-sparsity policy of a [`ForwardPlan`]: prune weight
+/// lanes whose dequantized bipolar magnitude is **strictly below**
+/// `threshold` out of the datapath. The quantized zero code dequantizes
+/// to exactly 0.0 (its XNOR product stream carries probability 0.5 — pure
+/// noise with zero expected contribution), so any positive threshold
+/// prunes it; `threshold == 0.0` disables pruning entirely and compiles
+/// today's dense plans bit-for-bit (the back-compat anchor, property-
+/// tested in `tests/stage_ir.rs`).
+///
+/// Pruning semantics (shared bit-exactly by the fused kernel, the
+/// transposed kernel, and the per-bit [`reference`]):
+///
+/// - Each output channel keeps a compact skip list of **surviving**
+///   original lane indices; SNG streams are generated (and stored) only
+///   for survivors, keyed by their original lane index.
+/// - The APC width, the B2S rescale `2^m`, and the correlated-OR ReLU
+///   floor derive from the channel's **surviving** fan-in: the pruned
+///   lanes' 0.5-expectation (+1 count bias each, in expectation) and the
+///   matching `-1` term of the `sp = (v+1)·2^m − n` recovery cancel, so
+///   dropping a lane folds its bias out of the stage in one move.
+/// - A stuck-at APC lane on a *pruned* lane is compiled away with the
+///   lane (the column no longer exists); stuck faults on surviving lanes
+///   inject exactly as before, addressed by original lane index.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SparsityPolicy {
+    /// Magnitude floor: lanes with `|w| < threshold` are pruned.
+    /// `0.0` = off.
+    pub threshold: f64,
+}
+
+impl Default for SparsityPolicy {
+    fn default() -> Self {
+        SparsityPolicy::OFF
+    }
+}
+
+impl SparsityPolicy {
+    /// The disabled policy: nothing is pruned, plans compile dense.
+    pub const OFF: SparsityPolicy = SparsityPolicy { threshold: 0.0 };
+
+    /// Prune lanes with `|dequantized weight| < threshold`.
+    pub fn threshold(threshold: f64) -> Self {
+        SparsityPolicy { threshold }
+    }
+
+    /// True when the policy prunes nothing (threshold 0.0).
+    pub fn is_off(&self) -> bool {
+        self.threshold == 0.0
+    }
+
+    /// Whether a quantized weight code is pruned under this policy.
+    pub fn prunes(&self, code: u32, bits: u32) -> bool {
+        self.threshold > 0.0 && dequantize_bipolar(code, bits).abs() < self.threshold
+    }
+
+    /// Validate the threshold range: it must be finite, non-negative, and
+    /// below 1.0 (a threshold of 1.0 or more prunes every representable
+    /// weight). Degenerate values are typed errors at the engine
+    /// boundary (`EngineError::InvalidSparsity`).
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        if !self.threshold.is_finite() {
+            return Err(format!("sparsity threshold must be finite, got {}", self.threshold));
+        }
+        if self.threshold < 0.0 {
+            return Err(format!("sparsity threshold must be >= 0.0, got {}", self.threshold));
+        }
+        if self.threshold >= 1.0 {
+            return Err(format!(
+                "sparsity threshold must be < 1.0 (1.0 prunes every weight), got {}",
+                self.threshold
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Per-compute-layer pruning summary of a [`SparsityPolicy`] over a
+/// weight tensor — the shared input of the analyzer's sparsity lints
+/// (SC011/SC012), the engine's density-aware energy model, and the
+/// degenerate-threshold validation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PruneStat {
+    /// Dense fan-in (lanes per output channel).
+    pub fan_in: usize,
+    /// Total weight lanes across output channels.
+    pub lanes: usize,
+    /// Lanes pruned across output channels.
+    pub pruned: usize,
+    /// Smallest surviving fan-in over the layer's output channels.
+    pub min_fan_in: usize,
+}
+
+impl PruneStat {
+    /// Surviving-lane fraction in (0, 1].
+    pub fn density(&self) -> f64 {
+        if self.lanes == 0 {
+            1.0
+        } else {
+            (self.lanes - self.pruned) as f64 / self.lanes as f64
+        }
+    }
+}
+
+/// Pruning statistics per compute layer for a policy over quantized
+/// weights (no streams are generated — pure code inspection).
+pub fn prune_stats(weights: &QuantizedWeights, sparsity: SparsityPolicy) -> Vec<PruneStat> {
+    weights
+        .layers
+        .iter()
+        .map(|lw| {
+            let fan_in = lw.codes.first().map_or(0, |row| row.len());
+            let mut lanes = 0usize;
+            let mut pruned = 0usize;
+            let mut min_fan_in = fan_in;
+            for row in &lw.codes {
+                lanes += row.len();
+                let cut = row.iter().filter(|&&c| sparsity.prunes(c, weights.bits)).count();
+                pruned += cut;
+                min_fan_in = min_fan_in.min(row.len() - cut);
+            }
+            PruneStat { fan_in, lanes, pruned, min_fan_in }
+        })
+        .collect()
+}
+
+/// Per-compute-layer surviving weight-lane density under a policy
+/// (all 1.0 when the policy is off) — the `weight_density` input of
+/// `accel::pipeline` / `accel::system`'s sparsity-aware cost model.
+pub fn weight_densities(weights: &QuantizedWeights, sparsity: SparsityPolicy) -> Vec<f64> {
+    prune_stats(weights, sparsity).iter().map(|s| s.density()).collect()
 }
 
 /// Bit-reverse the low `bits` bits of `t` (van der Corput sequence) —
@@ -300,6 +436,23 @@ pub trait LayerStage: Send + Sync {
     /// Execute the stage on the scratch arena with the given worker cap
     /// (0 = every core). Bit-identical output for any cap.
     fn run(&self, scr: &mut Scratch, threads: usize);
+
+    /// Static per-image op accounting `(executed, skipped)` in SC
+    /// lane-cycle products (MACs for the analytic modes): the work the
+    /// compiled stage performs vs. the work the sparsity policy pruned
+    /// out at compile. Value stages (pooling/residual) report `(0, 0)`.
+    /// Runtime activation-sparsity skips are *not* included — they are
+    /// surfaced per run through [`ForwardPlan::run_with_timings`].
+    fn ops(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
+    /// `(weight-layer index, surviving weight-lane density)` for compute
+    /// stages, `None` for value stages — the compiled counterpart of
+    /// [`weight_densities`].
+    fn weight_density(&self) -> Option<(usize, f64)> {
+        None
+    }
 }
 
 /// The identity shared by every [`LayerStage`] implementation.
@@ -434,6 +587,119 @@ struct LayerPlan {
     wq: Vec<f64>,
     /// Dequantized zero code (padding value).
     zq: f64,
+    /// Weight-sparsity skip lists (`None` = dense: the policy is off or
+    /// no lane of this layer fell below the threshold, and the compiled
+    /// artifact is bit-for-bit the dense plan). When `Some`, the
+    /// stochastic `wgt_words` hold only surviving lanes, packed
+    /// `[(pruned.off[oc] + sj)·words ..]`.
+    pruned: Option<PrunedLayer>,
+}
+
+/// Compile-time pruning state of one compute layer under an active
+/// [`SparsityPolicy`]: the per-channel skip lists plus every constant the
+/// B2S/ReLU/S2B recovery derives from the **surviving** fan-in. Pruning a
+/// lane folds its bias out in one move: the lane's 0.5-probability XNOR
+/// stream adds `k/2` expected counts and the recovery `sp = (v+1)·2^m − n`
+/// subtracts 1 per lane — dropping both sides together keeps the
+/// expectation and lets `m`, the ReLU floor, and the comparison randoms
+/// shrink to the surviving width.
+struct PrunedLayer {
+    /// Per output channel: surviving original lane indices, ascending.
+    /// Original indices key the SNG streams, the gather-window lookups,
+    /// and the fault addressing, so all three kernels and the per-bit
+    /// reference inject and gather identically.
+    surv: Vec<Vec<u32>>,
+    /// Packed-stream offsets, in lanes: survivor `sj` of channel `oc`
+    /// owns `wgt_words[(off[oc] as usize + sj)·words ..][..words]`.
+    off: Vec<u32>,
+    /// Total surviving lanes across channels.
+    lanes: usize,
+    /// Per-channel `2^m` of the surviving fan-in (B2S rescale).
+    scale: Vec<f64>,
+    /// Per-channel B2S/ReLU comparison floor: the surviving fan-in when
+    /// the stage applies the correlated-OR ReLU, 0 otherwise.
+    floor: Vec<u32>,
+    /// Per-channel index into `r4` (stochastic mode only).
+    r4_of: Vec<u32>,
+    /// Deduplicated B2S comparison sequences: [`layer_r4`] depends on the
+    /// fan-in only through `m_bits`, so channels of equal surviving width
+    /// share one sequence (stochastic mode only).
+    r4: Vec<Vec<u32>>,
+    /// Every channel survives the same lane set (channel-structured
+    /// sparsity) — the transposed kernel keeps its shared-tile fast path
+    /// exactly when this holds.
+    shared: bool,
+}
+
+/// Compute one layer's pruning state: `Ok(None)` when the policy prunes
+/// nothing here (the dense fallback), a typed error when a channel loses
+/// every lane. `r4`/`r4_of` are derived only in stochastic mode
+/// (`stream = Some((k, base))`).
+fn prune_layer(
+    st: &StageDescriptor,
+    lw: &LayerWeights,
+    bits: u32,
+    sparsity: SparsityPolicy,
+    stream: Option<(usize, u32)>,
+) -> Result<Option<PrunedLayer>> {
+    if sparsity.is_off() {
+        return Ok(None);
+    }
+    let mut surv: Vec<Vec<u32>> = Vec::with_capacity(lw.codes.len());
+    let mut any = false;
+    for (oc, row) in lw.codes.iter().enumerate() {
+        let keep: Vec<u32> = row
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| !sparsity.prunes(c, bits))
+            .map(|(j, _)| j as u32)
+            .collect();
+        if keep.is_empty() {
+            bail!(
+                "layer {} ({}): sparsity threshold {} prunes output channel {oc} to fan-in 0",
+                st.index,
+                st.label(),
+                sparsity.threshold
+            );
+        }
+        any |= keep.len() < row.len();
+        surv.push(keep);
+    }
+    if !any {
+        return Ok(None);
+    }
+    let shared = surv.windows(2).all(|w| w[0] == w[1]);
+    let relu = st.relu;
+    let n_ch = surv.len();
+    let (mut off, mut scale, mut floor, mut r4_of) = (
+        Vec::with_capacity(n_ch),
+        Vec::with_capacity(n_ch),
+        Vec::with_capacity(n_ch),
+        Vec::with_capacity(n_ch),
+    );
+    let mut lanes = 0usize;
+    let mut r4: Vec<Vec<u32>> = Vec::new();
+    let mut r4_m: Vec<u32> = Vec::new();
+    for s in &surv {
+        let n = s.len();
+        off.push(lanes as u32);
+        lanes += n;
+        scale.push((1u64 << neuron::m_bits(n)) as f64);
+        floor.push(if relu { n as u32 } else { 0 });
+        if let Some((k, base)) = stream {
+            let m = neuron::m_bits(n);
+            let idx = match r4_m.iter().position(|&x| x == m) {
+                Some(i) => i,
+                None => {
+                    r4_m.push(m);
+                    r4.push(layer_r4(n, k, base));
+                    r4.len() - 1
+                }
+            };
+            r4_of.push(idx as u32);
+        }
+    }
+    Ok(Some(PrunedLayer { surv, off, lanes, scale, floor, r4_of, r4, shared }))
 }
 
 /// Compile-time state of the bit-plane transposed kernel
@@ -449,23 +715,40 @@ struct LayerPlan {
 /// tile feeds all-ones (XNOR identity), reproducing the fused path's
 /// constant-stream accumulate bit-for-bit.
 struct TransposedPlan {
-    /// Fan-in lane blocks of 64 (`fan_in.div_ceil(64)`).
+    /// Fan-in lane blocks of 64: the largest surviving per-channel
+    /// fan-in (the dense fan-in when unpruned), `div_ceil(64)`.
     lane_blocks: usize,
     /// Transposed weight planes (see layout above).
     wgt_tr: Vec<u64>,
-    /// Per-lane stuck-at flags (`stuck[j]` = lane j is dead); empty when
-    /// the fault plan pins no lane of this layer.
+    /// Per-**original**-lane stuck-at flags (`stuck[j]` = lane j is
+    /// dead); empty when the fault plan pins no lane of this layer.
     stuck: Vec<bool>,
+    /// Closed-form all-zero-tile cycle counts,
+    /// `zero_ones[(oc·k_words + cw)·64 + t]` = the XNOR popcount of an
+    /// all-zero activation tile against channel `oc`'s weight plane at
+    /// cycle `cw·64 + t` (`XNOR(0, w) = !w`, and tail lanes carry
+    /// all-ones weight bits so they contribute 0) — the runtime
+    /// activation-sparsity short-circuit adds these instead of walking
+    /// lane blocks.
+    zero_ones: Vec<u32>,
 }
 
 impl TransposedPlan {
     /// Re-pack a stochastic [`LayerPlan`]'s lane-major weight words into
     /// transposed bit planes, one 64×64 [`bitplane::transpose64`] tile at
     /// a time. Pure layout: the stream bits (keys, faults, padding) are
-    /// exactly the ones the fused path would read.
+    /// exactly the ones the fused path would read. Under a pruned layer,
+    /// plane lane `sj` is the channel's `sj`-th *surviving* lane and the
+    /// tail (from the surviving fan-in up) pads with XNOR identities —
+    /// the same re-pack PR 8 applies at the dense fan-in.
     fn build(lp: &LayerPlan, words: usize, faults: Option<&FaultPlan>) -> Self {
         let fan_in = lp.fan_in;
-        let lane_blocks = fan_in.div_ceil(bitplane::LANES);
+        let pruned = lp.pruned.as_ref();
+        let max_fan = match pruned {
+            Some(p) => p.surv.iter().map(Vec::len).max().unwrap_or(0),
+            None => fan_in,
+        };
+        let lane_blocks = max_fan.div_ceil(bitplane::LANES);
         let stuck: Vec<bool> = match faults {
             Some(f) if !f.stuck_lanes.is_empty() => {
                 let v: Vec<bool> = (0..fan_in).map(|j| f.stuck(lp.wl, j).is_some()).collect();
@@ -478,25 +761,32 @@ impl TransposedPlan {
             _ => Vec::new(),
         };
         let mut wgt_tr = vec![0u64; lp.out_ch * words * bitplane::LANES * lane_blocks];
+        let mut zero_ones = vec![0u32; lp.out_ch * words * bitplane::LANES];
         let mut cols = [0u64; bitplane::LANES];
         for oc in 0..lp.out_ch {
+            let surv = pruned.map(|p| p.surv[oc].as_slice());
+            let n_oc = surv.map_or(fan_in, <[u32]>::len);
+            let lane0 = pruned.map_or(oc * fan_in, |p| p.off[oc] as usize);
             for b in 0..lane_blocks {
                 for cw in 0..words {
                     for (l, col) in cols.iter_mut().enumerate() {
-                        let j = b * bitplane::LANES + l;
-                        *col = if j >= fan_in {
+                        let sj = b * bitplane::LANES + l;
+                        *col = if sj >= n_oc {
                             // Tail lane: all-ones vs the tile's all-zeros.
                             !0u64
-                        } else if let Some(v) = faults.and_then(|f| f.stuck(lp.wl, j)) {
-                            // Stuck lane: the constant vs the tile's
-                            // all-ones (XNOR identity).
-                            if v {
-                                !0u64
-                            } else {
-                                0u64
-                            }
                         } else {
-                            lp.wgt_words[(oc * fan_in + j) * words + cw]
+                            let j = surv.map_or(sj, |s| s[sj] as usize);
+                            if let Some(v) = faults.and_then(|f| f.stuck(lp.wl, j)) {
+                                // Stuck lane: the constant vs the tile's
+                                // all-ones (XNOR identity).
+                                if v {
+                                    !0u64
+                                } else {
+                                    0u64
+                                }
+                            } else {
+                                lp.wgt_words[(lane0 + sj) * words + cw]
+                            }
                         };
                     }
                     bitplane::transpose64(&mut cols);
@@ -506,8 +796,19 @@ impl TransposedPlan {
                     }
                 }
             }
+            // The channel's zero-tile counts fall out of the finished
+            // planes (stuck lanes never see a zero tile: their tile bits
+            // are forced to all-ones, so the short-circuit cannot fire).
+            for cw in 0..words {
+                let plane = (oc * words + cw) * bitplane::LANES * lane_blocks;
+                for t in 0..bitplane::LANES {
+                    let row = &wgt_tr[plane + t * lane_blocks..][..lane_blocks];
+                    zero_ones[(oc * words + cw) * bitplane::LANES + t] =
+                        bitplane::zero_xnor_count(row);
+                }
+            }
         }
-        TransposedPlan { lane_blocks, wgt_tr, stuck }
+        TransposedPlan { lane_blocks, wgt_tr, stuck, zero_ones }
     }
 }
 
@@ -529,6 +830,10 @@ pub struct Scratch {
     /// Window-major staging of the transposed kernel's outputs before the
     /// scatter back to the engine's channel-major layout.
     tr_out: Vec<f64>,
+    /// `(executed, skipped)` op counts of the stage that ran last —
+    /// seeded with the stage's static accounting by the step loop, then
+    /// adjusted by the transposed kernel's runtime zero-tile skips.
+    stage_ops: (u64, u64),
 }
 
 /// Worker-local scratch of the bit-plane transposed kernel: the activation
@@ -561,9 +866,27 @@ impl TrScratch {
     }
 }
 
-/// One step's wall-clock share of an inference: `(layer index, stage
-/// label, duration)` — see [`ForwardPlan::run_with_timings`].
-pub type StepTiming = (usize, &'static str, std::time::Duration);
+/// One step's share of an inference — see
+/// [`ForwardPlan::run_with_timings`]: wall-clock plus the stage's op
+/// accounting, so the `BENCH_layers.json` sw-vs-hw comparison separates
+/// executed work from sparsity-skipped work instead of crediting skipped
+/// lanes as throughput.
+#[derive(Debug, Clone, Copy)]
+pub struct StepTiming {
+    /// Source layer index.
+    pub layer: usize,
+    /// Stage label (see [`StageDescriptor::label`]).
+    pub label: &'static str,
+    /// Wall-clock duration of the step.
+    pub elapsed: std::time::Duration,
+    /// SC lane-cycle products (MACs in the analytic modes) the stage
+    /// executed this run.
+    pub ops_executed: u64,
+    /// Lane-cycle products skipped this run: compile-time pruned weight
+    /// lanes plus all-zero activation tiles short-circuited at runtime
+    /// by the transposed kernel. Value stages report 0/0.
+    pub ops_skipped: u64,
+}
 
 /// A compiled forward pass: the [`crate::accel::stage`] IR of a
 /// [`NetworkSpec`] + [`QuantizedWeights`] + [`ForwardMode`] lowered into
@@ -639,13 +962,13 @@ impl ForwardPlan {
         Self::compile_with_opts(net, weights, mode, precision, faults, KernelPath::default())
     }
 
-    /// The full compile entry point:
     /// [`ForwardPlan::compile_with_precision_faults`] plus an explicit
     /// [`KernelPath`] selecting which stochastic compute kernel each stage
     /// lowers to. `Auto` (the default everywhere else) resolves to the
     /// bit-plane transposed kernel; `Fused` keeps the lane-at-a-time
     /// kernel as a baseline. The choice never changes outputs — all paths
-    /// are bit-exact — only the compiled layout and speed.
+    /// are bit-exact — only the compiled layout and speed. Compiles
+    /// dense (no sparsity policy).
     pub fn compile_with_opts(
         net: &NetworkSpec,
         weights: &QuantizedWeights,
@@ -654,6 +977,47 @@ impl ForwardPlan {
         faults: Option<&FaultPlan>,
         kernel: KernelPath,
     ) -> Result<Self> {
+        Self::compile_with_sparsity(
+            net,
+            weights,
+            mode,
+            precision,
+            faults,
+            kernel,
+            SparsityPolicy::OFF,
+        )
+    }
+
+    /// The full compile entry point: [`ForwardPlan::compile_with_opts`]
+    /// plus a [`SparsityPolicy`] compiled into every stage. Weight lanes
+    /// below the policy threshold are pruned out of the gather walks into
+    /// per-channel skip lists (see [`SparsityPolicy`] for the exact
+    /// semantics and the bias-folding math); `SparsityPolicy::OFF`
+    /// reproduces the dense artifact bit-for-bit.
+    ///
+    /// Kernel interaction: pinned `Fused`/`Transposed` paths are honored
+    /// (both pruned implementations are bit-exact). `Auto` resolves per
+    /// stage — channel-structured pruning (every channel survives the
+    /// same lane set) keeps the transposed kernel's shared activation
+    /// tile, while unstructured pruning on a shared-window stage routes
+    /// to the fused skip-list kernel, because re-tiling the activation
+    /// transpose per output channel costs more than the pruned XNOR pass
+    /// saves. Degenerate policies (non-finite/negative/≥1.0 thresholds,
+    /// or a threshold that prunes some channel to fan-in 0) are typed
+    /// errors.
+    #[allow(clippy::too_many_arguments)]
+    pub fn compile_with_sparsity(
+        net: &NetworkSpec,
+        weights: &QuantizedWeights,
+        mode: ForwardMode,
+        precision: &PrecisionPlan,
+        faults: Option<&FaultPlan>,
+        kernel: KernelPath,
+        sparsity: SparsityPolicy,
+    ) -> Result<Self> {
+        sparsity
+            .validate()
+            .map_err(|e| anyhow::anyhow!("network {:?}: {e}", net.name))?;
         // Storage faults strike before any datapath runs: corrupt the
         // weight SRAM once, then lower the corrupted tensor normally.
         let corrupted;
@@ -708,8 +1072,29 @@ impl ForwardPlan {
                         ForwardMode::Stochastic { k, .. } => (k, k.div_ceil(64)),
                         _ => (0, 0),
                     };
-                    let mut lp = build_layer_plan(weights, st, table, mode, faults.as_deref())?;
-                    let tr = match (mode, kernel.resolved()) {
+                    let mut lp = build_layer_plan(
+                        weights,
+                        st,
+                        table,
+                        mode,
+                        faults.as_deref(),
+                        sparsity,
+                    )?;
+                    // Per-stage kernel resolution (see
+                    // `compile_with_sparsity`): Auto routes unstructured-
+                    // pruned shared-window stages to the fused skip-list
+                    // kernel; per-channel (depthwise) tables already
+                    // re-tile per channel, so they stay transposed.
+                    let resolved = match kernel {
+                        KernelPath::Auto
+                            if lp.pruned.as_ref().is_some_and(|p| !p.shared)
+                                && !lp.gather.per_channel =>
+                        {
+                            KernelPath::Fused
+                        }
+                        other => other.resolved(),
+                    };
+                    let tr = match (mode, resolved) {
                         (ForwardMode::Stochastic { .. }, KernelPath::Transposed) => {
                             let tr = TransposedPlan::build(&lp, words, faults.as_deref());
                             // The transposed planes replace the lane-major
@@ -720,6 +1105,22 @@ impl ForwardPlan {
                         }
                         _ => None,
                     };
+                    // Static op accounting: lane-cycle products in the
+                    // stochastic mode, MACs in the analytic modes.
+                    let cycles = if let ForwardMode::Stochastic { k, .. } = mode {
+                        k as u64
+                    } else {
+                        1
+                    };
+                    let n_win = lp.gather.n_win as u64;
+                    let ops = match &lp.pruned {
+                        Some(p) => {
+                            let exec = p.lanes as u64 * n_win * cycles;
+                            let dense = (lp.out_ch * lp.fan_in) as u64 * n_win * cycles;
+                            (exec, dense - exec)
+                        }
+                        None => ((lp.out_ch * lp.fan_in) as u64 * n_win * cycles, 0),
+                    };
                     Box::new(ComputeStage {
                         meta,
                         lp,
@@ -729,6 +1130,7 @@ impl ForwardPlan {
                         bits,
                         faults: faults.clone(),
                         tr,
+                        ops,
                     })
                 }
                 StageOp::MaxPool { size } => {
@@ -823,8 +1225,9 @@ impl ForwardPlan {
     }
 
     /// [`ForwardPlan::run_with_threads`] that additionally appends one
-    /// `(layer index, stage label, duration)` record per executed step —
-    /// the per-layer software cost breakdown behind `BENCH_layers.json`.
+    /// [`StepTiming`] record per executed step — layer index, stage
+    /// label, wall-clock, and the executed/skipped op split — the
+    /// per-layer software cost breakdown behind `BENCH_layers.json`.
     /// Output is bit-identical to the untimed paths.
     pub fn run_with_timings(
         &self,
@@ -851,6 +1254,9 @@ impl ForwardPlan {
         }
         for step in &self.steps {
             let t0 = timings.is_some().then(std::time::Instant::now);
+            // Seed with the stage's static accounting; the transposed
+            // kernel moves runtime zero-tile skips across the split.
+            scr.stage_ops = step.ops();
             step.run(scr, threads);
             if step.save_output() {
                 let Scratch { act, saved, .. } = scr;
@@ -858,10 +1264,43 @@ impl ForwardPlan {
                 saved[step.index()].extend_from_slice(act);
             }
             if let (Some(ts), Some(t0)) = (timings.as_mut(), t0) {
-                ts.push((step.index(), step.label(), t0.elapsed()));
+                ts.push(StepTiming {
+                    layer: step.index(),
+                    label: step.label(),
+                    elapsed: t0.elapsed(),
+                    ops_executed: scr.stage_ops.0,
+                    ops_skipped: scr.stage_ops.1,
+                });
             }
         }
         scr.act.clone()
+    }
+
+    /// Static per-image op accounting summed over every stage:
+    /// `(executed, skipped)` SC lane-cycle products (MACs in analytic
+    /// modes). `skipped` counts compile-time pruned weight lanes; the
+    /// transposed kernel's runtime zero-tile skips are per-run and
+    /// reported by [`ForwardPlan::run_with_timings`] instead.
+    pub fn ops_per_image(&self) -> (u64, u64) {
+        self.steps.iter().fold((0, 0), |(e, s), step| {
+            let (a, b) = step.ops();
+            (e + a, s + b)
+        })
+    }
+
+    /// Per-compute-layer surviving weight-lane density of this compiled
+    /// plan, indexed by weight layer (all 1.0 for dense plans) — the
+    /// measured-at-compile input of the density-aware cost model.
+    pub fn stage_densities(&self) -> Vec<f64> {
+        let mut out = vec![1.0; self.precision.len()];
+        for step in &self.steps {
+            if let Some((wl, d)) = step.weight_density() {
+                if wl < out.len() {
+                    out[wl] = d;
+                }
+            }
+        }
+        out
     }
 
     /// Batched inference: images fan out across cores, the plan's windows /
@@ -900,6 +1339,10 @@ struct ComputeStage {
     /// Transposed bit-plane layout (`Some` iff the stage lowered to
     /// [`KernelPath::Transposed`]).
     tr: Option<TransposedPlan>,
+    /// Static `(executed, skipped)` op accounting per image (lane-cycle
+    /// products; MACs for analytic modes), fixed at compile from the
+    /// pruning state.
+    ops: (u64, u64),
 }
 
 impl LayerStage for ComputeStage {
@@ -914,6 +1357,16 @@ impl LayerStage for ComputeStage {
             _ => self.run_analytic(scr, threads),
         }
         std::mem::swap(&mut scr.act, &mut scr.out);
+    }
+
+    fn ops(&self) -> (u64, u64) {
+        self.ops
+    }
+
+    fn weight_density(&self) -> Option<(usize, f64)> {
+        let total = (self.lp.out_ch * self.lp.fan_in).max(1);
+        let lanes = self.lp.pruned.as_ref().map_or(total, |p| p.lanes);
+        Some((self.lp.wl, lanes as f64 / total as f64))
     }
 }
 
@@ -937,29 +1390,61 @@ impl ComputeStage {
         let floor = lp.floor;
         let act_words: &[u64] = &scr.act_words;
         let out: &mut [f64] = &mut scr.out;
+        let pruned = lp.pruned.as_ref();
         let worker = |vc: &mut VerticalCounter, start: usize, slice: &mut [f64]| {
             for (off, slot) in slice.iter_mut().enumerate() {
                 let g = start + off;
                 let (oc, wi) = (g / lp.gather.n_win, g % lp.gather.n_win);
-                let wbase = oc * lp.fan_in * words;
+                let window = lp.gather.window(oc, wi);
                 vc.reset();
-                for (j, &src) in lp.gather.window(oc, wi).iter().enumerate() {
-                    if let Some((ones, zeros)) = &stuck_const {
-                        if let Some(v) = faults.and_then(|f| f.stuck(lp.wl, j)) {
-                            vc.add_xnor_words(if v { ones } else { zeros }, ones);
-                            continue;
+                let (ones, n_f, scale) = match pruned {
+                    // The pruned neuron: walk the channel's skip list —
+                    // survivor sj keeps its original lane j for the
+                    // window lookup and the fault addressing, and owns
+                    // packed stream slot off[oc] + sj. Recovery uses the
+                    // surviving fan-in's 2^m / floor (bias folding).
+                    Some(p) => {
+                        let surv = &p.surv[oc];
+                        let lane0 = p.off[oc] as usize;
+                        for (sj, &j32) in surv.iter().enumerate() {
+                            let j = j32 as usize;
+                            if let Some((ones_w, zeros_w)) = &stuck_const {
+                                if let Some(v) = faults.and_then(|f| f.stuck(lp.wl, j)) {
+                                    vc.add_xnor_words(if v { ones_w } else { zeros_w }, ones_w);
+                                    continue;
+                                }
+                            }
+                            let a = match window[j] {
+                                Some(i) => &act_words[i * words..(i + 1) * words],
+                                None => &lp.pad_words[j * words..(j + 1) * words],
+                            };
+                            let w = &lp.wgt_words[(lane0 + sj) * words..][..words];
+                            vc.add_xnor_words(a, w);
                         }
+                        let ones = vc.b2s_ones(&p.r4[p.r4_of[oc] as usize], p.floor[oc]);
+                        (ones, surv.len() as f64, p.scale[oc])
                     }
-                    let a = match src {
-                        Some(i) => &act_words[i * words..(i + 1) * words],
-                        None => &lp.pad_words[j * words..(j + 1) * words],
-                    };
-                    let w = &lp.wgt_words[wbase + j * words..wbase + (j + 1) * words];
-                    vc.add_xnor_words(a, w);
-                }
-                let ones = vc.b2s_ones(&lp.r4, floor);
+                    None => {
+                        let wbase = oc * lp.fan_in * words;
+                        for (j, &src) in window.iter().enumerate() {
+                            if let Some((ones_w, zeros_w)) = &stuck_const {
+                                if let Some(v) = faults.and_then(|f| f.stuck(lp.wl, j)) {
+                                    vc.add_xnor_words(if v { ones_w } else { zeros_w }, ones_w);
+                                    continue;
+                                }
+                            }
+                            let a = match src {
+                                Some(i) => &act_words[i * words..(i + 1) * words],
+                                None => &lp.pad_words[j * words..(j + 1) * words],
+                            };
+                            let w = &lp.wgt_words[wbase + j * words..wbase + (j + 1) * words];
+                            vc.add_xnor_words(a, w);
+                        }
+                        (vc.b2s_ones(&lp.r4, floor), lp.fan_in as f64, lp.scale)
+                    }
+                };
                 let v = 2.0 * (ones as f64 / k as f64) - 1.0;
-                let sp = (v + 1.0) * lp.scale - lp.fan_in as f64;
+                let sp = (v + 1.0) * scale - n_f;
                 *slot = reencode(sp, lp.gamma, lp.mu, lp.final_layer);
             }
         };
@@ -1025,9 +1510,15 @@ impl ComputeStage {
         let total = out_ch * n_win;
         let lb = tr.lane_blocks;
         let fan_in = lp.fan_in;
-        let per_channel = lp.gather.per_channel;
+        let pruned = lp.pruned.as_ref();
+        // Unstructured (per-channel) survivor sets force per-channel
+        // tiles, exactly like depthwise gather tables always have.
+        let per_channel = lp.gather.per_channel || pruned.is_some_and(|p| !p.shared);
         let floor = lp.floor;
-        let Scratch { act_words, out, tr_out, tr: tr_scr, .. } = scr;
+        // Runtime activation-sparsity skips (lane-cycles), summed across
+        // workers for the run_with_timings ops breakdown.
+        let zero_skips = std::sync::atomic::AtomicU64::new(0);
+        let Scratch { act_words, out, tr_out, tr: tr_scr, .. } = &mut *scr;
         out.clear();
         out.resize(total, 0.0);
         tr_out.clear();
@@ -1037,37 +1528,61 @@ impl ComputeStage {
         // Build one (window, cycle-word) activation tile: the 64
         // lane-major stream words of each lane block, transposed
         // cycle-major. 64·lane_blocks words — L1-resident for every
-        // shipped topology.
-        let build_tile = |st: &mut TrScratch, oc: usize, wi: usize, cw: usize| {
+        // shipped topology. Under pruning, tile lane sj is the channel's
+        // sj-th surviving lane. Returns true when the whole tile is zero
+        // (every gathered activation word is 0): the caller then takes
+        // the closed-form count instead of walking lane blocks.
+        let build_tile = |st: &mut TrScratch, oc: usize, wi: usize, cw: usize| -> bool {
             let window = lp.gather.window(oc, wi);
+            let surv = pruned.map(|p| p.surv[oc].as_slice());
+            let n_oc = surv.map_or(fan_in, <[u32]>::len);
+            let mut any = 0u64;
             for b in 0..lb {
+                let mut blk = 0u64;
                 for (l, col) in st.cols.iter_mut().enumerate() {
-                    let j = b * bitplane::LANES + l;
-                    *col = if j >= fan_in {
+                    let sj = b * bitplane::LANES + l;
+                    *col = if sj >= n_oc {
                         // Tail lane: zeros against the plane's all-ones.
                         0
-                    } else if !tr.stuck.is_empty() && tr.stuck[j] {
-                        // Stuck lane: the XNOR identity against the
-                        // compiled-in constant.
-                        !0u64
                     } else {
-                        match window[j] {
-                            Some(i) => act_words[i * words + cw],
-                            None => lp.pad_words[j * words + cw],
+                        let j = surv.map_or(sj, |s| s[sj] as usize);
+                        if !tr.stuck.is_empty() && tr.stuck[j] {
+                            // Stuck lane: the XNOR identity against the
+                            // compiled-in constant (and a tile that can
+                            // never read as all-zero).
+                            !0u64
+                        } else {
+                            match window[j] {
+                                Some(i) => act_words[i * words + cw],
+                                None => lp.pad_words[j * words + cw],
+                            }
                         }
                     };
+                    blk |= *col;
                 }
-                bitplane::transpose64(&mut st.cols);
-                for (t, &row) in st.cols.iter().enumerate() {
-                    st.tile[t * lb + b] = row;
+                if blk == 0 {
+                    // All-zero block: its transpose is zeros — clear the
+                    // tile rows directly (the tile is reused across
+                    // (window, cycle-word) pairs and may hold stale bits).
+                    for t in 0..bitplane::LANES {
+                        st.tile[t * lb + b] = 0;
+                    }
+                } else {
+                    bitplane::transpose64(&mut st.cols);
+                    for (t, &row) in st.cols.iter().enumerate() {
+                        st.tile[t * lb + b] = row;
+                    }
                 }
+                any |= blk;
             }
+            any == 0
         };
         // Window-major worker over flat units g = wi·out_ch + oc, so a
         // chunk walks whole (window, channel-range) groups and the tile
         // build amortizes across the group. Dense stages (n_win = 1)
         // split their single window's channel range across workers.
         let worker = |st: &mut TrScratch, start: usize, slice: &mut [f64]| {
+            let mut local_skip = 0u64;
             let end = start + slice.len();
             let mut g = start;
             while g < end {
@@ -1078,34 +1593,65 @@ impl ComputeStage {
                 st.ones[..nn].fill(0);
                 for cw in 0..words {
                     let valid = (k - cw * 64).min(64);
-                    let r4 = &lp.r4[cw * 64..cw * 64 + valid];
+                    let mut zero = false;
                     if !per_channel {
-                        build_tile(st, 0, wi, cw);
+                        zero = build_tile(st, 0, wi, cw);
                     }
                     for oi in 0..nn {
                         let oc = oc0 + oi;
                         if per_channel {
-                            build_tile(st, oc, wi, cw);
+                            zero = build_tile(st, oc, wi, cw);
                         }
-                        let wrow = &tr.wgt_tr[(oc * words + cw) * bitplane::LANES * lb..]
-                            [..bitplane::LANES * lb];
+                        let (n_oc, floor_oc, r4) = match pruned {
+                            Some(p) => (
+                                p.surv[oc].len(),
+                                p.floor[oc],
+                                p.r4[p.r4_of[oc] as usize].as_slice(),
+                            ),
+                            None => (fan_in, floor, lp.r4.as_slice()),
+                        };
+                        let r4 = &r4[cw * 64..cw * 64 + valid];
                         let mut ones = 0u32;
-                        for (t, &r) in r4.iter().enumerate() {
-                            let c = bitplane::xnor_count(
-                                &st.tile[t * lb..(t + 1) * lb],
-                                &wrow[t * lb..(t + 1) * lb],
-                            );
-                            ones += ((2 * c).max(floor) > r) as u32;
+                        if zero {
+                            // All-zero activation tile: XNOR(0, w) = !w,
+                            // so each cycle's count is the compile-time
+                            // complement popcount — no lane-block walk.
+                            let zc = &tr.zero_ones
+                                [(oc * words + cw) * bitplane::LANES..][..valid];
+                            for (&z, &r) in zc.iter().zip(r4) {
+                                ones += ((2 * z).max(floor_oc) > r) as u32;
+                            }
+                            local_skip += n_oc as u64 * valid as u64;
+                        } else {
+                            let wrow = &tr.wgt_tr[(oc * words + cw) * bitplane::LANES * lb..]
+                                [..bitplane::LANES * lb];
+                            for (t, &r) in r4.iter().enumerate() {
+                                let c = bitplane::xnor_count(
+                                    &st.tile[t * lb..(t + 1) * lb],
+                                    &wrow[t * lb..(t + 1) * lb],
+                                );
+                                ones += ((2 * c).max(floor_oc) > r) as u32;
+                            }
                         }
                         st.ones[oi] += ones;
                     }
                 }
                 for (oi, slot) in slice[g - start..gend - start].iter_mut().enumerate() {
+                    let (n_oc, scale) = match pruned {
+                        Some(p) => {
+                            let oc = oc0 + oi;
+                            (p.surv[oc].len(), p.scale[oc])
+                        }
+                        None => (fan_in, lp.scale),
+                    };
                     let v = 2.0 * (st.ones[oi] as f64 / k as f64) - 1.0;
-                    let sp = (v + 1.0) * lp.scale - fan_in as f64;
+                    let sp = (v + 1.0) * scale - n_oc as f64;
                     *slot = reencode(sp, lp.gamma, lp.mu, lp.final_layer);
                 }
                 g = gend;
+            }
+            if local_skip > 0 {
+                zero_skips.fetch_add(local_skip, std::sync::atomic::Ordering::Relaxed);
             }
         };
         if threads != 1 && total > 1 {
@@ -1132,6 +1678,10 @@ impl ComputeStage {
                 out[oc * n_win + wi] = tr_out[wi * out_ch + oc];
             }
         }
+        // Move the runtime zero-tile skips from the executed side of the
+        // static split to the skipped side (total is invariant).
+        let moved = zero_skips.into_inner();
+        scr.stage_ops = (self.ops.0.saturating_sub(moved), self.ops.1 + moved);
     }
 
     /// Expectation / noisy-expectation / fixed-point layer over the same
@@ -1159,32 +1709,56 @@ impl ComputeStage {
         let out: &mut [f64] = &mut scr.out;
         let mode = self.mode;
         let layer_seed = lp.wl as u32;
+        let pruned = lp.pruned.as_ref();
         let worker = |start: usize, slice: &mut [f64]| {
             for (off, slot) in slice.iter_mut().enumerate() {
                 let g = start + off;
                 let (oc, wi) = (g / lp.gather.n_win, g % lp.gather.n_win);
                 let wq = &lp.wq[oc * lp.fan_in..(oc + 1) * lp.fan_in];
+                let window = lp.gather.window(oc, wi);
                 let mut pre = 0.0f64;
                 let mut var = 0.0f64;
-                for (j, &src) in lp.gather.window(oc, wi).iter().enumerate() {
-                    let a = match src {
-                        Some(i) => aq[i],
-                        None => lp.zq,
-                    };
-                    let p = a * wq[j];
-                    pre += p;
-                    var += 1.0 - p * p;
-                }
+                // Pruned lanes drop out of the sum AND the variance: the
+                // analytic model mirrors the stochastic datapath, which
+                // no longer runs those product streams.
+                let (n_f, scale_f) = match pruned {
+                    Some(p) => {
+                        for &j32 in &p.surv[oc] {
+                            let j = j32 as usize;
+                            let a = match window[j] {
+                                Some(i) => aq[i],
+                                None => lp.zq,
+                            };
+                            let pj = a * wq[j];
+                            pre += pj;
+                            var += 1.0 - pj * pj;
+                        }
+                        (p.surv[oc].len(), p.scale[oc])
+                    }
+                    None => {
+                        for (j, &src) in window.iter().enumerate() {
+                            let a = match src {
+                                Some(i) => aq[i],
+                                None => lp.zq,
+                            };
+                            let pj = a * wq[j];
+                            pre += pj;
+                            var += 1.0 - pj * pj;
+                        }
+                        (lp.fan_in, lp.scale)
+                    }
+                };
                 // sp: the value the S2B counter recovers.
                 let sp = match mode {
                     ForwardMode::Expectation | ForwardMode::NoisyExpectation { .. } => {
                         if lp.relu {
-                            // `lp.scale` is the compiled 2^m — the per-call
-                            // m_bits shift is hoisted out of this loop.
+                            // `scale_f` is the compiled 2^m of the
+                            // (surviving) fan-in — the per-call m_bits
+                            // shift is hoisted out of this loop.
                             let v = neuron::expectation_smooth_relu_scaled(
-                                pre, var, lp.fan_in, lp.scale,
+                                pre, var, n_f, scale_f,
                             );
-                            (v + 1.0) * lp.scale - lp.fan_in as f64
+                            (v + 1.0) * scale_f - n_f as f64
                         } else {
                             pre
                         }
@@ -1205,12 +1779,12 @@ impl ComputeStage {
                     // at k=32 rely on, §II-C refs), the conversion error
                     // scales as O(1/k), not the binomial O(1/sqrt(k)):
                     // sigma_v ~ 3*sqrt(P(1-P))/k.
-                    let v = (sp + lp.fan_in as f64) / lp.scale - 1.0;
+                    let v = (sp + n_f as f64) / scale_f - 1.0;
                     let p = ((v + 1.0) / 2.0).clamp(1e-6, 1.0 - 1e-6);
                     let sigma = 3.0 * (p * (1.0 - p)).sqrt() / k as f64;
                     let z = rng::gauss(seed ^ noise_ctr(oc, g), layer_seed);
                     let v = v + sigma * z;
-                    (v + 1.0) * lp.scale - lp.fan_in as f64
+                    (v + 1.0) * scale_f - n_f as f64
                 } else {
                     sp
                 };
@@ -1236,6 +1810,7 @@ fn build_layer_plan(
     table: GatherTable,
     mode: ForwardMode,
     faults: Option<&FaultPlan>,
+    sparsity: SparsityPolicy,
 ) -> Result<LayerPlan> {
     let bits = weights.bits;
     let wl = st.weight_layer.expect("compute stages carry a weight layer");
@@ -1260,6 +1835,16 @@ fn build_layer_plan(
     let final_layer = st.final_compute;
     let scale = (1u64 << neuron::m_bits(fan_in)) as f64;
     let needs_pad = table.needs_padding();
+    // The lane seed base — a pure function of the mode seed and the
+    // weight-layer index, shared by every kernel and the reference.
+    let layer_seed = wl as u32;
+    let stream = match mode {
+        ForwardMode::Stochastic { k, seed } => {
+            Some((k, seed ^ layer_seed.wrapping_mul(0x9E37_79B9)))
+        }
+        _ => None,
+    };
+    let pruned = prune_layer(st, lw, bits, sparsity, stream)?;
     let mut lp = LayerPlan {
         wl,
         out_ch,
@@ -1278,9 +1863,10 @@ fn build_layer_plan(
         pad_words: Vec::new(),
         wq: Vec::new(),
         zq: 0.0,
+        pruned,
     };
     match mode {
-        ForwardMode::Stochastic { k, seed } => {
+        ForwardMode::Stochastic { k, .. } => {
             // RNS sharing *with signal shuffling* (§I): every PCC sees a
             // per-lane wire-permuted view of the shared source, so product
             // streams are pairwise decorrelated and the per-cycle count
@@ -1288,35 +1874,60 @@ fn build_layer_plan(
             // was trained through. (Sharing the raw source across all
             // multiplier lanes makes counts swing coherently — a large,
             // k-independent positive bias through the smoothed ReLU.)
-            let layer_seed = wl as u32;
-            let base = seed ^ layer_seed.wrapping_mul(0x9E37_79B9);
+            let (_, base) = stream.expect("stochastic mode carries stream constants");
             let words = k.div_ceil(64);
             lp.base = base;
-            lp.r4 = layer_r4(fan_in, k, base);
-            lp.wgt_words = vec![0u64; out_ch * fan_in * words];
-            for (oc, wcodes) in lw.codes.iter().enumerate() {
-                for (j, &code) in wcodes.iter().enumerate() {
-                    // An SNG correlation fault drops the lane's wire
-                    // shuffle: the PCC compares its own code against the
-                    // *raw activation RNS* of site j — the correlated-
-                    // product failure mode the per-lane keys exist to
-                    // prevent. Flip masks key on the actual generation
-                    // key, so fused and reference inject identically.
-                    let correlated =
-                        faults.is_some_and(|f| f.correlated_weight_lane(wl, oc, j));
-                    let (lbase, lane) = if correlated {
-                        (base, j as u64)
-                    } else {
-                        (base ^ 0x5EED_CAFE, ((oc as u64) << 20) + j as u64)
-                    };
-                    let slot = &mut lp.wgt_words[(oc * fan_in + j) * words..][..words];
-                    lane_stream_words(code, bits, k, lbase, lane, slot);
-                    if let Some(f) = faults {
-                        f.flip_words(lbase, lane, k, slot);
+            // An SNG correlation fault drops the lane's wire shuffle: the
+            // PCC compares its own code against the *raw activation RNS*
+            // of site j — the correlated-product failure mode the
+            // per-lane keys exist to prevent. Flip masks key on the
+            // actual generation key, so every kernel and the reference
+            // inject identically. Keys always use the ORIGINAL lane
+            // index, pruned or not.
+            let key_of = |oc: usize, j: usize| -> (u32, u64) {
+                if faults.is_some_and(|f| f.correlated_weight_lane(wl, oc, j)) {
+                    (base, j as u64)
+                } else {
+                    (base ^ 0x5EED_CAFE, ((oc as u64) << 20) + j as u64)
+                }
+            };
+            match &lp.pruned {
+                Some(p) => {
+                    // Pruned layer: SNG work and stream storage shrink to
+                    // the survivors, packed densely per channel. The
+                    // per-channel comparison randoms live in the pruned
+                    // pool; lp.r4 stays empty.
+                    lp.wgt_words = vec![0u64; p.lanes * words];
+                    for (oc, wcodes) in lw.codes.iter().enumerate() {
+                        let lane0 = p.off[oc] as usize;
+                        for (sj, &j32) in p.surv[oc].iter().enumerate() {
+                            let j = j32 as usize;
+                            let (lbase, lane) = key_of(oc, j);
+                            let slot = &mut lp.wgt_words[(lane0 + sj) * words..][..words];
+                            lane_stream_words(wcodes[j], bits, k, lbase, lane, slot);
+                            if let Some(f) = faults {
+                                f.flip_words(lbase, lane, k, slot);
+                            }
+                        }
+                    }
+                }
+                None => {
+                    lp.r4 = layer_r4(fan_in, k, base);
+                    lp.wgt_words = vec![0u64; out_ch * fan_in * words];
+                    for (oc, wcodes) in lw.codes.iter().enumerate() {
+                        for (j, &code) in wcodes.iter().enumerate() {
+                            let (lbase, lane) = key_of(oc, j);
+                            let slot = &mut lp.wgt_words[(oc * fan_in + j) * words..][..words];
+                            lane_stream_words(code, bits, k, lbase, lane, slot);
+                            if let Some(f) = faults {
+                                f.flip_words(lbase, lane, k, slot);
+                            }
+                        }
                     }
                 }
             }
-            // Per-lane padding streams, only for layers with border windows.
+            // Per-lane padding streams, only for layers with border
+            // windows — indexed by original lane, pruned or not.
             if needs_pad {
                 let zero_code = quantize_bipolar(0.0, bits);
                 lp.pad_words = vec![0u64; fan_in * words];
@@ -1404,6 +2015,24 @@ pub mod reference {
         forward_stochastic_plan_faulted(net, weights, input, precision, seed, None)
     }
 
+    /// [`forward_stochastic_plan_faulted`] under a [`SparsityPolicy`]: the
+    /// per-bit golden model of `ForwardPlan::compile_with_sparsity`.
+    /// Pruned lanes are skipped in the window walk, the APC/B2S constants
+    /// come from each channel's *surviving* fan-in, and the S2B recovery
+    /// subtracts the surviving count — the same bias-folding contract the
+    /// fused and transposed kernels implement.
+    pub fn forward_stochastic_plan_sparse(
+        net: &NetworkSpec,
+        weights: &QuantizedWeights,
+        input: &[f64],
+        precision: &PrecisionPlan,
+        seed: u32,
+        faults: Option<&FaultPlan>,
+        sparsity: SparsityPolicy,
+    ) -> Vec<f64> {
+        forward_ref_inner(net, weights, input, precision, seed, faults, sparsity)
+    }
+
     /// [`forward_stochastic_plan`] under an optional [`FaultPlan`]: the
     /// per-bit golden model of
     /// `ForwardPlan::compile_with_precision_faults` — SRAM upsets corrupt
@@ -1419,6 +2048,19 @@ pub mod reference {
         precision: &PrecisionPlan,
         seed: u32,
         faults: Option<&FaultPlan>,
+    ) -> Vec<f64> {
+        forward_ref_inner(net, weights, input, precision, seed, faults, SparsityPolicy::OFF)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn forward_ref_inner(
+        net: &NetworkSpec,
+        weights: &QuantizedWeights,
+        input: &[f64],
+        precision: &PrecisionPlan,
+        seed: u32,
+        faults: Option<&FaultPlan>,
+        sparsity: SparsityPolicy,
     ) -> Vec<f64> {
         let corrupted;
         let weights = match faults {
@@ -1447,7 +2089,8 @@ pub mod reference {
                 StageOp::Conv(_) | StageOp::Dense { .. } => {
                     let table = stage::gather(st).expect("compute stages have gather tables");
                     let wl = st.weight_layer.expect("compute stages carry a weight layer");
-                    run_layer(st, &table, &act, weights, bits, precision.k_for(wl), seed, faults)
+                    let k = precision.k_for(wl);
+                    run_layer(st, &table, &act, weights, bits, k, seed, faults, sparsity)
                 }
                 StageOp::MaxPool { size } => {
                     let mut next = Vec::new();
@@ -1507,6 +2150,7 @@ pub mod reference {
         k: usize,
         seed: u32,
         faults: Option<&FaultPlan>,
+        sparsity: SparsityPolicy,
     ) -> Vec<f64> {
         let wl = st.weight_layer.expect("compute stages carry a weight layer");
         let lw = &weights.layers[wl];
@@ -1525,11 +2169,23 @@ pub mod reference {
         let pad_streams: Vec<Bitstream> = (0..fan_in)
             .map(|j| lane_stream_faulted(zero_code, bits, k, base, (1 << 40) + j as u64, faults))
             .collect();
-        let scale = (1u64 << neuron::m_bits(fan_in)) as f64;
         let mut out = Vec::with_capacity(out_ch * table.n_win);
         for oc in 0..out_ch {
             let wcodes = &lw.codes[oc];
             assert_eq!(wcodes.len(), fan_in, "weight fan-in mismatch");
+            // Pruned lanes drop out of the window walk entirely; every
+            // APC/B2S constant below derives from the surviving fan-in.
+            let keep: Vec<bool> = wcodes.iter().map(|&c| !sparsity.prunes(c, bits)).collect();
+            let n_oc = keep.iter().filter(|&&kp| kp).count();
+            assert!(n_oc > 0, "sparsity pruned channel {oc} of layer {wl} to fan-in 0");
+            let scale_oc = (1u64 << neuron::m_bits(n_oc)) as f64;
+            let r4_pruned;
+            let r4_oc = if n_oc == fan_in {
+                &r4
+            } else {
+                r4_pruned = layer_r4(n_oc, k, base);
+                &r4_pruned
+            };
             let wgt_streams: Vec<Bitstream> = wcodes
                 .iter()
                 .enumerate()
@@ -1548,6 +2204,13 @@ pub mod reference {
             for wi in 0..table.n_win {
                 let mut vc = VerticalCounter::new(k, fan_in);
                 for (j, &src) in table.window(oc, wi).iter().enumerate() {
+                    // Prune check before the stuck check: a pruned lane's
+                    // APC slot no longer exists, so a stuck fault
+                    // addressed at it never fires — matching the compiled
+                    // kernels, which only walk survivors.
+                    if !keep[j] {
+                        continue;
+                    }
                     if let Some(v) = faults.and_then(|f| f.stuck(wl, j)) {
                         vc.add(&if v { Bitstream::ones(k) } else { Bitstream::zeros(k) });
                         continue;
@@ -1558,14 +2221,14 @@ pub mod reference {
                     };
                     vc.add(&a.xnor(&wgt_streams[j]));
                 }
-                let o = neuron::b2s_stream(&vc, &r4);
+                let o = neuron::b2s_stream(&vc, r4_oc);
                 let o = if st.relu {
-                    o.or(&neuron::relu_zero_stream(fan_in, &r4))
+                    o.or(&neuron::relu_zero_stream(n_oc, r4_oc))
                 } else {
                     o
                 };
-                // S2B recovery + re-encoder affine.
-                let sp = (o.value_bipolar() + 1.0) * scale - fan_in as f64;
+                // S2B recovery + re-encoder affine, from surviving fan-in.
+                let sp = (o.value_bipolar() + 1.0) * scale_oc - n_oc as f64;
                 out.push(reencode(sp, lw.gamma, lw.mu, final_layer));
             }
         }
@@ -2082,13 +2745,26 @@ mod tests {
         let mut timings = Vec::new();
         let timed = plan.run_with_timings(&extended_input(), &mut scr, 1, &mut timings);
         assert_eq!(timed, plan.run(&extended_input()));
-        let labels: Vec<&str> = timings.iter().map(|&(_, l, _)| l).collect();
+        let labels: Vec<&str> = timings.iter().map(|t| t.label).collect();
         assert_eq!(
             labels,
             vec!["conv", "depthwise-conv", "add", "avgpool", "conv", "global-avgpool", "dense"]
         );
-        let indices: Vec<usize> = timings.iter().map(|&(i, _, _)| i).collect();
+        let indices: Vec<usize> = timings.iter().map(|t| t.layer).collect();
         assert_eq!(indices, (0..7).collect::<Vec<_>>());
+        // Dense plan: every compute stage reports executed ops, none
+        // skipped; pure data-movement stages report (0, 0).
+        for t in &timings {
+            assert_eq!(t.ops_skipped, 0, "{}", t.label);
+            match t.label {
+                "add" | "avgpool" | "global-avgpool" => assert_eq!(t.ops_executed, 0),
+                _ => assert!(t.ops_executed > 0, "{}", t.label),
+            }
+        }
+        let (exec, skip) = plan.ops_per_image();
+        assert_eq!(exec, timings.iter().map(|t| t.ops_executed).sum::<u64>());
+        assert_eq!(skip, 0);
+        assert_eq!(plan.stage_densities(), vec![1.0; net.n_compute()]);
     }
 
     #[test]
@@ -2338,5 +3014,360 @@ mod tests {
     fn classify_picks_argmax() {
         assert_eq!(classify(&[0.1, 0.9, -0.3]), 1);
         assert_eq!(classify(&[-5.0, -2.0, -9.0]), 1);
+    }
+
+    // ------------------------------------------------------------------
+    // Sparsity: compile-time pruning + runtime zero-tile short-circuit.
+    // ------------------------------------------------------------------
+
+    /// Forward through `compile_with_sparsity` with a pinned kernel.
+    #[allow(clippy::too_many_arguments)]
+    fn fwd_sparse(
+        net: &NetworkSpec,
+        w: &QuantizedWeights,
+        input: &[f64],
+        k: usize,
+        seed: u32,
+        kernel: KernelPath,
+        faults: Option<&crate::faults::FaultPlan>,
+        threshold: f64,
+    ) -> Vec<f64> {
+        let plan = PrecisionPlan::uniform(k, net.n_compute());
+        ForwardPlan::compile_with_sparsity(
+            net,
+            w,
+            ForwardMode::Stochastic { k, seed },
+            &plan,
+            faults,
+            kernel,
+            SparsityPolicy::threshold(threshold),
+        )
+        .unwrap()
+        .run(input)
+    }
+
+    /// Zero out the same lane positions across every output channel of
+    /// each layer — channel-structured sparsity, the shape real pruning
+    /// schedules produce and the transposed shared-tile fast path keeps.
+    fn structured_zeroed(mut w: QuantizedWeights, lanes: &[usize]) -> QuantizedWeights {
+        let zero = quantize_bipolar(0.0, w.bits);
+        for l in &mut w.layers {
+            for row in &mut l.codes {
+                for &j in lanes {
+                    if j < row.len() {
+                        row[j] = zero;
+                    }
+                }
+            }
+        }
+        w
+    }
+
+    #[test]
+    fn sparse_kernels_match_reference_structured() {
+        // Structured zeros (same lanes across all channels): survivors
+        // stay channel-shared, so the transposed kernel keeps its shared
+        // tiles and must still agree with fused and per-bit reference.
+        let net = tiny_net();
+        let w = structured_zeroed(tiny_weights(8, 42), &[1, 4, 7]);
+        let input = tiny_input();
+        let sp = SparsityPolicy::threshold(0.05);
+        let stats = prune_stats(&w, sp);
+        assert!(stats.iter().all(|s| s.min_fan_in > 0));
+        assert!(stats.iter().any(|s| s.pruned > 0), "zeros must actually prune");
+        for k in [64usize, 104] {
+            let plan = PrecisionPlan::uniform(k, net.n_compute());
+            let golden = reference::forward_stochastic_plan_sparse(
+                &net, &w, &input, &plan, 7, None, sp,
+            );
+            for kernel in [KernelPath::Fused, KernelPath::Transposed, KernelPath::Auto] {
+                let got = fwd_sparse(&net, &w, &input, k, 7, kernel, None, 0.05);
+                assert_eq!(got, golden, "k={k} kernel={kernel:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_kernels_match_reference_unstructured_with_faults() {
+        // Unstructured magnitude pruning (different survivors per
+        // channel) on the extended stack, clean and under every fault
+        // class at once. Auto resolves shared-window pruned stages to the
+        // fused skip-list kernel; a pinned transposed plan re-tiles per
+        // channel — all must agree with the per-bit reference.
+        let net = extended_net();
+        let w = seeded_weights(&net, 8, 17);
+        let input = extended_input();
+        let sp = SparsityPolicy::threshold(0.12);
+        let stats = prune_stats(&w, sp);
+        assert!(stats.iter().all(|s| s.min_fan_in > 0), "{stats:?}");
+        assert!(stats.iter().any(|s| s.pruned > 0), "{stats:?}");
+        let f = crate::faults::FaultPlan::new(11)
+            .with_bit_flip_rate(0.02)
+            .with_stuck_lane(2, 1, false)
+            .with_stuck_lane(1, 0, true)
+            .with_sng_correlation_rate(0.2)
+            .with_sram_upset_rate(0.05);
+        for faults in [None, Some(&f)] {
+            for k in [32usize, 104] {
+                let plan = PrecisionPlan::uniform(k, net.n_compute());
+                let golden = reference::forward_stochastic_plan_sparse(
+                    &net, &w, &input, &plan, 5, faults, sp,
+                );
+                for kernel in [KernelPath::Fused, KernelPath::Transposed, KernelPath::Auto] {
+                    let got = fwd_sparse(&net, &w, &input, k, 5, kernel, faults, 0.12);
+                    assert_eq!(
+                        got,
+                        golden,
+                        "k={k} kernel={kernel:?} faulted={}",
+                        faults.is_some()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_pruning_crosses_lane_block_boundaries() {
+        // Fan-in 130 pruned down across the 64-lane block width: the
+        // re-packed survivor blocks and their tail padding must stay
+        // bit-exact through the transposed layout.
+        let inputs = 130usize;
+        let net = NetworkSpec {
+            name: "sparse-lanes".into(),
+            input: (1, 1, inputs),
+            layers: vec![
+                LayerSpec::active(LayerKind::Dense { inputs, outputs: 4 }),
+                LayerSpec::linear(LayerKind::Dense { inputs: 4, outputs: 2 }),
+            ],
+        };
+        let w = seeded_weights(&net, 8, 130);
+        let input: Vec<f64> = (0..inputs).map(|i| ((i % 11) as f64) / 11.0).collect();
+        let sp = SparsityPolicy::threshold(0.3);
+        assert!(prune_stats(&w, sp).iter().all(|s| s.min_fan_in > 0));
+        for k in [64usize, 104] {
+            let plan = PrecisionPlan::uniform(k, net.n_compute());
+            let golden =
+                reference::forward_stochastic_plan_sparse(&net, &w, &input, &plan, 9, None, sp);
+            let fused = fwd_sparse(&net, &w, &input, k, 9, KernelPath::Fused, None, 0.3);
+            let tr = fwd_sparse(&net, &w, &input, k, 9, KernelPath::Transposed, None, 0.3);
+            assert_eq!(fused, golden, "k={k}");
+            assert_eq!(tr, golden, "k={k}");
+        }
+    }
+
+    #[test]
+    fn threshold_zero_reproduces_dense_plans_bit_for_bit() {
+        // The back-compat anchor: SparsityPolicy::OFF is the identity.
+        let net = extended_net();
+        let w = seeded_weights(&net, 8, 17);
+        let input = extended_input();
+        for kernel in [KernelPath::Fused, KernelPath::Transposed, KernelPath::Auto] {
+            let dense = fwd_kernel(&net, &w, &input, 64, 5, kernel, None);
+            let sparse0 = fwd_sparse(&net, &w, &input, 64, 5, kernel, None, 0.0);
+            assert_eq!(dense, sparse0, "kernel={kernel:?}");
+        }
+        let plan = PrecisionPlan::uniform(64, net.n_compute());
+        assert_eq!(
+            reference::forward_stochastic_plan_faulted(&net, &w, &input, &plan, 5, None),
+            reference::forward_stochastic_plan_sparse(
+                &net,
+                &w,
+                &input,
+                &plan,
+                5,
+                None,
+                SparsityPolicy::OFF
+            ),
+        );
+    }
+
+    #[test]
+    fn analytic_modes_take_pruning_through_the_same_plan() {
+        // Expectation / FixedPoint / NoisyExpectation skip pruned lanes
+        // and fold the bias from surviving fan-in — pruning must move the
+        // analytic output (the pruned lanes carried nonzero weight mass
+        // at threshold 0.12) while staying finite and deterministic.
+        let net = tiny_net();
+        let w = tiny_weights(8, 42);
+        let input = tiny_input();
+        let sp = SparsityPolicy::threshold(0.12);
+        assert!(prune_stats(&w, sp).iter().any(|s| s.pruned > 0));
+        for mode in [
+            ForwardMode::Expectation,
+            ForwardMode::FixedPoint,
+            ForwardMode::NoisyExpectation { k: 256, seed: 5 },
+        ] {
+            let plan = PrecisionPlan::uniform(256, net.n_compute());
+            let run = |t: f64| {
+                ForwardPlan::compile_with_sparsity(
+                    &net,
+                    &w,
+                    mode,
+                    &plan,
+                    None,
+                    KernelPath::Auto,
+                    SparsityPolicy::threshold(t),
+                )
+                .unwrap()
+                .run(&input)
+            };
+            let sparse = run(0.12);
+            assert!(sparse.iter().all(|v| v.is_finite()), "{mode:?}");
+            assert_eq!(sparse, run(0.12), "{mode:?} must be deterministic");
+            assert_ne!(sparse, run(0.0), "{mode:?} pruning must take effect");
+        }
+    }
+
+    #[test]
+    fn degenerate_sparsity_thresholds_are_typed_errors() {
+        let net = tiny_net();
+        let w = tiny_weights(8, 42);
+        let mode = ForwardMode::Stochastic { k: 64, seed: 1 };
+        let plan = PrecisionPlan::uniform(64, 2);
+        let compile = |sp: SparsityPolicy| {
+            ForwardPlan::compile_with_sparsity(
+                &net,
+                &w,
+                mode,
+                &plan,
+                None,
+                KernelPath::Auto,
+                sp,
+            )
+        };
+        for (t, needle) in [
+            (-0.1, ">= 0.0"),
+            (1.0, "< 1.0"),
+            (1.5, "< 1.0"),
+            (f64::NAN, "finite"),
+        ] {
+            let err = compile(SparsityPolicy::threshold(t)).unwrap_err().to_string();
+            assert!(err.contains(needle), "t={t}: {err}");
+        }
+        // A threshold that prunes an entire output channel to fan-in 0 is
+        // a compile error naming the channel, not a silent dead neuron.
+        let dead = structured_zeroed(tiny_weights(8, 42), &[0, 1, 2, 3, 4, 5, 6, 7, 8]);
+        assert!(
+            compile(SparsityPolicy::threshold(0.05)).is_ok(),
+            "baseline weights must compile"
+        );
+        let err = ForwardPlan::compile_with_sparsity(
+            &net,
+            &dead,
+            mode,
+            &plan,
+            None,
+            KernelPath::Auto,
+            SparsityPolicy::threshold(0.05),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("fan-in 0"), "{err}");
+    }
+
+    #[test]
+    fn zero_activation_tiles_short_circuit_bit_exactly() {
+        // Bipolar −1.0 activations quantize to code 0 → all-zero SC
+        // streams → all-zero transposed tiles, the case the closed-form
+        // zero-tile count short-circuits. All-zero and mixed inputs, with
+        // and without stream faults (a flipped bit revives a tile; the
+        // shortcut keys on actual content), must stay bit-exact.
+        let net = tiny_net();
+        let w = tiny_weights(8, 42);
+        let all_neg = vec![-1.0f64; 36];
+        let mut mixed = tiny_input();
+        for (i, v) in mixed.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *v = -1.0;
+            }
+        }
+        let f = crate::faults::FaultPlan::new(3).with_bit_flip_rate(0.02);
+        for input in [&all_neg, &mixed] {
+            for faults in [None, Some(&f)] {
+                for k in [64usize, 104] {
+                    let fused = fwd_kernel(&net, &w, input, k, 7, KernelPath::Fused, faults);
+                    let tr = fwd_kernel(&net, &w, input, k, 7, KernelPath::Transposed, faults);
+                    assert_eq!(fused, tr, "k={k} faulted={}", faults.is_some());
+                    // And with weight pruning layered on top.
+                    let sf = fwd_sparse(&net, &w, input, k, 7, KernelPath::Fused, faults, 0.12);
+                    let st =
+                        fwd_sparse(&net, &w, input, k, 7, KernelPath::Transposed, faults, 0.12);
+                    assert_eq!(sf, st, "sparse k={k} faulted={}", faults.is_some());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_plans_report_ops_and_densities() {
+        let net = tiny_net();
+        let w = structured_zeroed(tiny_weights(8, 42), &[1, 4, 7]);
+        let input = tiny_input();
+        let mode = ForwardMode::Stochastic { k: 64, seed: 7 };
+        let plan = PrecisionPlan::uniform(64, 2);
+        let compile = |t: f64, kernel: KernelPath| {
+            ForwardPlan::compile_with_sparsity(
+                &net,
+                &w,
+                mode,
+                &plan,
+                None,
+                kernel,
+                SparsityPolicy::threshold(t),
+            )
+            .unwrap()
+        };
+        let dense = compile(0.0, KernelPath::Transposed);
+        let sparse = compile(0.05, KernelPath::Transposed);
+        let (de, ds) = dense.ops_per_image();
+        let (se, ss) = sparse.ops_per_image();
+        assert_eq!(ds, 0);
+        assert_eq!(se + ss, de, "pruned work moves to skipped, never vanishes");
+        assert!(ss > 0 && se < de);
+        // Lanes {1, 4, 7} were zeroed in every channel of both layers.
+        let densities = sparse.stage_densities();
+        assert_eq!(densities.len(), 2);
+        assert!(densities[0] < 1.0);
+        assert_eq!(dense.stage_densities(), vec![1.0, 1.0]);
+        // Runtime accounting: a −1.0 input zeroes activation tiles, so
+        // the transposed run reports extra skipped ops on top of the
+        // static pruned count — and exec+skip stays conserved.
+        let mut scr = Scratch::default();
+        let mut timings = Vec::new();
+        let all_neg = vec![-1.0f64; 36];
+        sparse.run_with_timings(&all_neg, &mut scr, 1, &mut timings);
+        let texec: u64 = timings.iter().map(|t| t.ops_executed).sum();
+        let tskip: u64 = timings.iter().map(|t| t.ops_skipped).sum();
+        assert_eq!(texec + tskip, de);
+        assert!(tskip > ss, "zero activation tiles must add runtime skips");
+        // A no-zero input reports exactly the static split.
+        timings.clear();
+        sparse.run_with_timings(&input, &mut scr, 1, &mut timings);
+        assert_eq!(timings.iter().map(|t| t.ops_skipped).sum::<u64>(), ss);
+    }
+
+    #[test]
+    fn prune_stats_and_densities_are_consistent() {
+        let w = tiny_weights(8, 42);
+        let off = prune_stats(&w, SparsityPolicy::OFF);
+        assert!(off.iter().all(|s| s.pruned == 0 && (s.density() - 1.0).abs() < 1e-12));
+        let sp = SparsityPolicy::threshold(0.2);
+        let stats = prune_stats(&w, sp);
+        let dens = weight_densities(&w, sp);
+        assert_eq!(stats.len(), 2);
+        for (s, d) in stats.iter().zip(&dens) {
+            assert_eq!(s.density(), *d);
+            assert!(s.min_fan_in <= s.fan_in);
+            assert!((s.lanes - s.pruned) as f64 / s.lanes as f64 == *d);
+        }
+        // validate() accepts the whole legal range.
+        assert!(SparsityPolicy::OFF.validate().is_ok());
+        assert!(SparsityPolicy::threshold(0.999).validate().is_ok());
+        assert!(!SparsityPolicy::threshold(0.1).is_off());
+        // The exact-zero code is pruned at any positive threshold; the
+        // policy is strict-<, so threshold 0 prunes nothing.
+        let zero = quantize_bipolar(0.0, 8);
+        assert!(SparsityPolicy::threshold(1e-9).prunes(zero, 8));
+        assert!(!SparsityPolicy::OFF.prunes(zero, 8));
     }
 }

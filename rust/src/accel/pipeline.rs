@@ -77,6 +77,10 @@ pub struct LayerSchedule {
     /// Bitstream length this layer was scheduled at (per-layer under a
     /// [`PrecisionPlan`], the global `k` otherwise).
     pub k: usize,
+    /// Surviving weight-lane density this layer was costed at (1.0 for
+    /// dense plans): pruned lanes own no SNG/APC slot, no MAC·cycle, and
+    /// no operand traffic, so every fan-in-derived quantity scales by it.
+    pub weight_density: f64,
     /// Neurons resident on chip at once.
     pub n_onchip: usize,
     /// Neurons whose operands memory covers per clock cycle.
@@ -150,12 +154,29 @@ pub fn schedule_layer_k(
     batch: usize,
     k: usize,
 ) -> Option<LayerSchedule> {
+    schedule_layer_kd(stage, cfg, batch, k, 1.0)
+}
+
+/// [`schedule_layer_k`] at an explicit surviving weight-lane density in
+/// (0, 1]: a pruned layer's effective fan-in is `ceil(fan_in · density)`
+/// (at least 1), and residency, memory coverage, operand traffic, and
+/// active MAC·cycles all follow from the effective fan-in — the hardware
+/// analogue of the compiled skip lists, where pruned lanes simply do not
+/// exist in the datapath.
+pub fn schedule_layer_kd(
+    stage: &StageDescriptor,
+    cfg: &ScheduleConfig,
+    batch: usize,
+    k: usize,
+    density: f64,
+) -> Option<LayerSchedule> {
     let batch = batch.max(1);
     let neurons = stage.neurons;
     if neurons == 0 {
         return None; // pooling / residual stages ride on the producing layer
     }
-    let fan_in = stage.fan_in;
+    let density = density.clamp(f64::MIN_POSITIVE, 1.0);
+    let fan_in = (((stage.fan_in as f64) * density).ceil() as usize).max(1);
     let macs_per_neuron = fan_in.div_ceil(MAC_WIDTH);
     let n_onchip = (cfg.total_macs() / macs_per_neuron).max(1).min(neurons);
     // Operand bytes per neuron-image: activations at system precision plus
@@ -179,6 +200,7 @@ pub fn schedule_layer_k(
         label: stage.label(),
         mode,
         k,
+        weight_density: density,
         n_onchip,
         n_memcover,
         incycle_pipe,
@@ -215,7 +237,7 @@ pub fn schedule_stages(
     cfg: &ScheduleConfig,
     batch: usize,
 ) -> NetworkSchedule {
-    schedule_stages_with(stages, cfg, batch, |_| cfg.k)
+    schedule_stages_with(stages, cfg, batch, |_| (cfg.k, 1.0))
 }
 
 /// Schedule a compiled stage list under a per-layer [`PrecisionPlan`]:
@@ -231,23 +253,50 @@ pub fn schedule_stages_precise(
     precision: &PrecisionPlan,
     batch: usize,
 ) -> NetworkSchedule {
+    schedule_stages_sparse(stages, cfg, precision, &[], batch)
+}
+
+/// [`schedule_stages_precise`] under a per-compute-layer surviving
+/// weight-lane density (from [`crate::accel::network::weight_densities`]
+/// or a compiled plan's `stage_densities`): per-layer `k` **and** density
+/// compound, so a layer at half length and half density is costed at a
+/// quarter of its dense-uniform MAC·cycles. An empty (or short) density
+/// slice falls back to 1.0 — dense — per missing layer.
+pub fn schedule_stages_sparse(
+    stages: &[StageDescriptor],
+    cfg: &ScheduleConfig,
+    precision: &PrecisionPlan,
+    densities: &[f64],
+    batch: usize,
+) -> NetworkSchedule {
     schedule_stages_with(stages, cfg, batch, |s| {
-        s.weight_layer
+        let k = s
+            .weight_layer
             .and_then(|wl| precision.ks().get(wl).copied())
-            .unwrap_or(cfg.k)
+            .unwrap_or(cfg.k);
+        let d = s
+            .weight_layer
+            .and_then(|wl| densities.get(wl).copied())
+            .unwrap_or(1.0);
+        (k, d)
     })
 }
 
-/// Shared body of [`schedule_stages`] / [`schedule_stages_precise`]:
-/// schedule every MAC-owning stage at the length `k_of` assigns it.
+/// Shared body of the stage-list schedulers: schedule every MAC-owning
+/// stage at the (bitstream length, weight density) `kd_of` assigns it.
 fn schedule_stages_with(
     stages: &[StageDescriptor],
     cfg: &ScheduleConfig,
     batch: usize,
-    k_of: impl Fn(&StageDescriptor) -> usize,
+    kd_of: impl Fn(&StageDescriptor) -> (usize, f64),
 ) -> NetworkSchedule {
-    let layers: Vec<LayerSchedule> =
-        stages.iter().filter_map(|s| schedule_layer_k(s, cfg, batch, k_of(s))).collect();
+    let layers: Vec<LayerSchedule> = stages
+        .iter()
+        .filter_map(|s| {
+            let (k, d) = kd_of(s);
+            schedule_layer_kd(s, cfg, batch, k, d)
+        })
+        .collect();
     let latency_ns = layers.iter().map(|l| l.delay_ns).sum();
     let dram_bytes = layers.iter().map(|l| l.dram_bytes).sum();
     let active_mac_cycles = layers.iter().map(|l| l.active_mac_cycles).sum();
@@ -434,6 +483,38 @@ mod tests {
         assert_eq!(mixed.dram_bytes, scalar.dram_bytes);
         assert!(mixed.active_mac_cycles < scalar.active_mac_cycles);
         assert!(mixed.latency_ns < scalar.latency_ns);
+    }
+
+    #[test]
+    fn sparse_schedule_scales_with_density_and_is_dense_at_one() {
+        let net = NetworkSpec::lenet5();
+        let stages = net.stages().unwrap();
+        let c = cfg(8);
+        let plan = PrecisionPlan::uniform(32, 5);
+        let dense = schedule_stages_precise(&stages, &c, &plan, 1);
+        // Density 1.0 everywhere (explicit or defaulted) is the dense
+        // schedule exactly.
+        for ds in [vec![], vec![1.0; 5]] {
+            let s = schedule_stages_sparse(&stages, &c, &plan, &ds, 1);
+            assert_eq!(s.total_cycles, dense.total_cycles);
+            assert_eq!(s.active_mac_cycles, dense.active_mac_cycles);
+            assert_eq!(s.dram_bytes, dense.dram_bytes);
+            assert!(s.layers.iter().all(|l| l.weight_density == 1.0));
+        }
+        // Quarter density shrinks compute work and operand traffic.
+        let quarter = schedule_stages_sparse(&stages, &c, &plan, &[0.25; 5], 1);
+        assert!(quarter.active_mac_cycles < dense.active_mac_cycles);
+        assert!(quarter.dram_bytes < dense.dram_bytes);
+        assert!(quarter.latency_ns <= dense.latency_ns * 1.001);
+        assert!(quarter.layers.iter().all(|l| l.weight_density == 0.25));
+        // Monotone: half density sits between quarter and dense.
+        let half = schedule_stages_sparse(&stages, &c, &plan, &[0.5; 5], 1);
+        assert!(half.active_mac_cycles <= dense.active_mac_cycles);
+        assert!(half.active_mac_cycles >= quarter.active_mac_cycles);
+        // Per-layer: only the layer with density < 1 changes its MACs.
+        let one = schedule_stages_sparse(&stages, &c, &plan, &[1.0, 0.5, 1.0, 1.0, 1.0], 1);
+        assert!(one.layers[1].active_mac_cycles < dense.layers[1].active_mac_cycles);
+        assert_eq!(one.layers[0].active_mac_cycles, dense.layers[0].active_mac_cycles);
     }
 
     #[test]

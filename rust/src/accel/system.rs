@@ -7,7 +7,7 @@ use crate::accel::channel::{characterize_channel, ChannelReport};
 use crate::accel::layers::NetworkSpec;
 use crate::accel::memory::MemoryModel;
 use crate::accel::metrics::SystemMetrics;
-use crate::accel::pipeline::{schedule_stages_precise, NetworkSchedule, ScheduleConfig};
+use crate::accel::pipeline::{schedule_stages_sparse, NetworkSchedule, ScheduleConfig};
 use crate::accel::precision::PrecisionPlan;
 use crate::accel::stage;
 use crate::tech::sram::SramMacro;
@@ -98,6 +98,22 @@ pub fn evaluate_with_channel_precise(
     channel: &ChannelReport,
     precision: &PrecisionPlan,
 ) -> SystemEvaluation {
+    evaluate_with_channel_sparse(cfg, net, channel, precision, &[])
+}
+
+/// [`evaluate_with_channel_precise`] under a per-compute-layer surviving
+/// weight-lane density (`accel::network::weight_densities` / a compiled
+/// plan's `stage_densities`): pruned lanes vanish from the modeled
+/// SNG/APC datapath, so per-layer `k` × density compound through the
+/// schedule into delay, switching energy, operand traffic, and the
+/// binary-equivalent op count. An empty slice means dense.
+pub fn evaluate_with_channel_sparse(
+    cfg: &SystemConfig,
+    net: &NetworkSpec,
+    channel: &ChannelReport,
+    precision: &PrecisionPlan,
+    densities: &[f64],
+) -> SystemEvaluation {
     let stages = net
         .stages()
         .unwrap_or_else(|e| panic!("system::evaluate({}): {e:#}", net.name));
@@ -109,7 +125,7 @@ pub fn evaluate_with_channel_precise(
         memory: cfg.memory,
         bytes_per_operand: 1,
     };
-    let schedule = schedule_stages_precise(&stages, &sched_cfg, precision, 1);
+    let schedule = schedule_stages_sparse(&stages, &sched_cfg, precision, densities, 1);
 
     // ---- area ----
     let logic_area = cfg.channels as f64 * channel.area_um2;
@@ -142,8 +158,25 @@ pub fn evaluate_with_channel_precise(
     let latency_us = schedule.latency_ns * 1e-3;
     let power_mw = energy_uj / latency_us * 1000.0;
     let clock_ghz = 1000.0 / clock_ps;
-    // Binary-equivalent ops: 2 per MAC (multiply + accumulate).
-    let ops = 2.0 * stage::total_macs(&stages) as f64;
+    // Binary-equivalent ops: 2 per MAC (multiply + accumulate). Pruned
+    // lanes are not ops — the sparse TOPS figure counts surviving work
+    // only, so sparsity is not allowed to inflate apparent throughput.
+    let ops = if densities.is_empty() {
+        2.0 * stage::total_macs(&stages) as f64
+    } else {
+        2.0 * stages
+            .iter()
+            .filter(|s| s.neurons > 0)
+            .map(|s| {
+                let d = s
+                    .weight_layer
+                    .and_then(|wl| densities.get(wl).copied())
+                    .unwrap_or(1.0)
+                    .clamp(f64::MIN_POSITIVE, 1.0);
+                s.neurons as f64 * (s.fan_in as f64 * d).ceil().max(1.0)
+            })
+            .sum::<f64>()
+    };
     let tops = ops / schedule.latency_ns / 1000.0;
 
     let metrics = SystemMetrics {
@@ -313,6 +346,32 @@ mod tests {
         let scalar = evaluate_with_channel(&cfg, &net, &channel);
         assert_eq!(scalar.metrics.energy_uj, uniform.metrics.energy_uj);
         assert_eq!(scalar.schedule.total_cycles, uniform.schedule.total_cycles);
+    }
+
+    #[test]
+    fn sparsity_lowers_modeled_energy_and_compounds_with_precision() {
+        let net = NetworkSpec::lenet5();
+        let channel = characterize_channel(TechKind::Rfet10);
+        let mut cfg = SystemConfig::paper(TechKind::Rfet10, 8);
+        cfg.k = 1024;
+        let plan = PrecisionPlan::uniform(1024, 5);
+        let dense = evaluate_with_channel_precise(&cfg, &net, &channel, &plan);
+        // Empty densities == dense exactly.
+        let empty = evaluate_with_channel_sparse(&cfg, &net, &channel, &plan, &[]);
+        assert_eq!(empty.metrics.energy_uj, dense.metrics.energy_uj);
+        assert_eq!(empty.metrics.tops, dense.metrics.tops);
+        // Quarter density: less switching work, less traffic, less
+        // energy; area is density-independent; the op count shrinks too
+        // (sparsity must not inflate TOPS with skipped work).
+        let sparse = evaluate_with_channel_sparse(&cfg, &net, &channel, &plan, &[0.25; 5]);
+        assert!(sparse.metrics.energy_uj < dense.metrics.energy_uj);
+        assert!(sparse.metrics.latency_us <= dense.metrics.latency_us * 1.001);
+        assert_eq!(sparse.metrics.area_mm2, dense.metrics.area_mm2);
+        assert!(sparse.schedule.dram_bytes < dense.schedule.dram_bytes);
+        // Sparsity compounds with per-layer precision.
+        let tapered = PrecisionPlan::per_layer(vec![256, 256, 128, 64, 1024]);
+        let both = evaluate_with_channel_sparse(&cfg, &net, &channel, &tapered, &[0.25; 5]);
+        assert!(both.metrics.energy_uj < sparse.metrics.energy_uj);
     }
 
     #[test]

@@ -50,6 +50,12 @@
 //!   beyond the compiled stage/lane bounds, tenant aggregate sustained rps
 //!   against the modeled pool throughput, and a pool admission queue too
 //!   shallow to keep every shard busy.
+//! * **Sparsity lints** (`SC011`/`SC012`) — under an active
+//!   [`crate::accel::network::SparsityPolicy`], a channel pruned to
+//!   fan-in 0 (Error: the plan cannot compile), a surviving fan-in whose
+//!   compiled `k` under-resolves the pruned stage's rescaled output
+//!   (Warning), and the measured per-stage prune ratios (Info). Inert
+//!   when sparsity is off, so the default config stays diagnostic-free.
 //!
 //! Three consumers: `Engine::open` runs [`analyze_engine_config`] as a
 //! pre-flight (errors become [`crate::engine::EngineError::Analysis`],
@@ -117,7 +123,7 @@ impl fmt::Display for Severity {
 /// span; `suggested_fix` says what to change, not just what is wrong.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Diagnostic {
-    /// Stable diagnostic code (`SC001`..`SC010`, `SC000` for an invalid
+    /// Stable diagnostic code (`SC001`..`SC012`, `SC000` for an invalid
     /// network/plan).
     pub code: &'static str,
     /// How bad it is.
@@ -716,7 +722,94 @@ pub fn analyze_engine_config(cfg: &EngineConfig, resolved: &PrecisionPlan) -> Re
     if let Some(policy) = &cfg.degrade {
         lint_degrade_policy(&mut r, policy, resolved, cfg.k_sensitive());
     }
+    lint_sparsity(&mut r, cfg, resolved);
     r
+}
+
+/// `SC011`/`SC012`: sparsity-pruning lints over the resolved weights.
+/// Inert when the policy is off (the default config must stay
+/// diagnostic-free), so these fire only for sessions that opted into
+/// pruning. `SC011` is an Error when a channel loses every lane (the
+/// plan cannot compile), a Warning when a channel's surviving fan-in is
+/// small enough that the compiled `k` under-resolves the pruned stage
+/// relative to the dense resolution floor; `SC012` is an Info line per
+/// pruned stage with the measured prune ratio.
+fn lint_sparsity(r: &mut Report, cfg: &EngineConfig, resolved: &PrecisionPlan) {
+    if cfg.sparsity.is_off() || cfg.sparsity.validate().is_err() {
+        return;
+    }
+    let Ok(weights) = cfg.resolve_weights() else {
+        return; // unresolvable weights are their own open-time error
+    };
+    let threshold = cfg.sparsity.threshold;
+    let stats = crate::accel::network::prune_stats(&weights, cfg.sparsity);
+    for (wl, st) in stats.iter().enumerate() {
+        if st.lanes == 0 {
+            continue;
+        }
+        if st.min_fan_in == 0 {
+            r.push(
+                "SC011",
+                Severity::Error,
+                Some(wl),
+                None,
+                format!(
+                    "sparsity threshold {threshold} prunes a channel of weight layer {wl} to \
+                     fan-in 0 — the channel has no surviving lanes to accumulate"
+                ),
+                Some("lower --sparsity-threshold so every channel keeps at least one lane".into()),
+            );
+            continue;
+        }
+        if st.pruned == 0 {
+            continue;
+        }
+        r.push(
+            "SC012",
+            Severity::Info,
+            Some(wl),
+            None,
+            format!(
+                "sparsity threshold {threshold} prunes {}/{} weight lanes of layer {wl} \
+                 ({:.1}% density, smallest surviving fan-in {})",
+                st.pruned,
+                st.lanes,
+                100.0 * st.density(),
+                st.min_fan_in
+            ),
+            None,
+        );
+        // Resolution floor under pruning: the pruned channel averages over
+        // min_fan_in lanes where the dense stage averaged over fan_in, so
+        // the k-cycle stream must over-resolve by the same ratio to keep
+        // the dense floor (SC004's 2^bits) after rescaling — i.e. warn
+        // when min_fan_in · k < fan_in · 2^bits.
+        if cfg.k_sensitive() {
+            let k = resolved.ks().get(wl).copied().unwrap_or(0);
+            let floor = 1u64 << u64::from(weights.bits.min(31));
+            if (st.min_fan_in as u64) * (k as u64) < (st.fan_in as u64) * floor {
+                r.push(
+                    "SC011",
+                    Severity::Warning,
+                    Some(wl),
+                    None,
+                    format!(
+                        "weight layer {wl}'s smallest surviving fan-in {} runs k={k} cycles \
+                         below its pruned resolution floor ({} dense lanes × 2^{} = {} \
+                         lane-cycles) — the pruned channel under-resolves its rescaled output",
+                        st.min_fan_in,
+                        st.fan_in,
+                        weights.bits,
+                        (st.fan_in as u64) * floor
+                    ),
+                    Some(format!(
+                        "raise the stage's k to at least {}, or lower --sparsity-threshold",
+                        ((st.fan_in as u64) * floor).div_ceil(st.min_fan_in as u64)
+                    )),
+                );
+            }
+        }
+    }
 }
 
 /// `SC005`: degrade-policy `min_k` compatibility with the resolved plan.
@@ -975,6 +1068,82 @@ mod tests {
         let cfg = base.with_degrade(DegradePolicy { min_k: 8, ..DegradePolicy::default() });
         let r = analyze_engine_config(&cfg, &resolved);
         assert!(!r.has_code("SC005"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn sparsity_lints_sc011_sc012() {
+        use crate::accel::network::{LayerWeights, QuantizedWeights, SparsityPolicy};
+        use crate::sc::quantize_bipolar;
+
+        // 3 output channels × 4 lanes: channel `oc` holds the bipolar
+        // values (oc+j)/6 for j in 0..4, so oc 0 carries one exact zero
+        // and every channel keeps its largest lane under mild pruning.
+        let bits = 8;
+        let codes: Vec<Vec<u32>> = (0..3)
+            .map(|oc| (0..4).map(|j| quantize_bipolar((oc + j) as f64 / 6.0, bits)).collect())
+            .collect();
+        let weights = QuantizedWeights {
+            bits,
+            layers: vec![LayerWeights { codes, gamma: 1.0, mu: 0.0 }],
+        };
+        let net = dense_net(4, 3);
+        let base = EngineConfig::new(BackendKind::StochasticFused, net)
+            .with_quantized(weights)
+            .with_k(256);
+
+        // Sparsity off: the sparsity lints are inert (default configs must
+        // stay diagnostic-free for the CI --deny-warnings gate).
+        let resolved = PrecisionPlan::uniform(256, 1);
+        let r = analyze_engine_config(&base, &resolved);
+        assert!(!r.has_code("SC011"), "{}", r.render_text());
+        assert!(!r.has_code("SC012"), "{}", r.render_text());
+
+        // Threshold 0.1 prunes exactly the zero lane of channel 0, so the
+        // smallest surviving fan-in is 3 of 4 dense lanes. At k=256 the
+        // pruned floor 4·2^8 = 1024 lane-cycles exceeds 3·256 = 768:
+        // SC012 reports the ratio and SC011 warns about under-resolution.
+        let cfg = base.clone().with_sparsity(SparsityPolicy::threshold(0.1));
+        let r = analyze_engine_config(&cfg, &resolved);
+        assert!(
+            r.at(Severity::Info).any(|d| d.code == "SC012"),
+            "{}",
+            r.render_text()
+        );
+        assert!(
+            r.at(Severity::Warning).any(|d| d.code == "SC011"),
+            "{}",
+            r.render_text()
+        );
+        assert_eq!(r.error_count(), 0, "{}", r.render_text());
+
+        // Raising k past the pruned floor (3·384 = 1152 ≥ 1024) clears the
+        // warning while the Info ratio line stays.
+        let resolved_384 = PrecisionPlan::uniform(384, 1);
+        let cfg = base
+            .clone()
+            .with_k(384)
+            .with_sparsity(SparsityPolicy::threshold(0.1));
+        let r = analyze_engine_config(&cfg, &resolved_384);
+        assert!(!r.at(Severity::Warning).any(|d| d.code == "SC011"), "{}", r.render_text());
+        assert!(r.has_code("SC012"), "{}", r.render_text());
+
+        // An analytic backend owns no k, so the under-resolution warning
+        // never applies — only the Info ratio line fires.
+        let mut cfg = base.clone().with_sparsity(SparsityPolicy::threshold(0.1));
+        cfg.backend = BackendKind::Expectation;
+        let r = analyze_engine_config(&cfg, &resolved);
+        assert!(!r.has_code("SC011"), "{}", r.render_text());
+        assert!(r.has_code("SC012"), "{}", r.render_text());
+
+        // Threshold 0.6 prunes all four lanes of channel 0 (|v| ≤ 0.5):
+        // fan-in 0 is an Error — the plan cannot compile.
+        let cfg = base.with_sparsity(SparsityPolicy::threshold(0.6));
+        let r = analyze_engine_config(&cfg, &resolved);
+        assert!(
+            r.at(Severity::Error).any(|d| d.code == "SC011"),
+            "{}",
+            r.render_text()
+        );
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! `Send` bound on the trait object.
 
 use crate::accel::layers::NetworkSpec;
-use crate::accel::network::{reference, ForwardPlan, QuantizedWeights, Scratch};
+use crate::accel::network::{reference, ForwardPlan, QuantizedWeights, Scratch, SparsityPolicy};
 use crate::accel::precision::PrecisionPlan;
 use crate::engine::config::{BackendKind, EngineConfig};
 use crate::runtime;
@@ -35,6 +35,23 @@ pub trait Backend {
     /// Execute one batch; `inputs` is non-empty and every image has
     /// `in_len()` elements. Returns one output per input, in order.
     fn infer_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+
+    /// Static per-image `(executed, skipped)` lane-cycle op accounting of
+    /// the compiled plan (see `ForwardPlan::ops_per_image`) — the session
+    /// worker multiplies by served images to feed
+    /// `SessionMetrics::{ops_executed, ops_skipped}`. Backends without a
+    /// compiled plan (XLA, the per-bit reference) report `(0, 0)`.
+    fn ops_per_image(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
+    /// Per-compute-layer surviving weight-lane density of the compiled
+    /// plan (see `ForwardPlan::stage_densities`), feeding the session's
+    /// density-aware hardware estimate. Empty (= model dense) for
+    /// backends without a compiled plan.
+    fn stage_densities(&self) -> Vec<f64> {
+        Vec::new()
+    }
 }
 
 /// Build the configured backend, resolving the precision policy exactly
@@ -59,7 +76,7 @@ pub(crate) fn build(
             Box::new(Expectation::from_resolved(cfg, &weights, &precision)?)
         }
         BackendKind::ReferencePerBit => {
-            Box::new(ReferencePerBit::from_resolved(cfg, weights, precision.clone()))
+            Box::new(ReferencePerBit::from_resolved(cfg, weights, precision.clone())?)
         }
         BackendKind::Xla => unreachable!("handled above"),
     };
@@ -118,13 +135,14 @@ pub(crate) fn shared_plan_with(
     // homogeneous case still compiles once). compile (not new):
     // weight/shape mismatches surface as session open errors, never as
     // panics on the worker thread.
-    let plan = Arc::new(ForwardPlan::compile_with_opts(
+    let plan = Arc::new(ForwardPlan::compile_with_sparsity(
         &cfg.net,
         weights,
         mode,
         precision,
         cfg.faults.as_ref(),
         cfg.kernel,
+        cfg.sparsity,
     )?);
     PLAN_COMPILES.fetch_add(1, Ordering::Relaxed);
     let mut g = crate::engine::lock_recover(cache);
@@ -225,6 +243,14 @@ impl Backend for StochasticFused {
     fn infer_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         Ok(self.exec.run(inputs))
     }
+
+    fn ops_per_image(&self) -> (u64, u64) {
+        self.exec.plan.ops_per_image()
+    }
+
+    fn stage_densities(&self) -> Vec<f64> {
+        self.exec.plan.stage_densities()
+    }
 }
 
 /// The analytic models over the same quantized codes: expectation (no
@@ -277,6 +303,14 @@ impl Backend for Expectation {
     fn infer_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         Ok(self.exec.run(inputs))
     }
+
+    fn ops_per_image(&self) -> (u64, u64) {
+        self.exec.plan.ops_per_image()
+    }
+
+    fn stage_densities(&self) -> Vec<f64> {
+        self.exec.plan.stage_densities()
+    }
 }
 
 /// The pre-fusion per-bit stochastic datapath, kept as the golden model:
@@ -292,6 +326,9 @@ pub struct ReferencePerBit {
     /// Compiled-in fault plan (the reference injects the same faults as
     /// the fused engine — parity under faults by construction).
     faults: Option<crate::faults::FaultPlan>,
+    /// Compiled-in sparsity policy (the reference prunes the same lanes
+    /// as the fused engine — parity under pruning by construction).
+    sparsity: SparsityPolicy,
     seed: u32,
     in_len: usize,
     out_len: usize,
@@ -303,25 +340,40 @@ impl ReferencePerBit {
     pub fn from_config(cfg: &EngineConfig) -> Result<Self> {
         let weights = cfg.resolve_weights()?;
         let precision = cfg.resolved_precision(&weights)?;
-        Ok(Self::from_resolved(cfg, weights, precision))
+        Self::from_resolved(cfg, weights, precision)
     }
 
-    /// The shared constructor body (see [`StochasticFused::from_resolved`]);
-    /// infallible once the inputs are resolved.
+    /// The shared constructor body (see [`StochasticFused::from_resolved`]).
+    /// The reference has no compile step, so the one compile-time sparsity
+    /// failure — a threshold pruning some channel to fan-in 0 — is checked
+    /// here, with the same typed refusal the fused engine raises.
     fn from_resolved(
         cfg: &EngineConfig,
         weights: QuantizedWeights,
         precision: PrecisionPlan,
-    ) -> Self {
-        ReferencePerBit {
+    ) -> Result<Self> {
+        if !cfg.sparsity.is_off() {
+            let stats = crate::accel::network::prune_stats(&weights, cfg.sparsity);
+            for (wl, st) in stats.iter().enumerate() {
+                if st.lanes > 0 && st.min_fan_in == 0 {
+                    return Err(crate::engine::EngineError::InvalidSparsity(format!(
+                        "threshold {} prunes a channel of weight layer {wl} to fan-in 0",
+                        cfg.sparsity.threshold
+                    ))
+                    .into());
+                }
+            }
+        }
+        Ok(ReferencePerBit {
             net: cfg.net.clone(),
             weights,
             precision,
             faults: cfg.faults.clone(),
+            sparsity: cfg.sparsity,
             seed: cfg.seed,
             in_len: cfg.input_len(),
             out_len: cfg.output_len(),
-        }
+        })
     }
 }
 
@@ -343,19 +395,28 @@ impl Backend for ReferencePerBit {
             .iter()
             .map(|img| {
                 let wide: Vec<f64> = img.iter().map(|&v| v as f64).collect();
-                reference::forward_stochastic_plan_faulted(
+                reference::forward_stochastic_plan_sparse(
                     &self.net,
                     &self.weights,
                     &wide,
                     &self.precision,
                     self.seed,
                     self.faults.as_ref(),
+                    self.sparsity,
                 )
                 .iter()
                 .map(|&v| v as f32)
                 .collect()
             })
             .collect())
+    }
+
+    fn stage_densities(&self) -> Vec<f64> {
+        if self.sparsity.is_off() {
+            Vec::new()
+        } else {
+            crate::accel::network::weight_densities(&self.weights, self.sparsity)
+        }
     }
 }
 
@@ -508,6 +569,27 @@ mod tests {
         assert!(Arc::ptr_eq(&p_uni, &p_same), "equal plans share one artifact");
         assert!(!Arc::ptr_eq(&p_uni, &p_diff));
         assert_eq!(p_diff.precision().ks(), &[96]);
+    }
+
+    #[test]
+    fn shared_plan_keys_on_the_sparsity_policy() {
+        let dense = tiny_cfg(48);
+        let off = tiny_cfg(48).with_sparsity(SparsityPolicy::OFF);
+        let sparse = tiny_cfg(48).with_sparsity(SparsityPolicy::threshold(0.25));
+        let p_dense = shared_plan(&dense).unwrap();
+        let p_off = shared_plan(&off).unwrap();
+        let p_sparse = shared_plan(&sparse).unwrap();
+        assert!(Arc::ptr_eq(&p_dense, &p_off), "an explicit OFF shares the dense artifact");
+        assert!(!Arc::ptr_eq(&p_dense, &p_sparse), "an active policy is a new artifact");
+        // tiny_cfg's first channel holds a true-zero weight, so the sparse
+        // plan skips real work — and the split conserves the dense count.
+        let (exec, skip) = p_sparse.ops_per_image();
+        let (dense_exec, dense_skip) = p_dense.ops_per_image();
+        assert_eq!(dense_skip, 0);
+        assert!(skip > 0);
+        assert_eq!(exec + skip, dense_exec);
+        assert!(p_sparse.stage_densities().iter().any(|&d| d < 1.0));
+        assert!(p_dense.stage_densities().iter().all(|&d| d == 1.0));
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! to be hand-wired separately in `main.rs`, the examples, and the benches.
 
 use crate::accel::layers::NetworkSpec;
-use crate::accel::network::{ForwardMode, KernelPath, QuantizedWeights};
+use crate::accel::network::{ForwardMode, KernelPath, QuantizedWeights, SparsityPolicy};
 use crate::faults::FaultPlan;
 use crate::accel::precision::{
     self, AutoTuneConfig, Precision, PrecisionError, PrecisionPlan,
@@ -217,6 +217,13 @@ pub struct EngineConfig {
     /// `Fused` pins the lane-at-a-time baseline. Bit-exact either way —
     /// only [`BackendKind::StochasticFused`] plans are affected.
     pub kernel: KernelPath,
+    /// Compile-time weight-sparsity policy (see [`SparsityPolicy`]):
+    /// [`SparsityPolicy::OFF`] (the default) compiles dense plans
+    /// bit-for-bit; an active threshold prunes near-zero weight lanes into
+    /// per-channel skip lists at plan compile, on every plan backend. A
+    /// compiled-artifact input: plans differing only in sparsity are
+    /// distinct cache entries.
+    pub sparsity: SparsityPolicy,
     /// Optional client-side deadline: `infer` / `drain` calls stop waiting
     /// after this long and return [`EngineError::Timeout`] instead of
     /// blocking forever on a stuck worker.
@@ -251,6 +258,7 @@ impl EngineConfig {
             hlo_ladder: Vec::new(),
             faults: None,
             kernel: KernelPath::Auto,
+            sparsity: SparsityPolicy::OFF,
             deadline: None,
             degrade: None,
             chaos_panic_after: None,
@@ -357,6 +365,17 @@ impl EngineConfig {
         self
     }
 
+    /// Set the compile-time weight-sparsity policy. Like
+    /// [`EngineConfig::with_kernel`] this is a compiled-artifact input:
+    /// sessions differing only in their sparsity policy compile distinct
+    /// plans. Degenerate thresholds (negative, non-finite, ≥ 1.0) are
+    /// refused at [`EngineConfig::validate`] with
+    /// [`EngineError::InvalidSparsity`].
+    pub fn with_sparsity(mut self, sparsity: SparsityPolicy) -> Self {
+        self.sparsity = sparsity;
+        self
+    }
+
     /// Set a client-side deadline for `infer` / `drain` waits.
     pub fn with_deadline(mut self, deadline: Duration) -> Self {
         self.deadline = Some(deadline);
@@ -424,6 +443,10 @@ impl EngineConfig {
                 }
                 self.validate_precision().map_err(|e| {
                     anyhow::Error::from(EngineError::InvalidPrecision(e.to_string()))
+                        .context(format!("engine config: backend {kind}"))
+                })?;
+                self.sparsity.validate().map_err(|e| {
+                    anyhow::Error::from(EngineError::InvalidSparsity(e))
                         .context(format!("engine config: backend {kind}"))
                 })?;
             }
@@ -562,7 +585,10 @@ impl EngineConfig {
     /// because the weights are unavailable. Per-layer policies produce a
     /// per-layer-k-exact schedule.
     pub fn estimate(&self) -> Option<HardwareEstimate> {
-        if self.backend == BackendKind::Xla || self.validate_precision().is_err() {
+        if self.backend == BackendKind::Xla
+            || self.validate_precision().is_err()
+            || self.sparsity.validate().is_err()
+        {
             return None;
         }
         // Zero-k analytic configs are legal and clamped inside for_plan,
@@ -574,7 +600,23 @@ impl EngineConfig {
                 self.resolved_precision(&w).ok()?
             }
         };
-        Some(HardwareEstimate::for_plan(self.tech, self.channels, &plan, &self.net))
+        // An active sparsity policy drops pruned lanes from the modeled
+        // schedule; densities need the resolved weights, so a config whose
+        // weights cannot resolve models the dense plan instead of failing.
+        let densities = if self.sparsity.is_off() {
+            Vec::new()
+        } else {
+            self.resolve_weights()
+                .map(|w| crate::accel::network::weight_densities(&w, self.sparsity))
+                .unwrap_or_default()
+        };
+        Some(HardwareEstimate::for_plan_density(
+            self.tech,
+            self.channels,
+            &plan,
+            &self.net,
+            &densities,
+        ))
     }
 
     /// Fingerprint of everything that determines the **compiled artifact**
@@ -605,9 +647,26 @@ impl EngineConfig {
         // The kernel path changes the compiled layout (lane-major vs
         // transposed weight planes), so it is part of the artifact for the
         // one backend that lowers stochastic kernels. Hashing the
-        // *resolved* path keeps `Auto` sharing the transposed artifact.
+        // *resolved* path keeps `Auto` sharing the transposed artifact —
+        // except under an active sparsity policy, where `Auto` additionally
+        // resolves per stage from pruning structure (unstructured-pruned
+        // shared-window stages lower to the fused kernel), so sparse
+        // artifacts key on the *unresolved* selection instead.
         if self.backend == BackendKind::StochasticFused {
-            fp.write(self.kernel.resolved().label().as_bytes());
+            let kernel = if self.sparsity.is_off() {
+                self.kernel.resolved().label()
+            } else {
+                self.kernel.label()
+            };
+            fp.write(kernel.as_bytes());
+        }
+        // An active sparsity policy reshapes the compiled plan on every
+        // plan backend (skip lists, rescaled APC floors, analytic lane
+        // drops); OFF hashes like the legacy fingerprint so dense plans
+        // keep their cache entries across upgrades.
+        if !self.sparsity.is_off() {
+            fp.write(b"sparsity");
+            fp.write(&self.sparsity.threshold.to_bits().to_le_bytes());
         }
         fp.write(&self.bits.to_le_bytes());
         // NetworkSpec's Debug form covers the name, input shape, and every
@@ -858,6 +917,68 @@ mod tests {
             exp.artifact_fingerprint(&w, &plan(&exp)),
             exp_fused.artifact_fingerprint(&w, &plan(&exp_fused))
         );
+    }
+
+    #[test]
+    fn sparsity_is_a_compiled_artifact_input() {
+        let base = EngineConfig::new(BackendKind::StochasticFused, tiny_net())
+            .with_quantized(tiny_quantized(8))
+            .with_k(64);
+        let w = base.resolve_weights().unwrap();
+        let plan = base.resolved_precision(&w).unwrap();
+        let fp = base.artifact_fingerprint(&w, &plan);
+        // An explicit OFF policy hashes exactly like the legacy default,
+        // so dense plans keep their cache entries.
+        let off = base.clone().with_sparsity(SparsityPolicy::OFF);
+        assert_eq!(fp, off.artifact_fingerprint(&w, &plan));
+        // An active policy is a new artifact, and the threshold value
+        // itself keys the entry.
+        let sparse = base.clone().with_sparsity(SparsityPolicy::threshold(0.05));
+        let sparse_fp = sparse.artifact_fingerprint(&w, &plan);
+        assert_ne!(fp, sparse_fp);
+        let sparser = base.clone().with_sparsity(SparsityPolicy::threshold(0.10));
+        assert_ne!(sparse_fp, sparser.artifact_fingerprint(&w, &plan));
+        // Under an active policy Auto resolves per stage from pruning
+        // structure, so it no longer shares the pinned-transposed artifact.
+        let pinned = sparse.clone().with_kernel(KernelPath::Transposed);
+        assert_ne!(sparse_fp, pinned.artifact_fingerprint(&w, &plan));
+        // Analytic backends prune too: sparsity splits their artifacts
+        // even though the kernel knob does not.
+        let exp = EngineConfig::new(BackendKind::Expectation, tiny_net())
+            .with_quantized(tiny_quantized(8));
+        let exp_plan = exp.resolved_precision(&w).unwrap();
+        let exp_sparse = exp.clone().with_sparsity(SparsityPolicy::threshold(0.05));
+        assert_ne!(
+            exp.artifact_fingerprint(&w, &exp_plan),
+            exp_sparse.artifact_fingerprint(&w, &exp_plan)
+        );
+    }
+
+    #[test]
+    fn sparsity_thresholds_validate_typed_and_shape_the_estimate() {
+        let with = |t: f64| {
+            EngineConfig::new(BackendKind::StochasticFused, tiny_net())
+                .with_quantized(tiny_quantized(8))
+                .with_k(64)
+                .with_sparsity(SparsityPolicy::threshold(t))
+        };
+        with(0.0).validate().unwrap();
+        with(0.3).validate().unwrap();
+        for (t, needle) in
+            [(-0.1, ">= 0.0"), (1.0, "< 1.0"), (1.5, "< 1.0"), (f64::NAN, "finite")]
+        {
+            let err = format!("{:?}", with(t).validate().unwrap_err());
+            assert!(err.contains("sparsity threshold"), "{err}");
+            assert!(err.contains(needle), "{err}");
+            assert!(with(t).estimate().is_none(), "degenerate thresholds model nothing");
+        }
+        // tiny_quantized holds a true-zero weight (oc 0, j 0), so any
+        // active threshold prunes at least one lane and the modeled energy
+        // drops below the dense figure.
+        let dense = with(0.0).estimate().unwrap();
+        let sparse = with(0.3).estimate().unwrap();
+        assert!(sparse.metrics.energy_uj < dense.metrics.energy_uj);
+        assert!((sparse.metrics.area_mm2 - dense.metrics.area_mm2).abs() < 1e-12);
     }
 
     #[test]

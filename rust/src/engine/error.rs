@@ -44,6 +44,12 @@ pub enum EngineError {
     /// the wrong length, or an out-of-range autotune budget. The payload
     /// is the rendered [`crate::accel::precision::PrecisionError`].
     InvalidPrecision(String),
+    /// A sparsity policy failed validation at the config boundary: a
+    /// negative, non-finite, or ≥ 1.0 threshold (see
+    /// [`crate::accel::network::SparsityPolicy::validate`]), or a
+    /// threshold that prunes some channel's fan-in to zero at plan
+    /// compile. The payload is the rendered reason.
+    InvalidSparsity(String),
     /// A client-side lock was poisoned by a panicking sibling thread. The
     /// payload names the lock.
     LockPoisoned(&'static str),
@@ -87,6 +93,9 @@ impl fmt::Display for EngineError {
             }
             EngineError::InvalidPrecision(what) => {
                 write!(f, "invalid precision policy: {what}")
+            }
+            EngineError::InvalidSparsity(what) => {
+                write!(f, "invalid sparsity policy: {what}")
             }
             EngineError::LockPoisoned(what) => {
                 write!(f, "lock poisoned by a panicked client thread: {what}")
@@ -163,6 +172,7 @@ mod tests {
             EngineError::Rejected { retry_after_hint: Duration::from_micros(250) },
             EngineError::NoHealthyShards,
             EngineError::InvalidPrecision("k = 100 is not a multiple of 8".into()),
+            EngineError::InvalidSparsity("sparsity threshold must be < 1.0, got 1.5".into()),
             EngineError::LockPoisoned("results"),
             EngineError::Timeout { elapsed: Duration::from_micros(5000) },
             EngineError::Analysis("error[SC001] stage 0: aliased weight-lane keys".into()),

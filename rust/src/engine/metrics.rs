@@ -12,7 +12,7 @@ use crate::accel::layers::NetworkSpec;
 use crate::accel::memory::MemoryModel;
 use crate::accel::metrics::SystemMetrics;
 use crate::accel::precision::PrecisionPlan;
-use crate::accel::system::{evaluate_with_channel_precise, SystemConfig};
+use crate::accel::system::{evaluate_with_channel_sparse, SystemConfig};
 use crate::tech::sram::SramMacro;
 use crate::tech::TechKind;
 use std::sync::OnceLock;
@@ -216,6 +216,22 @@ impl HardwareEstimate {
         precision: &PrecisionPlan,
         net: &NetworkSpec,
     ) -> Self {
+        Self::for_plan_density(tech, channels, precision, net, &[])
+    }
+
+    /// [`HardwareEstimate::for_plan`] under a per-compute-layer surviving
+    /// weight-lane density (see
+    /// [`crate::accel::network::weight_densities`]): the modeled schedule
+    /// drops pruned lanes from the SNG/APC datapath, so per-layer `k` and
+    /// density compound through delay, energy, and TOPS. An empty slice
+    /// models the dense plan.
+    pub fn for_plan_density(
+        tech: TechKind,
+        channels: usize,
+        precision: &PrecisionPlan,
+        net: &NetworkSpec,
+        densities: &[f64],
+    ) -> Self {
         // Same robustness contract as for_config's k.max(1): a zero-cycle
         // stage would evaluate to a zero-latency layer and poison the
         // power quotient. (Engine paths validate plans before this.)
@@ -235,7 +251,7 @@ impl HardwareEstimate {
             sram: SramMacro::paper_10kb(),
             memory: MemoryModel::gddr5_paper(),
         };
-        let eval = evaluate_with_channel_precise(&cfg, net, channel, precision);
+        let eval = evaluate_with_channel_sparse(&cfg, net, channel, precision, densities);
         HardwareEstimate { tech, channels: cfg.channels, k: cfg.k, metrics: eval.metrics }
     }
 }
@@ -278,6 +294,16 @@ pub struct SessionMetrics {
     /// the open with `EngineError::Analysis` instead, so a live session
     /// never carries errors here).
     pub analysis_warnings: usize,
+    /// Lane-cycle products the compiled plan actually executed for the
+    /// session's completed inferences (see
+    /// [`crate::accel::network::ForwardPlan::ops_per_image`]). Zero for
+    /// backends without a compiled SC plan (XLA).
+    pub ops_executed: u64,
+    /// Lane-cycle products skipped by sparsity — pruned weight lanes plus
+    /// runtime zero-activation tiles. `ops_executed + ops_skipped` is
+    /// invariant for a given net/precision, so the skip ratio is the
+    /// fraction of dense work the plan avoided.
+    pub ops_skipped: u64,
     /// Wall time since the session was opened.
     pub wall: Duration,
     /// Exact per-request records (percentiles, mean batch).
@@ -343,6 +369,15 @@ impl SessionMetrics {
             s.push_str(&format!(
                 "static analysis: {} warning(s) at open (run `scnn analyze` for details)\n",
                 self.analysis_warnings
+            ));
+        }
+        if self.ops_skipped > 0 {
+            let total = self.ops_executed + self.ops_skipped;
+            s.push_str(&format!(
+                "sparsity: {} lane-cycle ops executed, {} skipped ({:.1}% of dense)\n",
+                self.ops_executed,
+                self.ops_skipped,
+                100.0 * self.ops_skipped as f64 / total as f64
             ));
         }
         if let Some(e) = self.estimate {
@@ -418,6 +453,12 @@ pub struct PoolMetrics {
     pub degrade_events: usize,
     /// Static-analysis warnings raised at shard open, summed over shards.
     pub analysis_warnings: usize,
+    /// Lane-cycle products executed by compiled plans, summed over shards
+    /// (see [`SessionMetrics::ops_executed`]).
+    pub ops_executed: u64,
+    /// Lane-cycle products skipped by sparsity, summed over shards (see
+    /// [`SessionMetrics::ops_skipped`]).
+    pub ops_skipped: u64,
     /// Wall time since the pool was opened.
     pub wall: Duration,
     /// Merged per-request latency record (percentiles, mean batch).
@@ -455,6 +496,7 @@ impl PoolMetrics {
         let mut histogram = LatencyHistogram::new();
         let (mut requests, mut rejected, mut failed, mut batches) = (0, 0, 0, 0);
         let (mut timeouts, mut degrade_events, mut analysis_warnings) = (0, 0, 0);
+        let (mut ops_executed, mut ops_skipped) = (0u64, 0u64);
         let mut labels: Vec<&str> = Vec::new();
         for m in &per_shard {
             serve.merge(&m.serve);
@@ -466,6 +508,8 @@ impl PoolMetrics {
             timeouts += m.timeouts;
             degrade_events += m.degrade_events;
             analysis_warnings += m.analysis_warnings;
+            ops_executed += m.ops_executed;
+            ops_skipped += m.ops_skipped;
             if !labels.contains(&m.backend.as_str()) {
                 labels.push(&m.backend);
             }
@@ -483,6 +527,8 @@ impl PoolMetrics {
             timeouts,
             degrade_events,
             analysis_warnings,
+            ops_executed,
+            ops_skipped,
             wall,
             serve,
             histogram,
@@ -734,6 +780,28 @@ mod tests {
         assert!(tapered.metrics.energy_uj < uniform.metrics.energy_uj);
     }
 
+    #[test]
+    fn for_plan_density_lowers_energy_and_is_dense_on_empty() {
+        let net = NetworkSpec::lenet5();
+        let plan = PrecisionPlan::uniform(64, 5);
+        let dense = HardwareEstimate::for_plan(TechKind::Rfet10, 8, &plan, &net);
+        let empty = HardwareEstimate::for_plan_density(TechKind::Rfet10, 8, &plan, &net, &[]);
+        assert!((empty.metrics.energy_uj - dense.metrics.energy_uj).abs() < 1e-12);
+        assert!((empty.metrics.latency_us - dense.metrics.latency_us).abs() < 1e-12);
+        let sparse = HardwareEstimate::for_plan_density(
+            TechKind::Rfet10,
+            8,
+            &plan,
+            &net,
+            &[0.25; 5],
+        );
+        assert!(sparse.metrics.energy_uj < dense.metrics.energy_uj);
+        assert!(
+            (sparse.metrics.area_mm2 - dense.metrics.area_mm2).abs() < 1e-12,
+            "pruning is a schedule effect, not a silicon change"
+        );
+    }
+
     fn fake_session_metrics(backend: &str, lat_us: u64, with_estimate: bool) -> SessionMetrics {
         let net = NetworkSpec::lenet5();
         let mut serve = ServeStats::new();
@@ -751,6 +819,8 @@ mod tests {
             timeouts: 1,
             degrade_events: 2,
             analysis_warnings: 0,
+            ops_executed: 1000,
+            ops_skipped: 0,
             wall: Duration::from_millis(10),
             serve,
             histogram,
@@ -776,6 +846,8 @@ mod tests {
         assert_eq!(m.batches, 2);
         assert_eq!(m.timeouts, 2, "deadline misses sum over shards");
         assert_eq!(m.degrade_events, 4, "degrade events sum over shards");
+        assert_eq!(m.ops_executed, 2000, "executed lane-cycle ops sum over shards");
+        assert_eq!(m.ops_skipped, 0);
         assert!(m.summary().contains("2 deadline timeouts, 4 precision degrade events"));
         assert_eq!(m.serve.count(), 4);
         assert_eq!(m.histogram.count(), 4);
@@ -844,6 +916,8 @@ mod tests {
             timeouts: 0,
             degrade_events: 0,
             analysis_warnings: 0,
+            ops_executed: 0,
+            ops_skipped: 0,
             wall: Duration::from_millis(10),
             serve,
             histogram,
@@ -864,6 +938,17 @@ mod tests {
         );
         let warned = SessionMetrics { analysis_warnings: 2, ..m.clone() };
         assert!(warned.summary().contains("static analysis: 2 warning"));
+        assert!(
+            !m.summary().contains("sparsity:"),
+            "a dense run's summary carries no sparsity line"
+        );
+        let sparse = SessionMetrics { ops_executed: 750, ops_skipped: 250, ..m.clone() };
+        assert!(
+            sparse.summary().contains("sparsity: 750 lane-cycle ops executed, 250 skipped"),
+            "{}",
+            sparse.summary()
+        );
+        assert!(sparse.summary().contains("25.0% of dense"), "{}", sparse.summary());
         assert!(m.throughput_rps() > 0.0);
         assert!(m.estimated_total_energy_uj().unwrap() > 0.0);
     }

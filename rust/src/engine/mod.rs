@@ -207,6 +207,12 @@ struct Recorder {
     /// Times the worker swapped in a degraded precision plan after
     /// sustained SLO breaches (see `EngineConfig::with_degrade`).
     degrade_events: usize,
+    /// Lane-cycle ops executed by the compiled plan over every served
+    /// image (static per-image accounting × images; see
+    /// [`crate::engine::backend::Backend::ops_per_image`]).
+    ops_executed: u64,
+    /// Lane-cycle ops skipped by sparsity over every served image.
+    ops_skipped: u64,
 }
 
 /// What the worker reports back once its backend is built.
@@ -219,6 +225,10 @@ struct BackendInfo {
     /// back so the session's hardware estimate and introspection see the
     /// same plan the datapath executes.
     precision: Option<PrecisionPlan>,
+    /// Per-compute-layer surviving weight-lane density of the compiled
+    /// plan (empty = dense), feeding the session's density-aware hardware
+    /// estimate.
+    densities: Vec<f64>,
 }
 
 /// An open inference session: one backend, one dynamic batcher, one
@@ -603,7 +613,13 @@ impl Session {
         let estimate = *self.estimate.get_or_init(|| {
             match (&self.estimate_inputs, &self.info.precision) {
                 (Some((tech, channels, net)), Some(plan)) => {
-                    Some(HardwareEstimate::for_plan(*tech, *channels, plan, net))
+                    Some(HardwareEstimate::for_plan_density(
+                        *tech,
+                        *channels,
+                        plan,
+                        net,
+                        &self.info.densities,
+                    ))
                 }
                 _ => None,
             }
@@ -618,6 +634,8 @@ impl Session {
             timeouts: self.shared.timeouts.load(Ordering::Relaxed) as usize,
             degrade_events: rec.degrade_events,
             analysis_warnings: self.analysis_warnings,
+            ops_executed: rec.ops_executed,
+            ops_skipped: rec.ops_skipped,
             wall: self.opened.elapsed(),
             serve: rec.serve.clone(),
             histogram: rec.hist.clone(),
@@ -691,6 +709,7 @@ fn worker_loop(
                 in_len: b.in_len(),
                 out_len: b.out_len(),
                 precision: precision.clone(),
+                densities: b.stage_densities(),
             };
             let _ = ready.send(Ok(info));
             (b, precision)
@@ -768,8 +787,11 @@ fn worker_loop(
         }
         let breached = match backend.infer_batch(&inputs) {
             Ok(outs) if outs.len() == bsz => {
+                let ops = backend.ops_per_image();
                 let mut rec = lock_recover(&shared.recorder);
                 rec.batches += 1;
+                rec.ops_executed += ops.0 * bsz as u64;
+                rec.ops_skipped += ops.1 * bsz as u64;
                 let mut slowest = Duration::ZERO;
                 for (r, out) in valid.iter().zip(outs) {
                     // Record before responding: clients may read metrics
@@ -860,7 +882,9 @@ fn worker_loop(
 mod tests {
     use super::*;
     use crate::accel::layers::{LayerKind, LayerSpec, NetworkSpec};
-    use crate::accel::network::{ForwardMode, ForwardPlan, LayerWeights, QuantizedWeights};
+    use crate::accel::network::{
+        ForwardMode, ForwardPlan, LayerWeights, QuantizedWeights, SparsityPolicy,
+    };
     use crate::sc::quantize_bipolar;
     use std::time::Duration;
 
@@ -1125,6 +1149,34 @@ mod tests {
         assert!(est.metrics.energy_uj > 0.0);
         assert!(m.estimated_total_energy_uj().unwrap() > 0.0);
         assert!(m.summary().contains("stochastic-fused"));
+        assert!(m.ops_executed > 0, "served images accumulate executed ops");
+        assert_eq!(m.ops_skipped, 0, "a dense plan skips nothing");
+    }
+
+    #[test]
+    fn sparse_session_counts_skipped_ops_and_matches_reference() {
+        let sparse = |kind| cfg(kind).with_sparsity(SparsityPolicy::threshold(0.1));
+        let fused = Engine::open(sparse(BackendKind::StochasticFused)).unwrap();
+        let golden = Engine::open(sparse(BackendKind::ReferencePerBit)).unwrap();
+        for phase in 0..3 {
+            let a = fused.infer(image(phase)).unwrap();
+            let b = golden.infer(image(phase)).unwrap();
+            assert_eq!(a, b, "sparse sessions stay bit-exact, phase {phase}");
+        }
+        let m = fused.metrics();
+        assert!(m.ops_skipped > 0, "tiny_weights holds near-zero lanes at threshold 0.1");
+        assert!(m.ops_executed > 0);
+        assert!(m.summary().contains("sparsity:"), "{}", m.summary());
+        // The session's modeled energy reflects the pruned schedule.
+        let dense = Engine::open(cfg(BackendKind::StochasticFused)).unwrap();
+        dense.infer(image(0)).unwrap();
+        let de = dense.metrics().estimate.unwrap();
+        let se = m.estimate.unwrap();
+        assert!(se.metrics.energy_uj < de.metrics.energy_uj);
+        // Degenerate thresholds are refused at open with the typed error.
+        let bad = cfg(BackendKind::StochasticFused).with_sparsity(SparsityPolicy::threshold(1.5));
+        let err = Engine::open(bad).unwrap_err().to_string();
+        assert!(err.contains("sparsity"), "{err}");
     }
 
     #[test]

@@ -26,7 +26,7 @@
 //! Cargo.toml note.)
 
 use anyhow::{anyhow, bail, Context, Result};
-use scnn::accel::network::QuantizedWeights;
+use scnn::accel::network::{QuantizedWeights, SparsityPolicy};
 use scnn::accel::{channel, layers::NetworkSpec, metrics::argmin_by};
 use scnn::data::{Artifacts, Dataset};
 use scnn::engine::{
@@ -180,6 +180,34 @@ fn apply_fault_flags(
     Ok(cfg)
 }
 
+/// Lower the sparsity flags onto a config: `--sparsity-threshold T`
+/// compiles magnitude pruning (prune every weight lane whose quantized
+/// bipolar value has |v| < T) into the forward plan; `--sparsity off`
+/// forces the dense datapath even when a threshold flag is present — the
+/// explicit A/B escape hatch. Degenerate thresholds (negative, ≥ 1,
+/// non-finite) are NOT validated here: they pass through so
+/// `EngineConfig::validate` can raise the typed
+/// [`EngineError::InvalidSparsity`] at open, matching how malformed
+/// precision policies surface.
+fn apply_sparsity_flags(
+    mut cfg: EngineConfig,
+    flags: &HashMap<String, String>,
+) -> Result<EngineConfig> {
+    match flag::<String>(flags, "sparsity", String::new())?.as_str() {
+        "" => {}
+        "off" => return Ok(cfg.with_sparsity(SparsityPolicy::OFF)),
+        other => bail!(
+            "flag --sparsity: only \"off\" is accepted, got {other:?} \
+             (enable pruning with --sparsity-threshold T)"
+        ),
+    }
+    if flags.contains_key("sparsity-threshold") {
+        let t: f64 = flag(flags, "sparsity-threshold", 0.0)?;
+        cfg = cfg.with_sparsity(SparsityPolicy::threshold(t));
+    }
+    Ok(cfg)
+}
+
 fn parse_tech(s: &str) -> Result<TechKind> {
     match s {
         "rfet" => Ok(TechKind::Rfet10),
@@ -226,6 +254,9 @@ fn print_help() {
                      --fault-seed S --fault-bit-flip R --fault-sram R\n\
                      --fault-corr R (seeded fault injection, also accepted\n\
                      by simulate) --deadline-us D (typed client timeout)\n\
+                     --sparsity-threshold T (prune weight lanes with\n\
+                     |v| < T into the compiled plan; also accepted by\n\
+                     simulate and analyze) --sparsity off (force dense)\n\
                      stream the test set through a sharded engine pool;\n\
                      --listen HOST:PORT starts the HTTP front door instead\n\
                      (POST /v1/infer, POST /v1/batch, GET /metrics,\n\
@@ -237,6 +268,7 @@ fn print_help() {
            simulate  --mode stochastic|reference|expectation|noisy|fixed\n\
                      --net NAME --synthetic --k K --bits B --n N --threads T\n\
                      --seed S --shards S --k-per-layer L --k-auto-budget B\n\
+                     --sparsity-threshold T --sparsity off\n\
                      batched in-process inference over the test set\n\
            sweep     --tech rfet|finfet --net NAME --max-channels C --k K\n\
                      --k-per-layer K1,K2,...\n\
@@ -247,6 +279,7 @@ fn print_help() {
                      --fault-seed S --fault-bit-flip R --fault-sram R\n\
                      --fault-corr R --fault-stuck wl:lane[:0|1],...\n\
                      --shards S --pool-queue-depth P\n\
+                     --sparsity-threshold T --sparsity off (SC011/SC012)\n\
                      --tenants 'name:key[:rps[:burst]];...' (or a file)\n\
                      --json (machine output) --deny-warnings (CI gate)\n\
                      --out FILE (BENCH_analyze.json diagnostics+timing)\n\
@@ -333,7 +366,7 @@ fn net_config(
         }
         cfg.with_weights_file(path)
     };
-    apply_fault_flags(apply_precision_flags(cfg, flags)?, flags)
+    apply_sparsity_flags(apply_fault_flags(apply_precision_flags(cfg, flags)?, flags)?, flags)
 }
 
 /// Lower the CLI flags into a pool configuration: `--shards` replicas of
@@ -512,19 +545,26 @@ fn analyze(flags: &HashMap<String, String>) -> Result<()> {
     let mut json_items: Vec<String> = Vec::new();
     for net in &nets {
         let t = Instant::now();
-        let cfg = apply_fault_flags(
-            apply_precision_flags(
-                EngineConfig::new(BackendKind::StochasticFused, net.clone())
-                    .with_k(k)
-                    .with_bits(bits)
-                    .with_seed(seed)
-                    .with_quantized(QuantizedWeights::synthetic(net, bits, seed as u64)?),
+        let cfg = apply_sparsity_flags(
+            apply_fault_flags(
+                apply_precision_flags(
+                    EngineConfig::new(BackendKind::StochasticFused, net.clone())
+                        .with_k(k)
+                        .with_bits(bits)
+                        .with_seed(seed)
+                        .with_quantized(QuantizedWeights::synthetic(net, bits, seed as u64)?),
+                    flags,
+                )?,
                 flags,
             )?,
             flags,
         )?;
-        // A precision policy that cannot even resolve is a typed error in
-        // its own right (InvalidPrecision) — surface it before analysis.
+        // A policy that cannot even resolve is a typed error in its own
+        // right (InvalidPrecision / InvalidSparsity) — surface it before
+        // analysis instead of letting the lints silently skip it.
+        cfg.sparsity
+            .validate()
+            .map_err(|e| anyhow::Error::from(EngineError::InvalidSparsity(e)))?;
         let weights = cfg.resolve_weights()?;
         let resolved = cfg.resolved_precision(&weights)?;
         let mut report = scnn::analyze::analyze_engine_config(&cfg, &resolved);
@@ -859,6 +899,49 @@ mod tests {
         // An unparseable rate is an error, not a silent default.
         let bad = parse_flags(&args(&["--fault-sram", "lots"]));
         assert!(apply_fault_flags(base(), &bad).is_err());
+    }
+
+    #[test]
+    fn sparsity_flags_lower_to_typed_policies() {
+        let base = || {
+            EngineConfig::new(
+                BackendKind::StochasticFused,
+                scnn::accel::layers::NetworkSpec::lenet5(),
+            )
+        };
+        // Absent: the dense datapath.
+        let cfg = apply_sparsity_flags(base(), &parse_flags(&[])).unwrap();
+        assert!(cfg.sparsity.is_off());
+        // A threshold flag lowers to an active policy.
+        let m = parse_flags(&args(&["--sparsity-threshold", "0.05"]));
+        let cfg = apply_sparsity_flags(base(), &m).unwrap();
+        assert!((cfg.sparsity.threshold - 0.05).abs() < 1e-12);
+        // `--sparsity off` wins over a threshold: the A/B escape hatch.
+        let m = parse_flags(&args(&["--sparsity", "off", "--sparsity-threshold", "0.05"]));
+        assert!(apply_sparsity_flags(base(), &m).unwrap().sparsity.is_off());
+        // Any other --sparsity value is an error, not a silent default.
+        let m = parse_flags(&args(&["--sparsity", "on"]));
+        assert!(apply_sparsity_flags(base(), &m).is_err());
+        // A degenerate threshold passes through the flag layer and fails
+        // the typed validator at open, like malformed precision policies.
+        let m = parse_flags(&args(&["--sparsity-threshold", "1.5"]));
+        let cfg = apply_sparsity_flags(base(), &m).unwrap();
+        let err = cfg
+            .with_quantized(
+                scnn::accel::network::QuantizedWeights::synthetic(
+                    &scnn::accel::layers::NetworkSpec::lenet5(),
+                    8,
+                    1,
+                )
+                .unwrap(),
+            )
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("invalid sparsity policy"), "{err}");
+        // An unparseable threshold is an error too.
+        let bad = parse_flags(&args(&["--sparsity-threshold", "lots"]));
+        assert!(apply_sparsity_flags(base(), &bad).is_err());
     }
 
     #[test]

@@ -67,6 +67,18 @@ pub fn xnor_count(a: &[u64], w: &[u64]) -> u32 {
     a.iter().zip(w).map(|(&x, &y)| (!(x ^ y)).count_ones()).sum()
 }
 
+/// The per-cycle APC count of a transposed weight row against an
+/// **all-zero activation row**: `XNOR(0, w) = !w`, so the count is the
+/// number of *clear* weight bits across the row's lane blocks. Lets the
+/// transposed kernel's zero-tile short-circuit replace a whole lane-block
+/// walk with one precomputed constant per (channel, cycle-word, cycle) —
+/// the activation-sparsity fast path. Tail lanes (weight bits forced to
+/// all-ones at compile) contribute 0, exactly like [`xnor_count`].
+#[inline]
+pub fn zero_xnor_count(w: &[u64]) -> u32 {
+    w.iter().map(|&y| (!y).count_ones()).sum()
+}
+
 #[cfg(test)]
 #[allow(clippy::unwrap_used)]
 mod tests {
@@ -135,6 +147,18 @@ mod tests {
         a[5] = !0;
         transpose64(&mut a);
         assert!(a.iter().all(|&w| w == 1 << 5));
+    }
+
+    #[test]
+    fn zero_xnor_count_matches_xnor_count_on_zero_activations() {
+        let mut g = Gen(0xFEED);
+        for len in [1usize, 3, 8] {
+            let w: Vec<u64> = (0..len).map(|_| g.next()).collect();
+            let zeros = vec![0u64; len];
+            assert_eq!(zero_xnor_count(&w), xnor_count(&zeros, &w));
+        }
+        // All-ones tail-lane weights contribute nothing.
+        assert_eq!(zero_xnor_count(&[!0u64, !0]), 0);
     }
 
     #[test]

@@ -66,6 +66,23 @@ pub fn render(m: &PoolMetrics, http: Option<&HttpSnapshot>) -> String {
         let _ = writeln!(out, "{name} {value}");
     }
 
+    let ops: [(&str, u64, &str); 2] = [
+        (
+            "scnn_ops_executed_total",
+            m.ops_executed,
+            "Lane-cycle ops executed by compiled plans, summed over shards.",
+        ),
+        (
+            "scnn_ops_skipped_total",
+            m.ops_skipped,
+            "Lane-cycle ops skipped by sparsity (pruned weight lanes).",
+        ),
+    ];
+    for (name, value, help) in ops {
+        family(&mut out, name, "counter", help);
+        let _ = writeln!(out, "{name} {value}");
+    }
+
     family(
         &mut out,
         "scnn_request_latency_microseconds",
@@ -164,6 +181,8 @@ mod tests {
         assert!(text.contains("scnn_pool_healthy_shards 2"));
         assert!(text.contains("scnn_requests_shed_total 3"));
         assert!(text.contains("scnn_requests_rerouted_total 1"));
+        assert!(text.contains("scnn_ops_executed_total 0"));
+        assert!(text.contains("scnn_ops_skipped_total 0"));
         assert!(text.contains("scnn_tenant_requests_total{tenant=\"a\\\"b\"} 7"));
         assert!(text.contains("scnn_tenant_quota_rejected_total{tenant=\"a\\\"b\"} 2"));
         assert!(text.contains("scnn_http_responses_total{code=\"429\"} 1"));

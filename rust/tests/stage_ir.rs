@@ -16,10 +16,17 @@
 //! * the transposed bit-plane kernel is a third lowering of the same IR
 //!   and must agree with both, on random topologies × random per-layer
 //!   plans × random fault plans, and on the packing edge cases (fan-ins
-//!   and stream lengths that are not multiples of the 64-lane word).
+//!   and stream lengths that are not multiples of the 64-lane word);
+//! * a sparsity threshold compiled into the plan (magnitude pruning with
+//!   the dropped lanes' 0.5-expectation folded into the stage bias) keeps
+//!   all three lowerings bit-exact, and a 0.0 threshold reproduces the
+//!   dense plan bit-for-bit.
 
 use scnn::accel::layers::{Conv2d, LayerKind, LayerSpec, NetworkSpec, Shape};
-use scnn::accel::network::{reference, ForwardMode, ForwardPlan, KernelPath, QuantizedWeights};
+use scnn::accel::network::{
+    prune_stats, reference, ForwardMode, ForwardPlan, KernelPath, QuantizedWeights,
+    SparsityPolicy,
+};
 use scnn::accel::precision::{autotune, AutoTuneConfig, PrecisionPlan, WORD};
 use scnn::accel::stage::total_macs;
 use scnn::faults::FaultPlan;
@@ -384,6 +391,82 @@ fn prop_transposed_fused_reference_three_way_bit_exact() {
         );
         assert_eq!(transposed, golden, "ks={ks:?} seed={seed} faults={fp:?}");
         assert!(transposed.iter().all(|v| v.is_finite()));
+    });
+}
+
+#[test]
+fn prop_sparsity_thresholds_keep_three_kernels_and_reference_bit_exact() {
+    // The sparsity extension of the bit-exact contract: magnitude pruning
+    // at compile drops weight lanes into per-channel skip lists and folds
+    // their 0.5-expectation into the stage bias, so the fused kernel, the
+    // transposed bit-plane kernel, and the per-bit reference must still
+    // agree bit-for-bit — on random topologies × random per-layer
+    // precision plans × random fault plans × random thresholds. And a
+    // 0.0 threshold must reproduce the dense plan bit-for-bit.
+    prop("sparse-three-way", 8, |g| {
+        let net = grow_random_net(g, 3);
+        let weights = QuantizedWeights::synthetic(&net, 8, g.next()).unwrap();
+        let fan_ins = compute_fan_ins(&net);
+        let ks: Vec<usize> = (0..fan_ins.len()).map(|_| WORD * g.range(2, 10) as usize).collect();
+        let plan = PrecisionPlan::per_layer(ks.clone());
+        let mut fp = FaultPlan::new(g.next())
+            .with_bit_flip_rate(g.range(0, 40) as f64 / 1000.0)
+            .with_sng_correlation_rate(g.range(0, 25) as f64 / 100.0)
+            .with_sram_upset_rate(g.range(0, 15) as f64 / 1000.0);
+        if g.chance(50) {
+            let wl = g.range(0, fan_ins.len() as u64) as usize;
+            fp = fp.with_stuck_lane(wl, g.range(0, fan_ins[wl] as u64) as usize, g.chance(50));
+        }
+        let faults = g.chance(70).then_some(&fp);
+        let in_len = net.input.0 * net.input.1 * net.input.2;
+        let input: Vec<f64> = (0..in_len).map(|i| ((i % 7) as f64) / 7.0).collect();
+        let seed = g.range(1, 1000) as u32;
+        let mode = ForwardMode::Stochastic { k: plan.max_k(), seed };
+        let compile = |kernel: KernelPath, s: SparsityPolicy| {
+            ForwardPlan::compile_with_sparsity(&net, &weights, mode, &plan, faults, kernel, s)
+        };
+        // Threshold 0.0 is the dense plan, bit for bit, on every kernel.
+        for kernel in [KernelPath::Transposed, KernelPath::Fused, KernelPath::Auto] {
+            assert_eq!(
+                compile(kernel, SparsityPolicy::threshold(0.0)).unwrap().run(&input),
+                ForwardPlan::compile_with_opts(&net, &weights, mode, &plan, faults, kernel)
+                    .unwrap()
+                    .run(&input),
+                "threshold 0.0 must reproduce the dense plan ({kernel:?})"
+            );
+        }
+        // An active threshold can prune a whole channel dead on some
+        // seeded weights — a typed compile error covered by unit tests;
+        // such cases carry no parity to check, so skip them.
+        let sparsity = SparsityPolicy::threshold(g.range(1, 40) as f64 / 100.0);
+        let sparse_plan = match compile(KernelPath::Transposed, sparsity) {
+            Ok(p) => p,
+            Err(_) => return,
+        };
+        let transposed = sparse_plan.run(&input);
+        let fused = compile(KernelPath::Fused, sparsity).unwrap().run(&input);
+        assert_eq!(
+            transposed, fused,
+            "ks={ks:?} seed={seed} threshold={} faults={fp:?}",
+            sparsity.threshold
+        );
+        let golden = reference::forward_stochastic_plan_sparse(
+            &net, &weights, &input, &plan, seed, faults, sparsity,
+        );
+        assert_eq!(
+            transposed, golden,
+            "ks={ks:?} seed={seed} threshold={}",
+            sparsity.threshold
+        );
+        assert!(transposed.iter().all(|v| v.is_finite()));
+        // When lanes really were pruned (no SRAM fault re-writing the
+        // tensor first), the compiled plan must account for the skips.
+        let pruned: usize = prune_stats(&weights, sparsity).iter().map(|s| s.pruned).sum();
+        if pruned > 0 && faults.is_none() {
+            let (executed, skipped) = sparse_plan.ops_per_image();
+            assert!(executed > 0);
+            assert!(skipped > 0, "pruned {pruned} lanes but the plan reports no skipped ops");
+        }
     });
 }
 
